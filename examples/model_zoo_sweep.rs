@@ -1,0 +1,66 @@
+//! Model-zoo sweep on the simulated ZC702: throughput, latency, energy,
+//! utilization and speedup over the CPU baseline for all seven benchmark
+//! CNNs (paper Table 2 workloads; the headline numbers of Figs 9/10).
+//!
+//! ```sh
+//! cargo run --release --example model_zoo_sweep
+//! ```
+
+use synergy::config::zoo;
+use synergy::nn::Network;
+use synergy::sim::{simulate, SimSpec};
+use synergy::util::bench::{fmt, Table};
+use synergy::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(&[
+        "model",
+        "CPU fps",
+        "Synergy fps",
+        "speedup",
+        "latency ms",
+        "util %",
+        "W",
+        "mJ/frame",
+        "GOPS",
+    ]);
+    let mut speedups = Vec::new();
+    for name in zoo::ZOO {
+        let net = Network::new(zoo::load(name)?, 32)?;
+        let base = simulate(&SimSpec::cpu_only(&net, 8), &net);
+        let syn = simulate(&SimSpec::synergy(&net, 60), &net);
+        speedups.push(syn.fps / base.fps);
+        table.row(vec![
+            name.to_string(),
+            fmt(base.fps),
+            fmt(syn.fps),
+            format!("{:.2}x", syn.fps / base.fps),
+            fmt(syn.mean_latency_s * 1e3),
+            format!("{:.1}", 100.0 * syn.cluster_util),
+            fmt(syn.energy.avg_power_w),
+            fmt(syn.energy.energy_per_frame_mj),
+            fmt(syn.gops),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nmean speedup {:.2}x (paper: 7.3x) — throughput range {:.0}–{:.0} fps (paper: 39.5–136.4)",
+        stats::mean(&speedups),
+        // recompute quickly for the footer
+        zoo::ZOO
+            .iter()
+            .map(|n| {
+                let net = Network::new(zoo::load(n).unwrap(), 32).unwrap();
+                simulate(&SimSpec::synergy(&net, 30), &net).fps
+            })
+            .fold(f64::INFINITY, f64::min),
+        zoo::ZOO
+            .iter()
+            .map(|n| {
+                let net = Network::new(zoo::load(n).unwrap(), 32).unwrap();
+                simulate(&SimSpec::synergy(&net, 30), &net).fps
+            })
+            .fold(0.0, f64::max),
+    );
+    Ok(())
+}

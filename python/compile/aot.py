@@ -1,0 +1,136 @@
+"""AOT lowering: JAX/Pallas → HLO *text* → ``artifacts/``.
+
+Emitted artifacts (consumed by ``rust/src/runtime``):
+
+* ``job_mm_ts{TS}_k{K}.hlo.txt`` — the per-job PE kernel, one per distinct
+  K (number of k-tiles in the shared GEMM dimension) appearing in the model
+  zoo.  Signature: (A[K,TS,TS] f32, B[K,TS,TS] f32) -> (C[TS,TS] f32,).
+* ``model_{name}.hlo.txt`` — the full forward pass of each benchmark CNN,
+  with weights as parameters: (x, *params) -> (probs,).  Used by the Rust
+  integration tests as the numerical oracle for the whole pipeline.
+* ``manifest.json`` — index of the above plus the canonical parameter
+  order/shapes so Rust can feed PJRT without guessing.
+
+HLO **text** (not ``HloModuleProto.serialize``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import netcfg
+from .kernels.tiled_mm import DEFAULT_TS, job_mm
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation → XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_job_kernel(k: int, ts: int = DEFAULT_TS) -> str:
+    spec = jax.ShapeDtypeStruct((k, ts, ts), jnp.float32)
+
+    def fn(a, b):
+        return (job_mm(a, b, ts=ts),)
+
+    return to_hlo_text(jax.jit(fn).lower(spec, spec))
+
+
+def lower_model(net: netcfg.NetCfg) -> str:
+    x_spec = jax.ShapeDtypeStruct(net.input_shape, jnp.float32)
+    p_specs = [
+        jax.ShapeDtypeStruct(tuple(s["shape"]), jnp.float32)
+        for s in M.param_specs(net)
+    ]
+
+    def fn(x, *params):
+        # The model artifact is the *oracle*: plain jnp ops (use_pallas=False)
+        # keep it compact; the Pallas kernel path is validated separately via
+        # the job kernels and pytest.
+        return (M.forward(net, list(params), x, use_pallas=False),)
+
+    return to_hlo_text(jax.jit(fn).lower(x_spec, *p_specs))
+
+
+def needed_k_values(nets: List[netcfg.NetCfg]) -> List[int]:
+    ks = set()
+    for net in nets:
+        for dims in M.conv_gemm_dims(net):
+            ks.add(int(dims["k_tiles"]))
+    return sorted(ks)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--ts", type=int, default=DEFAULT_TS, help="tile size")
+    ap.add_argument(
+        "--models",
+        default="all",
+        help="comma-separated model names, or 'all' (Table 2 zoo)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = netcfg.ZOO if args.models == "all" else args.models.split(",")
+    nets = [netcfg.load(n) for n in names]
+
+    manifest = {"tile_size": args.ts, "job_kernels": [], "models": []}
+
+    for k in needed_k_values(nets):
+        fname = f"job_mm_ts{args.ts}_k{k}.hlo.txt"
+        text = lower_job_kernel(k, args.ts)
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["job_kernels"].append(
+            {"k": k, "path": fname, "tile_size": args.ts}
+        )
+        print(f"[aot] {fname}: {len(text)} chars")
+
+    for net in nets:
+        fname = f"model_{net.name}.hlo.txt"
+        text = lower_model(net)
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest["models"].append(
+            {
+                "name": net.name,
+                "path": fname,
+                "input_shape": list(net.input_shape),
+                "mops": M.model_mops(net),
+                "params": [
+                    {
+                        "layer": s["layer"],
+                        "name": s["name"],
+                        "shape": list(s["shape"]),
+                    }
+                    for s in M.param_specs(net)
+                ],
+                "conv_gemms": M.conv_gemm_dims(net),
+            }
+        )
+        print(f"[aot] {fname}: {len(text)} chars")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json: {len(manifest['job_kernels'])} kernels, "
+          f"{len(manifest['models'])} models")
+
+
+if __name__ == "__main__":
+    main()

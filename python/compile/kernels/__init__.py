@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (tiled MM — the Synergy PE compute hot-spot) and the
+pure-jnp oracle used to validate them at build time."""

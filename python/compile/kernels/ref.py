@@ -1,0 +1,149 @@
+"""Pure-``jnp`` correctness oracles for the Pallas kernels and the JAX model.
+
+Everything here is deliberately written in the most obvious way possible —
+these functions define *what the answer is*; the Pallas kernels and the Rust
+coordinator both get checked against them.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain f32 matrix multiply: C[M,P] = A[M,N] @ B[N,P]."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def job_mm_ref(a_tiles: jnp.ndarray, b_tiles: jnp.ndarray) -> jnp.ndarray:
+    """Reference for one Synergy *job* (paper Fig 3): the output tile
+    ``C(i,j) = sum_k A(i,k) @ B(k,j)`` over K pre-extracted (TS,TS) tiles.
+
+    a_tiles, b_tiles: (K, TS, TS) f32.
+    """
+    return jnp.einsum(
+        "kij,kjl->il", a_tiles, b_tiles, preferred_element_type=jnp.float32
+    )
+
+
+def tiled_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, ts: int) -> jnp.ndarray:
+    """Tiled MM with zero-padding border semantics (paper §3.2.1 'Zero
+    Padding in mm_tile'): identical result to ``matmul_ref`` — padding with
+    zeros then cropping is an identity on the product."""
+    m, n = a.shape
+    n2, p = b.shape
+    assert n == n2
+    mp = -(-m // ts) * ts
+    np_ = -(-n // ts) * ts
+    pp = -(-p // ts) * ts
+    a_pad = jnp.zeros((mp, np_), a.dtype).at[:m, :n].set(a)
+    b_pad = jnp.zeros((np_, pp), b.dtype).at[:n, :p].set(b)
+    return matmul_ref(a_pad, b_pad)[:m, :p]
+
+
+def im2col_ref(x: jnp.ndarray, ksize: int, stride: int, pad: int) -> jnp.ndarray:
+    """Darknet-layout im2col: x is (C,H,W); returns (C*ksize*ksize, OH*OW)
+    where the row index varies as (c, ki, kj) c-major and the column as
+    (oy, ox).
+
+    This matches darknet's ``im2col_cpu`` and the Rust ``nn/im2col.rs``.
+    """
+    c, h, w = x.shape
+    oh = (h + 2 * pad - ksize) // stride + 1
+    ow = (w + 2 * pad - ksize) // stride + 1
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad)))
+    rows = []
+    for ci in range(c):
+        for ki in range(ksize):
+            for kj in range(ksize):
+                patch = lax.dynamic_slice(
+                    xp,
+                    (ci, ki, kj),
+                    (1, (oh - 1) * stride + 1, (ow - 1) * stride + 1),
+                )[0, ::stride, ::stride]
+                rows.append(patch.reshape(-1))
+    return jnp.stack(rows, axis=0).astype(jnp.float32)
+
+
+def conv2d_ref(
+    x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray, stride: int, pad: int
+) -> jnp.ndarray:
+    """Direct convolution via lax.conv: x (C,H,W), w (OC,C,K,K) -> (OC,OH,OW)."""
+    out = lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )[0]
+    return out + bias[:, None, None]
+
+
+def maxpool_ref(x: jnp.ndarray, size: int, stride: int) -> jnp.ndarray:
+    """Max pooling, darknet semantics (no padding, floor division)."""
+    c, h, w = x.shape
+    oh = (h - size) // stride + 1
+    ow = (w - size) // stride + 1
+    out = lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        (1, size, size),
+        (1, stride, stride),
+        "VALID",
+    )
+    return out[:, :oh, :ow].astype(jnp.float32)
+
+
+def avgpool_ref(x: jnp.ndarray, size: int, stride: int) -> jnp.ndarray:
+    """Average pooling, darknet semantics."""
+    out = lax.reduce_window(
+        x,
+        0.0,
+        lax.add,
+        (1, size, size),
+        (1, stride, stride),
+        "VALID",
+    )
+    return (out / float(size * size)).astype(jnp.float32)
+
+
+def connected_ref(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """Fully-connected layer: x (N,), w (OUT,N) -> (OUT,)."""
+    return jnp.matmul(w, x, preferred_element_type=jnp.float32) + bias
+
+
+def batchnorm_ref(
+    x: jnp.ndarray,
+    gamma: jnp.ndarray,
+    beta: jnp.ndarray,
+    mean: jnp.ndarray,
+    var: jnp.ndarray,
+    eps: float = 1e-5,
+) -> jnp.ndarray:
+    """Inference-time batch normalization over the channel dim of (C,H,W)."""
+    inv = gamma / jnp.sqrt(var + eps)
+    return x * inv[:, None, None] + (beta - mean * inv)[:, None, None]
+
+
+def activate_ref(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Darknet activation functions used by the zoo."""
+    if kind == "linear":
+        return x
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    if kind == "leaky":
+        return jnp.where(x > 0.0, x, 0.1 * x)
+    if kind == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-x))
+    if kind == "tanh":
+        return jnp.tanh(x)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Numerically-stable softmax over a flat vector."""
+    z = x - jnp.max(x)
+    e = jnp.exp(z)
+    return e / jnp.sum(e)

@@ -1,0 +1,181 @@
+"""L1 — Pallas tiled matrix-multiplication kernels.
+
+These are the TPU re-thinking of Synergy's FPGA processing engine (PE,
+paper §3.2.1 Listing 3).  The mapping (DESIGN.md §Hardware-Adaptation):
+
+* BRAM tile buffers  →  VMEM blocks selected by ``BlockSpec``;
+* HLS double-buffering (overlap fetch/compute)  →  Pallas' automatic
+  HBM↔VMEM pipeline across grid steps;
+* the ``mm_tile`` K-loop (steps ①–④ of the paper)  →  the innermost grid
+  dimension accumulating into the output block;
+* border detection / zero-padding  →  masked loads (``_masked_mm``) or
+  caller-side zero-fill, both provided and both tested against ``ref.py``.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute real Mosaic custom-calls, and interpret-mode lowers to plain HLO that
+the Rust runtime (xla crate, PJRT CPU) runs directly.  On a real TPU one
+would instead pick MXU-shaped (128,128) blocks; we keep the paper's TS=32
+and document the delta in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The paper sets TS=32 "based on empirical evaluation" (§4.1).
+DEFAULT_TS = 32
+
+
+def _job_mm_kernel(a_ref, b_ref, o_ref):
+    """One grid step of a Synergy job: o += a_tiles[k] @ b_tiles[k].
+
+    Grid is (K,).  BlockSpec feeds the k-th (TS,TS) tile of each operand;
+    the output block index map is constant so the same VMEM tile is revisited
+    (and accumulated) across all K steps — the Pallas idiom for the paper's
+    local array ``c`` kept in BRAM while tiles stream through.
+    """
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[0], b_ref[0], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("ts",))
+def job_mm(a_tiles: jnp.ndarray, b_tiles: jnp.ndarray, *, ts: int = DEFAULT_TS):
+    """Compute one job's output tile from pre-extracted operand tiles.
+
+    a_tiles, b_tiles: (K, TS, TS) f32  →  (TS, TS) f32.
+
+    This is THE artifact the Rust delegate threads execute per job on the
+    "FPGA PE" path (one AOT HLO per distinct K in the model zoo).
+    """
+    k = a_tiles.shape[0]
+    assert a_tiles.shape == (k, ts, ts), a_tiles.shape
+    assert b_tiles.shape == (k, ts, ts), b_tiles.shape
+    return pl.pallas_call(
+        _job_mm_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec((1, ts, ts), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, ts, ts), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ts, ts), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ts, ts), jnp.float32),
+        interpret=True,
+    )(a_tiles.astype(jnp.float32), b_tiles.astype(jnp.float32))
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Full tiled-MM grid step: grid (M/TS, P/TS, N/TS), K innermost."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("ts",))
+def matmul_tiled(a: jnp.ndarray, b: jnp.ndarray, *, ts: int = DEFAULT_TS):
+    """C[M,P] = A[M,N] @ B[N,P] as a full Pallas tiled-MM (paper Listing 1).
+
+    Dimensions must be multiples of TS (the padded fast path a PE sees);
+    ragged shapes go through :func:`matmul_tiled_padded`.
+    """
+    m, n = a.shape
+    n2, p = b.shape
+    assert n == n2 and m % ts == 0 and n % ts == 0 and p % ts == 0
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // ts, p // ts, n // ts),
+        in_specs=[
+            pl.BlockSpec((ts, ts), lambda i, j, k: (i, k)),
+            pl.BlockSpec((ts, ts), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((ts, ts), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, p), jnp.float32),
+        interpret=True,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def matmul_tiled_padded(a: jnp.ndarray, b: jnp.ndarray, *, ts: int = DEFAULT_TS):
+    """Ragged-shape tiled MM with the paper's zero-padding border semantics
+    (§3.2.1 'Zero Padding in mm_tile'): out-of-bound reads return 0, writes
+    past the border are dropped.  Implemented as zero-fill + crop, which is
+    numerically identical."""
+    m, n = a.shape
+    n2, p = b.shape
+    assert n == n2
+    mp = -(-m // ts) * ts
+    np_ = -(-n // ts) * ts
+    pp = -(-p // ts) * ts
+    a_pad = jnp.zeros((mp, np_), jnp.float32).at[:m, :n].set(a)
+    b_pad = jnp.zeros((np_, pp), jnp.float32).at[:n, :p].set(b)
+    return matmul_tiled(a_pad, b_pad, ts=ts)[:m, :p]
+
+
+def _masked_mm_kernel(a_ref, b_ref, o_ref, *, ts: int, m: int, n: int, p: int):
+    """Border detection *inside* the kernel (the exact paper mechanism):
+    lanes beyond the true (m,n,p) bounds are zeroed on load, mirroring the
+    PE's zero-fill when a fetch crosses the matrix border."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row = i * ts + jax.lax.broadcasted_iota(jnp.int32, (ts, ts), 0)
+    inner_a = k * ts + jax.lax.broadcasted_iota(jnp.int32, (ts, ts), 1)
+    inner_b = k * ts + jax.lax.broadcasted_iota(jnp.int32, (ts, ts), 0)
+    col = j * ts + jax.lax.broadcasted_iota(jnp.int32, (ts, ts), 1)
+
+    a = jnp.where((row < m) & (inner_a < n), a_ref[...], 0.0)
+    b = jnp.where((inner_b < n) & (col < p), b_ref[...], 0.0)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("ts",))
+def matmul_tiled_masked(a: jnp.ndarray, b: jnp.ndarray, *, ts: int = DEFAULT_TS):
+    """Tiled MM over pre-padded operands where masking is done in-kernel.
+
+    Operands are physically padded up to tile multiples (so BlockSpec
+    indexing stays in range under interpret mode) but the kernel *ignores*
+    the pad contents — it re-derives validity from the true bounds, so the
+    result is correct even if the caller filled the pad with garbage.
+    Returns the (m, p) result cropped from the padded output.
+    """
+    m, n = a.shape
+    n2, p = b.shape
+    assert n == n2
+    mp = -(-m // ts) * ts
+    np_ = -(-n // ts) * ts
+    pp = -(-p // ts) * ts
+    a_pad = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, np_ - n)))
+    b_pad = jnp.pad(b.astype(jnp.float32), ((0, np_ - n), (0, pp - p)))
+    kern = functools.partial(_masked_mm_kernel, ts=ts, m=m, n=n, p=p)
+    out = pl.pallas_call(
+        kern,
+        grid=(mp // ts, pp // ts, np_ // ts),
+        in_specs=[
+            pl.BlockSpec((ts, ts), lambda i, j, k: (i, k)),
+            pl.BlockSpec((ts, ts), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((ts, ts), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, pp), jnp.float32),
+        interpret=True,
+    )(a_pad, b_pad)
+    return out[:m, :p]

@@ -1,0 +1,280 @@
+"""L2 — JAX forward pass of the Synergy benchmark CNNs (paper Table 2).
+
+The model is assembled from the same ``configs/*.cfg`` files the Rust
+coordinator parses.  CONV layers go through the exact Synergy lowering
+(darknet im2col → tiled matrix multiplication on the L1 Pallas kernel);
+the "other layers" (§3.1.4: pooling, activation, fully-connected, batchnorm,
+softmax) are the plain jnp oracles.
+
+``make artifacts`` AOT-lowers (a) the per-K job kernels and (b) the full
+per-model forward functions to HLO text for the Rust PJRT runtime.  Python
+never runs at inference time.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import netcfg, prng
+from .kernels import ref
+from .kernels.tiled_mm import DEFAULT_TS, matmul_tiled_padded
+
+
+def conv_out_hw(h: int, w: int, ksize: int, stride: int, pad: int) -> Tuple[int, int]:
+    oh = (h + 2 * pad - ksize) // stride + 1
+    ow = (w + 2 * pad - ksize) // stride + 1
+    return oh, ow
+
+
+def pool_out_hw(h: int, w: int, size: int, stride: int) -> Tuple[int, int]:
+    return (h - size) // stride + 1, (w - size) // stride + 1
+
+
+def layer_shapes(net: netcfg.NetCfg) -> List[Tuple[int, ...]]:
+    """Output shape after every layer (input excluded).  Spatial layers give
+    (C,H,W); flat layers give (N,)."""
+    shapes: List[Tuple[int, ...]] = []
+    cur: Tuple[int, ...] = net.input_shape
+    for layer in net.layers:
+        if layer.kind == "convolutional":
+            c, h, w = cur
+            oc = layer.geti("filters", 0)
+            ksize = layer.geti("size", 1)
+            stride = layer.geti("stride", 1)
+            pad = layer.geti("pad", 0)
+            oh, ow = conv_out_hw(h, w, ksize, stride, pad)
+            cur = (oc, oh, ow)
+        elif layer.kind in ("maxpool", "avgpool"):
+            c, h, w = cur
+            size = layer.geti("size", 2)
+            stride = layer.geti("stride", size)
+            oh, ow = pool_out_hw(h, w, size, stride)
+            cur = (c, oh, ow)
+        elif layer.kind == "connected":
+            cur = (layer.geti("output", 0),)
+        elif layer.kind in ("batchnorm", "dropout", "softmax"):
+            pass  # shape-preserving
+        else:
+            raise ValueError(f"unhandled layer kind {layer.kind}")
+        shapes.append(cur)
+    return shapes
+
+
+def param_specs(net: netcfg.NetCfg) -> List[Dict]:
+    """Canonical flat parameter list: [{layer, name, shape, scale}, ...].
+
+    Order and seeding must match ``rust/src/nn/network.rs`` exactly.
+    """
+    specs: List[Dict] = []
+    cur: Tuple[int, ...] = net.input_shape
+    for idx, layer in enumerate(net.layers):
+        if layer.kind == "convolutional":
+            c, h, w = cur
+            oc = layer.geti("filters", 0)
+            ksize = layer.geti("size", 1)
+            stride = layer.geti("stride", 1)
+            pad = layer.geti("pad", 0)
+            fan_in = c * ksize * ksize
+            scale = math.sqrt(2.0 / fan_in)
+            specs.append(
+                {"layer": idx, "name": "weights", "shape": (oc, c, ksize, ksize), "scale": scale}
+            )
+            specs.append({"layer": idx, "name": "bias", "shape": (oc,), "scale": 0.1})
+            oh, ow = conv_out_hw(h, w, ksize, stride, pad)
+            cur = (oc, oh, ow)
+        elif layer.kind in ("maxpool", "avgpool"):
+            c, h, w = cur
+            size = layer.geti("size", 2)
+            stride = layer.geti("stride", size)
+            oh, ow = pool_out_hw(h, w, size, stride)
+            cur = (c, oh, ow)
+        elif layer.kind == "connected":
+            n_in = int(np.prod(cur))
+            n_out = layer.geti("output", 0)
+            scale = math.sqrt(2.0 / n_in)
+            specs.append(
+                {"layer": idx, "name": "weights", "shape": (n_out, n_in), "scale": scale}
+            )
+            specs.append({"layer": idx, "name": "bias", "shape": (n_out,), "scale": 0.1})
+            cur = (n_out,)
+        elif layer.kind == "batchnorm":
+            c = cur[0]
+            for pname in ("gamma", "beta", "mean", "var"):
+                specs.append({"layer": idx, "name": pname, "shape": (c,), "scale": 1.0})
+        elif layer.kind in ("dropout", "softmax"):
+            pass
+        else:
+            raise ValueError(f"unhandled layer kind {layer.kind}")
+    return specs
+
+
+def init_params(net: netcfg.NetCfg) -> List[np.ndarray]:
+    """Deterministic seeded parameters (see prng.py for the contract).
+
+    batchnorm gets shifted/positive-ized values so that var > 0:
+      gamma = 1 + 0.1u, beta = 0.1u, mean = 0.1u, var = 1 + 0.5(u + 0.5).
+    """
+    out: List[np.ndarray] = []
+    for spec in param_specs(net):
+        base = prng.fill(net.name, spec["layer"], spec["name"], spec["shape"], 1.0)
+        name = spec["name"]
+        if name == "gamma":
+            arr = (1.0 + 0.1 * base).astype(np.float32)
+        elif name in ("beta", "mean"):
+            arr = (0.1 * base).astype(np.float32)
+        elif name == "var":
+            arr = (1.0 + 0.5 * (base + 0.5)).astype(np.float32)
+        else:
+            arr = (base * np.float32(spec["scale"])).astype(np.float32)
+        out.append(arr)
+    return out
+
+
+def make_input(net: netcfg.NetCfg, frame: int = 0) -> np.ndarray:
+    """Deterministic synthetic input frame in [0,1) (paper: normalization
+    scales inputs to [0,1] during preprocessing)."""
+    base = prng.fill(net.name, 1_000_000 + frame, "input", net.input_shape, 1.0)
+    return (base + 0.5).astype(np.float32)
+
+
+def conv_as_mm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray,
+    stride: int,
+    pad: int,
+    *,
+    ts: int = DEFAULT_TS,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """The Synergy CONV lowering: im2col + tiled MM (paper §3.1.1).
+
+    x: (C,H,W); w: (OC,C,K,K) -> (OC,OH,OW).
+    """
+    oc, c, ksize, _ = w.shape
+    _, h, wd = x.shape
+    oh, ow = conv_out_hw(h, wd, ksize, stride, pad)
+    col = ref.im2col_ref(x, ksize, stride, pad)  # (C*K*K, OH*OW)
+    wmat = w.reshape(oc, c * ksize * ksize)
+    if use_pallas:
+        out = matmul_tiled_padded(wmat, col, ts=ts)
+    else:
+        out = ref.matmul_ref(wmat, col)
+    return out.reshape(oc, oh, ow) + bias[:, None, None]
+
+
+def forward(
+    net: netcfg.NetCfg,
+    params: List[jnp.ndarray],
+    x: jnp.ndarray,
+    *,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Full network forward pass; returns the class-probability vector."""
+    specs = param_specs(net)
+    p_by_layer: Dict[int, Dict[str, jnp.ndarray]] = {}
+    for spec, arr in zip(specs, params):
+        p_by_layer.setdefault(spec["layer"], {})[spec["name"]] = arr
+
+    cur = x
+    for idx, layer in enumerate(net.layers):
+        if layer.kind == "convolutional":
+            ps = p_by_layer[idx]
+            stride = layer.geti("stride", 1)
+            pad = layer.geti("pad", 0)
+            cur = conv_as_mm(
+                cur, ps["weights"], ps["bias"], stride, pad, use_pallas=use_pallas
+            )
+            cur = ref.activate_ref(cur, layer.gets("activation", "linear"))
+        elif layer.kind == "maxpool":
+            size = layer.geti("size", 2)
+            cur = ref.maxpool_ref(cur, size, layer.geti("stride", size))
+        elif layer.kind == "avgpool":
+            size = layer.geti("size", 2)
+            cur = ref.avgpool_ref(cur, size, layer.geti("stride", size))
+        elif layer.kind == "connected":
+            ps = p_by_layer[idx]
+            cur = ref.connected_ref(cur.reshape(-1), ps["weights"], ps["bias"])
+            cur = ref.activate_ref(cur, layer.gets("activation", "linear"))
+        elif layer.kind == "batchnorm":
+            ps = p_by_layer[idx]
+            cur = ref.batchnorm_ref(
+                cur, ps["gamma"], ps["beta"], ps["mean"], ps["var"]
+            )
+        elif layer.kind == "dropout":
+            pass  # inference: no-op
+        elif layer.kind == "softmax":
+            cur = ref.softmax_ref(cur.reshape(-1))
+        else:
+            raise ValueError(f"unhandled layer kind {layer.kind}")
+    return cur
+
+
+def conv_gemm_dims(net: netcfg.NetCfg) -> List[Dict]:
+    """GEMM dimensions per CONV layer: M=OC, N=C·K², P=OH·OW — the job
+    geometry the Rust coordinator generates (K tiles = ceil(N/TS))."""
+    dims = []
+    cur = net.input_shape
+    for idx, layer in enumerate(net.layers):
+        if layer.kind == "convolutional":
+            c, h, w = cur
+            oc = layer.geti("filters", 0)
+            ksize = layer.geti("size", 1)
+            stride = layer.geti("stride", 1)
+            pad = layer.geti("pad", 0)
+            oh, ow = conv_out_hw(h, w, ksize, stride, pad)
+            dims.append(
+                {
+                    "layer": idx,
+                    "m": oc,
+                    "n": c * ksize * ksize,
+                    "p": oh * ow,
+                    "k_tiles": -(-(c * ksize * ksize) // DEFAULT_TS),
+                }
+            )
+            cur = (oc, oh, ow)
+        elif layer.kind in ("maxpool", "avgpool"):
+            c, h, w = cur
+            size = layer.geti("size", 2)
+            stride = layer.geti("stride", size)
+            oh, ow = pool_out_hw(h, w, size, stride)
+            cur = (c, oh, ow)
+        elif layer.kind == "connected":
+            cur = (layer.geti("output", 0),)
+    return dims
+
+
+def model_mops(net: netcfg.NetCfg) -> float:
+    """Total MAC-ops ×2 in millions per frame (the paper's GOP accounting)."""
+    total = 0.0
+    cur = net.input_shape
+    for layer in net.layers:
+        if layer.kind == "convolutional":
+            c, h, w = cur
+            oc = layer.geti("filters", 0)
+            ksize = layer.geti("size", 1)
+            stride = layer.geti("stride", 1)
+            pad = layer.geti("pad", 0)
+            oh, ow = conv_out_hw(h, w, ksize, stride, pad)
+            total += 2.0 * oc * oh * ow * c * ksize * ksize
+            cur = (oc, oh, ow)
+        elif layer.kind in ("maxpool", "avgpool"):
+            c, h, w = cur
+            size = layer.geti("size", 2)
+            stride = layer.geti("stride", size)
+            oh, ow = pool_out_hw(h, w, size, stride)
+            total += c * oh * ow * size * size
+            cur = (c, oh, ow)
+        elif layer.kind == "connected":
+            n_in = int(np.prod(cur))
+            n_out = layer.geti("output", 0)
+            total += 2.0 * n_in * n_out
+            cur = (n_out,)
+        elif layer.kind == "batchnorm":
+            total += 2.0 * int(np.prod(cur))
+    return total / 1e6

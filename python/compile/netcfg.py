@@ -1,0 +1,124 @@
+"""Darknet-style ``.cfg`` network description parser (build-time twin of
+``rust/src/config/net_config.rs`` — both sides parse the same ``configs/*.cfg``
+files so the model zoo has a single source of truth).
+
+Supported sections mirror the layer types Synergy handles on the ZC702:
+``[net]`` (input geometry), ``[convolutional]``, ``[maxpool]``, ``[avgpool]``,
+``[connected]``, ``[batchnorm]``, ``[dropout]``, ``[softmax]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import List, Optional, Tuple
+
+# Names of the seven benchmark networks of paper Table 2 (= configs/*.cfg).
+ZOO = [
+    "cifar_darknet",
+    "cifar_alex",
+    "cifar_alex_plus",
+    "cifar_full",
+    "mnist",
+    "svhn",
+    "mpcnn",
+]
+
+
+@dataclasses.dataclass
+class LayerCfg:
+    """One parsed ``[section]`` with its key=value options."""
+
+    kind: str
+    options: dict
+
+    def geti(self, key: str, default: int) -> int:
+        return int(self.options.get(key, default))
+
+    def gets(self, key: str, default: str) -> str:
+        return str(self.options.get(key, default))
+
+
+@dataclasses.dataclass
+class NetCfg:
+    """A parsed network: input geometry + ordered layer list."""
+
+    name: str
+    height: int
+    width: int
+    channels: int
+    layers: List[LayerCfg]
+
+    @property
+    def input_shape(self) -> Tuple[int, int, int]:
+        return (self.channels, self.height, self.width)
+
+
+def parse_cfg_text(name: str, text: str) -> NetCfg:
+    """Parse darknet-style cfg text into a :class:`NetCfg`."""
+    sections: List[LayerCfg] = []
+    current: Optional[LayerCfg] = None
+    for lineno, raw in enumerate(text.splitlines(), start=1):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        if line.startswith("["):
+            if not line.endswith("]"):
+                raise ValueError(f"{name}:{lineno}: malformed section {raw!r}")
+            current = LayerCfg(kind=line[1:-1].strip().lower(), options={})
+            sections.append(current)
+        else:
+            if current is None:
+                raise ValueError(f"{name}:{lineno}: option outside a section")
+            if "=" not in line:
+                raise ValueError(f"{name}:{lineno}: expected key=value, got {raw!r}")
+            key, value = line.split("=", 1)
+            current.options[key.strip()] = value.strip()
+
+    if not sections or sections[0].kind != "net":
+        raise ValueError(f"{name}: first section must be [net]")
+    net = sections[0]
+    height = net.geti("height", 0)
+    width = net.geti("width", 0)
+    channels = net.geti("channels", 0)
+    if height <= 0 or width <= 0 or channels <= 0:
+        raise ValueError(f"{name}: [net] must define height/width/channels > 0")
+
+    known = {
+        "convolutional",
+        "maxpool",
+        "avgpool",
+        "connected",
+        "batchnorm",
+        "dropout",
+        "softmax",
+    }
+    for sec in sections[1:]:
+        if sec.kind not in known:
+            raise ValueError(f"{name}: unknown layer section [{sec.kind}]")
+
+    return NetCfg(
+        name=name,
+        height=height,
+        width=width,
+        channels=channels,
+        layers=sections[1:],
+    )
+
+
+def configs_dir() -> str:
+    """Locate ``configs/`` relative to this file (repo root / configs)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.normpath(os.path.join(here, "..", "..", "configs"))
+
+
+def load(name: str) -> NetCfg:
+    """Load ``configs/<name>.cfg``."""
+    path = os.path.join(configs_dir(), f"{name}.cfg")
+    with open(path, "r") as f:
+        return parse_cfg_text(name, f.read())
+
+
+def load_zoo() -> List[NetCfg]:
+    """Load all seven benchmark networks (paper Table 2)."""
+    return [load(name) for name in ZOO]

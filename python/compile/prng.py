@@ -1,0 +1,64 @@
+"""Cross-language deterministic parameter PRNG.
+
+The Rust coordinator and the Python build path must materialize *identical*
+f32 weights so that the end-to-end integration test (Rust pipeline output vs
+AOT full-model HLO executed through PJRT) can compare numerics.  We use
+xorshift64* with an FNV-1a-seeded state — both reimplemented bit-for-bit in
+``rust/src/util/rng.rs``.
+
+All arithmetic is exact: the uniform sample is formed from the top 24 bits
+(exact in f64), scaled in f64, and only then cast to f32.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_MASK = (1 << 64) - 1
+_XS_MULT = 0x2545F4914F6CDD1D
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+
+
+def fnv1a64(s: str) -> int:
+    """FNV-1a 64-bit hash of a UTF-8 string (seed derivation)."""
+    h = _FNV_OFFSET
+    for byte in s.encode("utf-8"):
+        h ^= byte
+        h = (h * _FNV_PRIME) & _MASK
+    return h
+
+
+class XorShift64Star:
+    """xorshift64* — tiny, fast, and trivially portable to Rust."""
+
+    def __init__(self, seed: int):
+        # State must be non-zero; fold the all-zeros seed to a fixed word.
+        self.state = (seed & _MASK) or 0x9E3779B97F4A7C15
+
+    def next_u64(self) -> int:
+        x = self.state
+        x ^= x >> 12
+        x ^= (x << 25) & _MASK
+        x ^= x >> 27
+        self.state = x
+        return (x * _XS_MULT) & _MASK
+
+    def next_unit(self) -> float:
+        """Uniform in [-0.5, 0.5), exactly representable in f64."""
+        return (self.next_u64() >> 40) / float(1 << 24) - 0.5
+
+
+def tensor_seed(model: str, layer: int, kind: str) -> int:
+    """Canonical per-tensor seed: hash of ``model/layer/kind``."""
+    return fnv1a64(f"{model}/{layer}/{kind}")
+
+
+def fill(model: str, layer: int, kind: str, shape, scale: float) -> np.ndarray:
+    """Deterministic tensor: f32(next_unit() * scale) in row-major order."""
+    rng = XorShift64Star(tensor_seed(model, layer, kind))
+    n = int(np.prod(shape))
+    out = np.empty(n, dtype=np.float32)
+    for i in range(n):
+        out[i] = np.float32(rng.next_unit() * scale)
+    return out.reshape(shape)

@@ -1,0 +1,7 @@
+"""Make `pytest python/tests/` work from the repo root (and `pytest tests/`
+from python/): put this directory on sys.path so `compile` imports."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

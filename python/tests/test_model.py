@@ -1,0 +1,184 @@
+"""L2 correctness: the Synergy CONV lowering (im2col + tiled MM on the
+Pallas kernel) must equal direct convolution; model forward must be a
+valid probability vector; shapes must match the manifest contract."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile import netcfg
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape, dtype=np.float32)
+
+
+# ----------------------------------------------------------- conv lowering
+
+
+@pytest.mark.parametrize(
+    "c,h,w,oc,ksize,stride,pad",
+    [
+        (1, 8, 8, 4, 3, 1, 1),
+        (3, 16, 16, 8, 5, 1, 2),
+        (3, 13, 11, 6, 3, 2, 1),
+        (4, 9, 9, 5, 1, 1, 0),
+        (2, 12, 12, 7, 3, 3, 0),
+    ],
+)
+def test_conv_as_mm_equals_direct(c, h, w, oc, ksize, stride, pad):
+    x = _rand((c, h, w), seed=c * h)
+    wgt = _rand((oc, c, ksize, ksize), seed=oc)
+    bias = _rand((oc,), seed=99)
+    got = np.asarray(
+        M.conv_as_mm(jnp.array(x), jnp.array(wgt), jnp.array(bias), stride, pad)
+    )
+    want = np.asarray(ref.conv2d_ref(jnp.array(x), jnp.array(wgt), jnp.array(bias), stride, pad))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    c=st.integers(1, 4),
+    hw=st.integers(6, 20),
+    oc=st.integers(1, 8),
+    ksize=st.sampled_from([1, 3, 5]),
+    stride=st.integers(1, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_as_mm_property(c, hw, oc, ksize, stride, seed):
+    pad = ksize // 2
+    x = _rand((c, hw, hw), seed)
+    wgt = _rand((oc, c, ksize, ksize), seed ^ 1)
+    bias = _rand((oc,), seed ^ 2)
+    got = np.asarray(
+        M.conv_as_mm(jnp.array(x), jnp.array(wgt), jnp.array(bias), stride, pad)
+    )
+    want = np.asarray(
+        ref.conv2d_ref(jnp.array(x), jnp.array(wgt), jnp.array(bias), stride, pad)
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_im2col_known_values():
+    """3x3 single-channel, 2x2 kernel, stride 1, no pad — hand-checked."""
+    x = jnp.arange(9, dtype=jnp.float32).reshape(1, 3, 3)
+    col = np.asarray(ref.im2col_ref(x, 2, 1, 0))
+    assert col.shape == (4, 4)
+    np.testing.assert_array_equal(col[0], [0, 1, 3, 4])  # (ki=0,kj=0)
+    np.testing.assert_array_equal(col[1], [1, 2, 4, 5])  # (ki=0,kj=1)
+    np.testing.assert_array_equal(col[2], [3, 4, 6, 7])  # (ki=1,kj=0)
+    np.testing.assert_array_equal(col[3], [4, 5, 7, 8])  # (ki=1,kj=1)
+
+
+def test_im2col_pad_zero_fills():
+    x = jnp.ones((1, 2, 2), dtype=jnp.float32)
+    col = np.asarray(ref.im2col_ref(x, 3, 1, 1))
+    # top-left output location reads the zero-padded corner
+    assert col[0, 0] == 0.0
+    assert col.shape == (9, 4)
+
+
+# ------------------------------------------------------------ model forward
+
+
+@pytest.mark.parametrize("name", netcfg.ZOO)
+def test_model_forward_is_distribution(name):
+    net = netcfg.load(name)
+    params = [jnp.array(p) for p in M.init_params(net)]
+    x = jnp.array(M.make_input(net))
+    y = np.asarray(M.forward(net, params, x, use_pallas=False))
+    assert y.shape == (10,)
+    assert np.all(y >= 0.0)
+    np.testing.assert_allclose(y.sum(), 1.0, rtol=1e-5)
+
+
+def test_model_pallas_path_matches_jnp_path():
+    net = netcfg.load("mpcnn")  # lightest model, keeps interpret-mode fast
+    params = [jnp.array(p) for p in M.init_params(net)]
+    x = jnp.array(M.make_input(net))
+    y1 = np.asarray(M.forward(net, params, x, use_pallas=False))
+    y2 = np.asarray(M.forward(net, params, x, use_pallas=True))
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", netcfg.ZOO)
+def test_layer_shapes_consistent(name):
+    net = netcfg.load(name)
+    shapes = M.layer_shapes(net)
+    assert len(shapes) == len(net.layers)
+    assert shapes[-1] == (10,)  # all zoo models classify 10 classes
+
+
+def test_table2_layer_counts():
+    """Paper Table 2: CONV layer count and total layer count per model."""
+    expect = {
+        "cifar_darknet": (4, 9),
+        "cifar_alex": (3, 8),
+        "cifar_alex_plus": (3, 9),
+        "cifar_full": (3, 9),
+        "mnist": (2, 7),
+        "svhn": (3, 8),
+        "mpcnn": (3, 9),
+    }
+    for name, (convs, total) in expect.items():
+        net = netcfg.load(name)
+        got_convs = sum(1 for l in net.layers if l.kind == "convolutional")
+        assert got_convs == convs, name
+        assert len(net.layers) == total, name
+
+
+def test_conv_gemm_dims_match_shapes():
+    for name in netcfg.ZOO:
+        net = netcfg.load(name)
+        for d in M.conv_gemm_dims(net):
+            layer = net.layers[d["layer"]]
+            assert layer.kind == "convolutional"
+            assert d["m"] == layer.geti("filters", 0)
+            assert d["k_tiles"] == -(-d["n"] // 32)
+
+
+# -------------------------------------------------------------- other layers
+
+
+def test_maxpool_known():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4)
+    y = np.asarray(ref.maxpool_ref(x, 2, 2))
+    np.testing.assert_array_equal(y[0], [[5, 7], [13, 15]])
+
+
+def test_avgpool_known():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4)
+    y = np.asarray(ref.avgpool_ref(x, 2, 2))
+    np.testing.assert_allclose(y[0], [[2.5, 4.5], [10.5, 12.5]])
+
+
+def test_activations():
+    x = jnp.array([-2.0, -0.5, 0.0, 1.5])
+    np.testing.assert_allclose(ref.activate_ref(x, "relu"), [0, 0, 0, 1.5])
+    np.testing.assert_allclose(
+        ref.activate_ref(x, "leaky"), [-0.2, -0.05, 0, 1.5], rtol=1e-6
+    )
+    np.testing.assert_allclose(ref.activate_ref(x, "linear"), x)
+    s = np.asarray(ref.activate_ref(x, "sigmoid"))
+    assert np.all((s > 0) & (s < 1))
+
+
+def test_batchnorm_identity_params():
+    x = _rand((3, 4, 4), seed=0)
+    g = jnp.ones(3)
+    z = jnp.zeros(3)
+    o = jnp.ones(3)
+    y = np.asarray(ref.batchnorm_ref(jnp.array(x), g, z, z, o, eps=0.0))
+    np.testing.assert_allclose(y, x, rtol=1e-6)
+
+
+def test_softmax_invariance_to_shift():
+    x = _rand((10,), seed=3)
+    y1 = np.asarray(ref.softmax_ref(jnp.array(x)))
+    y2 = np.asarray(ref.softmax_ref(jnp.array(x + 100.0)))
+    np.testing.assert_allclose(y1, y2, rtol=1e-5, atol=1e-6)

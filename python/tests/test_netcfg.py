@@ -1,0 +1,55 @@
+"""Config parser: the single source of truth for the model zoo."""
+
+import pytest
+
+from compile import netcfg
+
+
+def test_zoo_loads():
+    nets = netcfg.load_zoo()
+    assert [n.name for n in nets] == netcfg.ZOO
+
+
+def test_parse_minimal():
+    net = netcfg.parse_cfg_text(
+        "t",
+        """
+        [net]
+        height=8
+        width=8
+        channels=1
+        [convolutional]
+        filters=4
+        size=3
+        pad=1
+        activation=relu
+        [softmax]
+        """,
+    )
+    assert net.input_shape == (1, 8, 8)
+    assert [l.kind for l in net.layers] == ["convolutional", "softmax"]
+    assert net.layers[0].geti("filters", 0) == 4
+    assert net.layers[0].gets("activation", "?") == "relu"
+
+
+def test_comments_and_blank_lines():
+    net = netcfg.parse_cfg_text(
+        "t",
+        "# header\n[net]\nheight=4 # trailing\nwidth=4\nchannels=2\n\n[softmax]\n",
+    )
+    assert net.channels == 2
+
+
+def test_errors():
+    with pytest.raises(ValueError, match="first section"):
+        netcfg.parse_cfg_text("t", "[convolutional]\nfilters=1\n")
+    with pytest.raises(ValueError, match="unknown layer"):
+        netcfg.parse_cfg_text(
+            "t", "[net]\nheight=1\nwidth=1\nchannels=1\n[bogus]\n"
+        )
+    with pytest.raises(ValueError, match="height/width/channels"):
+        netcfg.parse_cfg_text("t", "[net]\nheight=0\nwidth=1\nchannels=1\n")
+    with pytest.raises(ValueError, match="key=value"):
+        netcfg.parse_cfg_text("t", "[net]\nheight 3\n")
+    with pytest.raises(ValueError, match="outside a section"):
+        netcfg.parse_cfg_text("t", "height=3\n")

@@ -1,0 +1,9 @@
+//! `cargo bench --bench fig07_mmu` — regenerates paper Fig 7 (single- vs multi-MMU scaling).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::fig07_mmu::run();
+    report.print();
+    println!("[bench] fig07_mmu regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,9 @@
+//! `cargo bench --bench fig09_throughput` — regenerates paper Fig 9 (throughput vs Darknet baseline).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::fig09_throughput::run(60);
+    report.print();
+    println!("[bench] fig09_throughput regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,9 @@
+//! `cargo bench --bench fig10_power` — regenerates paper Fig 10 (power distribution + energy).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::fig10_power::run(60);
+    report.print();
+    println!("[bench] fig10_power regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

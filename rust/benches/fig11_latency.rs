@@ -1,0 +1,9 @@
+//! `cargo bench --bench fig11_latency` — regenerates paper Fig 11 (non-pipelined latency ablation).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::fig11_latency::run(12);
+    report.print();
+    println!("[bench] fig11_latency regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,9 @@
+//! `cargo bench --bench fig12_pipeline` — regenerates paper Fig 12 (pipelined throughput ablation).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::fig12_pipeline::run(60);
+    report.print();
+    println!("[bench] fig12_pipeline regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

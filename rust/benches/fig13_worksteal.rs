@@ -1,0 +1,9 @@
+//! `cargo bench --bench fig13_worksteal` — regenerates paper Fig 13 (work stealing vs SF/SC).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::fig13_worksteal::run(40);
+    report.print();
+    println!("[bench] fig13_worksteal regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

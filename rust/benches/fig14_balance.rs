@@ -1,0 +1,9 @@
+//! `cargo bench --bench fig14_balance` — regenerates paper Fig 14 (CIFAR_Alex cluster balance).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::fig14_balance::run(60);
+    report.print();
+    println!("[bench] fig14_balance regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,103 @@
+//! `cargo bench --bench perf_hotpath` — L3 hot-path microbenchmarks
+//! (the §Perf deliverable): GEMM micro-kernel, tile packing, job queue
+//! throughput, steal latency, mailbox hop, and end-to-end native pipeline
+//! throughput.  Results feed EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+
+use synergy::cluster::JobQueue;
+use synergy::config::zoo;
+use synergy::mm::gemm::{gemm_blocked, gemm_naive};
+use synergy::mm::tile::{job_mm_native, TileGrid};
+use synergy::nn::im2col::im2col;
+use synergy::nn::Network;
+use synergy::pipeline::Mailbox;
+use synergy::rt::{self, RtOptions};
+use synergy::tensor::Tensor;
+use synergy::util::bench::{fmt, Bencher, Table};
+use synergy::util::rng::XorShift64Star;
+
+fn main() {
+    let b = Bencher::default();
+    let mut table = Table::new(&["benchmark", "mean µs", "throughput"]);
+
+    // GEMM micro-kernels on a conv2-shaped problem (64x800x196).
+    let a = Tensor::from_vec(&[64, 800], XorShift64Star::new(1).fill_f32(64 * 800, 1.0));
+    let bm = Tensor::from_vec(&[800, 196], XorShift64Star::new(2).fill_f32(800 * 196, 1.0));
+    let flops = 2.0 * 64.0 * 800.0 * 196.0;
+    let r = b.run("gemm_naive 64x800x196", || {
+        std::hint::black_box(gemm_naive(&a, &bm));
+    });
+    table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.2} GFLOP/s", flops / r.mean_ns)]);
+    let r = b.run("gemm_blocked 64x800x196", || {
+        std::hint::black_box(gemm_blocked(&a, &bm));
+    });
+    table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.2} GFLOP/s", flops / r.mean_ns)]);
+
+    // Job kernel (K=25) — the NEON-path inner loop.
+    let grid = TileGrid::new(64, 800, 196, 32);
+    let at = grid.extract_a_tiles(a.data(), 0);
+    let bt = grid.extract_b_tiles(bm.data(), 0);
+    let jflops = 2.0 * 32.0 * 32.0 * 32.0 * grid.k_tiles() as f64;
+    let r = b.run("job_mm_native k=25", || {
+        std::hint::black_box(job_mm_native(&at, &bt, grid.k_tiles(), 32));
+    });
+    table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.2} GFLOP/s", jflops / r.mean_ns)]);
+
+    // Tile packing (the PE fetch path).
+    let r = b.run("extract_a_tiles k=25", || {
+        std::hint::black_box(grid.extract_a_tiles(a.data(), 0));
+    });
+    table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.1} MB/s", (at.len() * 4) as f64 / 1e6 / (r.mean_ns / 1e9))]);
+
+    // im2col (CPU preprocessing).
+    let x = Tensor::from_vec(&[32, 14, 14], XorShift64Star::new(3).fill_f32(32 * 14 * 14, 1.0));
+    let r = b.run("im2col 32x14x14 k5 p2", || {
+        std::hint::black_box(im2col(&x, 5, 1, 2));
+    });
+    table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.1} Melem/s", (32.0 * 25.0 * 196.0) / 1e6 / (r.mean_ns / 1e9))]);
+
+    // Job queue push/pop throughput.
+    let r = b.run("jobqueue push+pop x1000", || {
+        let q: JobQueue<u64> = JobQueue::new();
+        for i in 0..1000u64 {
+            q.push(i);
+        }
+        for _ in 0..1000 {
+            std::hint::black_box(q.try_pop());
+        }
+    });
+    table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.1} Mops/s", 2000.0 / 1e6 / (r.mean_ns / 1e9))]);
+
+    // Steal batch.
+    let r = b.run("jobqueue steal 500 of 1000", || {
+        let q: JobQueue<u64> = JobQueue::new();
+        for i in 0..1000u64 {
+            q.push(i);
+        }
+        std::hint::black_box(q.steal(500));
+    });
+    table.row(vec![r.name.clone(), fmt(r.mean_us()), String::from("-")]);
+
+    // Mailbox hop (send+recv).
+    let mb: Mailbox<u64> = Mailbox::new(4);
+    let r = b.run("mailbox send+recv", || {
+        mb.send(1);
+        std::hint::black_box(mb.recv());
+    });
+    table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.2} Mhops/s", 1.0 / 1e6 / (r.mean_ns / 1e9))]);
+
+    // End-to-end native pipeline throughput (host wall clock, mpcnn).
+    let net = Arc::new(Network::new(zoo::load("mpcnn").unwrap(), 32).unwrap());
+    let frames: Vec<(u64, Tensor)> = (0..24).map(|f| (f, net.make_input(f))).collect();
+    let t0 = std::time::Instant::now();
+    let report = rt::driver::run_stream(Arc::clone(&net), RtOptions::default(), frames).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    table.row(vec![
+        "rt pipeline mpcnn x24 (native)".into(),
+        fmt(wall * 1e6 / 24.0),
+        format!("{:.1} frames/s host", report.fps),
+    ]);
+
+    table.print();
+}

@@ -1,0 +1,9 @@
+//! `cargo bench --bench table3_energy` — regenerates paper Table 3 (energy + GOPS/W).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::table3_energy::run(60);
+    report.print();
+    println!("[bench] table3_energy regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

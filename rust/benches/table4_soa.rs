@@ -1,0 +1,9 @@
+//! `cargo bench --bench table4_soa` — regenerates paper Table 4 (state-of-the-art comparison).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::table4_soa::run(60);
+    report.print();
+    println!("[bench] table4_soa regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

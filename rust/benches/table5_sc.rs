@@ -1,0 +1,9 @@
+//! `cargo bench --bench table5_sc` — regenerates paper Table 5 (SC cluster DSE).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::table5_sc::run(16);
+    report.print();
+    println!("[bench] table5_sc regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,9 @@
+//! `cargo bench --bench table6_util` — regenerates paper Table 6 (cluster utilization).
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let report = synergy::experiments::table6_util::run(40);
+    report.print();
+    println!("[bench] table6_util regenerated in {:.2}s", t0.elapsed().as_secs_f64());
+}

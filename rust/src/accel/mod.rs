@@ -1,0 +1,253 @@
+//! Heterogeneous accelerators: FPGA processing engines (PEs) and NEON
+//! software accelerators (paper §3.1.1 "Heterogeneous Accelerators").
+//!
+//! Split cleanly into:
+//! * a **timing model** ([`PerfModel`], `timing.rs`) — the paper's HLS
+//!   latency analysis (§3.2.1) turned into per-job service times, used by
+//!   the virtual-clock simulator that regenerates the paper's figures;
+//! * an **execution backend** (`rt/` delegate threads) — real compute via
+//!   the AOT Pallas kernel on PJRT (PE path) or the native blocked GEMM
+//!   (NEON path).
+
+pub mod timing;
+
+pub use timing::{AccelClass, PerfModel};
+
+use crate::config::{ClusterCfg, HwConfig};
+
+/// Identity + placement of one accelerator instance.
+#[derive(Debug, Clone)]
+pub struct AccelSpec {
+    /// Dense id, unique across the whole platform.
+    pub id: usize,
+    /// Cluster index this accelerator belongs to.
+    pub cluster: usize,
+    /// Display name, e.g. "F-PE#3" or "NEON#0".
+    pub name: String,
+    pub class: AccelClass,
+    pub perf: PerfModel,
+    /// MMU channel this accelerator's memory traffic uses (NEONs use the
+    /// CPU's coherent path, modelled as channel None).
+    pub mmu: Option<usize>,
+}
+
+impl AccelSpec {
+    pub fn is_fpga(&self) -> bool {
+        matches!(self.class, AccelClass::FpgaPe { .. })
+    }
+}
+
+/// A cluster instantiated from config: its member accelerators.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub index: usize,
+    pub name: String,
+    pub members: Vec<AccelSpec>,
+}
+
+impl ClusterSpec {
+    /// Aggregate k-steps/second — the "power" of a cluster, used by the
+    /// static mapper to rank clusters.
+    pub fn throughput(&self) -> f64 {
+        self.members.iter().map(|a| 1.0 / a.perf.kstep_seconds).sum()
+    }
+}
+
+/// Instantiate all clusters + accelerators from a hardware config.
+/// MMU channels are assigned round-robin, `pes_per_mmu` PEs per channel
+/// (paper §3.2.2 "at most two PEs sharing an MMU").
+pub fn build_clusters(hw: &HwConfig) -> Vec<ClusterSpec> {
+    let mut clusters = Vec::new();
+    let mut next_id = 0;
+    let mut next_pe_global = 0; // PE ordinal across clusters, for MMU binding
+    for (ci, ccfg) in hw.clusters.iter().enumerate() {
+        let mut members = Vec::new();
+        for (type_name, count) in &ccfg.pes {
+            let pt = hw
+                .pe_type(type_name)
+                .expect("validated config references known pe types");
+            for _ in 0..*count {
+                let mmu = next_pe_global / hw.memsub.pes_per_mmu.max(1);
+                members.push(AccelSpec {
+                    id: next_id,
+                    cluster: ci,
+                    name: format!("{}#{}", type_name, next_pe_global),
+                    class: AccelClass::FpgaPe {
+                        type_name: type_name.clone(),
+                    },
+                    perf: PerfModel::fpga_pe(pt, hw.tile_size, hw.fpga_mhz),
+                    mmu: Some(mmu.min(hw.memsub.mmus - 1)),
+                });
+                next_id += 1;
+                next_pe_global += 1;
+            }
+        }
+        for n in 0..ccfg.neon {
+            members.push(AccelSpec {
+                id: next_id,
+                cluster: ci,
+                name: format!("NEON#{n}@c{ci}"),
+                class: AccelClass::Neon,
+                perf: PerfModel::neon(hw.tile_size, hw.cpu_mhz),
+                mmu: None,
+            });
+            next_id += 1;
+        }
+        clusters.push(ClusterSpec {
+            index: ci,
+            name: ccfg.name.clone(),
+            members,
+        });
+    }
+    clusters
+}
+
+/// Flatten clusters into one accelerator list (id-indexed).
+pub fn all_accels(clusters: &[ClusterSpec]) -> Vec<AccelSpec> {
+    let mut v: Vec<AccelSpec> = clusters
+        .iter()
+        .flat_map(|c| c.members.iter().cloned())
+        .collect();
+    v.sort_by_key(|a| a.id);
+    v
+}
+
+/// Filter helper: keep only members matching `keep` (used to build the
+/// CPU+NEON / CPU+FPGA ablations of Fig 11/12).
+pub fn filter_clusters<F: Fn(&AccelSpec) -> bool>(
+    clusters: &[ClusterSpec],
+    keep: F,
+) -> Vec<ClusterSpec> {
+    let mut out = Vec::new();
+    for c in clusters {
+        let members: Vec<AccelSpec> = c.members.iter().filter(|a| keep(a)).cloned().collect();
+        out.push(ClusterSpec {
+            index: c.index,
+            name: c.name.clone(),
+            members,
+        });
+    }
+    // Drop clusters left empty; reindex clusters AND re-number accelerator
+    // ids densely (ids must stay usable as vector indices downstream).
+    let mut filtered: Vec<ClusterSpec> =
+        out.into_iter().filter(|c| !c.members.is_empty()).collect();
+    let mut next_id = 0;
+    for (i, c) in filtered.iter_mut().enumerate() {
+        c.index = i;
+        for m in &mut c.members {
+            m.cluster = i;
+            m.id = next_id;
+            next_id += 1;
+        }
+    }
+    filtered
+}
+
+/// `(cluster_cfg, …)` pretty description, e.g. "2N+2S | 6F".
+pub fn describe(clusters: &[ClusterSpec]) -> String {
+    clusters
+        .iter()
+        .map(|c| {
+            let neon = c.members.iter().filter(|m| !m.is_fpga()).count();
+            let spe = c
+                .members
+                .iter()
+                .filter(|m| m.name.starts_with("S-PE"))
+                .count();
+            let fpe = c
+                .members
+                .iter()
+                .filter(|m| m.name.starts_with("F-PE"))
+                .count();
+            format!("{}N+{}S+{}F", neon, spe, fpe)
+        })
+        .collect::<Vec<_>>()
+        .join(" | ")
+}
+
+/// Build clusters for a given cluster-config tuple list
+/// `(neon, s_pe, f_pe)` — used by the SC design-space exploration.
+pub fn clusters_from_tuples(hw: &HwConfig, tuples: &[(usize, usize, usize)]) -> Vec<ClusterSpec> {
+    let mut cfg = hw.clone();
+    cfg.clusters = tuples
+        .iter()
+        .enumerate()
+        .map(|(i, (neon, spe, fpe))| {
+            let mut pes = Vec::new();
+            if *spe > 0 {
+                pes.push(("S-PE".to_string(), *spe));
+            }
+            if *fpe > 0 {
+                pes.push(("F-PE".to_string(), *fpe));
+            }
+            ClusterCfg {
+                name: format!("cluster{i}"),
+                neon: *neon,
+                pes,
+            }
+        })
+        .collect();
+    build_clusters(&cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_builds_paper_architecture() {
+        let hw = HwConfig::default_zc702();
+        let clusters = build_clusters(&hw);
+        assert_eq!(clusters.len(), 2);
+        // Cluster-0: 2 S-PE + 2 NEON; Cluster-1: 6 F-PE.
+        assert_eq!(clusters[0].members.len(), 4);
+        assert_eq!(clusters[1].members.len(), 6);
+        assert_eq!(describe(&clusters), "2N+2S+0F | 0N+0S+6F");
+        // ids unique and dense
+        let all = all_accels(&clusters);
+        for (i, a) in all.iter().enumerate() {
+            assert_eq!(a.id, i);
+        }
+    }
+
+    #[test]
+    fn mmu_assignment_two_pes_per_mmu() {
+        let hw = HwConfig::default_zc702();
+        let clusters = build_clusters(&hw);
+        let all = all_accels(&clusters);
+        let pes: Vec<&AccelSpec> = all.iter().filter(|a| a.is_fpga()).collect();
+        assert_eq!(pes.len(), 8);
+        for (i, pe) in pes.iter().enumerate() {
+            assert_eq!(pe.mmu, Some(i / 2), "{}", pe.name);
+        }
+        // NEONs bypass the FPGA MMUs
+        assert!(all.iter().filter(|a| !a.is_fpga()).all(|a| a.mmu.is_none()));
+    }
+
+    #[test]
+    fn cluster_throughput_ranks_fpe_highest() {
+        let hw = HwConfig::default_zc702();
+        let clusters = build_clusters(&hw);
+        // 6 F-PEs out-throughput 2 S-PE + 2 NEON.
+        assert!(clusters[1].throughput() > clusters[0].throughput());
+    }
+
+    #[test]
+    fn filter_builds_ablations() {
+        let hw = HwConfig::default_zc702();
+        let clusters = build_clusters(&hw);
+        let fpga_only = filter_clusters(&clusters, |a| a.is_fpga());
+        assert_eq!(fpga_only.iter().map(|c| c.members.len()).sum::<usize>(), 8);
+        let neon_only = filter_clusters(&clusters, |a| !a.is_fpga());
+        assert_eq!(neon_only.len(), 1); // cluster1 had no NEONs → dropped
+        assert_eq!(neon_only[0].index, 0);
+        assert!(neon_only[0].members.iter().all(|m| m.cluster == 0));
+    }
+
+    #[test]
+    fn tuples_builder() {
+        let hw = HwConfig::default_zc702();
+        let clusters = clusters_from_tuples(&hw, &[(0, 2, 1), (2, 0, 5)]);
+        assert_eq!(describe(&clusters), "0N+2S+1F | 2N+0S+5F");
+    }
+}

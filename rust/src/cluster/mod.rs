@@ -1,0 +1,9 @@
+//! Accelerator clusters (paper §3.1.1 "Accelerator Clusters"): each cluster
+//! owns a private synchronized *job queue*; members pull jobs round-robin
+//! (pull-based round-robin: free accelerators take the next job, which
+//! degenerates to round-robin under uniform service).  The work-stealing
+//! thief thread rebalances across queues (`sched::worksteal`).
+
+pub mod queue;
+
+pub use queue::JobQueue;

@@ -1,0 +1,248 @@
+//! Synchronized job queue — the paper's per-cluster "Job Queue" (a
+//! synchronous buffer storing jobs), with the steal operation the thief
+//! thread uses (take from the back, opposite the owners' pop side).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+struct Inner<T> {
+    deque: VecDeque<T>,
+    closed: bool,
+}
+
+/// MPMC blocking deque: owners pop the front, thieves steal from the back.
+pub struct JobQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for JobQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> JobQueue<T> {
+    pub fn new() -> Self {
+        JobQueue {
+            inner: Mutex::new(Inner {
+                deque: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Push one job (to the back).  Returns false if the queue was closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.deque.push_back(item);
+        drop(g);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Push a batch (used by the stealer to deposit stolen jobs).
+    pub fn push_batch(&self, items: Vec<T>) -> bool {
+        if items.is_empty() {
+            return true;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        for it in items {
+            g.deque.push_back(it);
+        }
+        drop(g);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Blocking pop from the front; None once closed *and* drained.
+    pub fn pop_blocking(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.deque.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop with timeout; `Ok(None)` = closed+drained, `Err(())` =
+    /// timed out (caller may try stealing — the idle notification path).
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, ()> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.deque.pop_front() {
+                return Ok(Some(item));
+            }
+            if g.closed {
+                return Ok(None);
+            }
+            let (guard, res) = self.cv.wait_timeout(g, timeout).unwrap();
+            g = guard;
+            if res.timed_out() {
+                if let Some(item) = g.deque.pop_front() {
+                    return Ok(Some(item));
+                }
+                if g.closed {
+                    return Ok(None);
+                }
+                return Err(());
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().deque.pop_front()
+    }
+
+    /// Steal up to `n` jobs from the back (the victim side).
+    pub fn steal(&self, n: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let take = n.min(g.deque.len());
+        let mut out = Vec::with_capacity(take);
+        for _ in 0..take {
+            if let Some(item) = g.deque.pop_back() {
+                out.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().deque.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: pops drain the remainder then return None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn fifo_order_for_single_consumer() {
+        let q = JobQueue::new();
+        for i in 0..5 {
+            assert!(q.push(i));
+        }
+        q.close();
+        let mut got = Vec::new();
+        while let Some(v) = q.pop_blocking() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn steal_takes_from_back() {
+        let q = JobQueue::new();
+        for i in 0..6 {
+            q.push(i);
+        }
+        let stolen = q.steal(2);
+        assert_eq!(stolen, vec![5, 4]);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.try_pop(), Some(0)); // front untouched
+    }
+
+    #[test]
+    fn steal_more_than_available() {
+        let q = JobQueue::new();
+        q.push(1);
+        assert_eq!(q.steal(10), vec![1]);
+        assert!(q.steal(1).is_empty());
+    }
+
+    #[test]
+    fn push_after_close_rejected() {
+        let q = JobQueue::new();
+        q.close();
+        assert!(!q.push(1));
+        assert!(!q.push_batch(vec![1, 2]));
+        assert!(q.pop_blocking().is_none());
+    }
+
+    #[test]
+    fn close_drains_remaining() {
+        let q = JobQueue::new();
+        q.push(7);
+        q.close();
+        assert_eq!(q.pop_blocking(), Some(7));
+        assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn pop_timeout_signals_empty() {
+        let q: JobQueue<u32> = JobQueue::new();
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)), Err(()));
+        q.push(3);
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)), Ok(Some(3)));
+        q.close();
+        assert_eq!(q.pop_timeout(Duration::from_millis(5)), Ok(None));
+    }
+
+    #[test]
+    fn concurrent_producers_consumers_lose_nothing() {
+        let q = Arc::new(JobQueue::new());
+        let n_per = 500;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    for i in 0..n_per {
+                        q.push(p * n_per + i);
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop_blocking() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let want: Vec<i32> = (0..4 * n_per).collect();
+        assert_eq!(all, want);
+    }
+}

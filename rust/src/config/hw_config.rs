@@ -1,0 +1,428 @@
+//! `.hw_config` — the hardware architecture description of paper Fig 8.
+//!
+//! Drives both the hardware architecture generator (`hwgen/`) and the
+//! timing/contention models (`accel/`, `memsub/`).  The embedded
+//! [`HwConfig::default_zc702`] is the paper's evaluation configuration:
+//! two clusters (Cluster-0: 2 NEON + 2 S-PE, Cluster-1: 6 F-PE), tile size
+//! 32, fabric at 100 MHz, one MMU per two PEs.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// PE micro-architecture class (paper §4.1: F-PE vs S-PE).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeKind {
+    /// "Faster" PE: loop pipelining at loop2 → II=1 on the merged TS² loop.
+    Fast,
+    /// "Slower" PE: unroll factor 2 + pipelining at loop3.
+    Slow,
+}
+
+/// One `[pe_type]` section: HLS pragma configuration of a PE template.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeTypeCfg {
+    pub name: String,
+    pub kind: PeKind,
+    /// Initiation interval of the pipelined loop (cycles).
+    pub ii: usize,
+    /// Loop unroll factor applied to loop3.
+    pub unroll: usize,
+    /// BRAM bank count from array partitioning (ports = 2 reads/bank).
+    pub array_partition: usize,
+    /// Which loop carries the pipeline pragma ("loop2" or "loop3").
+    pub pipeline_loop: String,
+}
+
+/// One `[cluster]` section: accelerator grouping (paper §3.1.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterCfg {
+    pub name: String,
+    /// NEON software accelerators assigned to this cluster.
+    pub neon: usize,
+    /// (pe_type name, count) pairs.
+    pub pes: Vec<(String, usize)>,
+}
+
+impl ClusterCfg {
+    pub fn total_pes(&self) -> usize {
+        self.pes.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn total_accels(&self) -> usize {
+        self.total_pes() + self.neon
+    }
+}
+
+/// `[memory]` section: memory subsystem shape (paper §3.2.2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemSubCfg {
+    /// Number of MMU + MEM-controller pairs instantiated.
+    pub mmus: usize,
+    /// Max PEs sharing one MMU (paper: 2).
+    pub pes_per_mmu: usize,
+    /// TLB entries per MMU.
+    pub tlb_entries: usize,
+    /// DDR peak bandwidth in bytes/cycle at fabric clock (shared).
+    pub ddr_bytes_per_cycle: f64,
+    /// DDR random-access latency in fabric cycles (first beat of a burst).
+    pub ddr_latency_cycles: usize,
+    /// AXI burst length in beats (64-bit beats).
+    pub burst_beats: usize,
+}
+
+/// Full hardware architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HwConfig {
+    pub device: String,
+    pub fpga_mhz: f64,
+    pub cpu_mhz: f64,
+    pub tile_size: usize,
+    pub pe_types: Vec<PeTypeCfg>,
+    pub clusters: Vec<ClusterCfg>,
+    pub memsub: MemSubCfg,
+}
+
+impl HwConfig {
+    /// The paper's default ZC702 architecture (§4.1).
+    pub fn default_zc702() -> HwConfig {
+        HwConfig::parse("default_zc702", DEFAULT_ZC702).expect("embedded default parses")
+    }
+
+    pub fn pe_type(&self, name: &str) -> Option<&PeTypeCfg> {
+        self.pe_types.iter().find(|t| t.name == name)
+    }
+
+    pub fn total_pes(&self) -> usize {
+        self.clusters.iter().map(|c| c.total_pes()).sum()
+    }
+
+    pub fn total_neons(&self) -> usize {
+        self.clusters.iter().map(|c| c.neon).sum()
+    }
+
+    /// Validate cross-references and invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.clusters.is_empty() {
+            bail!("at least one cluster required");
+        }
+        if self.tile_size == 0 || !self.tile_size.is_power_of_two() {
+            bail!("tile_size must be a power of two, got {}", self.tile_size);
+        }
+        for c in &self.clusters {
+            if c.total_accels() == 0 {
+                bail!("cluster {} has no accelerators", c.name);
+            }
+            for (t, _) in &c.pes {
+                if self.pe_type(t).is_none() {
+                    bail!("cluster {} references unknown pe_type {t:?}", c.name);
+                }
+            }
+        }
+        if self.memsub.mmus == 0 {
+            bail!("memory subsystem needs at least one MMU");
+        }
+        let needed_mmus = self.total_pes().div_ceil(self.memsub.pes_per_mmu.max(1));
+        if self.memsub.mmus < needed_mmus {
+            bail!(
+                "{} PEs need ≥{} MMUs at {} PEs/MMU, got {}",
+                self.total_pes(),
+                needed_mmus,
+                self.memsub.pes_per_mmu,
+                self.memsub.mmus
+            );
+        }
+        Ok(())
+    }
+
+    /// Parse `.hw_config` text (INI-style with repeated sections).
+    pub fn parse(name: &str, text: &str) -> Result<HwConfig> {
+        let mut device = "xc7z020".to_string();
+        let mut fpga_mhz = 100.0;
+        let mut cpu_mhz = 667.0;
+        let mut tile_size = 32;
+        let mut pe_types = Vec::new();
+        let mut clusters = Vec::new();
+        let mut memsub = MemSubCfg {
+            mmus: 4,
+            pes_per_mmu: 2,
+            tlb_entries: 8,
+            ddr_bytes_per_cycle: 8.0,
+            ddr_latency_cycles: 20,
+            burst_beats: 64,
+        };
+
+        #[derive(PartialEq, Clone, Copy)]
+        enum Sec {
+            None,
+            Device,
+            Cluster,
+            PeType,
+            Memory,
+        }
+        let mut sec = Sec::None;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(stripped) = line.strip_prefix('[') {
+                let kind = stripped
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("{name}:{}: malformed section", lineno + 1))?
+                    .trim()
+                    .to_lowercase();
+                sec = match kind.as_str() {
+                    "device" => Sec::Device,
+                    "cluster" => {
+                        clusters.push(ClusterCfg {
+                            name: format!("cluster{}", clusters.len()),
+                            neon: 0,
+                            pes: Vec::new(),
+                        });
+                        Sec::Cluster
+                    }
+                    "pe_type" => {
+                        pe_types.push(PeTypeCfg {
+                            name: String::new(),
+                            kind: PeKind::Fast,
+                            ii: 1,
+                            unroll: 1,
+                            array_partition: 1,
+                            pipeline_loop: "loop2".into(),
+                        });
+                        Sec::PeType
+                    }
+                    "memory" => Sec::Memory,
+                    other => bail!("{name}:{}: unknown section [{other}]", lineno + 1),
+                };
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("{name}:{}: expected key=value", lineno + 1))?;
+            let (k, v) = (k.trim(), v.trim());
+            let parse_usize =
+                || -> Result<usize> { v.parse().with_context(|| format!("{name}:{}: {k}={v}", lineno + 1)) };
+            let parse_f64 =
+                || -> Result<f64> { v.parse().with_context(|| format!("{name}:{}: {k}={v}", lineno + 1)) };
+            match sec {
+                Sec::Device => match k {
+                    "name" => device = v.to_string(),
+                    "fpga_mhz" => fpga_mhz = parse_f64()?,
+                    "cpu_mhz" => cpu_mhz = parse_f64()?,
+                    "tile_size" => tile_size = parse_usize()?,
+                    other => bail!("{name}:{}: unknown device key {other}", lineno + 1),
+                },
+                Sec::Cluster => {
+                    let c = clusters.last_mut().unwrap();
+                    match k {
+                        "name" => c.name = v.to_string(),
+                        "neon" => c.neon = parse_usize()?,
+                        "pe" => {
+                            // pe=F-PE:6 (repeatable)
+                            let (t, n) = v
+                                .split_once(':')
+                                .ok_or_else(|| anyhow!("{name}:{}: pe=TYPE:COUNT", lineno + 1))?;
+                            c.pes.push((
+                                t.trim().to_string(),
+                                n.trim()
+                                    .parse()
+                                    .with_context(|| format!("{name}:{}: pe count", lineno + 1))?,
+                            ));
+                        }
+                        other => bail!("{name}:{}: unknown cluster key {other}", lineno + 1),
+                    }
+                }
+                Sec::PeType => {
+                    let t = pe_types.last_mut().unwrap();
+                    match k {
+                        "name" => t.name = v.to_string(),
+                        "kind" => {
+                            t.kind = match v {
+                                "fast" => PeKind::Fast,
+                                "slow" => PeKind::Slow,
+                                other => bail!("{name}:{}: kind must be fast|slow, got {other}", lineno + 1),
+                            }
+                        }
+                        "ii" => t.ii = parse_usize()?,
+                        "unroll" => t.unroll = parse_usize()?,
+                        "array_partition" => t.array_partition = parse_usize()?,
+                        "pipeline_loop" => t.pipeline_loop = v.to_string(),
+                        other => bail!("{name}:{}: unknown pe_type key {other}", lineno + 1),
+                    }
+                }
+                Sec::Memory => match k {
+                    "mmus" => memsub.mmus = parse_usize()?,
+                    "pes_per_mmu" => memsub.pes_per_mmu = parse_usize()?,
+                    "tlb_entries" => memsub.tlb_entries = parse_usize()?,
+                    "ddr_bytes_per_cycle" => memsub.ddr_bytes_per_cycle = parse_f64()?,
+                    "ddr_latency_cycles" => memsub.ddr_latency_cycles = parse_usize()?,
+                    "burst_beats" => memsub.burst_beats = parse_usize()?,
+                    other => bail!("{name}:{}: unknown memory key {other}", lineno + 1),
+                },
+                Sec::None => bail!("{name}:{}: key outside a section", lineno + 1),
+            }
+        }
+
+        let cfg = HwConfig {
+            device,
+            fpga_mhz,
+            cpu_mhz,
+            tile_size,
+            pe_types,
+            clusters,
+            memsub,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<HwConfig> {
+        let name = path.file_stem().and_then(|s| s.to_str()).unwrap_or("hw");
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(name, &text)
+    }
+
+    /// Build a custom two-cluster config (used by the SC design-space
+    /// exploration of paper Table 5): `(neon, s_pe, f_pe)` per cluster.
+    pub fn two_clusters(c0: (usize, usize, usize), c1: (usize, usize, usize)) -> HwConfig {
+        let mut base = HwConfig::default_zc702();
+        let mk = |name: &str, (neon, spe, fpe): (usize, usize, usize)| {
+            let mut pes = Vec::new();
+            if spe > 0 {
+                pes.push(("S-PE".to_string(), spe));
+            }
+            if fpe > 0 {
+                pes.push(("F-PE".to_string(), fpe));
+            }
+            ClusterCfg {
+                name: name.to_string(),
+                neon,
+                pes,
+            }
+        };
+        base.clusters = vec![mk("cluster0", c0), mk("cluster1", c1)];
+        base
+    }
+}
+
+/// The paper's ZC702 evaluation architecture (§4.1): 6 F-PE + 2 S-PE,
+/// 2 NEONs, two clusters, 4 MMUs with ≤2 PEs each.
+pub const DEFAULT_ZC702: &str = "
+[device]
+name = xc7z020
+fpga_mhz = 100
+cpu_mhz = 667
+tile_size = 32
+
+[pe_type]
+name = F-PE
+kind = fast
+pipeline_loop = loop2
+ii = 1
+unroll = 1
+array_partition = 16
+
+[pe_type]
+name = S-PE
+kind = slow
+pipeline_loop = loop3
+ii = 1
+unroll = 2
+array_partition = 12
+
+[cluster]
+name = cluster0
+neon = 2
+pe = S-PE:2
+
+[cluster]
+name = cluster1
+pe = F-PE:6
+
+[memory]
+mmus = 4
+pes_per_mmu = 2
+tlb_entries = 8
+ddr_bytes_per_cycle = 8
+ddr_latency_cycles = 20
+burst_beats = 64
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_parses_and_matches_paper() {
+        let hw = HwConfig::default_zc702();
+        assert_eq!(hw.tile_size, 32);
+        assert_eq!(hw.fpga_mhz, 100.0);
+        assert_eq!(hw.clusters.len(), 2);
+        // Cluster-0: 2 NEONs + 2 S-PE; Cluster-1: 6 F-PE.
+        assert_eq!(hw.clusters[0].neon, 2);
+        assert_eq!(hw.clusters[0].pes, vec![("S-PE".to_string(), 2)]);
+        assert_eq!(hw.clusters[1].pes, vec![("F-PE".to_string(), 6)]);
+        assert_eq!(hw.total_pes(), 8);
+        assert_eq!(hw.total_neons(), 2);
+        assert!(hw.validate().is_ok());
+        let fpe = hw.pe_type("F-PE").unwrap();
+        assert_eq!(fpe.kind, PeKind::Fast);
+        assert_eq!(fpe.ii, 1);
+    }
+
+    #[test]
+    fn validation_failures() {
+        let mut hw = HwConfig::default_zc702();
+        hw.clusters.clear();
+        assert!(hw.validate().is_err());
+
+        let mut hw = HwConfig::default_zc702();
+        hw.tile_size = 33;
+        assert!(hw.validate().is_err());
+
+        let mut hw = HwConfig::default_zc702();
+        hw.memsub.mmus = 1; // 8 PEs need 4 MMUs at 2 per MMU
+        assert!(hw.validate().is_err());
+
+        let mut hw = HwConfig::default_zc702();
+        hw.clusters[0].pes[0].0 = "NOPE".into();
+        assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn two_clusters_builder() {
+        let hw = HwConfig::two_clusters((2, 2, 2), (0, 0, 4));
+        assert_eq!(hw.clusters[0].neon, 2);
+        assert_eq!(hw.clusters[0].total_pes(), 4);
+        assert_eq!(hw.clusters[1].total_pes(), 4);
+        assert!(hw.validate().is_ok());
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(HwConfig::parse("t", "[bogus]\n").is_err());
+        assert!(HwConfig::parse("t", "key=1\n").is_err());
+        assert!(HwConfig::parse("t", "[cluster]\npe=F-PE\n").is_err());
+        assert!(HwConfig::parse("t", "[pe_type]\nkind=medium\n").is_err());
+    }
+
+    #[test]
+    fn empty_cluster_rejected() {
+        let text = "
+[device]
+tile_size = 32
+[pe_type]
+name = F-PE
+[cluster]
+name = c0
+pe = F-PE:1
+[cluster]
+name = empty
+[memory]
+mmus = 1
+";
+        assert!(HwConfig::parse("t", text).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration: darknet-style network `.cfg` files (paper: "network
+//! configuration file"), the `.hw_config` hardware architecture description
+//! (paper Fig 8), and the benchmark model zoo (paper Table 2).
+
+pub mod hw_config;
+pub mod net_config;
+pub mod zoo;
+
+pub use hw_config::{ClusterCfg, HwConfig, MemSubCfg, PeKind, PeTypeCfg};
+pub use net_config::{Activation, LayerSpec, NetConfig};

@@ -1,0 +1,336 @@
+//! Darknet-style `.cfg` parser — Rust twin of `python/compile/netcfg.py`.
+//! Both sides parse the same `configs/*.cfg`, keeping the model zoo single-
+//! sourced.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Activation functions supported by the zoo (darknet names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Linear,
+    Relu,
+    Leaky,
+    Sigmoid,
+    Tanh,
+}
+
+impl Activation {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "linear" => Activation::Linear,
+            "relu" => Activation::Relu,
+            "leaky" => Activation::Leaky,
+            "sigmoid" => Activation::Sigmoid,
+            "tanh" => Activation::Tanh,
+            other => bail!("unknown activation {other:?}"),
+        })
+    }
+
+    #[inline]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            Activation::Linear => x,
+            Activation::Relu => x.max(0.0),
+            Activation::Leaky => {
+                if x > 0.0 {
+                    x
+                } else {
+                    0.1 * x
+                }
+            }
+            Activation::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            Activation::Tanh => x.tanh(),
+        }
+    }
+}
+
+/// One layer of a network, as parsed from a `[section]`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerSpec {
+    Conv {
+        filters: usize,
+        size: usize,
+        stride: usize,
+        pad: usize,
+        activation: Activation,
+    },
+    MaxPool {
+        size: usize,
+        stride: usize,
+    },
+    AvgPool {
+        size: usize,
+        stride: usize,
+    },
+    Connected {
+        output: usize,
+        activation: Activation,
+    },
+    BatchNorm,
+    Dropout {
+        probability: f64,
+    },
+    Softmax,
+}
+
+impl LayerSpec {
+    /// Short human name (used by traces / metrics).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            LayerSpec::Conv { .. } => "conv",
+            LayerSpec::MaxPool { .. } => "maxpool",
+            LayerSpec::AvgPool { .. } => "avgpool",
+            LayerSpec::Connected { .. } => "connected",
+            LayerSpec::BatchNorm => "batchnorm",
+            LayerSpec::Dropout { .. } => "dropout",
+            LayerSpec::Softmax => "softmax",
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, LayerSpec::Conv { .. })
+    }
+}
+
+/// Parsed network: input geometry + ordered layers.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    pub name: String,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl NetConfig {
+    /// Input shape as (C, H, W).
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        (self.channels, self.height, self.width)
+    }
+
+    pub fn num_conv_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_conv()).count()
+    }
+
+    /// Parse darknet-style cfg text.
+    pub fn parse(name: &str, text: &str) -> Result<NetConfig> {
+        #[derive(Default)]
+        struct Section {
+            kind: String,
+            options: Vec<(String, String)>,
+        }
+        let mut sections: Vec<Section> = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(stripped) = line.strip_prefix('[') {
+                let kind = stripped
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("{name}:{}: malformed section {raw:?}", lineno + 1))?
+                    .trim()
+                    .to_lowercase();
+                sections.push(Section {
+                    kind,
+                    options: Vec::new(),
+                });
+            } else {
+                let (k, v) = line
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("{name}:{}: expected key=value, got {raw:?}", lineno + 1))?;
+                sections
+                    .last_mut()
+                    .ok_or_else(|| anyhow!("{name}:{}: option outside a section", lineno + 1))?
+                    .options
+                    .push((k.trim().to_string(), v.trim().to_string()));
+            }
+        }
+
+        let first = sections
+            .first()
+            .filter(|s| s.kind == "net")
+            .ok_or_else(|| anyhow!("{name}: first section must be [net]"))?;
+        let geti = |sec: &Section, key: &str, default: usize| -> Result<usize> {
+            match sec.options.iter().rev().find(|(k, _)| k == key) {
+                None => Ok(default),
+                Some((_, v)) => v
+                    .parse()
+                    .with_context(|| format!("{name}: bad integer for {key}={v}")),
+            }
+        };
+        let gets = |sec: &Section, key: &str, default: &str| -> String {
+            sec.options
+                .iter()
+                .rev()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v.clone())
+                .unwrap_or_else(|| default.to_string())
+        };
+
+        let height = geti(first, "height", 0)?;
+        let width = geti(first, "width", 0)?;
+        let channels = geti(first, "channels", 0)?;
+        if height == 0 || width == 0 || channels == 0 {
+            bail!("{name}: [net] must define height/width/channels > 0");
+        }
+
+        let mut layers = Vec::new();
+        for sec in &sections[1..] {
+            let layer = match sec.kind.as_str() {
+                "convolutional" => {
+                    let size = geti(sec, "size", 1)?;
+                    LayerSpec::Conv {
+                        filters: geti(sec, "filters", 0)?,
+                        size,
+                        stride: geti(sec, "stride", 1)?,
+                        pad: geti(sec, "pad", 0)?,
+                        activation: Activation::parse(&gets(sec, "activation", "linear"))?,
+                    }
+                }
+                "maxpool" => {
+                    let size = geti(sec, "size", 2)?;
+                    LayerSpec::MaxPool {
+                        size,
+                        stride: geti(sec, "stride", size)?,
+                    }
+                }
+                "avgpool" => {
+                    let size = geti(sec, "size", 2)?;
+                    LayerSpec::AvgPool {
+                        size,
+                        stride: geti(sec, "stride", size)?,
+                    }
+                }
+                "connected" => LayerSpec::Connected {
+                    output: geti(sec, "output", 0)?,
+                    activation: Activation::parse(&gets(sec, "activation", "linear"))?,
+                },
+                "batchnorm" => LayerSpec::BatchNorm,
+                "dropout" => LayerSpec::Dropout {
+                    probability: gets(sec, "probability", "0.5").parse()?,
+                },
+                "softmax" => LayerSpec::Softmax,
+                other => bail!("{name}: unknown layer section [{other}]"),
+            };
+            if let LayerSpec::Conv { filters, size, .. } = &layer {
+                if *filters == 0 || *size == 0 {
+                    bail!("{name}: convolutional layer needs filters>0 and size>0");
+                }
+            }
+            layers.push(layer);
+        }
+        Ok(NetConfig {
+            name: name.to_string(),
+            height,
+            width,
+            channels,
+            layers,
+        })
+    }
+
+    /// Load `path` with the stem as model name.
+    pub fn load(path: &std::path::Path) -> Result<NetConfig> {
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("network")
+            .to_string();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&name, &text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = "
+[net]
+height=8
+width=8
+channels=1
+
+[convolutional]
+filters=4
+size=3
+stride=1
+pad=1
+activation=relu
+
+[maxpool]
+size=2
+stride=2
+
+[connected]
+output=10
+activation=linear
+
+[softmax]
+";
+
+    #[test]
+    fn parse_mini() {
+        let net = NetConfig::parse("mini", MINI).unwrap();
+        assert_eq!(net.input_shape(), (1, 8, 8));
+        assert_eq!(net.layers.len(), 4);
+        assert_eq!(net.num_conv_layers(), 1);
+        assert!(matches!(
+            net.layers[0],
+            LayerSpec::Conv {
+                filters: 4,
+                size: 3,
+                stride: 1,
+                pad: 1,
+                activation: Activation::Relu
+            }
+        ));
+        assert!(matches!(net.layers[1], LayerSpec::MaxPool { size: 2, stride: 2 }));
+    }
+
+    #[test]
+    fn maxpool_stride_defaults_to_size() {
+        let net = NetConfig::parse(
+            "t",
+            "[net]\nheight=4\nwidth=4\nchannels=1\n[maxpool]\nsize=3\n",
+        )
+        .unwrap();
+        assert!(matches!(net.layers[0], LayerSpec::MaxPool { size: 3, stride: 3 }));
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let net = NetConfig::parse(
+            "t",
+            "# hi\n[net]\nheight=4 # trailing\nwidth=4\nchannels=2\n[softmax]\n",
+        )
+        .unwrap();
+        assert_eq!(net.channels, 2);
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(NetConfig::parse("t", "[convolutional]\nfilters=1\n").is_err());
+        assert!(NetConfig::parse("t", "[net]\nheight=0\nwidth=1\nchannels=1\n").is_err());
+        assert!(NetConfig::parse("t", "[net]\nheight=1\nwidth=1\nchannels=1\n[bogus]\n").is_err());
+        assert!(NetConfig::parse("t", "key=1\n").is_err());
+        assert!(NetConfig::parse("t", "[net]\nheight 3\n").is_err());
+        assert!(NetConfig::parse(
+            "t",
+            "[net]\nheight=1\nwidth=1\nchannels=1\n[convolutional]\nfilters=0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn activations_eval() {
+        assert_eq!(Activation::Relu.apply(-1.0), 0.0);
+        assert_eq!(Activation::Relu.apply(2.0), 2.0);
+        assert!((Activation::Leaky.apply(-1.0) + 0.1).abs() < 1e-7);
+        assert_eq!(Activation::Linear.apply(-3.0), -3.0);
+        let s = Activation::Sigmoid.apply(0.0);
+        assert!((s - 0.5).abs() < 1e-7);
+        assert!(Activation::parse("bogus").is_err());
+    }
+}

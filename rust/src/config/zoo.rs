@@ -1,0 +1,83 @@
+//! The benchmark model zoo (paper Table 2): seven CNNs loaded from
+//! `configs/*.cfg`.  The configs are also embedded so binaries work from
+//! any working directory.
+
+use anyhow::Result;
+
+use super::net_config::NetConfig;
+
+/// Model names in paper Table 2 order.
+pub const ZOO: [&str; 7] = [
+    "cifar_darknet",
+    "cifar_alex",
+    "cifar_alex_plus",
+    "cifar_full",
+    "mnist",
+    "svhn",
+    "mpcnn",
+];
+
+macro_rules! embedded {
+    ($name:literal) => {
+        ($name, include_str!(concat!("../../../configs/", $name, ".cfg")))
+    };
+}
+
+const EMBEDDED: [(&str, &str); 7] = [
+    embedded!("cifar_darknet"),
+    embedded!("cifar_alex"),
+    embedded!("cifar_alex_plus"),
+    embedded!("cifar_full"),
+    embedded!("mnist"),
+    embedded!("svhn"),
+    embedded!("mpcnn"),
+];
+
+/// Load one zoo model by name (embedded copy of `configs/<name>.cfg`).
+pub fn load(name: &str) -> Result<NetConfig> {
+    for (n, text) in EMBEDDED {
+        if n == name {
+            return NetConfig::parse(name, text);
+        }
+    }
+    anyhow::bail!("unknown zoo model {name:?}; available: {ZOO:?}")
+}
+
+/// Load the full Table 2 zoo.
+pub fn load_all() -> Result<Vec<NetConfig>> {
+    ZOO.iter().map(|n| load(n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_loads_and_matches_table2() {
+        // (conv layers, total layers) exactly as paper Table 2.
+        let expect = [
+            ("cifar_darknet", 4, 9),
+            ("cifar_alex", 3, 8),
+            ("cifar_alex_plus", 3, 9),
+            ("cifar_full", 3, 9),
+            ("mnist", 2, 7),
+            ("svhn", 3, 8),
+            ("mpcnn", 3, 9),
+        ];
+        for (name, convs, total) in expect {
+            let net = load(name).unwrap();
+            assert_eq!(net.num_conv_layers(), convs, "{name}");
+            assert_eq!(net.layers.len(), total, "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(load("resnet152").is_err());
+    }
+
+    #[test]
+    fn load_all_gives_seven() {
+        assert_eq!(load_all().unwrap().len(), 7);
+    }
+}

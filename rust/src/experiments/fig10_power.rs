@@ -1,0 +1,87 @@
+//! Fig 10 — power distribution and energy consumption of the Synergy
+//! system (paper: FPGA ≈27% of ≈2.08 W average; ARM + DDR dominate;
+//! 14.4–55.8 mJ/frame across the zoo).
+
+use crate::sim::{simulate, SimSpec};
+use crate::util::bench::{fmt, Table};
+use crate::util::stats;
+
+use super::{zoo_networks, Report};
+
+pub struct PowerRow {
+    pub model: String,
+    pub total_w: f64,
+    pub fpga_frac: f64,
+    pub arm_frac: f64,
+    pub ddr_frac: f64,
+    pub energy_mj: f64,
+}
+
+pub fn rows(frames: usize) -> Vec<PowerRow> {
+    zoo_networks()
+        .iter()
+        .map(|net| {
+            let r = simulate(&SimSpec::synergy(net, frames), net);
+            let e = &r.energy;
+            PowerRow {
+                model: net.config.name.clone(),
+                total_w: e.avg_power_w,
+                fpga_frac: e.fpga_fraction(),
+                arm_frac: (e.arm_w + e.neon_w) / e.avg_power_w,
+                ddr_frac: e.ddr_w / e.avg_power_w,
+                energy_mj: e.energy_per_frame_mj,
+            }
+        })
+        .collect()
+}
+
+pub fn run(frames: usize) -> Report {
+    let rows = rows(frames);
+    let mut table = Table::new(&["model", "power (W)", "FPGA %", "ARM+NEON %", "DDR %", "mJ/frame"]);
+    for r in &rows {
+        table.row(vec![
+            r.model.clone(),
+            fmt(r.total_w),
+            format!("{:.0}%", 100.0 * r.fpga_frac),
+            format!("{:.0}%", 100.0 * r.arm_frac),
+            format!("{:.0}%", 100.0 * r.ddr_frac),
+            fmt(r.energy_mj),
+        ]);
+    }
+    let mean_w = stats::mean(&rows.iter().map(|r| r.total_w).collect::<Vec<_>>());
+    let mean_fpga = stats::mean(&rows.iter().map(|r| r.fpga_frac).collect::<Vec<_>>());
+    Report {
+        id: "Fig 10",
+        title: "power distribution and energy consumption",
+        table: table.render(),
+        summary: format!(
+            "paper: ≈2.08 W avg, FPGA ≈27%, 14.4–55.8 mJ/frame; \
+             measured: {:.2} W avg, FPGA {:.0}%, {:.1}–{:.1} mJ/frame",
+            mean_w,
+            100.0 * mean_fpga,
+            rows.iter().map(|r| r.energy_mj).fold(f64::INFINITY, f64::min),
+            rows.iter().map(|r| r.energy_mj).fold(0.0, f64::max),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_shape_matches_paper() {
+        let rows = rows(30);
+        for r in &rows {
+            // total in the embedded-board band
+            assert!((1.0..3.0).contains(&r.total_w), "{}: {} W", r.model, r.total_w);
+            // FPGA is a minority share; ARM+DDR dominate (paper Fig 10)
+            assert!(r.fpga_frac < 0.45, "{}: fpga {}", r.model, r.fpga_frac);
+            assert!(r.arm_frac + r.ddr_frac > 0.4, "{}", r.model);
+        }
+        // energy band ≈ paper's 14.4–55.8 mJ (widened)
+        let min = rows.iter().map(|r| r.energy_mj).fold(f64::INFINITY, f64::min);
+        let max = rows.iter().map(|r| r.energy_mj).fold(0.0, f64::max);
+        assert!(min > 5.0 && max < 80.0, "energy band {min}–{max}");
+    }
+}

@@ -1,0 +1,106 @@
+//! Fig 11 — per-frame latency of *non-pipelined* (single-threaded,
+//! single-core) designs: CPU+NEON, CPU+FPGA, CPU+Het vs the CPU-only
+//! baseline.  Paper: CPU+Het improves latency by 12% on average over
+//! CPU+FPGA (45% max, MPCNN).
+
+use crate::sim::{simulate, SimSpec};
+use crate::util::bench::{fmt, Table};
+use crate::util::stats;
+
+use super::{zoo_networks, Report, BASELINE_FRAMES};
+
+pub struct LatencyRow {
+    pub model: String,
+    pub cpu_ms: f64,
+    pub neon_x: f64,
+    pub fpga_x: f64,
+    pub het_x: f64,
+}
+
+pub fn rows(_frames: usize) -> Vec<LatencyRow> {
+    zoo_networks()
+        .iter()
+        .map(|net| {
+            let frames = BASELINE_FRAMES;
+            let lat = |spec: &SimSpec| simulate(spec, net).mean_latency_s * 1e3;
+            let cpu = lat(&SimSpec::cpu_only(net, frames));
+            let neon = lat(&SimSpec::synergy(net, frames)
+                .with_accels(net, |a| !a.is_fpga())
+                .non_pipelined());
+            let fpga = lat(&SimSpec::synergy(net, frames)
+                .with_accels(net, |a| a.is_fpga())
+                .non_pipelined());
+            let het = lat(&SimSpec::synergy(net, frames).non_pipelined());
+            LatencyRow {
+                model: net.config.name.clone(),
+                cpu_ms: cpu,
+                neon_x: cpu / neon,
+                fpga_x: cpu / fpga,
+                het_x: cpu / het,
+            }
+        })
+        .collect()
+}
+
+pub fn run(frames: usize) -> Report {
+    let rows = rows(frames);
+    let mut table = Table::new(&[
+        "model",
+        "CPU (ms)",
+        "CPU+NEON (x)",
+        "CPU+FPGA (x)",
+        "CPU+Het (x)",
+    ]);
+    for r in &rows {
+        table.row(vec![
+            r.model.clone(),
+            fmt(r.cpu_ms),
+            format!("{:.2}", r.neon_x),
+            format!("{:.2}", r.fpga_x),
+            format!("{:.2}", r.het_x),
+        ]);
+    }
+    let het_over_fpga = stats::mean(
+        &rows
+            .iter()
+            .map(|r| r.het_x / r.fpga_x - 1.0)
+            .collect::<Vec<_>>(),
+    );
+    Report {
+        id: "Fig 11",
+        title: "non-pipelined latency improvement vs CPU-only",
+        table: table.render(),
+        summary: format!(
+            "paper: heterogeneity (Het vs FPGA-only) improves latency 12% avg; \
+             measured: {:.0}% avg",
+            100.0 * het_over_fpga
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn het_beats_fpga_beats_neon() {
+        for r in rows(8) {
+            assert!(r.het_x >= r.fpga_x * 0.999, "{}: het {} vs fpga {}", r.model, r.het_x, r.fpga_x);
+            assert!(r.fpga_x > r.neon_x, "{}: fpga {} vs neon {}", r.model, r.fpga_x, r.neon_x);
+            assert!(r.neon_x > 1.0, "{}: neon {}", r.model, r.neon_x);
+        }
+    }
+
+    #[test]
+    fn het_gain_over_fpga_in_paper_band() {
+        let rows = rows(8);
+        let gain = stats::mean(
+            &rows
+                .iter()
+                .map(|r| r.het_x / r.fpga_x - 1.0)
+                .collect::<Vec<_>>(),
+        );
+        // paper: +12% average (max 45%); accept 3–35%
+        assert!((0.03..0.35).contains(&gain), "het over fpga: {gain}");
+    }
+}

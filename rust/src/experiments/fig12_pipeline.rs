@@ -1,0 +1,106 @@
+//! Fig 12 — *pipelined* throughput speedups (multi-threaded, 2 ARM cores):
+//! CPU+NEON, CPU+FPGA, CPU+Het vs the single-core CPU baseline.
+//! Paper: CPU+Het achieves 15% better throughput than CPU+FPGA on average
+//! (37% max, MNIST).
+
+use crate::sim::{simulate, SimSpec};
+use crate::util::bench::{fmt, Table};
+use crate::util::stats;
+
+use super::{zoo_networks, Report, BASELINE_FRAMES};
+
+pub struct ThroughputRow {
+    pub model: String,
+    pub cpu_fps: f64,
+    pub neon_x: f64,
+    pub fpga_x: f64,
+    pub het_x: f64,
+}
+
+pub fn rows(frames: usize) -> Vec<ThroughputRow> {
+    zoo_networks()
+        .iter()
+        .map(|net| {
+            let fps = |spec: &SimSpec| simulate(spec, net).fps;
+            let cpu = fps(&SimSpec::cpu_only(net, BASELINE_FRAMES));
+            let neon = fps(&SimSpec::synergy(net, frames).with_accels(net, |a| !a.is_fpga()));
+            let fpga = fps(&SimSpec::synergy(net, frames).with_accels(net, |a| a.is_fpga()));
+            let het = fps(&SimSpec::synergy(net, frames));
+            ThroughputRow {
+                model: net.config.name.clone(),
+                cpu_fps: cpu,
+                neon_x: neon / cpu,
+                fpga_x: fpga / cpu,
+                het_x: het / cpu,
+            }
+        })
+        .collect()
+}
+
+pub fn run(frames: usize) -> Report {
+    let rows = rows(frames);
+    let mut table = Table::new(&[
+        "model",
+        "CPU fps",
+        "CPU+NEON (x)",
+        "CPU+FPGA (x)",
+        "CPU+Het (x)",
+    ]);
+    for r in &rows {
+        table.row(vec![
+            r.model.clone(),
+            fmt(r.cpu_fps),
+            format!("{:.2}", r.neon_x),
+            format!("{:.2}", r.fpga_x),
+            format!("{:.2}", r.het_x),
+        ]);
+    }
+    let het_over_fpga = stats::mean(
+        &rows
+            .iter()
+            .map(|r| r.het_x / r.fpga_x - 1.0)
+            .collect::<Vec<_>>(),
+    );
+    Report {
+        id: "Fig 12",
+        title: "pipelined throughput improvement vs CPU-only",
+        table: table.render(),
+        summary: format!(
+            "paper: Het beats FPGA-only by 15% avg throughput; measured: {:.0}% avg",
+            100.0 * het_over_fpga
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_and_band() {
+        let rows = rows(30);
+        for r in &rows {
+            // per-model: Het within noise of FPGA-only or better
+            assert!(r.het_x >= r.fpga_x * 0.95, "{}: {} vs {}", r.model, r.het_x, r.fpga_x);
+            assert!(r.fpga_x > r.neon_x, "{}", r.model);
+        }
+        let gain = stats::mean(
+            &rows
+                .iter()
+                .map(|r| r.het_x / r.fpga_x - 1.0)
+                .collect::<Vec<_>>(),
+        );
+        // paper: +15% average; accept 3–40%
+        assert!((0.03..0.40).contains(&gain), "het over fpga: {gain}");
+    }
+
+    #[test]
+    fn pipelined_beats_non_pipelined_counterpart() {
+        // Fig 12 speedups must exceed Fig 11's for the same configs.
+        let nets = zoo_networks();
+        let net = nets.iter().find(|n| n.config.name == "cifar_full").unwrap();
+        let non = simulate(&SimSpec::synergy(net, 8).non_pipelined(), net);
+        let pip = simulate(&SimSpec::synergy(net, 30), net);
+        assert!(pip.fps > non.fps);
+    }
+}

@@ -1,0 +1,85 @@
+//! Experiment harness: one module per table/figure of the paper's §4.
+//!
+//! Every module exposes `run(frames) -> Report`, where the report carries
+//! the regenerated rows plus the paper's published values for side-by-side
+//! comparison.  The `rust/benches/*.rs` binaries and the `synergy repro`
+//! CLI subcommand are thin wrappers over these.
+//!
+//! Reproduction is **shape-level** (DESIGN.md §4): orderings, approximate
+//! ratios and crossovers are asserted; absolute ZC702 milliseconds are not.
+
+pub mod fig07_mmu;
+pub mod fig09_throughput;
+pub mod fig10_power;
+pub mod fig11_latency;
+pub mod fig12_pipeline;
+pub mod fig13_worksteal;
+pub mod fig14_balance;
+pub mod table3_energy;
+pub mod table4_soa;
+pub mod table5_sc;
+pub mod table6_util;
+
+use crate::config::zoo;
+use crate::nn::Network;
+
+/// A rendered experiment result.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Paper artifact id, e.g. "Fig 9".
+    pub id: &'static str,
+    pub title: &'static str,
+    /// Markdown table of regenerated rows.
+    pub table: String,
+    /// Headline comparison vs the paper (one-liner summary).
+    pub summary: String,
+}
+
+impl Report {
+    pub fn print(&self) {
+        println!("== {} — {} ==", self.id, self.title);
+        print!("{}", self.table);
+        println!("{}", self.summary);
+        println!();
+    }
+}
+
+/// Load the Table 2 zoo as networks (tile size 32).
+pub fn zoo_networks() -> Vec<Network> {
+    zoo::load_all()
+        .expect("zoo loads")
+        .into_iter()
+        .map(|cfg| Network::new(cfg, 32).expect("network builds"))
+        .collect()
+}
+
+/// Default frame counts: enough for steady state, small enough for CI.
+pub const BASELINE_FRAMES: usize = 8;
+pub const PIPELINE_FRAMES: usize = 40;
+
+/// Run every experiment (the `repro all` path).
+pub fn run_all(frames: usize) -> Vec<Report> {
+    vec![
+        fig07_mmu::run(),
+        fig09_throughput::run(frames),
+        fig10_power::run(frames),
+        fig11_latency::run(frames),
+        fig12_pipeline::run(frames),
+        fig13_worksteal::run(frames),
+        fig14_balance::run(frames),
+        table3_energy::run(frames),
+        table4_soa::run(frames),
+        table5_sc::run(frames.min(16)),
+        table6_util::run(frames),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_networks_load() {
+        assert_eq!(zoo_networks().len(), 7);
+    }
+}

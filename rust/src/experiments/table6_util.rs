@@ -1,0 +1,104 @@
+//! Table 6 — accelerator cluster utilization across designs: non-pipelined
+//! vs SF vs SC vs Synergy.  Paper means: 56.05% → 92.46% → 96.47% → 99.80%.
+
+use crate::accel::clusters_from_tuples;
+use crate::config::HwConfig;
+use crate::sched::dse;
+use crate::sim::{simulate, SimSpec};
+use crate::util::bench::Table;
+use crate::util::stats;
+
+use super::{zoo_networks, Report};
+
+pub struct UtilRow {
+    pub model: String,
+    pub non_pipelined: f64,
+    pub sf: f64,
+    pub sc: f64,
+    pub synergy: f64,
+}
+
+pub fn rows(frames: usize) -> Vec<UtilRow> {
+    let hw = HwConfig::default_zc702();
+    zoo_networks()
+        .iter()
+        .map(|net| {
+            let non = simulate(&SimSpec::synergy(net, frames.min(12)).non_pipelined(), net);
+            let sf = simulate(&SimSpec::static_fixed(net, frames), net);
+            let best = dse::explore(net, frames.min(12));
+            let sc_clusters = clusters_from_tuples(&hw, &best.best);
+            let sc = simulate(&SimSpec::static_custom(net, sc_clusters, frames), net);
+            let syn = simulate(&SimSpec::synergy(net, frames), net);
+            UtilRow {
+                model: net.config.name.clone(),
+                non_pipelined: non.cluster_util,
+                sf: sf.cluster_util,
+                sc: sc.cluster_util,
+                synergy: syn.cluster_util,
+            }
+        })
+        .collect()
+}
+
+pub fn run(frames: usize) -> Report {
+    let rows = rows(frames);
+    let mut table = Table::new(&["model", "non-pipelined", "SF", "SC", "Synergy"]);
+    let pct = |v: f64| format!("{:.1}%", 100.0 * v);
+    for r in &rows {
+        table.row(vec![
+            r.model.clone(),
+            pct(r.non_pipelined),
+            pct(r.sf),
+            pct(r.sc),
+            pct(r.synergy),
+        ]);
+    }
+    let mean = |f: fn(&UtilRow) -> f64| stats::mean(&rows.iter().map(f).collect::<Vec<_>>());
+    table.row(vec![
+        "mean".into(),
+        pct(mean(|r| r.non_pipelined)),
+        pct(mean(|r| r.sf)),
+        pct(mean(|r| r.sc)),
+        pct(mean(|r| r.synergy)),
+    ]);
+    Report {
+        id: "Table 6",
+        title: "accelerator cluster utilization across designs",
+        table: table.render(),
+        summary: format!(
+            "paper means: 56.1% / 92.5% / 96.5% / 99.8%; measured means: \
+             {:.1}% / {:.1}% / {:.1}% / {:.1}%",
+            100.0 * mean(|r| r.non_pipelined),
+            100.0 * mean(|r| r.sf),
+            100.0 * mean(|r| r.sc),
+            100.0 * mean(|r| r.synergy)
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_ordering_matches_table6() {
+        let rows = rows(30);
+        let mean = |f: fn(&UtilRow) -> f64| stats::mean(&rows.iter().map(f).collect::<Vec<_>>());
+        let (non, sf, sc, syn) = (
+            mean(|r| r.non_pipelined),
+            mean(|r| r.sf),
+            mean(|r| r.sc),
+            mean(|r| r.synergy),
+        );
+        // Paper's ordering: non-pipelined ≪ SF ≤ SC ≤ Synergy.
+        assert!(non < sf, "non {non} < sf {sf}");
+        // SC is fps-optimal, not utilization-optimal, so allow a small
+        // inversion vs the paper's ordering here.
+        assert!(sf <= sc + 0.08, "sf {sf} vs sc {sc}");
+        assert!(sc <= syn + 0.03, "sc {sc} vs synergy {syn}");
+        // Synergy approaches full utilization (paper 99.8%; accept ≥85%).
+        assert!(syn > 0.85, "synergy util {syn}");
+        // Non-pipelined leaves accelerators idle much of the time.
+        assert!(non < 0.85, "non-pipelined util {non}");
+    }
+}

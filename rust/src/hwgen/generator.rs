@@ -1,0 +1,206 @@
+//! The end-to-end generation flow (paper Fig 8): `.hw_config` in, design
+//! directory out — PE HLS sources, wiring manifest, synthesis-style
+//! resource report, and a bitstream manifest.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::build_clusters;
+use crate::config::HwConfig;
+use crate::util::json::{self, Json};
+use crate::util::rng::fnv1a64;
+
+use super::hls_template;
+use super::resource::{self, ResourceReport};
+
+/// Everything the generator produced.
+#[derive(Debug)]
+pub struct GeneratedDesign {
+    pub dir: PathBuf,
+    pub pe_sources: Vec<(String, PathBuf)>,
+    pub wiring_manifest: PathBuf,
+    pub report: ResourceReport,
+    pub bitstream_manifest: PathBuf,
+    /// Content hash — two configs with the same hash need no
+    /// reconfiguration (the paper's "bitstream remains unchanged" point).
+    pub bitstream_hash: u64,
+}
+
+/// Run the generator for `hw`, writing into `out_dir`.
+pub fn generate(hw: &HwConfig, out_dir: &Path) -> Result<GeneratedDesign> {
+    hw.validate()?;
+    let report = resource::estimate(hw);
+    if !report.fits() {
+        bail!(
+            "architecture does not fit {}:\n{}",
+            hw.device,
+            report.render()
+        );
+    }
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating {}", out_dir.display()))?;
+
+    // 1. PE HLS sources (only types actually instantiated).
+    let mut pe_sources = Vec::new();
+    let mut hash_acc = String::new();
+    for pt in &hw.pe_types {
+        let instantiated = hw
+            .clusters
+            .iter()
+            .flat_map(|c| c.pes.iter())
+            .any(|(name, n)| name == &pt.name && *n > 0);
+        if !instantiated {
+            continue;
+        }
+        let src = hls_template::emit_pe_source(pt, hw.tile_size);
+        let fname = format!("{}.c", hls_template::c_ident(&pt.name));
+        let path = out_dir.join(&fname);
+        std::fs::write(&path, &src)?;
+        hash_acc.push_str(&src);
+        pe_sources.push((pt.name.clone(), path));
+    }
+
+    // 2. Wiring manifest: the Fig 5 architecture as JSON.
+    let clusters = build_clusters(hw);
+    let mut cluster_json = Vec::new();
+    for c in &clusters {
+        let members: Vec<Json> = c
+            .members
+            .iter()
+            .map(|m| {
+                json::obj(vec![
+                    ("id", json::num(m.id as f64)),
+                    ("name", json::s(&m.name)),
+                    (
+                        "kind",
+                        json::s(if m.is_fpga() { "fpga_pe" } else { "neon" }),
+                    ),
+                    (
+                        "mmu_channel",
+                        m.mmu.map(|v| json::num(v as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("control_fifos", json::arr(vec![
+                        json::s(&format!("if_sw2hw_{}", m.id)),
+                        json::s(&format!("if_hw2sw_{}", m.id)),
+                    ])),
+                    ("memory_fifos", json::arr(vec![
+                        json::s(&format!("if_mem2hw_{}", m.id)),
+                        json::s(&format!("if_hw2mem_{}", m.id)),
+                    ])),
+                ])
+            })
+            .collect();
+        cluster_json.push(json::obj(vec![
+            ("name", json::s(&c.name)),
+            ("members", json::arr(members)),
+        ]));
+    }
+    let wiring = json::obj(vec![
+        ("device", json::s(&hw.device)),
+        ("fpga_mhz", json::num(hw.fpga_mhz)),
+        ("tile_size", json::num(hw.tile_size as f64)),
+        ("clusters", json::arr(cluster_json)),
+        (
+            "memory_subsystem",
+            json::obj(vec![
+                ("mmus", json::num(hw.memsub.mmus as f64)),
+                ("pes_per_mmu", json::num(hw.memsub.pes_per_mmu as f64)),
+                ("tlb_entries", json::num(hw.memsub.tlb_entries as f64)),
+                ("proc_units", json::num(1.0)),
+                ("proc_arbiter", Json::Bool(true)),
+            ]),
+        ),
+    ]);
+    let wiring_path = out_dir.join("wiring.json");
+    std::fs::write(&wiring_path, wiring.to_string())?;
+    hash_acc.push_str(&wiring.to_string());
+
+    // 3. Synthesis-style resource report.
+    std::fs::write(out_dir.join("synthesis_report.txt"), report.render())?;
+
+    // 4. Bitstream manifest (content hash stands in for the .bit).
+    let bitstream_hash = fnv1a64(&hash_acc);
+    let bit = json::obj(vec![
+        ("device", json::s(&hw.device)),
+        ("hash", json::s(&format!("{bitstream_hash:#018x}"))),
+        ("fits", Json::Bool(true)),
+    ]);
+    let bit_path = out_dir.join("bitstream.json");
+    std::fs::write(&bit_path, bit.to_string())?;
+
+    Ok(GeneratedDesign {
+        dir: out_dir.to_path_buf(),
+        pe_sources,
+        wiring_manifest: wiring_path,
+        report,
+        bitstream_manifest: bit_path,
+        bitstream_hash,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "synergy_hwgen_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn default_config_generates_complete_design() {
+        let hw = HwConfig::default_zc702();
+        let dir = tmpdir("default");
+        let design = generate(&hw, &dir).unwrap();
+        // Two PE types, both instantiated.
+        assert_eq!(design.pe_sources.len(), 2);
+        for (_, path) in &design.pe_sources {
+            assert!(path.exists());
+        }
+        assert!(design.wiring_manifest.exists());
+        assert!(design.bitstream_manifest.exists());
+        assert!(dir.join("synthesis_report.txt").exists());
+
+        // Wiring parses back and matches the architecture.
+        let wiring = json::parse(&std::fs::read_to_string(&design.wiring_manifest).unwrap()).unwrap();
+        let clusters = wiring.get("clusters").unwrap().as_arr().unwrap();
+        assert_eq!(clusters.len(), 2);
+        let c1_members = clusters[1].get("members").unwrap().as_arr().unwrap();
+        assert_eq!(c1_members.len(), 6); // 6 F-PE
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bitstream_hash_stable_across_models_changes_with_hw() {
+        let hw = HwConfig::default_zc702();
+        let d1 = tmpdir("h1");
+        let d2 = tmpdir("h2");
+        let g1 = generate(&hw, &d1).unwrap();
+        let g2 = generate(&hw, &d2).unwrap();
+        // Same architecture → same bitstream (network-independent!).
+        assert_eq!(g1.bitstream_hash, g2.bitstream_hash);
+        // Different architecture → different bitstream.
+        let hw2 = HwConfig::two_clusters((2, 2, 2), (0, 0, 4));
+        let d3 = tmpdir("h3");
+        let g3 = generate(&hw2, &d3).unwrap();
+        assert_ne!(g1.bitstream_hash, g3.bitstream_hash);
+        for d in [d1, d2, d3] {
+            std::fs::remove_dir_all(&d).unwrap();
+        }
+    }
+
+    #[test]
+    fn oversized_config_refused() {
+        let mut hw = HwConfig::default_zc702();
+        hw.clusters[1].pes[0].1 = 98; // 100 PEs total
+        hw.memsub.mmus = 50;
+        let dir = tmpdir("big");
+        let err = generate(&hw, &dir).unwrap_err().to_string();
+        assert!(err.contains("does not fit"), "{err}");
+    }
+}

@@ -1,0 +1,23 @@
+//! Hardware architecture generator (paper §3.3 / Fig 8).
+//!
+//! Takes a `.hw_config` ([`crate::config::HwConfig`]) and produces what the
+//! paper's generator produces — minus the proprietary Vivado invocation,
+//! which is replaced by a resource/timing *model* (the substitution is
+//! documented in DESIGN.md §Hardware-Adaptation):
+//!
+//! * the **HLS C template** of each PE type (paper Listing 3) with the
+//!   pragma set implied by its configuration ([`hls_template`]);
+//! * the **RTL wiring manifest**: PEs ↔ control FIFOs ↔ delegate threads,
+//!   MMU/arbiter/controller instances of the memory subsystem (Fig 5);
+//! * the **resource report**: XC7Z020 LUT/FF/DSP/BRAM estimates per
+//!   instance and in total, rejecting configurations that do not fit
+//!   ([`resource`]);
+//! * a **bitstream manifest** standing in for the `.bit` (content hash of
+//!   everything above, so "reconfiguration needed?" is decidable).
+
+pub mod generator;
+pub mod hls_template;
+pub mod resource;
+
+pub use generator::{generate, GeneratedDesign};
+pub use resource::{ResourceBudget, ResourceEstimate, ResourceReport};

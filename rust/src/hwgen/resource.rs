@@ -1,0 +1,253 @@
+//! XC7Z020 resource model: LUT/FF/DSP/BRAM estimates for generated
+//! architectures, standing in for the Vivado synthesis report.
+//!
+//! Cost constants follow well-known Zynq-7000 synthesis results for f32
+//! datapaths: a single-precision MAC (mul+add, full DSP mapping) costs
+//! ≈5 DSP48E1s plus glue LUT/FF; a BRAM36 holds 1024 f32 words (one 32×32
+//! tile); array partitioning into `p` banks multiplies BRAM count by the
+//! bank granularity.
+
+use std::fmt::Write as _;
+
+use crate::config::{HwConfig, PeTypeCfg};
+
+use super::hls_template;
+
+/// Device budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceBudget {
+    pub lut: u64,
+    pub ff: u64,
+    pub dsp: u64,
+    pub bram36: u64,
+}
+
+impl ResourceBudget {
+    /// Xilinx Zynq XC7Z020 (Artix-7 fabric).
+    pub fn xc7z020() -> ResourceBudget {
+        ResourceBudget {
+            lut: 53_200,
+            ff: 106_400,
+            dsp: 220,
+            bram36: 140,
+        }
+    }
+}
+
+/// Estimated usage of one component or the whole design.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ResourceEstimate {
+    pub lut: u64,
+    pub ff: u64,
+    pub dsp: u64,
+    pub bram36: u64,
+}
+
+impl ResourceEstimate {
+    pub fn add(&mut self, other: &ResourceEstimate) {
+        self.lut += other.lut;
+        self.ff += other.ff;
+        self.dsp += other.dsp;
+        self.bram36 += other.bram36;
+    }
+
+    pub fn scaled(&self, n: u64) -> ResourceEstimate {
+        ResourceEstimate {
+            lut: self.lut * n,
+            ff: self.ff * n,
+            dsp: self.dsp * n,
+            bram36: self.bram36 * n,
+        }
+    }
+
+    pub fn fits(&self, budget: &ResourceBudget) -> bool {
+        self.lut <= budget.lut
+            && self.ff <= budget.ff
+            && self.dsp <= budget.dsp
+            && self.bram36 <= budget.bram36
+    }
+}
+
+/// Per-f32-MAC datapath cost on 7-series.
+const MAC_DSP: u64 = 5;
+const MAC_LUT: u64 = 750;
+const MAC_FF: u64 = 1100;
+/// PE control FSM + FIFO interfaces.
+const PE_CTRL_LUT: u64 = 1600;
+const PE_CTRL_FF: u64 = 2100;
+/// Memory subsystem blocks (from ReconOS-class RTL).
+const MMU_LUT: u64 = 900;
+const MMU_FF: u64 = 1100;
+const MMU_BRAM: u64 = 1; // TLB + walk buffers
+const MEMCTRL_LUT: u64 = 1400;
+const MEMCTRL_FF: u64 = 1800;
+const ARBITER_LUT: u64 = 350;
+const PROC_LUT: u64 = 800;
+const PROC_FF: u64 = 900;
+
+/// Estimate one PE instance from its pragma configuration.
+pub fn estimate_pe(pt: &PeTypeCfg, tile_size: usize) -> ResourceEstimate {
+    // Effective parallel MAC units ≈ the MAC/cycle the pragmas open up.
+    let perf = crate::accel::PerfModel::fpga_pe(pt, tile_size, 100.0);
+    let macs = perf.macs_per_cycle.ceil().max(1.0) as u64;
+    // Tile buffers: a, b, c + double buffers for a and b = 5 tiles, each
+    // TS²×4 B (one BRAM36 per 4 KiB).  Partition banks below ~1 KiB map to
+    // BRAM18 halves / LUTRAM, so banking costs ≈1 BRAM36 per 4 banks, not
+    // one per bank (this is how the paper fit 8 PEs on a ZC702).
+    let tile_words = (tile_size * tile_size) as u64;
+    let brams_per_array = (tile_words * 4).div_ceil(4096).max(1);
+    let banks = pt.array_partition.max(1) as u64;
+    let bram = 5 * brams_per_array + banks.div_ceil(4);
+    ResourceEstimate {
+        lut: PE_CTRL_LUT + macs * MAC_LUT,
+        ff: PE_CTRL_FF + macs * MAC_FF,
+        dsp: macs * MAC_DSP,
+        bram36: bram,
+    }
+}
+
+/// Memory subsystem estimate.
+pub fn estimate_memsub(mmus: u64) -> ResourceEstimate {
+    ResourceEstimate {
+        lut: mmus * (MMU_LUT + MEMCTRL_LUT + ARBITER_LUT) + PROC_LUT + ARBITER_LUT,
+        ff: mmus * (MMU_FF + MEMCTRL_FF) + PROC_FF,
+        dsp: 0,
+        bram36: mmus * MMU_BRAM,
+    }
+}
+
+/// Full synthesis-style report.
+#[derive(Debug, Clone)]
+pub struct ResourceReport {
+    pub budget: ResourceBudget,
+    pub per_pe_type: Vec<(String, ResourceEstimate, usize)>,
+    pub memsub: ResourceEstimate,
+    pub total: ResourceEstimate,
+}
+
+impl ResourceReport {
+    pub fn fits(&self) -> bool {
+        self.total.fits(&self.budget)
+    }
+
+    /// Render like a Vivado utilization table.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "Synergy synthesis estimate (device budget: {} LUT / {} FF / {} DSP / {} BRAM36)",
+            self.budget.lut, self.budget.ff, self.budget.dsp, self.budget.bram36);
+        let _ = writeln!(out, "{:-<78}", "");
+        let _ = writeln!(out, "{:<24} {:>6} {:>8} {:>8} {:>6} {:>7}", "instance", "count", "LUT", "FF", "DSP", "BRAM36");
+        for (name, est, count) in &self.per_pe_type {
+            let _ = writeln!(out, "{:<24} {:>6} {:>8} {:>8} {:>6} {:>7}",
+                name, count, est.lut, est.ff, est.dsp, est.bram36);
+        }
+        let _ = writeln!(out, "{:<24} {:>6} {:>8} {:>8} {:>6} {:>7}",
+            "memory subsystem", 1, self.memsub.lut, self.memsub.ff, self.memsub.dsp, self.memsub.bram36);
+        let _ = writeln!(out, "{:-<78}", "");
+        let _ = writeln!(out, "{:<24} {:>6} {:>8} {:>8} {:>6} {:>7}",
+            "TOTAL", "", self.total.lut, self.total.ff, self.total.dsp, self.total.bram36);
+        let pct = |used: u64, avail: u64| 100.0 * used as f64 / avail as f64;
+        let _ = writeln!(out, "{:<24} {:>6} {:>7.1}% {:>7.1}% {:>5.1}% {:>6.1}%",
+            "utilization", "",
+            pct(self.total.lut, self.budget.lut),
+            pct(self.total.ff, self.budget.ff),
+            pct(self.total.dsp, self.budget.dsp),
+            pct(self.total.bram36, self.budget.bram36));
+        let _ = writeln!(out, "fit: {}", if self.fits() { "YES" } else { "NO — over budget" });
+        out
+    }
+}
+
+/// Estimate a whole hardware configuration.
+pub fn estimate(hw: &HwConfig) -> ResourceReport {
+    let budget = ResourceBudget::xc7z020();
+    let mut per_pe_type = Vec::new();
+    let mut total = ResourceEstimate::default();
+    for pt in &hw.pe_types {
+        let count: usize = hw
+            .clusters
+            .iter()
+            .flat_map(|c| c.pes.iter())
+            .filter(|(name, _)| name == &pt.name)
+            .map(|(_, n)| *n)
+            .sum();
+        if count == 0 {
+            continue;
+        }
+        let est = estimate_pe(pt, hw.tile_size);
+        total.add(&est.scaled(count as u64));
+        per_pe_type.push((
+            format!("{} ({})", pt.name, hls_template::c_ident(&pt.name)),
+            est,
+            count,
+        ));
+    }
+    let memsub = estimate_memsub(hw.memsub.mmus as u64);
+    total.add(&memsub);
+    ResourceReport {
+        budget,
+        per_pe_type,
+        memsub,
+        total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_architecture_fits_zc702() {
+        let hw = HwConfig::default_zc702();
+        let report = estimate(&hw);
+        assert!(report.fits(), "\n{}", report.render());
+        // It should also *use* a meaningful fraction of the device.
+        assert!(report.total.dsp >= 40, "{}", report.total.dsp);
+        assert!(report.total.bram36 >= 50, "{}", report.total.bram36);
+    }
+
+    #[test]
+    fn oversized_architecture_rejected() {
+        let mut hw = HwConfig::default_zc702();
+        hw.clusters[1].pes[0].1 = 60; // 60 F-PEs cannot fit
+        hw.memsub.mmus = 30;
+        let report = estimate(&hw);
+        assert!(!report.fits());
+        assert!(report.render().contains("NO — over budget"));
+    }
+
+    #[test]
+    fn fast_pe_costs_more_dsp_than_slow() {
+        let hw = HwConfig::default_zc702();
+        let f = estimate_pe(hw.pe_type("F-PE").unwrap(), 32);
+        let s = estimate_pe(hw.pe_type("S-PE").unwrap(), 32);
+        assert!(f.dsp >= s.dsp);
+        assert!(f.lut > 0 && s.lut > 0);
+    }
+
+    #[test]
+    fn report_renders_table() {
+        let hw = HwConfig::default_zc702();
+        let r = estimate(&hw).render();
+        assert!(r.contains("TOTAL"));
+        assert!(r.contains("utilization"));
+        assert!(r.contains("F-PE"));
+        assert!(r.contains("memory subsystem"));
+    }
+
+    #[test]
+    fn estimate_arith() {
+        let a = ResourceEstimate {
+            lut: 1,
+            ff: 2,
+            dsp: 3,
+            bram36: 4,
+        };
+        let b = a.scaled(3);
+        assert_eq!(b.dsp, 9);
+        let mut c = a;
+        c.add(&b);
+        assert_eq!(c.lut, 4);
+        assert!(c.fits(&ResourceBudget::xc7z020()));
+    }
+}

@@ -1,0 +1,29 @@
+//! # Synergy — HW/SW co-designed CNN inference on heterogeneous SoC
+//!
+//! Reproduction of *Synergy: A HW/SW Framework for High Throughput CNNs on
+//! Embedded Heterogeneous SoC* (Zhong, Dubey, Tan, Mitra — NUS, 2018).
+//!
+//! The crate is the **Layer-3 Rust coordinator** of a three-layer stack:
+//! the compute hot-spot (tiled matrix multiplication) is authored as a
+//! Pallas kernel (L1), embedded in a JAX model (L2), AOT-lowered to HLO
+//! text at build time, and executed from here through the PJRT C API
+//! (`runtime/`).  Python never runs at inference time.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a bench target.
+
+pub mod accel;
+pub mod cluster;
+pub mod config;
+pub mod mm;
+pub mod experiments;
+pub mod hwgen;
+pub mod memsub;
+pub mod nn;
+pub mod pipeline;
+pub mod rt;
+pub mod runtime;
+pub mod sim;
+pub mod sched;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,241 @@
+//! Synergy CLI — launcher for the coordinator, the simulator, the paper
+//! experiments, the cluster DSE, and the hardware architecture generator.
+//!
+//! ```text
+//! synergy models
+//! synergy run    --model mnist --frames 20 [--pjrt] [--no-steal]
+//! synergy sim    --model mnist --frames 50 --design synergy|sf|cpu|non-pipelined
+//! synergy repro  <fig7|fig9|fig10|fig11|fig12|fig13|fig14|table3|table4|table5|table6|all>
+//! synergy dse    --model cifar_alex [--frames 16]
+//! synergy hwgen  [--config path.hw_config] --out dir
+//! ```
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use synergy::config::{zoo, HwConfig};
+use synergy::experiments as exp;
+use synergy::hwgen;
+use synergy::nn::Network;
+use synergy::rt::{self, ComputeMode, RtOptions};
+use synergy::sched::dse;
+use synergy::sim::{simulate, SimSpec};
+use synergy::tensor::Tensor;
+use synergy::util::argparse::Args;
+use synergy::util::bench::{fmt, Table};
+
+const USAGE: &str = "\
+synergy — HW/SW co-designed CNN inference (Synergy reproduction)
+
+USAGE:
+  synergy models
+      List the benchmark model zoo (paper Table 2).
+  synergy run --model <name> [--frames N] [--pjrt] [--no-steal]
+      Stream frames through the REAL threaded pipeline (layer threads,
+      cluster queues, delegate threads, thief).  --pjrt executes PE jobs
+      through the AOT Pallas kernel on PJRT (requires `make artifacts`).
+  synergy sim --model <name> [--frames N] [--design D]
+      Virtual-clock full-system simulation on the modelled ZC702.
+      D = synergy | sf | cpu | fpga-only | neon-only | non-pipelined
+  synergy repro <exp>|all [--frames N]
+      Regenerate a paper table/figure (fig7 fig9 fig10 fig11 fig12 fig13
+      fig14 table3 table4 table5 table6).
+  synergy dse --model <name> [--frames N]
+      Exhaustive SC cluster-configuration search (paper Table 5).
+  synergy hwgen [--config <file>] --out <dir>
+      Run the hardware architecture generator (paper Fig 8).
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "-h" {
+        print!("{USAGE}");
+        return;
+    }
+    if let Err(e) = dispatch(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw, &["pjrt", "no-steal", "verbose"]).map_err(|e| anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        Some("models") => cmd_models(),
+        Some("run") => cmd_run(&args),
+        Some("sim") => cmd_sim(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("hwgen") => cmd_hwgen(&args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => bail!("missing subcommand\n{USAGE}"),
+    }
+}
+
+fn load_net(args: &Args) -> Result<Network> {
+    let model = args
+        .get("model")
+        .ok_or_else(|| anyhow!("--model <name> required (see `synergy models`)"))?;
+    let cfg = zoo::load(model)?;
+    Network::new(cfg, 32)
+}
+
+fn cmd_models() -> Result<()> {
+    let mut table = Table::new(&["model", "input", "layers", "CONV", "MOP/frame", "jobs/frame"]);
+    for name in zoo::ZOO {
+        let net = Network::new(zoo::load(name)?, 32)?;
+        let (c, h, w) = net.input_shape();
+        let jobs: usize = net.conv_infos().iter().map(|ci| ci.grid.num_jobs()).sum();
+        table.row(vec![
+            name.to_string(),
+            format!("{c}x{h}x{w}"),
+            net.config.layers.len().to_string(),
+            net.config.num_conv_layers().to_string(),
+            format!("{:.1}", net.mops()),
+            jobs.to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let net = Arc::new(load_net(args)?);
+    let frames_n = args.get_usize("frames", 10).map_err(|e| anyhow!(e))?;
+    let options = RtOptions {
+        hw: HwConfig::default_zc702(),
+        compute: if args.has_flag("pjrt") {
+            ComputeMode::Pjrt
+        } else {
+            ComputeMode::Native
+        },
+        work_stealing: !args.has_flag("no-steal"),
+        mailbox_capacity: 1,
+    };
+    println!(
+        "running {} frames of {} ({} compute, stealing {})",
+        frames_n,
+        net.config.name,
+        if options.compute == ComputeMode::Pjrt { "PJRT" } else { "native" },
+        if options.work_stealing { "on" } else { "off" },
+    );
+    let frames: Vec<(u64, Tensor)> = (0..frames_n as u64)
+        .map(|f| (f, net.make_input(f)))
+        .collect();
+    let report = rt::driver::run_stream(Arc::clone(&net), options, frames)?;
+    for (frame, out) in report.outputs.iter().take(3) {
+        let (top, p) = out
+            .data()
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        println!("  frame {frame}: class {top} (p={p:.4})");
+    }
+    if report.outputs.len() > 3 {
+        println!("  ... {} more frames", report.outputs.len() - 3);
+    }
+    println!(
+        "wall: {:.3}s  throughput: {:.1} frames/s  jobs: {} ({} stolen)",
+        report.wall_seconds, report.fps, report.jobs_executed, report.jobs_stolen
+    );
+    println!("per-accel jobs: {:?}", report.per_accel_jobs);
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let net = load_net(args)?;
+    let frames = args.get_usize("frames", 50).map_err(|e| anyhow!(e))?;
+    let design = args.get_or("design", "synergy");
+    let spec = match design {
+        "synergy" => SimSpec::synergy(&net, frames),
+        "sf" => SimSpec::static_fixed(&net, frames),
+        "cpu" => SimSpec::cpu_only(&net, frames),
+        "fpga-only" => SimSpec::synergy(&net, frames).with_accels(&net, |a| a.is_fpga()),
+        "neon-only" => SimSpec::synergy(&net, frames).with_accels(&net, |a| !a.is_fpga()),
+        "non-pipelined" => SimSpec::synergy(&net, frames).non_pipelined(),
+        other => bail!("unknown --design {other:?}"),
+    };
+    let r = simulate(&spec, &net);
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(vec!["throughput (fps)".into(), fmt(r.fps)]);
+    table.row(vec!["mean latency (ms)".into(), fmt(r.mean_latency_s * 1e3)]);
+    table.row(vec!["cluster utilization".into(), format!("{:.1}%", 100.0 * r.cluster_util)]);
+    table.row(vec!["accel occupancy".into(), format!("{:.1}%", 100.0 * r.accel_util)]);
+    table.row(vec!["CPU utilization".into(), format!("{:.1}%", 100.0 * r.cpu_util)]);
+    table.row(vec!["avg power (W)".into(), fmt(r.energy.avg_power_w)]);
+    table.row(vec!["energy (mJ/frame)".into(), fmt(r.energy.energy_per_frame_mj)]);
+    table.row(vec!["GOPS".into(), fmt(r.gops)]);
+    table.row(vec!["jobs executed".into(), r.jobs_executed.to_string()]);
+    table.row(vec!["jobs stolen".into(), r.jobs_stolen.to_string()]);
+    table.row(vec!["mem queue time (ms)".into(), fmt(r.mem_queue_s * 1e3)]);
+    table.print();
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("repro needs an experiment id or 'all'"))?;
+    let frames = args
+        .get_usize("frames", exp::PIPELINE_FRAMES)
+        .map_err(|e| anyhow!(e))?;
+    let reports = match which {
+        "all" => exp::run_all(frames),
+        "fig7" => vec![exp::fig07_mmu::run()],
+        "fig9" => vec![exp::fig09_throughput::run(frames)],
+        "fig10" => vec![exp::fig10_power::run(frames)],
+        "fig11" => vec![exp::fig11_latency::run(frames)],
+        "fig12" => vec![exp::fig12_pipeline::run(frames)],
+        "fig13" => vec![exp::fig13_worksteal::run(frames)],
+        "fig14" => vec![exp::fig14_balance::run(frames)],
+        "table3" => vec![exp::table3_energy::run(frames)],
+        "table4" => vec![exp::table4_soa::run(frames)],
+        "table5" => vec![exp::table5_sc::run(frames.min(16))],
+        "table6" => vec![exp::table6_util::run(frames)],
+        other => bail!("unknown experiment {other:?}"),
+    };
+    for r in reports {
+        r.print();
+    }
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let net = load_net(args)?;
+    let frames = args.get_usize("frames", 16).map_err(|e| anyhow!(e))?;
+    let r = dse::explore(&net, frames);
+    println!(
+        "{}: best of {} configs — cluster0 = {}, cluster1 = {} ({:.1} fps)",
+        net.config.name,
+        r.evaluated,
+        dse::describe_tuple(&r.best[0]),
+        dse::describe_tuple(&r.best[1]),
+        r.best_fps
+    );
+    Ok(())
+}
+
+fn cmd_hwgen(args: &Args) -> Result<()> {
+    let hw = match args.get("config") {
+        Some(path) => HwConfig::load(Path::new(path))?,
+        None => HwConfig::default_zc702(),
+    };
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow!("--out <dir> required"))?;
+    let design = hwgen::generate(&hw, Path::new(out))?;
+    println!("generated design in {}:", design.dir.display());
+    for (name, path) in &design.pe_sources {
+        println!("  PE source [{name}]: {}", path.display());
+    }
+    println!("  wiring: {}", design.wiring_manifest.display());
+    println!("  bitstream: {} (hash {:#018x})", design.bitstream_manifest.display(), design.bitstream_hash);
+    println!();
+    print!("{}", design.report.render());
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! Memory subsystem model (paper §3.2.2 / Fig 5–7): MMUs performing the
+//! ARM two-level page-table walk for PE virtual addresses, per-MMU
+//! arbitration, AXI burst DDR transfers, and the shared Proc unit that
+//! services page faults.
+//!
+//! Two layers:
+//! * [`mmu`] — the *functional* model: page tables, TLB, two-level walk,
+//!   fault handling (validated by unit tests against a software walk);
+//! * [`subsystem`] — the *queueing* model used by the virtual-clock
+//!   simulator: transfer requests serialize on their MMU channel and on
+//!   the shared DDR bus, reproducing Fig 7's single- vs multi-MMU scaling.
+
+pub mod mmu;
+pub mod subsystem;
+
+pub use mmu::{Mmu, PageTable, WalkResult, PAGE_SIZE};
+pub use subsystem::{MemSubsystem, TransferStats};

@@ -1,0 +1,225 @@
+//! Queueing model of the memory subsystem for the virtual-clock simulator.
+//!
+//! Each PE's tile fetches serialize on its assigned MMU channel (one
+//! outstanding translation+burst at a time per MMU — the ReconOS MEMIF
+//! structure), and all channels share the DDR bus.  This is what makes a
+//! single shared MMU flatten multi-PE speedup (paper Fig 7a) while one MMU
+//! per two PEs scales near-linearly (Fig 7b).
+
+use crate::config::MemSubCfg;
+
+use super::mmu::{Mmu, PageTable, PAGE_SIZE};
+
+/// Aggregate transfer statistics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TransferStats {
+    pub requests: u64,
+    pub bytes: u64,
+    /// Seconds spent queueing behind other requests (contention).
+    pub queue_seconds: f64,
+    /// Seconds of pure service (translation + burst).
+    pub service_seconds: f64,
+    pub tlb_hits: u64,
+    pub walks: u64,
+    pub faults: u64,
+}
+
+/// One MMU + MEM-controller channel's queue state.
+#[derive(Debug, Clone)]
+struct Channel {
+    busy_until: f64,
+    mmu: Mmu,
+}
+
+/// The shared memory subsystem (virtual-time queueing model).
+#[derive(Debug)]
+pub struct MemSubsystem {
+    cfg: MemSubCfg,
+    fpga_hz: f64,
+    channels: Vec<Channel>,
+    /// Shared DDR bus availability.
+    ddr_busy_until: f64,
+    page_table: PageTable,
+    /// Next synthetic VA to hand out to buffers.
+    next_va: u64,
+    pub stats: TransferStats,
+}
+
+impl MemSubsystem {
+    pub fn new(cfg: &MemSubCfg, fpga_mhz: f64) -> Self {
+        let channels = (0..cfg.mmus)
+            .map(|_| Channel {
+                busy_until: 0.0,
+                mmu: Mmu::new(cfg.tlb_entries),
+            })
+            .collect();
+        MemSubsystem {
+            cfg: cfg.clone(),
+            fpga_hz: fpga_mhz * 1e6,
+            channels,
+            ddr_busy_until: 0.0,
+            page_table: PageTable::new(),
+            next_va: 0x1000_0000,
+            stats: TransferStats::default(),
+        }
+    }
+
+    /// Allocate a synthetic user-space buffer and pre-map it (the host
+    /// mmaps feature-map arrays before dispatch).  Returns its base VA.
+    pub fn alloc_buffer(&mut self, len: u64) -> u64 {
+        let base = self.next_va;
+        self.page_table.map_range(base, len);
+        // Page-align the next allocation.
+        self.next_va += len.div_ceil(PAGE_SIZE) * PAGE_SIZE;
+        base
+    }
+
+    fn cycles_to_seconds(&self, cycles: f64) -> f64 {
+        cycles / self.fpga_hz
+    }
+
+    /// Request a transfer of `bytes` at virtual address `va` through MMU
+    /// channel `chan`, issued at virtual time `now`.  Returns the completion
+    /// time.  The request holds its MMU channel for the full service and
+    /// the DDR bus for the burst portion.
+    pub fn transfer(&mut self, chan: usize, va: u64, bytes: u64, now: f64) -> f64 {
+        let chan_idx = chan % self.channels.len();
+
+        // --- translation cost (per page touched) ---
+        let pages = bytes.max(1).div_ceil(PAGE_SIZE).max(1);
+        let mut walk_reads = 0usize;
+        let mut faults = 0u64;
+        {
+            let ch = &mut self.channels[chan_idx];
+            for pg in 0..pages {
+                let r = ch.mmu.translate(va + pg * PAGE_SIZE, &mut self.page_table);
+                walk_reads += r.ddr_reads();
+                if matches!(r, super::mmu::WalkResult::Faulted(_)) {
+                    faults += 1;
+                }
+            }
+            self.stats.tlb_hits += ch.mmu.stats.tlb_hits;
+            self.stats.walks = self.stats.walks.max(ch.mmu.stats.walks);
+        }
+
+        // --- service time in cycles ---
+        // burst transfer: latency per burst + streaming at bus width
+        let beats = bytes.div_ceil(8); // 64-bit AXI beats
+        let bursts = beats.div_ceil(self.cfg.burst_beats as u64).max(1);
+        let stream_cycles = bytes as f64 / self.cfg.ddr_bytes_per_cycle;
+        let burst_cycles =
+            bursts as f64 * self.cfg.ddr_latency_cycles as f64 + stream_cycles;
+        // page-walk DDR reads: 2 random accesses each
+        let walk_cycles = walk_reads as f64 * self.cfg.ddr_latency_cycles as f64;
+        // page faults: CPU interrupt + kernel handling (≈3 µs)
+        let fault_seconds = faults as f64 * 3e-6;
+        let service = self.cycles_to_seconds(walk_cycles + burst_cycles) + fault_seconds;
+
+        // --- queueing: wait for the MMU channel, then the DDR bus ---
+        let ch_free = self.channels[chan_idx].busy_until;
+        let start = now.max(ch_free);
+        // DDR bus is only held for the burst portion; model it as a second
+        // queue the request passes through after translation.
+        let ddr_start = start.max(self.ddr_busy_until);
+        let ddr_hold = self.cycles_to_seconds(stream_cycles);
+        let done = ddr_start + service;
+        self.channels[chan_idx].busy_until = done;
+        self.ddr_busy_until = ddr_start + ddr_hold;
+
+        self.stats.requests += 1;
+        self.stats.bytes += bytes;
+        self.stats.queue_seconds += ddr_start - now;
+        self.stats.service_seconds += service;
+        self.stats.faults += faults;
+        done
+    }
+
+    /// Reset queue state (keep page table + TLB warm) — between runs.
+    pub fn reset_clock(&mut self) {
+        for ch in &mut self.channels {
+            ch.busy_until = 0.0;
+        }
+        self.ddr_busy_until = 0.0;
+        self.stats = TransferStats::default();
+    }
+
+    pub fn num_channels(&self) -> usize {
+        self.channels.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HwConfig;
+
+    fn memsub(mmus: usize) -> MemSubsystem {
+        let mut cfg = HwConfig::default_zc702().memsub;
+        cfg.mmus = mmus;
+        MemSubsystem::new(&cfg, 100.0)
+    }
+
+    #[test]
+    fn single_transfer_time_reasonable() {
+        let mut ms = memsub(1);
+        let va = ms.alloc_buffer(1 << 20);
+        let done = ms.transfer(0, va, 8192, 0.0);
+        // 8 KiB at 8 B/cycle = 1024 cycles ≈ 10.2 µs + latency overheads.
+        assert!(done > 10e-6 && done < 60e-6, "{done}");
+        assert_eq!(ms.stats.requests, 1);
+    }
+
+    #[test]
+    fn same_channel_serializes_different_channels_overlap() {
+        let mut ms = memsub(2);
+        let va = ms.alloc_buffer(1 << 22);
+        let t1 = ms.transfer(0, va, 65536, 0.0);
+        ms.reset_clock();
+        ms.alloc_buffer(0); // no-op keep borrowck happy about reuse
+        // two requests on the SAME channel: second waits for first
+        let a = ms.transfer(0, va, 65536, 0.0);
+        let b = ms.transfer(0, va + 65536, 65536, 0.0);
+        assert!(b > a * 1.8, "serialized: {b} vs {a}");
+        // two requests on DIFFERENT channels: DDR bus is the only coupling
+        ms.reset_clock();
+        let a2 = ms.transfer(0, va, 65536, 0.0);
+        let b2 = ms.transfer(1, va + 65536, 65536, 0.0);
+        assert!(b2 < b, "parallel channels faster: {b2} vs {b}");
+        assert!(b2 >= a2 * 0.5);
+        let _ = t1;
+    }
+
+    #[test]
+    fn queueing_stats_accumulate() {
+        let mut ms = memsub(1);
+        let va = ms.alloc_buffer(1 << 22);
+        for i in 0..8 {
+            ms.transfer(0, va + i * 8192, 8192, 0.0);
+        }
+        assert!(ms.stats.queue_seconds > 0.0);
+        assert_eq!(ms.stats.requests, 8);
+        assert_eq!(ms.stats.bytes, 8 * 8192);
+    }
+
+    #[test]
+    fn channel_wraps_modulo() {
+        let mut ms = memsub(2);
+        let va = ms.alloc_buffer(1 << 20);
+        // channel index 5 on 2 channels → channel 1; must not panic
+        let done = ms.transfer(5, va, 4096, 0.0);
+        assert!(done > 0.0);
+    }
+
+    #[test]
+    fn faults_cost_more_than_mapped_access() {
+        let mut ms = memsub(1);
+        // Unmapped VA → faults on every page.
+        let t_fault = ms.transfer(0, 0xDEAD_0000, 16384, 0.0);
+        ms.reset_clock();
+        let va = ms.alloc_buffer(16384);
+        // Different pages but pre-mapped (walks only, warm after).
+        let t_mapped = ms.transfer(0, va, 16384, 0.0);
+        assert!(t_fault > t_mapped, "{t_fault} vs {t_mapped}");
+        assert!(ms.stats.faults == 0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Native GEMM kernels.
+//!
+//! `gemm_naive` is the obviously-correct oracle; `gemm_blocked` is the
+//! cache-blocked, unroll-friendly kernel that backs the NEON software
+//! accelerator (the ARM assembly MM of paper §3.1.1 re-targeted to the
+//! host's SIMD units via autovectorization).
+
+use crate::tensor::Tensor;
+
+/// Textbook triple loop — the oracle.
+pub fn gemm_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let (n2, p) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(n, n2, "inner dims must match");
+    let mut c = Tensor::zeros(&[m, p]);
+    for i in 0..m {
+        for j in 0..p {
+            let mut acc = 0.0f32;
+            for k in 0..n {
+                acc += a.at2(i, k) * b.at2(k, j);
+            }
+            c.set2(i, j, acc);
+        }
+    }
+    c
+}
+
+/// i-k-j loop order with row-axpy inner loop: the inner loop is a
+/// contiguous fused multiply-add over C's row, which LLVM autovectorizes.
+pub fn gemm_blocked(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, n) = (a.shape()[0], a.shape()[1]);
+    let (n2, p) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(n, n2, "inner dims must match");
+    let mut c = vec![0.0f32; m * p];
+    gemm_blocked_into(a.data(), b.data(), &mut c, m, n, p);
+    Tensor::from_vec(&[m, p], c)
+}
+
+/// Raw-slice core (shared with the job executor): C[MxP] += A[MxN]·B[NxP].
+/// `c` must be zero-initialized by the caller (or hold an accumulator).
+pub fn gemm_blocked_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, p: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), n * p);
+    debug_assert_eq!(c.len(), m * p);
+    // Block the k dimension to keep B panels hot in L1/L2.
+    const KB: usize = 256;
+    for k0 in (0..n).step_by(KB) {
+        let k1 = (k0 + KB).min(n);
+        for i in 0..m {
+            let a_row = &a[i * n..(i + 1) * n];
+            let c_row = &mut c[i * p..(i + 1) * p];
+            for k in k0..k1 {
+                let aik = a_row[k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = &b[k * p..(k + 1) * p];
+                // contiguous axpy over the C row — autovectorizes
+                for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aik * *bv;
+                }
+            }
+        }
+    }
+}
+
+/// FLOP count of an (m,n,p) GEMM (the paper's GOP accounting: 2·m·n·p).
+pub fn gemm_flops(m: usize, n: usize, p: usize) -> u64 {
+    2 * m as u64 * n as u64 * p as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64Star;
+
+    fn rand(shape: &[usize], seed: u64) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, XorShift64Star::new(seed).fill_f32(n, 2.0))
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        for (m, n, p) in [(1, 1, 1), (4, 5, 6), (32, 32, 32), (50, 300, 45), (7, 513, 3)] {
+            let a = rand(&[m, n], (m * 31 + n) as u64);
+            let b = rand(&[n, p], (n * 17 + p) as u64);
+            let want = gemm_naive(&a, &b);
+            let got = gemm_blocked(&a, &b);
+            assert!(
+                want.allclose(&got, 1e-4, 1e-4),
+                "mismatch at ({m},{n},{p}): {}",
+                want.max_abs_diff(&got)
+            );
+        }
+    }
+
+    #[test]
+    fn identity() {
+        let n = 16;
+        let mut eye = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            eye.set2(i, i, 1.0);
+        }
+        let x = rand(&[n, n], 3);
+        let y = gemm_blocked(&eye, &x);
+        assert!(y.allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn accumulates_into_existing_c() {
+        let a = rand(&[3, 4], 1);
+        let b = rand(&[4, 5], 2);
+        let mut c = vec![1.0f32; 15];
+        gemm_blocked_into(a.data(), b.data(), &mut c, 3, 4, 5);
+        let base = gemm_blocked(&a, &b);
+        for (got, want) in c.iter().zip(base.data()) {
+            assert!((got - (want + 1.0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(gemm_flops(2, 3, 4), 48);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn dim_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 2]);
+        gemm_naive(&a, &b);
+    }
+}

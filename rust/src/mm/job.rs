@@ -1,0 +1,207 @@
+//! The *job* — Synergy's workload granularity (paper Listing 2 / Fig 3).
+//!
+//! A job is the computation of one (TS,TS) output tile C(t1,t2) of a CONV
+//! layer's GEMM.  The struct carries what the paper's job struct carries:
+//! operand "base addresses" (shared buffers), the GEMM dimensions, the tile
+//! index, and the owning layer id — plus the frame id, since the pipelined
+//! design keeps multiple frames in flight (§3.1.1 "inter-frame parallelism").
+
+use std::sync::Arc;
+
+use super::tile::{job_mm_native, TileGrid};
+
+/// Job metadata (the paper's `job_t` minus the raw pointers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobDesc {
+    /// Globally unique id (assigned by the job generator).
+    pub job_id: u64,
+    /// Index of the owning CONV layer within the network ("layer_id").
+    pub layer_id: usize,
+    /// Which input frame this job belongs to.
+    pub frame_id: u64,
+    /// Output tile coordinates ("t1", "t2").
+    pub t1: usize,
+    pub t2: usize,
+    /// GEMM geometry ("m", "n", "k" of the paper's struct).
+    pub grid: TileGrid,
+}
+
+impl JobDesc {
+    /// Inner-tile count this job iterates (K of the job kernel).
+    pub fn k_tiles(&self) -> usize {
+        self.grid.k_tiles()
+    }
+
+    /// Nominal FLOPs of this job (padded tiles: 2·TS²·K·TS).
+    pub fn flops(&self) -> u64 {
+        let ts = self.grid.ts as u64;
+        2 * ts * ts * ts * self.k_tiles() as u64
+    }
+
+    /// Bytes moved per job: fetch 2·K tiles + write back one (f32).
+    pub fn bytes_moved(&self) -> u64 {
+        let tile_bytes = (self.grid.ts * self.grid.ts * 4) as u64;
+        (2 * self.k_tiles() as u64 + 1) * tile_bytes
+    }
+}
+
+/// A dispatchable job: metadata + shared operand buffers.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub desc: JobDesc,
+    /// A operand (weights matrix, M×N row-major) shared across the layer.
+    pub a: Arc<Vec<f32>>,
+    /// B operand (im2col matrix, N×P row-major) shared across the layer.
+    pub b: Arc<Vec<f32>>,
+}
+
+/// Result of executing a job: the computed output tile.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub desc: JobDesc,
+    /// (TS,TS) row-major output tile.
+    pub tile: Vec<f32>,
+}
+
+impl Job {
+    /// Pack this job's operand tiles into contiguous (K,TS,TS) buffers —
+    /// the memory-subsystem fetch a PE performs (steps ①–② of Listing 3).
+    pub fn pack_tiles(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            self.desc.grid.extract_a_tiles(&self.a, self.desc.t1),
+            self.desc.grid.extract_b_tiles(&self.b, self.desc.t2),
+        )
+    }
+
+    /// Execute on the native (NEON-path) kernel.
+    pub fn execute_native(&self) -> JobResult {
+        let (at, bt) = self.pack_tiles();
+        let tile = job_mm_native(&at, &bt, self.desc.k_tiles(), self.desc.grid.ts);
+        JobResult {
+            desc: self.desc,
+            tile,
+        }
+    }
+}
+
+/// Generate all jobs of one GEMM (one CONV layer instance of one frame).
+/// `next_job_id` provides globally-unique ids across layers/frames.
+pub fn jobs_for_gemm(
+    layer_id: usize,
+    frame_id: u64,
+    grid: TileGrid,
+    a: Arc<Vec<f32>>,
+    b: Arc<Vec<f32>>,
+    next_job_id: &mut u64,
+) -> Vec<Job> {
+    assert_eq!(a.len(), grid.m * grid.n, "A operand size mismatch");
+    assert_eq!(b.len(), grid.n * grid.p, "B operand size mismatch");
+    let mut jobs = Vec::with_capacity(grid.num_jobs());
+    for (t1, t2) in grid.tiles() {
+        let desc = JobDesc {
+            job_id: *next_job_id,
+            layer_id,
+            frame_id,
+            t1,
+            t2,
+            grid,
+        };
+        *next_job_id += 1;
+        jobs.push(Job {
+            desc,
+            a: Arc::clone(&a),
+            b: Arc::clone(&b),
+        });
+    }
+    jobs
+}
+
+/// Assemble job results back into the dense C matrix (M×P).
+pub fn gather_results(grid: TileGrid, results: &[JobResult]) -> Vec<f32> {
+    assert_eq!(results.len(), grid.num_jobs(), "missing job results");
+    let mut c = vec![0.0f32; grid.m * grid.p];
+    for r in results {
+        grid.scatter_c(&mut c, r.desc.t1, r.desc.t2, &r.tile);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mm::gemm::gemm_naive;
+    use crate::tensor::Tensor;
+    use crate::util::rng::XorShift64Star;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        XorShift64Star::new(seed).fill_f32(n, 2.0)
+    }
+
+    #[test]
+    fn jobs_cover_grid_exactly_once() {
+        let grid = TileGrid::new(70, 40, 90, 32);
+        let a = Arc::new(rand_vec(70 * 40, 1));
+        let b = Arc::new(rand_vec(40 * 90, 2));
+        let mut id = 0;
+        let jobs = jobs_for_gemm(3, 7, grid, a, b, &mut id);
+        assert_eq!(jobs.len(), grid.num_jobs());
+        assert_eq!(id, jobs.len() as u64);
+        let mut seen = std::collections::HashSet::new();
+        for j in &jobs {
+            assert!(seen.insert((j.desc.t1, j.desc.t2)), "duplicate tile");
+            assert_eq!(j.desc.layer_id, 3);
+            assert_eq!(j.desc.frame_id, 7);
+            assert!(j.desc.t1 < grid.rows() && j.desc.t2 < grid.cols());
+        }
+    }
+
+    #[test]
+    fn execute_and_gather_matches_gemm() {
+        let grid = TileGrid::new(50, 70, 45, 32);
+        let av = rand_vec(50 * 70, 3);
+        let bv = rand_vec(70 * 45, 4);
+        let a = Arc::new(av.clone());
+        let b = Arc::new(bv.clone());
+        let mut id = 0;
+        let jobs = jobs_for_gemm(0, 0, grid, a, b, &mut id);
+        let results: Vec<JobResult> = jobs.iter().map(|j| j.execute_native()).collect();
+        let c = gather_results(grid, &results);
+        let want = gemm_naive(
+            &Tensor::from_vec(&[50, 70], av),
+            &Tensor::from_vec(&[70, 45], bv),
+        );
+        let got = Tensor::from_vec(&[50, 45], c);
+        assert!(want.allclose(&got, 1e-4, 1e-4), "{}", want.max_abs_diff(&got));
+    }
+
+    #[test]
+    fn flops_and_bytes_accounting() {
+        let grid = TileGrid::new(32, 96, 32, 32);
+        let desc = JobDesc {
+            job_id: 0,
+            layer_id: 0,
+            frame_id: 0,
+            t1: 0,
+            t2: 0,
+            grid,
+        };
+        assert_eq!(desc.k_tiles(), 3);
+        assert_eq!(desc.flops(), 2 * 32 * 32 * 32 * 3);
+        assert_eq!(desc.bytes_moved(), (2 * 3 + 1) * 32 * 32 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "A operand size mismatch")]
+    fn operand_size_checked() {
+        let grid = TileGrid::new(4, 4, 4, 4);
+        let mut id = 0;
+        jobs_for_gemm(0, 0, grid, Arc::new(vec![0.0; 3]), Arc::new(vec![0.0; 16]), &mut id);
+    }
+
+    #[test]
+    #[should_panic(expected = "missing job results")]
+    fn gather_requires_all_results() {
+        let grid = TileGrid::new(64, 32, 64, 32);
+        gather_results(grid, &[]);
+    }
+}

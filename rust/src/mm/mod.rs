@@ -1,0 +1,12 @@
+//! Tiled matrix multiplication: the computational currency of Synergy.
+//!
+//! CONV layers are lowered to GEMM (im2col), the GEMM iteration space is
+//! tiled (paper Listing 1), and each output tile becomes a *job* (paper
+//! Listing 2 / Fig 3) dispatched to heterogeneous accelerators.
+
+pub mod gemm;
+pub mod job;
+pub mod tile;
+
+pub use job::{Job, JobDesc};
+pub use tile::TileGrid;

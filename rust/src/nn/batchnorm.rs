@@ -1,0 +1,50 @@
+//! Inference-time batch normalization (the paper's "normalization" layer).
+
+use crate::tensor::Tensor;
+
+pub const BN_EPS: f32 = 1e-5;
+
+/// y = gamma·(x-mean)/sqrt(var+eps) + beta, per channel of (C,H,W).
+pub fn batchnorm(x: &Tensor, gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32]) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert!(gamma.len() == c && beta.len() == c && mean.len() == c && var.len() == c);
+    let mut out = x.clone();
+    for ci in 0..c {
+        let inv = gamma[ci] / (var[ci] + BN_EPS).sqrt();
+        let shift = beta[ci] - mean[ci] * inv;
+        let plane = &mut out.data_mut()[ci * h * w..(ci + 1) * h * w];
+        for v in plane {
+            *v = *v * inv + shift;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_params_near_identity() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, -2.0, 3.0, 0.5]);
+        let y = batchnorm(&x, &[1.0], &[0.0], &[0.0], &[1.0]);
+        assert!(y.allclose(&x, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn normalizes_shift_and_scale() {
+        let x = Tensor::from_vec(&[1, 1, 2], vec![10.0, 14.0]);
+        // mean 12, var 4 → normalized ±1, then gamma 2 beta 1 → -1, 3
+        let y = batchnorm(&x, &[2.0], &[1.0], &[12.0], &[4.0]);
+        assert!((y.data()[0] + 1.0).abs() < 1e-3);
+        assert!((y.data()[1] - 3.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn per_channel_independent() {
+        let x = Tensor::from_vec(&[2, 1, 1], vec![1.0, 1.0]);
+        let y = batchnorm(&x, &[1.0, 5.0], &[0.0, 0.0], &[0.0, 0.0], &[1.0, 1.0]);
+        assert!((y.data()[0] - 1.0).abs() < 1e-4);
+        assert!((y.data()[1] - 5.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,62 @@
+//! Fully-connected layer (paper §3.1.4: runs on the ARM cores).
+
+use crate::tensor::Tensor;
+
+/// y = W·x + b, W: (OUT, IN) row-major, x: flat (IN,).
+pub fn connected(x: &[f32], w: &Tensor, bias: &[f32]) -> Vec<f32> {
+    let out_n = w.shape()[0];
+    let in_n = w.shape()[1];
+    assert_eq!(x.len(), in_n, "input length mismatch");
+    assert_eq!(bias.len(), out_n);
+    let wd = w.data();
+    let mut out = vec![0.0f32; out_n];
+    for o in 0..out_n {
+        let row = &wd[o * in_n..(o + 1) * in_n];
+        // 4-way unrolled dot product (NEON-ish shape; autovectorizes).
+        let mut acc0 = 0.0f32;
+        let mut acc1 = 0.0f32;
+        let mut acc2 = 0.0f32;
+        let mut acc3 = 0.0f32;
+        let chunks = in_n / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            acc0 += row[j] * x[j];
+            acc1 += row[j + 1] * x[j + 1];
+            acc2 += row[j + 2] * x[j + 2];
+            acc3 += row[j + 3] * x[j + 3];
+        }
+        let mut acc = acc0 + acc1 + acc2 + acc3;
+        for j in chunks * 4..in_n {
+            acc += row[j] * x[j];
+        }
+        out[o] = acc + bias[o];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let y = connected(&[1.0, 1.0, 1.0], &w, &[0.5, -0.5]);
+        assert_eq!(y, vec![6.5, 14.5]);
+    }
+
+    #[test]
+    fn unroll_tail_handled() {
+        // IN=6 exercises both the unrolled body and the tail loop.
+        let w = Tensor::from_vec(&[1, 6], vec![1.0; 6]);
+        let y = connected(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &w, &[0.0]);
+        assert_eq!(y, vec![21.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "input length mismatch")]
+    fn length_mismatch_panics() {
+        let w = Tensor::from_vec(&[1, 3], vec![0.0; 3]);
+        connected(&[1.0], &w, &[0.0]);
+    }
+}

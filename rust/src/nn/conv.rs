@@ -1,0 +1,145 @@
+//! Convolution: the direct reference implementation and the Synergy
+//! GEMM-lowered path (im2col + matrix multiply, paper §3.1.1).
+
+use crate::config::Activation;
+use crate::mm::gemm;
+use crate::tensor::Tensor;
+
+use super::{conv_out_hw, im2col::im2col};
+
+/// Direct (nested-loop) convolution — the correctness oracle.
+/// x: (C,H,W); w: (OC, C·K·K) row-major flattened; bias: (OC,) → (OC,OH,OW).
+pub fn conv_direct(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let (c, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let oc = w.shape()[0];
+    assert_eq!(w.shape()[1], c * ksize * ksize);
+    let (oh, ow) = conv_out_hw(h, wd, ksize, stride, pad);
+    let mut out = Tensor::zeros(&[oc, oh, ow]);
+    for o in 0..oc {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = bias[o];
+                for ci in 0..c {
+                    for ki in 0..ksize {
+                        let iy = (oy * stride + ki) as isize - pad as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kj in 0..ksize {
+                            let ix = (ox * stride + kj) as isize - pad as isize;
+                            if ix < 0 || ix >= wd as isize {
+                                continue;
+                            }
+                            let widx = (ci * ksize + ki) * ksize + kj;
+                            acc += w.at2(o, widx) * x.at3(ci, iy as usize, ix as usize);
+                        }
+                    }
+                }
+                out.set3(o, oy, ox, acc);
+            }
+        }
+    }
+    out
+}
+
+/// Synergy CONV lowering: im2col then a single (un-tiled) GEMM.  The tiled,
+/// job-based path lives in `mm::job` and is exercised by the coordinator;
+/// this function is the intermediate oracle between direct conv and jobs.
+pub fn conv_gemm(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &[f32],
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor {
+    let (_, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (oh, ow) = conv_out_hw(h, wd, ksize, stride, pad);
+    let col = im2col(x, ksize, stride, pad); // (C·K², OH·OW)
+    let oc = w.shape()[0];
+    let mut out = gemm::gemm_blocked(w, &col); // (OC, OH·OW)
+    for o in 0..oc {
+        let row = &mut out.data_mut()[o * oh * ow..(o + 1) * oh * ow];
+        for v in row {
+            *v += bias[o];
+        }
+    }
+    out.reshaped(&[oc, oh, ow])
+}
+
+/// Apply an activation in place over a tensor (the darknet post-conv step).
+pub fn activate(t: &mut Tensor, act: Activation) {
+    if act == Activation::Linear {
+        return;
+    }
+    for v in t.data_mut() {
+        *v = act.apply(*v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64Star;
+
+    fn rand_tensor(shape: &[usize], seed: u64) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::from_vec(shape, XorShift64Star::new(seed).fill_f32(n, 2.0))
+    }
+
+    #[test]
+    fn gemm_path_matches_direct() {
+        for (c, h, w, oc, k, s, p) in [
+            (1usize, 8usize, 8usize, 4usize, 3usize, 1usize, 1usize),
+            (3, 9, 7, 5, 3, 2, 1),
+            (2, 6, 6, 3, 1, 1, 0),
+            (4, 10, 10, 8, 5, 1, 2),
+            (2, 12, 12, 7, 3, 3, 0),
+        ] {
+            let x = rand_tensor(&[c, h, w], 1 + c as u64);
+            let wt = rand_tensor(&[oc, c * k * k], 77 + k as u64);
+            let bias: Vec<f32> = XorShift64Star::new(5).fill_f32(oc, 0.2);
+            let d = conv_direct(&x, &wt, &bias, k, s, p);
+            let g = conv_gemm(&x, &wt, &bias, k, s, p);
+            assert!(
+                d.allclose(&g, 1e-4, 1e-4),
+                "mismatch at c={c} h={h} w={w} oc={oc} k={k} s={s} p={p}: {}",
+                d.max_abs_diff(&g)
+            );
+        }
+    }
+
+    #[test]
+    fn identity_kernel_1x1() {
+        // 1x1 conv with identity weights = channel passthrough.
+        let x = rand_tensor(&[2, 3, 3], 9);
+        let w = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let out = conv_gemm(&x, &w, &[0.0, 0.0], 1, 1, 0);
+        assert!(out.allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn bias_added() {
+        let x = Tensor::zeros(&[1, 2, 2]);
+        let w = Tensor::from_vec(&[1, 1], vec![1.0]);
+        let out = conv_gemm(&x, &w, &[3.5], 1, 1, 0);
+        assert!(out.data().iter().all(|&v| v == 3.5));
+    }
+
+    #[test]
+    fn activation_applied() {
+        let mut t = Tensor::from_vec(&[3], vec![-1.0, 0.0, 2.0]);
+        activate(&mut t, Activation::Relu);
+        assert_eq!(t.data(), &[0.0, 0.0, 2.0]);
+        let mut t = Tensor::from_vec(&[2], vec![-1.0, 2.0]);
+        activate(&mut t, Activation::Leaky);
+        assert_eq!(t.data(), &[-0.1, 2.0]);
+    }
+}

@@ -1,0 +1,102 @@
+//! Darknet-layout im2col — the data layout transformation of paper §3.1.1
+//! that turns a CONV layer into a matrix multiplication.
+//!
+//! Layout contract (shared with `python/compile/kernels/ref.py::im2col_ref`):
+//! output is (C·K·K, OH·OW), row index varies (c, ki, kj) c-major, column
+//! index is (oy·OW + ox).
+
+use crate::tensor::Tensor;
+
+use super::conv_out_hw;
+
+/// im2col on a (C,H,W) tensor → (C·K·K, OH·OW) matrix.
+pub fn im2col(x: &Tensor, ksize: usize, stride: usize, pad: usize) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (oh, ow) = conv_out_hw(h, w, ksize, stride, pad);
+    let cols = oh * ow;
+    let rows = c * ksize * ksize;
+    let mut out = vec![0.0f32; rows * cols];
+    let src = x.data();
+
+    for ci in 0..c {
+        let chan = &src[ci * h * w..(ci + 1) * h * w];
+        for ki in 0..ksize {
+            for kj in 0..ksize {
+                let row = (ci * ksize + ki) * ksize + kj;
+                let dst = &mut out[row * cols..(row + 1) * cols];
+                for oy in 0..oh {
+                    let iy = (oy * stride + ki) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        // whole output row reads padding → stays zero
+                        continue;
+                    }
+                    let src_row = &chan[iy as usize * w..(iy as usize + 1) * w];
+                    let base = oy * ow;
+                    for ox in 0..ow {
+                        let ix = (ox * stride + kj) as isize - pad as isize;
+                        if ix >= 0 && ix < w as isize {
+                            dst[base + ox] = src_row[ix as usize];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[rows, cols], out)
+}
+
+/// The number of f32 elements im2col touches (used by the ARM cycle model).
+pub fn im2col_work(c: usize, ksize: usize, oh: usize, ow: usize) -> usize {
+    c * ksize * ksize * oh * ow
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values_2x2_kernel() {
+        // Mirrors python/tests/test_model.py::test_im2col_known_values.
+        let x = Tensor::from_vec(&[1, 3, 3], (0..9).map(|i| i as f32).collect());
+        let col = im2col(&x, 2, 1, 0);
+        assert_eq!(col.shape(), &[4, 4]);
+        assert_eq!(&col.data()[0..4], &[0.0, 1.0, 3.0, 4.0]);
+        assert_eq!(&col.data()[4..8], &[1.0, 2.0, 4.0, 5.0]);
+        assert_eq!(&col.data()[8..12], &[3.0, 4.0, 6.0, 7.0]);
+        assert_eq!(&col.data()[12..16], &[4.0, 5.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn padding_zero_fills() {
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0; 4]);
+        let col = im2col(&x, 3, 1, 1);
+        assert_eq!(col.shape(), &[9, 4]);
+        // (ki=0,kj=0) at output (0,0) reads the padded corner
+        assert_eq!(col.at2(0, 0), 0.0);
+        // center tap reads real data
+        assert_eq!(col.at2(4, 0), 1.0);
+    }
+
+    #[test]
+    fn stride_two() {
+        let x = Tensor::from_vec(&[1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let col = im2col(&x, 2, 2, 0);
+        assert_eq!(col.shape(), &[4, 4]);
+        // output (0,0) patch = [0,1,4,5]; row0 = tap (0,0) over outputs
+        assert_eq!(&col.data()[0..4], &[0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn multichannel_row_order() {
+        let mut data = vec![0.0f32; 2 * 2 * 2];
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let x = Tensor::from_vec(&[2, 2, 2], data);
+        let col = im2col(&x, 1, 1, 0);
+        assert_eq!(col.shape(), &[2, 4]);
+        // row 0 = channel 0 flattened, row 1 = channel 1 flattened
+        assert_eq!(&col.data()[0..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(&col.data()[4..8], &[4.0, 5.0, 6.0, 7.0]);
+    }
+}

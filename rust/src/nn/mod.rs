@@ -1,0 +1,26 @@
+//! CNN layer implementations — the "other layers and preprocessing
+//! functions" of paper §3.1.4 (executed on the ARM cores), plus the
+//! reference CONV path used to validate the accelerator path.
+
+pub mod batchnorm;
+pub mod conv;
+pub mod connected;
+pub mod im2col;
+pub mod network;
+pub mod pool;
+pub mod softmax;
+
+pub use network::Network;
+
+/// Output spatial dims of a convolution.
+pub fn conv_out_hw(h: usize, w: usize, ksize: usize, stride: usize, pad: usize) -> (usize, usize) {
+    (
+        (h + 2 * pad - ksize) / stride + 1,
+        (w + 2 * pad - ksize) / stride + 1,
+    )
+}
+
+/// Output spatial dims of a pool (darknet semantics: valid, floor).
+pub fn pool_out_hw(h: usize, w: usize, size: usize, stride: usize) -> (usize, usize) {
+    ((h - size) / stride + 1, (w - size) / stride + 1)
+}

@@ -1,0 +1,548 @@
+//! Network assembly: parameters, shape inference, and the forward pass.
+//!
+//! Parameter initialization replicates `python/compile/model.py::init_params`
+//! bit-for-bit (same PRNG, same order, same f32 rounding) so the Rust
+//! pipeline and the AOT model artifact compute over identical weights.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::{Activation, LayerSpec, NetConfig};
+use crate::mm::TileGrid;
+use crate::tensor::Tensor;
+use crate::util::rng;
+
+use super::{batchnorm::batchnorm, connected::connected, conv, im2col::im2col, pool, softmax};
+
+/// Shape flowing between layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Shape {
+    Chw(usize, usize, usize),
+    Flat(usize),
+}
+
+impl Shape {
+    pub fn len(&self) -> usize {
+        match self {
+            Shape::Chw(c, h, w) => c * h * w,
+            Shape::Flat(n) => *n,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        match self {
+            Shape::Chw(c, h, w) => vec![*c, *h, *w],
+            Shape::Flat(n) => vec![*n],
+        }
+    }
+}
+
+/// One named parameter tensor.
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub layer: usize,
+    pub name: &'static str,
+    pub tensor: Tensor,
+}
+
+/// Descriptor of one CONV layer's GEMM (job geometry for the coordinator).
+#[derive(Debug, Clone)]
+pub struct ConvLayerInfo {
+    /// Layer index within the network.
+    pub layer_idx: usize,
+    /// 0-based index among CONV layers only.
+    pub conv_idx: usize,
+    pub filters: usize,
+    pub size: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub activation: Activation,
+    pub in_shape: (usize, usize, usize),
+    pub out_shape: (usize, usize, usize),
+    /// GEMM tiling (M=filters, N=C·K², P=OH·OW).
+    pub grid: TileGrid,
+}
+
+/// A fully-materialized network: config + parameters + shape table.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub config: NetConfig,
+    pub params: Vec<Param>,
+    /// Output shape of every layer (same indexing as `config.layers`).
+    pub shapes: Vec<Shape>,
+    tile_size: usize,
+}
+
+/// Executor hook for CONV GEMMs: given (layer_idx, grid, A, B) produce the
+/// dense C matrix (M×P).  The default is the blocked native GEMM; the
+/// coordinator plugs the tiled job path (accelerator clusters) in here.
+pub type ConvExec<'a> = dyn Fn(usize, TileGrid, Arc<Vec<f32>>, Arc<Vec<f32>>) -> Vec<f32> + 'a;
+
+impl Network {
+    /// Build with deterministic parameters (tile size for job geometry).
+    pub fn new(config: NetConfig, tile_size: usize) -> Result<Network> {
+        let shapes = infer_shapes(&config)?;
+        let params = init_params(&config, &shapes);
+        Ok(Network {
+            config,
+            params,
+            shapes,
+            tile_size,
+        })
+    }
+
+    pub fn tile_size(&self) -> usize {
+        self.tile_size
+    }
+
+    pub fn input_shape(&self) -> (usize, usize, usize) {
+        self.config.input_shape()
+    }
+
+    /// Deterministic synthetic input frame in [0,1) — matches
+    /// `python model.make_input`.
+    pub fn make_input(&self, frame: u64) -> Tensor {
+        let (c, h, w) = self.input_shape();
+        let n = c * h * w;
+        let base = rng::fill_tensor(
+            &self.config.name,
+            1_000_000 + frame as usize,
+            "input",
+            n,
+            1.0,
+        );
+        Tensor::from_vec(&[c, h, w], base.iter().map(|v| v + 0.5).collect())
+    }
+
+    /// Parameters of one layer by name.
+    pub fn layer_param(&self, layer: usize, name: &str) -> Option<&Tensor> {
+        self.params
+            .iter()
+            .find(|p| p.layer == layer && p.name == name)
+            .map(|p| &p.tensor)
+    }
+
+    /// CONV layer descriptors in network order.
+    pub fn conv_infos(&self) -> Vec<ConvLayerInfo> {
+        let mut infos = Vec::new();
+        let mut cur = Shape::Chw(self.config.channels, self.config.height, self.config.width);
+        let mut conv_idx = 0;
+        for (idx, layer) in self.config.layers.iter().enumerate() {
+            if let LayerSpec::Conv {
+                filters,
+                size,
+                stride,
+                pad,
+                activation,
+            } = layer
+            {
+                let (c, h, w) = match cur {
+                    Shape::Chw(c, h, w) => (c, h, w),
+                    Shape::Flat(_) => unreachable!("conv after flatten rejected at build"),
+                };
+                let (oh, ow) = super::conv_out_hw(h, w, *size, *stride, *pad);
+                infos.push(ConvLayerInfo {
+                    layer_idx: idx,
+                    conv_idx,
+                    filters: *filters,
+                    size: *size,
+                    stride: *stride,
+                    pad: *pad,
+                    activation: *activation,
+                    in_shape: (c, h, w),
+                    out_shape: (*filters, oh, ow),
+                    grid: TileGrid::new(*filters, c * size * size, oh * ow, self.tile_size),
+                });
+                conv_idx += 1;
+            }
+            cur = self.shapes[idx];
+        }
+        infos
+    }
+
+    /// Total MAC-ops·2 per frame in millions (paper GOP accounting),
+    /// mirrors `python model.model_mops`.
+    pub fn mops(&self) -> f64 {
+        let mut total = 0f64;
+        let mut cur = Shape::Chw(self.config.channels, self.config.height, self.config.width);
+        for (idx, layer) in self.config.layers.iter().enumerate() {
+            match layer {
+                LayerSpec::Conv {
+                    filters, size, ..
+                } => {
+                    if let Shape::Chw(c, _, _) = cur {
+                        if let Shape::Chw(_, oh, ow) = self.shapes[idx] {
+                            total +=
+                                2.0 * (*filters * oh * ow * c * size * size) as f64;
+                        }
+                    }
+                }
+                LayerSpec::MaxPool { size, .. } | LayerSpec::AvgPool { size, .. } => {
+                    if let Shape::Chw(c, oh, ow) = self.shapes[idx] {
+                        total += (c * oh * ow * size * size) as f64;
+                    }
+                }
+                LayerSpec::Connected { output, .. } => {
+                    total += 2.0 * (cur.len() * output) as f64;
+                }
+                LayerSpec::BatchNorm => total += 2.0 * cur.len() as f64,
+                _ => {}
+            }
+            cur = self.shapes[idx];
+        }
+        total / 1e6
+    }
+
+    /// Reference forward pass — sequential, CPU-only (the "original
+    /// single-threaded Darknet" baseline, functionally).
+    pub fn forward_reference(&self, x: &Tensor) -> Tensor {
+        self.forward_with(x, &|_, grid, a, b| {
+            let at = Tensor::from_vec(&[grid.m, grid.n], (*a).clone());
+            let bt = Tensor::from_vec(&[grid.n, grid.p], (*b).clone());
+            crate::mm::gemm::gemm_blocked(&at, &bt).into_vec()
+        })
+    }
+
+    /// Forward pass with a pluggable CONV GEMM executor.
+    pub fn forward_with(&self, x: &Tensor, conv_exec: &ConvExec) -> Tensor {
+        let (c, h, w) = self.input_shape();
+        assert_eq!(x.shape(), &[c, h, w], "input shape mismatch");
+        let mut cur = x.clone();
+        for (idx, layer) in self.config.layers.iter().enumerate() {
+            cur = self.forward_layer(idx, layer, cur, conv_exec);
+        }
+        cur
+    }
+
+    /// Execute a single layer (used by both the reference forward and the
+    /// pipeline stages, so layer semantics exist exactly once).
+    pub fn forward_layer(
+        &self,
+        idx: usize,
+        layer: &LayerSpec,
+        input: Tensor,
+        conv_exec: &ConvExec,
+    ) -> Tensor {
+        match layer {
+            LayerSpec::Conv {
+                filters,
+                size,
+                stride,
+                pad,
+                activation,
+            } => {
+                let (_, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+                let (oh, ow) = super::conv_out_hw(h, w, *size, *stride, *pad);
+                // Preprocessing on CPU: im2col (paper §3.1.4).
+                let col = im2col(&input, *size, *stride, *pad);
+                let weights = self
+                    .layer_param(idx, "weights")
+                    .expect("conv weights")
+                    .clone();
+                let cin = input.shape()[0];
+                let grid = TileGrid::new(
+                    *filters,
+                    cin * size * size,
+                    oh * ow,
+                    self.tile_size,
+                );
+                let c_mat = conv_exec(
+                    idx,
+                    grid,
+                    Arc::new(weights.into_vec()),
+                    Arc::new(col.into_vec()),
+                );
+                let bias = self.layer_param(idx, "bias").expect("conv bias");
+                let mut out = Tensor::from_vec(&[*filters, oh, ow], c_mat);
+                for o in 0..*filters {
+                    let plane = &mut out.data_mut()[o * oh * ow..(o + 1) * oh * ow];
+                    let bv = bias.data()[o];
+                    for v in plane {
+                        *v += bv;
+                    }
+                }
+                conv::activate(&mut out, *activation);
+                out
+            }
+            LayerSpec::MaxPool { size, stride } => pool::maxpool(&input, *size, *stride),
+            LayerSpec::AvgPool { size, stride } => pool::avgpool(&input, *size, *stride),
+            LayerSpec::Connected { activation, .. } => {
+                let w = self.layer_param(idx, "weights").expect("fc weights");
+                let b = self.layer_param(idx, "bias").expect("fc bias");
+                let mut out = connected(input.data(), w, b.data());
+                for v in &mut out {
+                    *v = activation.apply(*v);
+                }
+                let n = out.len();
+                Tensor::from_vec(&[n], out)
+            }
+            LayerSpec::BatchNorm => {
+                let g = self.layer_param(idx, "gamma").expect("bn gamma");
+                let b = self.layer_param(idx, "beta").expect("bn beta");
+                let m = self.layer_param(idx, "mean").expect("bn mean");
+                let v = self.layer_param(idx, "var").expect("bn var");
+                batchnorm(&input, g.data(), b.data(), m.data(), v.data())
+            }
+            LayerSpec::Dropout { .. } => input, // inference no-op
+            LayerSpec::Softmax => {
+                let n = input.len();
+                let mut flat = input.into_vec();
+                softmax::softmax(&mut flat);
+                Tensor::from_vec(&[n], flat)
+            }
+        }
+    }
+}
+
+/// Shape inference (rejects invalid topologies, e.g. conv after flatten).
+pub fn infer_shapes(config: &NetConfig) -> Result<Vec<Shape>> {
+    let mut shapes = Vec::with_capacity(config.layers.len());
+    let mut cur = Shape::Chw(config.channels, config.height, config.width);
+    for (idx, layer) in config.layers.iter().enumerate() {
+        cur = match layer {
+            LayerSpec::Conv {
+                filters,
+                size,
+                stride,
+                pad,
+                ..
+            } => match cur {
+                Shape::Chw(_, h, w) => {
+                    if h + 2 * pad < *size || w + 2 * pad < *size {
+                        bail!("{}: layer {idx}: kernel larger than input", config.name);
+                    }
+                    let (oh, ow) = super::conv_out_hw(h, w, *size, *stride, *pad);
+                    Shape::Chw(*filters, oh, ow)
+                }
+                Shape::Flat(_) => bail!("{}: conv layer {idx} after flatten", config.name),
+            },
+            LayerSpec::MaxPool { size, stride } | LayerSpec::AvgPool { size, stride } => {
+                match cur {
+                    Shape::Chw(c, h, w) => {
+                        if h < *size || w < *size {
+                            bail!("{}: layer {idx}: pool larger than input", config.name);
+                        }
+                        let (oh, ow) = super::pool_out_hw(h, w, *size, *stride);
+                        Shape::Chw(c, oh, ow)
+                    }
+                    Shape::Flat(_) => bail!("{}: pool layer {idx} after flatten", config.name),
+                }
+            }
+            LayerSpec::Connected { output, .. } => Shape::Flat(*output),
+            LayerSpec::BatchNorm | LayerSpec::Dropout { .. } | LayerSpec::Softmax => cur,
+        };
+        shapes.push(cur);
+    }
+    Ok(shapes)
+}
+
+/// Deterministic parameter init — bit-identical to python `init_params`.
+fn init_params(config: &NetConfig, shapes: &[Shape]) -> Vec<Param> {
+    let mut out = Vec::new();
+    let mut cur = Shape::Chw(config.channels, config.height, config.width);
+    let model = config.name.as_str();
+    for (idx, layer) in config.layers.iter().enumerate() {
+        match layer {
+            LayerSpec::Conv { filters, size, .. } => {
+                let c = match cur {
+                    Shape::Chw(c, _, _) => c,
+                    Shape::Flat(_) => unreachable!(),
+                };
+                let fan_in = c * size * size;
+                let scale = (2.0f64 / fan_in as f64).sqrt() as f32;
+                let n = filters * fan_in;
+                let base = rng::fill_tensor(model, idx, "weights", n, 1.0);
+                out.push(Param {
+                    layer: idx,
+                    name: "weights",
+                    // GEMM view (OC, C·K²) — same row-major layout as the
+                    // python (OC,C,K,K) array.
+                    tensor: Tensor::from_vec(
+                        &[*filters, fan_in],
+                        base.iter().map(|v| v * scale).collect(),
+                    ),
+                });
+                let bias = rng::fill_tensor(model, idx, "bias", *filters, 1.0);
+                out.push(Param {
+                    layer: idx,
+                    name: "bias",
+                    tensor: Tensor::from_vec(&[*filters], bias.iter().map(|v| v * 0.1).collect()),
+                });
+            }
+            LayerSpec::Connected { output, .. } => {
+                let n_in = cur.len();
+                let scale = (2.0f64 / n_in as f64).sqrt() as f32;
+                let base = rng::fill_tensor(model, idx, "weights", output * n_in, 1.0);
+                out.push(Param {
+                    layer: idx,
+                    name: "weights",
+                    tensor: Tensor::from_vec(
+                        &[*output, n_in],
+                        base.iter().map(|v| v * scale).collect(),
+                    ),
+                });
+                let bias = rng::fill_tensor(model, idx, "bias", *output, 1.0);
+                out.push(Param {
+                    layer: idx,
+                    name: "bias",
+                    tensor: Tensor::from_vec(&[*output], bias.iter().map(|v| v * 0.1).collect()),
+                });
+            }
+            LayerSpec::BatchNorm => {
+                let c = match cur {
+                    Shape::Chw(c, _, _) => c,
+                    Shape::Flat(n) => n,
+                };
+                let mk = |name: &'static str, f: &dyn Fn(f32) -> f32| Param {
+                    layer: idx,
+                    name,
+                    tensor: Tensor::from_vec(
+                        &[c],
+                        rng::fill_tensor(model, idx, name, c, 1.0)
+                            .iter()
+                            .map(|v| f(*v))
+                            .collect(),
+                    ),
+                };
+                out.push(mk("gamma", &|u| 1.0 + 0.1 * u));
+                out.push(mk("beta", &|u| 0.1 * u));
+                out.push(mk("mean", &|u| 0.1 * u));
+                out.push(mk("var", &|u| 1.0 + 0.5 * (u + 0.5)));
+            }
+            _ => {}
+        }
+        cur = shapes[idx];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo;
+
+    fn mk(name: &str) -> Network {
+        Network::new(zoo::load(name).unwrap(), 32).unwrap()
+    }
+
+    #[test]
+    fn shapes_end_in_ten_classes() {
+        for name in zoo::ZOO {
+            let net = mk(name);
+            assert_eq!(*net.shapes.last().unwrap(), Shape::Flat(10), "{name}");
+        }
+    }
+
+    #[test]
+    fn mnist_shape_walk() {
+        let net = mk("mnist");
+        assert_eq!(net.shapes[0], Shape::Chw(32, 28, 28)); // conv 5x5 pad2
+        assert_eq!(net.shapes[1], Shape::Chw(32, 14, 14)); // pool
+        assert_eq!(net.shapes[2], Shape::Chw(64, 14, 14)); // conv
+        assert_eq!(net.shapes[3], Shape::Chw(64, 7, 7)); // pool
+        assert_eq!(net.shapes[4], Shape::Flat(128));
+        assert_eq!(net.shapes[5], Shape::Flat(10));
+    }
+
+    #[test]
+    fn forward_is_probability_vector() {
+        for name in ["mnist", "mpcnn", "cifar_full"] {
+            let net = mk(name);
+            let x = net.make_input(0);
+            let y = net.forward_reference(&x);
+            assert_eq!(y.shape(), &[10], "{name}");
+            let sum: f32 = y.data().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "{name}: sum={sum}");
+            assert!(y.data().iter().all(|&v| v >= 0.0), "{name}");
+        }
+    }
+
+    #[test]
+    fn conv_infos_match_python_k_tiles() {
+        // K values pinned from python: see DESIGN.md §5 / aot manifest.
+        let expect: &[(&str, &[usize])] = &[
+            ("cifar_darknet", &[1, 9, 18, 4]),
+            ("cifar_alex", &[3, 25, 14]),
+            ("cifar_alex_plus", &[3, 50, 18]),
+            ("cifar_full", &[3, 25, 25]),
+            ("mnist", &[1, 25]),
+            ("svhn", &[3, 25, 14]),
+            ("mpcnn", &[1, 13, 9]),
+        ];
+        for (name, ks) in expect {
+            let net = mk(name);
+            let got: Vec<usize> = net.conv_infos().iter().map(|i| i.grid.k_tiles()).collect();
+            assert_eq!(&got, ks, "{name}");
+        }
+    }
+
+    #[test]
+    fn mops_in_expected_band() {
+        // DESIGN.md §5 band: workloads sized to the paper's GOP/frame.
+        let expect = [
+            ("cifar_darknet", 21.0),
+            ("cifar_alex", 28.2),
+            ("cifar_alex_plus", 67.6),
+            ("cifar_full", 24.7),
+            ("mnist", 22.2),
+            ("svhn", 28.2),
+            ("mpcnn", 9.3),
+        ];
+        for (name, want) in expect {
+            let got = mk(name).mops();
+            assert!(
+                (got - want).abs() / want < 0.02,
+                "{name}: mops {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn params_deterministic() {
+        let a = mk("mnist");
+        let b = mk("mnist");
+        assert_eq!(a.params.len(), b.params.len());
+        for (pa, pb) in a.params.iter().zip(&b.params) {
+            assert_eq!(pa.tensor, pb.tensor);
+        }
+    }
+
+    #[test]
+    fn forward_with_custom_executor_used() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let net = mk("mnist");
+        let calls = AtomicUsize::new(0);
+        let x = net.make_input(0);
+        let y = net.forward_with(&x, &|_, grid, a, b| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            let at = Tensor::from_vec(&[grid.m, grid.n], (*a).clone());
+            let bt = Tensor::from_vec(&[grid.n, grid.p], (*b).clone());
+            crate::mm::gemm::gemm_blocked(&at, &bt).into_vec()
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 2); // mnist has 2 convs
+        let want = net.forward_reference(&x);
+        assert!(y.allclose(&want, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn invalid_topologies_rejected() {
+        let cfg = crate::config::NetConfig::parse(
+            "bad",
+            "[net]\nheight=4\nwidth=4\nchannels=1\n[connected]\noutput=5\n[convolutional]\nfilters=2\nsize=3\n",
+        )
+        .unwrap();
+        assert!(Network::new(cfg, 32).is_err());
+
+        let cfg = crate::config::NetConfig::parse(
+            "bad2",
+            "[net]\nheight=2\nwidth=2\nchannels=1\n[maxpool]\nsize=4\n",
+        )
+        .unwrap();
+        assert!(Network::new(cfg, 32).is_err());
+    }
+}

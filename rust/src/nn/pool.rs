@@ -1,0 +1,92 @@
+//! Max / average pooling (darknet semantics: valid padding, floor output).
+
+use crate::tensor::Tensor;
+
+use super::pool_out_hw;
+
+pub fn maxpool(x: &Tensor, size: usize, stride: usize) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (oh, ow) = pool_out_hw(h, w, size, stride);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut best = f32::NEG_INFINITY;
+                for ky in 0..size {
+                    for kx in 0..size {
+                        best = best.max(x.at3(ci, oy * stride + ky, ox * stride + kx));
+                    }
+                }
+                out.set3(ci, oy, ox, best);
+            }
+        }
+    }
+    out
+}
+
+pub fn avgpool(x: &Tensor, size: usize, stride: usize) -> Tensor {
+    let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (oh, ow) = pool_out_hw(h, w, size, stride);
+    let inv = 1.0 / (size * size) as f32;
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    for ci in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0.0f32;
+                for ky in 0..size {
+                    for kx in 0..size {
+                        acc += x.at3(ci, oy * stride + ky, ox * stride + kx);
+                    }
+                }
+                out.set3(ci, oy, ox, acc * inv);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_known() {
+        let x = Tensor::from_vec(&[1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let y = maxpool(&x, 2, 2);
+        assert_eq!(y.shape(), &[1, 2, 2]);
+        assert_eq!(y.data(), &[5.0, 7.0, 13.0, 15.0]);
+    }
+
+    #[test]
+    fn avgpool_known() {
+        let x = Tensor::from_vec(&[1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let y = avgpool(&x, 2, 2);
+        assert_eq!(y.data(), &[2.5, 4.5, 10.5, 12.5]);
+    }
+
+    #[test]
+    fn ragged_input_floors() {
+        // 5x5 input, 2x2/2 pool → 2x2 output (last row/col dropped).
+        let x = Tensor::from_vec(&[1, 5, 5], (0..25).map(|i| i as f32).collect());
+        let y = maxpool(&x, 2, 2);
+        assert_eq!(y.shape(), &[1, 2, 2]);
+        assert_eq!(y.data(), &[6.0, 8.0, 16.0, 18.0]);
+    }
+
+    #[test]
+    fn multichannel_independent() {
+        let mut x = Tensor::zeros(&[2, 2, 2]);
+        x.set3(0, 0, 0, 5.0);
+        x.set3(1, 1, 1, 7.0);
+        let y = maxpool(&x, 2, 2);
+        assert_eq!(y.data(), &[5.0, 7.0]);
+    }
+
+    #[test]
+    fn overlapping_stride_one() {
+        let x = Tensor::from_vec(&[1, 3, 3], (0..9).map(|i| i as f32).collect());
+        let y = maxpool(&x, 2, 1);
+        assert_eq!(y.shape(), &[1, 2, 2]);
+        assert_eq!(y.data(), &[4.0, 5.0, 7.0, 8.0]);
+    }
+}

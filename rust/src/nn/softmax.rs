@@ -1,0 +1,57 @@
+//! Numerically-stable softmax (final classifier layer).
+
+/// Softmax over a flat vector, in place.
+pub fn softmax(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in x.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sums_to_one() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        softmax(&mut x);
+        let sum: f32 = x.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(x.windows(2).all(|w| w[0] < w[1])); // monotone preserved
+    }
+
+    #[test]
+    fn shift_invariant() {
+        let mut a = vec![1.0, 2.0, 3.0];
+        let mut b = vec![101.0, 102.0, 103.0];
+        softmax(&mut a);
+        softmax(&mut b);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn handles_large_values_without_overflow() {
+        let mut x = vec![1000.0, 1000.0];
+        softmax(&mut x);
+        assert!((x[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_is_noop() {
+        let mut x: Vec<f32> = vec![];
+        softmax(&mut x);
+        assert!(x.is_empty());
+    }
+}

@@ -1,0 +1,176 @@
+//! Bounded blocking FIFO — the ReconOS-style *mailbox* connecting layer
+//! threads in producer-consumer fashion.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC mailbox.  `send` blocks when full (backpressure between
+/// pipeline stages), `recv` blocks when empty; closing drains.
+pub struct Mailbox<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> Mailbox<T> {
+    pub fn new(capacity: usize) -> Self {
+        Mailbox {
+            inner: Mutex::new(Inner {
+                buf: VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Blocking send.  Returns false (message dropped) if closed.
+    pub fn send(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return false;
+            }
+            if g.buf.len() < self.capacity {
+                g.buf.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return true;
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking receive; None once closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.buf.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    pub fn try_recv(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.buf.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::thread;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_per_producer() {
+        let mb = Mailbox::new(4);
+        for i in 0..4 {
+            assert!(mb.send(i));
+        }
+        mb.close();
+        let mut got = Vec::new();
+        while let Some(v) = mb.recv() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bounded_send_blocks_until_recv() {
+        let mb = Arc::new(Mailbox::new(1));
+        mb.send(1);
+        let mb2 = Arc::clone(&mb);
+        let t = thread::spawn(move || {
+            // This send must block until the main thread receives.
+            assert!(mb2.send(2));
+        });
+        thread::sleep(Duration::from_millis(10));
+        assert_eq!(mb.len(), 1, "second send should be blocked");
+        assert_eq!(mb.recv(), Some(1));
+        t.join().unwrap();
+        assert_eq!(mb.recv(), Some(2));
+    }
+
+    #[test]
+    fn close_unblocks_and_drains() {
+        let mb: Arc<Mailbox<u32>> = Arc::new(Mailbox::new(2));
+        mb.send(9);
+        let mb2 = Arc::clone(&mb);
+        let t = thread::spawn(move || mb2.recv());
+        thread::sleep(Duration::from_millis(5));
+        mb.close();
+        assert_eq!(t.join().unwrap(), Some(9));
+        assert_eq!(mb.recv(), None);
+        assert!(!mb.send(1), "send after close fails");
+    }
+
+    #[test]
+    fn pipeline_of_three_stages() {
+        // frame stream through 2 mailboxes with a transform per stage
+        let a: Arc<Mailbox<u32>> = Arc::new(Mailbox::new(1));
+        let b: Arc<Mailbox<u32>> = Arc::new(Mailbox::new(1));
+        let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+        let stage = thread::spawn(move || {
+            while let Some(v) = a2.recv() {
+                b2.send(v * 10);
+            }
+            b2.close();
+        });
+        let a3 = Arc::clone(&a);
+        let producer = thread::spawn(move || {
+            for i in 0..20 {
+                a3.send(i);
+            }
+            a3.close();
+        });
+        let mut got = Vec::new();
+        while let Some(v) = b.recv() {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        stage.join().unwrap();
+        assert_eq!(got, (0..20).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let mb: Mailbox<u32> = Mailbox::new(2);
+        assert_eq!(mb.try_recv(), None);
+        mb.send(5);
+        assert_eq!(mb.try_recv(), Some(5));
+    }
+}

@@ -1,0 +1,7 @@
+//! HW/SW multi-threaded pipeline plumbing (paper §3: "the communication
+//! between layers is performed through a mailbox (a synchronized
+//! first-in-first-out buffer) accessible by the threads").
+
+pub mod mailbox;
+
+pub use mailbox::Mailbox;

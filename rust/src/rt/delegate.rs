@@ -1,0 +1,187 @@
+//! Delegate threads (paper §3.1.2): the software wrappers that stand in
+//! for hardware accelerators inside the OS threading model.
+//!
+//! Each delegate owns its accelerator's execution backend and services its
+//! cluster's job queue: request a job, fetch the operand tiles, execute,
+//! acknowledge the result — exactly the control-FIFO protocol of Fig 5,
+//! with the mpsc reply channel standing in for `if_hw2sw`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::cluster::JobQueue;
+use crate::mm::job::{Job, JobResult};
+use crate::runtime::PeEngine;
+use crate::sched::worksteal::ThiefMsg;
+
+/// A job plus its reply channel (the "acknowledgment" path of Fig 5).
+pub struct RtJob {
+    pub job: Job,
+    pub reply: Sender<JobResult>,
+}
+
+/// Which backend a delegate drives.
+pub enum Backend {
+    /// FPGA PE: the AOT Pallas job kernel through PJRT.
+    Pjrt(Box<PeEngine>),
+    /// NEON: the native blocked GEMM.
+    Native,
+}
+
+/// Per-delegate counters.
+#[derive(Debug, Default)]
+pub struct DelegateStats {
+    pub jobs: AtomicU64,
+    pub ksteps: AtomicU64,
+    pub idle_reports: AtomicU64,
+}
+
+/// Spawn a delegate thread servicing `queue`.
+///
+/// The backend is built *inside* the thread via `mk_backend`: the PJRT
+/// engine is `Rc`-backed (not `Send`), and hardware-wise each PE is its own
+/// physical kernel instance anyway.
+///
+/// The thread exits when the queue is closed and drained.  On queue
+/// timeout it reports `ClusterIdle` to the thief (work-stealing trigger).
+pub fn spawn(
+    name: String,
+    cluster: usize,
+    queue: Arc<JobQueue<RtJob>>,
+    mk_backend: impl FnOnce() -> Result<Backend> + Send + 'static,
+    thief: Option<Sender<ThiefMsg>>,
+    stats: Arc<DelegateStats>,
+) -> JoinHandle<Result<()>> {
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            let backend = mk_backend()?;
+            delegate_loop(cluster, queue, backend, thief, stats)
+        })
+        .expect("spawn delegate thread")
+}
+
+fn delegate_loop(
+    cluster: usize,
+    queue: Arc<JobQueue<RtJob>>,
+    backend: Backend,
+    thief: Option<Sender<ThiefMsg>>,
+    stats: Arc<DelegateStats>,
+) -> Result<()> {
+    loop {
+        let rt_job = match queue.pop_timeout(Duration::from_micros(500)) {
+            Ok(Some(j)) => j,
+            Ok(None) => return Ok(()), // closed + drained
+            Err(()) => {
+                // Idle: notify the thief's manager (paper Fig 4 step 1).
+                if let Some(tx) = &thief {
+                    stats.idle_reports.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(ThiefMsg::ClusterIdle(cluster));
+                }
+                // Longer nap so an empty tail doesn't spin.
+                match queue.pop_timeout(Duration::from_millis(2)) {
+                    Ok(Some(j)) => j,
+                    Ok(None) => return Ok(()),
+                    Err(()) => continue,
+                }
+            }
+        };
+        let result = execute(&backend, &rt_job.job)?;
+        stats.jobs.fetch_add(1, Ordering::Relaxed);
+        stats
+            .ksteps
+            .fetch_add(rt_job.job.desc.k_tiles() as u64, Ordering::Relaxed);
+        // Receiver may have gone away on shutdown; that's fine.
+        let _ = rt_job.reply.send(result);
+    }
+}
+
+/// Execute one job on the chosen backend.
+pub fn execute(backend: &Backend, job: &Job) -> Result<JobResult> {
+    match backend {
+        Backend::Native => Ok(job.execute_native()),
+        Backend::Pjrt(engine) => {
+            let (at, bt) = job.pack_tiles();
+            let tile = engine.execute_job(&at, &bt, job.desc.k_tiles())?;
+            Ok(JobResult {
+                desc: job.desc,
+                tile,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mm::job::jobs_for_gemm;
+    use crate::mm::TileGrid;
+    use crate::util::rng::XorShift64Star;
+    use std::sync::mpsc;
+
+    #[test]
+    fn native_delegate_services_jobs_and_exits_on_close() {
+        let queue: Arc<JobQueue<RtJob>> = Arc::new(JobQueue::new());
+        let stats = Arc::new(DelegateStats::default());
+        let handle = spawn(
+            "test-delegate".into(),
+            0,
+            Arc::clone(&queue),
+            || Ok(Backend::Native),
+            None,
+            Arc::clone(&stats),
+        );
+
+        let grid = TileGrid::new(40, 50, 60, 32);
+        let a = Arc::new(XorShift64Star::new(1).fill_f32(40 * 50, 1.0));
+        let b = Arc::new(XorShift64Star::new(2).fill_f32(50 * 60, 1.0));
+        let mut id = 0;
+        let jobs = jobs_for_gemm(0, 0, grid, a, b, &mut id);
+        let n = jobs.len();
+        let (tx, rx) = mpsc::channel();
+        for job in jobs {
+            queue.push(RtJob {
+                job,
+                reply: tx.clone(),
+            });
+        }
+        let mut results = Vec::new();
+        for _ in 0..n {
+            results.push(rx.recv_timeout(Duration::from_secs(5)).unwrap());
+        }
+        queue.close();
+        handle.join().unwrap().unwrap();
+        assert_eq!(stats.jobs.load(Ordering::Relaxed), n as u64);
+        // every tile distinct
+        let mut seen = std::collections::HashSet::new();
+        for r in &results {
+            assert!(seen.insert((r.desc.t1, r.desc.t2)));
+        }
+    }
+
+    #[test]
+    fn idle_delegate_reports_to_thief() {
+        let queue: Arc<JobQueue<RtJob>> = Arc::new(JobQueue::new());
+        let stats = Arc::new(DelegateStats::default());
+        let (ttx, trx) = mpsc::channel();
+        let handle = spawn(
+            "idle-delegate".into(),
+            3,
+            Arc::clone(&queue),
+            || Ok(Backend::Native),
+            Some(ttx),
+            Arc::clone(&stats),
+        );
+        // No jobs: the delegate must report idleness at least once.
+        let msg = trx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(msg, ThiefMsg::ClusterIdle(3));
+        queue.close();
+        handle.join().unwrap().unwrap();
+        assert!(stats.idle_reports.load(Ordering::Relaxed) >= 1);
+    }
+}

@@ -1,0 +1,24 @@
+//! The real threaded runtime — Synergy executing with actual OS threads
+//! and actual numerics (no virtual clock).
+//!
+//! This is the paper's software architecture (Fig 2) materialized:
+//! * one **layer thread** per network layer, connected by [`Mailbox`]es in
+//!   producer-consumer fashion (frames stream through, inter-frame
+//!   parallelism for free);
+//! * CONV layer threads lower their GEMM to **jobs** and push them to their
+//!   cluster's [`JobQueue`];
+//! * **delegate threads** ([`delegate`]) wrap the accelerators: the FPGA-PE
+//!   delegates execute the AOT Pallas kernel through PJRT (each owns a
+//!   private engine — mirroring one physical kernel instance per PE); the
+//!   NEON delegates run the native blocked GEMM;
+//! * the **thief thread** (`sched::worksteal`) rebalances queues when a
+//!   cluster goes idle.
+//!
+//! Wall-clock numbers from this runtime measure the *coordinator* (L3)
+//! overheads — queueing, stealing, mailbox hops, PJRT dispatch — on the
+//! host CPU; ZC702-shaped timing comes from `sim/`.
+
+pub mod delegate;
+pub mod driver;
+
+pub use driver::{RtOptions, RtReport, RtRuntime, ComputeMode};

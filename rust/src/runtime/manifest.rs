@@ -1,0 +1,217 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime: which HLO files exist, their tile size / K values,
+//! and the canonical parameter order of every model artifact.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One AOT job kernel (per-K Pallas PE kernel).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobKernelMeta {
+    pub k: usize,
+    pub path: String,
+}
+
+/// One model parameter in canonical order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamMeta {
+    pub layer: usize,
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamMeta {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One AOT model artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub path: String,
+    pub input_shape: Vec<usize>,
+    pub mops: f64,
+    pub params: Vec<ParamMeta>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub tile_size: usize,
+    pub job_kernels: Vec<JobKernelMeta>,
+    pub models: Vec<ModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(artifacts: &Path) -> Result<Manifest> {
+        let path = artifacts.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} (run `make artifacts` first)",
+                path.display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let tile_size = root
+            .get("tile_size")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing tile_size"))?;
+
+        let mut job_kernels = Vec::new();
+        for jk in root
+            .get("job_kernels")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing job_kernels"))?
+        {
+            job_kernels.push(JobKernelMeta {
+                k: jk
+                    .get("k")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("job kernel missing k"))?,
+                path: jk
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("job kernel missing path"))?
+                    .to_string(),
+            });
+        }
+
+        let mut models = Vec::new();
+        for m in root
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing models"))?
+        {
+            let mut params = Vec::new();
+            for p in m
+                .get("params")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("model missing params"))?
+            {
+                params.push(ParamMeta {
+                    layer: p
+                        .get("layer")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("param missing layer"))?,
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                });
+            }
+            models.push(ModelMeta {
+                name: m
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model missing name"))?
+                    .to_string(),
+                path: m
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("model missing path"))?
+                    .to_string(),
+                input_shape: m
+                    .get("input_shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("model missing input_shape"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+                mops: m.get("mops").and_then(Json::as_f64).unwrap_or(0.0),
+                params,
+            });
+        }
+
+        Ok(Manifest {
+            tile_size,
+            job_kernels,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelMeta> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn k_values(&self) -> Vec<usize> {
+        self.job_kernels.iter().map(|jk| jk.k).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "tile_size": 32,
+      "job_kernels": [{"k": 1, "path": "job_mm_ts32_k1.hlo.txt", "tile_size": 32}],
+      "models": [{
+        "name": "mini", "path": "model_mini.hlo.txt",
+        "input_shape": [1, 8, 8], "mops": 0.5,
+        "params": [
+          {"layer": 0, "name": "weights", "shape": [4, 1, 3, 3]},
+          {"layer": 0, "name": "bias", "shape": [4]}
+        ],
+        "conv_gemms": []
+      }]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let man = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(man.tile_size, 32);
+        assert_eq!(man.k_values(), vec![1]);
+        let model = man.model("mini").unwrap();
+        assert_eq!(model.input_shape, vec![1, 8, 8]);
+        assert_eq!(model.params.len(), 2);
+        assert_eq!(model.params[0].len(), 36);
+        assert!(man.model("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"tile_size": 32}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.tile_size, 32);
+        assert_eq!(man.models.len(), 7);
+        assert!(man.job_kernels.len() >= 9);
+        // All referenced artifact files exist.
+        for jk in &man.job_kernels {
+            assert!(dir.join(&jk.path).exists(), "{}", jk.path);
+        }
+        for m in &man.models {
+            assert!(dir.join(&m.path).exists(), "{}", m.path);
+        }
+    }
+}

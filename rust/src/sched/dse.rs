@@ -1,0 +1,132 @@
+//! Cluster-configuration design-space exploration — produces the paper's
+//! *static-mapping + custom-architecture* (SC) designs of Table 5.
+//!
+//! Paper §4.3: "In the SC designs, we find the best multi-cluster
+//! configuration for each CNN model by exploring all possible cluster
+//! configurations."  The resource pool is fixed (2 NEONs, 2 S-PE, 6 F-PE on
+//! the ZC702); we enumerate every two-cluster partition, simulate the SC
+//! design for the model, and keep the highest-throughput configuration.
+
+use crate::accel::clusters_from_tuples;
+use crate::config::HwConfig;
+use crate::nn::Network;
+use crate::sim::{simulate, SimSpec};
+
+/// One candidate: (neon, s_pe, f_pe) per cluster.
+pub type ClusterTuple = (usize, usize, usize);
+
+/// Result of the exploration.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub best: Vec<ClusterTuple>,
+    pub best_fps: f64,
+    pub evaluated: usize,
+}
+
+/// All two-cluster partitions of the pool (both clusters non-empty).
+pub fn enumerate_two_cluster_configs(
+    neons: usize,
+    s_pes: usize,
+    f_pes: usize,
+) -> Vec<[ClusterTuple; 2]> {
+    let mut out = Vec::new();
+    for n0 in 0..=neons {
+        for s0 in 0..=s_pes {
+            for f0 in 0..=f_pes {
+                let c0 = (n0, s0, f0);
+                let c1 = (neons - n0, s_pes - s0, f_pes - f0);
+                if n0 + s0 + f0 == 0 {
+                    continue;
+                }
+                if c1.0 + c1.1 + c1.2 == 0 {
+                    continue;
+                }
+                out.push([c0, c1]);
+            }
+        }
+    }
+    out
+}
+
+/// Explore all SC configurations for one model, return the best.
+pub fn explore(net: &Network, frames: usize) -> DseResult {
+    let hw = HwConfig::default_zc702();
+    let pool = (hw.total_neons(), 2, 6); // 2 NEONs, 2 S-PE, 6 F-PE
+    let configs = enumerate_two_cluster_configs(pool.0, pool.1, pool.2);
+    let mut best: Option<(f64, [ClusterTuple; 2])> = None;
+    for cfg in &configs {
+        let clusters = clusters_from_tuples(&hw, &cfg[..]);
+        let spec = SimSpec::static_custom(net, clusters, frames);
+        let r = simulate(&spec, net);
+        if best.map(|(fps, _)| r.fps > fps).unwrap_or(true) {
+            best = Some((r.fps, *cfg));
+        }
+    }
+    let (best_fps, best_cfg) = best.expect("at least one config");
+    DseResult {
+        best: best_cfg.to_vec(),
+        best_fps,
+        evaluated: configs.len(),
+    }
+}
+
+/// Pretty-print a tuple like the paper's Table 5 rows.
+pub fn describe_tuple(t: &ClusterTuple) -> String {
+    let mut parts = Vec::new();
+    if t.0 > 0 {
+        parts.push(format!("{} NEON", t.0));
+    }
+    if t.1 > 0 {
+        parts.push(format!("{} S-PE", t.1));
+    }
+    if t.2 > 0 {
+        parts.push(format!("{} F-PE", t.2));
+    }
+    if parts.is_empty() {
+        "-".into()
+    } else {
+        parts.join(" + ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo;
+
+    #[test]
+    fn enumeration_counts_and_validity() {
+        let configs = enumerate_two_cluster_configs(2, 2, 6);
+        // 3*3*7 = 63 total splits minus the two all-empty-side cases.
+        assert_eq!(configs.len(), 61);
+        for [c0, c1] in &configs {
+            assert!(c0.0 + c0.1 + c0.2 > 0);
+            assert!(c1.0 + c1.1 + c1.2 > 0);
+            assert_eq!(c0.0 + c1.0, 2);
+            assert_eq!(c0.1 + c1.1, 2);
+            assert_eq!(c0.2 + c1.2, 6);
+        }
+    }
+
+    #[test]
+    fn explore_finds_config_at_least_as_good_as_default_sf() {
+        let net = Network::new(zoo::load("cifar_alex").unwrap(), 32).unwrap();
+        let dse = explore(&net, 12);
+        assert_eq!(dse.evaluated, 61);
+        // SC (best custom) must beat or match SF (the default split).
+        let sf = simulate(&SimSpec::static_fixed(&net, 12), &net);
+        assert!(
+            dse.best_fps >= sf.fps * 0.999,
+            "SC {} < SF {}",
+            dse.best_fps,
+            sf.fps
+        );
+    }
+
+    #[test]
+    fn describe_tuples() {
+        assert_eq!(describe_tuple(&(2, 0, 4)), "2 NEON + 4 F-PE");
+        assert_eq!(describe_tuple(&(0, 2, 2)), "2 S-PE + 2 F-PE");
+        assert_eq!(describe_tuple(&(0, 0, 0)), "-");
+    }
+}

@@ -1,0 +1,34 @@
+//! Scheduling: CONV-layer → cluster mapping policies.
+//!
+//! * [`static_map`] — the SF/SC static assignment of paper §4.3 (each CONV
+//!   layer pinned to one cluster, balanced by workload estimate);
+//! * [`worksteal`] — the Synergy thief thread (manager, idle book, stealer)
+//!   that rebalances job queues at runtime (paper §3.1.3 / Fig 4);
+//! * [`dse`] — exhaustive cluster-configuration search for the SC designs
+//!   (paper Table 5).
+
+pub mod dse;
+pub mod static_map;
+pub mod worksteal;
+
+/// How CONV layers' jobs reach clusters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Mapping {
+    /// SF/SC: layer `l` sends all jobs to `assignment[l]` (indexed by CONV
+    /// ordinal, not network layer index); no stealing.
+    Static(Vec<usize>),
+    /// Synergy: same initial assignment, but idle clusters steal.
+    WorkStealing(Vec<usize>),
+}
+
+impl Mapping {
+    pub fn assignment(&self) -> &[usize] {
+        match self {
+            Mapping::Static(a) | Mapping::WorkStealing(a) => a,
+        }
+    }
+
+    pub fn steals(&self) -> bool {
+        matches!(self, Mapping::WorkStealing(_))
+    }
+}

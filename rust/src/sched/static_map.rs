@@ -1,0 +1,136 @@
+//! Static CONV-layer → cluster assignment (the SF/SC baselines, §4.3).
+//!
+//! Paper: "Mapping of CONV layers and clusters is decided by the number of
+//! jobs a CONV layer has.  A CONV layer with less workload will be mapped
+//! onto a less powerful cluster and vice-versa."  We implement that as a
+//! weighted longest-processing-time greedy: layers in decreasing work order
+//! are placed on the cluster that finishes them earliest given its
+//! aggregate throughput and current load.
+
+use crate::accel::ClusterSpec;
+use crate::nn::network::ConvLayerInfo;
+
+/// Estimated work of one CONV layer in k-steps (jobs × K).
+pub fn layer_ksteps(info: &ConvLayerInfo) -> f64 {
+    (info.grid.num_jobs() * info.grid.k_tiles()) as f64
+}
+
+/// Compute the static assignment: `result[conv_idx] = cluster index`.
+pub fn assign(convs: &[ConvLayerInfo], clusters: &[ClusterSpec]) -> Vec<usize> {
+    assert!(!clusters.is_empty());
+    let throughputs: Vec<f64> = clusters.iter().map(|c| c.throughput().max(1e-12)).collect();
+    // loads[c] = assigned k-steps
+    let mut loads = vec![0.0f64; clusters.len()];
+    let mut order: Vec<usize> = (0..convs.len()).collect();
+    order.sort_by(|&a, &b| {
+        layer_ksteps(&convs[b])
+            .partial_cmp(&layer_ksteps(&convs[a]))
+            .unwrap()
+    });
+    let mut assignment = vec![0usize; convs.len()];
+    for idx in order {
+        let work = layer_ksteps(&convs[idx]);
+        // earliest-finish cluster
+        let best = (0..clusters.len())
+            .min_by(|&a, &b| {
+                let fa = (loads[a] + work) / throughputs[a];
+                let fb = (loads[b] + work) / throughputs[b];
+                fa.partial_cmp(&fb).unwrap()
+            })
+            .unwrap();
+        loads[best] += work;
+        assignment[idx] = best;
+    }
+    assignment
+}
+
+/// Imbalance of an assignment: max/min cluster finish-time ratio (1.0 =
+/// perfectly balanced).  Used by tests and the DSE ranking.
+pub fn imbalance(
+    convs: &[ConvLayerInfo],
+    clusters: &[ClusterSpec],
+    assignment: &[usize],
+) -> f64 {
+    let throughputs: Vec<f64> = clusters.iter().map(|c| c.throughput().max(1e-12)).collect();
+    let mut finish = vec![0.0f64; clusters.len()];
+    for (ci, info) in convs.iter().enumerate() {
+        finish[assignment[ci]] += layer_ksteps(info) / throughputs[assignment[ci]];
+    }
+    let max = finish.iter().cloned().fold(0.0, f64::max);
+    let min = finish
+        .iter()
+        .cloned()
+        .filter(|&f| f > 0.0)
+        .fold(f64::INFINITY, f64::min);
+    if min.is_finite() && min > 0.0 {
+        max / min
+    } else {
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::build_clusters;
+    use crate::config::{zoo, HwConfig};
+    use crate::nn::Network;
+
+    fn setup(name: &str) -> (Vec<ConvLayerInfo>, Vec<crate::accel::ClusterSpec>) {
+        let net = Network::new(zoo::load(name).unwrap(), 32).unwrap();
+        let clusters = build_clusters(&HwConfig::default_zc702());
+        (net.conv_infos(), clusters)
+    }
+
+    #[test]
+    fn assignment_in_range_and_total() {
+        for name in zoo::ZOO {
+            let (convs, clusters) = setup(name);
+            let a = assign(&convs, &clusters);
+            assert_eq!(a.len(), convs.len(), "{name}");
+            assert!(a.iter().all(|&c| c < clusters.len()), "{name}");
+        }
+    }
+
+    #[test]
+    fn heaviest_layer_goes_to_strongest_cluster() {
+        let (convs, clusters) = setup("cifar_alex");
+        let a = assign(&convs, &clusters);
+        let heaviest = (0..convs.len())
+            .max_by(|&x, &y| {
+                layer_ksteps(&convs[x])
+                    .partial_cmp(&layer_ksteps(&convs[y]))
+                    .unwrap()
+            })
+            .unwrap();
+        // Cluster 1 (6 F-PE) is the strongest in the default config.
+        assert_eq!(a[heaviest], 1);
+    }
+
+    #[test]
+    fn greedy_beats_all_on_one_cluster() {
+        let (convs, clusters) = setup("cifar_darknet");
+        let a = assign(&convs, &clusters);
+        let all_on_one = vec![1usize; convs.len()];
+        let makespan = |asg: &[usize]| -> f64 {
+            let thr: Vec<f64> = clusters.iter().map(|c| c.throughput()).collect();
+            let mut finish = vec![0.0f64; clusters.len()];
+            for (ci, info) in convs.iter().enumerate() {
+                finish[asg[ci]] += layer_ksteps(info) / thr[asg[ci]];
+            }
+            finish.iter().cloned().fold(0.0, f64::max)
+        };
+        assert!(makespan(&a) <= makespan(&all_on_one) * 1.001);
+    }
+
+    #[test]
+    fn ksteps_match_grid() {
+        let (convs, _) = setup("mnist");
+        // mnist conv1: 25 jobs × 1 kstep; conv2: 14 jobs × 25.
+        assert_eq!(layer_ksteps(&convs[0]) as usize, 25);
+        assert_eq!(
+            layer_ksteps(&convs[1]) as usize,
+            convs[1].grid.num_jobs() * 25
+        );
+    }
+}

@@ -1,0 +1,233 @@
+//! The Synergy work-stealing scheduler (paper §3.1.3 / Fig 4).
+//!
+//! A dedicated *thief thread* hosts three roles:
+//! * **manager** — receives idle notifications from clusters and keeps the
+//!   *idle book*;
+//! * **idle book** — the set of clusters that drained their job queues;
+//! * **stealer** — takes jobs from the back of the busiest victim queue and
+//!   deposits them into an idle cluster's queue, then clears the idle-book
+//!   entry.
+//!
+//! The same victim-selection policy is reused by the virtual-clock
+//! simulator (`choose_victim` is a pure function).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::cluster::JobQueue;
+
+/// Messages from cluster workers to the thief's manager.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ThiefMsg {
+    /// Cluster `idx` found its queue empty.
+    ClusterIdle(usize),
+    /// Cluster `idx` got fresh local work (e.g. a layer enqueued jobs).
+    ClusterBusy(usize),
+    Shutdown,
+}
+
+/// Steal accounting (shared, lock-free).
+#[derive(Debug, Default)]
+pub struct StealStats {
+    pub attempts: AtomicU64,
+    pub successes: AtomicU64,
+    pub jobs_moved: AtomicU64,
+}
+
+impl StealStats {
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.attempts.load(Ordering::Relaxed),
+            self.successes.load(Ordering::Relaxed),
+            self.jobs_moved.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Pick the victim: the non-idle cluster with the longest queue (must have
+/// at least `min_len` jobs, so we don't ping-pong single jobs).
+pub fn choose_victim(queue_lens: &[usize], idle: &HashSet<usize>, min_len: usize) -> Option<usize> {
+    queue_lens
+        .iter()
+        .enumerate()
+        .filter(|(i, &len)| !idle.contains(i) && len >= min_len)
+        .max_by_key(|(_, &len)| len)
+        .map(|(i, _)| i)
+}
+
+/// How many jobs to move: half the victim's queue (classic steal-half).
+pub fn steal_amount(victim_len: usize) -> usize {
+    victim_len.div_ceil(2)
+}
+
+/// The running thief thread.
+pub struct Thief<T: Send + 'static> {
+    tx: mpsc::Sender<ThiefMsg>,
+    handle: Option<JoinHandle<()>>,
+    pub stats: Arc<StealStats>,
+    _marker: std::marker::PhantomData<T>,
+}
+
+impl<T: Send + 'static> Thief<T> {
+    /// Spawn the thief over the cluster queues.
+    pub fn spawn(queues: Vec<Arc<JobQueue<T>>>) -> Thief<T> {
+        let (tx, rx) = mpsc::channel::<ThiefMsg>();
+        let stats = Arc::new(StealStats::default());
+        let st = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name("thief".into())
+            .spawn(move || thief_loop(queues, rx, st))
+            .expect("spawn thief");
+        Thief {
+            tx,
+            handle: Some(handle),
+            stats,
+            _marker: std::marker::PhantomData,
+        }
+    }
+
+    /// Handle for workers to report idleness.
+    pub fn sender(&self) -> mpsc::Sender<ThiefMsg> {
+        self.tx.clone()
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(ThiefMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for Thief<T> {
+    fn drop(&mut self) {
+        let _ = self.tx.send(ThiefMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn thief_loop<T: Send>(
+    queues: Vec<Arc<JobQueue<T>>>,
+    rx: mpsc::Receiver<ThiefMsg>,
+    stats: Arc<StealStats>,
+) {
+    let mut idle_book: HashSet<usize> = HashSet::new();
+    loop {
+        // Wait for a notification (or poll the idle book periodically: a
+        // victim may have become stealable after the idle report).
+        let msg = if idle_book.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return,
+            }
+        } else {
+            match rx.recv_timeout(Duration::from_micros(200)) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        };
+        match msg {
+            Some(ThiefMsg::Shutdown) => return,
+            Some(ThiefMsg::ClusterIdle(c)) => {
+                if c < queues.len() {
+                    idle_book.insert(c);
+                }
+            }
+            Some(ThiefMsg::ClusterBusy(c)) => {
+                idle_book.remove(&c);
+            }
+            None => {}
+        }
+        // Stealer pass: service every idle cluster we can.
+        let lens: Vec<usize> = queues.iter().map(|q| q.len()).collect();
+        let served: Vec<usize> = idle_book.iter().copied().collect();
+        for idle_c in served {
+            stats.attempts.fetch_add(1, Ordering::Relaxed);
+            if let Some(victim) = choose_victim(&lens, &idle_book, 2) {
+                let n = steal_amount(queues[victim].len());
+                let stolen = queues[victim].steal(n);
+                if !stolen.is_empty() {
+                    let moved = stolen.len() as u64;
+                    if queues[idle_c].push_batch(stolen) {
+                        stats.successes.fetch_add(1, Ordering::Relaxed);
+                        stats.jobs_moved.fetch_add(moved, Ordering::Relaxed);
+                        idle_book.remove(&idle_c);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn victim_is_longest_non_idle() {
+        let lens = vec![0, 5, 3];
+        let mut idle = HashSet::new();
+        idle.insert(0);
+        assert_eq!(choose_victim(&lens, &idle, 2), Some(1));
+        idle.insert(1);
+        assert_eq!(choose_victim(&lens, &idle, 2), Some(2));
+        idle.insert(2);
+        assert_eq!(choose_victim(&lens, &idle, 2), None);
+    }
+
+    #[test]
+    fn victim_respects_min_len() {
+        let lens = vec![1, 1];
+        let idle = HashSet::new();
+        assert_eq!(choose_victim(&lens, &idle, 2), None);
+        let v = choose_victim(&lens, &idle, 1);
+        assert!(v == Some(0) || v == Some(1));
+    }
+
+    #[test]
+    fn steal_half() {
+        assert_eq!(steal_amount(0), 0);
+        assert_eq!(steal_amount(1), 1);
+        assert_eq!(steal_amount(7), 4);
+        assert_eq!(steal_amount(8), 4);
+    }
+
+    #[test]
+    fn thief_moves_jobs_to_idle_cluster() {
+        let q0: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
+        let q1: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
+        for i in 0..10 {
+            q1.push(i);
+        }
+        let thief = Thief::spawn(vec![Arc::clone(&q0), Arc::clone(&q1)]);
+        thief.sender().send(ThiefMsg::ClusterIdle(0)).unwrap();
+        // Wait for the stealer to act.
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while q0.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(!q0.is_empty(), "thief should have moved jobs");
+        let (att, succ, moved) = thief.stats.snapshot();
+        assert!(att >= 1 && succ >= 1 && moved >= 1);
+        // No duplication, no loss.
+        assert_eq!(q0.len() + q1.len(), 10);
+        thief.shutdown();
+    }
+
+    #[test]
+    fn thief_ignores_out_of_range_and_shuts_down() {
+        let q0: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
+        let thief = Thief::spawn(vec![Arc::clone(&q0)]);
+        thief.sender().send(ThiefMsg::ClusterIdle(99)).unwrap();
+        thief.sender().send(ThiefMsg::ClusterBusy(0)).unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        thief.shutdown(); // must not hang
+    }
+}

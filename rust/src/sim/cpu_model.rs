@@ -1,0 +1,188 @@
+//! ARM Cortex-A9 cycle model for the CPU-resident layers (paper §3.1.4:
+//! pooling, activation, fully-connected, batchnorm, softmax, plus the
+//! im2col / normalization preprocessing).
+//!
+//! Per-element cycle constants are calibrated so the single-threaded
+//! CPU-only baseline reproduces the paper's *original Darknet* operating
+//! points (Table 3: e.g. MNIST ≈ 112.9 mJ/frame at ≈1.4 W → ≈80 ms/frame).
+//! The dominant term is the scalar GEMM at ≈4.8 cycles/MAC — a realistic
+//! -O3 figure for an in-order A9 with 32-byte lines and no L2 prefetch.
+
+use crate::config::{LayerSpec, NetConfig};
+use crate::nn::{conv_out_hw, network::Shape, pool_out_hw};
+
+/// Cycle-cost constants (cycles per element / per MAC).
+#[derive(Debug, Clone)]
+pub struct CpuModel {
+    pub hz: f64,
+    pub gemm_cyc_per_mac: f64,
+    pub im2col_cyc_per_elem: f64,
+    pub conv_post_cyc_per_elem: f64,
+    pub pool_cyc_per_out_elem: f64,
+    pub fc_cyc_per_mac: f64,
+    pub bn_cyc_per_elem: f64,
+    pub softmax_cyc_per_elem: f64,
+    pub normalize_cyc_per_elem: f64,
+}
+
+impl CpuModel {
+    pub fn a9(cpu_mhz: f64) -> CpuModel {
+        CpuModel {
+            hz: cpu_mhz * 1e6,
+            gemm_cyc_per_mac: 4.8,
+            im2col_cyc_per_elem: 6.0,
+            conv_post_cyc_per_elem: 3.0,
+            pool_cyc_per_out_elem: 10.0,
+            fc_cyc_per_mac: 4.8,
+            bn_cyc_per_elem: 6.0,
+            softmax_cyc_per_elem: 30.0,
+            normalize_cyc_per_elem: 4.0,
+        }
+    }
+
+    fn s(&self, cycles: f64) -> f64 {
+        cycles / self.hz
+    }
+
+    /// im2col of one CONV layer: touches C·K²·OH·OW elements.
+    pub fn im2col_seconds(&self, c: usize, ksize: usize, oh: usize, ow: usize) -> f64 {
+        self.s(self.im2col_cyc_per_elem * (c * ksize * ksize * oh * ow) as f64)
+    }
+
+    /// Bias + activation after the GEMM.
+    pub fn conv_post_seconds(&self, oc: usize, oh: usize, ow: usize) -> f64 {
+        self.s(self.conv_post_cyc_per_elem * (oc * oh * ow) as f64)
+    }
+
+    /// The CONV GEMM itself when it runs on the CPU (the baseline).
+    pub fn gemm_seconds(&self, m: usize, n: usize, p: usize) -> f64 {
+        self.s(self.gemm_cyc_per_mac * (m * n * p) as f64)
+    }
+
+    pub fn pool_seconds(&self, c: usize, oh: usize, ow: usize, size: usize) -> f64 {
+        self.s(self.pool_cyc_per_out_elem * (c * oh * ow) as f64 * (size * size) as f64 / 4.0)
+    }
+
+    pub fn fc_seconds(&self, n_in: usize, n_out: usize) -> f64 {
+        self.s(self.fc_cyc_per_mac * (n_in * n_out) as f64)
+    }
+
+    pub fn bn_seconds(&self, elems: usize) -> f64 {
+        self.s(self.bn_cyc_per_elem * elems as f64)
+    }
+
+    pub fn softmax_seconds(&self, elems: usize) -> f64 {
+        self.s(self.softmax_cyc_per_elem * elems as f64)
+    }
+
+    pub fn normalize_seconds(&self, elems: usize) -> f64 {
+        self.s(self.normalize_cyc_per_elem * elems as f64)
+    }
+
+    /// CPU cost of a layer, split into (pre, gemm, post) segments:
+    /// * CONV: pre = im2col, gemm = the MM (CPU path only), post = bias+act;
+    /// * others: everything in `pre`.
+    ///
+    /// `in_shape` is the layer's input shape.
+    pub fn layer_segments(&self, layer: &LayerSpec, in_shape: Shape) -> (f64, f64, f64) {
+        match layer {
+            LayerSpec::Conv {
+                filters,
+                size,
+                stride,
+                pad,
+                ..
+            } => {
+                let (c, h, w) = match in_shape {
+                    Shape::Chw(c, h, w) => (c, h, w),
+                    Shape::Flat(_) => unreachable!("validated topology"),
+                };
+                let (oh, ow) = conv_out_hw(h, w, *size, *stride, *pad);
+                (
+                    self.im2col_seconds(c, *size, oh, ow),
+                    self.gemm_seconds(*filters, c * size * size, oh * ow),
+                    self.conv_post_seconds(*filters, oh, ow),
+                )
+            }
+            LayerSpec::MaxPool { size, stride } | LayerSpec::AvgPool { size, stride } => {
+                let (c, h, w) = match in_shape {
+                    Shape::Chw(c, h, w) => (c, h, w),
+                    Shape::Flat(_) => unreachable!(),
+                };
+                let (oh, ow) = pool_out_hw(h, w, *size, *stride);
+                (self.pool_seconds(c, oh, ow, *size), 0.0, 0.0)
+            }
+            LayerSpec::Connected { output, .. } => {
+                (self.fc_seconds(in_shape.len(), *output), 0.0, 0.0)
+            }
+            LayerSpec::BatchNorm => (self.bn_seconds(in_shape.len()), 0.0, 0.0),
+            LayerSpec::Dropout { .. } => (0.0, 0.0, 0.0),
+            LayerSpec::Softmax => (self.softmax_seconds(in_shape.len()), 0.0, 0.0),
+        }
+    }
+
+    /// Total single-threaded CPU-only time per frame (the original-Darknet
+    /// baseline of Fig 9 / Table 3).
+    pub fn frame_seconds_cpu_only(&self, net: &NetConfig, shapes: &[Shape]) -> f64 {
+        let mut total = self.normalize_seconds(net.channels * net.height * net.width);
+        let mut cur = Shape::Chw(net.channels, net.height, net.width);
+        for (idx, layer) in net.layers.iter().enumerate() {
+            let (pre, gemm, post) = self.layer_segments(layer, cur);
+            total += pre + gemm + post;
+            cur = shapes[idx];
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo;
+    use crate::nn::network::infer_shapes;
+
+    #[test]
+    fn mnist_baseline_near_paper_operating_point() {
+        let cfg = zoo::load("mnist").unwrap();
+        let shapes = infer_shapes(&cfg).unwrap();
+        let m = CpuModel::a9(667.0);
+        let t = m.frame_seconds_cpu_only(&cfg, &shapes);
+        // Paper Table 3: ≈80 ms/frame (112.9 mJ at ≈1.4 W).
+        assert!((0.06..0.11).contains(&t), "mnist cpu frame {t}s");
+    }
+
+    #[test]
+    fn zoo_baselines_ordered_by_workload() {
+        let m = CpuModel::a9(667.0);
+        let t = |name: &str| {
+            let cfg = zoo::load(name).unwrap();
+            let shapes = infer_shapes(&cfg).unwrap();
+            m.frame_seconds_cpu_only(&cfg, &shapes)
+        };
+        // alex+ is the heaviest, mpcnn the lightest (paper Table 3 energy).
+        assert!(t("cifar_alex_plus") > t("cifar_full"));
+        assert!(t("cifar_full") > t("mpcnn"));
+        assert!(t("mnist") > t("mpcnn"));
+    }
+
+    #[test]
+    fn conv_segments_dominated_by_gemm() {
+        let cfg = zoo::load("mnist").unwrap();
+        let m = CpuModel::a9(667.0);
+        let (pre, gemm, post) = m.layer_segments(
+            &cfg.layers[2],
+            Shape::Chw(32, 14, 14),
+        );
+        assert!(gemm > pre && gemm > post, "{pre} {gemm} {post}");
+    }
+
+    #[test]
+    fn dropout_free() {
+        let m = CpuModel::a9(667.0);
+        let (a, b, c) = m.layer_segments(
+            &LayerSpec::Dropout { probability: 0.5 },
+            Shape::Flat(100),
+        );
+        assert_eq!((a, b, c), (0.0, 0.0, 0.0));
+    }
+}

@@ -1,0 +1,16 @@
+//! Virtual-clock full-system simulation.
+//!
+//! The paper's evaluation ran on a physical ZC702 with an FPGA timer; this
+//! module is that testbed's stand-in: a discrete-event simulation of the
+//! complete Synergy system — layer pipeline (mailbox-connected stages on 2
+//! ARM cores), accelerator clusters with job queues, the work-stealing
+//! thief, the MMU/DDR memory subsystem, and the board power model.  Every
+//! figure/table of §4 is regenerated from [`system::simulate`] runs.
+
+pub mod cpu_model;
+pub mod power;
+pub mod system;
+
+pub use cpu_model::CpuModel;
+pub use power::{EnergyBreakdown, PowerModel};
+pub use system::{simulate, SimResult, SimSpec};

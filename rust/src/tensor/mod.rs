@@ -1,0 +1,174 @@
+//! Minimal dense f32 tensor — the data currency between layers.
+//!
+//! The coordinator only ever needs row-major f32 with up-to-4-D shapes
+//! (feature maps are (C,H,W), GEMM operands are (rows, cols)), so this stays
+//! deliberately small instead of growing a full ndarray.
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} != data len {}",
+            shape,
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self::from_vec(&[1], vec![v])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshaped(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D element access (row-major).
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c] = v;
+    }
+
+    /// 3-D element access for (C,H,W) feature maps.
+    #[inline]
+    pub fn at3(&self, c: usize, y: usize, x: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 3);
+        let (h, w) = (self.shape[1], self.shape[2]);
+        self.data[(c * h + y) * w + x]
+    }
+
+    #[inline]
+    pub fn set3(&mut self, c: usize, y: usize, x: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 3);
+        let (h, w) = (self.shape[1], self.shape[2]);
+        self.data[(c * h + y) * w + x] = v;
+    }
+
+    /// Max |a-b| across elements (for allclose-style assertions).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative allclose check mirroring numpy's semantics.
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let mut t = Tensor::zeros(&[2, 3]);
+        t.set2(1, 2, 5.0);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.at2(0, 0), 0.0);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    fn chw_indexing() {
+        let mut t = Tensor::zeros(&[2, 3, 4]);
+        t.set3(1, 2, 3, 7.0);
+        assert_eq!(t.at3(1, 2, 3), 7.0);
+        // row-major: offset = ((1*3)+2)*4+3 = 23
+        assert_eq!(t.data()[23], 7.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.clone().reshaped(&[3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.data(), t.data());
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 100.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0001, 100.001]);
+        assert!(a.allclose(&b, 1e-3, 1e-3));
+        assert!(!a.allclose(&b, 1e-7, 1e-7));
+        let c = Tensor::zeros(&[3]);
+        assert!(!a.allclose(&c, 1.0, 1.0)); // shape mismatch
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![1.0, 2.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Tiny CLI argument parser (no clap in the offline registry).
+//!
+//! Supports `prog <subcommand> [--key value] [--flag] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]).  `flag_names` lists options that
+    /// take no value; everything else starting with `--` consumes one.
+    pub fn parse(raw: &[String], flag_names: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| format!("option --{name} needs a value"))?;
+                    out.options.insert(name.to_string(), val.clone());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| format!("--{key} expects an integer: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| format!("--{key} expects a number: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = Args::parse(
+            &raw(&["run", "--model", "mnist", "--verbose", "extra1", "extra2"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("model"), Some("mnist"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = Args::parse(&raw(&["bench", "--frames=50"]), &[]).unwrap();
+        assert_eq!(a.get_usize("frames", 0).unwrap(), 50);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&raw(&["run", "--model"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&raw(&["x"]), &[]).unwrap();
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 9).unwrap(), 9);
+        assert_eq!(a.get_f64("f", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn bad_numbers() {
+        let a = Args::parse(&raw(&["x", "--n", "abc"]), &[]).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+        assert!(a.get_f64("n", 0.0).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! Micro-benchmark harness (no criterion in the offline registry).
+//!
+//! Used by the `rust/benches/*.rs` binaries (`harness = false`): warmup,
+//! timed iterations, outlier-robust statistics, and markdown table output
+//! shared by every paper-figure bench.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Throughput in ops/sec for `ops` work-items per iteration.
+    pub fn throughput(&self, ops: f64) -> f64 {
+        ops / (self.mean_ns / 1e9)
+    }
+}
+
+/// Runs closures with warmup + timed iterations.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    pub min_duration: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 3,
+            iters: 10,
+            min_duration: Duration::from_millis(200),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            iters: 5,
+            min_duration: Duration::from_millis(50),
+        }
+    }
+
+    /// Benchmark `f`, auto-scaling inner repetitions so each timed sample
+    /// lasts long enough to be meaningful.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Calibrate inner reps.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let reps = (self.min_duration.as_nanos() / self.iters as u128 / once.as_nanos())
+            .clamp(1, 1_000_000) as usize;
+
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            for _ in 0..reps {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / reps as f64);
+        }
+        let mean = stats::mean(&samples);
+        let med = stats::percentile(&samples, 50.0);
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / samples.len().max(1) as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: self.iters * reps,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            median_ns: med,
+            min_ns: min,
+        }
+    }
+}
+
+/// Markdown table builder for bench / experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let body: Vec<String> = cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect();
+            format!("| {} |\n", body.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&sep, &widths));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float with sensible precision for table cells.
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 10.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns * 2.0);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "fps"]);
+        t.row(vec!["mnist".into(), "96.2".into()]);
+        t.row(vec!["cifar_full".into(), "63.5".into()]);
+        let s = t.render();
+        assert!(s.contains("| model      | fps  |"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_precision() {
+        assert_eq!(fmt(0.0), "0");
+        assert_eq!(fmt(1234.6), "1235");
+        assert_eq!(fmt(42.25), "42.2");
+        assert_eq!(fmt(3.14159), "3.14");
+    }
+}

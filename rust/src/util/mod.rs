@@ -1,0 +1,10 @@
+//! Small self-contained substrates the offline build cannot pull from
+//! crates.io: deterministic PRNG, JSON, CLI parsing, statistics, and a
+//! micro-benchmark harness.
+
+pub mod argparse;
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

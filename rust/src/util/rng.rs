@@ -1,0 +1,142 @@
+//! xorshift64* PRNG with FNV-1a seed derivation.
+//!
+//! This is the **cross-language parameter contract**: `python/compile/prng.py`
+//! implements the identical generator so the Rust coordinator and the AOT
+//! model artifacts materialize bit-identical f32 weights.  The known-answer
+//! vectors pinned in the tests here are also pinned in
+//! `python/tests/test_aot.py::test_prng_known_vector`.
+
+const XS_MULT: u64 = 0x2545_F491_4F6C_DD1D;
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+/// Substituted for an all-zeros seed (xorshift state must be non-zero).
+const ZERO_SEED_FOLD: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// FNV-1a 64-bit hash of a UTF-8 string (used for per-tensor seeds).
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// xorshift64* generator.
+#[derive(Debug, Clone)]
+pub struct XorShift64Star {
+    state: u64,
+}
+
+impl XorShift64Star {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { ZERO_SEED_FOLD } else { seed },
+        }
+    }
+
+    /// Seed from a string via FNV-1a (the canonical per-tensor scheme).
+    pub fn from_key(key: &str) -> Self {
+        Self::new(fnv1a64(key))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(XS_MULT)
+    }
+
+    /// Uniform in [-0.5, 0.5); exact in f64 (24 mantissa bits used).
+    pub fn next_unit(&mut self) -> f64 {
+        (self.next_u64() >> 40) as f64 / (1u64 << 24) as f64 - 0.5
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        self.next_unit() + 0.5
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// f32 tensor fill matching `python/compile/prng.py::fill`:
+    /// value = f32(next_unit() * scale), row-major.
+    pub fn fill_f32(&mut self, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (self.next_unit() * scale) as f32).collect()
+    }
+}
+
+/// Canonical per-tensor seed key (`model/layer/kind`), mirroring
+/// `prng.tensor_seed` on the Python side.
+pub fn tensor_key(model: &str, layer: usize, kind: &str) -> String {
+    format!("{model}/{layer}/{kind}")
+}
+
+/// Deterministic tensor fill by key: `fill(model, layer, kind, n, scale)`.
+pub fn fill_tensor(model: &str, layer: usize, kind: &str, n: usize, scale: f64) -> Vec<f32> {
+    XorShift64Star::from_key(&tensor_key(model, layer, kind)).fill_f32(n, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answer_vector_matches_python() {
+        // Pinned in python/tests/test_aot.py::test_prng_known_vector.
+        let mut r = XorShift64Star::new(1);
+        assert_eq!(r.next_u64(), 0x47E4_CE4B_896C_DD1D);
+        assert_eq!(r.next_u64(), 0xABCF_A6A8_E079_651D);
+    }
+
+    #[test]
+    fn zero_seed_folds() {
+        let mut a = XorShift64Star::new(0);
+        let mut b = XorShift64Star::new(ZERO_SEED_FOLD);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn unit_range() {
+        let mut r = XorShift64Star::new(42);
+        for _ in 0..10_000 {
+            let u = r.next_unit();
+            assert!((-0.5..0.5).contains(&u), "{u}");
+        }
+    }
+
+    #[test]
+    fn fnv_known_values() {
+        // FNV-1a 64 reference: fnv1a64("") = offset basis.
+        assert_eq!(fnv1a64(""), 0xCBF2_9CE4_8422_2325);
+        // "a" = 0xaf63dc4c8601ec8c (published FNV-1a test vector)
+        assert_eq!(fnv1a64("a"), 0xAF63_DC4C_8601_EC8C);
+        assert_ne!(fnv1a64("mnist/0/weights"), fnv1a64("mnist/0/bias"));
+    }
+
+    #[test]
+    fn fill_deterministic_and_scaled() {
+        let a = fill_tensor("m", 0, "weights", 12, 2.0);
+        let b = fill_tensor("m", 0, "weights", 12, 2.0);
+        assert_eq!(a, b);
+        let c = fill_tensor("m", 0, "weights", 12, 1.0);
+        for (x, y) in a.iter().zip(&c) {
+            assert!((x - 2.0 * y).abs() < 1e-6);
+            assert!(y.abs() <= 0.5);
+        }
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut r = XorShift64Star::new(7);
+        for _ in 0..1000 {
+            assert!(r.next_below(13) < 13);
+        }
+    }
+}

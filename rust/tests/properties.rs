@@ -1,0 +1,220 @@
+//! Property-based tests (mini-proptest harness) on the coordinator's core
+//! invariants: tiling covers the iteration space exactly, jobs execute
+//! exactly once, stealing neither duplicates nor drops, queues preserve
+//! per-producer FIFO order, and the simulator conserves work.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use synergy::cluster::JobQueue;
+use synergy::config::zoo;
+use synergy::mm::gemm::gemm_naive;
+use synergy::mm::job::{gather_results, jobs_for_gemm};
+use synergy::mm::tile::{tiled_gemm, TileGrid};
+use synergy::nn::Network;
+use synergy::sched::worksteal::{choose_victim, steal_amount};
+use synergy::sim::{simulate, SimSpec};
+use synergy::tensor::Tensor;
+use synergy::util::proptest::{check, Gen};
+
+#[test]
+fn prop_tiling_covers_iteration_space_exactly_once() {
+    check("tiling-coverage", 40, |g: &mut Gen| {
+        let m = g.usize_in(1, 90);
+        let n = g.usize_in(1, 90);
+        let p = g.usize_in(1, 90);
+        let ts = *g.choose(&[8usize, 16, 32]);
+        let grid = TileGrid::new(m, n, p, ts);
+        // every output element covered by exactly one job tile
+        let mut covered = vec![0u8; m * p];
+        for (t1, t2) in grid.tiles() {
+            for r in (t1 * ts)..((t1 + 1) * ts).min(m) {
+                for c in (t2 * ts)..((t2 + 1) * ts).min(p) {
+                    covered[r * p + c] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "m={m} n={n} p={p} ts={ts}");
+    });
+}
+
+#[test]
+fn prop_tiled_gemm_equals_naive_any_shape() {
+    check("tiled-gemm-correct", 25, |g: &mut Gen| {
+        let m = g.usize_in(1, 70);
+        let n = g.usize_in(1, 70);
+        let p = g.usize_in(1, 70);
+        let a = Tensor::from_vec(&[m, n], g.vec_f32(m * n));
+        let b = Tensor::from_vec(&[n, p], g.vec_f32(n * p));
+        let want = gemm_naive(&a, &b);
+        let got = tiled_gemm(&a, &b, 32);
+        assert!(
+            want.allclose(&got, 1e-3, 1e-3),
+            "({m},{n},{p}): {}",
+            want.max_abs_diff(&got)
+        );
+    });
+}
+
+#[test]
+fn prop_jobs_reassemble_gemm() {
+    check("jobs-reassemble", 20, |g: &mut Gen| {
+        let m = g.usize_in(1, 64);
+        let n = g.usize_in(1, 64);
+        let p = g.usize_in(1, 64);
+        let grid = TileGrid::new(m, n, p, 32);
+        let av = g.vec_f32(m * n);
+        let bv = g.vec_f32(n * p);
+        let mut id = 0;
+        let jobs = jobs_for_gemm(0, 0, grid, Arc::new(av.clone()), Arc::new(bv.clone()), &mut id);
+        // execute in a random order (scheduling must not matter)
+        let mut order: Vec<usize> = (0..jobs.len()).collect();
+        for i in (1..order.len()).rev() {
+            let j = g.usize_in(0, i);
+            order.swap(i, j);
+        }
+        let results: Vec<_> = order.iter().map(|&i| jobs[i].execute_native()).collect();
+        let c = gather_results(grid, &results);
+        let want = gemm_naive(
+            &Tensor::from_vec(&[m, n], av),
+            &Tensor::from_vec(&[n, p], bv),
+        );
+        let got = Tensor::from_vec(&[m, p], c);
+        assert!(want.allclose(&got, 1e-3, 1e-3));
+    });
+}
+
+#[test]
+fn prop_steal_conserves_jobs() {
+    check("steal-conserves", 30, |g: &mut Gen| {
+        let n_queues = g.usize_in(2, 4);
+        let queues: Vec<JobQueue<u64>> = (0..n_queues).map(|_| JobQueue::new()).collect();
+        let mut total = 0u64;
+        for q in &queues {
+            let n = g.usize_in(0, 50);
+            for _ in 0..n {
+                q.push(total);
+                total += 1;
+            }
+        }
+        // random steal storm
+        for _ in 0..g.usize_in(1, 20) {
+            let from = g.usize_in(0, n_queues - 1);
+            let to = g.usize_in(0, n_queues - 1);
+            let stolen = queues[from].steal(steal_amount(queues[from].len()));
+            queues[to].push_batch(stolen);
+        }
+        // drain: every job present exactly once
+        let mut seen = HashSet::new();
+        for q in &queues {
+            q.close();
+            while let Some(v) = q.pop_blocking() {
+                assert!(seen.insert(v), "duplicated job {v}");
+            }
+        }
+        assert_eq!(seen.len() as u64, total, "lost jobs");
+    });
+}
+
+#[test]
+fn prop_choose_victim_never_picks_idle_or_short() {
+    check("victim-valid", 100, |g: &mut Gen| {
+        let n = g.usize_in(1, 6);
+        let lens: Vec<usize> = (0..n).map(|_| g.usize_in(0, 10)).collect();
+        let mut idle = HashSet::new();
+        for i in 0..n {
+            if g.bool() {
+                idle.insert(i);
+            }
+        }
+        let min_len = g.usize_in(1, 3);
+        if let Some(v) = choose_victim(&lens, &idle, min_len) {
+            assert!(!idle.contains(&v));
+            assert!(lens[v] >= min_len);
+            // it is a maximal candidate
+            for (i, &l) in lens.iter().enumerate() {
+                if !idle.contains(&i) && l >= min_len {
+                    assert!(lens[v] >= l);
+                }
+            }
+        } else {
+            // no valid candidate existed
+            for (i, &l) in lens.iter().enumerate() {
+                assert!(idle.contains(&i) || l < min_len);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_queue_fifo_per_producer() {
+    check("queue-fifo", 20, |g: &mut Gen| {
+        let q: JobQueue<(usize, usize)> = JobQueue::new();
+        let n_producers = g.usize_in(1, 3);
+        let per = g.usize_in(1, 30);
+        // interleave pushes from producers in random order
+        let mut next = vec![0usize; n_producers];
+        while next.iter().any(|&c| c < per) {
+            let p = g.usize_in(0, n_producers - 1);
+            if next[p] < per {
+                q.push((p, next[p]));
+                next[p] += 1;
+            }
+        }
+        q.close();
+        let mut last = vec![None::<usize>; n_producers];
+        while let Some((p, seq)) = q.pop_blocking() {
+            if let Some(prev) = last[p] {
+                assert!(seq > prev, "producer {p} reordered: {prev} then {seq}");
+            }
+            last[p] = Some(seq);
+        }
+    });
+}
+
+#[test]
+fn prop_sim_conserves_jobs_and_is_deterministic() {
+    let nets: Vec<Network> = ["mpcnn", "mnist"]
+        .iter()
+        .map(|n| Network::new(zoo::load(n).unwrap(), 32).unwrap())
+        .collect();
+    check("sim-conserves", 6, |g: &mut Gen| {
+        let net = g.choose(&nets);
+        let frames = g.usize_in(1, 12);
+        let spec = if g.bool() {
+            SimSpec::synergy(net, frames)
+        } else {
+            SimSpec::static_fixed(net, frames)
+        };
+        let r1 = simulate(&spec, net);
+        let expected: usize = net
+            .conv_infos()
+            .iter()
+            .map(|ci| ci.grid.num_jobs())
+            .sum::<usize>()
+            * frames;
+        assert_eq!(r1.jobs_executed, expected as u64, "job conservation");
+        // determinism
+        let r2 = simulate(&spec, net);
+        assert_eq!(r1.makespan_s, r2.makespan_s);
+        assert_eq!(r1.jobs_stolen, r2.jobs_stolen);
+        // utilization is a valid fraction
+        assert!((0.0..=1.0001).contains(&r1.cluster_util));
+    });
+}
+
+#[test]
+fn prop_network_forward_always_distribution() {
+    let nets: Vec<Network> = zoo::ZOO
+        .iter()
+        .map(|n| Network::new(zoo::load(n).unwrap(), 32).unwrap())
+        .collect();
+    check("forward-distribution", 8, |g: &mut Gen| {
+        let net = g.choose(&nets);
+        let frame = g.usize_in(0, 1000) as u64;
+        let y = net.forward_reference(&net.make_input(frame));
+        let sum: f32 = y.data().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "{}: sum {sum}", net.config.name);
+        assert!(y.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    });
+}

@@ -1,0 +1,99 @@
+//! End-to-end integration: the complete threaded Synergy runtime — layer
+//! threads, mailboxes, cluster job queues, delegate threads executing the
+//! AOT **Pallas kernel through PJRT**, work-stealing thief — against both
+//! the Rust reference forward and the AOT full-model oracle.
+//!
+//! This is the proof that all three layers compose: L1 (Pallas kernel
+//! artifact) runs inside L3 (Rust coordinator) and reproduces L2's (JAX
+//! model) numerics on streaming frames.  Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use synergy::config::zoo;
+use synergy::nn::Network;
+use synergy::rt::driver::run_stream;
+use synergy::rt::{ComputeMode, RtOptions};
+use synergy::runtime::{default_artifacts_dir, ModelOracle};
+use synergy::tensor::Tensor;
+
+fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn pjrt_pipeline_matches_reference_and_oracle() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = Arc::new(Network::new(zoo::load("mpcnn").unwrap(), 32).unwrap());
+    let frames: Vec<(u64, Tensor)> = (0..4).map(|f| (f, net.make_input(f))).collect();
+    let report = run_stream(
+        Arc::clone(&net),
+        RtOptions {
+            compute: ComputeMode::Pjrt,
+            ..Default::default()
+        },
+        frames,
+    )
+    .unwrap();
+    assert_eq!(report.outputs.len(), 4);
+
+    // vs Rust reference forward
+    for (frame_id, out) in &report.outputs {
+        let want = net.forward_reference(&net.make_input(*frame_id));
+        assert!(
+            out.allclose(&want, 1e-4, 1e-4),
+            "frame {frame_id} vs reference: {}",
+            out.max_abs_diff(&want)
+        );
+    }
+
+    // vs AOT model oracle through PJRT (frame 0)
+    let oracle = ModelOracle::load(&default_artifacts_dir(), "mpcnn").unwrap();
+    let params: Vec<&[f32]> = net.params.iter().map(|p| p.tensor.data()).collect();
+    let x = net.make_input(0);
+    let oracle_out = oracle.run(x.data(), &params).unwrap();
+    let got = &report.outputs[0].1;
+    let oracle_t = Tensor::from_vec(&[oracle_out.len()], oracle_out);
+    assert!(
+        got.allclose(&oracle_t, 1e-4, 1e-4),
+        "vs oracle: {}",
+        got.max_abs_diff(&oracle_t)
+    );
+}
+
+#[test]
+fn pjrt_pipeline_mnist_stream_with_stealing() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = Arc::new(Network::new(zoo::load("mnist").unwrap(), 32).unwrap());
+    let frames: Vec<(u64, Tensor)> = (0..3).map(|f| (f, net.make_input(f))).collect();
+    let report = run_stream(
+        Arc::clone(&net),
+        RtOptions {
+            compute: ComputeMode::Pjrt,
+            work_stealing: true,
+            ..Default::default()
+        },
+        frames,
+    )
+    .unwrap();
+    for (frame_id, out) in &report.outputs {
+        let want = net.forward_reference(&net.make_input(*frame_id));
+        assert!(
+            out.allclose(&want, 1e-4, 1e-4),
+            "frame {frame_id}: {}",
+            out.max_abs_diff(&want)
+        );
+    }
+    let expected: usize = net
+        .conv_infos()
+        .iter()
+        .map(|ci| ci.grid.num_jobs())
+        .sum::<usize>()
+        * 3;
+    assert_eq!(report.jobs_executed, expected as u64);
+}

@@ -1,0 +1,151 @@
+//! Integration: the PJRT-executed AOT artifacts agree with the native Rust
+//! compute path — the core L1/L2 ↔ L3 numerical contract.
+//!
+//! Requires `make artifacts` (skips cleanly otherwise).
+
+use std::sync::Arc;
+
+use synergy::config::zoo;
+use synergy::mm::tile::{job_mm_native, TileGrid};
+use synergy::nn::Network;
+use synergy::runtime::{default_artifacts_dir, Manifest, ModelOracle, PeEngine};
+use synergy::tensor::Tensor;
+use synergy::util::rng::XorShift64Star;
+
+fn artifacts_or_skip() -> Option<std::path::PathBuf> {
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn job_kernel_matches_native_for_all_k() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let engine = PeEngine::load(&dir, None).unwrap();
+    let ts = engine.tile_size();
+    for k in engine.available_ks() {
+        let mut rng = XorShift64Star::new(1000 + k as u64);
+        let at = rng.fill_f32(k * ts * ts, 2.0);
+        let bt = rng.fill_f32(k * ts * ts, 2.0);
+        let pjrt = engine.execute_job(&at, &bt, k).unwrap();
+        let native = job_mm_native(&at, &bt, k, ts);
+        let a = Tensor::from_vec(&[ts, ts], pjrt);
+        let b = Tensor::from_vec(&[ts, ts], native);
+        assert!(
+            a.allclose(&b, 1e-4, 1e-3),
+            "k={k}: max diff {}",
+            a.max_abs_diff(&b)
+        );
+    }
+}
+
+#[test]
+fn job_kernel_pads_smaller_k() {
+    // Ask for a K that has no exact kernel: engine must pick the next
+    // larger one and zero-pad (paper's border rule applied at K level).
+    let Some(dir) = artifacts_or_skip() else { return };
+    let engine = PeEngine::load(&dir, None).unwrap();
+    let ts = engine.tile_size();
+    let ks = engine.available_ks();
+    // Find a gap K (e.g. 2 when kernels are 1,3,4,...).
+    let k_gap = (1..50).find(|k| !ks.contains(k) && ks.iter().any(|&kk| kk > *k));
+    let Some(k) = k_gap else { return };
+    let mut rng = XorShift64Star::new(7);
+    let at = rng.fill_f32(k * ts * ts, 2.0);
+    let bt = rng.fill_f32(k * ts * ts, 2.0);
+    let pjrt = engine.execute_job(&at, &bt, k).unwrap();
+    let native = job_mm_native(&at, &bt, k, ts);
+    let a = Tensor::from_vec(&[ts, ts], pjrt);
+    let b = Tensor::from_vec(&[ts, ts], native);
+    assert!(a.allclose(&b, 1e-4, 1e-3), "k={k}: {}", a.max_abs_diff(&b));
+}
+
+#[test]
+fn full_gemm_through_pjrt_jobs_matches_blocked_gemm() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let engine = PeEngine::load(&dir, None).unwrap();
+    let ts = engine.tile_size();
+    // CIFAR conv1-shaped GEMM: (32, 75, 1024) — ragged N.
+    let grid = TileGrid::new(32, 75, 256, ts);
+    let mut rng = XorShift64Star::new(42);
+    let a = Arc::new(rng.fill_f32(grid.m * grid.n, 1.0));
+    let b = Arc::new(rng.fill_f32(grid.n * grid.p, 1.0));
+    let mut c = vec![0.0f32; grid.m * grid.p];
+    for (t1, t2) in grid.tiles() {
+        let at = grid.extract_a_tiles(&a, t1);
+        let bt = grid.extract_b_tiles(&b, t2);
+        let tile = engine.execute_job(&at, &bt, grid.k_tiles()).unwrap();
+        grid.scatter_c(&mut c, t1, t2, &tile);
+    }
+    let want = synergy::mm::gemm::gemm_blocked(
+        &Tensor::from_vec(&[grid.m, grid.n], (*a).clone()),
+        &Tensor::from_vec(&[grid.n, grid.p], (*b).clone()),
+    );
+    let got = Tensor::from_vec(&[grid.m, grid.p], c);
+    assert!(want.allclose(&got, 1e-4, 1e-3), "{}", want.max_abs_diff(&got));
+}
+
+#[test]
+fn model_oracle_matches_rust_forward_mpcnn() {
+    model_oracle_case("mpcnn", 1e-4);
+}
+
+#[test]
+fn model_oracle_matches_rust_forward_mnist() {
+    model_oracle_case("mnist", 1e-4);
+}
+
+#[test]
+fn model_oracle_matches_rust_forward_cifar_full_with_batchnorm() {
+    model_oracle_case("cifar_full", 1e-4);
+}
+
+/// The decisive end-to-end check: Rust-initialized weights + Rust forward
+/// vs the AOT JAX model executed through PJRT.  Exercises the identical-
+/// weights contract (util::rng ↔ python prng) and every layer kind.
+fn model_oracle_case(name: &str, tol: f32) {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let oracle = ModelOracle::load(&dir, name).unwrap();
+    let net = Network::new(zoo::load(name).unwrap(), 32).unwrap();
+
+    // Manifest and Rust must agree on the parameter schedule.
+    assert_eq!(oracle.meta.params.len(), net.params.len(), "{name}");
+    for (meta, param) in oracle.meta.params.iter().zip(&net.params) {
+        assert_eq!(meta.layer, param.layer, "{name}");
+        assert_eq!(meta.name, param.name, "{name}");
+        assert_eq!(meta.len(), param.tensor.len(), "{name}");
+    }
+
+    let x = net.make_input(0);
+    let params: Vec<&[f32]> = net.params.iter().map(|p| p.tensor.data()).collect();
+    let pjrt = oracle.run(x.data(), &params).unwrap();
+    let rust = net.forward_reference(&x);
+
+    let a = Tensor::from_vec(&[pjrt.len()], pjrt);
+    assert!(
+        a.allclose(&rust, tol, tol),
+        "{name}: max diff {}",
+        a.max_abs_diff(&rust)
+    );
+}
+
+#[test]
+fn manifest_mops_matches_rust_accounting() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let man = Manifest::load(&dir).unwrap();
+    for meta in &man.models {
+        let net = Network::new(zoo::load(&meta.name).unwrap(), 32).unwrap();
+        let got = net.mops();
+        assert!(
+            (got - meta.mops).abs() < 0.01 * meta.mops.max(1.0),
+            "{}: rust {} vs manifest {}",
+            meta.name,
+            got,
+            meta.mops
+        );
+    }
+}
