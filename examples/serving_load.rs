@@ -1,0 +1,135 @@
+//! Multi-stream serving load test: N open-loop client streams submit
+//! inference requests against ≥2 networks served concurrently by one
+//! Synergy accelerator pool, through the admission → micro-batcher →
+//! pipeline stack.
+//!
+//! ```sh
+//! cargo run --release --example serving_load -- \
+//!     [--models mpcnn,mnist] [--streams 4] [--requests 40] [--rate 400] \
+//!     [--max-batch 4] [--window-us 2000] [--depth 256] [--deadline-ms 0]
+//! ```
+//!
+//! Every response is cross-checked against the reference forward, and the
+//! run asserts zero lost requests under the admission limits.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use synergy::config::zoo;
+use synergy::nn::Network;
+use synergy::serve::{RequestStream, ServeOptions, Server};
+use synergy::util::argparse::Args;
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &["no-steal"]).map_err(anyhow::Error::msg)?;
+    let model_list = args.get_or("models", "mpcnn,mnist");
+    let n_streams = args.get_usize("streams", 4).map_err(anyhow::Error::msg)?;
+    let n_requests = args.get_usize("requests", 40).map_err(anyhow::Error::msg)?;
+    let rate = args.get_f64("rate", 400.0).map_err(anyhow::Error::msg)?;
+    let max_batch = args.get_usize("max-batch", 4).map_err(anyhow::Error::msg)?;
+    let window_us = args.get_usize("window-us", 2000).map_err(anyhow::Error::msg)?;
+    let depth = args.get_usize("depth", 256).map_err(anyhow::Error::msg)?;
+    let deadline_ms = args.get_usize("deadline-ms", 0).map_err(anyhow::Error::msg)?;
+
+    // ≥2 networks served side by side from the model zoo.
+    let names: Vec<&str> = model_list.split(',').map(|s| s.trim()).collect();
+    anyhow::ensure!(names.len() >= 2, "--models needs ≥2 comma-separated zoo names");
+    let mut nets = Vec::new();
+    for name in &names {
+        nets.push(Arc::new(Network::new(zoo::load(name)?, 32)?));
+    }
+
+    let mut options = ServeOptions::default();
+    options.batch.max_batch = max_batch;
+    options.batch.window = Duration::from_micros(window_us as u64);
+    options.admission_depth = depth;
+    options.work_stealing = !args.has_flag("no-steal");
+    println!(
+        "serving {:?} — {} streams × {} req @ {:.0} req/s/stream, \
+         max_batch {} window {}µs depth {}",
+        names, n_streams, n_requests, rate, max_batch, window_us, depth
+    );
+
+    let server = Arc::new(Server::start(nets.clone(), options)?);
+
+    // Open-loop client threads; streams round-robin over the networks.
+    let mut clients = Vec::new();
+    for stream_id in 0..n_streams {
+        let net_id = stream_id % nets.len();
+        let server = Arc::clone(&server);
+        let mut stream = RequestStream::new(
+            stream_id,
+            net_id,
+            Arc::clone(&nets[net_id]),
+            rate,
+            n_requests as u64,
+        );
+        if deadline_ms > 0 {
+            stream = stream.with_deadline(Duration::from_millis(deadline_ms as u64));
+        }
+        clients.push(std::thread::spawn(move || {
+            let mut submitted = 0u64;
+            let mut shed = 0u64;
+            while let Some((gap, req)) = stream.next_arrival() {
+                std::thread::sleep(gap);
+                if server.submit(req) {
+                    submitted += 1;
+                } else {
+                    shed += 1;
+                }
+            }
+            (submitted, shed)
+        }));
+    }
+    let mut admitted = 0u64;
+    let mut client_shed = 0u64;
+    for c in clients {
+        let (s, d) = c.join().expect("client thread");
+        admitted += s;
+        client_shed += d;
+    }
+
+    // Let the pipelines drain, then collect the report.
+    let server = match Arc::try_unwrap(server) {
+        Ok(s) => s,
+        Err(_) => anyhow::bail!("client threads still hold server handles"),
+    };
+    let (stats, responses) = server.shutdown()?;
+
+    // Validate every response against the reference forward.
+    let mut max_err = 0f32;
+    for resp in &responses {
+        let want = nets[resp.net_id].forward_reference(&nets[resp.net_id].make_input(resp.frame));
+        max_err = max_err.max(resp.output.max_abs_diff(&want));
+    }
+    assert!(max_err < 1e-3, "serving diverged from reference: {max_err}");
+
+    println!("\n=== serving report ===");
+    print!("{}", stats.render());
+    println!("max |err|      : {max_err:.2e} vs reference forward");
+    let batched: u64 = responses.iter().filter(|r| r.batch_size > 1).count() as u64;
+    println!(
+        "batched        : {batched}/{} responses rode in a batch > 1",
+        responses.len()
+    );
+
+    // Zero lost requests under admission limits: everything admitted either
+    // completed or was an explicit deadline expiry.
+    assert_eq!(stats.shed, client_shed, "shed accounting mismatch");
+    assert_eq!(
+        stats.completed + stats.expired,
+        admitted,
+        "lost requests: {} admitted, {} completed, {} expired",
+        admitted,
+        stats.completed,
+        stats.expired
+    );
+    if stats.max_batch > 1 {
+        println!("micro-batching observed: max batch {}", stats.max_batch);
+    } else {
+        println!("warning: no batch > 1 formed (rate too low for the window)");
+    }
+    println!("zero lost requests: {admitted} admitted == {} accounted", stats.completed + stats.expired);
+    Ok(())
+}

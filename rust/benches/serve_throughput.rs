@@ -1,0 +1,108 @@
+//! `cargo bench --bench serve_throughput` — sustained multi-stream serving
+//! throughput (admission → micro-batcher → pipelines → shared pool) vs the
+//! single-stream driver baseline, across batch policies.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use synergy::config::zoo;
+use synergy::nn::Network;
+use synergy::rt::{self, RtOptions};
+use synergy::serve::{RequestStream, ServeOptions, Server};
+use synergy::tensor::Tensor;
+use synergy::util::bench::{fmt, Table};
+
+const STREAMS: usize = 4;
+const REQUESTS_PER_STREAM: u64 = 16;
+const RATE_RPS: f64 = 1000.0;
+
+fn serve_run(nets: &[Arc<Network>], max_batch: usize) -> (f64, f64, f64, f64) {
+    let mut options = ServeOptions::default();
+    options.batch.max_batch = max_batch;
+    options.batch.window = Duration::from_micros(1500);
+    options.admission_depth = 1024;
+    let server = Arc::new(Server::start(nets.to_vec(), options).unwrap());
+    let mut clients = Vec::new();
+    for stream_id in 0..STREAMS {
+        let net_id = stream_id % nets.len();
+        let server = Arc::clone(&server);
+        let mut stream = RequestStream::new(
+            stream_id,
+            net_id,
+            Arc::clone(&nets[net_id]),
+            RATE_RPS,
+            REQUESTS_PER_STREAM,
+        );
+        clients.push(std::thread::spawn(move || {
+            while let Some((gap, req)) = stream.next_arrival() {
+                std::thread::sleep(gap);
+                server.submit(req);
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let server = match Arc::try_unwrap(server) {
+        Ok(s) => s,
+        Err(_) => panic!("server still shared"),
+    };
+    let (stats, responses) = server.shutdown().unwrap();
+    assert_eq!(stats.completed as usize, responses.len());
+    assert_eq!(stats.completed, STREAMS as u64 * REQUESTS_PER_STREAM);
+    (
+        stats.throughput_rps,
+        stats.p50_ms,
+        stats.p99_ms,
+        stats.mean_batch,
+    )
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let nets: Vec<Arc<Network>> = ["mpcnn", "mnist"]
+        .iter()
+        .map(|n| Arc::new(Network::new(zoo::load(n).unwrap(), 32).unwrap()))
+        .collect();
+
+    // Baseline: the single-stream driver at the same total frame count.
+    let total = (STREAMS as u64 * REQUESTS_PER_STREAM) / 2;
+    let mut baseline_fps = 0.0;
+    for net in &nets {
+        let frames: Vec<(u64, Tensor)> =
+            (0..total).map(|f| (f, net.make_input(f))).collect();
+        let report =
+            rt::driver::run_stream(Arc::clone(net), RtOptions::default(), frames).unwrap();
+        baseline_fps += report.fps;
+    }
+
+    let mut table = Table::new(&[
+        "configuration",
+        "req/s",
+        "p50 ms",
+        "p99 ms",
+        "mean batch",
+    ]);
+    table.row(vec![
+        "driver 1-stream/net (sum)".into(),
+        fmt(baseline_fps),
+        "-".into(),
+        "-".into(),
+        "1.00".into(),
+    ]);
+    for max_batch in [1, 4, 8] {
+        let (rps, p50, p99, mean_batch) = serve_run(&nets, max_batch);
+        table.row(vec![
+            format!("serve {STREAMS} streams, max_batch {max_batch}"),
+            fmt(rps),
+            fmt(p50),
+            fmt(p99),
+            fmt(mean_batch),
+        ]);
+    }
+    table.print();
+    println!(
+        "[bench] serve_throughput finished in {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -107,6 +107,21 @@ impl<T> JobQueue<T> {
         self.inner.lock().unwrap().deque.pop_front()
     }
 
+    /// Non-blocking pop of up to `n` jobs from the front (the owner side).
+    /// Delegates use this to drain a micro-batch's jobs in one lock
+    /// acquisition and execute them back-to-back.
+    pub fn pop_upto(&self, n: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let take = n.min(g.deque.len());
+        let mut out = Vec::with_capacity(take);
+        for _ in 0..take {
+            if let Some(item) = g.deque.pop_front() {
+                out.push(item);
+            }
+        }
+        out
+    }
+
     /// Steal up to `n` jobs from the back (the victim side).
     pub fn steal(&self, n: usize) -> Vec<T> {
         let mut g = self.inner.lock().unwrap();
@@ -195,6 +210,17 @@ mod tests {
         q.close();
         assert_eq!(q.pop_blocking(), Some(7));
         assert_eq!(q.pop_blocking(), None);
+    }
+
+    #[test]
+    fn pop_upto_takes_front_in_order() {
+        let q = JobQueue::new();
+        for i in 0..5 {
+            q.push(i);
+        }
+        assert_eq!(q.pop_upto(3), vec![0, 1, 2]);
+        assert_eq!(q.pop_upto(9), vec![3, 4]);
+        assert!(q.pop_upto(1).is_empty());
     }
 
     #[test]

@@ -69,6 +69,31 @@ pub struct MemSubCfg {
     pub burst_beats: usize,
 }
 
+/// `[serving]` section: deployment-side knobs for the multi-stream serving
+/// runtime (`serve/`) — how requests are admitted and micro-batched before
+/// they reach the accelerator clusters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeCfg {
+    /// Upper bound on requests coalesced into one batched job (networks may
+    /// lower it per-model via `max_batch` in their `.cfg`).
+    pub max_batch: usize,
+    /// Batching window: a partially-filled batch is dispatched once its
+    /// oldest request has waited this many microseconds.
+    pub batch_window_us: u64,
+    /// Bounded admission-queue depth; requests beyond it are shed.
+    pub admission_depth: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            max_batch: 4,
+            batch_window_us: 2000,
+            admission_depth: 64,
+        }
+    }
+}
+
 /// Full hardware architecture description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HwConfig {
@@ -79,6 +104,7 @@ pub struct HwConfig {
     pub pe_types: Vec<PeTypeCfg>,
     pub clusters: Vec<ClusterCfg>,
     pub memsub: MemSubCfg,
+    pub serving: ServeCfg,
 }
 
 impl HwConfig {
@@ -130,6 +156,12 @@ impl HwConfig {
                 self.memsub.mmus
             );
         }
+        if self.serving.max_batch == 0 {
+            bail!("serving max_batch must be ≥ 1");
+        }
+        if self.serving.admission_depth == 0 {
+            bail!("serving admission_depth must be ≥ 1");
+        }
         Ok(())
     }
 
@@ -149,6 +181,7 @@ impl HwConfig {
             ddr_latency_cycles: 20,
             burst_beats: 64,
         };
+        let mut serving = ServeCfg::default();
 
         #[derive(PartialEq, Clone, Copy)]
         enum Sec {
@@ -157,6 +190,7 @@ impl HwConfig {
             Cluster,
             PeType,
             Memory,
+            Serving,
         }
         let mut sec = Sec::None;
 
@@ -193,6 +227,7 @@ impl HwConfig {
                         Sec::PeType
                     }
                     "memory" => Sec::Memory,
+                    "serving" => Sec::Serving,
                     other => bail!("{name}:{}: unknown section [{other}]", lineno + 1),
                 };
                 continue;
@@ -260,6 +295,12 @@ impl HwConfig {
                     "burst_beats" => memsub.burst_beats = parse_usize()?,
                     other => bail!("{name}:{}: unknown memory key {other}", lineno + 1),
                 },
+                Sec::Serving => match k {
+                    "max_batch" => serving.max_batch = parse_usize()?,
+                    "batch_window_us" => serving.batch_window_us = parse_usize()? as u64,
+                    "admission_depth" => serving.admission_depth = parse_usize()?,
+                    other => bail!("{name}:{}: unknown serving key {other}", lineno + 1),
+                },
                 Sec::None => bail!("{name}:{}: key outside a section", lineno + 1),
             }
         }
@@ -272,6 +313,7 @@ impl HwConfig {
             pe_types,
             clusters,
             memsub,
+            serving,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -348,6 +390,11 @@ tlb_entries = 8
 ddr_bytes_per_cycle = 8
 ddr_latency_cycles = 20
 burst_beats = 64
+
+[serving]
+max_batch = 4
+batch_window_us = 2000
+admission_depth = 64
 ";
 
 #[cfg(test)]
@@ -389,6 +436,40 @@ mod tests {
         let mut hw = HwConfig::default_zc702();
         hw.clusters[0].pes[0].0 = "NOPE".into();
         assert!(hw.validate().is_err());
+    }
+
+    #[test]
+    fn serving_section_parses_and_validates() {
+        let hw = HwConfig::default_zc702();
+        assert_eq!(hw.serving, ServeCfg::default());
+
+        let text = "
+[device]
+tile_size = 32
+[pe_type]
+name = F-PE
+[cluster]
+name = c0
+pe = F-PE:1
+[memory]
+mmus = 1
+[serving]
+max_batch = 8
+batch_window_us = 500
+admission_depth = 128
+";
+        let hw = HwConfig::parse("t", text).unwrap();
+        assert_eq!(hw.serving.max_batch, 8);
+        assert_eq!(hw.serving.batch_window_us, 500);
+        assert_eq!(hw.serving.admission_depth, 128);
+
+        let mut bad = HwConfig::default_zc702();
+        bad.serving.max_batch = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = HwConfig::default_zc702();
+        bad.serving.admission_depth = 0;
+        assert!(bad.validate().is_err());
+        assert!(HwConfig::parse("t", "[serving]\nbogus = 1\n").is_err());
     }
 
     #[test]

@@ -99,6 +99,9 @@ pub struct NetConfig {
     pub height: usize,
     pub width: usize,
     pub channels: usize,
+    /// Per-model cap on serving micro-batch size (`max_batch` in `[net]`);
+    /// None = use the platform-wide `[serving]` limit.
+    pub max_batch: Option<usize>,
     pub layers: Vec<LayerSpec>,
 }
 
@@ -174,6 +177,10 @@ impl NetConfig {
         if height == 0 || width == 0 || channels == 0 {
             bail!("{name}: [net] must define height/width/channels > 0");
         }
+        let max_batch = match geti(first, "max_batch", 0)? {
+            0 => None,
+            n => Some(n),
+        };
 
         let mut layers = Vec::new();
         for sec in &sections[1..] {
@@ -225,6 +232,7 @@ impl NetConfig {
             height,
             width,
             channels,
+            max_batch,
             layers,
         })
     }
@@ -287,6 +295,18 @@ activation=linear
             }
         ));
         assert!(matches!(net.layers[1], LayerSpec::MaxPool { size: 2, stride: 2 }));
+    }
+
+    #[test]
+    fn max_batch_optional() {
+        let net = NetConfig::parse("mini", MINI).unwrap();
+        assert_eq!(net.max_batch, None);
+        let net = NetConfig::parse(
+            "t",
+            "[net]\nheight=4\nwidth=4\nchannels=1\nmax_batch=8\n[softmax]\n",
+        )
+        .unwrap();
+        assert_eq!(net.max_batch, Some(8));
     }
 
     #[test]

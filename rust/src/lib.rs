@@ -12,6 +12,13 @@
 //! See `DESIGN.md` for the full system inventory and the per-experiment
 //! index mapping every paper table/figure to a bench target.
 
+// Deliberate API shapes: queue timeouts signal with a unit error (the
+// caller's only recourse is "try stealing"), and the numeric kernels use
+// index loops that mirror the paper's pseudocode.
+#![allow(clippy::result_unit_err)]
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::too_many_arguments)]
+
 pub mod accel;
 pub mod cluster;
 pub mod config;
@@ -23,6 +30,7 @@ pub mod nn;
 pub mod pipeline;
 pub mod rt;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sched;
 pub mod tensor;

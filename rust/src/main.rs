@@ -114,6 +114,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         work_stealing: !args.has_flag("no-steal"),
         mailbox_capacity: 1,
     };
+    if options.compute == ComputeMode::Pjrt && !synergy::runtime::PJRT_COMPILED {
+        eprintln!("note: built without the `pjrt` feature — PE delegates fall back to native GEMM");
+    }
     println!(
         "running {} frames of {} ({} compute, stealing {})",
         frames_n,

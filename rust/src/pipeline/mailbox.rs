@@ -32,6 +32,13 @@ impl<T> Mailbox<T> {
     }
 
     /// Blocking send.  Returns false (message dropped) if closed.
+    ///
+    /// Wake-ups use `notify_all`: with multiple producers/consumers parked
+    /// on the same condvar, `notify_one` can hand the token to a thread
+    /// whose predicate is already stale (e.g. a second consumer that loses
+    /// the race for the new item), and the intended waiter sleeps forever —
+    /// the classic MPMC lost-wakeup.  Spurious wake-ups are cheap; a hung
+    /// pipeline stage is not.
     pub fn send(&self, item: T) -> bool {
         let mut g = self.inner.lock().unwrap();
         loop {
@@ -41,11 +48,25 @@ impl<T> Mailbox<T> {
             if g.buf.len() < self.capacity {
                 g.buf.push_back(item);
                 drop(g);
-                self.not_empty.notify_one();
+                self.not_empty.notify_all();
                 return true;
             }
             g = self.not_full.wait(g).unwrap();
         }
+    }
+
+    /// Non-blocking send: `Err(item)` back to the caller when full or
+    /// closed (the serving batcher hands batches to busy pipelines
+    /// through this path instead of stalling on one of them).
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.buf.len() >= self.capacity {
+            return Err(item);
+        }
+        g.buf.push_back(item);
+        drop(g);
+        self.not_empty.notify_all();
+        Ok(())
     }
 
     /// Blocking receive; None once closed and drained.
@@ -54,7 +75,7 @@ impl<T> Mailbox<T> {
         loop {
             if let Some(item) = g.buf.pop_front() {
                 drop(g);
-                self.not_full.notify_one();
+                self.not_full.notify_all();
                 return Some(item);
             }
             if g.closed {
@@ -68,7 +89,7 @@ impl<T> Mailbox<T> {
         let mut g = self.inner.lock().unwrap();
         let item = g.buf.pop_front();
         if item.is_some() {
-            self.not_full.notify_one();
+            self.not_full.notify_all();
         }
         item
     }
@@ -172,5 +193,18 @@ mod tests {
         assert_eq!(mb.try_recv(), None);
         mb.send(5);
         assert_eq!(mb.try_recv(), Some(5));
+    }
+
+    #[test]
+    fn try_send_rejects_when_full_or_closed() {
+        let mb: Mailbox<u32> = Mailbox::new(1);
+        assert!(mb.try_send(1).is_ok());
+        assert_eq!(mb.try_send(2), Err(2));
+        assert_eq!(mb.recv(), Some(1));
+        assert!(mb.try_send(3).is_ok());
+        mb.close();
+        assert_eq!(mb.try_send(4), Err(4));
+        assert_eq!(mb.recv(), Some(3));
+        assert_eq!(mb.recv(), None);
     }
 }

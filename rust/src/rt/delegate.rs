@@ -47,6 +47,11 @@ pub struct DelegateStats {
 /// engine is `Rc`-backed (not `Send`), and hardware-wise each PE is its own
 /// physical kernel instance anyway.
 ///
+/// `drain_extra` is the number of additional jobs the delegate may grab in
+/// one queue visit once it holds a job (0 = strict one-at-a-time, the
+/// single-stream driver's sharing-friendly behavior; the batched serving
+/// runtime raises it to amortize queue locks over micro-batch job runs).
+///
 /// The thread exits when the queue is closed and drained.  On queue
 /// timeout it reports `ClusterIdle` to the thief (work-stealing trigger).
 pub fn spawn(
@@ -56,12 +61,13 @@ pub fn spawn(
     mk_backend: impl FnOnce() -> Result<Backend> + Send + 'static,
     thief: Option<Sender<ThiefMsg>>,
     stats: Arc<DelegateStats>,
+    drain_extra: usize,
 ) -> JoinHandle<Result<()>> {
     std::thread::Builder::new()
         .name(name)
         .spawn(move || {
             let backend = mk_backend()?;
-            delegate_loop(cluster, queue, backend, thief, stats)
+            delegate_loop(cluster, queue, backend, thief, stats, drain_extra)
         })
         .expect("spawn delegate thread")
 }
@@ -72,6 +78,7 @@ fn delegate_loop(
     backend: Backend,
     thief: Option<Sender<ThiefMsg>>,
     stats: Arc<DelegateStats>,
+    drain_extra: usize,
 ) -> Result<()> {
     loop {
         let rt_job = match queue.pop_timeout(Duration::from_micros(500)) {
@@ -91,13 +98,31 @@ fn delegate_loop(
                 }
             }
         };
-        let result = execute(&backend, &rt_job.job)?;
-        stats.jobs.fetch_add(1, Ordering::Relaxed);
-        stats
-            .ksteps
-            .fetch_add(rt_job.job.desc.k_tiles() as u64, Ordering::Relaxed);
-        // Receiver may have gone away on shutdown; that's fine.
-        let _ = rt_job.reply.send(result);
+        let mut run = vec![rt_job];
+        if drain_extra > 0 {
+            run.extend(queue.pop_upto(drain_extra));
+        }
+        for i in 0..run.len() {
+            match execute(&backend, &run[i].job) {
+                Ok(result) => {
+                    stats.jobs.fetch_add(1, Ordering::Relaxed);
+                    stats
+                        .ksteps
+                        .fetch_add(run[i].job.desc.k_tiles() as u64, Ordering::Relaxed);
+                    // Receiver may have gone away on shutdown; that's fine.
+                    let _ = run[i].reply.send(result);
+                }
+                Err(e) => {
+                    // Drop the never-attempted jobs: their reply senders
+                    // close, so waiting layer threads fail fast instead of
+                    // blocking on jobs nobody may ever service (this could
+                    // be the cluster's only delegate).  An execute error
+                    // is fatal to the run either way.
+                    drop(run.drain(i + 1..));
+                    return Err(e);
+                }
+            }
+        }
     }
 }
 
@@ -135,6 +160,7 @@ mod tests {
             || Ok(Backend::Native),
             None,
             Arc::clone(&stats),
+            2,
         );
 
         let grid = TileGrid::new(40, 50, 60, 32);
@@ -176,6 +202,7 @@ mod tests {
             || Ok(Backend::Native),
             Some(ttx),
             Arc::clone(&stats),
+            0,
         );
         // No jobs: the delegate must report idleness at least once.
         let msg = trx.recv_timeout(Duration::from_secs(2)).unwrap();

@@ -2,35 +2,20 @@
 //! queues, delegate threads, and the thief into the complete pipelined
 //! system of paper Fig 2, then pushes a frame stream through it.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-use crate::accel::{build_clusters, AccelSpec, ClusterSpec};
-use crate::cluster::JobQueue;
+use crate::accel::AccelSpec;
 use crate::config::HwConfig;
-use crate::mm::job::{gather_results, jobs_for_gemm, JobResult};
 use crate::nn::Network;
 use crate::pipeline::Mailbox;
-use crate::runtime::{default_artifacts_dir, PeEngine};
-use crate::sched::worksteal::{Thief, ThiefMsg};
 use crate::sched::{static_map, Mapping};
 use crate::tensor::Tensor;
 
-use super::delegate::{self, Backend, DelegateStats, RtJob};
-
-/// How delegates compute jobs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ComputeMode {
-    /// FPGA PEs execute the AOT Pallas kernel through PJRT; NEONs native.
-    /// (The production configuration — requires `make artifacts`.)
-    Pjrt,
-    /// Everything native (no artifacts needed; CI-friendly).
-    Native,
-}
+use super::pool::{DelegatePool, GemmCtx, PoolOptions};
+use super::ComputeMode;
 
 /// Runtime configuration.
 #[derive(Clone)]
@@ -70,81 +55,31 @@ pub struct RtReport {
 /// The assembled runtime (exists for the duration of one stream).
 pub struct RtRuntime {
     net: Arc<Network>,
-    clusters: Vec<ClusterSpec>,
+    pool: DelegatePool,
     assignment: Vec<usize>,
-    queues: Vec<Arc<JobQueue<RtJob>>>,
-    delegate_stats: Vec<Arc<DelegateStats>>,
-    delegate_handles: Vec<std::thread::JoinHandle<Result<()>>>,
-    thief: Option<Thief<RtJob>>,
     options: RtOptions,
-    job_counter: Arc<AtomicU64>,
 }
 
 impl RtRuntime {
     /// Build clusters, spawn delegate threads (and the thief).
     pub fn start(net: Arc<Network>, options: RtOptions) -> Result<RtRuntime> {
-        let clusters = build_clusters(&options.hw);
-        let queues: Vec<Arc<JobQueue<RtJob>>> = clusters
-            .iter()
-            .map(|_| Arc::new(JobQueue::new()))
-            .collect();
-        let thief = if options.work_stealing {
-            Some(Thief::spawn(queues.clone()))
-        } else {
-            None
-        };
-        let thief_tx = thief.as_ref().map(|t| t.sender());
-
-        // Only the K values this network needs (plus exact-match checks
-        // happen inside the engine via next-larger padding).
-        let artifacts = default_artifacts_dir();
-        let mut delegate_stats = Vec::new();
-        let mut delegate_handles = Vec::new();
-        for cluster in &clusters {
-            for member in &cluster.members {
-                let stats = Arc::new(DelegateStats::default());
-                delegate_stats.push(Arc::clone(&stats));
-                let queue = Arc::clone(&queues[cluster.index]);
-                let mode = options.compute;
-                let is_fpga = member.is_fpga();
-                let art = artifacts.clone();
-                let mk = move || -> Result<Backend> {
-                    if is_fpga && mode == ComputeMode::Pjrt {
-                        let engine = PeEngine::load(&art, None)
-                            .context("loading PE engine (run `make artifacts`)")?;
-                        Ok(Backend::Pjrt(Box::new(engine)))
-                    } else {
-                        Ok(Backend::Native)
-                    }
-                };
-                delegate_handles.push(delegate::spawn(
-                    format!("delegate-{}", member.name),
-                    cluster.index,
-                    queue,
-                    mk,
-                    thief_tx.clone(),
-                    stats,
-                ));
-            }
-        }
-
-        let assignment = static_map::assign(&net.conv_infos(), &clusters);
+        let pool = DelegatePool::start(&PoolOptions::new(
+            options.hw.clone(),
+            options.compute,
+            options.work_stealing,
+        ))?;
+        let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
         Ok(RtRuntime {
             net,
-            clusters,
+            pool,
             assignment,
-            queues,
-            delegate_stats,
-            delegate_handles,
-            thief,
             options,
-            job_counter: Arc::new(AtomicU64::new(0)),
         })
     }
 
     /// Accelerator specs (for reporting).
     pub fn accels(&self) -> Vec<AccelSpec> {
-        crate::accel::all_accels(&self.clusters)
+        self.pool.accels()
     }
 
     /// The mapping in force.
@@ -166,16 +101,13 @@ impl RtRuntime {
             .map(|_| Arc::new(Mailbox::new(self.options.mailbox_capacity)))
             .collect();
 
-        let thief_tx = self.thief.as_ref().map(|t| t.sender());
         let mut layer_handles = Vec::new();
         for layer_idx in 0..n_layers {
             let inbox = Arc::clone(&mailboxes[layer_idx]);
             let outbox = Arc::clone(&mailboxes[layer_idx + 1]);
             let net = Arc::clone(&self.net);
-            let queues = self.queues.clone();
+            let dispatcher = self.pool.dispatcher();
             let assignment = self.assignment.clone();
-            let job_counter = Arc::clone(&self.job_counter);
-            let thief_tx = thief_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("layer-{layer_idx}"))
                 .spawn(move || {
@@ -192,31 +124,12 @@ impl RtRuntime {
                                     .iter()
                                     .position(|ci| ci.layer_idx == l_idx)
                                     .expect("conv ordinal");
-                                let cluster = assignment[conv_ord];
-                                let mut next_id =
-                                    job_counter.fetch_add(grid.num_jobs() as u64, Ordering::Relaxed);
-                                let jobs = jobs_for_gemm(l_idx, frame_id, grid, a, b, &mut next_id);
-                                let n = jobs.len();
-                                let (tx, rx) = mpsc::channel::<JobResult>();
-                                // Batch-push: one lock + one notify_all per
-                                // layer instead of per job (§Perf iter 3).
-                                let batch: Vec<RtJob> = jobs
-                                    .into_iter()
-                                    .map(|job| RtJob {
-                                        job,
-                                        reply: tx.clone(),
-                                    })
-                                    .collect();
-                                queues[cluster].push_batch(batch);
-                                if let Some(t) = &thief_tx {
-                                    let _ = t.send(ThiefMsg::ClusterBusy(cluster));
-                                }
-                                drop(tx);
-                                let mut results = Vec::with_capacity(n);
-                                for _ in 0..n {
-                                    results.push(rx.recv().expect("job result"));
-                                }
-                                gather_results(grid, &results)
+                                let ctx = GemmCtx {
+                                    cluster: assignment[conv_ord],
+                                    layer_idx: l_idx,
+                                    frame_id,
+                                };
+                                dispatcher.execute_gemm(ctx, grid, a, b)
                             },
                         );
                         if !outbox.send((frame_id, out)) {
@@ -254,36 +167,16 @@ impl RtRuntime {
         }
 
         // Tear down delegates + thief.
-        for q in &self.queues {
-            q.close();
-        }
-        let mut jobs_executed = 0;
-        let mut per_accel_jobs = Vec::new();
-        for stats in &self.delegate_stats {
-            let j = stats.jobs.load(Ordering::Relaxed);
-            per_accel_jobs.push(j);
-            jobs_executed += j;
-        }
-        for h in self.delegate_handles {
-            h.join().expect("delegate thread")?;
-        }
-        let (steal_attempts, _steal_successes, jobs_stolen) = self
-            .thief
-            .as_ref()
-            .map(|t| t.stats.snapshot())
-            .unwrap_or((0, 0, 0));
-        if let Some(t) = self.thief {
-            t.shutdown();
-        }
+        let pool_report = self.pool.shutdown()?;
 
         Ok(RtReport {
             outputs,
             wall_seconds: wall,
             fps: n_frames as f64 / wall.max(1e-12),
-            jobs_executed,
-            jobs_stolen,
-            steal_attempts,
-            per_accel_jobs,
+            jobs_executed: pool_report.jobs_executed,
+            jobs_stolen: pool_report.jobs_stolen,
+            steal_attempts: pool_report.steal_attempts,
+            per_accel_jobs: pool_report.per_accel_jobs,
         })
     }
 }

@@ -14,11 +14,31 @@
 //! * the **thief thread** (`sched::worksteal`) rebalances queues when a
 //!   cluster goes idle.
 //!
+//! The queues + delegates + thief substrate lives in [`pool`] so both the
+//! single-stream driver here and the multi-stream serving runtime
+//! (`crate::serve`) share one implementation.
+//!
 //! Wall-clock numbers from this runtime measure the *coordinator* (L3)
 //! overheads — queueing, stealing, mailbox hops, PJRT dispatch — on the
 //! host CPU; ZC702-shaped timing comes from `sim/`.
+//!
+//! [`Mailbox`]: crate::pipeline::Mailbox
+//! [`JobQueue`]: crate::cluster::JobQueue
 
 pub mod delegate;
 pub mod driver;
+pub mod pool;
 
-pub use driver::{RtOptions, RtReport, RtRuntime, ComputeMode};
+pub use driver::{RtOptions, RtReport, RtRuntime};
+pub use pool::{DelegatePool, Dispatcher, GemmCtx, PoolOptions, PoolReport};
+
+/// How delegates compute jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeMode {
+    /// FPGA PEs execute the AOT Pallas kernel through PJRT; NEONs native.
+    /// (The production configuration — requires `make artifacts` and the
+    /// `pjrt` cargo feature; without the feature PEs fall back to native.)
+    Pjrt,
+    /// Everything native (no artifacts needed; CI-friendly).
+    Native,
+}

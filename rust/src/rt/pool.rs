@@ -1,0 +1,289 @@
+//! The shared accelerator substrate: cluster job queues, delegate threads,
+//! and the work-stealing thief, factored out of the single-stream driver so
+//! the serving runtime (`serve/`) can host many network pipelines over one
+//! physical pool of accelerators.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::accel::{build_clusters, AccelSpec, ClusterSpec};
+use crate::cluster::JobQueue;
+use crate::config::HwConfig;
+use crate::mm::job::{gather_results, jobs_for_gemm, JobResult};
+use crate::mm::TileGrid;
+use crate::runtime::default_artifacts_dir;
+use crate::sched::worksteal::{StealPolicy, Thief, ThiefMsg};
+
+use super::delegate::{self, Backend, DelegateStats, RtJob};
+use super::ComputeMode;
+
+/// Pool configuration (the runtime-relevant subset of `RtOptions`).
+#[derive(Clone)]
+pub struct PoolOptions {
+    pub hw: HwConfig,
+    pub compute: ComputeMode,
+    pub work_stealing: bool,
+    pub steal_policy: StealPolicy,
+    /// Extra jobs a delegate drains per queue visit (see
+    /// [`delegate::spawn`]).  0 keeps the single-stream driver's strict
+    /// one-at-a-time sharing; the serving runtime raises it.
+    pub drain_extra: usize,
+}
+
+impl PoolOptions {
+    pub fn new(hw: HwConfig, compute: ComputeMode, work_stealing: bool) -> Self {
+        PoolOptions {
+            hw,
+            compute,
+            work_stealing,
+            steal_policy: StealPolicy::default(),
+            drain_extra: 0,
+        }
+    }
+}
+
+/// Counters accumulated over the pool's lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct PoolReport {
+    pub jobs_executed: u64,
+    /// Jobs per accelerator (by accel id).
+    pub per_accel_jobs: Vec<u64>,
+    pub steal_attempts: u64,
+    pub jobs_stolen: u64,
+}
+
+/// Addressing of one CONV GEMM dispatch (bundled so call sites stay tidy).
+#[derive(Debug, Clone, Copy)]
+pub struct GemmCtx {
+    /// Destination cluster (from the static mapping).
+    pub cluster: usize,
+    /// Network layer index of the CONV layer.
+    pub layer_idx: usize,
+    /// Frame / request tag carried through the jobs.
+    pub frame_id: u64,
+}
+
+/// Cheap cloneable handle that layer threads use to push job batches into
+/// the pool and gather results (the paper's job-generator + ack path).
+#[derive(Clone)]
+pub struct Dispatcher {
+    queues: Vec<Arc<JobQueue<RtJob>>>,
+    thief_tx: Option<Sender<ThiefMsg>>,
+    job_counter: Arc<AtomicU64>,
+}
+
+impl Dispatcher {
+    /// Lower one GEMM to jobs, enqueue them on the target cluster in one
+    /// batch push, hint the thief, and block until every tile is back.
+    pub fn execute_gemm(
+        &self,
+        ctx: GemmCtx,
+        grid: TileGrid,
+        a: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
+    ) -> Vec<f32> {
+        let mut next_id = self
+            .job_counter
+            .fetch_add(grid.num_jobs() as u64, Ordering::Relaxed);
+        let jobs = jobs_for_gemm(ctx.layer_idx, ctx.frame_id, grid, a, b, &mut next_id);
+        let n = jobs.len();
+        let (tx, rx) = mpsc::channel::<JobResult>();
+        // Batch-push: one lock + one notify_all per layer instead of per
+        // job (§Perf iter 3).
+        let batch: Vec<RtJob> = jobs
+            .into_iter()
+            .map(|job| RtJob {
+                job,
+                reply: tx.clone(),
+            })
+            .collect();
+        self.queues[ctx.cluster].push_batch(batch);
+        if let Some(t) = &self.thief_tx {
+            let _ = t.send(ThiefMsg::ClusterBusy(ctx.cluster));
+        }
+        drop(tx);
+        let mut results = Vec::with_capacity(n);
+        for _ in 0..n {
+            results.push(rx.recv().expect("job result"));
+        }
+        gather_results(grid, &results)
+    }
+
+}
+
+/// The running pool: one delegate thread per accelerator, one job queue per
+/// cluster, plus (optionally) the thief.
+pub struct DelegatePool {
+    clusters: Vec<ClusterSpec>,
+    queues: Vec<Arc<JobQueue<RtJob>>>,
+    delegate_stats: Vec<Arc<DelegateStats>>,
+    delegate_handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    thief: Option<Thief<RtJob>>,
+    job_counter: Arc<AtomicU64>,
+}
+
+impl DelegatePool {
+    /// Build clusters and spawn delegate threads (and the thief).
+    pub fn start(options: &PoolOptions) -> Result<DelegatePool> {
+        let clusters = build_clusters(&options.hw);
+        let queues: Vec<Arc<JobQueue<RtJob>>> = clusters
+            .iter()
+            .map(|_| Arc::new(JobQueue::new()))
+            .collect();
+        let thief = if options.work_stealing {
+            Some(Thief::spawn_with(queues.clone(), options.steal_policy))
+        } else {
+            None
+        };
+        let thief_tx = thief.as_ref().map(|t| t.sender());
+
+        // PJRT delegates compile every manifest job kernel: the pool is
+        // shared across networks, so any K value may arrive.
+        let artifacts = default_artifacts_dir();
+        let mut delegate_stats = Vec::new();
+        let mut delegate_handles = Vec::new();
+        for cluster in &clusters {
+            for member in &cluster.members {
+                let stats = Arc::new(DelegateStats::default());
+                delegate_stats.push(Arc::clone(&stats));
+                let queue = Arc::clone(&queues[cluster.index]);
+                let mode = options.compute;
+                let is_fpga = member.is_fpga();
+                let art = artifacts.clone();
+                let mk = move || -> Result<Backend> {
+                    if is_fpga && mode == ComputeMode::Pjrt {
+                        #[cfg(feature = "pjrt")]
+                        {
+                            use anyhow::Context;
+                            let engine = crate::runtime::PeEngine::load(&art, None)
+                                .context("loading PE engine (run `make artifacts`)")?;
+                            return Ok(Backend::Pjrt(Box::new(engine)));
+                        }
+                        #[cfg(not(feature = "pjrt"))]
+                        {
+                            // Native-GEMM fallback: the `pjrt` feature is
+                            // off, so the PE delegates compute natively.
+                            let _ = &art;
+                            return Ok(Backend::Native);
+                        }
+                    }
+                    Ok(Backend::Native)
+                };
+                delegate_handles.push(delegate::spawn(
+                    format!("delegate-{}", member.name),
+                    cluster.index,
+                    queue,
+                    mk,
+                    thief_tx.clone(),
+                    stats,
+                    options.drain_extra,
+                ));
+            }
+        }
+
+        Ok(DelegatePool {
+            clusters,
+            queues,
+            delegate_stats,
+            delegate_handles,
+            thief,
+            job_counter: Arc::new(AtomicU64::new(0)),
+        })
+    }
+
+    pub fn clusters(&self) -> &[ClusterSpec] {
+        &self.clusters
+    }
+
+    /// Accelerator specs (for reporting).
+    pub fn accels(&self) -> Vec<AccelSpec> {
+        crate::accel::all_accels(&self.clusters)
+    }
+
+    /// Handle for layer threads to dispatch GEMMs through.
+    pub fn dispatcher(&self) -> Dispatcher {
+        Dispatcher {
+            queues: self.queues.clone(),
+            thief_tx: self.thief.as_ref().map(|t| t.sender()),
+            job_counter: Arc::clone(&self.job_counter),
+        }
+    }
+
+    /// Live counters (approximate while delegates are still running).
+    pub fn snapshot(&self) -> PoolReport {
+        fold_report(&self.delegate_stats, self.thief.as_ref())
+    }
+
+    /// Close the queues, join every delegate, stop the thief, and return
+    /// the final counters.  Callers must have drained their reply channels
+    /// (i.e. no in-flight GEMMs) before calling.
+    pub fn shutdown(self) -> Result<PoolReport> {
+        let DelegatePool {
+            queues,
+            delegate_stats,
+            delegate_handles,
+            thief,
+            ..
+        } = self;
+        for q in &queues {
+            q.close();
+        }
+        // Join before reading counters so the report sees every job.
+        for h in delegate_handles {
+            h.join().expect("delegate thread")?;
+        }
+        let report = fold_report(&delegate_stats, thief.as_ref());
+        if let Some(t) = thief {
+            t.shutdown();
+        }
+        Ok(report)
+    }
+}
+
+fn fold_report(delegate_stats: &[Arc<DelegateStats>], thief: Option<&Thief<RtJob>>) -> PoolReport {
+    let mut report = PoolReport::default();
+    for stats in delegate_stats {
+        let j = stats.jobs.load(Ordering::Relaxed);
+        report.per_accel_jobs.push(j);
+        report.jobs_executed += j;
+    }
+    if let Some(t) = thief {
+        let (attempts, _successes, moved) = t.stats.snapshot();
+        report.steal_attempts = attempts;
+        report.jobs_stolen = moved;
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift64Star;
+
+    #[test]
+    fn pool_executes_a_gemm_end_to_end() {
+        let options = PoolOptions::new(HwConfig::default_zc702(), ComputeMode::Native, true);
+        let pool = DelegatePool::start(&options).unwrap();
+        let dispatcher = pool.dispatcher();
+        let grid = TileGrid::new(40, 50, 60, 32);
+        let a = Arc::new(XorShift64Star::new(1).fill_f32(40 * 50, 1.0));
+        let b = Arc::new(XorShift64Star::new(2).fill_f32(50 * 60, 1.0));
+        let ctx = GemmCtx {
+            cluster: 0,
+            layer_idx: 0,
+            frame_id: 0,
+        };
+        let c = dispatcher.execute_gemm(ctx, grid, Arc::clone(&a), Arc::clone(&b));
+        let want = crate::mm::gemm::gemm_blocked(
+            &crate::tensor::Tensor::from_vec(&[40, 50], (*a).clone()),
+            &crate::tensor::Tensor::from_vec(&[50, 60], (*b).clone()),
+        );
+        let got = crate::tensor::Tensor::from_vec(&[40, 60], c);
+        assert!(want.allclose(&got, 1e-4, 1e-4), "{}", want.max_abs_diff(&got));
+        let report = pool.shutdown().unwrap();
+        assert_eq!(report.jobs_executed, grid.num_jobs() as u64);
+    }
+}

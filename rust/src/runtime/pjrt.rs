@@ -1,0 +1,168 @@
+//! Real PJRT engines (compiled only with the `pjrt` feature): load the AOT
+//! artifacts and execute them on the XLA PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, ModelMeta};
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+/// Per-thread PE engine: a PJRT CPU client plus the compiled job kernels
+/// for the K values this PE will encounter.
+pub struct PeEngine {
+    client: xla::PjRtClient,
+    kernels: HashMap<usize, xla::PjRtLoadedExecutable>,
+    tile_size: usize,
+}
+
+impl PeEngine {
+    /// Load and compile job kernels for the given K values (None = all in
+    /// the manifest).
+    pub fn load(artifacts: &Path, ks: Option<&[usize]>) -> Result<PeEngine> {
+        let man = Manifest::load(artifacts)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut kernels = HashMap::new();
+        for jk in &man.job_kernels {
+            if let Some(filter) = ks {
+                if !filter.contains(&jk.k) {
+                    continue;
+                }
+            }
+            kernels.insert(jk.k, compile(&client, &artifacts.join(&jk.path))?);
+        }
+        if kernels.is_empty() {
+            anyhow::bail!("no job kernels loaded from {}", artifacts.display());
+        }
+        Ok(PeEngine {
+            client,
+            kernels,
+            tile_size: man.tile_size,
+        })
+    }
+
+    pub fn tile_size(&self) -> usize {
+        self.tile_size
+    }
+
+    pub fn available_ks(&self) -> Vec<usize> {
+        let mut ks: Vec<usize> = self.kernels.keys().copied().collect();
+        ks.sort_unstable();
+        ks
+    }
+
+    /// Smallest compiled kernel with K' ≥ k (operands are zero-padded up to
+    /// K' — zero tiles contribute nothing, exactly the paper's border rule).
+    pub fn kernel_k_for(&self, k: usize) -> Result<usize> {
+        self.kernels
+            .keys()
+            .copied()
+            .filter(|&kk| kk >= k)
+            .min()
+            .ok_or_else(|| anyhow!("no compiled job kernel covers k={k}"))
+    }
+
+    /// Execute one job on the PJRT path: packed (K,TS,TS) operand tiles →
+    /// (TS,TS) output tile.
+    pub fn execute_job(&self, a_tiles: &[f32], b_tiles: &[f32], k: usize) -> Result<Vec<f32>> {
+        let ts = self.tile_size;
+        debug_assert_eq!(a_tiles.len(), k * ts * ts);
+        debug_assert_eq!(b_tiles.len(), k * ts * ts);
+        let kk = self.kernel_k_for(k)?;
+        let exe = &self.kernels[&kk];
+        // Pad with zero tiles up to the kernel's K if needed.
+        let (a_lit, b_lit) = if kk == k {
+            (make_literal(a_tiles, kk, ts)?, make_literal(b_tiles, kk, ts)?)
+        } else {
+            let mut ap = a_tiles.to_vec();
+            let mut bp = b_tiles.to_vec();
+            ap.resize(kk * ts * ts, 0.0);
+            bp.resize(kk * ts * ts, 0.0);
+            (make_literal(&ap, kk, ts)?, make_literal(&bp, kk, ts)?)
+        };
+        let result = exe
+            .execute::<xla::Literal>(&[a_lit, b_lit])
+            .context("executing job kernel")?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching job result")?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let tile = lit.to_tuple1().context("unwrapping result tuple")?;
+        let out = tile.to_vec::<f32>().context("reading result tile")?;
+        debug_assert_eq!(out.len(), ts * ts);
+        Ok(out)
+    }
+
+    /// Access the underlying client (e.g. to compile extra computations).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+fn make_literal(data: &[f32], k: usize, ts: usize) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(&[k as i64, ts as i64, ts as i64])?)
+}
+
+/// Full-model oracle: executes `model_{name}.hlo.txt` through PJRT.
+pub struct ModelOracle {
+    #[allow(dead_code)] // keeps the client alive for the executable
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ModelMeta,
+}
+
+impl ModelOracle {
+    pub fn load(artifacts: &Path, model: &str) -> Result<ModelOracle> {
+        let man = Manifest::load(artifacts)?;
+        let meta = man
+            .models
+            .iter()
+            .find(|m| m.name == model)
+            .ok_or_else(|| anyhow!("model {model:?} not in manifest"))?
+            .clone();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let exe = compile(&client, &artifacts.join(&meta.path))?;
+        Ok(ModelOracle { client, exe, meta })
+    }
+
+    /// Run the forward pass: input (C·H·W flat) + params in manifest order →
+    /// class probabilities.
+    pub fn run(&self, x: &[f32], params: &[&[f32]]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            params.len() == self.meta.params.len(),
+            "expected {} params, got {}",
+            self.meta.params.len(),
+            params.len()
+        );
+        let mut lits = Vec::with_capacity(1 + params.len());
+        let shape: Vec<i64> = self.meta.input_shape.iter().map(|&d| d as i64).collect();
+        lits.push(xla::Literal::vec1(x).reshape(&shape)?);
+        for (meta, data) in self.meta.params.iter().zip(params) {
+            anyhow::ensure!(
+                meta.len() == data.len(),
+                "param {}/{} expects {} elems, got {}",
+                meta.layer,
+                meta.name,
+                meta.len(),
+                data.len()
+            );
+            let dims: Vec<i64> = meta.shape.iter().map(|&d| d as i64).collect();
+            lits.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let out = lit.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}

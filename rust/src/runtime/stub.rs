@@ -1,0 +1,60 @@
+//! API-compatible stand-ins for the PJRT engines, compiled when the `pjrt`
+//! feature is off.  They keep every call-site (delegates, tests, examples)
+//! building without the XLA toolchain; any attempt to actually construct an
+//! engine reports a clean error so callers fall back to the native GEMM.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{Manifest, ModelMeta};
+
+const NO_PJRT: &str =
+    "PJRT support not compiled in (rebuild with `--features pjrt`); use the native backend";
+
+/// Stand-in for the per-thread PE engine.  `load` always fails after the
+/// manifest check, so instances never exist in non-`pjrt` builds.
+pub struct PeEngine {
+    _private: (),
+}
+
+impl PeEngine {
+    /// Checks the artifacts directory (same diagnostics as the real engine
+    /// for a missing manifest), then reports that PJRT is unavailable.
+    pub fn load(artifacts: &Path, _ks: Option<&[usize]>) -> Result<PeEngine> {
+        let _ = Manifest::load(artifacts)?;
+        bail!(NO_PJRT)
+    }
+
+    pub fn tile_size(&self) -> usize {
+        0
+    }
+
+    pub fn available_ks(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    pub fn kernel_k_for(&self, _k: usize) -> Result<usize> {
+        bail!(NO_PJRT)
+    }
+
+    pub fn execute_job(&self, _a: &[f32], _b: &[f32], _k: usize) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+}
+
+/// Stand-in for the full-model oracle.
+pub struct ModelOracle {
+    pub meta: ModelMeta,
+}
+
+impl ModelOracle {
+    pub fn load(artifacts: &Path, _model: &str) -> Result<ModelOracle> {
+        let _ = Manifest::load(artifacts)?;
+        bail!(NO_PJRT)
+    }
+
+    pub fn run(&self, _x: &[f32], _params: &[&[f32]]) -> Result<Vec<f32>> {
+        bail!(NO_PJRT)
+    }
+}

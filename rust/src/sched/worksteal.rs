@@ -48,6 +48,35 @@ impl StealStats {
     }
 }
 
+/// Tunables for the stealer pass.
+///
+/// With the serving front-end, queues fill in *batch granularity*: a
+/// micro-batch of B requests deposits all its jobs in one `push_batch`.
+/// A thief tuned for single-frame streams (steal whenever a victim holds
+/// ≥2 jobs) would ping-pong half-batches between clusters, so the idle
+/// book's stealer threshold scales with the expected batch job count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StealPolicy {
+    /// Minimum victim queue length worth stealing from.
+    pub min_victim_len: usize,
+}
+
+impl Default for StealPolicy {
+    fn default() -> Self {
+        StealPolicy { min_victim_len: 2 }
+    }
+}
+
+impl StealPolicy {
+    /// Policy for batched serving: only steal once a victim holds at least
+    /// half a batch's worth of jobs (and never less than the default 2).
+    pub fn batched(jobs_per_batch: usize) -> Self {
+        StealPolicy {
+            min_victim_len: (jobs_per_batch / 2).max(2),
+        }
+    }
+}
+
 /// Pick the victim: the non-idle cluster with the longest queue (must have
 /// at least `min_len` jobs, so we don't ping-pong single jobs).
 pub fn choose_victim(queue_lens: &[usize], idle: &HashSet<usize>, min_len: usize) -> Option<usize> {
@@ -73,14 +102,20 @@ pub struct Thief<T: Send + 'static> {
 }
 
 impl<T: Send + 'static> Thief<T> {
-    /// Spawn the thief over the cluster queues.
+    /// Spawn the thief over the cluster queues (default policy).
     pub fn spawn(queues: Vec<Arc<JobQueue<T>>>) -> Thief<T> {
+        Self::spawn_with(queues, StealPolicy::default())
+    }
+
+    /// Spawn the thief with an explicit steal policy (the serving runtime
+    /// passes [`StealPolicy::batched`]).
+    pub fn spawn_with(queues: Vec<Arc<JobQueue<T>>>, policy: StealPolicy) -> Thief<T> {
         let (tx, rx) = mpsc::channel::<ThiefMsg>();
         let stats = Arc::new(StealStats::default());
         let st = Arc::clone(&stats);
         let handle = std::thread::Builder::new()
             .name("thief".into())
-            .spawn(move || thief_loop(queues, rx, st))
+            .spawn(move || thief_loop(queues, rx, st, policy))
             .expect("spawn thief");
         Thief {
             tx,
@@ -116,6 +151,7 @@ fn thief_loop<T: Send>(
     queues: Vec<Arc<JobQueue<T>>>,
     rx: mpsc::Receiver<ThiefMsg>,
     stats: Arc<StealStats>,
+    policy: StealPolicy,
 ) {
     let mut idle_book: HashSet<usize> = HashSet::new();
     loop {
@@ -150,7 +186,7 @@ fn thief_loop<T: Send>(
         let served: Vec<usize> = idle_book.iter().copied().collect();
         for idle_c in served {
             stats.attempts.fetch_add(1, Ordering::Relaxed);
-            if let Some(victim) = choose_victim(&lens, &idle_book, 2) {
+            if let Some(victim) = choose_victim(&lens, &idle_book, policy.min_victim_len) {
                 let n = steal_amount(queues[victim].len());
                 let stolen = queues[victim].steal(n);
                 if !stolen.is_empty() {
@@ -218,6 +254,32 @@ mod tests {
         assert!(att >= 1 && succ >= 1 && moved >= 1);
         // No duplication, no loss.
         assert_eq!(q0.len() + q1.len(), 10);
+        thief.shutdown();
+    }
+
+    #[test]
+    fn batched_policy_scales_threshold() {
+        assert_eq!(StealPolicy::default().min_victim_len, 2);
+        assert_eq!(StealPolicy::batched(1).min_victim_len, 2);
+        assert_eq!(StealPolicy::batched(16).min_victim_len, 8);
+    }
+
+    #[test]
+    fn batched_policy_thief_leaves_small_victims_alone() {
+        let q0: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
+        let q1: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
+        for i in 0..4 {
+            q1.push(i);
+        }
+        // Threshold 8: a 4-deep victim is half a batch — not worth moving.
+        let thief = Thief::spawn_with(
+            vec![Arc::clone(&q0), Arc::clone(&q1)],
+            StealPolicy::batched(16),
+        );
+        thief.sender().send(ThiefMsg::ClusterIdle(0)).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(q0.is_empty(), "thief stole below the batch threshold");
+        assert_eq!(q1.len(), 4);
         thief.shutdown();
     }
 

@@ -1,0 +1,256 @@
+//! Per-network micro-batching: coalesce compatible requests into batched
+//! jobs before they enter the layer pipeline.
+//!
+//! Policy is the classic size-or-time rule: a batch is dispatched as soon
+//! as it reaches the network's `max_batch`, or once its oldest member has
+//! waited out the batching `window` — bounded added latency in exchange
+//! for better accelerator occupancy.
+
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+/// Platform-wide batching policy (per-network caps may lower `max_batch`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchCfg {
+    /// Upper bound on requests coalesced into one batch.
+    pub max_batch: usize,
+    /// Max time the oldest request of a partial batch waits.
+    pub window: Duration,
+}
+
+impl Default for BatchCfg {
+    fn default() -> Self {
+        // Single source of truth: the platform `[serving]` defaults.
+        let serving = crate::config::ServeCfg::default();
+        BatchCfg {
+            max_batch: serving.max_batch,
+            window: Duration::from_micros(serving.batch_window_us),
+        }
+    }
+}
+
+/// A dispatched micro-batch: requests of one network, oldest first.
+#[derive(Debug)]
+pub struct Batch {
+    pub net_id: usize,
+    pub requests: Vec<Request>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+struct Pending {
+    reqs: Vec<Request>,
+    /// When the oldest pending request entered the batcher.
+    open_since: Option<Instant>,
+}
+
+/// The coalescing core.  Single-threaded by design (owned by the batcher
+/// thread); all time is passed in explicitly so policies unit-test without
+/// sleeping.
+pub struct MicroBatcher {
+    window: Duration,
+    /// Effective cap per network (platform cap ∧ per-net override).
+    caps: Vec<usize>,
+    pending: Vec<Pending>,
+}
+
+impl MicroBatcher {
+    /// `per_net_cap[i]` optionally lowers `cfg.max_batch` for network `i`
+    /// (from `max_batch` in the model's `.cfg`).
+    pub fn new(cfg: BatchCfg, per_net_cap: &[Option<usize>]) -> MicroBatcher {
+        let caps = per_net_cap
+            .iter()
+            .map(|c| c.unwrap_or(cfg.max_batch).clamp(1, cfg.max_batch.max(1)))
+            .collect();
+        let pending = per_net_cap
+            .iter()
+            .map(|_| Pending {
+                reqs: Vec::new(),
+                open_since: None,
+            })
+            .collect();
+        MicroBatcher {
+            window: cfg.window,
+            caps,
+            pending,
+        }
+    }
+
+    pub fn n_nets(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Effective batch cap for one network.
+    pub fn cap(&self, net_id: usize) -> usize {
+        self.caps[net_id]
+    }
+
+    /// Requests currently waiting in partial batches.
+    pub fn pending_len(&self) -> usize {
+        self.pending.iter().map(|p| p.reqs.len()).sum()
+    }
+
+    /// Queue a request; returns a full batch once the cap is reached.
+    pub fn push(&mut self, req: Request, now: Instant) -> Option<Batch> {
+        let net_id = req.net_id;
+        let p = &mut self.pending[net_id];
+        if p.reqs.is_empty() {
+            p.open_since = Some(now);
+        }
+        p.reqs.push(req);
+        if p.reqs.len() >= self.caps[net_id] {
+            return Some(take_batch(p, net_id));
+        }
+        None
+    }
+
+    /// Dispatch every partial batch whose window has expired at `now`.
+    pub fn poll_expired(&mut self, now: Instant) -> Vec<Batch> {
+        let window = self.window;
+        let mut out = Vec::new();
+        for (net_id, p) in self.pending.iter_mut().enumerate() {
+            let expired = p
+                .open_since
+                .is_some_and(|t| now.saturating_duration_since(t) >= window);
+            if expired {
+                out.push(take_batch(p, net_id));
+            }
+        }
+        out
+    }
+
+    /// Earliest window deadline among partial batches (sleep hint).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.pending
+            .iter()
+            .filter_map(|p| p.open_since)
+            .min()
+            .map(|t| t + self.window)
+    }
+
+    /// Dispatch everything still pending (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for (net_id, p) in self.pending.iter_mut().enumerate() {
+            if !p.reqs.is_empty() {
+                out.push(take_batch(p, net_id));
+            }
+        }
+        out
+    }
+}
+
+fn take_batch(p: &mut Pending, net_id: usize) -> Batch {
+    p.open_since = None;
+    Batch {
+        net_id,
+        requests: std::mem::take(&mut p.reqs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn req(net_id: usize, seq: u64) -> Request {
+        Request::new(0, seq, net_id, Tensor::scalar(0.0))
+    }
+
+    fn cfg(max_batch: usize, window_ms: u64) -> BatchCfg {
+        BatchCfg {
+            max_batch,
+            window: Duration::from_millis(window_ms),
+        }
+    }
+
+    #[test]
+    fn coalesces_up_to_max_batch() {
+        let mut b = MicroBatcher::new(cfg(3, 100), &[None]);
+        let t = Instant::now();
+        assert!(b.push(req(0, 0), t).is_none());
+        assert!(b.push(req(0, 1), t).is_none());
+        let batch = b.push(req(0, 2), t).expect("full batch");
+        assert_eq!(batch.net_id, 0);
+        assert_eq!(batch.len(), 3);
+        let seqs: Vec<u64> = batch.requests.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![0, 1, 2], "oldest-first order");
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn window_expiry_dispatches_partial_batch() {
+        let mut b = MicroBatcher::new(cfg(8, 10), &[None]);
+        let t0 = Instant::now();
+        assert!(b.push(req(0, 0), t0).is_none());
+        assert!(b.push(req(0, 1), t0).is_none());
+        // Before the window: nothing to dispatch.
+        assert!(b.poll_expired(t0 + Duration::from_millis(5)).is_empty());
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+        // At/after the window: the partial batch goes out.
+        let expired = b.poll_expired(t0 + Duration::from_millis(10));
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].len(), 2);
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.next_deadline(), None);
+    }
+
+    #[test]
+    fn window_restarts_with_next_request() {
+        let mut b = MicroBatcher::new(cfg(8, 10), &[None]);
+        let t0 = Instant::now();
+        b.push(req(0, 0), t0);
+        let _ = b.poll_expired(t0 + Duration::from_millis(10));
+        // A new request opens a fresh window anchored at its own arrival.
+        let t1 = t0 + Duration::from_millis(20);
+        b.push(req(0, 1), t1);
+        assert!(b.poll_expired(t1 + Duration::from_millis(9)).is_empty());
+        assert_eq!(b.poll_expired(t1 + Duration::from_millis(10)).len(), 1);
+    }
+
+    #[test]
+    fn nets_batch_independently_and_respect_per_net_caps() {
+        // Net 0 capped at 2 by its model config; net 1 uses the platform 4.
+        let mut b = MicroBatcher::new(cfg(4, 100), &[Some(2), None]);
+        assert_eq!(b.cap(0), 2);
+        assert_eq!(b.cap(1), 4);
+        let t = Instant::now();
+        assert!(b.push(req(0, 0), t).is_none());
+        assert!(b.push(req(1, 0), t).is_none());
+        let batch = b.push(req(0, 1), t).expect("net 0 full at 2");
+        assert_eq!(batch.net_id, 0);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending_len(), 1, "net 1 still pending");
+    }
+
+    #[test]
+    fn per_net_cap_cannot_exceed_platform_cap() {
+        let b = MicroBatcher::new(cfg(4, 100), &[Some(64)]);
+        assert_eq!(b.cap(0), 4);
+    }
+
+    #[test]
+    fn flush_all_empties_every_net() {
+        let mut b = MicroBatcher::new(cfg(8, 100), &[None, None]);
+        let t = Instant::now();
+        b.push(req(0, 0), t);
+        b.push(req(1, 0), t);
+        b.push(req(1, 1), t);
+        let mut flushed = b.flush_all();
+        flushed.sort_by_key(|x| x.net_id);
+        assert_eq!(flushed.len(), 2);
+        assert_eq!(flushed[0].len(), 1);
+        assert_eq!(flushed[1].len(), 2);
+        assert_eq!(b.pending_len(), 0);
+        assert!(b.flush_all().is_empty());
+    }
+}

@@ -1,0 +1,38 @@
+//! Multi-stream batched serving runtime — the admission/batching layer
+//! above the accelerator clusters.
+//!
+//! The paper's pipeline (Fig 2) drives one model with one frame stream.
+//! Real deployments (NEURAghe; Wang et al., *Neural Network Inference on
+//! Mobile SoCs*) win sustained throughput **above** the accelerators: by
+//! admitting many client streams, coalescing compatible requests into
+//! micro-batches, and only then entering the layer pipeline.  This module
+//! is that front-end:
+//!
+//! ```text
+//!  clients ──► AdmissionQueue ──► MicroBatcher ──► per-net layer pipeline
+//!  (streams)   (bounded depth,    (max_batch,      (Mailbox-connected
+//!              stream-fair,        batching         stages, batched jobs)
+//!              shed on overload)   window)               │
+//!                                                        ▼
+//!                                             shared DelegatePool
+//!                                        (cluster queues + delegates
+//!                                         + work-stealing thief)
+//! ```
+//!
+//! * [`request`] — request/response currency + synthetic client streams;
+//! * [`admission`] — bounded, stream-fair admission with shed-on-overload;
+//! * [`batcher`] — per-network micro-batching (size + window policy);
+//! * [`server`] — thread wiring over `rt::DelegatePool`;
+//! * [`stats`] — latency percentiles / throughput / batch accounting.
+
+pub mod admission;
+pub mod batcher;
+pub mod request;
+pub mod server;
+pub mod stats;
+
+pub use admission::AdmissionQueue;
+pub use batcher::{Batch, BatchCfg, MicroBatcher};
+pub use request::{Request, RequestStream, Response};
+pub use server::{ServeOptions, Server};
+pub use stats::{ServerStats, StatsCollector};

@@ -1,0 +1,195 @@
+//! Request/response currency of the serving runtime, plus a deterministic
+//! open-loop client-stream generator for load tests and benches.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::nn::Network;
+use crate::tensor::Tensor;
+use crate::util::rng::XorShift64Star;
+
+/// Frame tag carried through the job system: unique per (stream, seq) so
+/// batched jobs from different requests never collide.
+pub fn frame_tag(stream_id: usize, seq: u64) -> u64 {
+    ((stream_id as u64) << 32) | (seq & 0xFFFF_FFFF)
+}
+
+/// One inference request from one client stream.
+#[derive(Debug)]
+pub struct Request {
+    pub stream_id: usize,
+    /// Per-stream sequence number.
+    pub seq: u64,
+    /// Index into the server's network table.
+    pub net_id: usize,
+    /// Deterministic input tag (see [`frame_tag`]).
+    pub frame: u64,
+    pub input: Tensor,
+    /// Arrival timestamp (stamped by the server at admission).
+    pub submitted: Instant,
+    /// Optional latency budget; expired requests are shed by the batcher.
+    pub deadline: Option<Duration>,
+}
+
+impl Request {
+    pub fn new(stream_id: usize, seq: u64, net_id: usize, input: Tensor) -> Request {
+        Request {
+            stream_id,
+            seq,
+            net_id,
+            frame: frame_tag(stream_id, seq),
+            input,
+            submitted: Instant::now(),
+            deadline: None,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn is_expired(&self, now: Instant) -> bool {
+        match self.deadline {
+            Some(d) => now.saturating_duration_since(self.submitted) > d,
+            None => false,
+        }
+    }
+}
+
+/// One served inference result.
+#[derive(Debug)]
+pub struct Response {
+    pub stream_id: usize,
+    pub seq: u64,
+    pub net_id: usize,
+    pub frame: u64,
+    /// Class probabilities.
+    pub output: Tensor,
+    /// Admission-to-completion latency.
+    pub latency: Duration,
+    /// Size of the micro-batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// Deterministic open-loop client: emits `n_requests` requests for one
+/// network with exponential inter-arrival gaps at `rate_rps`, inputs drawn
+/// from the network's synthetic frame generator.
+pub struct RequestStream {
+    pub stream_id: usize,
+    pub net_id: usize,
+    net: Arc<Network>,
+    rng: XorShift64Star,
+    mean_gap: Duration,
+    deadline: Option<Duration>,
+    next_seq: u64,
+    remaining: u64,
+}
+
+impl RequestStream {
+    pub fn new(
+        stream_id: usize,
+        net_id: usize,
+        net: Arc<Network>,
+        rate_rps: f64,
+        n_requests: u64,
+    ) -> RequestStream {
+        let mean_gap = Duration::from_secs_f64(1.0 / rate_rps.max(1e-6));
+        RequestStream {
+            stream_id,
+            net_id,
+            net,
+            rng: XorShift64Star::new(0xC0FF_EE00 + stream_id as u64),
+            mean_gap,
+            deadline: None,
+            next_seq: 0,
+            remaining: n_requests,
+        }
+    }
+
+    /// Attach a latency budget to every request of this stream.
+    pub fn with_deadline(mut self, deadline: Duration) -> RequestStream {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Next arrival: the gap to wait before submitting, plus the request.
+    /// (`Request::submitted` is re-stamped by the server at admission.)
+    pub fn next_arrival(&mut self) -> Option<(Duration, Request)> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        // Exponential inter-arrival gap (open-loop Poisson client).
+        let u = self.rng.next_f64().clamp(1e-6, 1.0 - 1e-6);
+        let gap = self
+            .mean_gap
+            .mul_f64(-(1.0 - u).ln())
+            .max(Duration::from_nanos(1));
+        let frame = frame_tag(self.stream_id, seq);
+        let mut req = Request::new(self.stream_id, seq, self.net_id, self.net.make_input(frame));
+        req.deadline = self.deadline;
+        Some((gap, req))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo;
+
+    fn mk_net() -> Arc<Network> {
+        Arc::new(Network::new(zoo::load("mpcnn").unwrap(), 32).unwrap())
+    }
+
+    #[test]
+    fn frame_tags_unique_across_streams() {
+        assert_ne!(frame_tag(0, 5), frame_tag(1, 5));
+        assert_ne!(frame_tag(2, 0), frame_tag(2, 1));
+        assert_eq!(frame_tag(3, 7), frame_tag(3, 7));
+    }
+
+    #[test]
+    fn stream_emits_n_requests_with_positive_gaps() {
+        let mut s = RequestStream::new(1, 0, mk_net(), 100.0, 5);
+        let mut count = 0;
+        let mut last_seq = None;
+        while let Some((gap, req)) = s.next_arrival() {
+            assert!(gap > Duration::ZERO);
+            assert_eq!(req.stream_id, 1);
+            if let Some(prev) = last_seq {
+                assert_eq!(req.seq, prev + 1);
+            }
+            last_seq = Some(req.seq);
+            count += 1;
+        }
+        assert_eq!(count, 5);
+    }
+
+    #[test]
+    fn stream_is_deterministic() {
+        let gaps = |sid: usize| -> Vec<Duration> {
+            let mut s = RequestStream::new(sid, 0, mk_net(), 50.0, 4);
+            let mut v = Vec::new();
+            while let Some((gap, _)) = s.next_arrival() {
+                v.push(gap);
+            }
+            v
+        };
+        assert_eq!(gaps(7), gaps(7));
+        assert_ne!(gaps(7), gaps(8));
+    }
+
+    #[test]
+    fn deadline_expiry() {
+        let net = mk_net();
+        let req = Request::new(0, 0, 0, net.make_input(0))
+            .with_deadline(Duration::from_millis(10));
+        assert!(!req.is_expired(req.submitted));
+        assert!(req.is_expired(req.submitted + Duration::from_millis(11)));
+        let fresh = Request::new(0, 1, 0, net.make_input(1));
+        assert!(!fresh.is_expired(fresh.submitted + Duration::from_secs(3600)));
+    }
+}

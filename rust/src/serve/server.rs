@@ -1,0 +1,426 @@
+//! The serving front-end wired together: client streams submit into the
+//! admission queue; a batcher thread coalesces per-network micro-batches
+//! and feeds them into per-network layer pipelines; every CONV stage
+//! lowers its batch to jobs on the shared accelerator pool; completion
+//! threads stamp latencies and collect responses.
+//!
+//! One [`rt::DelegatePool`] serves all networks — heterogeneous models
+//! compete for the same clusters exactly like the paper's multi-CNN
+//! scenario, with the thief rebalancing at batch granularity.
+//!
+//! [`rt::DelegatePool`]: crate::rt::DelegatePool
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::config::HwConfig;
+use crate::nn::Network;
+use crate::pipeline::Mailbox;
+use crate::rt::{ComputeMode, DelegatePool, GemmCtx, PoolOptions};
+use crate::sched::static_map;
+use crate::sched::worksteal::StealPolicy;
+use crate::tensor::Tensor;
+
+use super::admission::AdmissionQueue;
+use super::batcher::{Batch, BatchCfg, MicroBatcher};
+use super::request::{Request, Response};
+use super::stats::{ServerStats, StatsCollector};
+
+/// Serving configuration (defaults come from `HwConfig::serving`).
+#[derive(Clone)]
+pub struct ServeOptions {
+    pub hw: HwConfig,
+    pub compute: ComputeMode,
+    pub work_stealing: bool,
+    /// Mailbox depth, in batches, between pipeline stages.
+    pub mailbox_capacity: usize,
+    pub batch: BatchCfg,
+    /// Bounded admission depth (requests beyond it are shed).
+    pub admission_depth: usize,
+}
+
+impl ServeOptions {
+    /// Derive serving knobs from a hardware config's `[serving]` section.
+    pub fn from_hw(hw: HwConfig) -> ServeOptions {
+        let batch = BatchCfg {
+            max_batch: hw.serving.max_batch,
+            window: Duration::from_micros(hw.serving.batch_window_us),
+        };
+        let admission_depth = hw.serving.admission_depth;
+        ServeOptions {
+            hw,
+            compute: ComputeMode::Native,
+            work_stealing: true,
+            mailbox_capacity: 1,
+            batch,
+            admission_depth,
+        }
+    }
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions::from_hw(HwConfig::default_zc702())
+    }
+}
+
+/// A micro-batch in flight through one network's pipeline: each request
+/// rides with its current activation.
+struct InFlight {
+    net_id: usize,
+    batch_size: usize,
+    items: Vec<(Request, Tensor)>,
+}
+
+/// The running server.
+pub struct Server {
+    nets: Vec<Arc<Network>>,
+    admission: Arc<AdmissionQueue>,
+    collector: Arc<StatsCollector>,
+    batcher_handle: JoinHandle<()>,
+    layer_handles: Vec<JoinHandle<()>>,
+    completion_handles: Vec<JoinHandle<Vec<Response>>>,
+    pool: DelegatePool,
+    started: Instant,
+}
+
+impl Server {
+    /// Spin up the full serving stack over `nets`.
+    pub fn start(nets: Vec<Arc<Network>>, options: ServeOptions) -> Result<Server> {
+        ensure!(!nets.is_empty(), "server needs at least one network");
+        ensure!(options.batch.max_batch >= 1, "max_batch must be ≥ 1");
+
+        // Shared accelerator substrate.  A cluster queue grows by one
+        // request's one CONV layer lowered to jobs per push, so the
+        // thief's steal threshold scales with that push unit (half the
+        // smallest one across the served networks) — enough to avoid
+        // ping-ponging sub-push fragments without suppressing stealing.
+        let min_jobs_per_push = nets
+            .iter()
+            .flat_map(|n| {
+                n.conv_infos()
+                    .into_iter()
+                    .map(|ci| ci.grid.num_jobs())
+            })
+            .min()
+            .unwrap_or(1)
+            .max(1);
+        let mut pool_options = PoolOptions::new(
+            options.hw.clone(),
+            options.compute,
+            options.work_stealing,
+        );
+        pool_options.steal_policy = StealPolicy::batched(min_jobs_per_push);
+        // Amortize queue locks over micro-batch job runs.
+        pool_options.drain_extra = 3;
+        let pool = DelegatePool::start(&pool_options)?;
+
+        let admission = Arc::new(AdmissionQueue::new(options.admission_depth));
+        let collector = Arc::new(StatsCollector::default());
+
+        // Per-network pipelines: mb[0] = batch inbox, mb[i+1] = output of
+        // layer i; the last mailbox feeds that net's completion thread.
+        let mut inboxes: Vec<Arc<Mailbox<InFlight>>> = Vec::new();
+        let mut layer_handles = Vec::new();
+        let mut completion_handles = Vec::new();
+        for (net_id, net) in nets.iter().enumerate() {
+            let n_layers = net.config.layers.len();
+            let mailboxes: Vec<Arc<Mailbox<InFlight>>> = (0..=n_layers)
+                .map(|_| Arc::new(Mailbox::new(options.mailbox_capacity)))
+                .collect();
+            inboxes.push(Arc::clone(&mailboxes[0]));
+            let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
+            for layer_idx in 0..n_layers {
+                let inbox = Arc::clone(&mailboxes[layer_idx]);
+                let outbox = Arc::clone(&mailboxes[layer_idx + 1]);
+                let net = Arc::clone(net);
+                let dispatcher = pool.dispatcher();
+                let assignment = assignment.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("serve-n{net_id}-l{layer_idx}"))
+                    .spawn(move || {
+                        let convs = net.conv_infos();
+                        while let Some(mut batch) = inbox.recv() {
+                            let spec = net.config.layers[layer_idx].clone();
+                            let items = std::mem::take(&mut batch.items);
+                            let mut advanced = Vec::with_capacity(items.len());
+                            for (req, act) in items {
+                                let frame = req.frame;
+                                let out = net.forward_layer(
+                                    layer_idx,
+                                    &spec,
+                                    act,
+                                    &|l_idx, grid, a, b| {
+                                        let conv_ord = convs
+                                            .iter()
+                                            .position(|ci| ci.layer_idx == l_idx)
+                                            .expect("conv ordinal");
+                                        let ctx = GemmCtx {
+                                            cluster: assignment[conv_ord],
+                                            layer_idx: l_idx,
+                                            frame_id: frame,
+                                        };
+                                        dispatcher.execute_gemm(ctx, grid, a, b)
+                                    },
+                                );
+                                advanced.push((req, out));
+                            }
+                            batch.items = advanced;
+                            if !outbox.send(batch) {
+                                break;
+                            }
+                        }
+                        outbox.close();
+                    })
+                    .expect("spawn serve layer thread");
+                layer_handles.push(handle);
+            }
+            // Completion thread: stamp latencies, collect responses.
+            let outlet = Arc::clone(&mailboxes[n_layers]);
+            let collector_c = Arc::clone(&collector);
+            completion_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-n{net_id}-done"))
+                    .spawn(move || {
+                        let mut responses = Vec::new();
+                        while let Some(batch) = outlet.recv() {
+                            let net_id = batch.net_id;
+                            let batch_size = batch.batch_size;
+                            for (req, out) in batch.items {
+                                let latency = req.submitted.elapsed();
+                                collector_c.record_response(latency);
+                                responses.push(Response {
+                                    stream_id: req.stream_id,
+                                    seq: req.seq,
+                                    net_id,
+                                    frame: req.frame,
+                                    output: out,
+                                    latency,
+                                    batch_size,
+                                });
+                            }
+                        }
+                        responses
+                    })
+                    .expect("spawn completion thread"),
+            );
+        }
+
+        // Batcher thread: admission → micro-batches → pipeline inboxes.
+        let batcher_handle = {
+            let admission = Arc::clone(&admission);
+            let collector = Arc::clone(&collector);
+            let per_net_cap: Vec<Option<usize>> =
+                nets.iter().map(|n| n.config.max_batch).collect();
+            let batch_cfg = options.batch;
+            std::thread::Builder::new()
+                .name("serve-batcher".into())
+                .spawn(move || {
+                    batcher_loop(admission, collector, batch_cfg, per_net_cap, inboxes)
+                })
+                .expect("spawn batcher thread")
+        };
+
+        Ok(Server {
+            nets,
+            admission,
+            collector,
+            batcher_handle,
+            layer_handles,
+            completion_handles,
+            pool,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn nets(&self) -> &[Arc<Network>] {
+        &self.nets
+    }
+
+    /// Submit one request (stamps the arrival time).  Returns false when
+    /// the request names an unknown network or the admission queue shed
+    /// it.
+    pub fn submit(&self, mut req: Request) -> bool {
+        if req.net_id >= self.nets.len() {
+            return false;
+        }
+        req.submitted = Instant::now();
+        self.admission.submit(req)
+    }
+
+    /// Requests completed so far (live gauge).
+    pub fn completed(&self) -> u64 {
+        self.collector.completed_count()
+    }
+
+    /// Drain everything in flight, stop all threads, and report.
+    /// Responses arrive in completion order, grouped per network.
+    pub fn shutdown(self) -> Result<(ServerStats, Vec<Response>)> {
+        self.admission.close();
+        self.batcher_handle.join().expect("batcher thread");
+        for h in self.layer_handles {
+            h.join().expect("serve layer thread");
+        }
+        let mut responses = Vec::new();
+        for h in self.completion_handles {
+            responses.extend(h.join().expect("completion thread"));
+        }
+        let wall = self.started.elapsed().as_secs_f64();
+        let pool_report = self.pool.shutdown()?;
+        let stats = self
+            .collector
+            .report(wall, self.admission.shed_count(), &pool_report);
+        Ok((stats, responses))
+    }
+}
+
+/// The batcher thread body: pop fairly from admission, coalesce, dispatch
+/// full batches immediately and partial ones on window expiry; on close,
+/// drain + flush and shut the pipelines down.
+///
+/// Batch handoff to the pipelines is *non-blocking* (`Mailbox::try_send`)
+/// through per-net `ready` buffers: window-expiry dispatch and handoff to
+/// the other networks keep running while one pipeline is stalled.  The
+/// buffered backlog is bounded by `ready_cap` in total — at that point the
+/// batcher stops draining admission, so sustained saturation applies
+/// backpressure globally and overload sheds at `submit()`; admitted
+/// requests are never dropped (except by their own deadlines).  Per-net
+/// admission lanes that would isolate backpressure too are future work
+/// (see ROADMAP).
+fn batcher_loop(
+    admission: Arc<AdmissionQueue>,
+    collector: Arc<StatsCollector>,
+    batch_cfg: BatchCfg,
+    per_net_cap: Vec<Option<usize>>,
+    inboxes: Vec<Arc<Mailbox<InFlight>>>,
+) {
+    let mut batcher = MicroBatcher::new(batch_cfg, &per_net_cap);
+    let mut ready: Vec<VecDeque<InFlight>> =
+        inboxes.iter().map(|_| VecDeque::new()).collect();
+    let ready_cap = 2 * inboxes.len();
+    loop {
+        // Hand buffered batches to any pipeline with capacity, dropping
+        // requests whose deadline lapsed while they waited in the
+        // backlog — overload is exactly when executing them anyway would
+        // waste the scarcest accelerator time.
+        for (net_id, queue) in ready.iter_mut().enumerate() {
+            while let Some(mut batch) = queue.pop_front() {
+                prune_expired(&collector, &mut batch);
+                if batch.items.is_empty() {
+                    continue;
+                }
+                let size = batch.batch_size;
+                match inboxes[net_id].try_send(batch) {
+                    Ok(()) => collector.record_batch(size),
+                    Err(batch) => {
+                        queue.push_front(batch);
+                        break;
+                    }
+                }
+            }
+        }
+        let backlog: usize = ready.iter().map(|q| q.len()).sum();
+        // Sleep until the next window deadline, a handoff retry, or a
+        // coarse idle tick.
+        let timeout = if backlog > 0 {
+            Duration::from_micros(200)
+        } else {
+            match batcher.next_deadline() {
+                Some(deadline) => deadline
+                    .saturating_duration_since(Instant::now())
+                    .max(Duration::from_micros(50)),
+                None => Duration::from_millis(5),
+            }
+        };
+        if backlog < ready_cap {
+            match admission.pop_timeout(timeout) {
+                Ok(Some(req)) => {
+                    let now = Instant::now();
+                    collector.observe_queue_depth(admission.len() + 1);
+                    if req.is_expired(now) {
+                        collector.record_expired();
+                    } else if let Some(batch) = batcher.push(req, now) {
+                        stage(&collector, &mut ready, batch);
+                    }
+                }
+                Ok(None) => {
+                    // Closed + drained: flush stragglers and stop.
+                    for batch in batcher.flush_all() {
+                        stage(&collector, &mut ready, batch);
+                    }
+                    break;
+                }
+                Err(()) => {}
+            }
+        } else {
+            // Pipelines saturated: retry the handoff shortly while
+            // admission absorbs (and beyond its depth, sheds) the load.
+            std::thread::sleep(timeout);
+        }
+        for batch in batcher.poll_expired(Instant::now()) {
+            stage(&collector, &mut ready, batch);
+        }
+    }
+    // Shutdown: guaranteed delivery of everything buffered (the layer
+    // threads are still draining), then close the pipelines.
+    for (net_id, queue) in ready.iter_mut().enumerate() {
+        for batch in queue.drain(..) {
+            collector.record_batch(batch.batch_size);
+            inboxes[net_id].send(batch);
+        }
+    }
+    for inbox in &inboxes {
+        inbox.close();
+    }
+}
+
+/// Convert a finished batch to its in-flight form and buffer it for
+/// handoff to its network's pipeline.  Requests that expired while
+/// pending in the micro-batcher are dropped (and counted) here; the
+/// input tensor is moved out of each request to seed its activation, so
+/// the pipeline carries one copy, not two.  Batch-size stats are
+/// recorded at dispatch, not here — a buffered batch may still shrink
+/// (or vanish) to deadline pruning before it reaches the pipeline.
+fn stage(collector: &StatsCollector, ready: &mut [VecDeque<InFlight>], batch: Batch) {
+    let now = Instant::now();
+    let net_id = batch.net_id;
+    let mut items = Vec::with_capacity(batch.requests.len());
+    for mut req in batch.requests {
+        if req.is_expired(now) {
+            collector.record_expired();
+        } else {
+            let act = std::mem::replace(&mut req.input, Tensor::zeros(&[0]));
+            items.push((req, act));
+        }
+    }
+    if items.is_empty() {
+        return;
+    }
+    let batch_size = items.len();
+    ready[net_id].push_back(InFlight {
+        net_id,
+        batch_size,
+        items,
+    });
+}
+
+/// Drop (and count) the requests of a buffered batch whose deadline
+/// passed while it waited for pipeline capacity.
+fn prune_expired(collector: &StatsCollector, inflight: &mut InFlight) {
+    let now = Instant::now();
+    if inflight.items.iter().any(|(req, _)| req.is_expired(now)) {
+        let items = std::mem::take(&mut inflight.items);
+        for (req, act) in items {
+            if req.is_expired(now) {
+                collector.record_expired();
+            } else {
+                inflight.items.push((req, act));
+            }
+        }
+        inflight.batch_size = inflight.items.len();
+    }
+}

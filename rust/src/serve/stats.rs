@@ -1,0 +1,172 @@
+//! Serving metrics: tail latency, sustained throughput, batch-size and
+//! shed accounting — computed through `util::stats` and rendered with the
+//! shared table builder.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::rt::PoolReport;
+use crate::util::bench::{fmt, Table};
+use crate::util::stats::{mean, percentile};
+
+/// Thread-safe sample sink shared by the batcher / completion threads.
+#[derive(Default)]
+pub struct StatsCollector {
+    latencies_ms: Mutex<Vec<f64>>,
+    batch_sizes: Mutex<Vec<f64>>,
+    completed: AtomicU64,
+    expired: AtomicU64,
+    max_queue_depth: AtomicUsize,
+}
+
+impl StatsCollector {
+    pub fn record_response(&self, latency: Duration) {
+        self.latencies_ms
+            .lock()
+            .unwrap()
+            .push(latency.as_secs_f64() * 1e3);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batch_sizes.lock().unwrap().push(size as f64);
+    }
+
+    /// A request dropped by the batcher because its deadline passed.
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Admission backlog gauge (high-water mark).
+    pub fn observe_queue_depth(&self, depth: usize) {
+        self.max_queue_depth.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    pub fn completed_count(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    /// Fold everything into the final report.
+    pub fn report(&self, wall_seconds: f64, shed: u64, pool: &PoolReport) -> ServerStats {
+        let lat = self.latencies_ms.lock().unwrap().clone();
+        let batches = self.batch_sizes.lock().unwrap().clone();
+        let completed = self.completed.load(Ordering::Relaxed);
+        let max_batch = batches.iter().fold(0.0f64, |a, &b| a.max(b)) as usize;
+        ServerStats {
+            completed,
+            shed,
+            expired: self.expired.load(Ordering::Relaxed),
+            wall_seconds,
+            throughput_rps: completed as f64 / wall_seconds.max(1e-12),
+            mean_ms: mean(&lat),
+            p50_ms: percentile(&lat, 50.0),
+            p95_ms: percentile(&lat, 95.0),
+            p99_ms: percentile(&lat, 99.0),
+            batches: batches.len() as u64,
+            mean_batch: mean(&batches),
+            max_batch,
+            max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
+            jobs_executed: pool.jobs_executed,
+            jobs_stolen: pool.jobs_stolen,
+            steal_attempts: pool.steal_attempts,
+        }
+    }
+}
+
+/// Final serving report (the serving-side analogue of `rt::RtReport`).
+#[derive(Debug, Clone)]
+pub struct ServerStats {
+    /// Requests fully served.
+    pub completed: u64,
+    /// Requests shed at admission (bounded queue full).
+    pub shed: u64,
+    /// Requests dropped because their deadline expired pre-dispatch.
+    pub expired: u64,
+    pub wall_seconds: f64,
+    /// Sustained completions per second over the server's lifetime.
+    pub throughput_rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Micro-batches dispatched.
+    pub batches: u64,
+    pub mean_batch: f64,
+    /// Largest micro-batch observed.
+    pub max_batch: usize,
+    /// Admission backlog high-water mark.
+    pub max_queue_depth: usize,
+    pub jobs_executed: u64,
+    pub jobs_stolen: u64,
+    pub steal_attempts: u64,
+}
+
+impl ServerStats {
+    /// Markdown table (same format as the experiment reports).
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["metric", "value"]);
+        t.row(vec!["requests completed".into(), self.completed.to_string()]);
+        t.row(vec!["requests shed".into(), self.shed.to_string()]);
+        t.row(vec!["requests expired".into(), self.expired.to_string()]);
+        t.row(vec!["wall (s)".into(), fmt(self.wall_seconds)]);
+        t.row(vec!["throughput (req/s)".into(), fmt(self.throughput_rps)]);
+        t.row(vec!["latency mean (ms)".into(), fmt(self.mean_ms)]);
+        t.row(vec!["latency p50 (ms)".into(), fmt(self.p50_ms)]);
+        t.row(vec!["latency p95 (ms)".into(), fmt(self.p95_ms)]);
+        t.row(vec!["latency p99 (ms)".into(), fmt(self.p99_ms)]);
+        t.row(vec!["micro-batches".into(), self.batches.to_string()]);
+        t.row(vec!["mean batch size".into(), fmt(self.mean_batch)]);
+        t.row(vec!["max batch size".into(), self.max_batch.to_string()]);
+        t.row(vec![
+            "max queue depth".into(),
+            self.max_queue_depth.to_string(),
+        ]);
+        t.row(vec!["jobs executed".into(), self.jobs_executed.to_string()]);
+        t.row(vec!["jobs stolen".into(), self.jobs_stolen.to_string()]);
+        t.row(vec![
+            "steal attempts".into(),
+            self.steal_attempts.to_string(),
+        ]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_counters_roll_up() {
+        let c = StatsCollector::default();
+        for i in 1..=100 {
+            c.record_response(Duration::from_millis(i));
+        }
+        c.record_batch(2);
+        c.record_batch(4);
+        c.record_expired();
+        c.observe_queue_depth(3);
+        c.observe_queue_depth(9);
+        c.observe_queue_depth(5);
+        let pool = PoolReport {
+            jobs_executed: 42,
+            per_accel_jobs: vec![42],
+            steal_attempts: 7,
+            jobs_stolen: 3,
+        };
+        let s = c.report(10.0, 5, &pool);
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.shed, 5);
+        assert_eq!(s.expired, 1);
+        assert!((s.throughput_rps - 10.0).abs() < 1e-9);
+        assert!((s.p50_ms - 50.0).abs() <= 1.0);
+        assert!(s.p99_ms >= 99.0);
+        assert_eq!(s.max_batch, 4);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.max_queue_depth, 9);
+        assert_eq!(s.jobs_executed, 42);
+        let rendered = s.render();
+        assert!(rendered.contains("latency p99"));
+        assert!(rendered.contains("max batch size"));
+    }
+}

@@ -12,6 +12,7 @@ use synergy::mm::gemm::gemm_naive;
 use synergy::mm::job::{gather_results, jobs_for_gemm};
 use synergy::mm::tile::{tiled_gemm, TileGrid};
 use synergy::nn::Network;
+use synergy::pipeline::Mailbox;
 use synergy::sched::worksteal::{choose_victim, steal_amount};
 use synergy::sim::{simulate, SimSpec};
 use synergy::tensor::Tensor;
@@ -169,6 +170,56 @@ fn prop_queue_fifo_per_producer() {
             }
             last[p] = Some(seq);
         }
+    });
+}
+
+#[test]
+fn prop_mailbox_mpmc_contention_loses_nothing() {
+    // Regression stress for the MPMC lost-wakeup: many producers and many
+    // consumers hammering a tiny bounded mailbox.  With `notify_one` on the
+    // send/recv paths a wake-up could land on a stale waiter and strand the
+    // pipeline; with `notify_all` every message must arrive exactly once
+    // and all threads must terminate.
+    check("mailbox-mpmc", 8, |g: &mut Gen| {
+        let capacity = g.usize_in(1, 4);
+        let n_producers = g.usize_in(2, 4);
+        let n_consumers = g.usize_in(2, 4);
+        let per = g.usize_in(20, 120);
+        let mb: Arc<Mailbox<(usize, usize)>> = Arc::new(Mailbox::new(capacity));
+        let producers: Vec<_> = (0..n_producers)
+            .map(|p| {
+                let mb = Arc::clone(&mb);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        assert!(mb.send((p, i)), "mailbox closed early");
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..n_consumers)
+            .map(|_| {
+                let mb = Arc::clone(&mb);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = mb.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        mb.close();
+        let mut all: Vec<(usize, usize)> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        assert_eq!(all.len(), n_producers * per, "messages lost or duplicated");
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n_producers * per, "duplicated messages");
     });
 }
 

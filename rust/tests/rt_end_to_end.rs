@@ -5,21 +5,48 @@
 //!
 //! This is the proof that all three layers compose: L1 (Pallas kernel
 //! artifact) runs inside L3 (Rust coordinator) and reproduces L2's (JAX
-//! model) numerics on streaming frames.  Requires `make artifacts`.
+//! model) numerics on streaming frames.  The PJRT cases need
+//! `make artifacts` plus the `pjrt` cargo feature; the native case runs
+//! everywhere (CI included).
 
 use std::sync::Arc;
 
 use synergy::config::zoo;
 use synergy::nn::Network;
 use synergy::rt::driver::run_stream;
-use synergy::rt::{ComputeMode, RtOptions};
+#[cfg(feature = "pjrt")]
+use synergy::rt::ComputeMode;
+use synergy::rt::RtOptions;
+#[cfg(feature = "pjrt")]
 use synergy::runtime::{default_artifacts_dir, ModelOracle};
 use synergy::tensor::Tensor;
 
+#[cfg(feature = "pjrt")]
 fn artifacts_available() -> bool {
     default_artifacts_dir().join("manifest.json").exists()
 }
 
+/// Native end-to-end: the full threaded pipeline on every zoo model —
+/// streams must reproduce the reference forward with no artifacts at all.
+#[test]
+fn native_pipeline_matches_reference_across_zoo() {
+    for name in ["mpcnn", "cifar_darknet", "cifar_full"] {
+        let net = Arc::new(Network::new(zoo::load(name).unwrap(), 32).unwrap());
+        let frames: Vec<(u64, Tensor)> = (0..3).map(|f| (f, net.make_input(f))).collect();
+        let report = run_stream(Arc::clone(&net), RtOptions::default(), frames).unwrap();
+        assert_eq!(report.outputs.len(), 3, "{name}");
+        for (frame_id, out) in &report.outputs {
+            let want = net.forward_reference(&net.make_input(*frame_id));
+            assert!(
+                out.allclose(&want, 1e-4, 1e-4),
+                "{name} frame {frame_id}: {}",
+                out.max_abs_diff(&want)
+            );
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_pipeline_matches_reference_and_oracle() {
     if !artifacts_available() {
@@ -63,6 +90,7 @@ fn pjrt_pipeline_matches_reference_and_oracle() {
     );
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_pipeline_mnist_stream_with_stealing() {
     if !artifacts_available() {

@@ -1,0 +1,168 @@
+//! End-to-end serving integration: multiple client streams over multiple
+//! networks through admission, micro-batching, the per-net pipelines, and
+//! the shared accelerator pool — outputs must match the reference forward
+//! and the request accounting must balance exactly.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use synergy::config::zoo;
+use synergy::nn::Network;
+use synergy::serve::{Request, RequestStream, ServeOptions, Server};
+
+fn mk_net(name: &str) -> Arc<Network> {
+    Arc::new(Network::new(zoo::load(name).unwrap(), 32).unwrap())
+}
+
+#[test]
+fn two_streams_two_networks_zero_loss_and_correct() {
+    let nets = vec![mk_net("mpcnn"), mk_net("mnist")];
+    let mut options = ServeOptions::default();
+    options.batch.max_batch = 4;
+    options.batch.window = Duration::from_millis(4);
+    options.admission_depth = 256;
+    let server = Arc::new(Server::start(nets.clone(), options).unwrap());
+
+    let mut clients = Vec::new();
+    for stream_id in 0..4usize {
+        let net_id = stream_id % nets.len();
+        let server = Arc::clone(&server);
+        let mut stream =
+            RequestStream::new(stream_id, net_id, Arc::clone(&nets[net_id]), 800.0, 8);
+        clients.push(std::thread::spawn(move || {
+            let mut admitted = 0u64;
+            while let Some((gap, req)) = stream.next_arrival() {
+                std::thread::sleep(gap);
+                if server.submit(req) {
+                    admitted += 1;
+                }
+            }
+            admitted
+        }));
+    }
+    let admitted: u64 = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    assert_eq!(admitted, 32, "depth 256 must admit everything");
+
+    let server = match Arc::try_unwrap(server) {
+        Ok(s) => s,
+        Err(_) => panic!("server still shared"),
+    };
+    let (stats, responses) = server.shutdown().unwrap();
+
+    // Zero loss: everything admitted completed (no deadlines set).
+    assert_eq!(stats.completed, admitted);
+    assert_eq!(stats.expired, 0);
+    assert_eq!(responses.len() as u64, admitted);
+
+    // Numerics: every response equals the reference forward for its frame.
+    for resp in &responses {
+        let net = &nets[resp.net_id];
+        let want = net.forward_reference(&net.make_input(resp.frame));
+        assert!(
+            resp.output.allclose(&want, 1e-4, 1e-5),
+            "stream {} seq {}: {}",
+            resp.stream_id,
+            resp.seq,
+            resp.output.max_abs_diff(&want)
+        );
+    }
+
+    // Per-stream FIFO: responses of one stream keep their sequence order
+    // (batches preserve admission order inside one network's pipeline).
+    for sid in 0..4usize {
+        let seqs: Vec<u64> = responses
+            .iter()
+            .filter(|r| r.stream_id == sid)
+            .map(|r| r.seq)
+            .collect();
+        let mut sorted = seqs.clone();
+        sorted.sort_unstable();
+        assert_eq!(seqs, sorted, "stream {sid} reordered");
+    }
+
+    // All conv jobs went through the shared pool.
+    let expected_jobs: u64 = responses
+        .iter()
+        .map(|r| {
+            nets[r.net_id]
+                .conv_infos()
+                .iter()
+                .map(|ci| ci.grid.num_jobs())
+                .sum::<usize>() as u64
+        })
+        .sum();
+    assert_eq!(stats.jobs_executed, expected_jobs);
+}
+
+#[test]
+fn overload_sheds_instead_of_blocking() {
+    let nets = vec![mk_net("mpcnn"), mk_net("mnist")];
+    let mut options = ServeOptions::default();
+    // Tiny admission queue + slow window: floods must shed, not hang.
+    options.admission_depth = 2;
+    options.batch.max_batch = 2;
+    options.batch.window = Duration::from_millis(1);
+    let server = Server::start(nets.clone(), options).unwrap();
+    let mut admitted = 0u64;
+    let mut shed = 0u64;
+    // Burst far beyond the depth without pacing.
+    for seq in 0..64u64 {
+        let req = Request::new(0, seq, 0, nets[0].make_input(seq));
+        if server.submit(req) {
+            admitted += 1;
+        } else {
+            shed += 1;
+        }
+    }
+    let (stats, responses) = server.shutdown().unwrap();
+    assert_eq!(admitted + shed, 64);
+    assert!(shed > 0, "a 2-deep queue cannot absorb a 64-burst");
+    assert_eq!(stats.shed, shed);
+    assert_eq!(stats.completed, admitted);
+    assert_eq!(responses.len() as u64, admitted);
+}
+
+#[test]
+fn deadline_expiry_is_counted_not_lost() {
+    let nets = vec![mk_net("mpcnn"), mk_net("mnist")];
+    let mut options = ServeOptions::default();
+    options.batch.window = Duration::from_millis(1);
+    let server = Server::start(nets.clone(), options).unwrap();
+    // A deadline of zero: expired by the time the batcher sees it.
+    let req = Request::new(0, 0, 0, nets[0].make_input(0)).with_deadline(Duration::ZERO);
+    assert!(server.submit(req));
+    // And one serviceable request.
+    let req = Request::new(0, 1, 0, nets[0].make_input(1));
+    assert!(server.submit(req));
+    // Give the batcher time to drain both before shutdown.
+    std::thread::sleep(Duration::from_millis(50));
+    let (stats, responses) = server.shutdown().unwrap();
+    assert_eq!(stats.expired, 1);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(responses.len(), 1);
+    assert_eq!(responses[0].seq, 1);
+}
+
+#[test]
+fn batching_observed_under_synchronized_burst() {
+    let nets = vec![mk_net("mpcnn"), mk_net("mnist")];
+    let mut options = ServeOptions::default();
+    options.batch.max_batch = 4;
+    // Wide window so the whole burst coalesces deterministically.
+    options.batch.window = Duration::from_millis(200);
+    options.admission_depth = 64;
+    let server = Server::start(nets.clone(), options).unwrap();
+    for seq in 0..8u64 {
+        let req = Request::new(0, seq, 0, nets[0].make_input(seq));
+        assert!(server.submit(req));
+    }
+    std::thread::sleep(Duration::from_millis(100));
+    let (stats, responses) = server.shutdown().unwrap();
+    assert_eq!(stats.completed, 8);
+    assert!(
+        stats.max_batch > 1,
+        "an 8-burst into a 200ms window must batch (max {})",
+        stats.max_batch
+    );
+    assert!(responses.iter().any(|r| r.batch_size > 1));
+}
