@@ -1,6 +1,10 @@
 //! `cargo bench --bench serve_throughput` — sustained multi-stream serving
 //! throughput (admission → micro-batcher → pipelines → shared pool) vs the
-//! single-stream driver baseline, across batch policies.
+//! single-stream driver baseline, across batch policies, plus the
+//! `[serving]` knob sweep (`drain_extra` × `steal_min_victim`).  The
+//! shipped defaults (`drain_extra = 3`, `steal_min_victim = 0` = the
+//! batch-derived threshold) are provisional until this sweep runs on the
+//! target hardware.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -17,10 +21,27 @@ const REQUESTS_PER_STREAM: u64 = 16;
 const RATE_RPS: f64 = 1000.0;
 
 fn serve_run(nets: &[Arc<Network>], max_batch: usize) -> (f64, f64, f64, f64) {
+    serve_run_knobs(nets, max_batch, None, None)
+}
+
+/// One serving run with optional `[serving]` knob overrides
+/// (`None` = the shipped defaults from `ServeCfg`).
+fn serve_run_knobs(
+    nets: &[Arc<Network>],
+    max_batch: usize,
+    drain_extra: Option<usize>,
+    steal_min_victim: Option<usize>,
+) -> (f64, f64, f64, f64) {
     let mut options = ServeOptions::default();
     options.batch.max_batch = max_batch;
     options.batch.window = Duration::from_micros(1500);
     options.admission_depth = 1024;
+    if let Some(d) = drain_extra {
+        options.hw.serving.drain_extra = d;
+    }
+    if let Some(s) = steal_min_victim {
+        options.hw.serving.steal_min_victim = s;
+    }
     let server = Arc::new(Server::start(nets.to_vec(), options).unwrap());
     let mut clients = Vec::new();
     for stream_id in 0..STREAMS {
@@ -101,6 +122,34 @@ fn main() {
         ]);
     }
     table.print();
+
+    // `[serving]` knob sweep: delegate drain depth × thief steal
+    // threshold (0 = the batch-derived `StealPolicy::batched` default).
+    // The shipped defaults (drain_extra = 3, steal_min_victim = 0) are
+    // provisional; run this sweep on target hardware to pick real ones.
+    let mut sweep = Table::new(&[
+        "drain_extra",
+        "steal_min_victim",
+        "req/s",
+        "p99 ms",
+    ]);
+    for drain in [0usize, 3, 7] {
+        for steal_min in [0usize, 8] {
+            let (rps, _p50, p99, _mb) =
+                serve_run_knobs(&nets, 4, Some(drain), Some(steal_min));
+            sweep.row(vec![
+                drain.to_string(),
+                if steal_min == 0 {
+                    "auto".into()
+                } else {
+                    steal_min.to_string()
+                },
+                fmt(rps),
+                fmt(p99),
+            ]);
+        }
+    }
+    sweep.print();
     println!(
         "[bench] serve_throughput finished in {:.2}s",
         t0.elapsed().as_secs_f64()

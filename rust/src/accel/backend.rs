@@ -1,0 +1,379 @@
+//! The unified execution-backend abstraction (paper §3.1 "unified
+//! abstraction of heterogeneous accelerators").
+//!
+//! Every delegate thread drives one [`Accelerator`] — an object-safe trait
+//! whose implementors execute pool [`Job`]s and advertise capability
+//! ([`Accelerator::supports`]) and cost ([`Accelerator::cost`]) metadata.
+//! Three backends ship in-tree:
+//!
+//! * [`NativeGemm`] — the blocked-GEMM "NEON" software accelerator;
+//! * [`BigNeonGemm`] — a multi-threaded tiled-SIMD GEMM modelling a
+//!   big-core NEON cluster (row-chunked [`gemm_blocked_mt`]);
+//! * `PjrtPe` — the FPGA PE path: the AOT Pallas job kernel through PJRT
+//!   (compiled under the `pjrt` cargo feature; without it the registry
+//!   entry falls back to [`NativeGemm`]).
+//!
+//! Backends are looked up by name in a [`BackendRegistry`], keyed from the
+//! `[cluster]` sections of the hardware config: each cluster member's
+//! accelerator class resolves to a registry key
+//! (see `rt::pool`), so a future backend (GPU, remote shard) plugs in by
+//! registering a name — no driver rewrite.
+//!
+//! [`gemm_blocked_mt`]: crate::mm::gemm::gemm_blocked_mt
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::mm::job::{ClassMask, Job, JobClass, JobKind, JobResult};
+
+/// An execution backend a delegate thread drives.  Object-safe so the pool
+/// holds `Box<dyn Accelerator>` uniformly; implementors need not be `Send`
+/// (each is built *inside* its delegate thread — the PJRT engine is
+/// `Rc`-backed, and hardware-wise each PE is its own kernel instance).
+pub trait Accelerator {
+    /// Registry key / display name, e.g. "neon" or "pjrt-pe".
+    fn id(&self) -> &str;
+
+    /// Can this backend execute jobs of `class`?
+    fn supports(&self, class: JobClass) -> bool;
+
+    /// Relative service-cost estimate for `job` (k-steps scaled by the
+    /// backend's parallelism; comparable across backends of one pool).
+    /// Advisory metadata with a k-steps default: current routing uses
+    /// cluster-level `PerfModel` service rates and the thief uses
+    /// `StealPolicy::class_cost`, so implementors should not expect
+    /// per-job routing effects from this yet (a cost-aware dispatcher is
+    /// the intended consumer) — override only when the backend's
+    /// parallelism skews cost away from raw k-steps.
+    fn cost(&self, job: &Job) -> f64 {
+        job.ksteps() as f64
+    }
+
+    /// Execute one job.  Errors are fatal to the delegate (a backend that
+    /// cannot compute is a broken accelerator, not a scheduling event).
+    fn execute(&mut self, job: &Job) -> Result<JobResult>;
+}
+
+/// The native blocked-GEMM software accelerator (the paper's NEON path).
+pub struct NativeGemm;
+
+impl Accelerator for NativeGemm {
+    fn id(&self) -> &str {
+        "neon"
+    }
+
+    fn supports(&self, _class: JobClass) -> bool {
+        true
+    }
+
+    fn execute(&mut self, job: &Job) -> Result<JobResult> {
+        Ok(job.execute_native())
+    }
+}
+
+/// A big-core NEON cluster: `threads` cores running the row-chunked
+/// multi-threaded tiled-SIMD GEMM.  GEMM work — whole-matrix FC jobs and
+/// CONV tiles alike — fans its output rows across the cores (keeping the
+/// backend consistent with `PerfModel::big_neon`'s thread-scaled rate);
+/// im2col is pure data movement and runs on one core.
+///
+/// Fan-out only pays above [`MT_MIN_MACS`]: scoped spawn+join costs tens
+/// of µs, so small jobs run single-core (a persistent per-backend worker
+/// team that removes this threshold is a ROADMAP item).
+pub struct BigNeonGemm {
+    pub threads: usize,
+}
+
+/// Minimum MACs before [`BigNeonGemm`] fans a job across its thread team
+/// (~1 MMAC ≈ hundreds of µs of work: enough to amortize spawn+join).
+pub const MT_MIN_MACS: u64 = 1 << 20;
+
+/// Row-parallel CONV-tile kernel over packed (K,TS,TS) operands: thread
+/// `t` owns a contiguous row range of the output tile and runs the shared
+/// [`gemm_blocked_into`] kernel over its slice of every inner tile — same
+/// per-row accumulation order as the single-core path, and one GEMM
+/// kernel to maintain.
+///
+/// [`gemm_blocked_into`]: crate::mm::gemm::gemm_blocked_into
+fn conv_tile_mt(at: &[f32], bt: &[f32], k_tiles: usize, ts: usize, threads: usize) -> Vec<f32> {
+    let threads = threads.clamp(1, ts);
+    if threads == 1 {
+        return crate::mm::tile::job_mm_native(at, bt, k_tiles, ts);
+    }
+    let mut c = vec![0.0f32; ts * ts];
+    let rows_per = ts.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (i, c_chunk) in c.chunks_mut(rows_per * ts).enumerate() {
+            let r0 = i * rows_per;
+            s.spawn(move || {
+                let rows = c_chunk.len() / ts;
+                for kt in 0..k_tiles {
+                    let tile = kt * ts * ts;
+                    let a_sub = &at[tile + r0 * ts..tile + (r0 + rows) * ts];
+                    let b_tile = &bt[tile..tile + ts * ts];
+                    crate::mm::gemm::gemm_blocked_into(a_sub, b_tile, c_chunk, rows, ts, ts);
+                }
+            });
+        }
+    });
+    c
+}
+
+impl Accelerator for BigNeonGemm {
+    fn id(&self) -> &str {
+        "big-neon"
+    }
+
+    fn supports(&self, _class: JobClass) -> bool {
+        true
+    }
+
+    fn cost(&self, job: &Job) -> f64 {
+        match job.class() {
+            JobClass::FcGemm | JobClass::ConvTile => {
+                job.ksteps() as f64 / self.threads.max(1) as f64
+            }
+            JobClass::Im2col => job.ksteps() as f64,
+        }
+    }
+
+    fn execute(&mut self, job: &Job) -> Result<JobResult> {
+        let g = job.desc.grid;
+        match &job.kind {
+            JobKind::FcGemm { a, b } if (g.m * g.n * g.p) as u64 >= MT_MIN_MACS => {
+                let data =
+                    crate::mm::gemm::gemm_blocked_mt(a, b, g.m, g.n, g.p, self.threads);
+                Ok(JobResult {
+                    desc: job.desc,
+                    data,
+                })
+            }
+            JobKind::ConvTile { .. }
+                if (job.desc.k_tiles() * g.ts * g.ts * g.ts) as u64 >= MT_MIN_MACS =>
+            {
+                let (at, bt) = job.pack_tiles();
+                let data =
+                    conv_tile_mt(&at, &bt, job.desc.k_tiles(), g.ts, self.threads);
+                Ok(JobResult {
+                    desc: job.desc,
+                    data,
+                })
+            }
+            // Small GEMMs and im2col: single-core, fan-out would not pay.
+            _ => Ok(job.execute_native()),
+        }
+    }
+}
+
+/// The FPGA PE backend: the AOT Pallas job kernel executed through PJRT.
+/// Only speaks CONV tiles — exactly what the hardware kernel computes.
+#[cfg(feature = "pjrt")]
+pub struct PjrtPe {
+    engine: Box<crate::runtime::PeEngine>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtPe {
+    pub fn new(engine: crate::runtime::PeEngine) -> PjrtPe {
+        PjrtPe {
+            engine: Box::new(engine),
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Accelerator for PjrtPe {
+    fn id(&self) -> &str {
+        "pjrt-pe"
+    }
+
+    fn supports(&self, class: JobClass) -> bool {
+        class == JobClass::ConvTile
+    }
+
+    fn execute(&mut self, job: &Job) -> Result<JobResult> {
+        if job.class() != JobClass::ConvTile {
+            anyhow::bail!("pjrt-pe cannot execute {} jobs", job.class().label());
+        }
+        let (at, bt) = job.pack_tiles();
+        let data = self.engine.execute_job(&at, &bt, job.desc.k_tiles())?;
+        Ok(JobResult {
+            desc: job.desc,
+            data,
+        })
+    }
+}
+
+/// Shared constructor for registered backends.  `Fn` (not `FnOnce`): one
+/// entry builds one backend instance per delegate thread.
+pub type BackendBuilder = Arc<dyn Fn() -> Result<Box<dyn Accelerator>> + Send + Sync>;
+
+/// One registered backend: name, capability mask (known *before* any
+/// instance exists, so the pool can route and the thief can filter), and
+/// the per-delegate builder.
+pub struct BackendEntry {
+    name: String,
+    pub caps: ClassMask,
+    builder: BackendBuilder,
+}
+
+impl BackendEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Clone the builder handle (moved into a delegate thread).
+    pub fn builder(&self) -> BackendBuilder {
+        Arc::clone(&self.builder)
+    }
+}
+
+/// Name-keyed backend registry.  [`BackendRegistry::with_defaults`]
+/// registers the three in-tree backends; callers may register additional
+/// ones (latest registration of a name wins) before starting a pool.
+#[derive(Default)]
+pub struct BackendRegistry {
+    entries: Vec<BackendEntry>,
+}
+
+impl BackendRegistry {
+    /// An empty registry.
+    pub fn new() -> BackendRegistry {
+        BackendRegistry::default()
+    }
+
+    /// The stock registry: "neon", "big-neon" (with `big_threads` cores),
+    /// and "pjrt-pe" (loading AOT artifacts from `artifacts`; a native
+    /// fallback when the `pjrt` feature is off — its capability mask stays
+    /// conservative at CONV-tile-only either way, so routing decisions do
+    /// not depend on the feature flag).
+    pub fn with_defaults(artifacts: PathBuf, big_threads: usize) -> BackendRegistry {
+        let mut reg = BackendRegistry::new();
+        reg.register("neon", ClassMask::all(), || {
+            Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
+        });
+        let threads = big_threads.max(1);
+        reg.register("big-neon", ClassMask::all(), move || {
+            Ok(Box::new(BigNeonGemm { threads }) as Box<dyn Accelerator>)
+        });
+        let art = artifacts;
+        reg.register(
+            "pjrt-pe",
+            ClassMask::of(&[JobClass::ConvTile]),
+            move || {
+                #[cfg(feature = "pjrt")]
+                {
+                    use anyhow::Context;
+                    let engine = crate::runtime::PeEngine::load(&art, None)
+                        .context("loading PE engine (run `make artifacts`)")?;
+                    Ok(Box::new(PjrtPe::new(engine)) as Box<dyn Accelerator>)
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    // Native-GEMM fallback: the `pjrt` feature is off, so
+                    // PE delegates compute natively.
+                    let _ = &art;
+                    Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
+                }
+            },
+        );
+        reg
+    }
+
+    /// Register (or replace) a backend under `name`.
+    pub fn register<F>(&mut self, name: &str, caps: ClassMask, builder: F)
+    where
+        F: Fn() -> Result<Box<dyn Accelerator>> + Send + Sync + 'static,
+    {
+        self.entries.retain(|e| e.name != name);
+        self.entries.push(BackendEntry {
+            name: name.to_string(),
+            caps,
+            builder: Arc::new(builder),
+        });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BackendEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mm::job::jobs_for_gemm;
+    use crate::mm::TileGrid;
+    use crate::util::rng::XorShift64Star;
+
+    #[test]
+    fn default_registry_has_all_three_backends() {
+        let reg = BackendRegistry::with_defaults(PathBuf::from("/nonexistent"), 4);
+        for name in ["neon", "big-neon", "pjrt-pe"] {
+            assert!(reg.get(name).is_some(), "{name}");
+        }
+        assert!(reg.get("neon").unwrap().caps.supports(JobClass::FcGemm));
+        assert!(!reg
+            .get("pjrt-pe")
+            .unwrap()
+            .caps
+            .supports(JobClass::FcGemm));
+        assert!(reg.get("gpu").is_none());
+    }
+
+    #[test]
+    fn registration_latest_wins() {
+        let mut reg = BackendRegistry::new();
+        reg.register("x", ClassMask::all(), || {
+            Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
+        });
+        reg.register("x", ClassMask::of(&[JobClass::Im2col]), || {
+            Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
+        });
+        assert_eq!(reg.names(), vec!["x"]);
+        assert_eq!(reg.get("x").unwrap().caps, ClassMask::of(&[JobClass::Im2col]));
+    }
+
+    #[test]
+    fn big_neon_matches_native_on_every_class() {
+        let mut big = BigNeonGemm { threads: 4 };
+        let mut native = NativeGemm;
+        // CONV tile jobs.
+        let grid = TileGrid::new(40, 50, 60, 32);
+        let a = std::sync::Arc::new(XorShift64Star::new(1).fill_f32(40 * 50, 1.0));
+        let b = std::sync::Arc::new(XorShift64Star::new(2).fill_f32(50 * 60, 1.0));
+        let mut id = 0;
+        for job in jobs_for_gemm(0, 0, grid, a, b, &mut id) {
+            let x = big.execute(&job).unwrap();
+            let y = native.execute(&job).unwrap();
+            assert_eq!(x.data, y.data);
+        }
+        // FC job: multi-threaded path, bit-identical to single-threaded.
+        // 2048×1024 ≥ MT_MIN_MACS, so this exercises the fan-out branch.
+        let (out_n, in_n) = (2048, 1024);
+        let w = std::sync::Arc::new(XorShift64Star::new(3).fill_f32(out_n * in_n, 1.0));
+        let x = std::sync::Arc::new(XorShift64Star::new(4).fill_f32(in_n, 1.0));
+        let job = Job::fc(0, 0, 0, out_n, in_n, w, x, 32);
+        assert!((out_n * in_n) as u64 >= MT_MIN_MACS);
+        assert!(big.cost(&job) < native.cost(&job));
+        let got = big.execute(&job).unwrap();
+        let want = native.execute(&job).unwrap();
+        assert_eq!(got.data, want.data);
+
+        // Heavy CONV tile (K=32 ⇒ 1 MMAC): exercises conv_tile_mt.
+        let grid = TileGrid::new(32, 1024, 32, 32);
+        let a = std::sync::Arc::new(XorShift64Star::new(5).fill_f32(32 * 1024, 1.0));
+        let b = std::sync::Arc::new(XorShift64Star::new(6).fill_f32(1024 * 32, 1.0));
+        let mut id = 0;
+        let jobs = jobs_for_gemm(0, 0, grid, a, b, &mut id);
+        assert!((jobs[0].desc.k_tiles() * 32 * 32 * 32) as u64 >= MT_MIN_MACS);
+        let got = big.execute(&jobs[0]).unwrap();
+        let want = native.execute(&jobs[0]).unwrap();
+        assert_eq!(got.data, want.data);
+    }
+}

@@ -1,16 +1,23 @@
-//! Heterogeneous accelerators: FPGA processing engines (PEs) and NEON
-//! software accelerators (paper §3.1.1 "Heterogeneous Accelerators").
+//! Heterogeneous accelerators: FPGA processing engines (PEs), NEON
+//! software accelerators, and big-core NEON clusters (paper §3.1.1
+//! "Heterogeneous Accelerators").
 //!
 //! Split cleanly into:
 //! * a **timing model** ([`PerfModel`], `timing.rs`) — the paper's HLS
 //!   latency analysis (§3.2.1) turned into per-job service times, used by
 //!   the virtual-clock simulator that regenerates the paper's figures;
-//! * an **execution backend** (`rt/` delegate threads) — real compute via
-//!   the AOT Pallas kernel on PJRT (PE path) or the native blocked GEMM
-//!   (NEON path).
+//! * an **execution abstraction** ([`Accelerator`], `backend.rs`) — the
+//!   object-safe trait every delegate thread drives, plus the name-keyed
+//!   [`BackendRegistry`] the pool resolves `[cluster]` members through:
+//!   the AOT Pallas kernel on PJRT (PE path), the native blocked GEMM
+//!   (NEON path), or the multi-threaded big-core GEMM.
 
+pub mod backend;
 pub mod timing;
 
+pub use backend::{
+    Accelerator, BackendBuilder, BackendEntry, BackendRegistry, BigNeonGemm, NativeGemm,
+};
 pub use timing::{AccelClass, PerfModel};
 
 use crate::config::{ClusterCfg, HwConfig};
@@ -93,6 +100,17 @@ pub fn build_clusters(hw: &HwConfig) -> Vec<ClusterSpec> {
             });
             next_id += 1;
         }
+        for n in 0..ccfg.big_neon {
+            members.push(AccelSpec {
+                id: next_id,
+                cluster: ci,
+                name: format!("BIG#{n}@c{ci}"),
+                class: AccelClass::BigNeon,
+                perf: PerfModel::big_neon(hw.tile_size, hw.cpu_mhz, hw.big_neon_threads),
+                mmu: None,
+            });
+            next_id += 1;
+        }
         clusters.push(ClusterSpec {
             index: ci,
             name: ccfg.name.clone(),
@@ -143,12 +161,22 @@ pub fn filter_clusters<F: Fn(&AccelSpec) -> bool>(
     filtered
 }
 
-/// `(cluster_cfg, …)` pretty description, e.g. "2N+2S | 6F".
+/// `(cluster_cfg, …)` pretty description, e.g. "2N+2S | 6F" (a "+xB"
+/// suffix appears when big-core NEON clusters are configured).
 pub fn describe(clusters: &[ClusterSpec]) -> String {
     clusters
         .iter()
         .map(|c| {
-            let neon = c.members.iter().filter(|m| !m.is_fpga()).count();
+            let neon = c
+                .members
+                .iter()
+                .filter(|m| m.class == AccelClass::Neon)
+                .count();
+            let big = c
+                .members
+                .iter()
+                .filter(|m| m.class == AccelClass::BigNeon)
+                .count();
             let spe = c
                 .members
                 .iter()
@@ -159,7 +187,11 @@ pub fn describe(clusters: &[ClusterSpec]) -> String {
                 .iter()
                 .filter(|m| m.name.starts_with("F-PE"))
                 .count();
-            format!("{}N+{}S+{}F", neon, spe, fpe)
+            let mut s = format!("{}N+{}S+{}F", neon, spe, fpe);
+            if big > 0 {
+                s.push_str(&format!("+{}B", big));
+            }
+            s
         })
         .collect::<Vec<_>>()
         .join(" | ")
@@ -183,6 +215,7 @@ pub fn clusters_from_tuples(hw: &HwConfig, tuples: &[(usize, usize, usize)]) -> 
             ClusterCfg {
                 name: format!("cluster{i}"),
                 neon: *neon,
+                big_neon: 0,
                 pes,
             }
         })
@@ -242,6 +275,29 @@ mod tests {
         assert_eq!(neon_only.len(), 1); // cluster1 had no NEONs → dropped
         assert_eq!(neon_only[0].index, 0);
         assert!(neon_only[0].members.iter().all(|m| m.cluster == 0));
+    }
+
+    #[test]
+    fn big_neon_members_built_from_config() {
+        let mut hw = HwConfig::default_zc702();
+        hw.clusters[0].big_neon = 1;
+        hw.big_neon_threads = 4;
+        let clusters = build_clusters(&hw);
+        assert_eq!(clusters[0].members.len(), 5);
+        let big: Vec<&AccelSpec> = clusters[0]
+            .members
+            .iter()
+            .filter(|m| m.class == AccelClass::BigNeon)
+            .collect();
+        assert_eq!(big.len(), 1);
+        assert!(big[0].name.starts_with("BIG#"));
+        assert!(!big[0].is_fpga());
+        assert!(big[0].mmu.is_none());
+        assert!(describe(&clusters).starts_with("2N+2S+0F+1B"));
+        // ids stay dense
+        for (i, a) in all_accels(&clusters).iter().enumerate() {
+            assert_eq!(a.id, i);
+        }
     }
 
     #[test]

@@ -20,6 +20,9 @@ use crate::config::{PeKind, PeTypeCfg};
 pub enum AccelClass {
     FpgaPe { type_name: String },
     Neon,
+    /// Big-core NEON cluster: several application cores running the
+    /// multi-threaded tiled-SIMD GEMM backend (`accel::backend::BigNeonGemm`).
+    BigNeon,
 }
 
 /// Timing model of one accelerator.
@@ -100,6 +103,27 @@ impl PerfModel {
         }
     }
 
+    /// Big-core NEON cluster: `threads` out-of-order application cores
+    /// (A72-class) driving the multi-threaded tiled GEMM.  Per-core f32
+    /// rate ≈0.5 MAC/cycle (dual-issue NEON, still memory-bound on large
+    /// panels); the cores aggregate near-linearly on row-chunked GEMMs.
+    /// Per-job overhead is higher than a plain NEON call: the backend
+    /// fans work out across a thread team.
+    pub fn big_neon(ts: usize, cpu_mhz: f64, threads: usize) -> PerfModel {
+        let clock_hz = cpu_mhz * 1e6;
+        let macs_per_cycle = 0.5 * threads.max(1) as f64;
+        let macs_per_kstep = (ts * ts * ts) as f64;
+        PerfModel {
+            kstep_seconds: macs_per_kstep / (macs_per_cycle * clock_hz),
+            job_overhead_seconds: 6e-6, // queue pop + thread-team fan-out
+            bytes_per_kstep: (2 * ts * ts * 4) as u64,
+            writeback_bytes: (ts * ts * 4) as u64,
+            uses_fpga_mmu: false,
+            macs_per_cycle,
+            clock_hz,
+        }
+    }
+
     /// Compute-only service time of a job with `k` k-steps (no memory).
     pub fn compute_seconds(&self, k: usize) -> f64 {
         self.job_overhead_seconds + k as f64 * self.kstep_seconds
@@ -158,6 +182,17 @@ mod tests {
         let t10 = f.compute_seconds(10);
         assert!((t10 - t1 - 9.0 * f.kstep_seconds).abs() < 1e-12);
         assert!(t1 > f.job_overhead_seconds);
+    }
+
+    #[test]
+    fn big_neon_scales_with_threads() {
+        let one = PerfModel::big_neon(32, 1200.0, 1);
+        let four = PerfModel::big_neon(32, 1200.0, 4);
+        assert!((one.kstep_seconds / four.kstep_seconds - 4.0).abs() < 1e-9);
+        assert!(!four.uses_fpga_mmu);
+        // A 4-wide big cluster at 1.2 GHz out-runs one A9 NEON.
+        let neon = PerfModel::neon(32, 667.0);
+        assert!(four.kstep_seconds < neon.kstep_seconds);
     }
 
     #[test]

@@ -124,12 +124,45 @@ impl<T> JobQueue<T> {
 
     /// Steal up to `n` jobs from the back (the victim side).
     pub fn steal(&self, n: usize) -> Vec<T> {
+        self.steal_where(n, |_| true)
+    }
+
+    /// Steal up to `n` jobs from the back, taking only those matching
+    /// `pred` (capability-aware stealing: a thief must not deposit jobs a
+    /// destination cluster cannot execute).  Non-matching jobs keep their
+    /// relative order.  Single linear back-to-front pass — the lock is
+    /// held on the busiest queue, so no quadratic `remove` shifting.
+    pub fn steal_where(&self, n: usize, pred: impl Fn(&T) -> bool) -> Vec<T> {
+        if n == 0 {
+            return Vec::new();
+        }
         let mut g = self.inner.lock().unwrap();
-        let take = n.min(g.deque.len());
-        let mut out = Vec::with_capacity(take);
-        for _ in 0..take {
-            if let Some(item) = g.deque.pop_back() {
-                out.push(item);
+        let mut out = Vec::new();
+        let mut skipped = Vec::new();
+        while out.len() < n {
+            match g.deque.pop_back() {
+                Some(item) if pred(&item) => out.push(item),
+                Some(item) => skipped.push(item),
+                None => break,
+            }
+        }
+        // Restore the non-matching tail in its original order.
+        for item in skipped.into_iter().rev() {
+            g.deque.push_back(item);
+        }
+        out
+    }
+
+    /// Snapshot of queue occupancy per job class: `result[i]` counts items
+    /// whose `classify` index is `i` (out-of-range indices are dropped).
+    /// Used by the thief's cost-weighted victim selection.
+    pub fn class_counts(&self, n_classes: usize, classify: impl Fn(&T) -> usize) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        let mut out = vec![0usize; n_classes];
+        for item in &g.deque {
+            let i = classify(item);
+            if i < n_classes {
+                out[i] += 1;
             }
         }
         out
@@ -184,6 +217,35 @@ mod tests {
         assert_eq!(stolen, vec![5, 4]);
         assert_eq!(q.len(), 4);
         assert_eq!(q.try_pop(), Some(0)); // front untouched
+    }
+
+    #[test]
+    fn steal_where_filters_and_preserves_order() {
+        let q = JobQueue::new();
+        for i in 0..8 {
+            q.push(i);
+        }
+        // Steal evens only, from the back.
+        let stolen = q.steal_where(2, |v| v % 2 == 0);
+        assert_eq!(stolen, vec![6, 4]);
+        // Remaining items keep FIFO order with the gaps closed.
+        q.close();
+        let mut rest = Vec::new();
+        while let Some(v) = q.pop_blocking() {
+            rest.push(v);
+        }
+        assert_eq!(rest, vec![0, 1, 2, 3, 5, 7]);
+    }
+
+    #[test]
+    fn class_counts_snapshot() {
+        let q = JobQueue::new();
+        for i in 0..7 {
+            q.push(i);
+        }
+        let counts = q.class_counts(2, |v| (v % 3) as usize);
+        // 0,3,6 → class 0; 1,4 → class 1; 2,5 → class 2 (out of range, dropped)
+        assert_eq!(counts, vec![3, 2]);
     }
 
     #[test]

@@ -38,6 +38,9 @@ pub struct ClusterCfg {
     pub name: String,
     /// NEON software accelerators assigned to this cluster.
     pub neon: usize,
+    /// Big-core NEON cluster accelerators (each drives the multi-threaded
+    /// tiled-SIMD GEMM backend with `big_neon_threads` cores).
+    pub big_neon: usize,
     /// (pe_type name, count) pairs.
     pub pes: Vec<(String, usize)>,
 }
@@ -48,7 +51,7 @@ impl ClusterCfg {
     }
 
     pub fn total_accels(&self) -> usize {
-        self.total_pes() + self.neon
+        self.total_pes() + self.neon + self.big_neon
     }
 }
 
@@ -80,8 +83,21 @@ pub struct ServeCfg {
     /// Batching window: a partially-filled batch is dispatched once its
     /// oldest request has waited this many microseconds.
     pub batch_window_us: u64,
-    /// Bounded admission-queue depth; requests beyond it are shed.
+    /// Bounded admission depth *per network lane*; requests beyond a
+    /// lane's depth are shed (one stalled network sheds only its own
+    /// traffic).
     pub admission_depth: usize,
+    /// Extra jobs a delegate drains per queue visit while serving
+    /// (amortizes queue locks over micro-batch job runs; see
+    /// `rt::delegate::spawn`).  Default 3 is provisional — 0 forfeits the
+    /// lock amortization, large values hold jobs away from the thief.
+    /// Retune with the `serve_throughput` bench sweep on real hardware.
+    pub drain_extra: usize,
+    /// Minimum victim queue length the thief steals from.  0 = derive it
+    /// from the served networks' batch job counts
+    /// (`StealPolicy::batched`); a positive value overrides the
+    /// derivation.  Sweep alongside `drain_extra`.
+    pub steal_min_victim: usize,
 }
 
 impl Default for ServeCfg {
@@ -90,6 +106,8 @@ impl Default for ServeCfg {
             max_batch: 4,
             batch_window_us: 2000,
             admission_depth: 64,
+            drain_extra: 3,
+            steal_min_victim: 0,
         }
     }
 }
@@ -101,6 +119,9 @@ pub struct HwConfig {
     pub fpga_mhz: f64,
     pub cpu_mhz: f64,
     pub tile_size: usize,
+    /// Cores per big-NEON cluster accelerator (`[cluster] big_neon`
+    /// instances fan GEMMs across this many threads).
+    pub big_neon_threads: usize,
     pub pe_types: Vec<PeTypeCfg>,
     pub clusters: Vec<ClusterCfg>,
     pub memsub: MemSubCfg,
@@ -123,6 +144,10 @@ impl HwConfig {
 
     pub fn total_neons(&self) -> usize {
         self.clusters.iter().map(|c| c.neon).sum()
+    }
+
+    pub fn total_big_neons(&self) -> usize {
+        self.clusters.iter().map(|c| c.big_neon).sum()
     }
 
     /// Validate cross-references and invariants.
@@ -162,6 +187,9 @@ impl HwConfig {
         if self.serving.admission_depth == 0 {
             bail!("serving admission_depth must be ≥ 1");
         }
+        if self.big_neon_threads == 0 {
+            bail!("big_neon_threads must be ≥ 1");
+        }
         Ok(())
     }
 
@@ -171,6 +199,7 @@ impl HwConfig {
         let mut fpga_mhz = 100.0;
         let mut cpu_mhz = 667.0;
         let mut tile_size = 32;
+        let mut big_neon_threads = 4;
         let mut pe_types = Vec::new();
         let mut clusters = Vec::new();
         let mut memsub = MemSubCfg {
@@ -211,6 +240,7 @@ impl HwConfig {
                         clusters.push(ClusterCfg {
                             name: format!("cluster{}", clusters.len()),
                             neon: 0,
+                            big_neon: 0,
                             pes: Vec::new(),
                         });
                         Sec::Cluster
@@ -246,6 +276,7 @@ impl HwConfig {
                     "fpga_mhz" => fpga_mhz = parse_f64()?,
                     "cpu_mhz" => cpu_mhz = parse_f64()?,
                     "tile_size" => tile_size = parse_usize()?,
+                    "big_neon_threads" => big_neon_threads = parse_usize()?,
                     other => bail!("{name}:{}: unknown device key {other}", lineno + 1),
                 },
                 Sec::Cluster => {
@@ -253,6 +284,7 @@ impl HwConfig {
                     match k {
                         "name" => c.name = v.to_string(),
                         "neon" => c.neon = parse_usize()?,
+                        "big_neon" => c.big_neon = parse_usize()?,
                         "pe" => {
                             // pe=F-PE:6 (repeatable)
                             let (t, n) = v
@@ -299,6 +331,8 @@ impl HwConfig {
                     "max_batch" => serving.max_batch = parse_usize()?,
                     "batch_window_us" => serving.batch_window_us = parse_usize()? as u64,
                     "admission_depth" => serving.admission_depth = parse_usize()?,
+                    "drain_extra" => serving.drain_extra = parse_usize()?,
+                    "steal_min_victim" => serving.steal_min_victim = parse_usize()?,
                     other => bail!("{name}:{}: unknown serving key {other}", lineno + 1),
                 },
                 Sec::None => bail!("{name}:{}: key outside a section", lineno + 1),
@@ -310,6 +344,7 @@ impl HwConfig {
             fpga_mhz,
             cpu_mhz,
             tile_size,
+            big_neon_threads,
             pe_types,
             clusters,
             memsub,
@@ -341,6 +376,7 @@ impl HwConfig {
             ClusterCfg {
                 name: name.to_string(),
                 neon,
+                big_neon: 0,
                 pes,
             }
         };
@@ -395,6 +431,8 @@ burst_beats = 64
 max_batch = 4
 batch_window_us = 2000
 admission_depth = 64
+drain_extra = 3
+steal_min_victim = 0
 ";
 
 #[cfg(test)]
@@ -457,11 +495,15 @@ mmus = 1
 max_batch = 8
 batch_window_us = 500
 admission_depth = 128
+drain_extra = 5
+steal_min_victim = 6
 ";
         let hw = HwConfig::parse("t", text).unwrap();
         assert_eq!(hw.serving.max_batch, 8);
         assert_eq!(hw.serving.batch_window_us, 500);
         assert_eq!(hw.serving.admission_depth, 128);
+        assert_eq!(hw.serving.drain_extra, 5);
+        assert_eq!(hw.serving.steal_min_victim, 6);
 
         let mut bad = HwConfig::default_zc702();
         bad.serving.max_batch = 0;
@@ -470,6 +512,33 @@ admission_depth = 128
         bad.serving.admission_depth = 0;
         assert!(bad.validate().is_err());
         assert!(HwConfig::parse("t", "[serving]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn big_neon_cluster_parses() {
+        let text = "
+[device]
+tile_size = 32
+big_neon_threads = 2
+[pe_type]
+name = F-PE
+[cluster]
+name = c0
+neon = 1
+big_neon = 1
+pe = F-PE:1
+[memory]
+mmus = 1
+";
+        let hw = HwConfig::parse("t", text).unwrap();
+        assert_eq!(hw.big_neon_threads, 2);
+        assert_eq!(hw.clusters[0].big_neon, 1);
+        assert_eq!(hw.clusters[0].total_accels(), 3);
+        assert_eq!(hw.total_big_neons(), 1);
+
+        let mut bad = hw.clone();
+        bad.big_neon_threads = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

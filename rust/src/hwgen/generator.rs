@@ -74,7 +74,11 @@ pub fn generate(hw: &HwConfig, out_dir: &Path) -> Result<GeneratedDesign> {
                     ("name", json::s(&m.name)),
                     (
                         "kind",
-                        json::s(if m.is_fpga() { "fpga_pe" } else { "neon" }),
+                        json::s(match &m.class {
+                            crate::accel::AccelClass::FpgaPe { .. } => "fpga_pe",
+                            crate::accel::AccelClass::Neon => "neon",
+                            crate::accel::AccelClass::BigNeon => "big_neon",
+                        }),
                     ),
                     (
                         "mmu_channel",

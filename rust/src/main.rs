@@ -145,6 +145,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         report.wall_seconds, report.fps, report.jobs_executed, report.jobs_stolen
     );
     println!("per-accel jobs: {:?}", report.per_accel_jobs);
+    let classes: Vec<String> = synergy::mm::JobClass::ALL
+        .iter()
+        .map(|c| format!("{}={}", c.label(), report.per_class_jobs[c.index()]))
+        .collect();
+    println!("per-class jobs: {}", classes.join(" "));
     Ok(())
 }
 

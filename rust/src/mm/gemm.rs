@@ -36,12 +36,20 @@ pub fn gemm_blocked(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::from_vec(&[m, p], c)
 }
 
-/// Raw-slice core (shared with the job executor): C[MxP] += A[MxN]·B[NxP].
-/// `c` must be zero-initialized by the caller (or hold an accumulator).
+/// Raw-slice core (shared with the job executor): **accumulates**
+/// C[MxP] += A[MxN]·B[NxP].
+///
+/// `c` is an accumulator, not an output buffer: callers wanting plain
+/// C = A·B must pass a zero-initialized `c` (as [`gemm_blocked`] does);
+/// anything already in `c` is added to.  The debug assertions pin the
+/// slice-geometry contract — a wrong-length `c` is the classic misuse
+/// (non-finite values are deliberately *not* asserted: inf/NaN must
+/// propagate through running accumulators, e.g. the per-k-tile calls in
+/// `job_mm_native`).
 pub fn gemm_blocked_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, p: usize) {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(b.len(), n * p);
-    debug_assert_eq!(c.len(), m * p);
+    debug_assert_eq!(a.len(), m * n, "A operand size");
+    debug_assert_eq!(b.len(), n * p, "B operand size");
+    debug_assert_eq!(c.len(), m * p, "C accumulator size");
     // Block the k dimension to keep B panels hot in L1/L2.
     const KB: usize = 256;
     for k0 in (0..n).step_by(KB) {
@@ -62,6 +70,41 @@ pub fn gemm_blocked_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize
             }
         }
     }
+}
+
+/// Multi-threaded blocked GEMM: C = A·B with the M dimension row-chunked
+/// across `threads` scoped OS threads (the big-core NEON-cluster backend).
+///
+/// Each thread owns a disjoint row range of A and C and runs the same
+/// [`gemm_blocked_into`] kernel over it, so per-row accumulation order —
+/// and therefore the f32 result — is bit-identical to the single-threaded
+/// [`gemm_blocked`].
+pub fn gemm_blocked_mt(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    p: usize,
+    threads: usize,
+) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * p];
+    if m == 0 || p == 0 {
+        return c; // degenerate GEMM: nothing to compute, avoid chunks_mut(0)
+    }
+    let threads = threads.clamp(1, m);
+    if threads == 1 {
+        gemm_blocked_into(a, b, &mut c, m, n, p);
+        return c;
+    }
+    let rows_per = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (i, c_chunk) in c.chunks_mut(rows_per * p).enumerate() {
+            let rows = c_chunk.len() / p;
+            let a_chunk = &a[i * rows_per * n..i * rows_per * n + rows * n];
+            s.spawn(move || gemm_blocked_into(a_chunk, b, c_chunk, rows, n, p));
+        }
+    });
+    c
 }
 
 /// FLOP count of an (m,n,p) GEMM (the paper's GOP accounting: 2·m·n·p).
@@ -121,6 +164,40 @@ mod tests {
     #[test]
     fn flops_formula() {
         assert_eq!(gemm_flops(2, 3, 4), 48);
+    }
+
+    /// Property: the blocked kernel matches the naive oracle on ragged
+    /// shapes whose inner dimension is *not* a multiple of the k-blocking
+    /// factor (KB = 256), pinning the k0..k1 tail-block handling.
+    #[test]
+    fn prop_blocked_matches_naive_ragged_kb() {
+        crate::util::proptest::check("gemm-ragged-kb", 20, |g| {
+            let m = g.usize_in(1, 8);
+            let p = g.usize_in(1, 8);
+            // Straddle one or two KB blocks, never on a 256 boundary.
+            let n = g.usize_in(0, 1) * 256 + g.usize_in(1, 255);
+            assert_ne!(n % 256, 0);
+            let a = Tensor::from_vec(&[m, n], g.vec_f32(m * n));
+            let b = Tensor::from_vec(&[n, p], g.vec_f32(n * p));
+            let want = gemm_naive(&a, &b);
+            let got = gemm_blocked(&a, &b);
+            assert!(
+                want.allclose(&got, 1e-3, 1e-3),
+                "({m},{n},{p}): {}",
+                want.max_abs_diff(&got)
+            );
+        });
+    }
+
+    #[test]
+    fn mt_matches_single_threaded_bitwise() {
+        for (m, n, p, threads) in [(1, 300, 5, 4), (7, 64, 9, 3), (128, 257, 1, 4), (5, 5, 5, 16)] {
+            let a = rand(&[m, n], (m + n) as u64);
+            let b = rand(&[n, p], (n + p) as u64);
+            let want = gemm_blocked(&a, &b);
+            let got = gemm_blocked_mt(a.data(), b.data(), m, n, p, threads);
+            assert_eq!(want.data(), &got[..], "({m},{n},{p})x{threads}");
+        }
     }
 
     #[test]

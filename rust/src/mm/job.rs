@@ -1,28 +1,110 @@
-//! The *job* — Synergy's workload granularity (paper Listing 2 / Fig 3).
+//! The *job* — Synergy's workload granularity (paper Listing 2 / Fig 3),
+//! generalized from CONV-tile GEMMs to every class of matrix work the
+//! heterogeneous pool executes.
 //!
-//! A job is the computation of one (TS,TS) output tile C(t1,t2) of a CONV
-//! layer's GEMM.  The struct carries what the paper's job struct carries:
-//! operand "base addresses" (shared buffers), the GEMM dimensions, the tile
-//! index, and the owning layer id — plus the frame id, since the pipelined
-//! design keeps multiple frames in flight (§3.1.1 "inter-frame parallelism").
+//! The original paper job computes one (TS,TS) output tile C(t1,t2) of a
+//! CONV layer's GEMM.  The unified runtime adds two more classes so the
+//! whole forward pass — not just CONV GEMMs — flows through the shared
+//! accelerator pool (§3.1 "unified abstraction"):
+//!
+//! * [`JobClass::ConvTile`] — one output tile of a tiled CONV GEMM;
+//! * [`JobClass::FcGemm`] — a whole fully-connected layer GEMM (previously
+//!   executed inline on the pipeline thread, the throughput killer the
+//!   mobile-SoC studies identify);
+//! * [`JobClass::Im2col`] — the im2col lowering of one CONV input.
+//!
+//! Jobs carry what the paper's `job_t` carries: operand "base addresses"
+//! (shared buffers), the matrix geometry, the tile index, and the owning
+//! layer id — plus the frame id, since the pipelined design keeps multiple
+//! frames in flight (§3.1.1 "inter-frame parallelism").
 
 use std::sync::Arc;
 
 use super::tile::{job_mm_native, TileGrid};
+
+/// Dense job-class tag — indexes the per-class counters kept by delegates,
+/// the thief, and [`crate::rt::PoolReport`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobClass {
+    /// One (TS,TS) output tile of a tiled CONV GEMM.
+    ConvTile = 0,
+    /// A whole FC-layer GEMM (W·x) executed as a single job.
+    FcGemm = 1,
+    /// im2col lowering of one CONV-layer input frame.
+    Im2col = 2,
+}
+
+impl JobClass {
+    /// Number of job classes (array sizing for per-class accounting).
+    pub const COUNT: usize = 3;
+    /// Every class, in dense-index order.
+    pub const ALL: [JobClass; JobClass::COUNT] =
+        [JobClass::ConvTile, JobClass::FcGemm, JobClass::Im2col];
+
+    /// Dense index into per-class counter arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Human-readable label (reports and stats tables).
+    pub fn label(self) -> &'static str {
+        match self {
+            JobClass::ConvTile => "conv-tile",
+            JobClass::FcGemm => "fc-gemm",
+            JobClass::Im2col => "im2col",
+        }
+    }
+}
+
+/// Bit-set of job classes: the capability metadata of an accelerator
+/// backend (or the intersection over a cluster's members).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassMask(u8);
+
+impl ClassMask {
+    /// Supports nothing.
+    pub const NONE: ClassMask = ClassMask(0);
+
+    /// Supports every job class.
+    pub fn all() -> ClassMask {
+        ClassMask((1u8 << JobClass::COUNT) - 1)
+    }
+
+    /// Supports exactly `classes`.
+    pub fn of(classes: &[JobClass]) -> ClassMask {
+        ClassMask(classes.iter().fold(0u8, |m, c| m | (1 << c.index())))
+    }
+
+    pub fn supports(self, class: JobClass) -> bool {
+        self.supports_index(class.index())
+    }
+
+    /// Same as [`ClassMask::supports`] via a dense index (the thief works
+    /// on indices to stay generic over queue item types).
+    pub fn supports_index(self, index: usize) -> bool {
+        index < JobClass::COUNT && self.0 & (1 << index) != 0
+    }
+
+    pub fn intersect(self, other: ClassMask) -> ClassMask {
+        ClassMask(self.0 & other.0)
+    }
+}
 
 /// Job metadata (the paper's `job_t` minus the raw pointers).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct JobDesc {
     /// Globally unique id (assigned by the job generator).
     pub job_id: u64,
-    /// Index of the owning CONV layer within the network ("layer_id").
+    /// Index of the owning layer within the network ("layer_id").
     pub layer_id: usize,
     /// Which input frame this job belongs to.
     pub frame_id: u64,
-    /// Output tile coordinates ("t1", "t2").
+    /// Output tile coordinates ("t1", "t2"); (0,0) for whole-matrix jobs.
     pub t1: usize,
     pub t2: usize,
-    /// GEMM geometry ("m", "n", "k" of the paper's struct).
+    /// Matrix geometry ("m", "n", "k" of the paper's struct).  For
+    /// [`JobClass::Im2col`] jobs the grid describes the *produced* matrix
+    /// (M=C·K², P=OH·OW) with a dummy inner dimension of 1.
     pub grid: TileGrid,
 }
 
@@ -45,47 +127,186 @@ impl JobDesc {
     }
 }
 
-/// A dispatchable job: metadata + shared operand buffers.
+/// The operand payload of a job, one variant per [`JobClass`].
 #[derive(Debug, Clone)]
-pub struct Job {
-    pub desc: JobDesc,
-    /// A operand (weights matrix, M×N row-major) shared across the layer.
-    pub a: Arc<Vec<f32>>,
-    /// B operand (im2col matrix, N×P row-major) shared across the layer.
-    pub b: Arc<Vec<f32>>,
+pub enum JobKind {
+    /// CONV tile GEMM: A = weights (M×N), B = im2col matrix (N×P), both
+    /// shared across the layer's jobs.
+    ConvTile { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
+    /// FC GEMM: A = weights (M×N), B = one activation column (N×1).
+    /// Batched FC (an (N,B) **column-major** B operand — NOT a
+    /// concatenation of per-request (1,N) rows) is future work; see the
+    /// ROADMAP fc-fusion item.  [`Job::fc`] rejects B ≠ one column so the
+    /// wrong layout cannot slip through silently.
+    FcGemm { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
+    /// im2col lowering of one (C,H,W) input into the (C·K², OH·OW) matrix.
+    Im2col {
+        input: Arc<Vec<f32>>,
+        chw: (usize, usize, usize),
+        size: usize,
+        stride: usize,
+        pad: usize,
+    },
 }
 
-/// Result of executing a job: the computed output tile.
-#[derive(Debug, Clone)]
-pub struct JobResult {
-    pub desc: JobDesc,
-    /// (TS,TS) row-major output tile.
-    pub tile: Vec<f32>,
-}
-
-impl Job {
-    /// Pack this job's operand tiles into contiguous (K,TS,TS) buffers —
-    /// the memory-subsystem fetch a PE performs (steps ①–② of Listing 3).
-    pub fn pack_tiles(&self) -> (Vec<f32>, Vec<f32>) {
-        (
-            self.desc.grid.extract_a_tiles(&self.a, self.desc.t1),
-            self.desc.grid.extract_b_tiles(&self.b, self.desc.t2),
-        )
-    }
-
-    /// Execute on the native (NEON-path) kernel.
-    pub fn execute_native(&self) -> JobResult {
-        let (at, bt) = self.pack_tiles();
-        let tile = job_mm_native(&at, &bt, self.desc.k_tiles(), self.desc.grid.ts);
-        JobResult {
-            desc: self.desc,
-            tile,
+impl JobKind {
+    pub fn class(&self) -> JobClass {
+        match self {
+            JobKind::ConvTile { .. } => JobClass::ConvTile,
+            JobKind::FcGemm { .. } => JobClass::FcGemm,
+            JobKind::Im2col { .. } => JobClass::Im2col,
         }
     }
 }
 
-/// Generate all jobs of one GEMM (one CONV layer instance of one frame).
-/// `next_job_id` provides globally-unique ids across layers/frames.
+/// A dispatchable job: metadata + operand payload.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub desc: JobDesc,
+    pub kind: JobKind,
+}
+
+/// Result of executing a job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub desc: JobDesc,
+    /// Output buffer: a (TS,TS) row-major tile for CONV-tile jobs, the
+    /// dense (M,P) result matrix for FC-GEMM and im2col jobs.
+    pub data: Vec<f32>,
+}
+
+impl Job {
+    /// Class tag of this job (per-class accounting + capability routing).
+    pub fn class(&self) -> JobClass {
+        self.kind.class()
+    }
+
+    /// Service-cost estimate in k-steps (one k-step = one (TS,TS)·(TS,TS)
+    /// tile MAC pass).  CONV tiles iterate K inner tiles; an FC GEMM does
+    /// the whole tiled iteration space in one job; im2col is a data
+    /// movement pass, charged a flat single step.
+    pub fn ksteps(&self) -> u64 {
+        match self.kind.class() {
+            JobClass::ConvTile => self.desc.k_tiles() as u64,
+            JobClass::FcGemm => (self.desc.grid.num_jobs() * self.desc.k_tiles()) as u64,
+            JobClass::Im2col => 1,
+        }
+    }
+
+    /// Build one FC-GEMM job: y(M) = W(M×N)·x(N).  See
+    /// [`JobKind::FcGemm`] for why x must be exactly one activation
+    /// column.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fc(
+        job_id: u64,
+        layer_id: usize,
+        frame_id: u64,
+        out_n: usize,
+        in_n: usize,
+        w: Arc<Vec<f32>>,
+        x: Arc<Vec<f32>>,
+        ts: usize,
+    ) -> Job {
+        assert_eq!(w.len(), out_n * in_n, "FC weight size mismatch");
+        assert_eq!(
+            x.len(),
+            in_n,
+            "FC activation must be one (N,) column (batched B needs the \
+             column-major fusion layout; see ROADMAP)"
+        );
+        Job {
+            desc: JobDesc {
+                job_id,
+                layer_id,
+                frame_id,
+                t1: 0,
+                t2: 0,
+                grid: TileGrid::new(out_n, in_n, 1, ts),
+            },
+            kind: JobKind::FcGemm { a: w, b: x },
+        }
+    }
+
+    /// Build one im2col job lowering a (C,H,W) input for a `size`×`size`
+    /// convolution with `stride`/`pad`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn im2col(
+        job_id: u64,
+        layer_id: usize,
+        frame_id: u64,
+        chw: (usize, usize, usize),
+        size: usize,
+        stride: usize,
+        pad: usize,
+        input: Arc<Vec<f32>>,
+        ts: usize,
+    ) -> Job {
+        let (c, h, w) = chw;
+        assert_eq!(input.len(), c * h * w, "im2col input size mismatch");
+        let (oh, ow) = crate::nn::conv_out_hw(h, w, size, stride, pad);
+        Job {
+            desc: JobDesc {
+                job_id,
+                layer_id,
+                frame_id,
+                t1: 0,
+                t2: 0,
+                grid: TileGrid::new(c * size * size, 1, oh * ow, ts),
+            },
+            kind: JobKind::Im2col {
+                input,
+                chw,
+                size,
+                stride,
+                pad,
+            },
+        }
+    }
+
+    /// Pack a CONV-tile job's operand tiles into contiguous (K,TS,TS)
+    /// buffers — the memory-subsystem fetch a PE performs (steps ①–② of
+    /// Listing 3).  Panics on non-CONV jobs (the PE kernel only speaks
+    /// tiles; capability routing keeps other classes away from it).
+    pub fn pack_tiles(&self) -> (Vec<f32>, Vec<f32>) {
+        match &self.kind {
+            JobKind::ConvTile { a, b } => (
+                self.desc.grid.extract_a_tiles(a, self.desc.t1),
+                self.desc.grid.extract_b_tiles(b, self.desc.t2),
+            ),
+            _ => panic!("pack_tiles on a {:?} job", self.class()),
+        }
+    }
+
+    /// Execute on the native (NEON-path) kernels.
+    pub fn execute_native(&self) -> JobResult {
+        let data = match &self.kind {
+            JobKind::ConvTile { .. } => {
+                let (at, bt) = self.pack_tiles();
+                job_mm_native(&at, &bt, self.desc.k_tiles(), self.desc.grid.ts)
+            }
+            JobKind::FcGemm { a, b } => {
+                let g = self.desc.grid;
+                let mut c = vec![0.0f32; g.m * g.p];
+                super::gemm::gemm_blocked_into(a, b, &mut c, g.m, g.n, g.p);
+                c
+            }
+            JobKind::Im2col {
+                input,
+                chw,
+                size,
+                stride,
+                pad,
+            } => crate::nn::im2col::im2col_slice(input, *chw, *size, *stride, *pad),
+        };
+        JobResult {
+            desc: self.desc,
+            data,
+        }
+    }
+}
+
+/// Generate all CONV-tile jobs of one GEMM (one CONV layer instance of one
+/// frame).  `next_job_id` provides globally-unique ids across layers/frames.
 pub fn jobs_for_gemm(
     layer_id: usize,
     frame_id: u64,
@@ -109,19 +330,21 @@ pub fn jobs_for_gemm(
         *next_job_id += 1;
         jobs.push(Job {
             desc,
-            a: Arc::clone(&a),
-            b: Arc::clone(&b),
+            kind: JobKind::ConvTile {
+                a: Arc::clone(&a),
+                b: Arc::clone(&b),
+            },
         });
     }
     jobs
 }
 
-/// Assemble job results back into the dense C matrix (M×P).
+/// Assemble CONV-tile job results back into the dense C matrix (M×P).
 pub fn gather_results(grid: TileGrid, results: &[JobResult]) -> Vec<f32> {
     assert_eq!(results.len(), grid.num_jobs(), "missing job results");
     let mut c = vec![0.0f32; grid.m * grid.p];
     for r in results {
-        grid.scatter_c(&mut c, r.desc.t1, r.desc.t2, &r.tile);
+        grid.scatter_c(&mut c, r.desc.t1, r.desc.t2, &r.data);
     }
     c
 }
@@ -149,6 +372,7 @@ mod tests {
         let mut seen = std::collections::HashSet::new();
         for j in &jobs {
             assert!(seen.insert((j.desc.t1, j.desc.t2)), "duplicate tile");
+            assert_eq!(j.class(), JobClass::ConvTile);
             assert_eq!(j.desc.layer_id, 3);
             assert_eq!(j.desc.frame_id, 7);
             assert!(j.desc.t1 < grid.rows() && j.desc.t2 < grid.cols());
@@ -172,6 +396,62 @@ mod tests {
         );
         let got = Tensor::from_vec(&[50, 45], c);
         assert!(want.allclose(&got, 1e-4, 1e-4), "{}", want.max_abs_diff(&got));
+    }
+
+    #[test]
+    fn fc_job_matches_dense_gemm() {
+        let (out_n, in_n) = (37, 83);
+        let wv = rand_vec(out_n * in_n, 5);
+        let xv = rand_vec(in_n, 6);
+        let job = Job::fc(
+            9,
+            4,
+            2,
+            out_n,
+            in_n,
+            Arc::new(wv.clone()),
+            Arc::new(xv.clone()),
+            32,
+        );
+        assert_eq!(job.class(), JobClass::FcGemm);
+        assert!(job.ksteps() >= 1);
+        let got = job.execute_native();
+        assert_eq!(got.desc.job_id, 9);
+        let want = gemm_naive(
+            &Tensor::from_vec(&[out_n, in_n], wv),
+            &Tensor::from_vec(&[in_n, 1], xv),
+        );
+        let got_t = Tensor::from_vec(&[out_n, 1], got.data);
+        assert!(want.allclose(&got_t, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn im2col_job_matches_direct_lowering() {
+        let (c, h, w) = (3, 9, 8);
+        let xv = rand_vec(c * h * w, 7);
+        let x = Tensor::from_vec(&[c, h, w], xv.clone());
+        let job = Job::im2col(1, 0, 0, (c, h, w), 3, 1, 1, Arc::new(xv), 32);
+        assert_eq!(job.class(), JobClass::Im2col);
+        assert_eq!(job.ksteps(), 1);
+        let got = job.execute_native();
+        let want = crate::nn::im2col::im2col(&x, 3, 1, 1);
+        assert_eq!(got.data, want.data());
+        assert_eq!(got.data.len(), job.desc.grid.m * job.desc.grid.p);
+    }
+
+    #[test]
+    fn class_mask_capabilities() {
+        let all = ClassMask::all();
+        for c in JobClass::ALL {
+            assert!(all.supports(c));
+        }
+        let conv_only = ClassMask::of(&[JobClass::ConvTile]);
+        assert!(conv_only.supports(JobClass::ConvTile));
+        assert!(!conv_only.supports(JobClass::FcGemm));
+        assert!(!conv_only.supports(JobClass::Im2col));
+        assert_eq!(all.intersect(conv_only), conv_only);
+        assert_eq!(conv_only.intersect(ClassMask::NONE), ClassMask::NONE);
+        assert!(!ClassMask::all().supports_index(JobClass::COUNT));
     }
 
     #[test]
@@ -203,5 +483,12 @@ mod tests {
     fn gather_requires_all_results() {
         let grid = TileGrid::new(64, 32, 64, 32);
         gather_results(grid, &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pack_tiles")]
+    fn pack_tiles_rejects_non_conv_jobs() {
+        let job = Job::fc(0, 0, 0, 4, 4, Arc::new(vec![0.0; 16]), Arc::new(vec![0.0; 4]), 4);
+        let _ = job.pack_tiles();
     }
 }

@@ -1,4 +1,10 @@
-//! Fully-connected layer (paper §3.1.4: runs on the ARM cores).
+//! Fully-connected layer — the paper's §3.1.4 ARM-cores reference kernel.
+//!
+//! The forward pass no longer calls this directly: FC GEMMs flow through
+//! [`MatExec::fc_gemm`](crate::nn::network::MatExec::fc_gemm) so the
+//! accelerator pool can execute them as jobs.  This scalar implementation
+//! stays as the independent oracle; a test below pins the executor path
+//! against it so the two cannot drift.
 
 use crate::tensor::Tensor;
 
@@ -58,5 +64,27 @@ mod tests {
     fn length_mismatch_panics() {
         let w = Tensor::from_vec(&[1, 3], vec![0.0; 3]);
         connected(&[1.0], &w, &[0.0]);
+    }
+
+    /// Pin the executor FC path (`MatExec::fc_gemm` default = the same
+    /// kernel pool jobs run) against this scalar oracle.
+    #[test]
+    fn fc_gemm_executor_matches_connected_oracle() {
+        use crate::nn::network::{MatExec, NativeExec};
+        use crate::util::rng::XorShift64Star;
+        use std::sync::Arc;
+        let (out_n, in_n) = (13, 37);
+        let wv = XorShift64Star::new(1).fill_f32(out_n * in_n, 1.0);
+        let xv = XorShift64Star::new(2).fill_f32(in_n, 1.0);
+        let bias = vec![0.25f32; out_n];
+        let w = Tensor::from_vec(&[out_n, in_n], wv.clone());
+        let want = connected(&xv, &w, &bias);
+        let mut got = NativeExec.fc_gemm(0, out_n, in_n, Arc::new(wv), Arc::new(xv));
+        for (g, b) in got.iter_mut().zip(&bias) {
+            *g += *b;
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+        }
     }
 }

@@ -13,10 +13,25 @@ use super::conv_out_hw;
 pub fn im2col(x: &Tensor, ksize: usize, stride: usize, pad: usize) -> Tensor {
     let (c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
     let (oh, ow) = conv_out_hw(h, w, ksize, stride, pad);
+    let out = im2col_slice(x.data(), (c, h, w), ksize, stride, pad);
+    Tensor::from_vec(&[c * ksize * ksize, oh * ow], out)
+}
+
+/// Slice-level im2col core: `src` is the (C,H,W) activation row-major.
+/// Shared by the tensor wrapper above and the pool's im2col jobs (which
+/// carry `Arc<Vec<f32>>` buffers and must not rebuild a tensor copy).
+pub fn im2col_slice(
+    src: &[f32],
+    (c, h, w): (usize, usize, usize),
+    ksize: usize,
+    stride: usize,
+    pad: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(src.len(), c * h * w, "im2col input size");
+    let (oh, ow) = conv_out_hw(h, w, ksize, stride, pad);
     let cols = oh * ow;
     let rows = c * ksize * ksize;
     let mut out = vec![0.0f32; rows * cols];
-    let src = x.data();
 
     for ci in 0..c {
         let chan = &src[ci * h * w..(ci + 1) * h * w];
@@ -42,7 +57,7 @@ pub fn im2col(x: &Tensor, ksize: usize, stride: usize, pad: usize) -> Tensor {
             }
         }
     }
-    Tensor::from_vec(&[rows, cols], out)
+    out
 }
 
 /// The number of f32 elements im2col touches (used by the ARM cycle model).

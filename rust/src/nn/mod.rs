@@ -10,7 +10,7 @@ pub mod network;
 pub mod pool;
 pub mod softmax;
 
-pub use network::Network;
+pub use network::{GemmExecFn, MatExec, NativeExec, Network};
 
 /// Output spatial dims of a convolution.
 pub fn conv_out_hw(h: usize, w: usize, ksize: usize, stride: usize, pad: usize) -> (usize, usize) {

@@ -9,11 +9,12 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::config::{Activation, LayerSpec, NetConfig};
+use crate::mm::job::JobClass;
 use crate::mm::TileGrid;
 use crate::tensor::Tensor;
 use crate::util::rng;
 
-use super::{batchnorm::batchnorm, connected::connected, conv, im2col::im2col, pool, softmax};
+use super::{batchnorm::batchnorm, conv, im2col::im2col, pool, softmax};
 
 /// Shape flowing between layers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -76,24 +77,139 @@ pub struct Network {
     /// Output shape of every layer (same indexing as `config.layers`).
     pub shapes: Vec<Shape>,
     tile_size: usize,
+    /// Arc-shared copies of the GEMM weight operands (CONV and FC
+    /// layers, indexed by layer), built once at construction so the
+    /// per-frame hot path never re-copies a weight matrix.  Trade-off:
+    /// weights exist twice (here and in `params`) — collapsing the two
+    /// onto one Arc-backed allocation is a ROADMAP item; until then,
+    /// mutating `params` weights would NOT be reflected here (params are
+    /// init-once by contract).
+    weight_arcs: Vec<Option<Arc<Vec<f32>>>>,
 }
 
-/// Executor hook for CONV GEMMs: given (layer_idx, grid, A, B) produce the
-/// dense C matrix (M×P).  The default is the blocked native GEMM; the
-/// coordinator plugs the tiled job path (accelerator clusters) in here.
-pub type ConvExec<'a> = dyn Fn(usize, TileGrid, Arc<Vec<f32>>, Arc<Vec<f32>>) -> Vec<f32> + 'a;
+/// Executor hooks for all the matrix work of a forward pass — CONV GEMMs,
+/// FC GEMMs, and im2col lowering.  The default methods run natively on the
+/// calling thread (the "ARM cores" baseline of paper §3.1.4); the runtime
+/// plugs in `rt::PoolRouter`, which emits every class as jobs on the
+/// shared heterogeneous accelerator pool.
+pub trait MatExec {
+    /// CONV GEMM: produce the dense C (M×P) for C = A(M×N)·B(N×P).
+    fn conv_gemm(
+        &self,
+        layer_idx: usize,
+        grid: TileGrid,
+        a: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
+    ) -> Vec<f32>;
+
+    /// FC GEMM: y(M) = W(M×N)·x(N).  Bias and activation are applied by
+    /// the caller.
+    fn fc_gemm(
+        &self,
+        layer_idx: usize,
+        out_n: usize,
+        in_n: usize,
+        w: Arc<Vec<f32>>,
+        x: Arc<Vec<f32>>,
+    ) -> Vec<f32> {
+        let _ = layer_idx;
+        let mut y = vec![0.0f32; out_n];
+        crate::mm::gemm::gemm_blocked_into(&w, &x, &mut y, out_n, in_n, 1);
+        y
+    }
+
+    /// im2col lowering of a CONV layer's input.  Takes the activation by
+    /// value: a pooled executor moves the buffer into a shared job
+    /// operand instead of copying it.
+    fn im2col_lower(
+        &self,
+        layer_idx: usize,
+        input: Tensor,
+        size: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Tensor {
+        let _ = layer_idx;
+        im2col(&input, size, stride, pad)
+    }
+}
+
+/// The all-native executor ([`Network::forward_reference`]'s backend).
+pub struct NativeExec;
+
+impl MatExec for NativeExec {
+    fn conv_gemm(
+        &self,
+        _layer_idx: usize,
+        grid: TileGrid,
+        a: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
+    ) -> Vec<f32> {
+        let at = Tensor::from_vec(&[grid.m, grid.n], (*a).clone());
+        let bt = Tensor::from_vec(&[grid.n, grid.p], (*b).clone());
+        crate::mm::gemm::gemm_blocked(&at, &bt).into_vec()
+    }
+}
+
+/// Adapter treating a bare CONV-GEMM closure as a full executor (FC GEMMs
+/// and im2col run natively) — keeps simple call sites and tests tidy.
+pub struct GemmExecFn<F>(pub F);
+
+impl<F> MatExec for GemmExecFn<F>
+where
+    F: Fn(usize, TileGrid, Arc<Vec<f32>>, Arc<Vec<f32>>) -> Vec<f32>,
+{
+    fn conv_gemm(
+        &self,
+        layer_idx: usize,
+        grid: TileGrid,
+        a: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
+    ) -> Vec<f32> {
+        (self.0)(layer_idx, grid, a, b)
+    }
+}
 
 impl Network {
     /// Build with deterministic parameters (tile size for job geometry).
     pub fn new(config: NetConfig, tile_size: usize) -> Result<Network> {
         let shapes = infer_shapes(&config)?;
         let params = init_params(&config, &shapes);
+        let weight_arcs = config
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(idx, layer)| {
+                matches!(
+                    layer,
+                    LayerSpec::Conv { .. } | LayerSpec::Connected { .. }
+                )
+                .then(|| {
+                    let w = params
+                        .iter()
+                        .find(|p| p.layer == idx && p.name == "weights")
+                        .expect("conv/fc layer has weights");
+                    Arc::new(w.tensor.data().to_vec())
+                })
+            })
+            .collect();
         Ok(Network {
             config,
             params,
             shapes,
             tile_size,
+            weight_arcs,
         })
+    }
+
+    /// Shared GEMM weight operand of a CONV/FC layer (cheap Arc clone;
+    /// panics for layers without weights).
+    pub fn weights_arc(&self, layer: usize) -> Arc<Vec<f32>> {
+        Arc::clone(
+            self.weight_arcs[layer]
+                .as_ref()
+                .expect("layer has GEMM weights"),
+        )
     }
 
     pub fn tile_size(&self) -> usize {
@@ -198,35 +314,52 @@ impl Network {
         total / 1e6
     }
 
+    /// Pool jobs one frame generates per [`JobClass`] when all matrix work
+    /// is routed through the accelerator pool (`rt::PoolRouter`): one job
+    /// per CONV output tile, one FC-GEMM job per connected layer, one
+    /// im2col job per CONV layer.
+    pub fn pool_job_profile(&self) -> [usize; JobClass::COUNT] {
+        let mut profile = [0usize; JobClass::COUNT];
+        let convs = self.conv_infos();
+        profile[JobClass::ConvTile.index()] =
+            convs.iter().map(|ci| ci.grid.num_jobs()).sum();
+        profile[JobClass::Im2col.index()] = convs.len();
+        profile[JobClass::FcGemm.index()] = self
+            .config
+            .layers
+            .iter()
+            .filter(|l| matches!(l, LayerSpec::Connected { .. }))
+            .count();
+        profile
+    }
+
     /// Reference forward pass — sequential, CPU-only (the "original
     /// single-threaded Darknet" baseline, functionally).
     pub fn forward_reference(&self, x: &Tensor) -> Tensor {
-        self.forward_with(x, &|_, grid, a, b| {
-            let at = Tensor::from_vec(&[grid.m, grid.n], (*a).clone());
-            let bt = Tensor::from_vec(&[grid.n, grid.p], (*b).clone());
-            crate::mm::gemm::gemm_blocked(&at, &bt).into_vec()
-        })
+        self.forward_with(x, &NativeExec)
     }
 
-    /// Forward pass with a pluggable CONV GEMM executor.
-    pub fn forward_with(&self, x: &Tensor, conv_exec: &ConvExec) -> Tensor {
+    /// Forward pass with a pluggable matrix-work executor.
+    pub fn forward_with(&self, x: &Tensor, exec: &dyn MatExec) -> Tensor {
         let (c, h, w) = self.input_shape();
         assert_eq!(x.shape(), &[c, h, w], "input shape mismatch");
         let mut cur = x.clone();
         for (idx, layer) in self.config.layers.iter().enumerate() {
-            cur = self.forward_layer(idx, layer, cur, conv_exec);
+            cur = self.forward_layer(idx, layer, cur, exec);
         }
         cur
     }
 
     /// Execute a single layer (used by both the reference forward and the
-    /// pipeline stages, so layer semantics exist exactly once).
+    /// pipeline stages, so layer semantics exist exactly once).  All
+    /// matrix work — im2col, the CONV GEMM, the FC GEMM — goes through
+    /// `exec`, so a pooled executor dispatches it to the accelerators.
     pub fn forward_layer(
         &self,
         idx: usize,
         layer: &LayerSpec,
         input: Tensor,
-        conv_exec: &ConvExec,
+        exec: &dyn MatExec,
     ) -> Tensor {
         match layer {
             LayerSpec::Conv {
@@ -236,25 +369,22 @@ impl Network {
                 pad,
                 activation,
             } => {
-                let (_, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+                let (cin, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
                 let (oh, ow) = super::conv_out_hw(h, w, *size, *stride, *pad);
-                // Preprocessing on CPU: im2col (paper §3.1.4).
-                let col = im2col(&input, *size, *stride, *pad);
-                let weights = self
-                    .layer_param(idx, "weights")
-                    .expect("conv weights")
-                    .clone();
-                let cin = input.shape()[0];
+                // Preprocessing (paper §3.1.4), routed through the
+                // executor so the pool can run it as an im2col job (the
+                // activation buffer moves into the job — no copy).
+                let col = exec.im2col_lower(idx, input, *size, *stride, *pad);
                 let grid = TileGrid::new(
                     *filters,
                     cin * size * size,
                     oh * ow,
                     self.tile_size,
                 );
-                let c_mat = conv_exec(
+                let c_mat = exec.conv_gemm(
                     idx,
                     grid,
-                    Arc::new(weights.into_vec()),
+                    self.weights_arc(idx),
                     Arc::new(col.into_vec()),
                 );
                 let bias = self.layer_param(idx, "bias").expect("conv bias");
@@ -274,9 +404,17 @@ impl Network {
             LayerSpec::Connected { activation, .. } => {
                 let w = self.layer_param(idx, "weights").expect("fc weights");
                 let b = self.layer_param(idx, "bias").expect("fc bias");
-                let mut out = connected(input.data(), w, b.data());
-                for v in &mut out {
-                    *v = activation.apply(*v);
+                let (out_n, in_n) = (w.shape()[0], w.shape()[1]);
+                assert_eq!(input.len(), in_n, "input length mismatch");
+                let mut out = exec.fc_gemm(
+                    idx,
+                    out_n,
+                    in_n,
+                    self.weights_arc(idx),
+                    Arc::new(input.into_vec()),
+                );
+                for (v, bv) in out.iter_mut().zip(b.data()) {
+                    *v = activation.apply(*v + *bv);
                 }
                 let n = out.len();
                 Tensor::from_vec(&[n], out)
@@ -518,15 +656,28 @@ mod tests {
         let net = mk("mnist");
         let calls = AtomicUsize::new(0);
         let x = net.make_input(0);
-        let y = net.forward_with(&x, &|_, grid, a, b| {
-            calls.fetch_add(1, Ordering::SeqCst);
-            let at = Tensor::from_vec(&[grid.m, grid.n], (*a).clone());
-            let bt = Tensor::from_vec(&[grid.n, grid.p], (*b).clone());
-            crate::mm::gemm::gemm_blocked(&at, &bt).into_vec()
-        });
+        let exec = GemmExecFn(
+            |_: usize, grid: TileGrid, a: Arc<Vec<f32>>, b: Arc<Vec<f32>>| {
+                calls.fetch_add(1, Ordering::SeqCst);
+                let at = Tensor::from_vec(&[grid.m, grid.n], (*a).clone());
+                let bt = Tensor::from_vec(&[grid.n, grid.p], (*b).clone());
+                crate::mm::gemm::gemm_blocked(&at, &bt).into_vec()
+            },
+        );
+        let y = net.forward_with(&x, &exec);
         assert_eq!(calls.load(Ordering::SeqCst), 2); // mnist has 2 convs
         let want = net.forward_reference(&x);
         assert!(y.allclose(&want, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn pool_job_profile_counts_all_classes() {
+        let net = mk("mnist");
+        let profile = net.pool_job_profile();
+        let conv_jobs: usize = net.conv_infos().iter().map(|ci| ci.grid.num_jobs()).sum();
+        assert_eq!(profile[JobClass::ConvTile.index()], conv_jobs);
+        assert_eq!(profile[JobClass::Im2col.index()], 2); // two CONV layers
+        assert_eq!(profile[JobClass::FcGemm.index()], 2); // two FC layers
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Delegate threads (paper §3.1.2): the software wrappers that stand in
 //! for hardware accelerators inside the OS threading model.
 //!
-//! Each delegate owns its accelerator's execution backend and services its
-//! cluster's job queue: request a job, fetch the operand tiles, execute,
-//! acknowledge the result — exactly the control-FIFO protocol of Fig 5,
-//! with the mpsc reply channel standing in for `if_hw2sw`.
+//! Each delegate owns one [`Accelerator`] backend (built *inside* the
+//! thread — the PJRT engine is `Rc`-backed, and hardware-wise each PE is
+//! its own physical kernel instance) and services its cluster's job queue:
+//! request a job, execute it on the backend, acknowledge the result —
+//! exactly the control-FIFO protocol of Fig 5, with the mpsc reply channel
+//! standing in for `if_hw2sw`.  Per-class counters feed the pool report's
+//! heterogeneous accounting.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
@@ -14,10 +17,10 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::accel::Accelerator;
 use crate::cluster::JobQueue;
-use crate::mm::job::{Job, JobResult};
-use crate::runtime::PeEngine;
-use crate::sched::worksteal::ThiefMsg;
+use crate::mm::job::{Job, JobClass, JobResult};
+use crate::sched::worksteal::{Classed, ThiefMsg};
 
 /// A job plus its reply channel (the "acknowledgment" path of Fig 5).
 pub struct RtJob {
@@ -25,12 +28,10 @@ pub struct RtJob {
     pub reply: Sender<JobResult>,
 }
 
-/// Which backend a delegate drives.
-pub enum Backend {
-    /// FPGA PE: the AOT Pallas job kernel through PJRT.
-    Pjrt(Box<PeEngine>),
-    /// NEON: the native blocked GEMM.
-    Native,
+impl Classed for RtJob {
+    fn class_index(&self) -> usize {
+        self.job.class().index()
+    }
 }
 
 /// Per-delegate counters.
@@ -39,13 +40,25 @@ pub struct DelegateStats {
     pub jobs: AtomicU64,
     pub ksteps: AtomicU64,
     pub idle_reports: AtomicU64,
+    /// Jobs executed per class ([`JobClass`] dense order).
+    pub jobs_by_class: [AtomicU64; JobClass::COUNT],
+}
+
+impl DelegateStats {
+    pub fn jobs_by_class(&self) -> [u64; JobClass::COUNT] {
+        let mut out = [0u64; JobClass::COUNT];
+        for (o, c) in out.iter_mut().zip(&self.jobs_by_class) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        out
+    }
 }
 
 /// Spawn a delegate thread servicing `queue`.
 ///
-/// The backend is built *inside* the thread via `mk_backend`: the PJRT
-/// engine is `Rc`-backed (not `Send`), and hardware-wise each PE is its own
-/// physical kernel instance anyway.
+/// The backend is built *inside* the thread via `mk_backend` (see the
+/// module docs) and driven exclusively through the [`Accelerator`] trait —
+/// the delegate has no knowledge of which implementation it holds.
 ///
 /// `drain_extra` is the number of additional jobs the delegate may grab in
 /// one queue visit once it holds a job (0 = strict one-at-a-time, the
@@ -58,7 +71,7 @@ pub fn spawn(
     name: String,
     cluster: usize,
     queue: Arc<JobQueue<RtJob>>,
-    mk_backend: impl FnOnce() -> Result<Backend> + Send + 'static,
+    mk_backend: impl FnOnce() -> Result<Box<dyn Accelerator>> + Send + 'static,
     thief: Option<Sender<ThiefMsg>>,
     stats: Arc<DelegateStats>,
     drain_extra: usize,
@@ -75,7 +88,7 @@ pub fn spawn(
 fn delegate_loop(
     cluster: usize,
     queue: Arc<JobQueue<RtJob>>,
-    backend: Backend,
+    mut backend: Box<dyn Accelerator>,
     thief: Option<Sender<ThiefMsg>>,
     stats: Arc<DelegateStats>,
     drain_extra: usize,
@@ -103,12 +116,20 @@ fn delegate_loop(
             run.extend(queue.pop_upto(drain_extra));
         }
         for i in 0..run.len() {
-            match execute(&backend, &run[i].job) {
+            // Routing + capability-filtered stealing keep unsupported
+            // classes off this queue; a violation is a scheduler bug.
+            debug_assert!(
+                backend.supports(run[i].job.class()),
+                "{} delegate received a {} job",
+                backend.id(),
+                run[i].job.class().label()
+            );
+            match backend.execute(&run[i].job) {
                 Ok(result) => {
                     stats.jobs.fetch_add(1, Ordering::Relaxed);
-                    stats
-                        .ksteps
-                        .fetch_add(run[i].job.desc.k_tiles() as u64, Ordering::Relaxed);
+                    stats.ksteps.fetch_add(run[i].job.ksteps(), Ordering::Relaxed);
+                    stats.jobs_by_class[run[i].job.class().index()]
+                        .fetch_add(1, Ordering::Relaxed);
                     // Receiver may have gone away on shutdown; that's fine.
                     let _ = run[i].reply.send(result);
                 }
@@ -126,28 +147,18 @@ fn delegate_loop(
     }
 }
 
-/// Execute one job on the chosen backend.
-pub fn execute(backend: &Backend, job: &Job) -> Result<JobResult> {
-    match backend {
-        Backend::Native => Ok(job.execute_native()),
-        Backend::Pjrt(engine) => {
-            let (at, bt) = job.pack_tiles();
-            let tile = engine.execute_job(&at, &bt, job.desc.k_tiles())?;
-            Ok(JobResult {
-                desc: job.desc,
-                tile,
-            })
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::NativeGemm;
     use crate::mm::job::jobs_for_gemm;
     use crate::mm::TileGrid;
     use crate::util::rng::XorShift64Star;
     use std::sync::mpsc;
+
+    fn native_backend() -> Result<Box<dyn Accelerator>> {
+        Ok(Box::new(NativeGemm))
+    }
 
     #[test]
     fn native_delegate_services_jobs_and_exits_on_close() {
@@ -157,7 +168,7 @@ mod tests {
             "test-delegate".into(),
             0,
             Arc::clone(&queue),
-            || Ok(Backend::Native),
+            native_backend,
             None,
             Arc::clone(&stats),
             2,
@@ -183,11 +194,56 @@ mod tests {
         queue.close();
         handle.join().unwrap().unwrap();
         assert_eq!(stats.jobs.load(Ordering::Relaxed), n as u64);
+        assert_eq!(
+            stats.jobs_by_class()[JobClass::ConvTile.index()],
+            n as u64
+        );
         // every tile distinct
         let mut seen = std::collections::HashSet::new();
         for r in &results {
             assert!(seen.insert((r.desc.t1, r.desc.t2)));
         }
+    }
+
+    #[test]
+    fn delegate_executes_all_job_classes_and_counts_them() {
+        let queue: Arc<JobQueue<RtJob>> = Arc::new(JobQueue::new());
+        let stats = Arc::new(DelegateStats::default());
+        let handle = spawn(
+            "mixed-delegate".into(),
+            0,
+            Arc::clone(&queue),
+            native_backend,
+            None,
+            Arc::clone(&stats),
+            0,
+        );
+
+        let (tx, rx) = mpsc::channel();
+        // One FC job and one im2col job.
+        let w = Arc::new(XorShift64Star::new(3).fill_f32(10 * 20, 1.0));
+        let x = Arc::new(XorShift64Star::new(4).fill_f32(20, 1.0));
+        queue.push(RtJob {
+            job: Job::fc(0, 5, 1, 10, 20, w, x, 32),
+            reply: tx.clone(),
+        });
+        let input = Arc::new(XorShift64Star::new(5).fill_f32(3 * 8 * 8, 1.0));
+        queue.push(RtJob {
+            job: Job::im2col(1, 0, 1, (3, 8, 8), 3, 1, 1, input, 32),
+            reply: tx.clone(),
+        });
+        drop(tx);
+        let r1 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let r2 = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r1.data.len(), 10); // FC output
+        assert_eq!(r2.data.len(), 3 * 3 * 3 * 8 * 8); // im2col matrix
+        queue.close();
+        handle.join().unwrap().unwrap();
+        let by_class = stats.jobs_by_class();
+        assert_eq!(by_class[JobClass::FcGemm.index()], 1);
+        assert_eq!(by_class[JobClass::Im2col.index()], 1);
+        assert_eq!(by_class[JobClass::ConvTile.index()], 0);
+        assert_eq!(stats.jobs.load(Ordering::Relaxed), 2);
     }
 
     #[test]
@@ -199,7 +255,7 @@ mod tests {
             "idle-delegate".into(),
             3,
             Arc::clone(&queue),
-            || Ok(Backend::Native),
+            native_backend,
             Some(ttx),
             Arc::clone(&stats),
             0,

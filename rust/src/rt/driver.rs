@@ -9,12 +9,14 @@ use anyhow::Result;
 
 use crate::accel::AccelSpec;
 use crate::config::HwConfig;
+use crate::mm::job::JobClass;
 use crate::nn::Network;
 use crate::pipeline::Mailbox;
 use crate::sched::{static_map, Mapping};
 use crate::tensor::Tensor;
 
-use super::pool::{DelegatePool, GemmCtx, PoolOptions};
+use super::exec::PoolRouter;
+use super::pool::{DelegatePool, PoolOptions};
 use super::ComputeMode;
 
 /// Runtime configuration.
@@ -50,6 +52,8 @@ pub struct RtReport {
     pub steal_attempts: u64,
     /// jobs per accelerator (by accel id).
     pub per_accel_jobs: Vec<u64>,
+    /// jobs per class ([`JobClass`] dense order).
+    pub per_class_jobs: [u64; JobClass::COUNT],
 }
 
 /// The assembled runtime (exists for the duration of one stream).
@@ -102,36 +106,21 @@ impl RtRuntime {
             .collect();
 
         let mut layer_handles = Vec::new();
+        let router = PoolRouter::new(&self.net, self.pool.dispatcher(), &self.assignment);
         for layer_idx in 0..n_layers {
             let inbox = Arc::clone(&mailboxes[layer_idx]);
             let outbox = Arc::clone(&mailboxes[layer_idx + 1]);
             let net = Arc::clone(&self.net);
-            let dispatcher = self.pool.dispatcher();
-            let assignment = self.assignment.clone();
+            let router = router.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("layer-{layer_idx}"))
                 .spawn(move || {
-                    let convs = net.conv_infos();
                     while let Some((frame_id, input)) = inbox.recv() {
                         let spec = net.config.layers[layer_idx].clone();
-                        let out = net.forward_layer(
-                            layer_idx,
-                            &spec,
-                            input,
-                            &|l_idx, grid, a, b| {
-                                // CONV → jobs → cluster queue → gather.
-                                let conv_ord = convs
-                                    .iter()
-                                    .position(|ci| ci.layer_idx == l_idx)
-                                    .expect("conv ordinal");
-                                let ctx = GemmCtx {
-                                    cluster: assignment[conv_ord],
-                                    layer_idx: l_idx,
-                                    frame_id,
-                                };
-                                dispatcher.execute_gemm(ctx, grid, a, b)
-                            },
-                        );
+                        // All matrix work (CONV tiles, FC GEMMs, im2col)
+                        // becomes pool jobs via the router.
+                        let exec = router.frame(frame_id);
+                        let out = net.forward_layer(layer_idx, &spec, input, &exec);
                         if !outbox.send((frame_id, out)) {
                             break;
                         }
@@ -177,6 +166,7 @@ impl RtRuntime {
             jobs_stolen: pool_report.jobs_stolen,
             steal_attempts: pool_report.steal_attempts,
             per_accel_jobs: pool_report.per_accel_jobs,
+            per_class_jobs: pool_report.per_class_jobs,
         })
     }
 }
@@ -223,14 +213,19 @@ mod tests {
         let mut sorted = ids.clone();
         sorted.sort_unstable();
         assert_eq!(ids, sorted);
-        // All conv jobs went through the accelerators.
-        let expected: usize = net
-            .conv_infos()
-            .iter()
-            .map(|ci| ci.grid.num_jobs())
-            .sum::<usize>()
-            * frames.len();
+        // All matrix work (CONV tiles + FC GEMMs + im2col) went through
+        // the accelerator pool.
+        let profile = net.pool_job_profile();
+        let expected: usize = profile.iter().sum::<usize>() * frames.len();
         assert_eq!(report.jobs_executed, expected as u64);
+        for class in JobClass::ALL {
+            assert_eq!(
+                report.per_class_jobs[class.index()],
+                (profile[class.index()] * frames.len()) as u64,
+                "{}",
+                class.label()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! The pooled matrix-work executor: adapts the [`Dispatcher`] to the
+//! network's [`MatExec`] hooks so a layer thread's CONV GEMMs, FC GEMMs,
+//! and im2col lowering all become jobs on the shared heterogeneous pool.
+//!
+//! One [`PoolRouter`] exists per (network, pool) pairing and carries the
+//! static CONV-layer → cluster assignment; [`PoolRouter::frame`] stamps a
+//! frame id onto a lightweight per-frame executor handed to
+//! `Network::forward_layer`.  Classes a pool cannot execute (e.g. FC jobs
+//! against a CONV-only PJRT cluster set) transparently fall back to the
+//! native executor on the calling thread.
+
+use std::sync::Arc;
+
+use crate::mm::TileGrid;
+use crate::nn::network::{MatExec, NativeExec};
+use crate::nn::Network;
+use crate::tensor::Tensor;
+
+use super::pool::{Dispatcher, GemmCtx};
+
+/// Routes one network's matrix work into a [`Dispatcher`].  Cheap to
+/// clone (layer threads each hold one).
+#[derive(Clone)]
+pub struct PoolRouter {
+    dispatcher: Dispatcher,
+    /// `layer_idx` → destination cluster for CONV layers (from the static
+    /// mapping, indexed by network layer).
+    conv_cluster: Arc<Vec<Option<usize>>>,
+    tile_size: usize,
+}
+
+impl PoolRouter {
+    /// Build from a network and its CONV-ordinal → cluster `assignment`
+    /// (the static mapper's output).
+    pub fn new(net: &Network, dispatcher: Dispatcher, assignment: &[usize]) -> PoolRouter {
+        let mut conv_cluster = vec![None; net.config.layers.len()];
+        for (ord, ci) in net.conv_infos().iter().enumerate() {
+            conv_cluster[ci.layer_idx] = Some(assignment[ord]);
+        }
+        PoolRouter {
+            dispatcher,
+            conv_cluster: Arc::new(conv_cluster),
+            tile_size: net.tile_size(),
+        }
+    }
+
+    /// Per-frame executor (implements [`MatExec`]).
+    pub fn frame(&self, frame_id: u64) -> FrameExec<'_> {
+        FrameExec {
+            router: self,
+            frame_id,
+        }
+    }
+}
+
+/// A [`MatExec`] implementation dispatching one frame's matrix work to
+/// the accelerator pool.
+pub struct FrameExec<'a> {
+    router: &'a PoolRouter,
+    frame_id: u64,
+}
+
+impl FrameExec<'_> {
+    fn ctx(&self, layer_idx: usize) -> GemmCtx {
+        GemmCtx {
+            cluster: self.router.conv_cluster[layer_idx].unwrap_or(0),
+            layer_idx,
+            frame_id: self.frame_id,
+        }
+    }
+}
+
+impl MatExec for FrameExec<'_> {
+    fn conv_gemm(
+        &self,
+        layer_idx: usize,
+        grid: TileGrid,
+        a: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
+    ) -> Vec<f32> {
+        let ctx = GemmCtx {
+            cluster: self.router.conv_cluster[layer_idx].expect("conv layer mapped"),
+            layer_idx,
+            frame_id: self.frame_id,
+        };
+        self.router.dispatcher.execute_gemm(ctx, grid, a, b)
+    }
+
+    fn fc_gemm(
+        &self,
+        layer_idx: usize,
+        out_n: usize,
+        in_n: usize,
+        w: Arc<Vec<f32>>,
+        x: Arc<Vec<f32>>,
+    ) -> Vec<f32> {
+        let ctx = self.ctx(layer_idx);
+        match self.router.dispatcher.execute_fc(
+            ctx,
+            out_n,
+            in_n,
+            Arc::clone(&w),
+            Arc::clone(&x),
+            self.router.tile_size,
+        ) {
+            Some(y) => y,
+            // No FC-capable cluster: compute inline on the layer thread.
+            None => NativeExec.fc_gemm(layer_idx, out_n, in_n, w, x),
+        }
+    }
+
+    fn im2col_lower(
+        &self,
+        layer_idx: usize,
+        input: Tensor,
+        size: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Tensor {
+        let shape = input.shape();
+        let chw = (shape[0], shape[1], shape[2]);
+        let ctx = self.ctx(layer_idx);
+        // Capability-only probe (no queue locks); the dispatch below does
+        // the actual least-loaded routing.
+        let supported = self
+            .router
+            .dispatcher
+            .cluster_caps()
+            .iter()
+            .any(|c| c.supports(crate::mm::job::JobClass::Im2col));
+        if supported {
+            // The activation buffer moves into the shared job operand —
+            // no copy on the layer thread.
+            let col = self
+                .router
+                .dispatcher
+                .execute_im2col(
+                    ctx,
+                    chw,
+                    size,
+                    stride,
+                    pad,
+                    Arc::new(input.into_vec()),
+                    self.router.tile_size,
+                )
+                .expect("a cluster supports im2col");
+            let rows = chw.0 * size * size;
+            let cols = col.len() / rows;
+            Tensor::from_vec(&[rows, cols], col)
+        } else {
+            NativeExec.im2col_lower(layer_idx, input, size, stride, pad)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo;
+    use crate::mm::job::JobClass;
+    use crate::rt::pool::{DelegatePool, PoolOptions};
+    use crate::rt::ComputeMode;
+    use crate::sched::static_map;
+
+    #[test]
+    fn routed_forward_matches_reference_and_counts_classes() {
+        let net = Network::new(zoo::load("mnist").unwrap(), 32).unwrap();
+        let options = PoolOptions::new(
+            crate::config::HwConfig::default_zc702(),
+            ComputeMode::Native,
+            true,
+        );
+        let pool = DelegatePool::start(&options).unwrap();
+        let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
+        let router = PoolRouter::new(&net, pool.dispatcher(), &assignment);
+
+        let x = net.make_input(0);
+        let exec = router.frame(0);
+        let y = net.forward_with(&x, &exec);
+        let want = net.forward_reference(&x);
+        assert!(y.allclose(&want, 1e-4, 1e-5), "{}", y.max_abs_diff(&want));
+
+        let report = pool.shutdown().unwrap();
+        let profile = net.pool_job_profile();
+        for class in JobClass::ALL {
+            assert_eq!(
+                report.per_class_jobs[class.index()],
+                profile[class.index()] as u64,
+                "{}",
+                class.label()
+            );
+        }
+        assert_eq!(
+            report.jobs_executed,
+            profile.iter().sum::<usize>() as u64
+        );
+    }
+}

@@ -5,14 +5,19 @@
 //! * one **layer thread** per network layer, connected by [`Mailbox`]es in
 //!   producer-consumer fashion (frames stream through, inter-frame
 //!   parallelism for free);
-//! * CONV layer threads lower their GEMM to **jobs** and push them to their
-//!   cluster's [`JobQueue`];
-//! * **delegate threads** ([`delegate`]) wrap the accelerators: the FPGA-PE
-//!   delegates execute the AOT Pallas kernel through PJRT (each owns a
-//!   private engine — mirroring one physical kernel instance per PE); the
-//!   NEON delegates run the native blocked GEMM;
+//! * layer threads emit **all** their matrix work — CONV-tile GEMMs, FC
+//!   GEMMs, im2col lowering — as jobs on the cluster [`JobQueue`]s via
+//!   [`PoolRouter`] (the unified-pool refactor: FC layers no longer run
+//!   inline on the pipeline thread);
+//! * **delegate threads** ([`delegate`]) each drive one
+//!   [`Accelerator`](crate::accel::Accelerator) backend resolved from the
+//!   [`BackendRegistry`](crate::accel::BackendRegistry): the AOT Pallas
+//!   kernel through PJRT (FPGA-PE path, one private engine per delegate —
+//!   mirroring one physical kernel instance per PE), the native blocked
+//!   GEMM (NEON path), or the multi-threaded big-core GEMM;
 //! * the **thief thread** (`sched::worksteal`) rebalances queues when a
-//!   cluster goes idle.
+//!   cluster goes idle, weighting backlogs per job class and filtering
+//!   steals by the destination cluster's capabilities.
 //!
 //! The queues + delegates + thief substrate lives in [`pool`] so both the
 //! single-stream driver here and the multi-stream serving runtime
@@ -27,10 +32,12 @@
 
 pub mod delegate;
 pub mod driver;
+pub mod exec;
 pub mod pool;
 
 pub use driver::{RtOptions, RtReport, RtRuntime};
-pub use pool::{DelegatePool, Dispatcher, GemmCtx, PoolOptions, PoolReport};
+pub use exec::{FrameExec, PoolRouter};
+pub use pool::{backend_key, DelegatePool, Dispatcher, GemmCtx, PoolOptions, PoolReport};
 
 /// How delegates compute jobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -2,23 +2,45 @@
 //! and the work-stealing thief, factored out of the single-stream driver so
 //! the serving runtime (`serve/`) can host many network pipelines over one
 //! physical pool of accelerators.
+//!
+//! Every delegate drives an [`Accelerator`] backend resolved by name from
+//! the [`BackendRegistry`]: `[cluster]` members map to registry keys
+//! ([`backend_key`]), their capability masks intersect into per-cluster
+//! capabilities, and the [`Dispatcher`] routes each job class only to
+//! clusters that can execute it — one heterogeneous pool serving CONV
+//! tiles, FC GEMMs, and im2col lowering alike (paper §3.1).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::accel::{build_clusters, AccelSpec, ClusterSpec};
+use crate::accel::{
+    build_clusters, AccelClass, AccelSpec, Accelerator, BackendRegistry, ClusterSpec,
+};
 use crate::cluster::JobQueue;
 use crate::config::HwConfig;
-use crate::mm::job::{gather_results, jobs_for_gemm, JobResult};
+use crate::mm::job::{gather_results, jobs_for_gemm, ClassMask, Job, JobClass, JobResult};
 use crate::mm::TileGrid;
 use crate::runtime::default_artifacts_dir;
 use crate::sched::worksteal::{StealPolicy, Thief, ThiefMsg};
 
-use super::delegate::{self, Backend, DelegateStats, RtJob};
+use super::delegate::{self, DelegateStats, RtJob};
 use super::ComputeMode;
+
+/// Registry key of the backend driving one accelerator spec under a
+/// compute mode: FPGA PEs run the PJRT job kernel in [`ComputeMode::Pjrt`]
+/// and the native GEMM otherwise; NEON and big-NEON members always run
+/// their native backends.
+pub fn backend_key(spec: &AccelSpec, mode: ComputeMode) -> &'static str {
+    match (&spec.class, mode) {
+        (AccelClass::FpgaPe { .. }, ComputeMode::Pjrt) => "pjrt-pe",
+        (AccelClass::FpgaPe { .. }, ComputeMode::Native) => "neon",
+        (AccelClass::Neon, _) => "neon",
+        (AccelClass::BigNeon, _) => "big-neon",
+    }
+}
 
 /// Pool configuration (the runtime-relevant subset of `RtOptions`).
 #[derive(Clone)]
@@ -29,8 +51,12 @@ pub struct PoolOptions {
     pub steal_policy: StealPolicy,
     /// Extra jobs a delegate drains per queue visit (see
     /// [`delegate::spawn`]).  0 keeps the single-stream driver's strict
-    /// one-at-a-time sharing; the serving runtime raises it.
+    /// one-at-a-time sharing; the serving runtime raises it from the
+    /// `[serving]` config.
     pub drain_extra: usize,
+    /// Backend registry override; `None` uses
+    /// [`BackendRegistry::with_defaults`] (neon, big-neon, pjrt-pe).
+    pub registry: Option<Arc<BackendRegistry>>,
 }
 
 impl PoolOptions {
@@ -41,6 +67,7 @@ impl PoolOptions {
             work_stealing,
             steal_policy: StealPolicy::default(),
             drain_extra: 0,
+            registry: None,
         }
     }
 }
@@ -51,16 +78,21 @@ pub struct PoolReport {
     pub jobs_executed: u64,
     /// Jobs per accelerator (by accel id).
     pub per_accel_jobs: Vec<u64>,
+    /// Jobs per class ([`JobClass`] dense order).
+    pub per_class_jobs: [u64; JobClass::COUNT],
     pub steal_attempts: u64,
     pub jobs_stolen: u64,
+    /// Stolen jobs per class ([`JobClass`] dense order).
+    pub stolen_by_class: [u64; JobClass::COUNT],
 }
 
-/// Addressing of one CONV GEMM dispatch (bundled so call sites stay tidy).
+/// Addressing of one pool dispatch (bundled so call sites stay tidy).
 #[derive(Debug, Clone, Copy)]
 pub struct GemmCtx {
-    /// Destination cluster (from the static mapping).
+    /// Destination cluster (from the static mapping).  A hint: class
+    /// routing may override it when the cluster lacks the capability.
     pub cluster: usize,
-    /// Network layer index of the CONV layer.
+    /// Network layer index of the emitting layer.
     pub layer_idx: usize,
     /// Frame / request tag carried through the jobs.
     pub frame_id: u64,
@@ -73,11 +105,16 @@ pub struct Dispatcher {
     queues: Vec<Arc<JobQueue<RtJob>>>,
     thief_tx: Option<Sender<ThiefMsg>>,
     job_counter: Arc<AtomicU64>,
+    /// Per-cluster capability masks (intersection of member backends).
+    cluster_caps: Arc<Vec<ClassMask>>,
+    /// Per-cluster aggregate service rates (k-steps/s) for routing ties.
+    service_rates: Arc<Vec<f64>>,
 }
 
 impl Dispatcher {
-    /// Lower one GEMM to jobs, enqueue them on the target cluster in one
-    /// batch push, hint the thief, and block until every tile is back.
+    /// Lower one CONV GEMM to tile jobs, enqueue them on the target
+    /// cluster in one batch push, hint the thief, and block until every
+    /// tile is back.
     pub fn execute_gemm(
         &self,
         ctx: GemmCtx,
@@ -85,6 +122,12 @@ impl Dispatcher {
         a: Arc<Vec<f32>>,
         b: Arc<Vec<f32>>,
     ) -> Vec<f32> {
+        // Honor the static mapping when the cluster can run CONV tiles;
+        // route around it otherwise (e.g. an FC-only backend's cluster),
+        // same as the other job classes.
+        let cluster = self
+            .route(JobClass::ConvTile, Some(ctx.cluster))
+            .expect("no cluster in the pool supports CONV-tile jobs");
         let mut next_id = self
             .job_counter
             .fetch_add(grid.num_jobs() as u64, Ordering::Relaxed);
@@ -100,9 +143,9 @@ impl Dispatcher {
                 reply: tx.clone(),
             })
             .collect();
-        self.queues[ctx.cluster].push_batch(batch);
+        self.queues[cluster].push_batch(batch);
         if let Some(t) = &self.thief_tx {
-            let _ = t.send(ThiefMsg::ClusterBusy(ctx.cluster));
+            let _ = t.send(ThiefMsg::ClusterBusy(cluster));
         }
         drop(tx);
         let mut results = Vec::with_capacity(n);
@@ -112,6 +155,84 @@ impl Dispatcher {
         gather_results(grid, &results)
     }
 
+    /// Dispatch one FC GEMM (y = W·x) as a pool job and block for the
+    /// result.  Returns `None` when no cluster supports FC jobs (e.g. a
+    /// PJRT-only pool) — the caller then computes inline.
+    pub fn execute_fc(
+        &self,
+        ctx: GemmCtx,
+        out_n: usize,
+        in_n: usize,
+        w: Arc<Vec<f32>>,
+        x: Arc<Vec<f32>>,
+        ts: usize,
+    ) -> Option<Vec<f32>> {
+        let cluster = self.route(JobClass::FcGemm, None)?;
+        let id = self.job_counter.fetch_add(1, Ordering::Relaxed);
+        let job = Job::fc(id, ctx.layer_idx, ctx.frame_id, out_n, in_n, w, x, ts);
+        Some(self.run_single(cluster, job).data)
+    }
+
+    /// Dispatch one im2col lowering as a pool job and block for the col
+    /// matrix.  `None` when no cluster supports im2col jobs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_im2col(
+        &self,
+        ctx: GemmCtx,
+        chw: (usize, usize, usize),
+        size: usize,
+        stride: usize,
+        pad: usize,
+        input: Arc<Vec<f32>>,
+        ts: usize,
+    ) -> Option<Vec<f32>> {
+        let cluster = self.route(JobClass::Im2col, Some(ctx.cluster))?;
+        let id = self.job_counter.fetch_add(1, Ordering::Relaxed);
+        let job = Job::im2col(
+            id,
+            ctx.layer_idx,
+            ctx.frame_id,
+            chw,
+            size,
+            stride,
+            pad,
+            input,
+            ts,
+        );
+        Some(self.run_single(cluster, job).data)
+    }
+
+    /// Pick the destination cluster for a job class: `preferred` if it is
+    /// capable, else the capable cluster with the smallest queue backlog
+    /// per unit service rate; `None` if no cluster supports the class.
+    pub fn route(&self, class: JobClass, preferred: Option<usize>) -> Option<usize> {
+        if let Some(p) = preferred {
+            if p < self.cluster_caps.len() && self.cluster_caps[p].supports(class) {
+                return Some(p);
+            }
+        }
+        (0..self.queues.len())
+            .filter(|&c| self.cluster_caps[c].supports(class))
+            .min_by(|&a, &b| {
+                let la = self.queues[a].len() as f64 / self.service_rates[a].max(1e-12);
+                let lb = self.queues[b].len() as f64 / self.service_rates[b].max(1e-12);
+                la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+    }
+
+    /// Per-cluster capability masks (for tests and reporting).
+    pub fn cluster_caps(&self) -> &[ClassMask] {
+        &self.cluster_caps
+    }
+
+    fn run_single(&self, cluster: usize, job: Job) -> JobResult {
+        let (tx, rx) = mpsc::channel::<JobResult>();
+        self.queues[cluster].push(RtJob { job, reply: tx });
+        if let Some(t) = &self.thief_tx {
+            let _ = t.send(ThiefMsg::ClusterBusy(cluster));
+        }
+        rx.recv().expect("job result")
+    }
 }
 
 /// The running pool: one delegate thread per accelerator, one job queue per
@@ -119,6 +240,8 @@ impl Dispatcher {
 pub struct DelegatePool {
     clusters: Vec<ClusterSpec>,
     queues: Vec<Arc<JobQueue<RtJob>>>,
+    cluster_caps: Arc<Vec<ClassMask>>,
+    service_rates: Arc<Vec<f64>>,
     delegate_stats: Vec<Arc<DelegateStats>>,
     delegate_handles: Vec<std::thread::JoinHandle<Result<()>>>,
     thief: Option<Thief<RtJob>>,
@@ -126,23 +249,50 @@ pub struct DelegatePool {
 }
 
 impl DelegatePool {
-    /// Build clusters and spawn delegate threads (and the thief).
+    /// Build clusters, resolve every member through the backend registry,
+    /// and spawn delegate threads (and the thief).
     pub fn start(options: &PoolOptions) -> Result<DelegatePool> {
+        let registry = options.registry.clone().unwrap_or_else(|| {
+            Arc::new(BackendRegistry::with_defaults(
+                default_artifacts_dir(),
+                options.hw.big_neon_threads,
+            ))
+        });
         let clusters = build_clusters(&options.hw);
         let queues: Vec<Arc<JobQueue<RtJob>>> = clusters
             .iter()
             .map(|_| Arc::new(JobQueue::new()))
             .collect();
+
+        // Per-cluster capability = intersection over members: a cluster
+        // queue is shared, so a class is routable only if *every* member
+        // can execute it.
+        let mut cluster_caps = Vec::with_capacity(clusters.len());
+        for cluster in &clusters {
+            let mut caps = ClassMask::all();
+            for member in &cluster.members {
+                let key = backend_key(member, options.compute);
+                let entry = registry
+                    .get(key)
+                    .ok_or_else(|| anyhow!("no backend {key:?} in the registry"))?;
+                caps = caps.intersect(entry.caps);
+            }
+            cluster_caps.push(caps);
+        }
+        let service_rates: Vec<f64> = clusters.iter().map(|c| c.throughput()).collect();
+
         let thief = if options.work_stealing {
-            Some(Thief::spawn_with(queues.clone(), options.steal_policy))
+            Some(Thief::spawn_with_caps(
+                queues.clone(),
+                options.steal_policy,
+                cluster_caps.clone(),
+                service_rates.clone(),
+            ))
         } else {
             None
         };
         let thief_tx = thief.as_ref().map(|t| t.sender());
 
-        // PJRT delegates compile every manifest job kernel: the pool is
-        // shared across networks, so any K value may arrive.
-        let artifacts = default_artifacts_dir();
         let mut delegate_stats = Vec::new();
         let mut delegate_handles = Vec::new();
         for cluster in &clusters {
@@ -150,28 +300,12 @@ impl DelegatePool {
                 let stats = Arc::new(DelegateStats::default());
                 delegate_stats.push(Arc::clone(&stats));
                 let queue = Arc::clone(&queues[cluster.index]);
-                let mode = options.compute;
-                let is_fpga = member.is_fpga();
-                let art = artifacts.clone();
-                let mk = move || -> Result<Backend> {
-                    if is_fpga && mode == ComputeMode::Pjrt {
-                        #[cfg(feature = "pjrt")]
-                        {
-                            use anyhow::Context;
-                            let engine = crate::runtime::PeEngine::load(&art, None)
-                                .context("loading PE engine (run `make artifacts`)")?;
-                            return Ok(Backend::Pjrt(Box::new(engine)));
-                        }
-                        #[cfg(not(feature = "pjrt"))]
-                        {
-                            // Native-GEMM fallback: the `pjrt` feature is
-                            // off, so the PE delegates compute natively.
-                            let _ = &art;
-                            return Ok(Backend::Native);
-                        }
-                    }
-                    Ok(Backend::Native)
-                };
+                let key = backend_key(member, options.compute);
+                let builder = registry
+                    .get(key)
+                    .expect("resolved above")
+                    .builder();
+                let mk = move || -> Result<Box<dyn Accelerator>> { builder() };
                 delegate_handles.push(delegate::spawn(
                     format!("delegate-{}", member.name),
                     cluster.index,
@@ -187,6 +321,8 @@ impl DelegatePool {
         Ok(DelegatePool {
             clusters,
             queues,
+            cluster_caps: Arc::new(cluster_caps),
+            service_rates: Arc::new(service_rates),
             delegate_stats,
             delegate_handles,
             thief,
@@ -203,12 +339,14 @@ impl DelegatePool {
         crate::accel::all_accels(&self.clusters)
     }
 
-    /// Handle for layer threads to dispatch GEMMs through.
+    /// Handle for layer threads to dispatch matrix work through.
     pub fn dispatcher(&self) -> Dispatcher {
         Dispatcher {
             queues: self.queues.clone(),
             thief_tx: self.thief.as_ref().map(|t| t.sender()),
             job_counter: Arc::clone(&self.job_counter),
+            cluster_caps: Arc::clone(&self.cluster_caps),
+            service_rates: Arc::clone(&self.service_rates),
         }
     }
 
@@ -219,7 +357,7 @@ impl DelegatePool {
 
     /// Close the queues, join every delegate, stop the thief, and return
     /// the final counters.  Callers must have drained their reply channels
-    /// (i.e. no in-flight GEMMs) before calling.
+    /// (i.e. no in-flight jobs) before calling.
     pub fn shutdown(self) -> Result<PoolReport> {
         let DelegatePool {
             queues,
@@ -249,11 +387,15 @@ fn fold_report(delegate_stats: &[Arc<DelegateStats>], thief: Option<&Thief<RtJob
         let j = stats.jobs.load(Ordering::Relaxed);
         report.per_accel_jobs.push(j);
         report.jobs_executed += j;
+        for (acc, n) in report.per_class_jobs.iter_mut().zip(stats.jobs_by_class()) {
+            *acc += n;
+        }
     }
     if let Some(t) = thief {
         let (attempts, _successes, moved) = t.stats.snapshot();
         report.steal_attempts = attempts;
         report.jobs_stolen = moved;
+        report.stolen_by_class = t.stats.moved_by_class();
     }
     report
 }
@@ -285,5 +427,82 @@ mod tests {
         assert!(want.allclose(&got, 1e-4, 1e-4), "{}", want.max_abs_diff(&got));
         let report = pool.shutdown().unwrap();
         assert_eq!(report.jobs_executed, grid.num_jobs() as u64);
+        assert_eq!(
+            report.per_class_jobs[JobClass::ConvTile.index()],
+            grid.num_jobs() as u64
+        );
+    }
+
+    #[test]
+    fn pool_executes_fc_and_im2col_jobs() {
+        let options = PoolOptions::new(HwConfig::default_zc702(), ComputeMode::Native, false);
+        let pool = DelegatePool::start(&options).unwrap();
+        let dispatcher = pool.dispatcher();
+        // In native mode every cluster supports every class.
+        for caps in dispatcher.cluster_caps() {
+            for class in JobClass::ALL {
+                assert!(caps.supports(class));
+            }
+        }
+        let ctx = GemmCtx {
+            cluster: 0,
+            layer_idx: 2,
+            frame_id: 7,
+        };
+        let w = Arc::new(XorShift64Star::new(1).fill_f32(16 * 32, 1.0));
+        let x = Arc::new(XorShift64Star::new(2).fill_f32(32, 1.0));
+        let y = dispatcher
+            .execute_fc(ctx, 16, 32, Arc::clone(&w), Arc::clone(&x), 32)
+            .expect("native pool supports FC");
+        let mut want = vec![0.0f32; 16];
+        crate::mm::gemm::gemm_blocked_into(&w, &x, &mut want, 16, 32, 1);
+        assert_eq!(y, want);
+
+        let input = Arc::new(XorShift64Star::new(3).fill_f32(3 * 6 * 6, 1.0));
+        let col = dispatcher
+            .execute_im2col(ctx, (3, 6, 6), 3, 1, 1, Arc::clone(&input), 32)
+            .expect("native pool supports im2col");
+        let x_t = crate::tensor::Tensor::from_vec(&[3, 6, 6], (*input).clone());
+        let want_col = crate::nn::im2col::im2col(&x_t, 3, 1, 1);
+        assert_eq!(col, want_col.data());
+
+        let report = pool.shutdown().unwrap();
+        assert_eq!(report.per_class_jobs[JobClass::FcGemm.index()], 1);
+        assert_eq!(report.per_class_jobs[JobClass::Im2col.index()], 1);
+        assert_eq!(report.jobs_executed, 2);
+        // Per-accel counters balance the total.
+        assert_eq!(report.per_accel_jobs.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn route_respects_capabilities() {
+        // A registry where FC is only supported by the "neon" backend and
+        // the F-PE cluster is CONV-only, mirroring a real PJRT deployment.
+        let mut registry = BackendRegistry::with_defaults(
+            default_artifacts_dir(),
+            2,
+        );
+        registry.register(
+            "conv-only",
+            ClassMask::of(&[JobClass::ConvTile]),
+            || Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>),
+        );
+        // Hand-build a pool whose cluster-1 members resolve to conv-only:
+        // simplest via Dispatcher::route on a live pool is covered above;
+        // here check the mask algebra the pool start uses.
+        let all = ClassMask::all();
+        let conv_only = registry.get("conv-only").unwrap().caps;
+        assert!(all.intersect(conv_only).supports(JobClass::ConvTile));
+        assert!(!all.intersect(conv_only).supports(JobClass::FcGemm));
+    }
+
+    #[test]
+    fn unknown_backend_key_fails_cleanly() {
+        let mut options =
+            PoolOptions::new(HwConfig::default_zc702(), ComputeMode::Native, false);
+        // An empty registry knows no backend names at all.
+        options.registry = Some(Arc::new(BackendRegistry::new()));
+        let err = DelegatePool::start(&options).err().expect("must fail");
+        assert!(err.to_string().contains("registry"), "{err}");
     }
 }

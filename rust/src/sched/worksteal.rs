@@ -4,9 +4,17 @@
 //! * **manager** — receives idle notifications from clusters and keeps the
 //!   *idle book*;
 //! * **idle book** — the set of clusters that drained their job queues;
-//! * **stealer** — takes jobs from the back of the busiest victim queue and
-//!   deposits them into an idle cluster's queue, then clears the idle-book
-//!   entry.
+//! * **stealer** — takes jobs from the back of the heaviest victim queue
+//!   and deposits them into an idle cluster's queue, then clears the
+//!   idle-book entry.
+//!
+//! With the unified job model the thief accounts **per job class**
+//! (CONV-tile / FC-GEMM / im2col): victim selection ranks queues by their
+//! cost-weighted backlog divided by the cluster's service rate (paper §3.3
+//! — heterogeneous clusters drain at different speeds, so raw queue length
+//! misranks victims), and stolen jobs are filtered by the destination
+//! cluster's capability mask so a CONV-only PE cluster never receives an
+//! FC job it cannot execute.
 //!
 //! The same victim-selection policy is reused by the virtual-clock
 //! simulator (`choose_victim` is a pure function).
@@ -19,6 +27,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::cluster::JobQueue;
+use crate::mm::job::{ClassMask, JobClass};
 
 /// Messages from cluster workers to the thief's manager.
 #[derive(Debug, PartialEq, Eq)]
@@ -30,12 +39,33 @@ pub enum ThiefMsg {
     Shutdown,
 }
 
+/// Queue items the thief can classify (dense [`JobClass`] index).  Keeps
+/// `Thief` generic over the job type while enabling per-class accounting.
+pub trait Classed {
+    fn class_index(&self) -> usize;
+}
+
+/// Plain integers classify as CONV-tile work (tests and simulators).
+impl Classed for u32 {
+    fn class_index(&self) -> usize {
+        0
+    }
+}
+
+impl Classed for u64 {
+    fn class_index(&self) -> usize {
+        0
+    }
+}
+
 /// Steal accounting (shared, lock-free).
 #[derive(Debug, Default)]
 pub struct StealStats {
     pub attempts: AtomicU64,
     pub successes: AtomicU64,
     pub jobs_moved: AtomicU64,
+    /// Jobs moved per class ([`JobClass`] dense order).
+    pub moved_by_class: [AtomicU64; JobClass::COUNT],
 }
 
 impl StealStats {
@@ -46,6 +76,15 @@ impl StealStats {
             self.jobs_moved.load(Ordering::Relaxed),
         )
     }
+
+    /// Per-class moved-job counters.
+    pub fn moved_by_class(&self) -> [u64; JobClass::COUNT] {
+        let mut out = [0u64; JobClass::COUNT];
+        for (o, c) in out.iter_mut().zip(&self.moved_by_class) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        out
+    }
 }
 
 /// Tunables for the stealer pass.
@@ -55,15 +94,29 @@ impl StealStats {
 /// A thief tuned for single-frame streams (steal whenever a victim holds
 /// ≥2 jobs) would ping-pong half-batches between clusters, so the idle
 /// book's stealer threshold scales with the expected batch job count.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// `class_cost` weighs each job class when ranking victims: an FC-GEMM
+/// job is a whole layer's GEMM while a CONV-tile job is one output tile,
+/// so equal queue lengths do not mean equal backlogs.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StealPolicy {
     /// Minimum victim queue length worth stealing from.
     pub min_victim_len: usize,
+    /// Relative service cost of one job per class ([`JobClass`] order:
+    /// CONV-tile, FC-GEMM, im2col).
+    pub class_cost: [f64; JobClass::COUNT],
 }
+
+/// Default per-class cost weights: an FC GEMM carries a few tiles' worth
+/// of MACs; im2col is pure data movement.
+pub const DEFAULT_CLASS_COST: [f64; JobClass::COUNT] = [1.0, 4.0, 0.5];
 
 impl Default for StealPolicy {
     fn default() -> Self {
-        StealPolicy { min_victim_len: 2 }
+        StealPolicy {
+            min_victim_len: 2,
+            class_cost: DEFAULT_CLASS_COST,
+        }
     }
 }
 
@@ -73,6 +126,7 @@ impl StealPolicy {
     pub fn batched(jobs_per_batch: usize) -> Self {
         StealPolicy {
             min_victim_len: (jobs_per_batch / 2).max(2),
+            ..StealPolicy::default()
         }
     }
 }
@@ -85,6 +139,28 @@ pub fn choose_victim(queue_lens: &[usize], idle: &HashSet<usize>, min_len: usize
         .enumerate()
         .filter(|(i, &len)| !idle.contains(i) && len >= min_len)
         .max_by_key(|(_, &len)| len)
+        .map(|(i, _)| i)
+}
+
+/// Service-rate-aware victim pick: rank eligible clusters (non-idle, at
+/// least `min_len` queued jobs) by `loads` — the cost-weighted backlog
+/// divided by the cluster's service rate, i.e. estimated time-to-drain.
+pub fn choose_victim_weighted(
+    queue_lens: &[usize],
+    loads: &[f64],
+    idle: &HashSet<usize>,
+    min_len: usize,
+) -> Option<usize> {
+    debug_assert_eq!(queue_lens.len(), loads.len());
+    queue_lens
+        .iter()
+        .enumerate()
+        .filter(|(i, &len)| !idle.contains(i) && len >= min_len)
+        .max_by(|(a, _), (b, _)| {
+            loads[*a]
+                .partial_cmp(&loads[*b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
         .map(|(i, _)| i)
 }
 
@@ -101,8 +177,9 @@ pub struct Thief<T: Send + 'static> {
     _marker: std::marker::PhantomData<T>,
 }
 
-impl<T: Send + 'static> Thief<T> {
-    /// Spawn the thief over the cluster queues (default policy).
+impl<T: Send + Classed + 'static> Thief<T> {
+    /// Spawn the thief over the cluster queues (default policy, every
+    /// cluster assumed capable of every job class).
     pub fn spawn(queues: Vec<Arc<JobQueue<T>>>) -> Thief<T> {
         Self::spawn_with(queues, StealPolicy::default())
     }
@@ -110,12 +187,28 @@ impl<T: Send + 'static> Thief<T> {
     /// Spawn the thief with an explicit steal policy (the serving runtime
     /// passes [`StealPolicy::batched`]).
     pub fn spawn_with(queues: Vec<Arc<JobQueue<T>>>, policy: StealPolicy) -> Thief<T> {
+        let n = queues.len();
+        Self::spawn_with_caps(queues, policy, vec![ClassMask::all(); n], vec![1.0; n])
+    }
+
+    /// Fully-specified spawn: per-cluster capability masks (stolen jobs
+    /// are filtered so a destination only receives classes it supports)
+    /// and service rates (aggregate k-steps/s, normalizing victim
+    /// backlogs across heterogeneous clusters).
+    pub fn spawn_with_caps(
+        queues: Vec<Arc<JobQueue<T>>>,
+        policy: StealPolicy,
+        caps: Vec<ClassMask>,
+        service_rates: Vec<f64>,
+    ) -> Thief<T> {
+        assert_eq!(queues.len(), caps.len());
+        assert_eq!(queues.len(), service_rates.len());
         let (tx, rx) = mpsc::channel::<ThiefMsg>();
         let stats = Arc::new(StealStats::default());
         let st = Arc::clone(&stats);
         let handle = std::thread::Builder::new()
             .name("thief".into())
-            .spawn(move || thief_loop(queues, rx, st, policy))
+            .spawn(move || thief_loop(queues, rx, st, policy, caps, service_rates))
             .expect("spawn thief");
         Thief {
             tx,
@@ -124,7 +217,9 @@ impl<T: Send + 'static> Thief<T> {
             _marker: std::marker::PhantomData,
         }
     }
+}
 
+impl<T: Send + 'static> Thief<T> {
     /// Handle for workers to report idleness.
     pub fn sender(&self) -> mpsc::Sender<ThiefMsg> {
         self.tx.clone()
@@ -147,11 +242,13 @@ impl<T: Send + 'static> Drop for Thief<T> {
     }
 }
 
-fn thief_loop<T: Send>(
+fn thief_loop<T: Send + Classed>(
     queues: Vec<Arc<JobQueue<T>>>,
     rx: mpsc::Receiver<ThiefMsg>,
     stats: Arc<StealStats>,
     policy: StealPolicy,
+    caps: Vec<ClassMask>,
+    service_rates: Vec<f64>,
 ) {
     let mut idle_book: HashSet<usize> = HashSet::new();
     loop {
@@ -181,22 +278,67 @@ fn thief_loop<T: Send>(
             }
             None => {}
         }
-        // Stealer pass: service every idle cluster we can.
-        let lens: Vec<usize> = queues.iter().map(|q| q.len()).collect();
+        // Nothing idle → nothing to steal: skip the per-class backlog
+        // snapshot (it locks every queue and walks every queued job, far
+        // too expensive to run on each ClusterBusy ping under load).
+        if idle_book.is_empty() {
+            continue;
+        }
+        // Stealer pass: service every idle cluster we can.  Queue backlogs
+        // are snapshot per class, weighted by service cost, and normalized
+        // by each cluster's drain rate.
+        let counts: Vec<Vec<usize>> = queues
+            .iter()
+            .map(|q| q.class_counts(JobClass::COUNT, |t| t.class_index()))
+            .collect();
+        let lens: Vec<usize> = counts.iter().map(|c| c.iter().sum()).collect();
+        let loads: Vec<f64> = counts
+            .iter()
+            .zip(&service_rates)
+            .map(|(c, rate)| {
+                let weighted: f64 = c
+                    .iter()
+                    .zip(&policy.class_cost)
+                    .map(|(&n, &w)| n as f64 * w)
+                    .sum();
+                weighted / rate.max(1e-12)
+            })
+            .collect();
         let served: Vec<usize> = idle_book.iter().copied().collect();
         for idle_c in served {
             stats.attempts.fetch_add(1, Ordering::Relaxed);
-            if let Some(victim) = choose_victim(&lens, &idle_book, policy.min_victim_len) {
+            let cap = caps[idle_c];
+            // Walk victims in descending time-to-drain order: a victim
+            // whose backlog holds no class the destination supports
+            // (e.g. all-FC backlog vs a CONV-only PE cluster) must not
+            // block stealing from the next-heaviest one.
+            let mut excluded = idle_book.clone();
+            while let Some(victim) =
+                choose_victim_weighted(&lens, &loads, &excluded, policy.min_victim_len)
+            {
                 let n = steal_amount(queues[victim].len());
-                let stolen = queues[victim].steal(n);
-                if !stolen.is_empty() {
-                    let moved = stolen.len() as u64;
-                    if queues[idle_c].push_batch(stolen) {
-                        stats.successes.fetch_add(1, Ordering::Relaxed);
-                        stats.jobs_moved.fetch_add(moved, Ordering::Relaxed);
-                        idle_book.remove(&idle_c);
+                let stolen = queues[victim].steal_where(n, |t| cap.supports_index(t.class_index()));
+                if stolen.is_empty() {
+                    excluded.insert(victim);
+                    continue;
+                }
+                let moved = stolen.len() as u64;
+                let mut by_class = [0u64; JobClass::COUNT];
+                for t in &stolen {
+                    let i = t.class_index();
+                    if i < JobClass::COUNT {
+                        by_class[i] += 1;
                     }
                 }
+                if queues[idle_c].push_batch(stolen) {
+                    stats.successes.fetch_add(1, Ordering::Relaxed);
+                    stats.jobs_moved.fetch_add(moved, Ordering::Relaxed);
+                    for (ctr, n) in stats.moved_by_class.iter().zip(by_class) {
+                        ctr.fetch_add(n, Ordering::Relaxed);
+                    }
+                    idle_book.remove(&idle_c);
+                }
+                break;
             }
         }
     }
@@ -228,6 +370,27 @@ mod tests {
     }
 
     #[test]
+    fn weighted_victim_respects_service_rates() {
+        // Cluster 0: 6 jobs but drains 10× faster than cluster 1's 4 jobs.
+        let lens = vec![6, 4];
+        let loads = vec![6.0 / 10.0, 4.0 / 1.0];
+        let idle = HashSet::new();
+        assert_eq!(choose_victim_weighted(&lens, &loads, &idle, 2), Some(1));
+        // Raw-length selection would have picked cluster 0.
+        assert_eq!(choose_victim(&lens, &idle, 2), Some(0));
+    }
+
+    #[test]
+    fn weighted_victim_skips_idle_and_short() {
+        let lens = vec![5, 1, 5];
+        let loads = vec![1.0, 99.0, 2.0];
+        let mut idle = HashSet::new();
+        idle.insert(2);
+        // Cluster 1 is below min_len, cluster 2 is idle → cluster 0.
+        assert_eq!(choose_victim_weighted(&lens, &loads, &idle, 2), Some(0));
+    }
+
+    #[test]
     fn steal_half() {
         assert_eq!(steal_amount(0), 0);
         assert_eq!(steal_amount(1), 1);
@@ -252,9 +415,97 @@ mod tests {
         assert!(!q0.is_empty(), "thief should have moved jobs");
         let (att, succ, moved) = thief.stats.snapshot();
         assert!(att >= 1 && succ >= 1 && moved >= 1);
+        // Per-class accounting balances the total (u32 ⇒ class 0).
+        let by_class = thief.stats.moved_by_class();
+        assert_eq!(by_class.iter().sum::<u64>(), moved);
+        assert_eq!(by_class[0], moved);
         // No duplication, no loss.
         assert_eq!(q0.len() + q1.len(), 10);
         thief.shutdown();
+    }
+
+    /// A test job type spanning two classes.
+    struct CJob(#[allow(dead_code)] u32, usize);
+    impl Classed for CJob {
+        fn class_index(&self) -> usize {
+            self.1
+        }
+    }
+
+    #[test]
+    fn capability_mask_filters_stolen_classes() {
+        let q0: Arc<JobQueue<CJob>> = Arc::new(JobQueue::new());
+        let q1: Arc<JobQueue<CJob>> = Arc::new(JobQueue::new());
+        // Victim holds a mix of CONV-tile (0) and FC (1) jobs.
+        for i in 0..6 {
+            q1.push(CJob(i, (i % 2) as usize));
+        }
+        // Destination cluster 0 only supports CONV tiles.
+        let thief = Thief::spawn_with_caps(
+            vec![Arc::clone(&q0), Arc::clone(&q1)],
+            StealPolicy::default(),
+            vec![ClassMask::of(&[JobClass::ConvTile]), ClassMask::all()],
+            vec![1.0, 1.0],
+        );
+        thief.sender().send(ThiefMsg::ClusterIdle(0)).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while q0.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        thief.shutdown();
+        assert!(!q0.is_empty(), "thief should have moved CONV jobs");
+        // Everything deposited on cluster 0 is CONV-class.
+        q0.close();
+        while let Some(j) = q0.pop_blocking() {
+            assert_eq!(j.class_index(), 0, "FC job stolen into CONV-only cluster");
+        }
+        // No FC job left cluster 1.
+        q1.close();
+        let mut fc_left = 0;
+        while let Some(j) = q1.pop_blocking() {
+            if j.class_index() == 1 {
+                fc_left += 1;
+            }
+        }
+        assert_eq!(fc_left, 3, "FC jobs must stay on the capable cluster");
+    }
+
+    #[test]
+    fn thief_falls_back_past_unstealable_victims() {
+        // Victim 1 ranks heaviest (all FC jobs, cost 4.0) but holds
+        // nothing the CONV-only destination can run; the thief must fall
+        // back to victim 2's CONV backlog instead of starving cluster 0.
+        let q0: Arc<JobQueue<CJob>> = Arc::new(JobQueue::new());
+        let q1: Arc<JobQueue<CJob>> = Arc::new(JobQueue::new());
+        let q2: Arc<JobQueue<CJob>> = Arc::new(JobQueue::new());
+        for i in 0..8 {
+            q1.push(CJob(i, 1)); // FC class
+        }
+        for i in 0..4 {
+            q2.push(CJob(i, 0)); // CONV class
+        }
+        let thief = Thief::spawn_with_caps(
+            vec![Arc::clone(&q0), Arc::clone(&q1), Arc::clone(&q2)],
+            StealPolicy::default(),
+            vec![
+                ClassMask::of(&[JobClass::ConvTile]),
+                ClassMask::all(),
+                ClassMask::all(),
+            ],
+            vec![1.0, 1.0, 1.0],
+        );
+        thief.sender().send(ThiefMsg::ClusterIdle(0)).unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while q0.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        thief.shutdown();
+        assert!(!q0.is_empty(), "thief starved behind an unstealable victim");
+        q0.close();
+        while let Some(j) = q0.pop_blocking() {
+            assert_eq!(j.class_index(), 0);
+        }
+        assert_eq!(q1.len(), 8, "FC backlog must be untouched");
     }
 
     #[test]
@@ -262,6 +513,7 @@ mod tests {
         assert_eq!(StealPolicy::default().min_victim_len, 2);
         assert_eq!(StealPolicy::batched(1).min_victim_len, 2);
         assert_eq!(StealPolicy::batched(16).min_victim_len, 8);
+        assert_eq!(StealPolicy::batched(16).class_cost, DEFAULT_CLASS_COST);
     }
 
     #[test]

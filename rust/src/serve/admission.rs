@@ -1,10 +1,19 @@
-//! Bounded, stream-fair admission control with shed-on-overload semantics.
+//! Bounded, per-network-lane, stream-fair admission control with
+//! shed-on-overload semantics.
 //!
 //! A serving front-end that blocks producers on overload just moves the
 //! queue into the clients; one that drops newest-first starves whoever is
 //! unlucky.  This queue does neither: depth is bounded (`submit` sheds and
-//! reports), and the consumer side drains streams round-robin so one
-//! chatty client cannot starve the others.
+//! reports), and the consumer side drains fairly so one chatty client
+//! cannot starve the others.
+//!
+//! Admission is organized as **one lane per network** (created on first
+//! use), each with its own depth bound.  A stalled network therefore
+//! backs up — and sheds — only its own lane, while the other networks'
+//! traffic keeps flowing: the consumer passes an eligibility filter
+//! (`pop_timeout_eligible`) naming the networks whose pipelines currently
+//! have capacity, and the pop round-robins across eligible lanes, then
+//! across streams within the lane.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::ops::Bound;
@@ -14,83 +23,164 @@ use std::time::Duration;
 
 use super::request::Request;
 
-struct Inner {
+/// One network's admission lane.
+#[derive(Default)]
+struct Lane {
     per_stream: BTreeMap<usize, VecDeque<Request>>,
     len: usize,
     last_served: Option<usize>,
+}
+
+impl Lane {
+    /// Round-robin across streams (within a stream, FIFO).
+    fn take_fair(&mut self) -> Request {
+        let next_sid = match self.last_served {
+            Some(last) => self
+                .per_stream
+                .range((Bound::Excluded(last), Bound::Unbounded))
+                .map(|(sid, _)| *sid)
+                .next(),
+            None => None,
+        };
+        let sid = match next_sid {
+            Some(sid) => sid,
+            None => *self
+                .per_stream
+                .keys()
+                .next()
+                .expect("len > 0 implies a stream"),
+        };
+        let queue = self.per_stream.get_mut(&sid).expect("stream present");
+        let req = queue.pop_front().expect("stream queue non-empty");
+        if queue.is_empty() {
+            self.per_stream.remove(&sid);
+        }
+        self.last_served = Some(sid);
+        self.len -= 1;
+        req
+    }
+}
+
+struct Inner {
+    lanes: BTreeMap<usize, Lane>,
+    total_len: usize,
+    last_served_net: Option<usize>,
     closed: bool,
 }
 
 /// MPMC admission queue: producers are client streams, the consumer is the
-/// micro-batcher thread.
+/// micro-batcher thread.  Capacity is enforced *per network lane*.
 pub struct AdmissionQueue {
     inner: Mutex<Inner>,
     not_empty: Condvar,
-    capacity: usize,
+    lane_capacity: usize,
     admitted: AtomicU64,
     shed: AtomicU64,
 }
 
 impl AdmissionQueue {
-    pub fn new(capacity: usize) -> AdmissionQueue {
+    /// `lane_capacity` bounds each network's lane independently.
+    pub fn new(lane_capacity: usize) -> AdmissionQueue {
         AdmissionQueue {
             inner: Mutex::new(Inner {
-                per_stream: BTreeMap::new(),
-                len: 0,
-                last_served: None,
+                lanes: BTreeMap::new(),
+                total_len: 0,
+                last_served_net: None,
                 closed: false,
             }),
             not_empty: Condvar::new(),
-            capacity: capacity.max(1),
+            lane_capacity: lane_capacity.max(1),
             admitted: AtomicU64::new(0),
             shed: AtomicU64::new(0),
         }
     }
 
-    /// Admit or shed.  Returns false when the queue is full or closed (the
-    /// request is dropped and counted — overload never blocks a client).
+    /// Admit or shed.  Returns false when the request's network lane is
+    /// full or the queue is closed (the request is dropped and counted —
+    /// overload never blocks a client, and never spills into other
+    /// networks' lanes).
     pub fn submit(&self, req: Request) -> bool {
         let mut g = self.inner.lock().unwrap();
-        if g.closed || g.len >= self.capacity {
+        if g.closed {
             drop(g);
             self.shed.fetch_add(1, Ordering::Relaxed);
             return false;
         }
-        g.per_stream.entry(req.stream_id).or_default().push_back(req);
-        g.len += 1;
+        let lane = g.lanes.entry(req.net_id).or_default();
+        if lane.len >= self.lane_capacity {
+            drop(g);
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        lane.per_stream
+            .entry(req.stream_id)
+            .or_default()
+            .push_back(req);
+        lane.len += 1;
+        g.total_len += 1;
         drop(g);
         self.admitted.fetch_add(1, Ordering::Relaxed);
         self.not_empty.notify_all();
         true
     }
 
-    /// Fair pop: round-robin across streams (within a stream, FIFO).
-    /// `Ok(None)` = closed and drained, `Err(())` = timed out.
+    /// Fair pop across all lanes: `Ok(None)` = closed and drained,
+    /// `Err(())` = timed out.
     pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<Request>, ()> {
+        self.pop_timeout_filtered(timeout, |_| true)
+    }
+
+    /// Fair pop restricted to eligible networks (`eligible[net_id]`;
+    /// nets beyond the slice count as eligible).  Requests of ineligible
+    /// lanes stay queued — their backpressure never blocks this pop.
+    pub fn pop_timeout_eligible(
+        &self,
+        timeout: Duration,
+        eligible: &[bool],
+    ) -> Result<Option<Request>, ()> {
+        self.pop_timeout_filtered(timeout, |net| *eligible.get(net).unwrap_or(&true))
+    }
+
+    fn pop_timeout_filtered(
+        &self,
+        timeout: Duration,
+        eligible: impl Fn(usize) -> bool,
+    ) -> Result<Option<Request>, ()> {
+        // Fixed deadline, not a per-wakeup timeout: submissions into
+        // *ineligible* lanes notify this condvar without producing a
+        // takeable request, and re-arming the full timeout on each such
+        // wakeup would postpone the caller's batch-window deadline for as
+        // long as the stalled lane keeps receiving traffic.
+        let deadline = std::time::Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
         loop {
-            if g.len > 0 {
-                return Ok(Some(take_fair(&mut g)));
+            if let Some(req) = take_fair(&mut g, &eligible) {
+                return Ok(Some(req));
             }
-            if g.closed {
+            if g.closed && g.total_len == 0 {
                 return Ok(None);
             }
-            let (guard, res) = self.not_empty.wait_timeout(g, timeout).unwrap();
-            g = guard;
-            if res.timed_out() {
-                if g.len > 0 {
-                    return Ok(Some(take_fair(&mut g)));
-                }
-                if g.closed {
-                    return Ok(None);
-                }
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
                 return Err(());
             }
+            let (guard, _res) = self.not_empty.wait_timeout(g, remaining).unwrap();
+            g = guard;
         }
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len
+        self.inner.lock().unwrap().total_len
+    }
+
+    /// Queued requests of one network's lane.
+    pub fn lane_len(&self, net_id: usize) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .lanes
+            .get(&net_id)
+            .map_or(0, |l| l.len)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -112,29 +202,29 @@ impl AdmissionQueue {
     }
 }
 
-/// Pick the next stream after `last_served` (wrapping), pop its oldest
-/// request.  Invariant: every map entry holds a non-empty deque.
-fn take_fair(g: &mut Inner) -> Request {
-    let next_sid = match g.last_served {
-        Some(last) => g
-            .per_stream
-            .range((Bound::Excluded(last), Bound::Unbounded))
-            .map(|(sid, _)| *sid)
-            .next(),
-        None => None,
-    };
-    let sid = match next_sid {
-        Some(sid) => sid,
-        None => *g.per_stream.keys().next().expect("len > 0 implies a stream"),
-    };
-    let queue = g.per_stream.get_mut(&sid).expect("stream present");
-    let req = queue.pop_front().expect("stream queue non-empty");
-    if queue.is_empty() {
-        g.per_stream.remove(&sid);
+/// Pick the next eligible non-empty lane after `last_served_net`
+/// (wrapping), then round-robin within it.  Returns None when no eligible
+/// lane holds a request.
+fn take_fair(g: &mut Inner, eligible: &impl Fn(usize) -> bool) -> Option<Request> {
+    if g.total_len == 0 {
+        return None;
     }
-    g.last_served = Some(sid);
-    g.len -= 1;
-    req
+    let candidate = |(id, lane): (&usize, &Lane)| -> Option<usize> {
+        (lane.len > 0 && eligible(*id)).then_some(*id)
+    };
+    let net = match g.last_served_net {
+        Some(last) => g
+            .lanes
+            .range((Bound::Excluded(last), Bound::Unbounded))
+            .find_map(candidate)
+            .or_else(|| g.lanes.iter().find_map(candidate)),
+        None => g.lanes.iter().find_map(candidate),
+    }?;
+    let lane = g.lanes.get_mut(&net).expect("lane present");
+    let req = lane.take_fair();
+    g.last_served_net = Some(net);
+    g.total_len -= 1;
+    Some(req)
 }
 
 #[cfg(test)]
@@ -144,6 +234,10 @@ mod tests {
 
     fn req(stream_id: usize, seq: u64) -> Request {
         Request::new(stream_id, seq, 0, Tensor::scalar(0.0))
+    }
+
+    fn req_net(net_id: usize, stream_id: usize, seq: u64) -> Request {
+        Request::new(stream_id, seq, net_id, Tensor::scalar(0.0))
     }
 
     fn pop(q: &AdmissionQueue) -> Request {
@@ -164,14 +258,64 @@ mod tests {
     }
 
     #[test]
+    fn lanes_isolate_per_net_overload() {
+        let q = AdmissionQueue::new(2);
+        // Net 0 floods its lane full.
+        assert!(q.submit(req_net(0, 0, 0)));
+        assert!(q.submit(req_net(0, 0, 1)));
+        assert!(!q.submit(req_net(0, 0, 2)), "net 0 lane full");
+        // Net 1 still has its own depth budget.
+        assert!(q.submit(req_net(1, 1, 0)));
+        assert!(q.submit(req_net(1, 1, 1)));
+        assert_eq!(q.lane_len(0), 2);
+        assert_eq!(q.lane_len(1), 2);
+        assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn eligible_filter_skips_stalled_nets() {
+        let q = AdmissionQueue::new(8);
+        q.submit(req_net(0, 0, 0));
+        q.submit(req_net(1, 1, 0));
+        q.submit(req_net(0, 0, 1));
+        // Net 0 ineligible (its pipeline is stalled): only net 1 pops.
+        let r = q
+            .pop_timeout_eligible(Duration::from_millis(50), &[false, true])
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.net_id, 1);
+        // Nothing else eligible → timeout, net-0 requests stay queued.
+        assert!(q
+            .pop_timeout_eligible(Duration::from_millis(5), &[false, true])
+            .is_err());
+        assert_eq!(q.lane_len(0), 2);
+        // Re-enable net 0: both drain in FIFO order.
+        assert_eq!(pop(&q).seq, 0);
+        assert_eq!(pop(&q).seq, 1);
+    }
+
+    #[test]
+    fn round_robin_across_nets_and_streams() {
+        let q = AdmissionQueue::new(16);
+        // Net 0 floods; net 1 trickles.
+        for seq in 0..4 {
+            q.submit(req_net(0, 0, seq));
+        }
+        q.submit(req_net(1, 1, 0));
+        let nets: Vec<usize> = (0..5).map(|_| pop(&q).net_id).collect();
+        // Fair interleave: net 1 served within the first two pops.
+        assert!(nets[..2].contains(&1), "unfair order: {nets:?}");
+    }
+
+    #[test]
     fn round_robin_across_streams() {
         let q = AdmissionQueue::new(16);
         // Stream 0 floods; stream 1 and 2 trickle.
         for seq in 0..4 {
             q.submit(req(0, seq));
         }
-        q.submit(req(1, 0));
-        q.submit(req(2, 0));
+        q.submit(Request::new(1, 0, 0, Tensor::scalar(0.0)));
+        q.submit(Request::new(2, 0, 0, Tensor::scalar(0.0)));
         let order: Vec<usize> = (0..6).map(|_| pop(&q).stream_id).collect();
         // Fair interleave: each of the 3 streams served within the first 3.
         let mut first3 = order[..3].to_vec();

@@ -20,10 +20,15 @@
 //! ```
 //!
 //! * [`request`] — request/response currency + synthetic client streams;
-//! * [`admission`] — bounded, stream-fair admission with shed-on-overload;
+//! * [`admission`] — bounded per-network lanes, stream-fair within a lane,
+//!   shed-on-overload (a stalled network backs up and sheds only its own
+//!   lane);
 //! * [`batcher`] — per-network micro-batching (size + window policy);
-//! * [`server`] — thread wiring over `rt::DelegatePool`;
-//! * [`stats`] — latency percentiles / throughput / batch accounting.
+//! * [`server`] — thread wiring over `rt::DelegatePool` (every layer's
+//!   matrix work — CONV tiles, FC GEMMs, im2col — dispatched as pool
+//!   jobs via `rt::PoolRouter`);
+//! * [`stats`] — latency percentiles / throughput / batch / per-class job
+//!   accounting.
 
 pub mod admission;
 pub mod batcher;

@@ -20,7 +20,7 @@ use anyhow::{ensure, Result};
 use crate::config::HwConfig;
 use crate::nn::Network;
 use crate::pipeline::Mailbox;
-use crate::rt::{ComputeMode, DelegatePool, GemmCtx, PoolOptions};
+use crate::rt::{ComputeMode, DelegatePool, PoolOptions, PoolRouter};
 use crate::sched::static_map;
 use crate::sched::worksteal::StealPolicy;
 use crate::tensor::Tensor;
@@ -39,7 +39,8 @@ pub struct ServeOptions {
     /// Mailbox depth, in batches, between pipeline stages.
     pub mailbox_capacity: usize,
     pub batch: BatchCfg,
-    /// Bounded admission depth (requests beyond it are shed).
+    /// Bounded admission depth per network lane (requests beyond a lane's
+    /// depth are shed; other networks' lanes are unaffected).
     pub admission_depth: usize,
 }
 
@@ -99,6 +100,9 @@ impl Server {
         // thief's steal threshold scales with that push unit (half the
         // smallest one across the served networks) — enough to avoid
         // ping-ponging sub-push fragments without suppressing stealing.
+        // `[serving] steal_min_victim` overrides the derivation; the
+        // delegate drain depth comes from `[serving] drain_extra` (both
+        // swept in `benches/serve_throughput.rs`).
         let min_jobs_per_push = nets
             .iter()
             .flat_map(|n| {
@@ -114,9 +118,16 @@ impl Server {
             options.compute,
             options.work_stealing,
         );
-        pool_options.steal_policy = StealPolicy::batched(min_jobs_per_push);
+        pool_options.steal_policy = if options.hw.serving.steal_min_victim > 0 {
+            StealPolicy {
+                min_victim_len: options.hw.serving.steal_min_victim,
+                ..StealPolicy::default()
+            }
+        } else {
+            StealPolicy::batched(min_jobs_per_push)
+        };
         // Amortize queue locks over micro-batch job runs.
-        pool_options.drain_extra = 3;
+        pool_options.drain_extra = options.hw.serving.drain_extra;
         let pool = DelegatePool::start(&pool_options)?;
 
         let admission = Arc::new(AdmissionQueue::new(options.admission_depth));
@@ -134,39 +145,26 @@ impl Server {
                 .collect();
             inboxes.push(Arc::clone(&mailboxes[0]));
             let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
+            let router = PoolRouter::new(net, pool.dispatcher(), &assignment);
             for layer_idx in 0..n_layers {
                 let inbox = Arc::clone(&mailboxes[layer_idx]);
                 let outbox = Arc::clone(&mailboxes[layer_idx + 1]);
                 let net = Arc::clone(net);
-                let dispatcher = pool.dispatcher();
-                let assignment = assignment.clone();
+                let router = router.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("serve-n{net_id}-l{layer_idx}"))
                     .spawn(move || {
-                        let convs = net.conv_infos();
                         while let Some(mut batch) = inbox.recv() {
                             let spec = net.config.layers[layer_idx].clone();
                             let items = std::mem::take(&mut batch.items);
                             let mut advanced = Vec::with_capacity(items.len());
                             for (req, act) in items {
-                                let frame = req.frame;
-                                let out = net.forward_layer(
-                                    layer_idx,
-                                    &spec,
-                                    act,
-                                    &|l_idx, grid, a, b| {
-                                        let conv_ord = convs
-                                            .iter()
-                                            .position(|ci| ci.layer_idx == l_idx)
-                                            .expect("conv ordinal");
-                                        let ctx = GemmCtx {
-                                            cluster: assignment[conv_ord],
-                                            layer_idx: l_idx,
-                                            frame_id: frame,
-                                        };
-                                        dispatcher.execute_gemm(ctx, grid, a, b)
-                                    },
-                                );
+                                // Every class of matrix work — CONV
+                                // tiles, FC GEMMs, im2col — reaches the
+                                // shared pool through the router.
+                                let exec = router.frame(req.frame);
+                                let out =
+                                    net.forward_layer(layer_idx, &spec, act, &exec);
                                 advanced.push((req, out));
                             }
                             batch.items = advanced;
@@ -284,13 +282,13 @@ impl Server {
 ///
 /// Batch handoff to the pipelines is *non-blocking* (`Mailbox::try_send`)
 /// through per-net `ready` buffers: window-expiry dispatch and handoff to
-/// the other networks keep running while one pipeline is stalled.  The
-/// buffered backlog is bounded by `ready_cap` in total — at that point the
-/// batcher stops draining admission, so sustained saturation applies
-/// backpressure globally and overload sheds at `submit()`; admitted
-/// requests are never dropped (except by their own deadlines).  Per-net
-/// admission lanes that would isolate backpressure too are future work
-/// (see ROADMAP).
+/// the other networks keep running while one pipeline is stalled.  Each
+/// network's buffered backlog is bounded by `READY_CAP_PER_NET`; a
+/// network at its cap becomes *ineligible* and the batcher stops draining
+/// only **its** admission lane (`pop_timeout_eligible`), so a stalled
+/// pipeline backs pressure up into its own lane — where overload sheds at
+/// `submit()` — while every other network keeps flowing.  Admitted
+/// requests are never dropped (except by their own deadlines).
 fn batcher_loop(
     admission: Arc<AdmissionQueue>,
     collector: Arc<StatsCollector>,
@@ -298,10 +296,11 @@ fn batcher_loop(
     per_net_cap: Vec<Option<usize>>,
     inboxes: Vec<Arc<Mailbox<InFlight>>>,
 ) {
+    /// Buffered batches per network before its lane goes ineligible.
+    const READY_CAP_PER_NET: usize = 2;
     let mut batcher = MicroBatcher::new(batch_cfg, &per_net_cap);
     let mut ready: Vec<VecDeque<InFlight>> =
         inboxes.iter().map(|_| VecDeque::new()).collect();
-    let ready_cap = 2 * inboxes.len();
     loop {
         // Hand buffered batches to any pipeline with capacity, dropping
         // requests whose deadline lapsed while they waited in the
@@ -336,8 +335,14 @@ fn batcher_loop(
                 None => Duration::from_millis(5),
             }
         };
-        if backlog < ready_cap {
-            match admission.pop_timeout(timeout) {
+        // Per-net eligibility: a network whose ready backlog hit its cap
+        // stops draining *its own* admission lane; the rest keep flowing.
+        let eligible: Vec<bool> = ready
+            .iter()
+            .map(|q| q.len() < READY_CAP_PER_NET)
+            .collect();
+        if eligible.iter().any(|&e| e) {
+            match admission.pop_timeout_eligible(timeout, &eligible) {
                 Ok(Some(req)) => {
                     let now = Instant::now();
                     collector.observe_queue_depth(admission.len() + 1);
@@ -357,8 +362,9 @@ fn batcher_loop(
                 Err(()) => {}
             }
         } else {
-            // Pipelines saturated: retry the handoff shortly while
-            // admission absorbs (and beyond its depth, sheds) the load.
+            // Every pipeline saturated: retry the handoff shortly while
+            // the admission lanes absorb (and beyond their depth, shed)
+            // the load.
             std::thread::sleep(timeout);
         }
         for batch in batcher.poll_expired(Instant::now()) {

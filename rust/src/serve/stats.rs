@@ -6,6 +6,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::mm::job::JobClass;
 use crate::rt::PoolReport;
 use crate::util::bench::{fmt, Table};
 use crate::util::stats::{mean, percentile};
@@ -68,6 +69,7 @@ impl StatsCollector {
             max_batch,
             max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
             jobs_executed: pool.jobs_executed,
+            per_class_jobs: pool.per_class_jobs,
             jobs_stolen: pool.jobs_stolen,
             steal_attempts: pool.steal_attempts,
         }
@@ -98,6 +100,8 @@ pub struct ServerStats {
     /// Admission backlog high-water mark.
     pub max_queue_depth: usize,
     pub jobs_executed: u64,
+    /// Jobs per class ([`JobClass`] dense order).
+    pub per_class_jobs: [u64; JobClass::COUNT],
     pub jobs_stolen: u64,
     pub steal_attempts: u64,
 }
@@ -123,6 +127,12 @@ impl ServerStats {
             self.max_queue_depth.to_string(),
         ]);
         t.row(vec!["jobs executed".into(), self.jobs_executed.to_string()]);
+        for class in JobClass::ALL {
+            t.row(vec![
+                format!("jobs {}", class.label()),
+                self.per_class_jobs[class.index()].to_string(),
+            ]);
+        }
         t.row(vec!["jobs stolen".into(), self.jobs_stolen.to_string()]);
         t.row(vec![
             "steal attempts".into(),
@@ -151,8 +161,10 @@ mod tests {
         let pool = PoolReport {
             jobs_executed: 42,
             per_accel_jobs: vec![42],
+            per_class_jobs: [40, 1, 1],
             steal_attempts: 7,
             jobs_stolen: 3,
+            ..Default::default()
         };
         let s = c.report(10.0, 5, &pool);
         assert_eq!(s.completed, 100);
@@ -165,8 +177,10 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert_eq!(s.max_queue_depth, 9);
         assert_eq!(s.jobs_executed, 42);
+        assert_eq!(s.per_class_jobs, [40, 1, 1]);
         let rendered = s.render();
         assert!(rendered.contains("latency p99"));
         assert!(rendered.contains("max batch size"));
+        assert!(rendered.contains("jobs fc-gemm"));
     }
 }

@@ -1,0 +1,116 @@
+//! Unified-pool integration: every class of matrix work — CONV-tile
+//! GEMMs, FC GEMMs, and im2col lowering — must be dispatched to (and
+//! counted by) the shared heterogeneous accelerator pool, FC layers
+//! included (they previously ran inline on the pipeline thread).  Steal
+//! accounting must stay consistent across the job classes.
+
+use std::sync::Arc;
+
+use synergy::config::zoo;
+use synergy::mm::JobClass;
+use synergy::nn::Network;
+use synergy::rt::driver::run_stream;
+use synergy::rt::RtOptions;
+use synergy::tensor::Tensor;
+
+fn mk_net(name: &str) -> Arc<Network> {
+    Arc::new(Network::new(zoo::load(name).unwrap(), 32).unwrap())
+}
+
+/// End-to-end: FC-layer GEMMs are executed by pool delegates, not inline —
+/// the per-class and per-accel counters prove it, and outputs still match
+/// the reference forward.
+#[test]
+fn fc_layers_execute_on_the_pool_not_inline() {
+    let net = mk_net("mnist"); // 2 CONV + 2 FC layers
+    let frames: Vec<(u64, Tensor)> = (0..4).map(|f| (f, net.make_input(f))).collect();
+    let n_frames = frames.len();
+    let report = run_stream(Arc::clone(&net), RtOptions::default(), frames).unwrap();
+
+    for (frame_id, out) in &report.outputs {
+        let want = net.forward_reference(&net.make_input(*frame_id));
+        assert!(
+            out.allclose(&want, 1e-4, 1e-5),
+            "frame {frame_id}: {}",
+            out.max_abs_diff(&want)
+        );
+    }
+
+    let profile = net.pool_job_profile();
+    // mnist has two FC layers → two FC jobs per frame, counted by class.
+    assert_eq!(profile[JobClass::FcGemm.index()], 2);
+    assert_eq!(
+        report.per_class_jobs[JobClass::FcGemm.index()],
+        (2 * n_frames) as u64
+    );
+    // One im2col job per CONV layer per frame.
+    assert_eq!(
+        report.per_class_jobs[JobClass::Im2col.index()],
+        (profile[JobClass::Im2col.index()] * n_frames) as u64
+    );
+    // Class counters and per-accelerator counters both balance the total.
+    assert_eq!(
+        report.per_class_jobs.iter().sum::<u64>(),
+        report.jobs_executed
+    );
+    assert_eq!(
+        report.per_accel_jobs.iter().sum::<u64>(),
+        report.jobs_executed
+    );
+    // Every job of every class went through the pool.
+    assert_eq!(
+        report.jobs_executed,
+        (profile.iter().sum::<usize>() * n_frames) as u64
+    );
+}
+
+/// Steal accounting stays consistent across backend classes: the per-class
+/// stolen counters sum to the total, and no class is stolen that was never
+/// dispatched.
+#[test]
+fn steal_accounting_consistent_across_classes() {
+    let net = mk_net("cifar_darknet");
+    let frames: Vec<(u64, Tensor)> = (0..6).map(|f| (f, net.make_input(f))).collect();
+    let report = run_stream(Arc::clone(&net), RtOptions::default(), frames).unwrap();
+
+    // Work stealing is on by default; whatever moved must balance.
+    let rt_report = report;
+    let stolen_sum: u64 = {
+        // per-class stolen counters live on the pool report; the driver
+        // surfaces totals — rerun through the pool API for class detail.
+        rt_report.jobs_stolen
+    };
+    assert!(rt_report.steal_attempts >= 1, "thief never woke up");
+    assert!(stolen_sum <= rt_report.jobs_executed);
+
+    // Class-level detail via a direct pool run.
+    use synergy::config::HwConfig;
+    use synergy::rt::{ComputeMode, DelegatePool, PoolOptions, PoolRouter};
+    use synergy::sched::static_map;
+    let options = PoolOptions::new(HwConfig::default_zc702(), ComputeMode::Native, true);
+    let pool = DelegatePool::start(&options).unwrap();
+    let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
+    let router = PoolRouter::new(&net, pool.dispatcher(), &assignment);
+    for f in 0..4u64 {
+        let exec = router.frame(f);
+        let y = net.forward_with(&net.make_input(f), &exec);
+        assert_eq!(y.shape(), &[10]);
+    }
+    let report = pool.shutdown().unwrap();
+    assert_eq!(
+        report.stolen_by_class.iter().sum::<u64>(),
+        report.jobs_stolen,
+        "per-class stolen counters must balance the total"
+    );
+    for class in JobClass::ALL {
+        assert!(
+            report.stolen_by_class[class.index()] <= report.per_class_jobs[class.index()],
+            "{}: stolen more than dispatched",
+            class.label()
+        );
+    }
+    assert_eq!(
+        report.per_class_jobs.iter().sum::<u64>(),
+        report.jobs_executed
+    );
+}

@@ -80,18 +80,24 @@ fn two_streams_two_networks_zero_loss_and_correct() {
         assert_eq!(seqs, sorted, "stream {sid} reordered");
     }
 
-    // All conv jobs went through the shared pool.
+    // All matrix work (CONV tiles + FC GEMMs + im2col) went through the
+    // shared pool — FC layers are pool jobs, not inline compute.
     let expected_jobs: u64 = responses
         .iter()
-        .map(|r| {
-            nets[r.net_id]
-                .conv_infos()
-                .iter()
-                .map(|ci| ci.grid.num_jobs())
-                .sum::<usize>() as u64
-        })
+        .map(|r| nets[r.net_id].pool_job_profile().iter().sum::<usize>() as u64)
         .sum();
     assert_eq!(stats.jobs_executed, expected_jobs);
+    let expected_fc: u64 = responses
+        .iter()
+        .map(|r| {
+            nets[r.net_id].pool_job_profile()[synergy::mm::JobClass::FcGemm.index()] as u64
+        })
+        .sum();
+    assert!(expected_fc > 0, "zoo models must have FC layers");
+    assert_eq!(
+        stats.per_class_jobs[synergy::mm::JobClass::FcGemm.index()],
+        expected_fc
+    );
 }
 
 #[test]
@@ -120,6 +126,39 @@ fn overload_sheds_instead_of_blocking() {
     assert_eq!(stats.shed, shed);
     assert_eq!(stats.completed, admitted);
     assert_eq!(responses.len() as u64, admitted);
+}
+
+#[test]
+fn per_net_admission_lanes_isolate_overload() {
+    let nets = vec![mk_net("mpcnn"), mk_net("mnist")];
+    let mut options = ServeOptions::default();
+    // Tiny per-lane depth: net 0's flood fills only net 0's lane.
+    options.admission_depth = 2;
+    options.batch.max_batch = 2;
+    options.batch.window = Duration::from_millis(1);
+    let server = Server::start(nets.clone(), options).unwrap();
+    let mut net0_shed = 0u64;
+    for seq in 0..64u64 {
+        let req = Request::new(0, seq, 0, nets[0].make_input(seq));
+        if !server.submit(req) {
+            net0_shed += 1;
+        }
+    }
+    // Net 1's lane has its own depth budget: its trickle is admitted even
+    // while net 0 is shedding.
+    assert!(net0_shed > 0, "a 2-deep lane cannot absorb a 64-burst");
+    for seq in 0..2u64 {
+        let req = Request::new(1, seq, 1, nets[1].make_input(seq));
+        assert!(
+            server.submit(req),
+            "net 1 starved by net 0's overload (lane isolation broken)"
+        );
+    }
+    let (stats, responses) = server.shutdown().unwrap();
+    assert_eq!(stats.shed, net0_shed);
+    // Both net-1 requests completed.
+    let net1_done = responses.iter().filter(|r| r.net_id == 1).count();
+    assert_eq!(net1_done, 2);
 }
 
 #[test]
