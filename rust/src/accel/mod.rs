@@ -21,6 +21,19 @@ pub use backend::{
 pub use timing::{AccelClass, PerfModel};
 
 use crate::config::{ClusterCfg, HwConfig};
+use crate::mm::job::{ClassMask, JobClass};
+
+/// Job classes an accelerator class executes *as hardware*: FPGA PEs only
+/// speak CONV tiles (that is what the HLS kernel computes), NEON-class
+/// software accelerators execute every class.  The threaded runtime
+/// derives member masks from the backend registry instead (compute-mode
+/// aware); this is the physical view the virtual-clock simulator uses.
+pub fn hw_class_mask(class: &AccelClass) -> ClassMask {
+    match class {
+        AccelClass::FpgaPe { .. } => ClassMask::of(&[JobClass::ConvTile]),
+        AccelClass::Neon | AccelClass::BigNeon => ClassMask::all(),
+    }
+}
 
 /// Identity + placement of one accelerator instance.
 #[derive(Debug, Clone)]
@@ -57,6 +70,17 @@ impl ClusterSpec {
     /// static mapper to rank clusters.
     pub fn throughput(&self) -> f64 {
         self.members.iter().map(|a| 1.0 / a.perf.kstep_seconds).sum()
+    }
+
+    /// Aggregate k-steps/second of the members whose *hardware* class can
+    /// execute `class` (member-level routing in the simulator: FC/im2col
+    /// load only competes for the NEON-class members).
+    pub fn throughput_for(&self, class: JobClass) -> f64 {
+        self.members
+            .iter()
+            .filter(|a| hw_class_mask(&a.class).supports(class))
+            .map(|a| 1.0 / a.perf.kstep_seconds)
+            .sum()
     }
 }
 
@@ -263,6 +287,25 @@ mod tests {
         let clusters = build_clusters(&hw);
         // 6 F-PEs out-throughput 2 S-PE + 2 NEON.
         assert!(clusters[1].throughput() > clusters[0].throughput());
+    }
+
+    #[test]
+    fn hw_class_masks_split_by_member_kind() {
+        let hw = HwConfig::default_zc702();
+        let clusters = build_clusters(&hw);
+        for a in all_accels(&clusters) {
+            let mask = hw_class_mask(&a.class);
+            assert!(mask.supports(JobClass::ConvTile), "{}", a.name);
+            assert_eq!(!a.is_fpga(), mask.supports(JobClass::FcGemm), "{}", a.name);
+        }
+        // The mixed cluster keeps full FC throughput via its NEONs; the
+        // pure-PE cluster has none.
+        assert!(clusters[0].throughput_for(JobClass::FcGemm) > 0.0);
+        assert_eq!(clusters[1].throughput_for(JobClass::FcGemm), 0.0);
+        assert!(
+            clusters[0].throughput_for(JobClass::ConvTile)
+                > clusters[0].throughput_for(JobClass::FcGemm)
+        );
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Accelerator clusters (paper §3.1.1 "Accelerator Clusters"): each cluster
-//! owns a private synchronized *job queue*; members pull jobs round-robin
-//! (pull-based round-robin: free accelerators take the next job, which
+//! owns a private synchronized *job-queue bank*, split per job class;
+//! members pull from the sub-queues their own backend supports (pull-based
+//! round-robin: free accelerators take the next job they can execute, which
 //! degenerates to round-robin under uniform service).  The work-stealing
-//! thief thread rebalances across queues (`sched::worksteal`).
+//! thief thread rebalances across banks (`sched::worksteal`).
 
 pub mod queue;
 
-pub use queue::JobQueue;
+pub use queue::{JobQueue, QueueBank};

@@ -1,10 +1,22 @@
-//! Synchronized job queue — the paper's per-cluster "Job Queue" (a
-//! synchronous buffer storing jobs), with the steal operation the thief
-//! thread uses (take from the back, opposite the owners' pop side).
+//! Synchronized job queues — the paper's per-cluster "Job Queue" (a
+//! synchronous buffer storing jobs), in two shapes:
+//!
+//! * [`JobQueue`] — the flat MPMC blocking deque (owners pop the front,
+//!   thieves steal from the back), kept as the generic primitive;
+//! * [`QueueBank`] — a [`ClassMask`]-indexed bank of per-class sub-queues.
+//!   This is what clusters use under member-level routing: each delegate
+//!   pops from the *union* of sub-queues its own backend supports
+//!   ([`QueueBank::pop_any_timeout`]), so a NEON member of a NEON+PE
+//!   cluster keeps serving FC/im2col jobs while the PE member drains CONV
+//!   tiles.  The thief steals per sub-queue ([`QueueBank::steal_where`])
+//!   filtered by the *idle member's* capability mask (intersected with the
+//!   destination cluster's accept union as a safety net).
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+use crate::mm::job::{ClassMask, Classed, JobClass};
 
 struct Inner<T> {
     deque: VecDeque<T>,
@@ -187,6 +199,215 @@ impl<T> JobQueue<T> {
     }
 }
 
+// ------------------------------------------------------------------ bank
+
+struct BankInner<T> {
+    /// One sub-queue per [`JobClass`] dense index.
+    subs: Vec<VecDeque<T>>,
+    closed: bool,
+    /// Round-robin cursors, one per capability mask (masks are dense
+    /// `u8` bit-sets): the class a pop with that mask scans first.
+    /// Keyed per mask — a single shared cursor would let a narrow-mask
+    /// popper keep resetting a wider-mask popper's scan position and
+    /// starve a class indefinitely; per mask, no eligible non-empty
+    /// sub-queue is bypassed more than `JobClass::COUNT - 1` consecutive
+    /// pops of that mask (bounded bypass).
+    next: [usize; 1 << JobClass::COUNT],
+}
+
+impl<T> BankInner<T> {
+    /// First eligible non-empty sub-queue at/after `mask`'s cursor, cyclic.
+    fn pick(&self, mask: ClassMask) -> Option<usize> {
+        let start = self.next[mask.bits() as usize];
+        (0..JobClass::COUNT)
+            .map(|off| (start + off) % JobClass::COUNT)
+            .find(|&i| mask.supports_index(i) && !self.subs[i].is_empty())
+    }
+
+    fn pop_picked(&mut self, mask: ClassMask, i: usize) -> T {
+        self.next[mask.bits() as usize] = (i + 1) % JobClass::COUNT;
+        self.subs[i].pop_front().expect("picked sub-queue non-empty")
+    }
+
+    fn masked_len(&self, mask: ClassMask) -> usize {
+        self.subs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mask.supports_index(*i))
+            .map(|(_, q)| q.len())
+            .sum()
+    }
+}
+
+/// A per-cluster bank of per-class sub-queues under one lock, popped by
+/// capability mask (see the module docs).  `T: Classed` decides which
+/// sub-queue a pushed item lands in.
+pub struct QueueBank<T> {
+    inner: Mutex<BankInner<T>>,
+    cv: Condvar,
+}
+
+impl<T: Classed> Default for QueueBank<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Classed> QueueBank<T> {
+    pub fn new() -> Self {
+        QueueBank {
+            inner: Mutex::new(BankInner {
+                subs: (0..JobClass::COUNT).map(|_| VecDeque::new()).collect(),
+                closed: false,
+                next: [0; 1 << JobClass::COUNT],
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Push one item onto its class sub-queue.  False if the bank was
+    /// closed.  Wake-ups are broadcast: a member whose mask excludes the
+    /// pushed class must not swallow the only notification.
+    pub fn push(&self, item: T) -> bool {
+        let i = item.class_index();
+        assert!(i < JobClass::COUNT, "job class index {i} out of range");
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.subs[i].push_back(item);
+        drop(g);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Push a batch in one lock acquisition (job generators and the
+    /// thief's deposit path).
+    pub fn push_batch(&self, items: Vec<T>) -> bool {
+        if items.is_empty() {
+            return true;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        for item in items {
+            let i = item.class_index();
+            assert!(i < JobClass::COUNT, "job class index {i} out of range");
+            g.subs[i].push_back(item);
+        }
+        drop(g);
+        self.cv.notify_all();
+        true
+    }
+
+    /// Non-blocking pop from the union of sub-queues in `mask`
+    /// (round-robin across classes, FIFO within one).
+    pub fn try_pop_any(&self, mask: ClassMask) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        g.pick(mask).map(|i| g.pop_picked(mask, i))
+    }
+
+    /// Blocking pop over the union of sub-queues in `mask`.  `Ok(None)` =
+    /// closed and every eligible sub-queue drained (classes outside the
+    /// caller's mask are not the caller's to wait for); `Err(())` = timed
+    /// out (the idle-notification path).
+    ///
+    /// The deadline is fixed at entry: pushes of classes *outside* the
+    /// caller's mask broadcast-wake every waiter, and re-arming the full
+    /// timeout on each such wakeup would let sustained foreign-class
+    /// traffic postpone the timeout forever — a CONV-only member would
+    /// then never report idle and stealing would starve.
+    pub fn pop_any_timeout(&self, mask: ClassMask, timeout: Duration) -> Result<Option<T>, ()> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(i) = g.pick(mask) {
+                return Ok(Some(g.pop_picked(mask, i)));
+            }
+            if g.closed {
+                return Ok(None);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(());
+            }
+            let (guard, _res) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Non-blocking pop of up to `n` items from the union of sub-queues in
+    /// `mask`, one lock acquisition (delegate drain batches).  Round-robin
+    /// across classes so one deep sub-queue cannot starve the others.
+    pub fn pop_upto(&self, mask: ClassMask, n: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        while out.len() < n {
+            match g.pick(mask) {
+                Some(i) => out.push(g.pop_picked(mask, i)),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Steal up to `n` items from the *backs* of the sub-queues in `mask`,
+    /// heaviest sub-queue first (the victim side; owners keep the fronts).
+    pub fn steal_where(&self, n: usize, mask: ClassMask) -> Vec<T> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut g = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        while out.len() < n {
+            let heaviest = (0..JobClass::COUNT)
+                .filter(|&i| mask.supports_index(i) && !g.subs[i].is_empty())
+                .max_by_key(|&i| g.subs[i].len());
+            match heaviest {
+                Some(i) => out.push(g.subs[i].pop_back().expect("non-empty")),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Occupancy per class sub-queue — O(classes), no walk (the thief's
+    /// victim snapshot runs this on every queue).
+    pub fn class_counts(&self) -> [usize; JobClass::COUNT] {
+        let g = self.inner.lock().unwrap();
+        let mut out = [0usize; JobClass::COUNT];
+        for (o, q) in out.iter_mut().zip(&g.subs) {
+            *o = q.len();
+        }
+        out
+    }
+
+    /// Items across every sub-queue.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().subs.iter().map(|q| q.len()).sum()
+    }
+
+    /// Items across the sub-queues in `mask` (routing load probe).
+    pub fn len_where(&self, mask: ClassMask) -> usize {
+        self.inner.lock().unwrap().masked_len(mask)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: pops drain the remainder then return None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,5 +553,213 @@ mod tests {
         all.sort_unstable();
         let want: Vec<i32> = (0..4 * n_per).collect();
         assert_eq!(all, want);
+    }
+
+    /// Test item: (payload, class index).
+    struct CItem(u64, usize);
+    impl Classed for CItem {
+        fn class_index(&self) -> usize {
+            self.1
+        }
+    }
+
+    #[test]
+    fn bank_routes_pushes_to_class_sub_queues() {
+        let b: QueueBank<CItem> = QueueBank::new();
+        b.push(CItem(0, 0));
+        b.push_batch(vec![CItem(1, 1), CItem(2, 1), CItem(3, 2)]);
+        assert_eq!(b.class_counts(), [1, 2, 1]);
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.len_where(ClassMask::of(&[JobClass::FcGemm])), 2);
+        assert_eq!(b.len_where(ClassMask::all()), 4);
+    }
+
+    #[test]
+    fn bank_pop_respects_mask_and_fifo() {
+        let b: QueueBank<CItem> = QueueBank::new();
+        for i in 0..4 {
+            b.push(CItem(i, 0));
+        }
+        b.push(CItem(10, 1));
+        let fc_only = ClassMask::of(&[JobClass::FcGemm]);
+        assert_eq!(b.try_pop_any(fc_only).unwrap().0, 10);
+        assert!(b.try_pop_any(fc_only).is_none(), "conv jobs must not leak");
+        // Conv sub-queue drains FIFO.
+        let conv = ClassMask::of(&[JobClass::ConvTile]);
+        let got: Vec<u64> = (0..4).map(|_| b.try_pop_any(conv).unwrap().0).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bank_round_robin_bounds_bypass() {
+        let b: QueueBank<CItem> = QueueBank::new();
+        for i in 0..6 {
+            b.push(CItem(i, 0));
+        }
+        b.push(CItem(100, 2));
+        // With the deep conv backlog, the im2col item is served within
+        // JobClass::COUNT pops of the union mask.
+        let mut gap = 0;
+        loop {
+            let item = b.try_pop_any(ClassMask::all()).expect("non-empty");
+            if item.1 == 2 {
+                break;
+            }
+            gap += 1;
+            assert!(gap < JobClass::COUNT, "im2col item starved");
+        }
+    }
+
+    #[test]
+    fn bank_per_mask_cursors_prevent_cross_mask_starvation() {
+        // A CONV-only popper interleaved with a union-mask popper: the
+        // union popper's rotation must be its own, or the narrow popper
+        // keeps resetting a shared cursor and the singleton im2col item
+        // starves behind the deep FC backlog (regression test).
+        let b: QueueBank<CItem> = QueueBank::new();
+        for i in 0..10 {
+            b.push(CItem(i, 0)); // deep conv backlog
+        }
+        for i in 0..10 {
+            b.push(CItem(100 + i, 1)); // deep fc backlog
+        }
+        b.push(CItem(999, 2)); // single im2col item
+        let conv_only = ClassMask::of(&[JobClass::ConvTile]);
+        let all = ClassMask::all();
+        let mut union_pops = 0;
+        let mut seen_im2col = false;
+        for _ in 0..8 {
+            let _ = b.try_pop_any(conv_only);
+            if let Some(item) = b.try_pop_any(all) {
+                union_pops += 1;
+                if item.1 == 2 {
+                    seen_im2col = true;
+                    break;
+                }
+            }
+            assert!(
+                union_pops <= JobClass::COUNT,
+                "im2col starved by cross-mask cursor resets"
+            );
+        }
+        assert!(seen_im2col);
+    }
+
+    #[test]
+    fn bank_steal_takes_backs_heaviest_first() {
+        let b: QueueBank<CItem> = QueueBank::new();
+        for i in 0..5 {
+            b.push(CItem(i, 0));
+        }
+        b.push(CItem(10, 1));
+        // Steal only conv-class items: from the back, heaviest sub-queue.
+        let stolen = b.steal_where(2, ClassMask::of(&[JobClass::ConvTile]));
+        let ids: Vec<u64> = stolen.iter().map(|c| c.0).collect();
+        assert_eq!(ids, vec![4, 3]);
+        assert_eq!(b.class_counts(), [3, 1, 0]);
+        // Empty-mask steal takes nothing.
+        assert!(b.steal_where(5, ClassMask::NONE).is_empty());
+    }
+
+    #[test]
+    fn bank_pop_timeout_and_close_semantics() {
+        let b: QueueBank<CItem> = QueueBank::new();
+        let mask = ClassMask::all();
+        assert_eq!(
+            b.pop_any_timeout(mask, Duration::from_millis(5)).err(),
+            Some(())
+        );
+        b.push(CItem(1, 1));
+        assert_eq!(
+            b.pop_any_timeout(mask, Duration::from_millis(5))
+                .unwrap()
+                .unwrap()
+                .0,
+            1
+        );
+        // A caller whose mask excludes the only remaining class exits on
+        // close instead of waiting for jobs it can never serve.
+        b.push(CItem(2, 0));
+        b.close();
+        assert!(b
+            .pop_any_timeout(ClassMask::of(&[JobClass::FcGemm]), Duration::from_millis(5))
+            .unwrap()
+            .is_none());
+        // Closed banks still drain for capable callers, then reject pushes.
+        assert_eq!(b.try_pop_any(mask).unwrap().0, 2);
+        assert!(!b.push(CItem(3, 0)));
+        assert!(!b.push_batch(vec![CItem(4, 0)]));
+        assert!(b.is_closed());
+    }
+
+    #[test]
+    fn bank_timeout_not_postponed_by_foreign_class_traffic() {
+        // Pushes of classes outside the waiter's mask broadcast-wake it;
+        // the deadline must hold even when they arrive faster than the
+        // timeout (regression: re-arming the timeout per wakeup).
+        let b: Arc<QueueBank<CItem>> = Arc::new(QueueBank::new());
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let pusher = {
+            let b = Arc::clone(&b);
+            let stop = Arc::clone(&stop);
+            thread::spawn(move || {
+                let mut i = 0;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    b.push(CItem(i, 1));
+                    i += 1;
+                    thread::sleep(Duration::from_millis(2));
+                }
+            })
+        };
+        let t0 = Instant::now();
+        let conv = ClassMask::of(&[JobClass::ConvTile]);
+        let res = b.pop_any_timeout(conv, Duration::from_millis(20));
+        assert!(matches!(res, Err(())), "must time out, not pop foreign class");
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "timeout postponed by foreign-class wakeups"
+        );
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        pusher.join().unwrap();
+    }
+
+    #[test]
+    fn bank_blocking_pop_crosses_threads() {
+        let b: Arc<QueueBank<CItem>> = Arc::new(QueueBank::new());
+        let consumer = {
+            let b = Arc::clone(&b);
+            thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    match b.pop_any_timeout(ClassMask::all(), Duration::from_millis(20)) {
+                        Ok(Some(item)) => got.push(item.0),
+                        Ok(None) => return got,
+                        Err(()) => continue,
+                    }
+                }
+            })
+        };
+        for i in 0..50 {
+            assert!(b.push(CItem(i, (i % 3) as usize)));
+        }
+        b.close();
+        let mut got = consumer.join().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..50).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn bank_pop_upto_respects_mask_and_bound() {
+        let b: QueueBank<CItem> = QueueBank::new();
+        for i in 0..4 {
+            b.push(CItem(i, 0));
+        }
+        b.push(CItem(10, 2));
+        let mask = ClassMask::of(&[JobClass::ConvTile, JobClass::Im2col]);
+        let got = b.pop_upto(mask, 3);
+        assert_eq!(got.len(), 3);
+        assert!(got.iter().all(|c| c.1 != 1));
+        assert_eq!(b.pop_upto(mask, 10).len(), 2);
+        assert!(b.pop_upto(mask, 1).is_empty());
     }
 }

@@ -56,8 +56,31 @@ impl JobClass {
     }
 }
 
+/// Queue items the scheduler can classify (dense [`JobClass`] index).
+/// Lives next to [`JobClass`] so the per-class queue bank
+/// ([`crate::cluster::QueueBank`]), the thief, and the simulators all
+/// speak one classification without depending on the runtime job type.
+pub trait Classed {
+    fn class_index(&self) -> usize;
+}
+
+/// Plain integers classify as CONV-tile work (tests and simulators).
+impl Classed for u32 {
+    fn class_index(&self) -> usize {
+        0
+    }
+}
+
+impl Classed for u64 {
+    fn class_index(&self) -> usize {
+        0
+    }
+}
+
 /// Bit-set of job classes: the capability metadata of an accelerator
-/// backend (or the intersection over a cluster's members).
+/// backend.  Per-cluster scheduling uses the *union* over a cluster's
+/// members (which classes the cluster can accept — some member will serve
+/// them), never the intersection: member-level masks decide who pops what.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ClassMask(u8);
 
@@ -87,6 +110,31 @@ impl ClassMask {
 
     pub fn intersect(self, other: ClassMask) -> ClassMask {
         ClassMask(self.0 & other.0)
+    }
+
+    pub fn union(self, other: ClassMask) -> ClassMask {
+        ClassMask(self.0 | other.0)
+    }
+
+    /// Raw bit pattern (dense, `< 1 << JobClass::COUNT`).  Queue banks use
+    /// it to key per-mask round-robin cursors.
+    pub fn bits(self) -> u8 {
+        self.0
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// The classes in this mask, in dense-index order.
+    pub fn classes(self) -> impl Iterator<Item = JobClass> {
+        JobClass::ALL.into_iter().filter(move |c| self.supports(*c))
+    }
+}
+
+impl Classed for Job {
+    fn class_index(&self) -> usize {
+        self.class().index()
     }
 }
 
@@ -452,6 +500,17 @@ mod tests {
         assert_eq!(all.intersect(conv_only), conv_only);
         assert_eq!(conv_only.intersect(ClassMask::NONE), ClassMask::NONE);
         assert!(!ClassMask::all().supports_index(JobClass::COUNT));
+        // Union algebra (per-cluster accept masks are member unions).
+        let fc_only = ClassMask::of(&[JobClass::FcGemm]);
+        let both = conv_only.union(fc_only);
+        assert!(both.supports(JobClass::ConvTile) && both.supports(JobClass::FcGemm));
+        assert!(!both.supports(JobClass::Im2col));
+        assert_eq!(ClassMask::NONE.union(all), all);
+        assert!(ClassMask::NONE.is_empty() && !all.is_empty());
+        assert_eq!(
+            both.classes().collect::<Vec<_>>(),
+            vec![JobClass::ConvTile, JobClass::FcGemm]
+        );
     }
 
     #[test]

@@ -8,5 +8,5 @@ pub mod gemm;
 pub mod job;
 pub mod tile;
 
-pub use job::{ClassMask, Job, JobClass, JobDesc, JobKind, JobResult};
+pub use job::{ClassMask, Classed, Job, JobClass, JobDesc, JobKind, JobResult};
 pub use tile::TileGrid;

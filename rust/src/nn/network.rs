@@ -43,12 +43,53 @@ impl Shape {
     }
 }
 
-/// One named parameter tensor.
+/// One named parameter tensor, backed by an `Arc` so the GEMM-operand
+/// cache (`Network::weight_arcs`) shares the same allocation instead of
+/// duplicating every CONV/FC weight matrix per loaded network.  Params
+/// are init-once by contract — hence no mutable access.
 #[derive(Debug, Clone)]
 pub struct Param {
     pub layer: usize,
     pub name: &'static str,
-    pub tensor: Tensor,
+    shape: Vec<usize>,
+    data: Arc<Vec<f32>>,
+}
+
+impl Param {
+    fn new(layer: usize, name: &'static str, shape: &[usize], data: Vec<f32>) -> Param {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "param {name} shape/data mismatch"
+        );
+        Param {
+            layer,
+            name,
+            shape: shape.to_vec(),
+            data: Arc::new(data),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Cheap handle on the backing allocation (job operand sharing).
+    pub fn shared(&self) -> Arc<Vec<f32>> {
+        Arc::clone(&self.data)
+    }
 }
 
 /// Descriptor of one CONV layer's GEMM (job geometry for the coordinator).
@@ -77,13 +118,10 @@ pub struct Network {
     /// Output shape of every layer (same indexing as `config.layers`).
     pub shapes: Vec<Shape>,
     tile_size: usize,
-    /// Arc-shared copies of the GEMM weight operands (CONV and FC
-    /// layers, indexed by layer), built once at construction so the
-    /// per-frame hot path never re-copies a weight matrix.  Trade-off:
-    /// weights exist twice (here and in `params`) — collapsing the two
-    /// onto one Arc-backed allocation is a ROADMAP item; until then,
-    /// mutating `params` weights would NOT be reflected here (params are
-    /// init-once by contract).
+    /// Arc handles onto the GEMM weight operands of CONV/FC layers
+    /// (indexed by layer) — the **same allocations** as the [`Param`]s
+    /// (params are Arc-backed), so the per-frame hot path never copies a
+    /// weight matrix and each network stores its weights exactly once.
     weight_arcs: Vec<Option<Arc<Vec<f32>>>>,
 }
 
@@ -185,11 +223,11 @@ impl Network {
                     LayerSpec::Conv { .. } | LayerSpec::Connected { .. }
                 )
                 .then(|| {
-                    let w = params
+                    params
                         .iter()
                         .find(|p| p.layer == idx && p.name == "weights")
-                        .expect("conv/fc layer has weights");
-                    Arc::new(w.tensor.data().to_vec())
+                        .expect("conv/fc layer has weights")
+                        .shared()
                 })
             })
             .collect();
@@ -236,11 +274,10 @@ impl Network {
     }
 
     /// Parameters of one layer by name.
-    pub fn layer_param(&self, layer: usize, name: &str) -> Option<&Tensor> {
+    pub fn layer_param(&self, layer: usize, name: &str) -> Option<&Param> {
         self.params
             .iter()
             .find(|p| p.layer == layer && p.name == name)
-            .map(|p| &p.tensor)
     }
 
     /// CONV layer descriptors in network order.
@@ -495,57 +532,55 @@ fn init_params(config: &NetConfig, shapes: &[Shape]) -> Vec<Param> {
                 let scale = (2.0f64 / fan_in as f64).sqrt() as f32;
                 let n = filters * fan_in;
                 let base = rng::fill_tensor(model, idx, "weights", n, 1.0);
-                out.push(Param {
-                    layer: idx,
-                    name: "weights",
-                    // GEMM view (OC, C·K²) — same row-major layout as the
-                    // python (OC,C,K,K) array.
-                    tensor: Tensor::from_vec(
-                        &[*filters, fan_in],
-                        base.iter().map(|v| v * scale).collect(),
-                    ),
-                });
+                // GEMM view (OC, C·K²) — same row-major layout as the
+                // python (OC,C,K,K) array.
+                out.push(Param::new(
+                    idx,
+                    "weights",
+                    &[*filters, fan_in],
+                    base.iter().map(|v| v * scale).collect(),
+                ));
                 let bias = rng::fill_tensor(model, idx, "bias", *filters, 1.0);
-                out.push(Param {
-                    layer: idx,
-                    name: "bias",
-                    tensor: Tensor::from_vec(&[*filters], bias.iter().map(|v| v * 0.1).collect()),
-                });
+                out.push(Param::new(
+                    idx,
+                    "bias",
+                    &[*filters],
+                    bias.iter().map(|v| v * 0.1).collect(),
+                ));
             }
             LayerSpec::Connected { output, .. } => {
                 let n_in = cur.len();
                 let scale = (2.0f64 / n_in as f64).sqrt() as f32;
                 let base = rng::fill_tensor(model, idx, "weights", output * n_in, 1.0);
-                out.push(Param {
-                    layer: idx,
-                    name: "weights",
-                    tensor: Tensor::from_vec(
-                        &[*output, n_in],
-                        base.iter().map(|v| v * scale).collect(),
-                    ),
-                });
+                out.push(Param::new(
+                    idx,
+                    "weights",
+                    &[*output, n_in],
+                    base.iter().map(|v| v * scale).collect(),
+                ));
                 let bias = rng::fill_tensor(model, idx, "bias", *output, 1.0);
-                out.push(Param {
-                    layer: idx,
-                    name: "bias",
-                    tensor: Tensor::from_vec(&[*output], bias.iter().map(|v| v * 0.1).collect()),
-                });
+                out.push(Param::new(
+                    idx,
+                    "bias",
+                    &[*output],
+                    bias.iter().map(|v| v * 0.1).collect(),
+                ));
             }
             LayerSpec::BatchNorm => {
                 let c = match cur {
                     Shape::Chw(c, _, _) => c,
                     Shape::Flat(n) => n,
                 };
-                let mk = |name: &'static str, f: &dyn Fn(f32) -> f32| Param {
-                    layer: idx,
-                    name,
-                    tensor: Tensor::from_vec(
+                let mk = |name: &'static str, f: &dyn Fn(f32) -> f32| {
+                    Param::new(
+                        idx,
+                        name,
                         &[c],
                         rng::fill_tensor(model, idx, name, c, 1.0)
                             .iter()
                             .map(|v| f(*v))
                             .collect(),
-                    ),
+                    )
                 };
                 out.push(mk("gamma", &|u| 1.0 + 0.1 * u));
                 out.push(mk("beta", &|u| 0.1 * u));
@@ -646,7 +681,24 @@ mod tests {
         let b = mk("mnist");
         assert_eq!(a.params.len(), b.params.len());
         for (pa, pb) in a.params.iter().zip(&b.params) {
-            assert_eq!(pa.tensor, pb.tensor);
+            assert_eq!(pa.shape(), pb.shape());
+            assert_eq!(pa.data(), pb.data());
+        }
+    }
+
+    #[test]
+    fn weight_arcs_share_param_allocations() {
+        // The GEMM-operand cache and the params point at ONE allocation
+        // per weight matrix — no duplication per loaded network.
+        let net = mk("cifar_full");
+        for (idx, layer) in net.config.layers.iter().enumerate() {
+            if matches!(layer, LayerSpec::Conv { .. } | LayerSpec::Connected { .. }) {
+                let p = net.layer_param(idx, "weights").expect("weights");
+                assert!(
+                    Arc::ptr_eq(&p.shared(), &net.weights_arc(idx)),
+                    "layer {idx}: weights duplicated"
+                );
+            }
         }
     }
 

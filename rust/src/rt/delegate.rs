@@ -3,11 +3,14 @@
 //!
 //! Each delegate owns one [`Accelerator`] backend (built *inside* the
 //! thread — the PJRT engine is `Rc`-backed, and hardware-wise each PE is
-//! its own physical kernel instance) and services its cluster's job queue:
-//! request a job, execute it on the backend, acknowledge the result —
-//! exactly the control-FIFO protocol of Fig 5, with the mpsc reply channel
-//! standing in for `if_hw2sw`.  Per-class counters feed the pool report's
-//! heterogeneous accounting.
+//! its own physical kernel instance) and services its cluster's job-queue
+//! *bank* through its **own member capability mask**: it pops from the
+//! union of per-class sub-queues its backend supports, executes on the
+//! backend, and acknowledges the result — the control-FIFO protocol of
+//! Fig 5, with the mpsc reply channel standing in for `if_hw2sw`.  A NEON
+//! member of a mixed NEON+PE cluster therefore keeps serving FC/im2col
+//! jobs while the PE member drains CONV tiles.  Per-class counters feed
+//! the pool report's heterogeneous accounting.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
@@ -18,9 +21,9 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::accel::Accelerator;
-use crate::cluster::JobQueue;
-use crate::mm::job::{Job, JobClass, JobResult};
-use crate::sched::worksteal::{Classed, ThiefMsg};
+use crate::cluster::QueueBank;
+use crate::mm::job::{ClassMask, Classed, Job, JobClass, JobResult};
+use crate::sched::worksteal::ThiefMsg;
 
 /// A job plus its reply channel (the "acknowledgment" path of Fig 5).
 pub struct RtJob {
@@ -54,7 +57,9 @@ impl DelegateStats {
     }
 }
 
-/// Spawn a delegate thread servicing `queue`.
+/// Spawn a delegate thread servicing its cluster's `bank` through the
+/// member capability mask `caps` (the registry metadata of this member's
+/// backend — the delegate only ever sees jobs its backend can execute).
 ///
 /// The backend is built *inside* the thread via `mk_backend` (see the
 /// module docs) and driven exclusively through the [`Accelerator`] trait —
@@ -65,12 +70,15 @@ impl DelegateStats {
 /// single-stream driver's sharing-friendly behavior; the batched serving
 /// runtime raises it to amortize queue locks over micro-batch job runs).
 ///
-/// The thread exits when the queue is closed and drained.  On queue
-/// timeout it reports `ClusterIdle` to the thief (work-stealing trigger).
+/// The thread exits when the bank is closed and its *eligible* sub-queues
+/// are drained.  On queue timeout it reports `ClusterIdle` to the thief
+/// (work-stealing trigger).
+#[allow(clippy::too_many_arguments)]
 pub fn spawn(
     name: String,
     cluster: usize,
-    queue: Arc<JobQueue<RtJob>>,
+    bank: Arc<QueueBank<RtJob>>,
+    caps: ClassMask,
     mk_backend: impl FnOnce() -> Result<Box<dyn Accelerator>> + Send + 'static,
     thief: Option<Sender<ThiefMsg>>,
     stats: Arc<DelegateStats>,
@@ -80,31 +88,34 @@ pub fn spawn(
         .name(name)
         .spawn(move || {
             let backend = mk_backend()?;
-            delegate_loop(cluster, queue, backend, thief, stats, drain_extra)
+            delegate_loop(cluster, bank, caps, backend, thief, stats, drain_extra)
         })
         .expect("spawn delegate thread")
 }
 
 fn delegate_loop(
     cluster: usize,
-    queue: Arc<JobQueue<RtJob>>,
+    bank: Arc<QueueBank<RtJob>>,
+    caps: ClassMask,
     mut backend: Box<dyn Accelerator>,
     thief: Option<Sender<ThiefMsg>>,
     stats: Arc<DelegateStats>,
     drain_extra: usize,
 ) -> Result<()> {
     loop {
-        let rt_job = match queue.pop_timeout(Duration::from_micros(500)) {
+        let rt_job = match bank.pop_any_timeout(caps, Duration::from_micros(500)) {
             Ok(Some(j)) => j,
             Ok(None) => return Ok(()), // closed + drained
             Err(()) => {
-                // Idle: notify the thief's manager (paper Fig 4 step 1).
+                // Idle: notify the thief's manager (paper Fig 4 step 1),
+                // carrying this member's mask so the thief only steals
+                // classes the idle member can actually execute.
                 if let Some(tx) = &thief {
                     stats.idle_reports.fetch_add(1, Ordering::Relaxed);
-                    let _ = tx.send(ThiefMsg::ClusterIdle(cluster));
+                    let _ = tx.send(ThiefMsg::ClusterIdle(cluster, caps));
                 }
                 // Longer nap so an empty tail doesn't spin.
-                match queue.pop_timeout(Duration::from_millis(2)) {
+                match bank.pop_any_timeout(caps, Duration::from_millis(2)) {
                     Ok(Some(j)) => j,
                     Ok(None) => return Ok(()),
                     Err(()) => continue,
@@ -113,7 +124,7 @@ fn delegate_loop(
         };
         let mut run = vec![rt_job];
         if drain_extra > 0 {
-            run.extend(queue.pop_upto(drain_extra));
+            run.extend(bank.pop_upto(caps, drain_extra));
         }
         for i in 0..run.len() {
             // Routing + capability-filtered stealing keep unsupported
@@ -162,12 +173,13 @@ mod tests {
 
     #[test]
     fn native_delegate_services_jobs_and_exits_on_close() {
-        let queue: Arc<JobQueue<RtJob>> = Arc::new(JobQueue::new());
+        let queue: Arc<QueueBank<RtJob>> = Arc::new(QueueBank::new());
         let stats = Arc::new(DelegateStats::default());
         let handle = spawn(
             "test-delegate".into(),
             0,
             Arc::clone(&queue),
+            ClassMask::all(),
             native_backend,
             None,
             Arc::clone(&stats),
@@ -207,12 +219,13 @@ mod tests {
 
     #[test]
     fn delegate_executes_all_job_classes_and_counts_them() {
-        let queue: Arc<JobQueue<RtJob>> = Arc::new(JobQueue::new());
+        let queue: Arc<QueueBank<RtJob>> = Arc::new(QueueBank::new());
         let stats = Arc::new(DelegateStats::default());
         let handle = spawn(
             "mixed-delegate".into(),
             0,
             Arc::clone(&queue),
+            ClassMask::all(),
             native_backend,
             None,
             Arc::clone(&stats),
@@ -248,23 +261,75 @@ mod tests {
 
     #[test]
     fn idle_delegate_reports_to_thief() {
-        let queue: Arc<JobQueue<RtJob>> = Arc::new(JobQueue::new());
+        let queue: Arc<QueueBank<RtJob>> = Arc::new(QueueBank::new());
         let stats = Arc::new(DelegateStats::default());
         let (ttx, trx) = mpsc::channel();
         let handle = spawn(
             "idle-delegate".into(),
             3,
             Arc::clone(&queue),
+            ClassMask::all(),
             native_backend,
             Some(ttx),
             Arc::clone(&stats),
             0,
         );
-        // No jobs: the delegate must report idleness at least once.
+        // No jobs: the delegate must report idleness at least once,
+        // carrying its own member mask.
         let msg = trx.recv_timeout(Duration::from_secs(2)).unwrap();
-        assert_eq!(msg, ThiefMsg::ClusterIdle(3));
+        assert_eq!(msg, ThiefMsg::ClusterIdle(3, ClassMask::all()));
         queue.close();
         handle.join().unwrap().unwrap();
         assert!(stats.idle_reports.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn masked_delegate_never_touches_other_classes() {
+        // A CONV-only member must leave FC/im2col jobs in the bank for a
+        // capable teammate — the member-level routing contract.
+        let bank: Arc<QueueBank<RtJob>> = Arc::new(QueueBank::new());
+        let conv_stats = Arc::new(DelegateStats::default());
+        let conv_handle = spawn(
+            "conv-only-delegate".into(),
+            0,
+            Arc::clone(&bank),
+            ClassMask::of(&[JobClass::ConvTile]),
+            native_backend,
+            None,
+            Arc::clone(&conv_stats),
+            2,
+        );
+        let (tx, rx) = mpsc::channel();
+        let w = Arc::new(XorShift64Star::new(9).fill_f32(8 * 8, 1.0));
+        let x = Arc::new(XorShift64Star::new(10).fill_f32(8, 1.0));
+        bank.push(RtJob {
+            job: Job::fc(0, 0, 0, 8, 8, w, x, 32),
+            reply: tx.clone(),
+        });
+        // Give the conv-only delegate time to (wrongly) grab it.
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(bank.class_counts()[JobClass::FcGemm.index()], 1);
+        assert_eq!(conv_stats.jobs.load(Ordering::Relaxed), 0);
+
+        // A full-capability teammate on the same bank serves it.
+        let neon_stats = Arc::new(DelegateStats::default());
+        let neon_handle = spawn(
+            "neon-delegate".into(),
+            0,
+            Arc::clone(&bank),
+            ClassMask::all(),
+            native_backend,
+            None,
+            Arc::clone(&neon_stats),
+            0,
+        );
+        let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(r.data.len(), 8);
+        bank.close();
+        conv_handle.join().unwrap().unwrap();
+        neon_handle.join().unwrap().unwrap();
+        assert_eq!(neon_stats.jobs_by_class()[JobClass::FcGemm.index()], 1);
+        assert_eq!(conv_stats.jobs.load(Ordering::Relaxed), 0);
+        drop(tx);
     }
 }

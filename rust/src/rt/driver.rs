@@ -54,6 +54,9 @@ pub struct RtReport {
     pub per_accel_jobs: Vec<u64>,
     /// jobs per class ([`JobClass`] dense order).
     pub per_class_jobs: [u64; JobClass::COUNT],
+    /// Jobs computed inline because no pool member supported the class
+    /// (see `rt::pool::DispatchStats`); zero on any realistic pool.
+    pub inline_fallbacks: u64,
 }
 
 /// The assembled runtime (exists for the duration of one stream).
@@ -167,6 +170,7 @@ impl RtRuntime {
             steal_attempts: pool_report.steal_attempts,
             per_accel_jobs: pool_report.per_accel_jobs,
             per_class_jobs: pool_report.per_class_jobs,
+            inline_fallbacks: pool_report.inline_fallbacks,
         })
     }
 }
@@ -214,7 +218,8 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(ids, sorted);
         // All matrix work (CONV tiles + FC GEMMs + im2col) went through
-        // the accelerator pool.
+        // the accelerator pool — never inline.
+        assert_eq!(report.inline_fallbacks, 0);
         let profile = net.pool_job_profile();
         let expected: usize = profile.iter().sum::<usize>() * frames.len();
         assert_eq!(report.jobs_executed, expected as u64);

@@ -5,14 +5,16 @@
 //! One [`PoolRouter`] exists per (network, pool) pairing and carries the
 //! static CONV-layer → cluster assignment; [`PoolRouter::frame`] stamps a
 //! frame id onto a lightweight per-frame executor handed to
-//! `Network::forward_layer`.  Classes a pool cannot execute (e.g. FC jobs
-//! against a CONV-only PJRT cluster set) transparently fall back to the
-//! native executor on the calling thread.
+//! `Network::forward_layer`.  Every class is dispatched unconditionally:
+//! member-level routing guarantees any capable member of any cluster can
+//! serve it, so the old per-cluster capability probe and its inline
+//! fallback are gone (a pool with zero capable members is handled —
+//! and counted — inside the [`Dispatcher`]).
 
 use std::sync::Arc;
 
 use crate::mm::TileGrid;
-use crate::nn::network::{MatExec, NativeExec};
+use crate::nn::network::MatExec;
 use crate::nn::Network;
 use crate::tensor::Tensor;
 
@@ -95,18 +97,9 @@ impl MatExec for FrameExec<'_> {
         x: Arc<Vec<f32>>,
     ) -> Vec<f32> {
         let ctx = self.ctx(layer_idx);
-        match self.router.dispatcher.execute_fc(
-            ctx,
-            out_n,
-            in_n,
-            Arc::clone(&w),
-            Arc::clone(&x),
-            self.router.tile_size,
-        ) {
-            Some(y) => y,
-            // No FC-capable cluster: compute inline on the layer thread.
-            None => NativeExec.fc_gemm(layer_idx, out_n, in_n, w, x),
-        }
+        self.router
+            .dispatcher
+            .execute_fc(ctx, out_n, in_n, w, x, self.router.tile_size)
     }
 
     fn im2col_lower(
@@ -120,36 +113,20 @@ impl MatExec for FrameExec<'_> {
         let shape = input.shape();
         let chw = (shape[0], shape[1], shape[2]);
         let ctx = self.ctx(layer_idx);
-        // Capability-only probe (no queue locks); the dispatch below does
-        // the actual least-loaded routing.
-        let supported = self
-            .router
-            .dispatcher
-            .cluster_caps()
-            .iter()
-            .any(|c| c.supports(crate::mm::job::JobClass::Im2col));
-        if supported {
-            // The activation buffer moves into the shared job operand —
-            // no copy on the layer thread.
-            let col = self
-                .router
-                .dispatcher
-                .execute_im2col(
-                    ctx,
-                    chw,
-                    size,
-                    stride,
-                    pad,
-                    Arc::new(input.into_vec()),
-                    self.router.tile_size,
-                )
-                .expect("a cluster supports im2col");
-            let rows = chw.0 * size * size;
-            let cols = col.len() / rows;
-            Tensor::from_vec(&[rows, cols], col)
-        } else {
-            NativeExec.im2col_lower(layer_idx, input, size, stride, pad)
-        }
+        // The activation buffer moves into the shared job operand — no
+        // copy on the layer thread.
+        let col = self.router.dispatcher.execute_im2col(
+            ctx,
+            chw,
+            size,
+            stride,
+            pad,
+            Arc::new(input.into_vec()),
+            self.router.tile_size,
+        );
+        let rows = chw.0 * size * size;
+        let cols = col.len() / rows;
+        Tensor::from_vec(&[rows, cols], col)
     }
 }
 
@@ -194,5 +171,7 @@ mod tests {
             report.jobs_executed,
             profile.iter().sum::<usize>() as u64
         );
+        assert_eq!(report.inline_fallbacks, 0);
+        assert_eq!(report.dispatched_by_class, report.per_class_jobs);
     }
 }

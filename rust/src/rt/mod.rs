@@ -6,18 +6,20 @@
 //!   producer-consumer fashion (frames stream through, inter-frame
 //!   parallelism for free);
 //! * layer threads emit **all** their matrix work — CONV-tile GEMMs, FC
-//!   GEMMs, im2col lowering — as jobs on the cluster [`JobQueue`]s via
-//!   [`PoolRouter`] (the unified-pool refactor: FC layers no longer run
-//!   inline on the pipeline thread);
+//!   GEMMs, im2col lowering — as jobs on the per-class cluster
+//!   [`QueueBank`]s via [`PoolRouter`] (the unified-pool refactor: FC
+//!   layers never run inline on the pipeline thread);
 //! * **delegate threads** ([`delegate`]) each drive one
 //!   [`Accelerator`](crate::accel::Accelerator) backend resolved from the
-//!   [`BackendRegistry`](crate::accel::BackendRegistry): the AOT Pallas
+//!   [`BackendRegistry`](crate::accel::BackendRegistry) — the AOT Pallas
 //!   kernel through PJRT (FPGA-PE path, one private engine per delegate —
 //!   mirroring one physical kernel instance per PE), the native blocked
-//!   GEMM (NEON path), or the multi-threaded big-core GEMM;
+//!   GEMM (NEON path), or the multi-threaded big-core GEMM — and pop
+//!   through their **member capability mask**, so mixed clusters keep
+//!   every member busy on the classes it speaks;
 //! * the **thief thread** (`sched::worksteal`) rebalances queues when a
-//!   cluster goes idle, weighting backlogs per job class and filtering
-//!   steals by the destination cluster's capabilities.
+//!   cluster goes idle, ranking victims by the per-sub-queue backlog the
+//!   destination can actually accept.
 //!
 //! The queues + delegates + thief substrate lives in [`pool`] so both the
 //! single-stream driver here and the multi-stream serving runtime
@@ -28,7 +30,7 @@
 //! host CPU; ZC702-shaped timing comes from `sim/`.
 //!
 //! [`Mailbox`]: crate::pipeline::Mailbox
-//! [`JobQueue`]: crate::cluster::JobQueue
+//! [`QueueBank`]: crate::cluster::QueueBank
 
 pub mod delegate;
 pub mod driver;
@@ -37,7 +39,10 @@ pub mod pool;
 
 pub use driver::{RtOptions, RtReport, RtRuntime};
 pub use exec::{FrameExec, PoolRouter};
-pub use pool::{backend_key, DelegatePool, Dispatcher, GemmCtx, PoolOptions, PoolReport};
+pub use pool::{
+    backend_key, ClusterRoute, DelegatePool, DispatchStats, Dispatcher, GemmCtx, PoolOptions,
+    PoolReport,
+};
 
 /// How delegates compute jobs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -1,14 +1,17 @@
-//! The shared accelerator substrate: cluster job queues, delegate threads,
-//! and the work-stealing thief, factored out of the single-stream driver so
-//! the serving runtime (`serve/`) can host many network pipelines over one
-//! physical pool of accelerators.
+//! The shared accelerator substrate: per-cluster job-queue banks, delegate
+//! threads, and the work-stealing thief, factored out of the single-stream
+//! driver so the serving runtime (`serve/`) can host many network
+//! pipelines over one physical pool of accelerators.
 //!
 //! Every delegate drives an [`Accelerator`] backend resolved by name from
-//! the [`BackendRegistry`]: `[cluster]` members map to registry keys
-//! ([`backend_key`]), their capability masks intersect into per-cluster
-//! capabilities, and the [`Dispatcher`] routes each job class only to
-//! clusters that can execute it — one heterogeneous pool serving CONV
-//! tiles, FC GEMMs, and im2col lowering alike (paper §3.1).
+//! the [`BackendRegistry`] and pops jobs through its **own member
+//! capability mask** from its cluster's per-class [`QueueBank`]: a NEON
+//! member of a mixed NEON+PE cluster serves FC/im2col sub-queues while the
+//! PE member drains CONV tiles (paper §3.1 "unified abstraction" — kept
+//! true for *every* cluster shape).  The [`Dispatcher`] routes each job
+//! class to the cluster whose capable members are least loaded; there is
+//! no per-cluster capability intersection and no inline execution on the
+//! pipeline thread as long as *any* member of the pool supports the class.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Sender};
@@ -19,7 +22,7 @@ use anyhow::{anyhow, Result};
 use crate::accel::{
     build_clusters, AccelClass, AccelSpec, Accelerator, BackendRegistry, ClusterSpec,
 };
-use crate::cluster::JobQueue;
+use crate::cluster::QueueBank;
 use crate::config::HwConfig;
 use crate::mm::job::{gather_results, jobs_for_gemm, ClassMask, Job, JobClass, JobResult};
 use crate::mm::TileGrid;
@@ -72,14 +75,76 @@ impl PoolOptions {
     }
 }
 
+/// Per-cluster routing metadata derived from the member capability masks.
+#[derive(Debug, Clone)]
+pub struct ClusterRoute {
+    /// Union of member masks: the classes *some* member can execute —
+    /// what the cluster's bank may accept (dispatch and steal filter).
+    pub accept: ClassMask,
+    /// Per class: aggregate k-steps/s of the members that support it.
+    pub class_rate: [f64; JobClass::COUNT],
+    /// Per class: union of the masks of the members that support it — the
+    /// full service set those members drain, i.e. the backlog that
+    /// competes with a newly routed job of this class.
+    pub drain_mask: [ClassMask; JobClass::COUNT],
+}
+
+impl ClusterRoute {
+    /// Build from one cluster's members and their capability masks.
+    pub fn derive(cluster: &ClusterSpec, member_caps: &[ClassMask]) -> ClusterRoute {
+        debug_assert_eq!(cluster.members.len(), member_caps.len());
+        let mut accept = ClassMask::NONE;
+        for caps in member_caps {
+            accept = accept.union(*caps);
+        }
+        let mut class_rate = [0.0f64; JobClass::COUNT];
+        let mut drain_mask = [ClassMask::NONE; JobClass::COUNT];
+        for class in JobClass::ALL {
+            let i = class.index();
+            for (member, caps) in cluster.members.iter().zip(member_caps) {
+                if caps.supports(class) {
+                    class_rate[i] += 1.0 / member.perf.kstep_seconds;
+                    drain_mask[i] = drain_mask[i].union(*caps);
+                }
+            }
+        }
+        ClusterRoute {
+            accept,
+            class_rate,
+            drain_mask,
+        }
+    }
+}
+
+/// Dispatch-side counters (shared between the pool and its dispatchers).
+#[derive(Debug, Default)]
+pub struct DispatchStats {
+    /// Jobs handed to cluster banks, per class.
+    pub dispatched_by_class: [AtomicU64; JobClass::COUNT],
+    /// Jobs executed inline on the calling thread because **no member of
+    /// any cluster** supports the class (a degenerate pool, e.g. a custom
+    /// all-PE registry).  With member-level routing this is the *only*
+    /// inline path left — any capable member anywhere keeps it at zero.
+    pub inline_fallbacks: AtomicU64,
+}
+
 /// Counters accumulated over the pool's lifetime.
 #[derive(Debug, Clone, Default)]
 pub struct PoolReport {
     pub jobs_executed: u64,
     /// Jobs per accelerator (by accel id).
     pub per_accel_jobs: Vec<u64>,
+    /// Jobs per accelerator per class (accel id → [`JobClass`] dense
+    /// order) — proves which *member* executed which class.
+    pub per_accel_by_class: Vec<[u64; JobClass::COUNT]>,
     /// Jobs per class ([`JobClass`] dense order).
     pub per_class_jobs: [u64; JobClass::COUNT],
+    /// Jobs the dispatcher handed to cluster banks, per class (executed +
+    /// still in flight; equal to `per_class_jobs` once drained).
+    pub dispatched_by_class: [u64; JobClass::COUNT],
+    /// See [`DispatchStats::inline_fallbacks`].  Zero whenever at least
+    /// one member of the pool supports every dispatched class.
+    pub inline_fallbacks: u64,
     pub steal_attempts: u64,
     pub jobs_stolen: u64,
     /// Stolen jobs per class ([`JobClass`] dense order).
@@ -90,7 +155,7 @@ pub struct PoolReport {
 #[derive(Debug, Clone, Copy)]
 pub struct GemmCtx {
     /// Destination cluster (from the static mapping).  A hint: class
-    /// routing may override it when the cluster lacks the capability.
+    /// routing may override it when no member there supports the class.
     pub cluster: usize,
     /// Network layer index of the emitting layer.
     pub layer_idx: usize,
@@ -102,13 +167,11 @@ pub struct GemmCtx {
 /// the pool and gather results (the paper's job-generator + ack path).
 #[derive(Clone)]
 pub struct Dispatcher {
-    queues: Vec<Arc<JobQueue<RtJob>>>,
+    banks: Vec<Arc<QueueBank<RtJob>>>,
     thief_tx: Option<Sender<ThiefMsg>>,
     job_counter: Arc<AtomicU64>,
-    /// Per-cluster capability masks (intersection of member backends).
-    cluster_caps: Arc<Vec<ClassMask>>,
-    /// Per-cluster aggregate service rates (k-steps/s) for routing ties.
-    service_rates: Arc<Vec<f64>>,
+    routes: Arc<Vec<ClusterRoute>>,
+    stats: Arc<DispatchStats>,
 }
 
 impl Dispatcher {
@@ -122,17 +185,23 @@ impl Dispatcher {
         a: Arc<Vec<f32>>,
         b: Arc<Vec<f32>>,
     ) -> Vec<f32> {
-        // Honor the static mapping when the cluster can run CONV tiles;
-        // route around it otherwise (e.g. an FC-only backend's cluster),
-        // same as the other job classes.
-        let cluster = self
-            .route(JobClass::ConvTile, Some(ctx.cluster))
-            .expect("no cluster in the pool supports CONV-tile jobs");
         let mut next_id = self
             .job_counter
             .fetch_add(grid.num_jobs() as u64, Ordering::Relaxed);
         let jobs = jobs_for_gemm(ctx.layer_idx, ctx.frame_id, grid, a, b, &mut next_id);
         let n = jobs.len();
+        // Honor the static mapping when some member there can run CONV
+        // tiles; route around it otherwise, same as the other classes —
+        // including the counted inline last resort when NO member of any
+        // cluster is CONV-capable (a custom registry), so a degenerate
+        // pool degrades instead of panicking the layer thread.
+        let Some(cluster) = self.route(JobClass::ConvTile, Some(ctx.cluster)) else {
+            self.stats
+                .inline_fallbacks
+                .fetch_add(n as u64, Ordering::Relaxed);
+            let results: Vec<JobResult> = jobs.iter().map(|j| j.execute_native()).collect();
+            return gather_results(grid, &results);
+        };
         let (tx, rx) = mpsc::channel::<JobResult>();
         // Batch-push: one lock + one notify_all per layer instead of per
         // job (§Perf iter 3).
@@ -143,7 +212,9 @@ impl Dispatcher {
                 reply: tx.clone(),
             })
             .collect();
-        self.queues[cluster].push_batch(batch);
+        self.banks[cluster].push_batch(batch);
+        self.stats.dispatched_by_class[JobClass::ConvTile.index()]
+            .fetch_add(n as u64, Ordering::Relaxed);
         if let Some(t) = &self.thief_tx {
             let _ = t.send(ThiefMsg::ClusterBusy(cluster));
         }
@@ -156,8 +227,9 @@ impl Dispatcher {
     }
 
     /// Dispatch one FC GEMM (y = W·x) as a pool job and block for the
-    /// result.  Returns `None` when no cluster supports FC jobs (e.g. a
-    /// PJRT-only pool) — the caller then computes inline.
+    /// result.  Any FC-capable member anywhere serves it; only a pool with
+    /// **zero** FC-capable members computes inline (counted — see
+    /// [`DispatchStats::inline_fallbacks`]).
     pub fn execute_fc(
         &self,
         ctx: GemmCtx,
@@ -166,15 +238,14 @@ impl Dispatcher {
         w: Arc<Vec<f32>>,
         x: Arc<Vec<f32>>,
         ts: usize,
-    ) -> Option<Vec<f32>> {
-        let cluster = self.route(JobClass::FcGemm, None)?;
+    ) -> Vec<f32> {
         let id = self.job_counter.fetch_add(1, Ordering::Relaxed);
         let job = Job::fc(id, ctx.layer_idx, ctx.frame_id, out_n, in_n, w, x, ts);
-        Some(self.run_single(cluster, job).data)
+        self.run_or_fallback(JobClass::FcGemm, None, job)
     }
 
     /// Dispatch one im2col lowering as a pool job and block for the col
-    /// matrix.  `None` when no cluster supports im2col jobs.
+    /// matrix.  Same routing contract as [`Dispatcher::execute_fc`].
     #[allow(clippy::too_many_arguments)]
     pub fn execute_im2col(
         &self,
@@ -185,8 +256,7 @@ impl Dispatcher {
         pad: usize,
         input: Arc<Vec<f32>>,
         ts: usize,
-    ) -> Option<Vec<f32>> {
-        let cluster = self.route(JobClass::Im2col, Some(ctx.cluster))?;
+    ) -> Vec<f32> {
         let id = self.job_counter.fetch_add(1, Ordering::Relaxed);
         let job = Job::im2col(
             id,
@@ -199,35 +269,71 @@ impl Dispatcher {
             input,
             ts,
         );
-        Some(self.run_single(cluster, job).data)
+        self.run_or_fallback(JobClass::Im2col, Some(ctx.cluster), job)
     }
 
-    /// Pick the destination cluster for a job class: `preferred` if it is
-    /// capable, else the capable cluster with the smallest queue backlog
-    /// per unit service rate; `None` if no cluster supports the class.
+    /// Pick the destination cluster for a job class: `preferred` if some
+    /// member there supports it, else the cluster whose *capable members*
+    /// carry the smallest backlog per unit of their aggregate service
+    /// rate; `None` only if no member of any cluster supports the class.
     pub fn route(&self, class: JobClass, preferred: Option<usize>) -> Option<usize> {
         if let Some(p) = preferred {
-            if p < self.cluster_caps.len() && self.cluster_caps[p].supports(class) {
+            if p < self.routes.len() && self.routes[p].accept.supports(class) {
                 return Some(p);
             }
         }
-        (0..self.queues.len())
-            .filter(|&c| self.cluster_caps[c].supports(class))
-            .min_by(|&a, &b| {
-                let la = self.queues[a].len() as f64 / self.service_rates[a].max(1e-12);
-                let lb = self.queues[b].len() as f64 / self.service_rates[b].max(1e-12);
-                la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
-            })
+        let ci = class.index();
+        // Snapshot each capable cluster's load once (one bank lock each):
+        // recomputing inside a comparator would double the lock traffic on
+        // the per-job dispatch path and compare loads from different
+        // instants.
+        let mut best: Option<(usize, f64)> = None;
+        for c in 0..self.banks.len() {
+            if !self.routes[c].accept.supports(class) {
+                continue;
+            }
+            let load = self.member_load(c, ci);
+            if best.is_none_or(|(_, b)| load < b) {
+                best = Some((c, load));
+            }
+        }
+        best.map(|(c, _)| c)
     }
 
-    /// Per-cluster capability masks (for tests and reporting).
-    pub fn cluster_caps(&self) -> &[ClassMask] {
-        &self.cluster_caps
+    /// Estimated time-to-drain of the backlog competing with a class-`ci`
+    /// job on cluster `c`: the jobs its class-capable members serve,
+    /// normalized by those members' aggregate rate.
+    fn member_load(&self, c: usize, ci: usize) -> f64 {
+        let route = &self.routes[c];
+        self.banks[c].len_where(route.drain_mask[ci]) as f64 / route.class_rate[ci].max(1e-12)
+    }
+
+    /// Per-cluster accept masks — the union over member capabilities (for
+    /// tests and reporting).
+    pub fn accept_masks(&self) -> Vec<ClassMask> {
+        self.routes.iter().map(|r| r.accept).collect()
+    }
+
+    fn run_or_fallback(&self, class: JobClass, preferred: Option<usize>, job: Job) -> Vec<f32> {
+        match self.route(class, preferred) {
+            Some(cluster) => {
+                self.stats.dispatched_by_class[class.index()].fetch_add(1, Ordering::Relaxed);
+                self.run_single(cluster, job).data
+            }
+            None => {
+                // Degenerate pool: no member anywhere can execute this
+                // class.  Compute on the calling thread and count it —
+                // tests pin this counter at zero for every topology with
+                // a capable member.
+                self.stats.inline_fallbacks.fetch_add(1, Ordering::Relaxed);
+                job.execute_native().data
+            }
+        }
     }
 
     fn run_single(&self, cluster: usize, job: Job) -> JobResult {
         let (tx, rx) = mpsc::channel::<JobResult>();
-        self.queues[cluster].push(RtJob { job, reply: tx });
+        self.banks[cluster].push(RtJob { job, reply: tx });
         if let Some(t) = &self.thief_tx {
             let _ = t.send(ThiefMsg::ClusterBusy(cluster));
         }
@@ -235,17 +341,17 @@ impl Dispatcher {
     }
 }
 
-/// The running pool: one delegate thread per accelerator, one job queue per
-/// cluster, plus (optionally) the thief.
+/// The running pool: one delegate thread per accelerator popping the
+/// cluster's bank through its member mask, plus (optionally) the thief.
 pub struct DelegatePool {
     clusters: Vec<ClusterSpec>,
-    queues: Vec<Arc<JobQueue<RtJob>>>,
-    cluster_caps: Arc<Vec<ClassMask>>,
-    service_rates: Arc<Vec<f64>>,
+    banks: Vec<Arc<QueueBank<RtJob>>>,
+    routes: Arc<Vec<ClusterRoute>>,
     delegate_stats: Vec<Arc<DelegateStats>>,
     delegate_handles: Vec<std::thread::JoinHandle<Result<()>>>,
     thief: Option<Thief<RtJob>>,
     job_counter: Arc<AtomicU64>,
+    dispatch_stats: Arc<DispatchStats>,
 }
 
 impl DelegatePool {
@@ -259,34 +365,38 @@ impl DelegatePool {
             ))
         });
         let clusters = build_clusters(&options.hw);
-        let queues: Vec<Arc<JobQueue<RtJob>>> = clusters
+        let banks: Vec<Arc<QueueBank<RtJob>>> = clusters
             .iter()
-            .map(|_| Arc::new(JobQueue::new()))
+            .map(|_| Arc::new(QueueBank::new()))
             .collect();
 
-        // Per-cluster capability = intersection over members: a cluster
-        // queue is shared, so a class is routable only if *every* member
-        // can execute it.
-        let mut cluster_caps = Vec::with_capacity(clusters.len());
+        // Per-member capability masks from the registry metadata (known
+        // before any backend instance exists).
+        let mut member_caps: Vec<Vec<ClassMask>> = Vec::with_capacity(clusters.len());
         for cluster in &clusters {
-            let mut caps = ClassMask::all();
+            let mut caps = Vec::with_capacity(cluster.members.len());
             for member in &cluster.members {
                 let key = backend_key(member, options.compute);
                 let entry = registry
                     .get(key)
                     .ok_or_else(|| anyhow!("no backend {key:?} in the registry"))?;
-                caps = caps.intersect(entry.caps);
+                caps.push(entry.caps);
             }
-            cluster_caps.push(caps);
+            member_caps.push(caps);
         }
+        let routes: Vec<ClusterRoute> = clusters
+            .iter()
+            .zip(&member_caps)
+            .map(|(cluster, caps)| ClusterRoute::derive(cluster, caps))
+            .collect();
         let service_rates: Vec<f64> = clusters.iter().map(|c| c.throughput()).collect();
 
         let thief = if options.work_stealing {
             Some(Thief::spawn_with_caps(
-                queues.clone(),
+                banks.clone(),
                 options.steal_policy,
-                cluster_caps.clone(),
-                service_rates.clone(),
+                routes.iter().map(|r| r.accept).collect(),
+                service_rates,
             ))
         } else {
             None
@@ -295,21 +405,22 @@ impl DelegatePool {
 
         let mut delegate_stats = Vec::new();
         let mut delegate_handles = Vec::new();
-        for cluster in &clusters {
-            for member in &cluster.members {
+        for (cluster, caps) in clusters.iter().zip(&member_caps) {
+            for (member, mcaps) in cluster.members.iter().zip(caps) {
+                // Delegate-stats order == accelerator-id order: the report
+                // indexes `per_accel_*` by accel id.
+                assert_eq!(member.id, delegate_stats.len(), "accel ids not dense");
                 let stats = Arc::new(DelegateStats::default());
                 delegate_stats.push(Arc::clone(&stats));
-                let queue = Arc::clone(&queues[cluster.index]);
+                let bank = Arc::clone(&banks[cluster.index]);
                 let key = backend_key(member, options.compute);
-                let builder = registry
-                    .get(key)
-                    .expect("resolved above")
-                    .builder();
+                let builder = registry.get(key).expect("resolved above").builder();
                 let mk = move || -> Result<Box<dyn Accelerator>> { builder() };
                 delegate_handles.push(delegate::spawn(
                     format!("delegate-{}", member.name),
                     cluster.index,
-                    queue,
+                    bank,
+                    *mcaps,
                     mk,
                     thief_tx.clone(),
                     stats,
@@ -320,13 +431,13 @@ impl DelegatePool {
 
         Ok(DelegatePool {
             clusters,
-            queues,
-            cluster_caps: Arc::new(cluster_caps),
-            service_rates: Arc::new(service_rates),
+            banks,
+            routes: Arc::new(routes),
             delegate_stats,
             delegate_handles,
             thief,
             job_counter: Arc::new(AtomicU64::new(0)),
+            dispatch_stats: Arc::new(DispatchStats::default()),
         })
     }
 
@@ -339,41 +450,51 @@ impl DelegatePool {
         crate::accel::all_accels(&self.clusters)
     }
 
+    /// Per-cluster routing metadata (accept masks, per-class rates).
+    pub fn routes(&self) -> &[ClusterRoute] {
+        &self.routes
+    }
+
     /// Handle for layer threads to dispatch matrix work through.
     pub fn dispatcher(&self) -> Dispatcher {
         Dispatcher {
-            queues: self.queues.clone(),
+            banks: self.banks.clone(),
             thief_tx: self.thief.as_ref().map(|t| t.sender()),
             job_counter: Arc::clone(&self.job_counter),
-            cluster_caps: Arc::clone(&self.cluster_caps),
-            service_rates: Arc::clone(&self.service_rates),
+            routes: Arc::clone(&self.routes),
+            stats: Arc::clone(&self.dispatch_stats),
         }
     }
 
     /// Live counters (approximate while delegates are still running).
     pub fn snapshot(&self) -> PoolReport {
-        fold_report(&self.delegate_stats, self.thief.as_ref())
+        fold_report(
+            &self.delegate_stats,
+            self.thief.as_ref(),
+            &self.dispatch_stats,
+        )
     }
 
-    /// Close the queues, join every delegate, stop the thief, and return
+    /// Close the banks, join every delegate, stop the thief, and return
     /// the final counters.  Callers must have drained their reply channels
     /// (i.e. no in-flight jobs) before calling.
     pub fn shutdown(self) -> Result<PoolReport> {
         let DelegatePool {
-            queues,
+            banks,
             delegate_stats,
             delegate_handles,
             thief,
+            dispatch_stats,
             ..
         } = self;
-        for q in &queues {
-            q.close();
+        for b in &banks {
+            b.close();
         }
         // Join before reading counters so the report sees every job.
         for h in delegate_handles {
             h.join().expect("delegate thread")?;
         }
-        let report = fold_report(&delegate_stats, thief.as_ref());
+        let report = fold_report(&delegate_stats, thief.as_ref(), &dispatch_stats);
         if let Some(t) = thief {
             t.shutdown();
         }
@@ -381,16 +502,30 @@ impl DelegatePool {
     }
 }
 
-fn fold_report(delegate_stats: &[Arc<DelegateStats>], thief: Option<&Thief<RtJob>>) -> PoolReport {
+fn fold_report(
+    delegate_stats: &[Arc<DelegateStats>],
+    thief: Option<&Thief<RtJob>>,
+    dispatch: &DispatchStats,
+) -> PoolReport {
     let mut report = PoolReport::default();
     for stats in delegate_stats {
         let j = stats.jobs.load(Ordering::Relaxed);
         report.per_accel_jobs.push(j);
         report.jobs_executed += j;
-        for (acc, n) in report.per_class_jobs.iter_mut().zip(stats.jobs_by_class()) {
+        let by_class = stats.jobs_by_class();
+        report.per_accel_by_class.push(by_class);
+        for (acc, n) in report.per_class_jobs.iter_mut().zip(by_class) {
             *acc += n;
         }
     }
+    for (acc, ctr) in report
+        .dispatched_by_class
+        .iter_mut()
+        .zip(&dispatch.dispatched_by_class)
+    {
+        *acc = ctr.load(Ordering::Relaxed);
+    }
+    report.inline_fallbacks = dispatch.inline_fallbacks.load(Ordering::Relaxed);
     if let Some(t) = thief {
         let (attempts, _successes, moved) = t.stats.snapshot();
         report.steal_attempts = attempts;
@@ -431,6 +566,9 @@ mod tests {
             report.per_class_jobs[JobClass::ConvTile.index()],
             grid.num_jobs() as u64
         );
+        // Executed == dispatched per class; nothing ran inline.
+        assert_eq!(report.dispatched_by_class, report.per_class_jobs);
+        assert_eq!(report.inline_fallbacks, 0);
     }
 
     #[test]
@@ -438,10 +576,10 @@ mod tests {
         let options = PoolOptions::new(HwConfig::default_zc702(), ComputeMode::Native, false);
         let pool = DelegatePool::start(&options).unwrap();
         let dispatcher = pool.dispatcher();
-        // In native mode every cluster supports every class.
-        for caps in dispatcher.cluster_caps() {
+        // In native mode every member supports every class.
+        for accept in dispatcher.accept_masks() {
             for class in JobClass::ALL {
-                assert!(caps.supports(class));
+                assert!(accept.supports(class));
             }
         }
         let ctx = GemmCtx {
@@ -451,17 +589,13 @@ mod tests {
         };
         let w = Arc::new(XorShift64Star::new(1).fill_f32(16 * 32, 1.0));
         let x = Arc::new(XorShift64Star::new(2).fill_f32(32, 1.0));
-        let y = dispatcher
-            .execute_fc(ctx, 16, 32, Arc::clone(&w), Arc::clone(&x), 32)
-            .expect("native pool supports FC");
+        let y = dispatcher.execute_fc(ctx, 16, 32, Arc::clone(&w), Arc::clone(&x), 32);
         let mut want = vec![0.0f32; 16];
         crate::mm::gemm::gemm_blocked_into(&w, &x, &mut want, 16, 32, 1);
         assert_eq!(y, want);
 
         let input = Arc::new(XorShift64Star::new(3).fill_f32(3 * 6 * 6, 1.0));
-        let col = dispatcher
-            .execute_im2col(ctx, (3, 6, 6), 3, 1, 1, Arc::clone(&input), 32)
-            .expect("native pool supports im2col");
+        let col = dispatcher.execute_im2col(ctx, (3, 6, 6), 3, 1, 1, Arc::clone(&input), 32);
         let x_t = crate::tensor::Tensor::from_vec(&[3, 6, 6], (*input).clone());
         let want_col = crate::nn::im2col::im2col(&x_t, 3, 1, 1);
         assert_eq!(col, want_col.data());
@@ -470,30 +604,149 @@ mod tests {
         assert_eq!(report.per_class_jobs[JobClass::FcGemm.index()], 1);
         assert_eq!(report.per_class_jobs[JobClass::Im2col.index()], 1);
         assert_eq!(report.jobs_executed, 2);
-        // Per-accel counters balance the total.
+        assert_eq!(report.inline_fallbacks, 0);
+        // Per-accel counters balance the total, per class too.
         assert_eq!(report.per_accel_jobs.iter().sum::<u64>(), 2);
+        let mut by_class = [0u64; JobClass::COUNT];
+        for accel in &report.per_accel_by_class {
+            for (acc, n) in by_class.iter_mut().zip(accel) {
+                *acc += n;
+            }
+        }
+        assert_eq!(by_class, report.per_class_jobs);
     }
 
+    /// The mixed-cluster acceptance scenario at pool level: the default
+    /// ZC702 cluster-0 is 2 S-PE + 2 NEON.  Under PJRT(-stub) mode the PE
+    /// members are CONV-only, yet the cluster must keep accepting FC and
+    /// im2col jobs because its NEON members serve those sub-queues —
+    /// the old per-cluster intersection would have degraded it to
+    /// CONV-only and run these jobs inline.
     #[test]
-    fn route_respects_capabilities() {
-        // A registry where FC is only supported by the "neon" backend and
-        // the F-PE cluster is CONV-only, mirroring a real PJRT deployment.
-        let mut registry = BackendRegistry::with_defaults(
-            default_artifacts_dir(),
-            2,
+    fn mixed_cluster_pjrt_stub_serves_fc_on_neon_members() {
+        let options = PoolOptions::new(HwConfig::default_zc702(), ComputeMode::Pjrt, false);
+        let pool = DelegatePool::start(&options).unwrap();
+        let dispatcher = pool.dispatcher();
+        let accels = pool.accels();
+
+        // Cluster 0 (mixed) accepts everything; cluster 1 (pure F-PE)
+        // accepts CONV tiles only.
+        let accepts = dispatcher.accept_masks();
+        assert!(JobClass::ALL.iter().all(|c| accepts[0].supports(*c)));
+        assert!(accepts[1].supports(JobClass::ConvTile));
+        assert!(!accepts[1].supports(JobClass::FcGemm));
+        assert!(!accepts[1].supports(JobClass::Im2col));
+        // Routing: FC can only land on the mixed cluster, even when the
+        // static hint points at the PE-only one.
+        assert_eq!(dispatcher.route(JobClass::FcGemm, None), Some(0));
+        assert_eq!(dispatcher.route(JobClass::FcGemm, Some(1)), Some(0));
+        assert_eq!(dispatcher.route(JobClass::ConvTile, Some(1)), Some(1));
+
+        let ctx = GemmCtx {
+            cluster: 1,
+            layer_idx: 0,
+            frame_id: 0,
+        };
+        let w = Arc::new(XorShift64Star::new(4).fill_f32(12 * 24, 1.0));
+        let x = Arc::new(XorShift64Star::new(5).fill_f32(24, 1.0));
+        let y = dispatcher.execute_fc(ctx, 12, 24, Arc::clone(&w), Arc::clone(&x), 32);
+        let mut want = vec![0.0f32; 12];
+        crate::mm::gemm::gemm_blocked_into(&w, &x, &mut want, 12, 24, 1);
+        assert_eq!(y, want);
+        let input = Arc::new(XorShift64Star::new(6).fill_f32(3 * 6 * 6, 1.0));
+        let _col = dispatcher.execute_im2col(ctx, (3, 6, 6), 3, 1, 1, input, 32);
+
+        let report = pool.shutdown().unwrap();
+        assert_eq!(report.inline_fallbacks, 0, "no inline fallback in a mixed pool");
+        assert_eq!(report.per_class_jobs[JobClass::FcGemm.index()], 1);
+        assert_eq!(report.per_class_jobs[JobClass::Im2col.index()], 1);
+        // Only NEON-class members executed the FC/im2col jobs.
+        for accel in &accels {
+            let by_class = report.per_accel_by_class[accel.id];
+            let non_conv =
+                by_class[JobClass::FcGemm.index()] + by_class[JobClass::Im2col.index()];
+            if accel.is_fpga() {
+                assert_eq!(non_conv, 0, "{} ran a non-CONV job", accel.name);
+            }
+        }
+        let neon_non_conv: u64 = accels
+            .iter()
+            .filter(|a| !a.is_fpga())
+            .map(|a| {
+                report.per_accel_by_class[a.id][JobClass::FcGemm.index()]
+                    + report.per_accel_by_class[a.id][JobClass::Im2col.index()]
+            })
+            .sum();
+        assert_eq!(neon_non_conv, 2, "NEON members must serve FC + im2col");
+    }
+
+    /// Only a pool with ZERO capable members anywhere falls back inline —
+    /// and the counter records it.
+    #[test]
+    fn all_pe_pool_counts_inline_fallbacks() {
+        let mut hw = HwConfig::default_zc702();
+        for cluster in &mut hw.clusters {
+            cluster.neon = 0;
+            cluster.big_neon = 0;
+        }
+        let options = PoolOptions::new(hw, ComputeMode::Pjrt, false);
+        let pool = DelegatePool::start(&options).unwrap();
+        let dispatcher = pool.dispatcher();
+        assert_eq!(dispatcher.route(JobClass::FcGemm, None), None);
+        let ctx = GemmCtx {
+            cluster: 0,
+            layer_idx: 0,
+            frame_id: 0,
+        };
+        let w = Arc::new(XorShift64Star::new(7).fill_f32(8 * 16, 1.0));
+        let x = Arc::new(XorShift64Star::new(8).fill_f32(16, 1.0));
+        let y = dispatcher.execute_fc(ctx, 8, 16, Arc::clone(&w), Arc::clone(&x), 32);
+        let mut want = vec![0.0f32; 8];
+        crate::mm::gemm::gemm_blocked_into(&w, &x, &mut want, 8, 16, 1);
+        assert_eq!(y, want, "inline fallback must still be correct");
+        let report = pool.shutdown().unwrap();
+        assert_eq!(report.inline_fallbacks, 1);
+        assert_eq!(report.dispatched_by_class[JobClass::FcGemm.index()], 0);
+        assert_eq!(report.jobs_executed, 0);
+    }
+
+    /// A registry that strips CONV capability from every member must
+    /// degrade to the counted inline path, not panic the layer thread.
+    #[test]
+    fn conv_incapable_registry_falls_back_inline_for_gemm() {
+        let mut hw = HwConfig::default_zc702();
+        for cluster in &mut hw.clusters {
+            cluster.neon = 0;
+            cluster.big_neon = 0;
+        }
+        let mut options = PoolOptions::new(hw, ComputeMode::Pjrt, false);
+        let mut registry = BackendRegistry::new();
+        registry.register("pjrt-pe", ClassMask::of(&[JobClass::Im2col]), || {
+            Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>)
+        });
+        options.registry = Some(Arc::new(registry));
+        let pool = DelegatePool::start(&options).unwrap();
+        let dispatcher = pool.dispatcher();
+        assert_eq!(dispatcher.route(JobClass::ConvTile, Some(0)), None);
+        let grid = TileGrid::new(16, 24, 20, 32);
+        let a = Arc::new(XorShift64Star::new(9).fill_f32(16 * 24, 1.0));
+        let b = Arc::new(XorShift64Star::new(10).fill_f32(24 * 20, 1.0));
+        let ctx = GemmCtx {
+            cluster: 0,
+            layer_idx: 0,
+            frame_id: 0,
+        };
+        let c = dispatcher.execute_gemm(ctx, grid, Arc::clone(&a), Arc::clone(&b));
+        let want = crate::mm::gemm::gemm_blocked(
+            &crate::tensor::Tensor::from_vec(&[16, 24], (*a).clone()),
+            &crate::tensor::Tensor::from_vec(&[24, 20], (*b).clone()),
         );
-        registry.register(
-            "conv-only",
-            ClassMask::of(&[JobClass::ConvTile]),
-            || Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>),
-        );
-        // Hand-build a pool whose cluster-1 members resolve to conv-only:
-        // simplest via Dispatcher::route on a live pool is covered above;
-        // here check the mask algebra the pool start uses.
-        let all = ClassMask::all();
-        let conv_only = registry.get("conv-only").unwrap().caps;
-        assert!(all.intersect(conv_only).supports(JobClass::ConvTile));
-        assert!(!all.intersect(conv_only).supports(JobClass::FcGemm));
+        let got = crate::tensor::Tensor::from_vec(&[16, 20], c);
+        assert!(want.allclose(&got, 1e-4, 1e-4));
+        let report = pool.shutdown().unwrap();
+        assert_eq!(report.inline_fallbacks, grid.num_jobs() as u64);
+        assert_eq!(report.jobs_executed, 0);
+        assert_eq!(report.dispatched_by_class[JobClass::ConvTile.index()], 0);
     }
 
     #[test]

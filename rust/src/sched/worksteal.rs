@@ -8,16 +8,19 @@
 //!   and deposits them into an idle cluster's queue, then clears the
 //!   idle-book entry.
 //!
-//! With the unified job model the thief accounts **per job class**
-//! (CONV-tile / FC-GEMM / im2col): victim selection ranks queues by their
-//! cost-weighted backlog divided by the cluster's service rate (paper §3.3
-//! — heterogeneous clusters drain at different speeds, so raw queue length
-//! misranks victims), and stolen jobs are filtered by the destination
-//! cluster's capability mask so a CONV-only PE cluster never receives an
-//! FC job it cannot execute.
+//! With per-class sub-queue banks ([`QueueBank`]) the thief works
+//! **per sub-queue**: victim backlogs are snapshot per class (O(classes)
+//! per queue — the bank keeps the counts), ranked by the *stealable*
+//! cost-weighted backlog — only the classes the **idle member** that
+//! reported can execute ([`ThiefMsg::ClusterIdle`] carries its mask) —
+//! divided by the victim's service rate (paper §3.3: heterogeneous
+//! clusters drain at different speeds, so raw queue length misranks
+//! victims).  Steals then pull from the backs of exactly those
+//! sub-queues: a CONV-only member never receives an FC job, and FC work
+//! is never parked behind a cluster whose FC-capable members are busy.
 //!
 //! The same victim-selection policy is reused by the virtual-clock
-//! simulator (`choose_victim` is a pure function).
+//! simulator (`choose_victim`/`choose_victim_weighted` are pure functions).
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -26,36 +29,21 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::cluster::JobQueue;
+use crate::cluster::QueueBank;
 use crate::mm::job::{ClassMask, JobClass};
+pub use crate::mm::job::Classed;
 
 /// Messages from cluster workers to the thief's manager.
 #[derive(Debug, PartialEq, Eq)]
 pub enum ThiefMsg {
-    /// Cluster `idx` found its queue empty.
-    ClusterIdle(usize),
+    /// A member of cluster `.0` found nothing it can execute; `.1` is that
+    /// member's capability mask.  The thief steals only classes the idle
+    /// member itself can run — pulling, say, FC work into a cluster whose
+    /// only FC-capable member is busy would add latency, not parallelism.
+    ClusterIdle(usize, ClassMask),
     /// Cluster `idx` got fresh local work (e.g. a layer enqueued jobs).
     ClusterBusy(usize),
     Shutdown,
-}
-
-/// Queue items the thief can classify (dense [`JobClass`] index).  Keeps
-/// `Thief` generic over the job type while enabling per-class accounting.
-pub trait Classed {
-    fn class_index(&self) -> usize;
-}
-
-/// Plain integers classify as CONV-tile work (tests and simulators).
-impl Classed for u32 {
-    fn class_index(&self) -> usize {
-        0
-    }
-}
-
-impl Classed for u64 {
-    fn class_index(&self) -> usize {
-        0
-    }
 }
 
 /// Steal accounting (shared, lock-free).
@@ -178,25 +166,26 @@ pub struct Thief<T: Send + 'static> {
 }
 
 impl<T: Send + Classed + 'static> Thief<T> {
-    /// Spawn the thief over the cluster queues (default policy, every
+    /// Spawn the thief over the cluster queue banks (default policy, every
     /// cluster assumed capable of every job class).
-    pub fn spawn(queues: Vec<Arc<JobQueue<T>>>) -> Thief<T> {
+    pub fn spawn(queues: Vec<Arc<QueueBank<T>>>) -> Thief<T> {
         Self::spawn_with(queues, StealPolicy::default())
     }
 
     /// Spawn the thief with an explicit steal policy (the serving runtime
     /// passes [`StealPolicy::batched`]).
-    pub fn spawn_with(queues: Vec<Arc<JobQueue<T>>>, policy: StealPolicy) -> Thief<T> {
+    pub fn spawn_with(queues: Vec<Arc<QueueBank<T>>>, policy: StealPolicy) -> Thief<T> {
         let n = queues.len();
         Self::spawn_with_caps(queues, policy, vec![ClassMask::all(); n], vec![1.0; n])
     }
 
-    /// Fully-specified spawn: per-cluster capability masks (stolen jobs
-    /// are filtered so a destination only receives classes it supports)
-    /// and service rates (aggregate k-steps/s, normalizing victim
-    /// backlogs across heterogeneous clusters).
+    /// Fully-specified spawn: per-cluster *accept* masks (the union of the
+    /// destination's member capabilities — stolen jobs are filtered so a
+    /// destination only receives classes some member can execute) and
+    /// service rates (aggregate k-steps/s, normalizing victim backlogs
+    /// across heterogeneous clusters).
     pub fn spawn_with_caps(
-        queues: Vec<Arc<JobQueue<T>>>,
+        queues: Vec<Arc<QueueBank<T>>>,
         policy: StealPolicy,
         caps: Vec<ClassMask>,
         service_rates: Vec<f64>,
@@ -243,14 +232,17 @@ impl<T: Send + 'static> Drop for Thief<T> {
 }
 
 fn thief_loop<T: Send + Classed>(
-    queues: Vec<Arc<JobQueue<T>>>,
+    queues: Vec<Arc<QueueBank<T>>>,
     rx: mpsc::Receiver<ThiefMsg>,
     stats: Arc<StealStats>,
     policy: StealPolicy,
     caps: Vec<ClassMask>,
     service_rates: Vec<f64>,
 ) {
-    let mut idle_book: HashSet<usize> = HashSet::new();
+    // cluster → union of the capability masks of its members that have
+    // reported idle (cleared on local work or a successful deposit).
+    let mut idle_book: std::collections::HashMap<usize, ClassMask> =
+        std::collections::HashMap::new();
     loop {
         // Wait for a notification (or poll the idle book periodically: a
         // victim may have become stealable after the idle report).
@@ -268,9 +260,12 @@ fn thief_loop<T: Send + Classed>(
         };
         match msg {
             Some(ThiefMsg::Shutdown) => return,
-            Some(ThiefMsg::ClusterIdle(c)) => {
+            Some(ThiefMsg::ClusterIdle(c, mask)) => {
                 if c < queues.len() {
-                    idle_book.insert(c);
+                    idle_book
+                        .entry(c)
+                        .and_modify(|m| *m = m.union(mask))
+                        .or_insert(mask);
                 }
             }
             Some(ThiefMsg::ClusterBusy(c)) => {
@@ -284,40 +279,60 @@ fn thief_loop<T: Send + Classed>(
         if idle_book.is_empty() {
             continue;
         }
-        // Stealer pass: service every idle cluster we can.  Queue backlogs
-        // are snapshot per class, weighted by service cost, and normalized
-        // by each cluster's drain rate.
-        let counts: Vec<Vec<usize>> = queues
-            .iter()
-            .map(|q| q.class_counts(JobClass::COUNT, |t| t.class_index()))
-            .collect();
-        let lens: Vec<usize> = counts.iter().map(|c| c.iter().sum()).collect();
-        let loads: Vec<f64> = counts
-            .iter()
-            .zip(&service_rates)
-            .map(|(c, rate)| {
-                let weighted: f64 = c
-                    .iter()
-                    .zip(&policy.class_cost)
-                    .map(|(&n, &w)| n as f64 * w)
-                    .sum();
-                weighted / rate.max(1e-12)
-            })
-            .collect();
-        let served: Vec<usize> = idle_book.iter().copied().collect();
-        for idle_c in served {
+        // Stealer pass: service every idle cluster we can.  Sub-queue
+        // occupancies are snapshot per class (cheap — the bank keeps the
+        // counts) and, *per destination*, reduced to the stealable backlog:
+        // only the classes the reporting idle members can execute (their
+        // mask unions, intersected with the cluster accept mask as a
+        // safety net), weighted by service cost and normalized by each
+        // victim's drain rate.
+        let counts: Vec<[usize; JobClass::COUNT]> =
+            queues.iter().map(|q| q.class_counts()).collect();
+        let served: Vec<(usize, ClassMask)> =
+            idle_book.iter().map(|(&c, &m)| (c, m)).collect();
+        for (idle_c, idle_mask) in served {
             stats.attempts.fetch_add(1, Ordering::Relaxed);
-            let cap = caps[idle_c];
-            // Walk victims in descending time-to-drain order: a victim
-            // whose backlog holds no class the destination supports
-            // (e.g. all-FC backlog vs a CONV-only PE cluster) must not
-            // block stealing from the next-heaviest one.
-            let mut excluded = idle_book.clone();
+            let cap = caps[idle_c].intersect(idle_mask);
+            if cap.is_empty() {
+                continue;
+            }
+            let stealable: Vec<usize> = counts
+                .iter()
+                .map(|c| {
+                    c.iter()
+                        .enumerate()
+                        .filter(|(i, _)| cap.supports_index(*i))
+                        .map(|(_, &n)| n)
+                        .sum()
+                })
+                .collect();
+            let loads: Vec<f64> = counts
+                .iter()
+                .zip(&service_rates)
+                .map(|(c, rate)| {
+                    let weighted: f64 = c
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| cap.supports_index(*i))
+                        .map(|(i, &n)| n as f64 * policy.class_cost[i])
+                        .sum();
+                    weighted / rate.max(1e-12)
+                })
+                .collect();
+            // Walk victims in descending time-to-drain order: the snapshot
+            // may be stale (a victim drained since), so an empty steal
+            // must not block stealing from the next-heaviest one.  Only
+            // the destination excludes itself: an idle-book entry no
+            // longer implies an empty bank (a mixed cluster's PE reports
+            // idle while the FC sub-queue is deep), so other idle-book
+            // residents stay eligible as victims — the mask-filtered
+            // stealable counts weed out the futile ones.
+            let mut excluded = HashSet::from([idle_c]);
             while let Some(victim) =
-                choose_victim_weighted(&lens, &loads, &excluded, policy.min_victim_len)
+                choose_victim_weighted(&stealable, &loads, &excluded, policy.min_victim_len)
             {
-                let n = steal_amount(queues[victim].len());
-                let stolen = queues[victim].steal_where(n, |t| cap.supports_index(t.class_index()));
+                let n = steal_amount(stealable[victim]);
+                let stolen = queues[victim].steal_where(n, cap);
                 if stolen.is_empty() {
                     excluded.insert(victim);
                     continue;
@@ -400,13 +415,13 @@ mod tests {
 
     #[test]
     fn thief_moves_jobs_to_idle_cluster() {
-        let q0: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
-        let q1: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
+        let q0: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
+        let q1: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
         for i in 0..10 {
             q1.push(i);
         }
         let thief = Thief::spawn(vec![Arc::clone(&q0), Arc::clone(&q1)]);
-        thief.sender().send(ThiefMsg::ClusterIdle(0)).unwrap();
+        thief.sender().send(ThiefMsg::ClusterIdle(0, ClassMask::all())).unwrap();
         // Wait for the stealer to act.
         let deadline = std::time::Instant::now() + Duration::from_secs(2);
         while q0.is_empty() && std::time::Instant::now() < deadline {
@@ -434,20 +449,20 @@ mod tests {
 
     #[test]
     fn capability_mask_filters_stolen_classes() {
-        let q0: Arc<JobQueue<CJob>> = Arc::new(JobQueue::new());
-        let q1: Arc<JobQueue<CJob>> = Arc::new(JobQueue::new());
+        let q0: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
+        let q1: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
         // Victim holds a mix of CONV-tile (0) and FC (1) jobs.
         for i in 0..6 {
             q1.push(CJob(i, (i % 2) as usize));
         }
-        // Destination cluster 0 only supports CONV tiles.
+        // Destination cluster 0 only accepts CONV tiles.
         let thief = Thief::spawn_with_caps(
             vec![Arc::clone(&q0), Arc::clone(&q1)],
             StealPolicy::default(),
             vec![ClassMask::of(&[JobClass::ConvTile]), ClassMask::all()],
             vec![1.0, 1.0],
         );
-        thief.sender().send(ThiefMsg::ClusterIdle(0)).unwrap();
+        thief.sender().send(ThiefMsg::ClusterIdle(0, ClassMask::all())).unwrap();
         let deadline = std::time::Instant::now() + Duration::from_secs(2);
         while q0.is_empty() && std::time::Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(1));
@@ -456,28 +471,25 @@ mod tests {
         assert!(!q0.is_empty(), "thief should have moved CONV jobs");
         // Everything deposited on cluster 0 is CONV-class.
         q0.close();
-        while let Some(j) = q0.pop_blocking() {
+        while let Some(j) = q0.try_pop_any(ClassMask::all()) {
             assert_eq!(j.class_index(), 0, "FC job stolen into CONV-only cluster");
         }
         // No FC job left cluster 1.
-        q1.close();
-        let mut fc_left = 0;
-        while let Some(j) = q1.pop_blocking() {
-            if j.class_index() == 1 {
-                fc_left += 1;
-            }
-        }
-        assert_eq!(fc_left, 3, "FC jobs must stay on the capable cluster");
+        assert_eq!(
+            q1.class_counts()[1], 3,
+            "FC jobs must stay on the capable cluster"
+        );
     }
 
     #[test]
     fn thief_falls_back_past_unstealable_victims() {
-        // Victim 1 ranks heaviest (all FC jobs, cost 4.0) but holds
-        // nothing the CONV-only destination can run; the thief must fall
-        // back to victim 2's CONV backlog instead of starving cluster 0.
-        let q0: Arc<JobQueue<CJob>> = Arc::new(JobQueue::new());
-        let q1: Arc<JobQueue<CJob>> = Arc::new(JobQueue::new());
-        let q2: Arc<JobQueue<CJob>> = Arc::new(JobQueue::new());
+        // Victim 1 ranks heaviest by raw length (all FC jobs) but holds
+        // nothing the CONV-only destination accepts — its *stealable*
+        // backlog is zero, so the per-sub-queue selection must go straight
+        // to victim 2's CONV backlog instead of starving cluster 0.
+        let q0: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
+        let q1: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
+        let q2: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
         for i in 0..8 {
             q1.push(CJob(i, 1)); // FC class
         }
@@ -494,7 +506,7 @@ mod tests {
             ],
             vec![1.0, 1.0, 1.0],
         );
-        thief.sender().send(ThiefMsg::ClusterIdle(0)).unwrap();
+        thief.sender().send(ThiefMsg::ClusterIdle(0, ClassMask::all())).unwrap();
         let deadline = std::time::Instant::now() + Duration::from_secs(2);
         while q0.is_empty() && std::time::Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(1));
@@ -502,10 +514,84 @@ mod tests {
         thief.shutdown();
         assert!(!q0.is_empty(), "thief starved behind an unstealable victim");
         q0.close();
-        while let Some(j) = q0.pop_blocking() {
+        while let Some(j) = q0.try_pop_any(ClassMask::all()) {
             assert_eq!(j.class_index(), 0);
         }
         assert_eq!(q1.len(), 8, "FC backlog must be untouched");
+    }
+
+    #[test]
+    fn idle_book_residents_with_stealable_backlog_are_still_robbed() {
+        // Cluster 1's CONV-only member reports idle while the cluster's
+        // FC backlog is deep — an idle-book entry no longer implies an
+        // empty bank, so cluster 0's idle NEON must still rob cluster 1
+        // (regression: excluding every idle-book cluster as a victim).
+        let q0: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
+        let q1: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
+        for i in 0..6 {
+            q1.push(CJob(i, 1)); // FC backlog
+        }
+        let thief = Thief::spawn_with_caps(
+            vec![Arc::clone(&q0), Arc::clone(&q1)],
+            StealPolicy::default(),
+            vec![ClassMask::all(), ClassMask::all()],
+            vec![1.0, 1.0],
+        );
+        let conv_only = ClassMask::of(&[JobClass::ConvTile]);
+        thief.sender().send(ThiefMsg::ClusterIdle(1, conv_only)).unwrap();
+        thief
+            .sender()
+            .send(ThiefMsg::ClusterIdle(0, ClassMask::all()))
+            .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while q0.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        thief.shutdown();
+        assert!(
+            !q0.is_empty(),
+            "idle-book exclusion starved a capable idle member"
+        );
+        assert_eq!(q0.len() + q1.len(), 6, "no loss, no duplication");
+    }
+
+    #[test]
+    fn steal_filter_honors_idle_members_mask_not_cluster_union() {
+        // Destination cluster 0 ACCEPTS everything (it has some FC-capable
+        // member), but the member reporting idle is CONV-only — the thief
+        // must not park FC work behind cluster 0's busy FC members.
+        let q0: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
+        let q1: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
+        for i in 0..4 {
+            q1.push(CJob(i, 0)); // CONV
+        }
+        for i in 0..4 {
+            q1.push(CJob(10 + i, 1)); // FC
+        }
+        let thief = Thief::spawn_with_caps(
+            vec![Arc::clone(&q0), Arc::clone(&q1)],
+            StealPolicy::default(),
+            vec![ClassMask::all(), ClassMask::all()],
+            vec![1.0, 1.0],
+        );
+        thief
+            .sender()
+            .send(ThiefMsg::ClusterIdle(
+                0,
+                ClassMask::of(&[JobClass::ConvTile]),
+            ))
+            .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while q0.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        thief.shutdown();
+        assert!(!q0.is_empty(), "thief should have moved CONV jobs");
+        q0.close();
+        while let Some(j) = q0.try_pop_any(ClassMask::all()) {
+            assert_eq!(j.class_index(), 0, "stole outside the idle member's mask");
+        }
+        assert_eq!(q1.class_counts()[1], 4, "FC backlog must stay put");
     }
 
     #[test]
@@ -518,8 +604,8 @@ mod tests {
 
     #[test]
     fn batched_policy_thief_leaves_small_victims_alone() {
-        let q0: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
-        let q1: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
+        let q0: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
+        let q1: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
         for i in 0..4 {
             q1.push(i);
         }
@@ -528,7 +614,7 @@ mod tests {
             vec![Arc::clone(&q0), Arc::clone(&q1)],
             StealPolicy::batched(16),
         );
-        thief.sender().send(ThiefMsg::ClusterIdle(0)).unwrap();
+        thief.sender().send(ThiefMsg::ClusterIdle(0, ClassMask::all())).unwrap();
         std::thread::sleep(Duration::from_millis(20));
         assert!(q0.is_empty(), "thief stole below the batch threshold");
         assert_eq!(q1.len(), 4);
@@ -537,9 +623,9 @@ mod tests {
 
     #[test]
     fn thief_ignores_out_of_range_and_shuts_down() {
-        let q0: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
+        let q0: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
         let thief = Thief::spawn(vec![Arc::clone(&q0)]);
-        thief.sender().send(ThiefMsg::ClusterIdle(99)).unwrap();
+        thief.sender().send(ThiefMsg::ClusterIdle(99, ClassMask::all())).unwrap();
         thief.sender().send(ThiefMsg::ClusterBusy(0)).unwrap();
         std::thread::sleep(Duration::from_millis(5));
         thief.shutdown(); // must not hang

@@ -70,6 +70,7 @@ impl StatsCollector {
             max_queue_depth: self.max_queue_depth.load(Ordering::Relaxed),
             jobs_executed: pool.jobs_executed,
             per_class_jobs: pool.per_class_jobs,
+            inline_fallbacks: pool.inline_fallbacks,
             jobs_stolen: pool.jobs_stolen,
             steal_attempts: pool.steal_attempts,
         }
@@ -102,6 +103,9 @@ pub struct ServerStats {
     pub jobs_executed: u64,
     /// Jobs per class ([`JobClass`] dense order).
     pub per_class_jobs: [u64; JobClass::COUNT],
+    /// Jobs computed inline because no pool member supported the class —
+    /// zero on any pool with a NEON-class member.
+    pub inline_fallbacks: u64,
     pub jobs_stolen: u64,
     pub steal_attempts: u64,
 }
@@ -133,6 +137,10 @@ impl ServerStats {
                 self.per_class_jobs[class.index()].to_string(),
             ]);
         }
+        t.row(vec![
+            "jobs inline-fallback".into(),
+            self.inline_fallbacks.to_string(),
+        ]);
         t.row(vec!["jobs stolen".into(), self.jobs_stolen.to_string()]);
         t.row(vec![
             "steal attempts".into(),

@@ -3,13 +3,24 @@
 //! Models the complete Synergy runtime in virtual time:
 //! * frames stream through mailbox-connected **layer stages** (each stage
 //!   processes one frame at a time — one software thread per layer);
-//! * stage CPU work (im2col, pooling, FC, …) is served FIFO by `cpu_cores`
-//!   ARM cores ([`CpuModel`]);
-//! * CONV GEMMs become **jobs** dispatched to the mapped cluster's queue;
-//!   accelerators pull jobs, their service time combining the HLS compute
-//!   model ([`PerfModel`]) with queued MMU/DDR transfers ([`MemSubsystem`]);
-//! * idle clusters **steal** from the busiest victim when the mapping is
-//!   [`Mapping::WorkStealing`] (paper §3.1.3).
+//! * stage CPU work (pooling, batchnorm, softmax, …) is served FIFO by
+//!   `cpu_cores` ARM cores ([`CpuModel`]);
+//! * **all three job classes** flow through the cluster queues, mirroring
+//!   the unified pool: CONV GEMMs lower to tile jobs, and FC GEMMs /
+//!   im2col lowering dispatch as whole-matrix jobs to clusters with a
+//!   NEON-class member (member-level capability: FPGA PEs only speak CONV
+//!   tiles, so FC/im2col service time competes for the NEON members).
+//!   When no capable accelerator exists (CPU-only baseline, FPGA-only
+//!   ablation) those classes run on the CPU cores exactly as the original
+//!   Darknet would;
+//! * accelerator service time combines the HLS compute model
+//!   ([`PerfModel`]) with queued MMU/DDR transfers ([`MemSubsystem`]);
+//!   FC/im2col jobs are charged their [`CpuModel`] seconds scaled by the
+//!   serving member's NEON-relative rate (a NEON software accelerator *is*
+//!   an ARM core running NEON kernels);
+//! * idle accelerators **steal** jobs their hardware class can execute
+//!   from the busiest victim when the mapping is [`Mapping::WorkStealing`]
+//!   (paper §3.1.3).
 //!
 //! Every §4 experiment is a [`SimSpec`] variation: baselines drop
 //! accelerator classes, SF/SC pin layers to clusters, non-pipelined mode
@@ -18,9 +29,12 @@
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashSet, VecDeque};
 
-use crate::accel::{build_clusters, filter_clusters, AccelSpec, ClusterSpec};
+use crate::accel::{
+    build_clusters, filter_clusters, hw_class_mask, AccelSpec, ClusterSpec, PerfModel,
+};
 use crate::config::HwConfig;
 use crate::memsub::MemSubsystem;
+use crate::mm::job::JobClass;
 use crate::nn::network::Shape;
 use crate::nn::Network;
 use crate::sched::{static_map, worksteal, Mapping};
@@ -134,6 +148,9 @@ pub struct SimResult {
     /// Sustained GOP/s given the model's MOP/frame.
     pub gops: f64,
     pub jobs_executed: u64,
+    /// Executed jobs per class ([`JobClass`] dense order) — the unified
+    /// pool's per-class accounting, mirrored by the virtual clock.
+    pub jobs_by_class: [u64; JobClass::COUNT],
     pub jobs_stolen: u64,
     pub mem_queue_s: f64,
     pub mem_bytes: u64,
@@ -180,10 +197,15 @@ impl Ord for Ev {
 enum Cont {
     /// Stage's CPU work finished → stage complete.
     StageDone,
-    /// CONV im2col finished → dispatch jobs (or run CPU GEMM).
+    /// CONV im2col finished on the CPU → dispatch tile jobs (or run the
+    /// CPU GEMM in the baseline).
     ConvDispatch { conv_ord: usize },
     /// CPU GEMM finished → run post segment.
     ConvGemmDone { conv_ord: usize },
+    /// Stage preamble finished → dispatch the im2col pool job.
+    Im2colDispatch { conv_ord: usize },
+    /// Stage preamble finished → dispatch the FC-GEMM pool job.
+    FcDispatch,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -197,8 +219,16 @@ struct CpuTask {
 #[derive(Debug, Clone, Copy)]
 struct SimJob {
     frame: usize,
+    /// Owning network layer (FC completion routes through it).
+    layer: usize,
+    /// CONV ordinal for ConvTile / Im2col jobs; unused for FC.
     conv_ord: usize,
+    class: JobClass,
+    /// Inner-tile count (ConvTile service + MMU traffic).
     k: usize,
+    /// Single-A9-core seconds of this job's work (FC / im2col service
+    /// basis on NEON-class members).
+    cpu_seconds: f64,
 }
 
 // ------------------------------------------------------------- simulator
@@ -241,7 +271,12 @@ struct Sim<'a> {
     conv_remaining: Vec<Vec<usize>>, // [frame][conv_ord]
     conv_va: Vec<u64>,               // col buffer VA per conv ordinal
     jobs_executed: u64,
+    jobs_by_class: [u64; JobClass::COUNT],
     jobs_stolen: u64,
+    /// Reference k-step time of a plain NEON at this clock: FC/im2col
+    /// cpu-seconds scale by `accel.kstep / neon_ref` (1.0 on a NEON,
+    /// <1 on a faster big-core member).
+    neon_ref_kstep: f64,
 
     completed: usize,
 }
@@ -288,10 +323,53 @@ impl<'a> Sim<'a> {
             conv_remaining: vec![vec![0; convs.len()]; spec.frames],
             conv_va,
             jobs_executed: 0,
+            jobs_by_class: [0; JobClass::COUNT],
             jobs_stolen: 0,
+            neon_ref_kstep: PerfModel::neon(spec.hw.tile_size, spec.hw.cpu_mhz).kstep_seconds,
             completed: 0,
             accels,
         }
+    }
+
+    /// Whether `class` jobs go to the accelerator pool: some accelerator's
+    /// hardware class must execute it (CPU-only baselines and FPGA-only
+    /// ablations keep FC/im2col on the ARM cores).
+    fn pool_serves(&self, class: JobClass) -> bool {
+        !self.spec.conv_on_cpu
+            && self
+                .accels
+                .iter()
+                .any(|a| hw_class_mask(&a.class).supports(class))
+    }
+
+    /// Destination cluster for a `class` job: the mapping hint when its
+    /// cluster has a capable member, else the capable cluster with the
+    /// smallest backlog per unit of capable-member service rate.  Using
+    /// the *total* queue length matches the dispatcher's `member_load`:
+    /// the members capable of FC/im2col are NEON-class (full masks), so
+    /// their drain set — the backlog competing with the new job — is the
+    /// whole bank there too.
+    fn route_job(&self, class: JobClass, preferred: Option<usize>) -> Option<usize> {
+        if let Some(p) = preferred {
+            if self
+                .spec
+                .clusters
+                .get(p)
+                .is_some_and(|c| c.throughput_for(class) > 0.0)
+            {
+                return Some(p);
+            }
+        }
+        self.spec
+            .clusters
+            .iter()
+            .filter(|c| c.throughput_for(class) > 0.0)
+            .min_by(|a, b| {
+                let la = self.queues[a.index].len() as f64 / a.throughput_for(class);
+                let lb = self.queues[b.index].len() as f64 / b.throughput_for(class);
+                la.partial_cmp(&lb).unwrap_or(Ordering::Equal)
+            })
+            .map(|c| c.index)
     }
 
     fn push_ev(&mut self, t: f64, kind: EvKind) {
@@ -340,21 +418,33 @@ impl<'a> Sim<'a> {
         };
         let spec = &self.net.config.layers[layer];
         let (mut pre, _gemm, _post) = self.cpu.layer_segments(spec, in_shape);
-        if layer == 0 {
-            // Input normalization preprocessing (paper §3.1.4).
-            pre += self.cpu.normalize_seconds(in_shape.len());
-        }
-        let cont = if spec.is_conv() {
+        let mut cont = Cont::StageDone;
+        if spec.is_conv() {
             let conv_ord = self
                 .net
                 .conv_infos()
                 .iter()
                 .position(|ci| ci.layer_idx == layer)
                 .expect("conv ordinal");
-            Cont::ConvDispatch { conv_ord }
-        } else {
-            Cont::StageDone
-        };
+            if self.pool_serves(JobClass::Im2col) {
+                // im2col runs as a pool job on a NEON-class member; the
+                // stage's CPU preamble is only the (layer-0) normalize.
+                pre = 0.0;
+                cont = Cont::Im2colDispatch { conv_ord };
+            } else {
+                cont = Cont::ConvDispatch { conv_ord };
+            }
+        } else if matches!(spec, crate::config::LayerSpec::Connected { .. })
+            && self.pool_serves(JobClass::FcGemm)
+        {
+            // The FC GEMM is a pool job; nothing left for the CPU.
+            pre = 0.0;
+            cont = Cont::FcDispatch;
+        }
+        if layer == 0 {
+            // Input normalization preprocessing (paper §3.1.4).
+            pre += self.cpu.normalize_seconds(in_shape.len());
+        }
         self.schedule_cpu(CpuTask {
             frame,
             layer,
@@ -388,6 +478,10 @@ impl<'a> Sim<'a> {
             Cont::StageDone => self.complete_stage(task.frame, task.layer),
             Cont::ConvDispatch { conv_ord } => self.dispatch_conv(task.frame, task.layer, conv_ord),
             Cont::ConvGemmDone { conv_ord } => self.conv_post(task.frame, task.layer, conv_ord),
+            Cont::Im2colDispatch { conv_ord } => {
+                self.dispatch_im2col(task.frame, task.layer, conv_ord)
+            }
+            Cont::FcDispatch => self.dispatch_fc(task.frame, task.layer),
         }
     }
 
@@ -412,10 +506,59 @@ impl<'a> Sim<'a> {
         for _ in 0..n_jobs {
             self.queues[cluster].push_back(SimJob {
                 frame,
+                layer,
                 conv_ord,
+                class: JobClass::ConvTile,
                 k: grid.k_tiles(),
+                cpu_seconds: 0.0,
             });
         }
+        self.kick_all();
+    }
+
+    /// Lower one CONV input as an im2col pool job on a NEON-capable
+    /// cluster (preferring the CONV layer's mapped cluster).
+    fn dispatch_im2col(&mut self, frame: usize, layer: usize, conv_ord: usize) {
+        let info = &self.net.conv_infos()[conv_ord];
+        let (c, _h, _w) = info.in_shape;
+        let (_oc, oh, ow) = info.out_shape;
+        let seconds = self.cpu.im2col_seconds(c, info.size, oh, ow);
+        let preferred = self.spec.mapping.assignment()[conv_ord].min(self.queues.len() - 1);
+        let cluster = self
+            .route_job(JobClass::Im2col, Some(preferred))
+            .expect("pool_serves(Im2col) checked at stage start");
+        self.queues[cluster].push_back(SimJob {
+            frame,
+            layer,
+            conv_ord,
+            class: JobClass::Im2col,
+            k: 0,
+            cpu_seconds: seconds,
+        });
+        self.kick_all();
+    }
+
+    /// Dispatch one FC-layer GEMM as a pool job on a NEON-capable cluster.
+    fn dispatch_fc(&mut self, frame: usize, layer: usize) {
+        let in_n = if layer == 0 {
+            let (c, h, w) = self.net.input_shape();
+            c * h * w
+        } else {
+            self.net.shapes[layer - 1].len()
+        };
+        let out_n = self.net.shapes[layer].len();
+        let seconds = self.cpu.fc_seconds(in_n, out_n);
+        let cluster = self
+            .route_job(JobClass::FcGemm, None)
+            .expect("pool_serves(FcGemm) checked at stage start");
+        self.queues[cluster].push_back(SimJob {
+            frame,
+            layer,
+            conv_ord: usize::MAX,
+            class: JobClass::FcGemm,
+            k: 0,
+            cpu_seconds: seconds,
+        });
         self.kick_all();
     }
 
@@ -460,26 +603,52 @@ impl<'a> Sim<'a> {
     }
 
     fn try_dispatch(&mut self, accel_idx: usize) {
-        let cluster = self.accels[accel_idx].cluster;
-        if self.queues[cluster].is_empty() && self.spec.mapping.steals() {
-            self.steal_into(cluster);
+        // A completion continuation (im2col → tile dispatch → kick_all)
+        // may have already re-armed this accelerator.
+        if self.accel_job[accel_idx].is_some() {
+            return;
         }
-        let Some(job) = self.queues[cluster].pop_front() else {
+        let cluster = self.accels[accel_idx].cluster;
+        let mask = hw_class_mask(&self.accels[accel_idx].class);
+        // Member-level pop: take the first queued job this accelerator's
+        // hardware class can execute (an FPGA PE skips past FC/im2col
+        // jobs, which the cluster's NEON members will drain).
+        let mut pos = self.queues[cluster]
+            .iter()
+            .position(|j| mask.supports(j.class));
+        if pos.is_none() && self.spec.mapping.steals() {
+            self.steal_into(cluster, accel_idx);
+            pos = self.queues[cluster]
+                .iter()
+                .position(|j| mask.supports(j.class));
+        }
+        let Some(pos) = pos else {
             return;
         };
+        let job = self.queues[cluster].remove(pos).expect("position valid");
         let accel = &self.accels[accel_idx];
-        let compute = accel.perf.compute_seconds(job.k);
-        let done = if accel.perf.uses_fpga_mmu {
-            let bytes = job.k as u64 * accel.perf.bytes_per_kstep;
-            let va = self.conv_va[job.conv_ord];
-            let fetch_done = self
-                .memsub
-                .transfer(accel.mmu.unwrap_or(0), va, bytes, self.now);
-            let wb = accel.perf.writeback_bytes as f64
-                / (self.spec.hw.memsub.ddr_bytes_per_cycle * self.spec.hw.fpga_mhz * 1e6);
-            (self.now + compute).max(fetch_done) + wb
-        } else {
-            self.now + compute
+        let done = match job.class {
+            JobClass::ConvTile => {
+                let compute = accel.perf.compute_seconds(job.k);
+                if accel.perf.uses_fpga_mmu {
+                    let bytes = job.k as u64 * accel.perf.bytes_per_kstep;
+                    let va = self.conv_va[job.conv_ord];
+                    let fetch_done = self
+                        .memsub
+                        .transfer(accel.mmu.unwrap_or(0), va, bytes, self.now);
+                    let wb = accel.perf.writeback_bytes as f64
+                        / (self.spec.hw.memsub.ddr_bytes_per_cycle * self.spec.hw.fpga_mhz * 1e6);
+                    (self.now + compute).max(fetch_done) + wb
+                } else {
+                    self.now + compute
+                }
+            }
+            // FC / im2col: ARM-core seconds scaled by the member's
+            // NEON-relative rate (never lands on a PE — the mask above).
+            JobClass::FcGemm | JobClass::Im2col => {
+                let scale = accel.perf.kstep_seconds / self.neon_ref_kstep.max(1e-18);
+                self.now + accel.perf.job_overhead_seconds + job.cpu_seconds * scale
+            }
         };
         self.accel_job[accel_idx] = Some((job, self.now));
         self.cluster_mark(cluster, 1);
@@ -496,7 +665,9 @@ impl<'a> Sim<'a> {
             (self.cluster_active[cluster] as isize + delta).max(0) as usize;
     }
 
-    /// Steal from the busiest victim's queue into `cluster` (paper Fig 4).
+    /// Steal from the busiest victim's queue into `cluster` for the idle
+    /// accelerator `accel_idx` (paper Fig 4), filtered to the classes that
+    /// member's hardware can execute — an idle PE never pulls an FC job.
     ///
     /// The virtual-clock thief steals ONE job per idle accelerator wake-up
     /// (pull granularity): batch transfers strand work on slow clusters and
@@ -504,12 +675,22 @@ impl<'a> Sim<'a> {
     /// fed with exactly as much remote work as it can absorb.  (The
     /// threaded runtime's thief uses steal-half batches — the actual paper
     /// mechanism — since real queue hops have per-transfer costs.)
-    fn steal_into(&mut self, cluster: usize) {
-        let lens: Vec<usize> = self.queues.iter().map(|q| q.len()).collect();
+    fn steal_into(&mut self, cluster: usize, accel_idx: usize) {
+        let mask = hw_class_mask(&self.accels[accel_idx].class);
+        // Stealable backlog per victim: only the classes this member runs.
+        let lens: Vec<usize> = self
+            .queues
+            .iter()
+            .map(|q| q.iter().filter(|j| mask.supports(j.class)).count())
+            .collect();
         let mut idle = HashSet::new();
         idle.insert(cluster);
         if let Some(victim) = worksteal::choose_victim(&lens, &idle, 1) {
-            if let Some(job) = self.queues[victim].pop_back() {
+            if let Some(pos) = self.queues[victim]
+                .iter()
+                .rposition(|j| mask.supports(j.class))
+            {
+                let job = self.queues[victim].remove(pos).expect("position valid");
                 self.queues[cluster].push_back(job);
                 self.jobs_stolen += 1;
             }
@@ -522,15 +703,25 @@ impl<'a> Sim<'a> {
         self.accel_busy[accel_idx] += busy;
         let cluster = self.accels[accel_idx].cluster;
         self.cluster_mark(cluster, -1);
-        self.cluster_layer_busy[cluster][job.conv_ord] += busy;
+        if job.conv_ord != usize::MAX {
+            self.cluster_layer_busy[cluster][job.conv_ord] += busy;
+        }
         self.jobs_executed += 1;
+        self.jobs_by_class[job.class.index()] += 1;
 
-        let rem = &mut self.conv_remaining[job.frame][job.conv_ord];
-        debug_assert!(*rem > 0);
-        *rem -= 1;
-        if *rem == 0 {
-            let layer = self.net.conv_infos()[job.conv_ord].layer_idx;
-            self.conv_post(job.frame, layer, job.conv_ord);
+        match job.class {
+            JobClass::ConvTile => {
+                let rem = &mut self.conv_remaining[job.frame][job.conv_ord];
+                debug_assert!(*rem > 0);
+                *rem -= 1;
+                if *rem == 0 {
+                    self.conv_post(job.frame, job.layer, job.conv_ord);
+                }
+            }
+            // im2col done → the CONV GEMM's tile jobs can now dispatch.
+            JobClass::Im2col => self.dispatch_conv(job.frame, job.layer, job.conv_ord),
+            // FC GEMM is the whole stage's work.
+            JobClass::FcGemm => self.complete_stage(job.frame, job.layer),
         }
         self.try_dispatch(accel_idx);
     }
@@ -626,6 +817,7 @@ impl<'a> Sim<'a> {
             energy,
             gops: self.net.mops() * fps / 1e3,
             jobs_executed: self.jobs_executed,
+            jobs_by_class: self.jobs_by_class,
             jobs_stolen: self.jobs_stolen,
             mem_queue_s: self.memsub.stats.queue_seconds,
             mem_bytes: self.memsub.stats.bytes,
@@ -671,8 +863,10 @@ mod tests {
             let base = simulate(&SimSpec::cpu_only(&n, 8), &n);
             let syn = simulate(&SimSpec::synergy(&n, 30), &n);
             let speedup = syn.fps / base.fps;
+            // Upper edge widened from 15 when FC/im2col moved off the
+            // pipeline cores onto the pool (PR 3).
             assert!(
-                (3.0..15.0).contains(&speedup),
+                (3.0..20.0).contains(&speedup),
                 "{name}: speedup {speedup} (syn {} vs base {})",
                 syn.fps,
                 base.fps
@@ -705,13 +899,36 @@ mod tests {
         let n = net("mnist");
         let frames = 10;
         let r = simulate(&SimSpec::synergy(&n, frames), &n);
-        let expected: usize = n
-            .conv_infos()
-            .iter()
-            .map(|ci| ci.grid.num_jobs())
-            .sum::<usize>()
-            * frames;
+        // The simulator mirrors the unified pool: CONV tiles, one im2col
+        // job per CONV layer, one FC job per connected layer.
+        let profile = n.pool_job_profile();
+        let expected: usize = profile.iter().sum::<usize>() * frames;
         assert_eq!(r.jobs_executed, expected as u64);
+        for class in JobClass::ALL {
+            assert_eq!(
+                r.jobs_by_class[class.index()],
+                (profile[class.index()] * frames) as u64,
+                "{}",
+                class.label()
+            );
+        }
+    }
+
+    #[test]
+    fn fpga_only_ablation_keeps_fc_on_cpu() {
+        let n = net("mnist");
+        let r = simulate(
+            &SimSpec::synergy(&n, 10).with_accels(&n, |a| a.is_fpga()),
+            &n,
+        );
+        // PEs only speak CONV tiles: FC/im2col stay on the ARM cores.
+        assert_eq!(r.jobs_by_class[JobClass::FcGemm.index()], 0);
+        assert_eq!(r.jobs_by_class[JobClass::Im2col.index()], 0);
+        let conv_jobs: usize = n.conv_infos().iter().map(|ci| ci.grid.num_jobs()).sum();
+        assert_eq!(
+            r.jobs_by_class[JobClass::ConvTile.index()],
+            (conv_jobs * 10) as u64
+        );
     }
 
     #[test]
@@ -727,12 +944,13 @@ mod tests {
     #[test]
     fn throughput_in_paper_band() {
         // Paper: 39.5–136.4 fps across the zoo; we accept a widened band
-        // (shape-level reproduction).
+        // (shape-level reproduction; upper edge widened again when the
+        // FC/im2col stage work moved off the pipeline cores, PR 3).
         for name in zoo::ZOO {
             let n = net(name);
             let r = simulate(&SimSpec::synergy(&n, 30), &n);
             assert!(
-                (25.0..260.0).contains(&r.fps),
+                (25.0..320.0).contains(&r.fps),
                 "{name}: fps {}",
                 r.fps
             );

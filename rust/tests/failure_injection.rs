@@ -5,12 +5,17 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use synergy::cluster::JobQueue;
+use anyhow::Result;
+use synergy::accel::{Accelerator, NativeGemm};
+use synergy::cluster::{JobQueue, QueueBank};
 use synergy::config::{zoo, HwConfig, NetConfig};
 use synergy::hwgen;
+use synergy::mm::job::{ClassMask, Job, JobClass, JobResult};
 use synergy::nn::Network;
+use synergy::rt::delegate::{self, DelegateStats, RtJob};
 use synergy::runtime::{Manifest, PeEngine};
 use synergy::sched::worksteal::{Thief, ThiefMsg};
+use synergy::util::rng::XorShift64Star;
 
 #[test]
 fn queue_closed_while_consumers_blocked_unblocks_all() {
@@ -30,29 +35,165 @@ fn queue_closed_while_consumers_blocked_unblocks_all() {
 
 #[test]
 fn thief_survives_queues_closed_under_it() {
-    let q0: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
-    let q1: Arc<JobQueue<u32>> = Arc::new(JobQueue::new());
+    let q0: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
+    let q1: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
     for i in 0..100 {
         q1.push(i);
     }
     let thief = Thief::spawn(vec![Arc::clone(&q0), Arc::clone(&q1)]);
     let tx = thief.sender();
-    // close the destination queue, then demand steals into it
+    // close the destination bank, then demand steals into it
     q0.close();
     for _ in 0..10 {
-        tx.send(ThiefMsg::ClusterIdle(0)).unwrap();
+        tx.send(ThiefMsg::ClusterIdle(0, ClassMask::all())).unwrap();
     }
     std::thread::sleep(Duration::from_millis(20));
     // jobs must not be lost: still in q1 OR rejected push left them stolen…
-    // the contract is: push_batch to a closed queue returns false and the
+    // the contract is: push_batch to a closed bank returns false and the
     // thief does not count it as success; nothing hangs.
     thief.shutdown();
     q1.close();
     let mut drained = 0;
-    while q1.pop_blocking().is_some() {
+    while q1.try_pop_any(ClassMask::all()).is_some() {
         drained += 1;
     }
     assert!(drained <= 100);
+}
+
+/// A PE backend that dies after `fail_after` jobs — the injected failure.
+struct FlakyPe {
+    remaining: usize,
+}
+
+impl Accelerator for FlakyPe {
+    fn id(&self) -> &str {
+        "flaky-pe"
+    }
+
+    fn supports(&self, class: JobClass) -> bool {
+        class == JobClass::ConvTile
+    }
+
+    fn execute(&mut self, job: &Job) -> Result<JobResult> {
+        if self.remaining == 0 {
+            anyhow::bail!("injected PE failure");
+        }
+        self.remaining -= 1;
+        Ok(job.execute_native())
+    }
+}
+
+/// Mixed-cluster failure: the cluster's only PE member dies mid-run.  The
+/// NEON member shares the same bank through its own mask, so FC/im2col
+/// service must continue with zero lost jobs — only the conv job the PE
+/// was holding can be dropped.
+#[test]
+fn pe_death_does_not_lose_fc_or_im2col_jobs() {
+    let bank: Arc<QueueBank<RtJob>> = Arc::new(QueueBank::new());
+
+    // The PE member: conv-only mask, fails on its 4th job.
+    let pe_stats = Arc::new(DelegateStats::default());
+    let pe_handle = delegate::spawn(
+        "flaky-pe".into(),
+        0,
+        Arc::clone(&bank),
+        ClassMask::of(&[JobClass::ConvTile]),
+        || Ok(Box::new(FlakyPe { remaining: 3 }) as Box<dyn Accelerator>),
+        None,
+        Arc::clone(&pe_stats),
+        0,
+    );
+    // The NEON member: restricted here to FC + im2col so the division of
+    // labor (and therefore the failure blast radius) is deterministic.
+    let neon_stats = Arc::new(DelegateStats::default());
+    let neon_handle = delegate::spawn(
+        "neon".into(),
+        0,
+        Arc::clone(&bank),
+        ClassMask::of(&[JobClass::FcGemm, JobClass::Im2col]),
+        || Ok(Box::new(NativeGemm) as Box<dyn Accelerator>),
+        None,
+        Arc::clone(&neon_stats),
+        0,
+    );
+
+    // 6 conv jobs (the PE dies on the 4th) + a continuing FC/im2col load.
+    let (conv_tx, conv_rx) = std::sync::mpsc::channel();
+    let grid = synergy::mm::TileGrid::new(32, 64, 32, 32);
+    let a = Arc::new(XorShift64Star::new(1).fill_f32(32 * 64, 1.0));
+    let b = Arc::new(XorShift64Star::new(2).fill_f32(64 * 32, 1.0));
+    let mut id = 0;
+    for _ in 0..6 {
+        let jobs =
+            synergy::mm::job::jobs_for_gemm(0, 0, grid, Arc::clone(&a), Arc::clone(&b), &mut id);
+        for job in jobs {
+            bank.push(RtJob {
+                job,
+                reply: conv_tx.clone(),
+            });
+        }
+    }
+    let (fcim_tx, fcim_rx) = std::sync::mpsc::channel();
+    let n_fc = 8;
+    let n_im2col = 8;
+    for i in 0..n_fc {
+        let w = Arc::new(XorShift64Star::new(100 + i).fill_f32(16 * 24, 1.0));
+        let x = Arc::new(XorShift64Star::new(200 + i).fill_f32(24, 1.0));
+        bank.push(RtJob {
+            job: Job::fc(id, 1, i, 16, 24, w, x, 32),
+            reply: fcim_tx.clone(),
+        });
+        id += 1;
+    }
+    for i in 0..n_im2col {
+        let input = Arc::new(XorShift64Star::new(300 + i).fill_f32(3 * 8 * 8, 1.0));
+        bank.push(RtJob {
+            job: Job::im2col(id, 0, i, (3, 8, 8), 3, 1, 1, input, 32),
+            reply: fcim_tx.clone(),
+        });
+        id += 1;
+    }
+    drop(conv_tx);
+    drop(fcim_tx);
+
+    // Every FC and im2col job completes — the PE's death is invisible to
+    // the classes the NEON member serves.
+    let mut fcim_done = 0;
+    for _ in 0..(n_fc + n_im2col) {
+        fcim_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("FC/im2col job lost after PE death");
+        fcim_done += 1;
+    }
+    assert_eq!(fcim_done, n_fc + n_im2col);
+
+    // The PE executed exactly 3 conv jobs, then died holding the 4th; the
+    // remaining conv jobs sit in the bank (no capable member left), and
+    // nothing else was dropped.
+    let mut conv_done = 0;
+    while conv_rx.recv_timeout(Duration::from_millis(100)).is_ok() {
+        conv_done += 1;
+    }
+    assert_eq!(conv_done, 3, "PE must have served 3 conv jobs before dying");
+    let err = pe_handle.join().unwrap().expect_err("PE must die");
+    assert!(err.to_string().contains("injected"), "{err}");
+    assert_eq!(pe_stats.jobs_by_class()[JobClass::ConvTile.index()], 3);
+    assert_eq!(pe_stats.jobs.load(std::sync::atomic::Ordering::Relaxed), 3);
+
+    // The NEON member is still alive and serving; shut it down cleanly.
+    bank.close();
+    neon_handle.join().unwrap().unwrap();
+    let by_class = neon_stats.jobs_by_class();
+    assert_eq!(by_class[JobClass::FcGemm.index()], n_fc);
+    assert_eq!(by_class[JobClass::Im2col.index()], n_im2col);
+    assert_eq!(by_class[JobClass::ConvTile.index()], 0);
+    // 6 GEMM pushes × 1 tile each = 6 conv jobs; 3 executed, 1 died
+    // in-flight, 2 still queued.
+    assert_eq!(
+        bank.class_counts()[JobClass::ConvTile.index()],
+        2,
+        "undrained conv backlog after close"
+    );
 }
 
 #[test]

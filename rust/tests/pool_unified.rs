@@ -57,11 +57,12 @@ fn fc_layers_execute_on_the_pool_not_inline() {
         report.per_accel_jobs.iter().sum::<u64>(),
         report.jobs_executed
     );
-    // Every job of every class went through the pool.
+    // Every job of every class went through the pool — never inline.
     assert_eq!(
         report.jobs_executed,
         (profile.iter().sum::<usize>() * n_frames) as u64
     );
+    assert_eq!(report.inline_fallbacks, 0);
 }
 
 /// Steal accounting stays consistent across backend classes: the per-class
@@ -113,4 +114,16 @@ fn steal_accounting_consistent_across_classes() {
         report.per_class_jobs.iter().sum::<u64>(),
         report.jobs_executed
     );
+    // Dispatch accounting: everything handed to the banks was executed
+    // (drained before shutdown), and nothing ran inline.
+    assert_eq!(report.dispatched_by_class, report.per_class_jobs);
+    assert_eq!(report.inline_fallbacks, 0);
+    // Per-member class counters fold to the per-class totals.
+    let mut folded = [0u64; synergy::mm::JobClass::COUNT];
+    for accel in &report.per_accel_by_class {
+        for (acc, n) in folded.iter_mut().zip(accel) {
+            *acc += n;
+        }
+    }
+    assert_eq!(folded, report.per_class_jobs);
 }

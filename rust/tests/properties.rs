@@ -6,10 +6,10 @@
 use std::collections::HashSet;
 use std::sync::Arc;
 
-use synergy::cluster::JobQueue;
+use synergy::cluster::{JobQueue, QueueBank};
 use synergy::config::zoo;
 use synergy::mm::gemm::gemm_naive;
-use synergy::mm::job::{gather_results, jobs_for_gemm};
+use synergy::mm::job::{gather_results, jobs_for_gemm, ClassMask, Classed, JobClass};
 use synergy::mm::tile::{tiled_gemm, TileGrid};
 use synergy::nn::Network;
 use synergy::pipeline::Mailbox;
@@ -147,6 +147,117 @@ fn prop_choose_victim_never_picks_idle_or_short() {
     });
 }
 
+/// Bank-test item: (id, class index).
+struct BItem(u64, usize);
+impl Classed for BItem {
+    fn class_index(&self) -> usize {
+        self.1
+    }
+}
+
+/// Random mask that is never empty (an empty mask trivially pops nothing).
+fn random_mask(g: &mut Gen) -> ClassMask {
+    loop {
+        let classes: Vec<JobClass> = JobClass::ALL
+            .into_iter()
+            .filter(|_| g.bool())
+            .collect();
+        if !classes.is_empty() {
+            return ClassMask::of(&classes);
+        }
+    }
+}
+
+#[test]
+fn prop_bank_pop_and_steal_respect_masks_without_starvation() {
+    check("bank-mask", 40, |g: &mut Gen| {
+        let bank: QueueBank<BItem> = QueueBank::new();
+        let mut pushed_per_class = [0usize; JobClass::COUNT];
+        let mut id = 0u64;
+        for class in 0..JobClass::COUNT {
+            for _ in 0..g.usize_in(0, 20) {
+                bank.push(BItem(id, class));
+                pushed_per_class[class] += 1;
+                id += 1;
+            }
+        }
+        let mask = random_mask(g);
+
+        // A few steals first: stolen items must match the mask, and
+        // sub-queues outside the mask must be untouched.
+        let before = bank.class_counts();
+        let stolen = bank.steal_where(g.usize_in(0, 10), mask);
+        for item in &stolen {
+            assert!(mask.supports_index(item.class_index()), "steal leaked class");
+        }
+        let after_steal = bank.class_counts();
+        for i in 0..JobClass::COUNT {
+            if !mask.supports_index(i) {
+                assert_eq!(before[i], after_steal[i], "class {i} disturbed by steal");
+            }
+        }
+
+        // Drain through pop_any: only masked classes, bounded bypass — a
+        // non-empty eligible sub-queue is served within COUNT pops.
+        let mut popped = 0usize;
+        loop {
+            let counts = bank.class_counts();
+            let eligible_nonempty: Vec<usize> = (0..JobClass::COUNT)
+                .filter(|&i| mask.supports_index(i) && counts[i] > 0)
+                .collect();
+            let Some(item) = bank.try_pop_any(mask) else {
+                assert!(eligible_nonempty.is_empty(), "pop starved {eligible_nonempty:?}");
+                break;
+            };
+            assert!(mask.supports_index(item.class_index()), "pop leaked class");
+            popped += 1;
+        }
+        // Conservation: masked classes fully drained (popped + stolen),
+        // unmasked classes untouched.
+        let final_counts = bank.class_counts();
+        let mut stolen_per_class = [0usize; JobClass::COUNT];
+        for item in &stolen {
+            stolen_per_class[item.class_index()] += 1;
+        }
+        let mut expect_popped = 0usize;
+        for i in 0..JobClass::COUNT {
+            if mask.supports_index(i) {
+                assert_eq!(final_counts[i], 0, "eligible class {i} starved");
+                expect_popped += pushed_per_class[i] - stolen_per_class[i];
+            } else {
+                assert_eq!(final_counts[i], pushed_per_class[i]);
+                assert_eq!(stolen_per_class[i], 0);
+            }
+        }
+        assert_eq!(popped, expect_popped, "pop lost or duplicated items");
+    });
+}
+
+#[test]
+fn prop_bank_round_robin_bounded_bypass() {
+    check("bank-bypass", 30, |g: &mut Gen| {
+        let bank: QueueBank<BItem> = QueueBank::new();
+        // A deep backlog on one random class plus one item on another:
+        // the singleton must surface within JobClass::COUNT pops of the
+        // union mask, despite the deep competitor.
+        let deep = g.usize_in(0, JobClass::COUNT - 1);
+        let single = (deep + g.usize_in(1, JobClass::COUNT - 1)) % JobClass::COUNT;
+        for i in 0..g.usize_in(4, 30) {
+            bank.push(BItem(i as u64, deep));
+        }
+        bank.push(BItem(999, single));
+        let mut gap = 0;
+        loop {
+            let item = bank.try_pop_any(ClassMask::all()).expect("non-empty");
+            if item.class_index() == single {
+                break;
+            }
+            gap += 1;
+            assert!(gap < JobClass::COUNT, "class {single} bypassed {gap} times");
+        }
+    });
+}
+
 #[test]
 fn prop_queue_fifo_per_producer() {
     check("queue-fifo", 20, |g: &mut Gen| {
@@ -238,13 +349,19 @@ fn prop_sim_conserves_jobs_and_is_deterministic() {
             SimSpec::static_fixed(net, frames)
         };
         let r1 = simulate(&spec, net);
-        let expected: usize = net
-            .conv_infos()
-            .iter()
-            .map(|ci| ci.grid.num_jobs())
-            .sum::<usize>()
-            * frames;
+        // The simulator mirrors the unified pool: CONV tiles + one
+        // im2col job per CONV layer + one FC job per connected layer.
+        let profile = net.pool_job_profile();
+        let expected: usize = profile.iter().sum::<usize>() * frames;
         assert_eq!(r1.jobs_executed, expected as u64, "job conservation");
+        for class in JobClass::ALL {
+            assert_eq!(
+                r1.jobs_by_class[class.index()],
+                (profile[class.index()] * frames) as u64,
+                "{}",
+                class.label()
+            );
+        }
         // determinism
         let r2 = simulate(&spec, net);
         assert_eq!(r1.makespan_s, r2.makespan_s);

@@ -78,7 +78,7 @@ fn pjrt_pipeline_matches_reference_and_oracle() {
 
     // vs AOT model oracle through PJRT (frame 0)
     let oracle = ModelOracle::load(&default_artifacts_dir(), "mpcnn").unwrap();
-    let params: Vec<&[f32]> = net.params.iter().map(|p| p.tensor.data()).collect();
+    let params: Vec<&[f32]> = net.params.iter().map(|p| p.data()).collect();
     let x = net.make_input(0);
     let oracle_out = oracle.run(x.data(), &params).unwrap();
     let got = &report.outputs[0].1;
@@ -117,11 +117,9 @@ fn pjrt_pipeline_mnist_stream_with_stealing() {
             out.max_abs_diff(&want)
         );
     }
-    let expected: usize = net
-        .conv_infos()
-        .iter()
-        .map(|ci| ci.grid.num_jobs())
-        .sum::<usize>()
-        * 3;
+    // Member-level routing: ALL classes are pool jobs even in PJRT mode
+    // (the NEON members of the mixed cluster serve FC/im2col).
+    let expected: usize = net.pool_job_profile().iter().sum::<usize>() * 3;
     assert_eq!(report.jobs_executed, expected as u64);
+    assert_eq!(report.inline_fallbacks, 0);
 }

@@ -119,11 +119,11 @@ fn model_oracle_case(name: &str, tol: f32) {
     for (meta, param) in oracle.meta.params.iter().zip(&net.params) {
         assert_eq!(meta.layer, param.layer, "{name}");
         assert_eq!(meta.name, param.name, "{name}");
-        assert_eq!(meta.len(), param.tensor.len(), "{name}");
+        assert_eq!(meta.len(), param.len(), "{name}");
     }
 
     let x = net.make_input(0);
-    let params: Vec<&[f32]> = net.params.iter().map(|p| p.tensor.data()).collect();
+    let params: Vec<&[f32]> = net.params.iter().map(|p| p.data()).collect();
     let pjrt = oracle.run(x.data(), &params).unwrap();
     let rust = net.forward_reference(&x);
 

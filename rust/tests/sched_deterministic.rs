@@ -1,0 +1,363 @@
+//! Deterministic scheduling harness: a seeded, virtual-time, single-
+//! threaded model of the member-level pool that pins the scheduler's
+//! invariants down with real [`Job`] values — no OS threads, no timing
+//! races, every run reproducible from its seed.
+//!
+//! Invariants proven over randomized mixed-cluster topologies:
+//! * **(a) per-class job conservation** — submitted = executed
+//!   (+ stolen-then-executed), per class, and every job id exactly once;
+//! * **(b) no inline fallback** whenever at least one member anywhere
+//!   supports the class (and exactly one fallback per job whose class no
+//!   member supports);
+//! * **(c) steal accounting balance** — what the thief reports moved
+//!   equals what the victims' sub-queues lost, per class.
+//!
+//! The second half drives the *real* `DelegatePool` with a NEON+PE mixed
+//! cluster in PJRT-stub mode (the acceptance scenario): FC and im2col
+//! jobs must execute on NEON members with the inline-fallback counter at
+//! zero.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+
+use synergy::cluster::QueueBank;
+use synergy::config::zoo;
+use synergy::mm::job::{jobs_for_gemm, ClassMask, Classed, Job, JobClass};
+use synergy::mm::TileGrid;
+use synergy::nn::Network;
+use synergy::rt::{ComputeMode, DelegatePool, PoolOptions, PoolRouter};
+use synergy::sched::static_map;
+use synergy::sched::worksteal::{choose_victim_weighted, steal_amount, StealPolicy};
+use synergy::util::proptest::{check, Gen};
+
+/// One simulated member: capability mask, service rate (k-steps per
+/// virtual second), and per-class execution counters.
+struct Member {
+    cluster: usize,
+    caps: ClassMask,
+    rate: f64,
+    busy_until: f64,
+    executed_by_class: [u64; JobClass::COUNT],
+}
+
+/// Random mixed-cluster topology: 1–3 clusters, each 1–3 members that are
+/// either CONV-only "PEs" or all-class "NEONs" with differing rates.
+fn random_topology(g: &mut Gen) -> (Vec<Arc<QueueBank<Job>>>, Vec<Member>) {
+    let n_clusters = g.usize_in(1, 3);
+    let banks: Vec<Arc<QueueBank<Job>>> =
+        (0..n_clusters).map(|_| Arc::new(QueueBank::new())).collect();
+    let mut members = Vec::new();
+    for cluster in 0..n_clusters {
+        for _ in 0..g.usize_in(1, 3) {
+            let is_pe = g.bool();
+            members.push(Member {
+                cluster,
+                caps: if is_pe {
+                    ClassMask::of(&[JobClass::ConvTile])
+                } else {
+                    ClassMask::all()
+                },
+                // PEs drain faster, like the hardware.
+                rate: if is_pe { 4.0 } else { 1.0 } * (1 + g.usize_in(0, 2)) as f64,
+                busy_until: 0.0,
+                executed_by_class: [0; JobClass::COUNT],
+            });
+        }
+    }
+    (banks, members)
+}
+
+/// Generate a random job of `class` with tiny operands (real numerics,
+/// cheap to execute if anyone wants to) and a unique id.
+fn random_job(g: &mut Gen, class: JobClass, id: &mut u64) -> Vec<Job> {
+    match class {
+        JobClass::ConvTile => {
+            let grid = TileGrid::new(g.usize_in(1, 8), g.usize_in(1, 8), g.usize_in(1, 8), 8);
+            let a = Arc::new(vec![0.5f32; grid.m * grid.n]);
+            let b = Arc::new(vec![0.25f32; grid.n * grid.p]);
+            jobs_for_gemm(0, 0, grid, a, b, id)
+        }
+        JobClass::FcGemm => {
+            let (out_n, in_n) = (g.usize_in(1, 8), g.usize_in(1, 8));
+            let w = Arc::new(vec![1.0f32; out_n * in_n]);
+            let x = Arc::new(vec![1.0f32; in_n]);
+            let job = Job::fc(*id, 0, 0, out_n, in_n, w, x, 8);
+            *id += 1;
+            vec![job]
+        }
+        JobClass::Im2col => {
+            let (c, h, w) = (g.usize_in(1, 3), g.usize_in(3, 6), g.usize_in(3, 6));
+            let input = Arc::new(vec![0.0f32; c * h * w]);
+            let job = Job::im2col(*id, 0, 0, (c, h, w), 3, 1, 1, input, 8);
+            *id += 1;
+            vec![job]
+        }
+    }
+}
+
+/// The dispatcher's routing rule, mirrored over the harness topology:
+/// any cluster with a capable member, least virtual load first.
+fn route(banks: &[Arc<QueueBank<Job>>], members: &[Member], class: JobClass) -> Option<usize> {
+    (0..banks.len())
+        .filter(|&c| {
+            members
+                .iter()
+                .any(|m| m.cluster == c && m.caps.supports(class))
+        })
+        .min_by(|&a, &b| {
+            let la = banks[a].len();
+            let lb = banks[b].len();
+            la.cmp(&lb)
+        })
+}
+
+#[test]
+fn deterministic_harness_conserves_jobs_and_never_falls_back() {
+    check("sched-deterministic", 25, |g: &mut Gen| {
+        let (banks, mut members) = random_topology(g);
+        let n_clusters = banks.len();
+        let policy = StealPolicy::default();
+        // Per-cluster accept masks (union) and service rates, exactly as
+        // DelegatePool::start derives them.
+        let accepts: Vec<ClassMask> = (0..n_clusters)
+            .map(|c| {
+                members
+                    .iter()
+                    .filter(|m| m.cluster == c)
+                    .fold(ClassMask::NONE, |acc, m| acc.union(m.caps))
+            })
+            .collect();
+        let rates: Vec<f64> = (0..n_clusters)
+            .map(|c| {
+                members
+                    .iter()
+                    .filter(|m| m.cluster == c)
+                    .map(|m| m.rate)
+                    .sum()
+            })
+            .collect();
+
+        // --- submit -------------------------------------------------
+        let mut next_id = 0u64;
+        let mut submitted_by_class = [0u64; JobClass::COUNT];
+        let mut submitted_ids = HashSet::new();
+        let mut inline_fallbacks = 0u64;
+        let mut unsupported_jobs = 0u64;
+        for _ in 0..g.usize_in(5, 40) {
+            let class = *g.choose(&JobClass::ALL);
+            for job in random_job(g, class, &mut next_id) {
+                let supported = members.iter().any(|m| m.caps.supports(class));
+                match route(&banks, &members, class) {
+                    Some(cluster) => {
+                        assert!(supported, "route() invented a capable member");
+                        assert!(submitted_ids.insert(job.desc.job_id));
+                        submitted_by_class[class.index()] += 1;
+                        banks[cluster].push(job);
+                    }
+                    None => {
+                        // Invariant (b): fallback fires ONLY when no
+                        // member of the whole topology supports it.
+                        assert!(
+                            !supported,
+                            "inline fallback with a capable member present"
+                        );
+                        unsupported_jobs += 1;
+                        inline_fallbacks += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(inline_fallbacks, unsupported_jobs);
+
+        // --- virtual-time execution + thief ------------------------
+        let mut thief_moved_by_class = [0u64; JobClass::COUNT];
+        let mut victim_lost_by_class = [0u64; JobClass::COUNT];
+        let mut executed_ids = HashSet::new();
+        let mut clock = 0.0f64;
+        let mut steps = 0u64;
+        loop {
+            steps += 1;
+            assert!(steps < 1_000_000, "harness failed to converge (scheduler bug)");
+            // Next free member (deterministic tie-break by index) pops
+            // from its own cluster's bank through its own mask.
+            let Some(mi) = (0..members.len()).min_by(|&a, &b| {
+                members[a]
+                    .busy_until
+                    .partial_cmp(&members[b].busy_until)
+                    .unwrap()
+                    .then(a.cmp(&b))
+            }) else {
+                break;
+            };
+            clock = clock.max(members[mi].busy_until);
+            let cluster = members[mi].cluster;
+            let caps = members[mi].caps;
+            if let Some(job) = banks[cluster].try_pop_any(caps) {
+                let class = job.class();
+                assert!(
+                    caps.supports(class),
+                    "member popped a class outside its mask"
+                );
+                assert!(executed_ids.insert(job.desc.job_id), "job executed twice");
+                members[mi].executed_by_class[class.index()] += 1;
+                members[mi].busy_until = clock + job.ksteps() as f64 / members[mi].rate;
+                continue;
+            }
+            // Member idle → one thief pass for its cluster, with the
+            // idle member's mask intersected with the destination accept
+            // union (exactly the thief-loop math).
+            let counts: Vec<[usize; JobClass::COUNT]> =
+                banks.iter().map(|b| b.class_counts()).collect();
+            let cap = accepts[cluster].intersect(caps);
+            let stealable: Vec<usize> = counts
+                .iter()
+                .map(|c| {
+                    c.iter()
+                        .enumerate()
+                        .filter(|(i, _)| cap.supports_index(*i))
+                        .map(|(_, &n)| n)
+                        .sum()
+                })
+                .collect();
+            let loads: Vec<f64> = counts
+                .iter()
+                .zip(&rates)
+                .map(|(c, rate)| {
+                    c.iter()
+                        .enumerate()
+                        .filter(|(i, _)| cap.supports_index(*i))
+                        .map(|(i, &n)| n as f64 * policy.class_cost[i])
+                        .sum::<f64>()
+                        / rate.max(1e-12)
+                })
+                .collect();
+            let mut idle = HashSet::new();
+            idle.insert(cluster);
+            let Some(victim) =
+                choose_victim_weighted(&stealable, &loads, &idle, policy.min_victim_len)
+            else {
+                // Nothing stealable anywhere: this member is done.  If
+                // every member is done and the banks hold only jobs no
+                // one can serve, we are finished (none exist: submission
+                // only enqueued routable jobs).
+                if banks.iter().all(|b| b.is_empty()) {
+                    break;
+                }
+                // Jobs remain but not for this member's cluster right
+                // now; park it past the current horizon.
+                let horizon = members
+                    .iter()
+                    .map(|m| m.busy_until)
+                    .fold(clock, f64::max);
+                members[mi].busy_until = horizon + 1e-9;
+                continue;
+            };
+            let before = banks[victim].class_counts();
+            let stolen = banks[victim].steal_where(steal_amount(stealable[victim]), cap);
+            let after = banks[victim].class_counts();
+            // Invariant (c): thief-side and victim-side reports balance.
+            for (i, (b, a)) in before.iter().zip(&after).enumerate() {
+                victim_lost_by_class[i] += (b - a) as u64;
+            }
+            for job in &stolen {
+                assert!(cap.supports_index(job.class_index()), "steal leaked class");
+                thief_moved_by_class[job.class_index()] += 1;
+            }
+            banks[cluster].push_batch(stolen);
+        }
+
+        // --- invariants --------------------------------------------
+        // (c) steal accounting balances between thief and victims.
+        assert_eq!(thief_moved_by_class, victim_lost_by_class);
+        // (a) per-class conservation: submitted = executed, every id once.
+        let mut executed_by_class = [0u64; JobClass::COUNT];
+        for m in &members {
+            for (acc, n) in executed_by_class.iter_mut().zip(&m.executed_by_class) {
+                *acc += n;
+            }
+            for class in JobClass::ALL {
+                assert!(
+                    m.caps.supports(class) || m.executed_by_class[class.index()] == 0,
+                    "member executed a class outside its mask"
+                );
+            }
+        }
+        assert_eq!(executed_by_class, submitted_by_class, "per-class conservation");
+        assert_eq!(executed_ids, submitted_ids, "job ids lost or duplicated");
+    });
+}
+
+/// Acceptance scenario on the real pool: the default ZC702 cluster-0 is a
+/// NEON+PE mixed cluster; under PJRT-stub mode (no `pjrt` feature — the
+/// PE backend computes natively but keeps its CONV-only capability mask)
+/// a full forward pass must execute its FC and im2col jobs on NEON
+/// members, with the inline-fallback counter at zero.
+#[test]
+fn mixed_cluster_pjrt_stub_full_forward_runs_fc_on_neon() {
+    let net = Arc::new(Network::new(zoo::load("mnist").unwrap(), 32).unwrap());
+    let options = PoolOptions::new(
+        synergy::config::HwConfig::default_zc702(),
+        ComputeMode::Pjrt,
+        true,
+    );
+    let pool = DelegatePool::start(&options).unwrap();
+    let accels = pool.accels();
+    let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
+    let router = PoolRouter::new(&net, pool.dispatcher(), &assignment);
+
+    let frames = 3u64;
+    for f in 0..frames {
+        let x = net.make_input(f);
+        let exec = router.frame(f);
+        let y = net.forward_with(&x, &exec);
+        let want = net.forward_reference(&x);
+        assert!(y.allclose(&want, 1e-4, 1e-5), "frame {f}: {}", y.max_abs_diff(&want));
+    }
+    let report = pool.shutdown().unwrap();
+
+    // The acceptance criteria, verbatim.
+    assert_eq!(report.inline_fallbacks, 0, "inline fallback must never trigger");
+    let profile = net.pool_job_profile();
+    assert_eq!(
+        report.per_class_jobs[JobClass::FcGemm.index()],
+        (profile[JobClass::FcGemm.index()] as u64) * frames
+    );
+    assert_eq!(
+        report.per_class_jobs[JobClass::Im2col.index()],
+        (profile[JobClass::Im2col.index()] as u64) * frames
+    );
+    // FC/im2col executed by NEON members (nonzero per-class delegate
+    // counters), and by nobody else.
+    let mut neon_fc = 0u64;
+    let mut neon_im2col = 0u64;
+    for accel in &accels {
+        let by_class = report.per_accel_by_class[accel.id];
+        if accel.is_fpga() {
+            assert_eq!(
+                by_class[JobClass::FcGemm.index()] + by_class[JobClass::Im2col.index()],
+                0,
+                "{} (CONV-only) executed a non-CONV job",
+                accel.name
+            );
+        } else {
+            neon_fc += by_class[JobClass::FcGemm.index()];
+            neon_im2col += by_class[JobClass::Im2col.index()];
+        }
+    }
+    assert!(neon_fc > 0, "NEON members never executed an FC job");
+    assert!(neon_im2col > 0, "NEON members never executed an im2col job");
+    // Steal accounting balances per class, and no stolen class exceeds
+    // what was dispatched.
+    assert_eq!(
+        report.stolen_by_class.iter().sum::<u64>(),
+        report.jobs_stolen
+    );
+    for class in JobClass::ALL {
+        assert!(
+            report.stolen_by_class[class.index()] <= report.per_class_jobs[class.index()],
+            "{}: stolen more than dispatched",
+            class.label()
+        );
+    }
+    assert_eq!(report.dispatched_by_class, report.per_class_jobs);
+}

@@ -98,6 +98,7 @@ fn two_streams_two_networks_zero_loss_and_correct() {
         stats.per_class_jobs[synergy::mm::JobClass::FcGemm.index()],
         expected_fc
     );
+    assert_eq!(stats.inline_fallbacks, 0, "serving must never compute inline");
 }
 
 #[test]
