@@ -5,9 +5,11 @@
 
 use std::sync::Arc;
 
+use synergy::accel::{Accelerator, BigNeonGemm, NativeGemm};
 use synergy::cluster::JobQueue;
 use synergy::config::zoo;
 use synergy::mm::gemm::{gemm_blocked, gemm_naive};
+use synergy::mm::job::{pack_fc_columns, Job};
 use synergy::mm::tile::{job_mm_native, TileGrid};
 use synergy::nn::im2col::im2col;
 use synergy::nn::Network;
@@ -86,6 +88,70 @@ fn main() {
         std::hint::black_box(mb.recv());
     });
     table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.2} Mhops/s", 1.0 / 1e6 / (r.mean_ns / 1e9))]);
+
+    // Fused-vs-per-sample FC sweep (the batch-level FC fusion claim):
+    // one (OUT,IN)×(IN,B) FcGemmBatch job vs B single-column FC jobs, on
+    // the plain NEON backend and on the persistent big-NEON team.  The
+    // "throughput" column reports the fused path's speedup over the
+    // per-sample path at each B.
+    let (out_n, in_n) = (128, 3136); // mnist fc1 geometry
+    let w = Arc::new(XorShift64Star::new(40).fill_f32(out_n * in_n, 1.0));
+    let xs: Vec<Vec<f32>> = (0..16)
+        .map(|j| XorShift64Star::new(50 + j).fill_f32(in_n, 1.0))
+        .collect();
+    let mut backends: Vec<(&str, Box<dyn Accelerator>)> = vec![
+        ("neon", Box::new(NativeGemm)),
+        ("big-neon x4", Box::new(BigNeonGemm::new(4))),
+    ];
+    for (label, backend) in &mut backends {
+        for bsz in [1usize, 2, 4, 8, 16] {
+            let cols: Vec<&[f32]> = xs[..bsz].iter().map(|x| x.as_slice()).collect();
+            let fused_job = Job::fc_batch(
+                0,
+                0,
+                0,
+                out_n,
+                in_n,
+                bsz,
+                Arc::clone(&w),
+                Arc::new(pack_fc_columns(&cols)),
+                32,
+            );
+            let single_jobs: Vec<Job> = (0..bsz)
+                .map(|j| {
+                    Job::fc(
+                        j as u64,
+                        0,
+                        0,
+                        out_n,
+                        in_n,
+                        Arc::clone(&w),
+                        Arc::new(xs[j].clone()),
+                        32,
+                    )
+                })
+                .collect();
+            let per_sample = b.run(&format!("fc per-sample B={bsz} ({label})"), || {
+                for job in &single_jobs {
+                    std::hint::black_box(backend.execute(job).unwrap());
+                }
+            });
+            let fused = b.run(&format!("fc fused B={bsz} ({label})"), || {
+                std::hint::black_box(backend.execute(&fused_job).unwrap());
+            });
+            table.row(vec![
+                per_sample.name.clone(),
+                fmt(per_sample.mean_us()),
+                String::from("-"),
+            ]);
+            table.row(vec![
+                fused.name.clone(),
+                fmt(fused.mean_us()),
+                format!("{:.2}x vs per-sample", per_sample.mean_ns / fused.mean_ns),
+            ]);
+        }
+    }
+    drop(backends); // join the big-NEON team before the pipeline run
 
     // End-to-end native pipeline throughput (host wall clock, mpcnn).
     let net = Arc::new(Network::new(zoo::load("mpcnn").unwrap(), 32).unwrap());

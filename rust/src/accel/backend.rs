@@ -8,7 +8,8 @@
 //!
 //! * [`NativeGemm`] — the blocked-GEMM "NEON" software accelerator;
 //! * [`BigNeonGemm`] — a multi-threaded tiled-SIMD GEMM modelling a
-//!   big-core NEON cluster (row-chunked [`gemm_blocked_mt`]);
+//!   big-core NEON cluster, fanning each job's output rows across a
+//!   **persistent worker team** built once per delegate;
 //! * `PjrtPe` — the FPGA PE path: the AOT Pallas job kernel through PJRT
 //!   (compiled under the `pjrt` cargo feature; without it the registry
 //!   entry falls back to [`NativeGemm`]).
@@ -18,10 +19,9 @@
 //! accelerator class resolves to a registry key
 //! (see `rt::pool`), so a future backend (GPU, remote shard) plugs in by
 //! registering a name — no driver rewrite.
-//!
-//! [`gemm_blocked_mt`]: crate::mm::gemm::gemm_blocked_mt
 
 use std::path::PathBuf;
+use std::sync::mpsc;
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -74,51 +74,202 @@ impl Accelerator for NativeGemm {
 }
 
 /// A big-core NEON cluster: `threads` cores running the row-chunked
-/// multi-threaded tiled-SIMD GEMM.  GEMM work — whole-matrix FC jobs and
-/// CONV tiles alike — fans its output rows across the cores (keeping the
-/// backend consistent with `PerfModel::big_neon`'s thread-scaled rate);
-/// im2col is pure data movement and runs on one core.
+/// multi-threaded tiled-SIMD GEMM.  GEMM work — whole-matrix FC jobs,
+/// fused batched-FC jobs, and CONV tiles alike — fans its output rows
+/// across the cores (keeping the backend consistent with
+/// `PerfModel::big_neon`'s thread-scaled rate); im2col is pure data
+/// movement and runs on one core.
 ///
-/// Fan-out only pays above [`MT_MIN_MACS`]: scoped spawn+join costs tens
-/// of µs, so small jobs run single-core (a persistent per-backend worker
-/// team that removes this threshold is a ROADMAP item).
+/// The fan-out runs on a **persistent worker team** built once per
+/// delegate (`threads − 1` parked worker threads plus the delegate thread
+/// itself as worker 0): each job sends the workers a row-range work
+/// descriptor over their channels and gathers the finished chunks, so the
+/// per-job cost is a channel hop instead of the old scoped spawn+join.
+/// That is why the old `MT_MIN_MACS` fan-out threshold is gone — even a
+/// modest fused FC batch fans out profitably.
 pub struct BigNeonGemm {
-    pub threads: usize,
+    threads: usize,
+    workers: Vec<TeamWorker>,
 }
 
-/// Minimum MACs before [`BigNeonGemm`] fans a job across its thread team
-/// (~1 MMAC ≈ hundreds of µs of work: enough to amortize spawn+join).
-pub const MT_MIN_MACS: u64 = 1 << 20;
+/// One parked team member: its work-order channel and join handle.
+struct TeamWorker {
+    orders: mpsc::Sender<WorkOrder>,
+    handle: std::thread::JoinHandle<()>,
+}
 
-/// Row-parallel CONV-tile kernel over packed (K,TS,TS) operands: thread
-/// `t` owns a contiguous row range of the output tile and runs the shared
-/// [`gemm_blocked_into`] kernel over its slice of every inner tile — same
-/// per-row accumulation order as the single-core path, and one GEMM
-/// kernel to maintain.
+/// A work order: the descriptor plus the channel the finished chunk goes
+/// back on.
+struct WorkOrder {
+    desc: WorkDesc,
+    done: mpsc::Sender<(usize, Vec<f32>)>,
+}
+
+/// One worker's share of a fanned-out job: a contiguous output-row range.
+/// Operands ride in `Arc`s (shared with the job / the other workers);
+/// every chunk runs the same [`gemm_blocked_into`] kernel over its rows,
+/// so per-row accumulation order — and therefore the f32 result — is
+/// identical to the single-core path regardless of the split.
 ///
 /// [`gemm_blocked_into`]: crate::mm::gemm::gemm_blocked_into
-fn conv_tile_mt(at: &[f32], bt: &[f32], k_tiles: usize, ts: usize, threads: usize) -> Vec<f32> {
-    let threads = threads.clamp(1, ts);
-    if threads == 1 {
-        return crate::mm::tile::job_mm_native(at, bt, k_tiles, ts);
-    }
-    let mut c = vec![0.0f32; ts * ts];
-    let rows_per = ts.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (i, c_chunk) in c.chunks_mut(rows_per * ts).enumerate() {
-            let r0 = i * rows_per;
-            s.spawn(move || {
-                let rows = c_chunk.len() / ts;
-                for kt in 0..k_tiles {
-                    let tile = kt * ts * ts;
-                    let a_sub = &at[tile + r0 * ts..tile + (r0 + rows) * ts];
-                    let b_tile = &bt[tile..tile + ts * ts];
-                    crate::mm::gemm::gemm_blocked_into(a_sub, b_tile, c_chunk, rows, ts, ts);
-                }
-            });
+enum WorkDesc {
+    /// Rows `row0..row0+rows` of C(M,P) = A(M,N)·B(N,P).
+    Rows {
+        a: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
+        row0: usize,
+        rows: usize,
+        n: usize,
+        p: usize,
+        chunk: usize,
+    },
+    /// Rows `row0..row0+rows` of a CONV output tile over packed (K,TS,TS)
+    /// operands, accumulating across the K inner tiles.
+    TileRows {
+        at: Arc<Vec<f32>>,
+        bt: Arc<Vec<f32>>,
+        k_tiles: usize,
+        ts: usize,
+        row0: usize,
+        rows: usize,
+        chunk: usize,
+    },
+}
+
+/// Execute one work descriptor (runs on a worker or the delegate thread).
+fn run_order(desc: &WorkDesc) -> (usize, Vec<f32>) {
+    match desc {
+        WorkDesc::Rows {
+            a,
+            b,
+            row0,
+            rows,
+            n,
+            p,
+            chunk,
+        } => {
+            let mut c = vec![0.0f32; rows * p];
+            crate::mm::gemm::gemm_blocked_into(
+                &a[row0 * n..(row0 + rows) * n],
+                b,
+                &mut c,
+                *rows,
+                *n,
+                *p,
+            );
+            (*chunk, c)
         }
-    });
-    c
+        WorkDesc::TileRows {
+            at,
+            bt,
+            k_tiles,
+            ts,
+            row0,
+            rows,
+            chunk,
+        } => {
+            let mut c = vec![0.0f32; rows * ts];
+            for kt in 0..*k_tiles {
+                let tile = kt * ts * ts;
+                crate::mm::gemm::gemm_blocked_into(
+                    &at[tile + row0 * ts..tile + (row0 + rows) * ts],
+                    &bt[tile..tile + ts * ts],
+                    &mut c,
+                    *rows,
+                    *ts,
+                    *ts,
+                );
+            }
+            (*chunk, c)
+        }
+    }
+}
+
+impl BigNeonGemm {
+    /// Build the backend and its persistent team: `threads − 1` parked
+    /// workers (the caller's thread is the team's worker 0).  Called from
+    /// inside the delegate thread by the registry builder, so each
+    /// delegate owns exactly one team for its lifetime.
+    pub fn new(threads: usize) -> BigNeonGemm {
+        let threads = threads.max(1);
+        let workers = (1..threads)
+            .map(|i| {
+                let (orders, rx) = mpsc::channel::<WorkOrder>();
+                let handle = std::thread::Builder::new()
+                    .name(format!("big-neon-worker-{i}"))
+                    .spawn(move || {
+                        // Park on the channel until an order (or team
+                        // teardown closes it).
+                        while let Ok(order) = rx.recv() {
+                            // The delegate may have given up on a job only
+                            // at teardown; a dead reply side is fine.
+                            let _ = order.done.send(run_order(&order.desc));
+                        }
+                    })
+                    .expect("spawn big-neon worker");
+                TeamWorker { orders, handle }
+            })
+            .collect();
+        BigNeonGemm { threads, workers }
+    }
+
+    /// Team width (cores modelled).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Fan `m` output rows across the team and gather the (m,`p`) result:
+    /// chunk 0 runs on the calling (delegate) thread while chunks 1..
+    /// run on the parked workers.  `mk` builds the descriptor for one
+    /// row range.
+    fn run_fanned(
+        &self,
+        m: usize,
+        p: usize,
+        mk: impl Fn(usize, usize, usize) -> WorkDesc,
+    ) -> Vec<f32> {
+        let parts = self.threads.clamp(1, m.max(1));
+        let rows_per = m.div_ceil(parts);
+        let n_chunks = m.div_ceil(rows_per.max(1)).max(1);
+        if n_chunks <= 1 || self.workers.is_empty() {
+            return run_order(&mk(0, m, 0)).1;
+        }
+        let mut c = vec![0.0f32; m * p];
+        let (done, done_rx) = mpsc::channel();
+        // parts ≤ threads ⇒ n_chunks − 1 ≤ workers.len(): one chunk per
+        // parked worker, no queuing behind a busy teammate.
+        for chunk in 1..n_chunks {
+            let row0 = chunk * rows_per;
+            let rows = rows_per.min(m - row0);
+            self.workers[chunk - 1]
+                .orders
+                .send(WorkOrder {
+                    desc: mk(row0, rows, chunk),
+                    done: done.clone(),
+                })
+                .expect("big-neon worker alive");
+        }
+        drop(done);
+        // Worker 0 (this thread) computes the first chunk concurrently.
+        let (_, first) = run_order(&mk(0, rows_per, 0));
+        c[..first.len()].copy_from_slice(&first);
+        for _ in 1..n_chunks {
+            let (chunk, data) = done_rx.recv().expect("big-neon worker result");
+            let off = chunk * rows_per * p;
+            c[off..off + data.len()].copy_from_slice(&data);
+        }
+        c
+    }
+}
+
+impl Drop for BigNeonGemm {
+    fn drop(&mut self) {
+        // Close each worker's order channel, then join it.
+        for w in self.workers.drain(..) {
+            drop(w.orders);
+            let _ = w.handle.join();
+        }
+    }
 }
 
 impl Accelerator for BigNeonGemm {
@@ -132,7 +283,7 @@ impl Accelerator for BigNeonGemm {
 
     fn cost(&self, job: &Job) -> f64 {
         match job.class() {
-            JobClass::FcGemm | JobClass::ConvTile => {
+            JobClass::FcGemm | JobClass::FcGemmBatch | JobClass::ConvTile => {
                 job.ksteps() as f64 / self.threads.max(1) as f64
             }
             JobClass::Im2col => job.ksteps() as f64,
@@ -141,29 +292,45 @@ impl Accelerator for BigNeonGemm {
 
     fn execute(&mut self, job: &Job) -> Result<JobResult> {
         let g = job.desc.grid;
-        match &job.kind {
-            JobKind::FcGemm { a, b } if (g.m * g.n * g.p) as u64 >= MT_MIN_MACS => {
-                let data =
-                    crate::mm::gemm::gemm_blocked_mt(a, b, g.m, g.n, g.p, self.threads);
-                Ok(JobResult {
-                    desc: job.desc,
-                    data,
+        let data = match &job.kind {
+            // Single-column FC, fused batched FC: fan the M output rows
+            // across the team.
+            JobKind::FcGemm { a, b } | JobKind::FcGemmBatch { a, b } => {
+                let (a, b) = (Arc::clone(a), Arc::clone(b));
+                let (n, p) = (g.n, g.p);
+                self.run_fanned(g.m, p, move |row0, rows, chunk| WorkDesc::Rows {
+                    a: Arc::clone(&a),
+                    b: Arc::clone(&b),
+                    row0,
+                    rows,
+                    n,
+                    p,
+                    chunk,
                 })
             }
-            JobKind::ConvTile { .. }
-                if (job.desc.k_tiles() * g.ts * g.ts * g.ts) as u64 >= MT_MIN_MACS =>
-            {
+            // CONV tile: fan the TS output rows, each chunk accumulating
+            // over the K inner tiles.
+            JobKind::ConvTile { .. } => {
                 let (at, bt) = job.pack_tiles();
-                let data =
-                    conv_tile_mt(&at, &bt, job.desc.k_tiles(), g.ts, self.threads);
-                Ok(JobResult {
-                    desc: job.desc,
-                    data,
+                let (at, bt) = (Arc::new(at), Arc::new(bt));
+                let (k_tiles, ts) = (job.desc.k_tiles(), g.ts);
+                self.run_fanned(ts, ts, move |row0, rows, chunk| WorkDesc::TileRows {
+                    at: Arc::clone(&at),
+                    bt: Arc::clone(&bt),
+                    k_tiles,
+                    ts,
+                    row0,
+                    rows,
+                    chunk,
                 })
             }
-            // Small GEMMs and im2col: single-core, fan-out would not pay.
-            _ => Ok(job.execute_native()),
-        }
+            // im2col is pure data movement: one core.
+            JobKind::Im2col { .. } => return Ok(job.execute_native()),
+        };
+        Ok(JobResult {
+            desc: job.desc,
+            data,
+        })
     }
 }
 
@@ -256,7 +423,9 @@ impl BackendRegistry {
         });
         let threads = big_threads.max(1);
         reg.register("big-neon", ClassMask::all(), move || {
-            Ok(Box::new(BigNeonGemm { threads }) as Box<dyn Accelerator>)
+            // Builder runs inside the delegate thread: one persistent
+            // worker team per delegate, alive for the delegate's lifetime.
+            Ok(Box::new(BigNeonGemm::new(threads)) as Box<dyn Accelerator>)
         });
         let art = artifacts;
         reg.register(
@@ -340,10 +509,11 @@ mod tests {
     }
 
     #[test]
-    fn big_neon_matches_native_on_every_class() {
-        let mut big = BigNeonGemm { threads: 4 };
+    fn big_neon_team_matches_native_on_every_class() {
+        let mut big = BigNeonGemm::new(4);
+        assert_eq!(big.threads(), 4);
         let mut native = NativeGemm;
-        // CONV tile jobs.
+        // CONV tile jobs — including ragged border tiles.
         let grid = TileGrid::new(40, 50, 60, 32);
         let a = std::sync::Arc::new(XorShift64Star::new(1).fill_f32(40 * 50, 1.0));
         let b = std::sync::Arc::new(XorShift64Star::new(2).fill_f32(50 * 60, 1.0));
@@ -353,27 +523,64 @@ mod tests {
             let y = native.execute(&job).unwrap();
             assert_eq!(x.data, y.data);
         }
-        // FC job: multi-threaded path, bit-identical to single-threaded.
-        // 2048×1024 ≥ MT_MIN_MACS, so this exercises the fan-out branch.
-        let (out_n, in_n) = (2048, 1024);
-        let w = std::sync::Arc::new(XorShift64Star::new(3).fill_f32(out_n * in_n, 1.0));
-        let x = std::sync::Arc::new(XorShift64Star::new(4).fill_f32(in_n, 1.0));
-        let job = Job::fc(0, 0, 0, out_n, in_n, w, x, 32);
-        assert!((out_n * in_n) as u64 >= MT_MIN_MACS);
-        assert!(big.cost(&job) < native.cost(&job));
+        // FC jobs fan out UNCONDITIONALLY on the persistent team — there
+        // is no minimum-size threshold anymore.  Small and large shapes,
+        // including m smaller than the team, all bit-match native.
+        for (out_n, in_n) in [(3, 7), (10, 20), (37, 83), (2048, 1024)] {
+            let w =
+                std::sync::Arc::new(XorShift64Star::new(3).fill_f32(out_n * in_n, 1.0));
+            let x = std::sync::Arc::new(XorShift64Star::new(4).fill_f32(in_n, 1.0));
+            let job = Job::fc(0, 0, 0, out_n, in_n, w, x, 32);
+            assert!(big.cost(&job) < native.cost(&job));
+            let got = big.execute(&job).unwrap();
+            let want = native.execute(&job).unwrap();
+            assert_eq!(got.data, want.data, "fc {out_n}x{in_n}");
+        }
+        // Fused batched-FC jobs ride the same fan-out.
+        let (out_n, in_n, batch) = (64, 128, 5);
+        let w = std::sync::Arc::new(XorShift64Star::new(5).fill_f32(out_n * in_n, 1.0));
+        let xb =
+            std::sync::Arc::new(XorShift64Star::new(6).fill_f32(in_n * batch, 1.0));
+        let job = Job::fc_batch(0, 0, 0, out_n, in_n, batch, w, xb, 32);
         let got = big.execute(&job).unwrap();
         let want = native.execute(&job).unwrap();
         assert_eq!(got.data, want.data);
 
-        // Heavy CONV tile (K=32 ⇒ 1 MMAC): exercises conv_tile_mt.
+        // Heavy CONV tile (K=32) exercises the per-chunk K accumulation.
         let grid = TileGrid::new(32, 1024, 32, 32);
-        let a = std::sync::Arc::new(XorShift64Star::new(5).fill_f32(32 * 1024, 1.0));
-        let b = std::sync::Arc::new(XorShift64Star::new(6).fill_f32(1024 * 32, 1.0));
+        let a = std::sync::Arc::new(XorShift64Star::new(7).fill_f32(32 * 1024, 1.0));
+        let b = std::sync::Arc::new(XorShift64Star::new(8).fill_f32(1024 * 32, 1.0));
         let mut id = 0;
         let jobs = jobs_for_gemm(0, 0, grid, a, b, &mut id);
-        assert!((jobs[0].desc.k_tiles() * 32 * 32 * 32) as u64 >= MT_MIN_MACS);
         let got = big.execute(&jobs[0]).unwrap();
         let want = native.execute(&jobs[0]).unwrap();
         assert_eq!(got.data, want.data);
+    }
+
+    /// The team survives many consecutive jobs (workers are reused, not
+    /// respawned) and tears down cleanly on drop.
+    #[test]
+    fn big_neon_team_is_reusable_and_drops_cleanly() {
+        let mut big = BigNeonGemm::new(3);
+        let w = std::sync::Arc::new(XorShift64Star::new(9).fill_f32(24 * 48, 1.0));
+        for i in 0..50u64 {
+            let x = std::sync::Arc::new(XorShift64Star::new(10 + i).fill_f32(48, 1.0));
+            let job = Job::fc(i, 0, 0, 24, 48, std::sync::Arc::clone(&w), x, 32);
+            let got = big.execute(&job).unwrap();
+            let want = job.execute_native();
+            assert_eq!(got.data, want.data, "job {i}");
+        }
+        drop(big); // joins the workers; a hang here fails the test harness
+    }
+
+    /// A single-thread team degrades to the plain kernel (no workers).
+    #[test]
+    fn big_neon_single_thread_has_no_workers() {
+        let mut big = BigNeonGemm::new(1);
+        let w = std::sync::Arc::new(XorShift64Star::new(11).fill_f32(8 * 8, 1.0));
+        let x = std::sync::Arc::new(XorShift64Star::new(12).fill_f32(8, 1.0));
+        let job = Job::fc(0, 0, 0, 8, 8, w, x, 32);
+        let got = big.execute(&job).unwrap();
+        assert_eq!(got.data, job.execute_native().data);
     }
 }

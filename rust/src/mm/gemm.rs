@@ -72,41 +72,6 @@ pub fn gemm_blocked_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize
     }
 }
 
-/// Multi-threaded blocked GEMM: C = A·B with the M dimension row-chunked
-/// across `threads` scoped OS threads (the big-core NEON-cluster backend).
-///
-/// Each thread owns a disjoint row range of A and C and runs the same
-/// [`gemm_blocked_into`] kernel over it, so per-row accumulation order —
-/// and therefore the f32 result — is bit-identical to the single-threaded
-/// [`gemm_blocked`].
-pub fn gemm_blocked_mt(
-    a: &[f32],
-    b: &[f32],
-    m: usize,
-    n: usize,
-    p: usize,
-    threads: usize,
-) -> Vec<f32> {
-    let mut c = vec![0.0f32; m * p];
-    if m == 0 || p == 0 {
-        return c; // degenerate GEMM: nothing to compute, avoid chunks_mut(0)
-    }
-    let threads = threads.clamp(1, m);
-    if threads == 1 {
-        gemm_blocked_into(a, b, &mut c, m, n, p);
-        return c;
-    }
-    let rows_per = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (i, c_chunk) in c.chunks_mut(rows_per * p).enumerate() {
-            let rows = c_chunk.len() / p;
-            let a_chunk = &a[i * rows_per * n..i * rows_per * n + rows * n];
-            s.spawn(move || gemm_blocked_into(a_chunk, b, c_chunk, rows, n, p));
-        }
-    });
-    c
-}
-
 /// FLOP count of an (m,n,p) GEMM (the paper's GOP accounting: 2·m·n·p).
 pub fn gemm_flops(m: usize, n: usize, p: usize) -> u64 {
     2 * m as u64 * n as u64 * p as u64
@@ -187,17 +152,6 @@ mod tests {
                 want.max_abs_diff(&got)
             );
         });
-    }
-
-    #[test]
-    fn mt_matches_single_threaded_bitwise() {
-        for (m, n, p, threads) in [(1, 300, 5, 4), (7, 64, 9, 3), (128, 257, 1, 4), (5, 5, 5, 16)] {
-            let a = rand(&[m, n], (m + n) as u64);
-            let b = rand(&[n, p], (n + p) as u64);
-            let want = gemm_blocked(&a, &b);
-            let got = gemm_blocked_mt(a.data(), b.data(), m, n, p, threads);
-            assert_eq!(want.data(), &got[..], "({m},{n},{p})x{threads}");
-        }
     }
 
     #[test]

@@ -11,7 +11,11 @@
 //! * [`JobClass::FcGemm`] — a whole fully-connected layer GEMM (previously
 //!   executed inline on the pipeline thread, the throughput killer the
 //!   mobile-SoC studies identify);
-//! * [`JobClass::Im2col`] — the im2col lowering of one CONV input.
+//! * [`JobClass::Im2col`] — the im2col lowering of one CONV input;
+//! * [`JobClass::FcGemmBatch`] — a micro-batch's worth of FC columns fused
+//!   into one (OUT,IN)×(IN,B) GEMM, so the serving path pays one dispatch
+//!   (and one big-NEON fan-out) per FC layer per *batch* instead of per
+//!   request.
 //!
 //! Jobs carry what the paper's `job_t` carries: operand "base addresses"
 //! (shared buffers), the matrix geometry, the tile index, and the owning
@@ -32,14 +36,21 @@ pub enum JobClass {
     FcGemm = 1,
     /// im2col lowering of one CONV-layer input frame.
     Im2col = 2,
+    /// A fused FC GEMM over a micro-batch: Y(OUT,B) = W(OUT,IN)·X(IN,B),
+    /// one activation column per request.
+    FcGemmBatch = 3,
 }
 
 impl JobClass {
     /// Number of job classes (array sizing for per-class accounting).
-    pub const COUNT: usize = 3;
+    pub const COUNT: usize = 4;
     /// Every class, in dense-index order.
-    pub const ALL: [JobClass; JobClass::COUNT] =
-        [JobClass::ConvTile, JobClass::FcGemm, JobClass::Im2col];
+    pub const ALL: [JobClass; JobClass::COUNT] = [
+        JobClass::ConvTile,
+        JobClass::FcGemm,
+        JobClass::Im2col,
+        JobClass::FcGemmBatch,
+    ];
 
     /// Dense index into per-class counter arrays.
     pub fn index(self) -> usize {
@@ -52,6 +63,7 @@ impl JobClass {
             JobClass::ConvTile => "conv-tile",
             JobClass::FcGemm => "fc-gemm",
             JobClass::Im2col => "im2col",
+            JobClass::FcGemmBatch => "fc-gemm-batch",
         }
     }
 }
@@ -182,11 +194,16 @@ pub enum JobKind {
     /// shared across the layer's jobs.
     ConvTile { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
     /// FC GEMM: A = weights (M×N), B = one activation column (N×1).
-    /// Batched FC (an (N,B) **column-major** B operand — NOT a
-    /// concatenation of per-request (1,N) rows) is future work; see the
-    /// ROADMAP fc-fusion item.  [`Job::fc`] rejects B ≠ one column so the
-    /// wrong layout cannot slip through silently.
+    /// [`Job::fc`] rejects B ≠ one column so a batched operand cannot slip
+    /// through the single-column path silently — batched FC has its own
+    /// variant below.
     FcGemm { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
+    /// Fused batched FC GEMM: A = weights (M×N), B = the row-major (N,B)
+    /// operand holding one activation **column per request** (element
+    /// `(k, j)` is request j's k-th activation — [`pack_fc_columns`]
+    /// builds it, NOT a concatenation of per-request rows).  The result
+    /// (M,B) is scattered back per request with [`unpack_fc_columns`].
+    FcGemmBatch { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
     /// im2col lowering of one (C,H,W) input into the (C·K², OH·OW) matrix.
     Im2col {
         input: Arc<Vec<f32>>,
@@ -203,6 +220,7 @@ impl JobKind {
             JobKind::ConvTile { .. } => JobClass::ConvTile,
             JobKind::FcGemm { .. } => JobClass::FcGemm,
             JobKind::Im2col { .. } => JobClass::Im2col,
+            JobKind::FcGemmBatch { .. } => JobClass::FcGemmBatch,
         }
     }
 }
@@ -231,12 +249,17 @@ impl Job {
 
     /// Service-cost estimate in k-steps (one k-step = one (TS,TS)·(TS,TS)
     /// tile MAC pass).  CONV tiles iterate K inner tiles; an FC GEMM does
-    /// the whole tiled iteration space in one job; im2col is a data
-    /// movement pass, charged a flat single step.
+    /// the whole tiled iteration space in one job; a fused batch costs its
+    /// single-column cost × B (columns share the padded row/K tiling but
+    /// each adds a full MAC pass); im2col is a data movement pass, charged
+    /// a flat single step.
     pub fn ksteps(&self) -> u64 {
         match self.kind.class() {
             JobClass::ConvTile => self.desc.k_tiles() as u64,
             JobClass::FcGemm => (self.desc.grid.num_jobs() * self.desc.k_tiles()) as u64,
+            JobClass::FcGemmBatch => {
+                (self.desc.grid.rows() * self.desc.k_tiles() * self.desc.grid.p) as u64
+            }
             JobClass::Im2col => 1,
         }
     }
@@ -272,6 +295,42 @@ impl Job {
                 grid: TileGrid::new(out_n, in_n, 1, ts),
             },
             kind: JobKind::FcGemm { a: w, b: x },
+        }
+    }
+
+    /// Build one fused batched-FC job: Y(M,B) = W(M×N)·X(N,B), where `xb`
+    /// is the row-major (N,B) operand of [`pack_fc_columns`] — one
+    /// activation column per request.  `frame_id` tags the batch (by
+    /// convention the first fused request's frame).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fc_batch(
+        job_id: u64,
+        layer_id: usize,
+        frame_id: u64,
+        out_n: usize,
+        in_n: usize,
+        batch: usize,
+        w: Arc<Vec<f32>>,
+        xb: Arc<Vec<f32>>,
+        ts: usize,
+    ) -> Job {
+        assert!(batch >= 1, "fused FC batch must hold at least one column");
+        assert_eq!(w.len(), out_n * in_n, "FC weight size mismatch");
+        assert_eq!(
+            xb.len(),
+            in_n * batch,
+            "batched FC operand must be (IN, B) — see pack_fc_columns"
+        );
+        Job {
+            desc: JobDesc {
+                job_id,
+                layer_id,
+                frame_id,
+                t1: 0,
+                t2: 0,
+                grid: TileGrid::new(out_n, in_n, batch, ts),
+            },
+            kind: JobKind::FcGemmBatch { a: w, b: xb },
         }
     }
 
@@ -332,7 +391,11 @@ impl Job {
                 let (at, bt) = self.pack_tiles();
                 job_mm_native(&at, &bt, self.desc.k_tiles(), self.desc.grid.ts)
             }
-            JobKind::FcGemm { a, b } => {
+            // Single-column and fused-batch FC share one kernel: the fused
+            // operand just widens P from 1 to B, so each output element
+            // accumulates in exactly the per-sample order (bit-identical
+            // to running the B columns one at a time).
+            JobKind::FcGemm { a, b } | JobKind::FcGemmBatch { a, b } => {
                 let g = self.desc.grid;
                 let mut c = vec![0.0f32; g.m * g.p];
                 super::gemm::gemm_blocked_into(a, b, &mut c, g.m, g.n, g.p);
@@ -385,6 +448,32 @@ pub fn jobs_for_gemm(
         });
     }
     jobs
+}
+
+/// Pack B equal-length activation vectors into the row-major (IN, B)
+/// operand of a fused batched-FC GEMM: `packed[k*B + j] = cols[j][k]`
+/// (request j is column j).  The inverse is [`unpack_fc_columns`].
+pub fn pack_fc_columns(cols: &[&[f32]]) -> Vec<f32> {
+    let batch = cols.len();
+    assert!(batch >= 1, "cannot pack an empty batch");
+    let in_n = cols[0].len();
+    let mut packed = vec![0.0f32; in_n * batch];
+    for (j, col) in cols.iter().enumerate() {
+        assert_eq!(col.len(), in_n, "fused FC columns must share one length");
+        for (k, v) in col.iter().enumerate() {
+            packed[k * batch + j] = *v;
+        }
+    }
+    packed
+}
+
+/// Split the row-major (OUT, B) result of a fused batched-FC job back into
+/// per-request output columns (`out[j][i] = c[i*B + j]`).
+pub fn unpack_fc_columns(c: &[f32], out_n: usize, batch: usize) -> Vec<Vec<f32>> {
+    assert_eq!(c.len(), out_n * batch, "fused FC result size mismatch");
+    (0..batch)
+        .map(|j| (0..out_n).map(|i| c[i * batch + j]).collect())
+        .collect()
 }
 
 /// Assemble CONV-tile job results back into the dense C matrix (M×P).
@@ -471,6 +560,79 @@ mod tests {
         );
         let got_t = Tensor::from_vec(&[out_n, 1], got.data);
         assert!(want.allclose(&got_t, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn fused_fc_batch_matches_per_sample_jobs_bitwise() {
+        let (out_n, in_n, batch) = (37, 83, 5);
+        let w = Arc::new(rand_vec(out_n * in_n, 11));
+        let xs: Vec<Vec<f32>> = (0..batch)
+            .map(|j| rand_vec(in_n, 20 + j as u64))
+            .collect();
+        let cols: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let packed = pack_fc_columns(&cols);
+        assert_eq!(packed.len(), in_n * batch);
+        // Column j of the packed operand is request j's activation.
+        assert_eq!(packed[3 * batch + 2], xs[2][3]);
+
+        let fused = Job::fc_batch(
+            0,
+            4,
+            2,
+            out_n,
+            in_n,
+            batch,
+            Arc::clone(&w),
+            Arc::new(packed),
+            32,
+        );
+        assert_eq!(fused.class(), JobClass::FcGemmBatch);
+        // One fused job costs B single-column jobs' worth of k-steps.
+        let single = Job::fc(
+            1,
+            4,
+            2,
+            out_n,
+            in_n,
+            Arc::clone(&w),
+            Arc::new(xs[0].clone()),
+            32,
+        );
+        assert_eq!(fused.ksteps(), single.ksteps() * batch as u64);
+
+        let got = unpack_fc_columns(&fused.execute_native().data, out_n, batch);
+        for (j, x) in xs.iter().enumerate() {
+            let want = Job::fc(
+                2 + j as u64,
+                4,
+                2,
+                out_n,
+                in_n,
+                Arc::clone(&w),
+                Arc::new(x.clone()),
+                32,
+            )
+            .execute_native();
+            // Bit-identical: the fused kernel accumulates each output
+            // element in the exact per-sample order.
+            assert_eq!(got[j], want.data, "request {j}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "(IN, B)")]
+    fn fc_batch_rejects_wrong_operand_size() {
+        let _ = Job::fc_batch(
+            0,
+            0,
+            0,
+            4,
+            4,
+            2,
+            Arc::new(vec![0.0; 16]),
+            Arc::new(vec![0.0; 4]),
+            4,
+        );
     }
 
     #[test]

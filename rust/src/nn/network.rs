@@ -156,6 +156,26 @@ pub trait MatExec {
         y
     }
 
+    /// Fused batched FC GEMM: C(M,B) = W(M×N)·X(N,B), where `xb` packs one
+    /// activation column per request ([`crate::mm::job::pack_fc_columns`]).
+    /// Bias and activation are applied per request by the caller.  The
+    /// default runs the native kernel; the pooled executor emits one
+    /// [`crate::mm::JobClass::FcGemmBatch`] job for the whole batch.
+    fn fc_gemm_batch(
+        &self,
+        layer_idx: usize,
+        out_n: usize,
+        in_n: usize,
+        batch: usize,
+        w: Arc<Vec<f32>>,
+        xb: Arc<Vec<f32>>,
+    ) -> Vec<f32> {
+        let _ = layer_idx;
+        let mut c = vec![0.0f32; out_n * batch];
+        crate::mm::gemm::gemm_blocked_into(&w, &xb, &mut c, out_n, in_n, batch);
+        c
+    }
+
     /// im2col lowering of a CONV layer's input.  Takes the activation by
     /// value: a pooled executor moves the buffer into a shared job
     /// operand instead of copying it.
@@ -361,13 +381,30 @@ impl Network {
         profile[JobClass::ConvTile.index()] =
             convs.iter().map(|ci| ci.grid.num_jobs()).sum();
         profile[JobClass::Im2col.index()] = convs.len();
-        profile[JobClass::FcGemm.index()] = self
-            .config
+        profile[JobClass::FcGemm.index()] = self.fc_layer_count();
+        profile
+    }
+
+    /// Pool jobs a B-request micro-batch generates per [`JobClass`] on the
+    /// fused path ([`Network::forward_batch_with`]): the CONV front-end
+    /// scales per frame, while each FC layer emits exactly **one**
+    /// [`JobClass::FcGemmBatch`] job for the whole batch.
+    pub fn pool_job_profile_batched(&self, batch: usize) -> [usize; JobClass::COUNT] {
+        let mut profile = self.pool_job_profile();
+        profile[JobClass::ConvTile.index()] *= batch;
+        profile[JobClass::Im2col.index()] *= batch;
+        profile[JobClass::FcGemm.index()] = 0;
+        profile[JobClass::FcGemmBatch.index()] = self.fc_layer_count();
+        profile
+    }
+
+    /// Number of fully-connected layers.
+    pub fn fc_layer_count(&self) -> usize {
+        self.config
             .layers
             .iter()
             .filter(|l| matches!(l, LayerSpec::Connected { .. }))
-            .count();
-        profile
+            .count()
     }
 
     /// Reference forward pass — sequential, CPU-only (the "original
@@ -385,6 +422,79 @@ impl Network {
             cur = self.forward_layer(idx, layer, cur, exec);
         }
         cur
+    }
+
+    /// Batched forward pass: the CONV front-end (im2col + tile GEMMs +
+    /// pooling/BN) runs per frame, but every FC layer is **fused across
+    /// the batch** into one (OUT,IN)×(IN,B) GEMM via
+    /// [`MatExec::fc_gemm_batch`] — one pool job (and one big-NEON
+    /// fan-out) per FC layer per micro-batch instead of per request.
+    /// Outputs are bit-identical to running [`Network::forward_with`] per
+    /// sample: the fused kernel accumulates each output element in the
+    /// per-sample order.
+    pub fn forward_batch_with(&self, xs: &[Tensor], exec: &dyn MatExec) -> Vec<Tensor> {
+        let (c, h, w) = self.input_shape();
+        for x in xs {
+            assert_eq!(x.shape(), &[c, h, w], "input shape mismatch");
+        }
+        let mut cur: Vec<Tensor> = xs.to_vec();
+        for (idx, layer) in self.config.layers.iter().enumerate() {
+            cur = self.forward_layer_batch(idx, layer, cur, exec);
+        }
+        cur
+    }
+
+    /// Execute a single layer over a micro-batch of activations.
+    /// `Connected` layers fuse the whole batch into one batched FC GEMM;
+    /// every other layer runs per item through [`Network::forward_layer`]
+    /// (the CONV front-end stays per-frame).  The serving pipelines call
+    /// this per layer stage; [`Network::forward_batch_with`] folds it over
+    /// the whole network.
+    pub fn forward_layer_batch(
+        &self,
+        idx: usize,
+        layer: &LayerSpec,
+        inputs: Vec<Tensor>,
+        exec: &dyn MatExec,
+    ) -> Vec<Tensor> {
+        let LayerSpec::Connected { activation, .. } = layer else {
+            return inputs
+                .into_iter()
+                .map(|x| self.forward_layer(idx, layer, x, exec))
+                .collect();
+        };
+        if inputs.is_empty() {
+            return inputs;
+        }
+        let w = self.layer_param(idx, "weights").expect("fc weights");
+        let b = self.layer_param(idx, "bias").expect("fc bias");
+        let (out_n, in_n) = (w.shape()[0], w.shape()[1]);
+        let batch = inputs.len();
+        let cols: Vec<&[f32]> = inputs
+            .iter()
+            .map(|t| {
+                assert_eq!(t.len(), in_n, "input length mismatch");
+                t.data()
+            })
+            .collect();
+        let packed = crate::mm::job::pack_fc_columns(&cols);
+        let c = exec.fc_gemm_batch(
+            idx,
+            out_n,
+            in_n,
+            batch,
+            self.weights_arc(idx),
+            Arc::new(packed),
+        );
+        crate::mm::job::unpack_fc_columns(&c, out_n, batch)
+            .into_iter()
+            .map(|mut y| {
+                for (v, bv) in y.iter_mut().zip(b.data()) {
+                    *v = activation.apply(*v + *bv);
+                }
+                Tensor::from_vec(&[out_n], y)
+            })
+            .collect()
     }
 
     /// Execute a single layer (used by both the reference forward and the
@@ -730,6 +840,50 @@ mod tests {
         assert_eq!(profile[JobClass::ConvTile.index()], conv_jobs);
         assert_eq!(profile[JobClass::Im2col.index()], 2); // two CONV layers
         assert_eq!(profile[JobClass::FcGemm.index()], 2); // two FC layers
+        assert_eq!(profile[JobClass::FcGemmBatch.index()], 0); // per-sample path
+
+        // The fused profile scales the CONV front-end per frame but emits
+        // ONE batched-FC job per FC layer regardless of batch size.
+        let batched = net.pool_job_profile_batched(4);
+        assert_eq!(batched[JobClass::ConvTile.index()], conv_jobs * 4);
+        assert_eq!(batched[JobClass::Im2col.index()], 2 * 4);
+        assert_eq!(batched[JobClass::FcGemm.index()], 0);
+        assert_eq!(batched[JobClass::FcGemmBatch.index()], 2);
+        assert_eq!(net.fc_layer_count(), 2);
+    }
+
+    /// Zoo-wide fused-path equivalence: `forward_batch_with` must match
+    /// the per-sample reference forward on every model — and because the
+    /// fused FC kernel accumulates in per-sample order, bit-exactly.
+    #[test]
+    fn forward_batch_matches_reference_across_zoo() {
+        for name in zoo::ZOO {
+            let net = mk(name);
+            let xs: Vec<Tensor> = (0..3).map(|f| net.make_input(f)).collect();
+            let got = net.forward_batch_with(&xs, &NativeExec);
+            assert_eq!(got.len(), xs.len(), "{name}");
+            for (j, x) in xs.iter().enumerate() {
+                let want = net.forward_reference(x);
+                assert!(
+                    got[j].allclose(&want, 1e-6, 1e-6),
+                    "{name} item {j}: {}",
+                    got[j].max_abs_diff(&want)
+                );
+                assert_eq!(got[j].data(), want.data(), "{name} item {j} not bit-exact");
+            }
+        }
+    }
+
+    #[test]
+    fn forward_layer_batch_falls_back_per_item_on_non_fc() {
+        let net = mk("mnist");
+        let xs: Vec<Tensor> = (0..2).map(|f| net.make_input(f)).collect();
+        let layer = net.config.layers[0].clone();
+        let fused = net.forward_layer_batch(0, &layer, xs.clone(), &NativeExec);
+        for (x, got) in xs.into_iter().zip(fused) {
+            let want = net.forward_layer(0, &layer, x, &NativeExec);
+            assert_eq!(got.data(), want.data());
+        }
     }
 
     #[test]

@@ -63,9 +63,14 @@ pub struct FrameExec<'a> {
 }
 
 impl FrameExec<'_> {
+    /// Dispatch context for one layer.  The placement hint stays `None`
+    /// for layers the static mapper did not place (FC layers, anything
+    /// non-CONV): the dispatcher then routes purely least-loaded across
+    /// capable clusters instead of being silently biased toward
+    /// cluster 0 (the old `unwrap_or(0)` bug).
     fn ctx(&self, layer_idx: usize) -> GemmCtx {
         GemmCtx {
-            cluster: self.router.conv_cluster[layer_idx].unwrap_or(0),
+            cluster: self.router.conv_cluster[layer_idx],
             layer_idx,
             frame_id: self.frame_id,
         }
@@ -80,12 +85,13 @@ impl MatExec for FrameExec<'_> {
         a: Arc<Vec<f32>>,
         b: Arc<Vec<f32>>,
     ) -> Vec<f32> {
-        let ctx = GemmCtx {
-            cluster: self.router.conv_cluster[layer_idx].expect("conv layer mapped"),
-            layer_idx,
-            frame_id: self.frame_id,
-        };
-        self.router.dispatcher.execute_gemm(ctx, grid, a, b)
+        debug_assert!(
+            self.router.conv_cluster[layer_idx].is_some(),
+            "conv layer {layer_idx} not placed by the static mapper"
+        );
+        self.router
+            .dispatcher
+            .execute_gemm(self.ctx(layer_idx), grid, a, b)
     }
 
     fn fc_gemm(
@@ -100,6 +106,27 @@ impl MatExec for FrameExec<'_> {
         self.router
             .dispatcher
             .execute_fc(ctx, out_n, in_n, w, x, self.router.tile_size)
+    }
+
+    fn fc_gemm_batch(
+        &self,
+        layer_idx: usize,
+        out_n: usize,
+        in_n: usize,
+        batch: usize,
+        w: Arc<Vec<f32>>,
+        xb: Arc<Vec<f32>>,
+    ) -> Vec<f32> {
+        let ctx = self.ctx(layer_idx);
+        self.router.dispatcher.execute_fc_batch(
+            ctx,
+            out_n,
+            in_n,
+            batch,
+            w,
+            xb,
+            self.router.tile_size,
+        )
     }
 
     fn im2col_lower(
@@ -173,5 +200,108 @@ mod tests {
         );
         assert_eq!(report.inline_fallbacks, 0);
         assert_eq!(report.dispatched_by_class, report.per_class_jobs);
+    }
+
+    /// The fused batch path through the pool: bit-equal to the reference,
+    /// ONE FcGemmBatch job per FC layer for the whole batch, per-request
+    /// CONV front-end.
+    #[test]
+    fn batched_forward_through_pool_fuses_fc_layers() {
+        let net = Network::new(zoo::load("mnist").unwrap(), 32).unwrap();
+        let options = PoolOptions::new(
+            crate::config::HwConfig::default_zc702(),
+            ComputeMode::Native,
+            true,
+        );
+        let pool = DelegatePool::start(&options).unwrap();
+        let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
+        let router = PoolRouter::new(&net, pool.dispatcher(), &assignment);
+
+        let batch = 4usize;
+        let xs: Vec<_> = (0..batch as u64).map(|f| net.make_input(f)).collect();
+        let exec = router.frame(0);
+        let ys = net.forward_batch_with(&xs, &exec);
+        for (x, y) in xs.iter().zip(&ys) {
+            let want = net.forward_reference(x);
+            assert!(y.allclose(&want, 1e-4, 1e-5), "{}", y.max_abs_diff(&want));
+        }
+
+        let report = pool.shutdown().unwrap();
+        let profile = net.pool_job_profile_batched(batch);
+        for class in JobClass::ALL {
+            assert_eq!(
+                report.per_class_jobs[class.index()],
+                profile[class.index()] as u64,
+                "{}",
+                class.label()
+            );
+        }
+        // mnist: 2 FC layers → exactly 2 fused jobs covering 4 rows each.
+        assert_eq!(
+            report.per_class_jobs[JobClass::FcGemmBatch.index()],
+            net.fc_layer_count() as u64
+        );
+        assert_eq!(report.per_class_jobs[JobClass::FcGemm.index()], 0);
+        assert_eq!(
+            report.fused_fc_rows,
+            (net.fc_layer_count() * batch) as u64
+        );
+        assert_eq!(report.inline_fallbacks, 0);
+    }
+
+    /// Regression for the bogus cluster-0 placement hint on non-CONV
+    /// layers: with cluster 0 rebuilt PE-only (CONV-capable only under
+    /// PJRT-stub mode) and the NEON members moved to cluster 1, FC and
+    /// fused-FC work must route least-loaded onto the NEON-capable
+    /// cluster — never inline, never onto cluster 0.
+    #[test]
+    fn fc_routes_off_pe_only_cluster0() {
+        let mut hw = crate::config::HwConfig::default_zc702();
+        hw.clusters[0].neon = 0; // cluster 0: 2 S-PE only
+        hw.clusters[1].neon = 2; // cluster 1: 6 F-PE + 2 NEON
+        let options = PoolOptions::new(hw, ComputeMode::Pjrt, false);
+        let pool = DelegatePool::start(&options).unwrap();
+        let accels = pool.accels();
+        let dispatcher = pool.dispatcher();
+        // Cluster 0 cannot accept FC work at all.
+        assert!(!dispatcher.accept_masks()[0].supports(JobClass::FcGemm));
+        assert_eq!(dispatcher.route(JobClass::FcGemm, None), Some(1));
+        assert_eq!(dispatcher.route(JobClass::FcGemmBatch, None), Some(1));
+
+        let net = Network::new(zoo::load("mnist").unwrap(), 32).unwrap();
+        let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
+        let router = PoolRouter::new(&net, pool.dispatcher(), &assignment);
+        let x = net.make_input(0);
+        let exec = router.frame(0);
+        let y = net.forward_with(&x, &exec);
+        let want = net.forward_reference(&x);
+        assert!(y.allclose(&want, 1e-4, 1e-5));
+        let xs: Vec<_> = (1..3u64).map(|f| net.make_input(f)).collect();
+        let _ = net.forward_batch_with(&xs, &router.frame(1));
+
+        let report = pool.shutdown().unwrap();
+        assert_eq!(report.inline_fallbacks, 0, "FC must reach the pool");
+        let non_conv = |by_class: &[u64; JobClass::COUNT]| {
+            by_class[JobClass::FcGemm.index()]
+                + by_class[JobClass::Im2col.index()]
+                + by_class[JobClass::FcGemmBatch.index()]
+        };
+        let mut neon_non_conv = 0u64;
+        for accel in &accels {
+            let by_class = &report.per_accel_by_class[accel.id];
+            if accel.is_fpga() {
+                assert_eq!(non_conv(by_class), 0, "{} ran non-CONV work", accel.name);
+            } else {
+                assert_eq!(accel.cluster, 1, "NEON members live on cluster 1");
+                neon_non_conv += non_conv(by_class);
+            }
+        }
+        // 3 frames of im2col+FC (per-sample ×1, fused path ×2) all landed
+        // on cluster-1 NEON members.
+        assert!(neon_non_conv > 0, "NEON members never served FC/im2col");
+        assert_eq!(
+            report.per_class_jobs[JobClass::FcGemmBatch.index()],
+            net.fc_layer_count() as u64
+        );
     }
 }

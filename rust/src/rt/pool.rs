@@ -126,6 +126,14 @@ pub struct DispatchStats {
     /// all-PE registry).  With member-level routing this is the *only*
     /// inline path left — any capable member anywhere keeps it at zero.
     pub inline_fallbacks: AtomicU64,
+    /// Requests whose FC work was computed as a fused
+    /// [`JobClass::FcGemmBatch`] GEMM (sum of batch sizes over fused
+    /// executions — including the counted inline last resort on a
+    /// degenerate pool with no FC-capable member, where the fused kernel
+    /// still runs, just on the calling thread).  On any pool that
+    /// dispatches, fused rows ÷ `dispatched_by_class[FcGemmBatch]` is the
+    /// mean fused batch width.
+    pub fused_fc_rows: AtomicU64,
 }
 
 /// Counters accumulated over the pool's lifetime.
@@ -145,6 +153,11 @@ pub struct PoolReport {
     /// See [`DispatchStats::inline_fallbacks`].  Zero whenever at least
     /// one member of the pool supports every dispatched class.
     pub inline_fallbacks: u64,
+    /// See [`DispatchStats::fused_fc_rows`]: requests covered by fused
+    /// batched-FC executions, inline last resorts included
+    /// (`per_class_jobs` splits fused vs unfused jobs; this adds how many
+    /// rows the fused ones carried).
+    pub fused_fc_rows: u64,
     pub steal_attempts: u64,
     pub jobs_stolen: u64,
     /// Stolen jobs per class ([`JobClass`] dense order).
@@ -154,9 +167,14 @@ pub struct PoolReport {
 /// Addressing of one pool dispatch (bundled so call sites stay tidy).
 #[derive(Debug, Clone, Copy)]
 pub struct GemmCtx {
-    /// Destination cluster (from the static mapping).  A hint: class
-    /// routing may override it when no member there supports the class.
-    pub cluster: usize,
+    /// Destination-cluster placement hint — `Some` only for layers the
+    /// static mapper actually placed (CONV layers).  FC and other
+    /// unmapped layers carry `None` and route purely least-loaded; class
+    /// routing also overrides a `Some` whose cluster has no capable
+    /// member.  (This used to be a bare `usize` defaulted to 0 for
+    /// non-CONV layers, silently biasing their placement toward
+    /// cluster 0.)
+    pub cluster: Option<usize>,
     /// Network layer index of the emitting layer.
     pub layer_idx: usize,
     /// Frame / request tag carried through the jobs.
@@ -195,7 +213,7 @@ impl Dispatcher {
         // including the counted inline last resort when NO member of any
         // cluster is CONV-capable (a custom registry), so a degenerate
         // pool degrades instead of panicking the layer thread.
-        let Some(cluster) = self.route(JobClass::ConvTile, Some(ctx.cluster)) else {
+        let Some(cluster) = self.route(JobClass::ConvTile, ctx.cluster) else {
             self.stats
                 .inline_fallbacks
                 .fetch_add(n as u64, Ordering::Relaxed);
@@ -241,7 +259,41 @@ impl Dispatcher {
     ) -> Vec<f32> {
         let id = self.job_counter.fetch_add(1, Ordering::Relaxed);
         let job = Job::fc(id, ctx.layer_idx, ctx.frame_id, out_n, in_n, w, x, ts);
-        self.run_or_fallback(JobClass::FcGemm, None, job)
+        self.run_or_fallback(JobClass::FcGemm, ctx.cluster, job)
+    }
+
+    /// Dispatch a micro-batch's fused FC GEMM — Y(OUT,B) = W·X(IN,B), one
+    /// activation column per request (`pack_fc_columns` layout) — as ONE
+    /// pool job and block for the (OUT,B) result.  Same routing contract
+    /// as [`Dispatcher::execute_fc`]; `fused_fc_rows` counts the B
+    /// requests whose FC work this single dispatch covered.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_fc_batch(
+        &self,
+        ctx: GemmCtx,
+        out_n: usize,
+        in_n: usize,
+        batch: usize,
+        w: Arc<Vec<f32>>,
+        xb: Arc<Vec<f32>>,
+        ts: usize,
+    ) -> Vec<f32> {
+        let id = self.job_counter.fetch_add(1, Ordering::Relaxed);
+        let job = Job::fc_batch(
+            id,
+            ctx.layer_idx,
+            ctx.frame_id,
+            out_n,
+            in_n,
+            batch,
+            w,
+            xb,
+            ts,
+        );
+        self.stats
+            .fused_fc_rows
+            .fetch_add(batch as u64, Ordering::Relaxed);
+        self.run_or_fallback(JobClass::FcGemmBatch, ctx.cluster, job)
     }
 
     /// Dispatch one im2col lowering as a pool job and block for the col
@@ -269,7 +321,7 @@ impl Dispatcher {
             input,
             ts,
         );
-        self.run_or_fallback(JobClass::Im2col, Some(ctx.cluster), job)
+        self.run_or_fallback(JobClass::Im2col, ctx.cluster, job)
     }
 
     /// Pick the destination cluster for a job class: `preferred` if some
@@ -526,6 +578,7 @@ fn fold_report(
         *acc = ctr.load(Ordering::Relaxed);
     }
     report.inline_fallbacks = dispatch.inline_fallbacks.load(Ordering::Relaxed);
+    report.fused_fc_rows = dispatch.fused_fc_rows.load(Ordering::Relaxed);
     if let Some(t) = thief {
         let (attempts, _successes, moved) = t.stats.snapshot();
         report.steal_attempts = attempts;
@@ -549,7 +602,7 @@ mod tests {
         let a = Arc::new(XorShift64Star::new(1).fill_f32(40 * 50, 1.0));
         let b = Arc::new(XorShift64Star::new(2).fill_f32(50 * 60, 1.0));
         let ctx = GemmCtx {
-            cluster: 0,
+            cluster: Some(0),
             layer_idx: 0,
             frame_id: 0,
         };
@@ -583,7 +636,7 @@ mod tests {
             }
         }
         let ctx = GemmCtx {
-            cluster: 0,
+            cluster: Some(0),
             layer_idx: 2,
             frame_id: 7,
         };
@@ -643,7 +696,7 @@ mod tests {
         assert_eq!(dispatcher.route(JobClass::ConvTile, Some(1)), Some(1));
 
         let ctx = GemmCtx {
-            cluster: 1,
+            cluster: Some(1),
             layer_idx: 0,
             frame_id: 0,
         };
@@ -694,7 +747,7 @@ mod tests {
         let dispatcher = pool.dispatcher();
         assert_eq!(dispatcher.route(JobClass::FcGemm, None), None);
         let ctx = GemmCtx {
-            cluster: 0,
+            cluster: Some(0),
             layer_idx: 0,
             frame_id: 0,
         };
@@ -704,9 +757,20 @@ mod tests {
         let mut want = vec![0.0f32; 8];
         crate::mm::gemm::gemm_blocked_into(&w, &x, &mut want, 8, 16, 1);
         assert_eq!(y, want, "inline fallback must still be correct");
+        // The fused batched path degrades the same way: counted, correct.
+        let xb = Arc::new(XorShift64Star::new(9).fill_f32(16 * 2, 1.0));
+        let yb = dispatcher.execute_fc_batch(ctx, 8, 16, 2, Arc::clone(&w), Arc::clone(&xb), 32);
+        let mut want_b = vec![0.0f32; 8 * 2];
+        crate::mm::gemm::gemm_blocked_into(&w, &xb, &mut want_b, 8, 16, 2);
+        assert_eq!(yb, want_b, "fused inline fallback must still be correct");
         let report = pool.shutdown().unwrap();
-        assert_eq!(report.inline_fallbacks, 1);
+        assert_eq!(report.inline_fallbacks, 2);
         assert_eq!(report.dispatched_by_class[JobClass::FcGemm.index()], 0);
+        assert_eq!(
+            report.dispatched_by_class[JobClass::FcGemmBatch.index()],
+            0
+        );
+        assert_eq!(report.fused_fc_rows, 2);
         assert_eq!(report.jobs_executed, 0);
     }
 
@@ -732,7 +796,7 @@ mod tests {
         let a = Arc::new(XorShift64Star::new(9).fill_f32(16 * 24, 1.0));
         let b = Arc::new(XorShift64Star::new(10).fill_f32(24 * 20, 1.0));
         let ctx = GemmCtx {
-            cluster: 0,
+            cluster: Some(0),
             layer_idx: 0,
             frame_id: 0,
         };

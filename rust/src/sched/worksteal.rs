@@ -91,13 +91,14 @@ pub struct StealPolicy {
     /// Minimum victim queue length worth stealing from.
     pub min_victim_len: usize,
     /// Relative service cost of one job per class ([`JobClass`] order:
-    /// CONV-tile, FC-GEMM, im2col).
+    /// CONV-tile, FC-GEMM, im2col, fused batched FC-GEMM).
     pub class_cost: [f64; JobClass::COUNT],
 }
 
 /// Default per-class cost weights: an FC GEMM carries a few tiles' worth
-/// of MACs; im2col is pure data movement.
-pub const DEFAULT_CLASS_COST: [f64; JobClass::COUNT] = [1.0, 4.0, 0.5];
+/// of MACs; im2col is pure data movement; a fused batched FC carries a
+/// micro-batch's worth of FC columns (sized for the default max_batch).
+pub const DEFAULT_CLASS_COST: [f64; JobClass::COUNT] = [1.0, 4.0, 0.5, 16.0];
 
 impl Default for StealPolicy {
     fn default() -> Self {

@@ -26,7 +26,8 @@
 //! * [`batcher`] — per-network micro-batching (size + window policy);
 //! * [`server`] — thread wiring over `rt::DelegatePool` (every layer's
 //!   matrix work — CONV tiles, FC GEMMs, im2col — dispatched as pool
-//!   jobs via `rt::PoolRouter`);
+//!   jobs via `rt::PoolRouter`; FC stages fuse their whole micro-batch
+//!   into one `FcGemmBatch` job per layer);
 //! * [`stats`] — latency percentiles / throughput / batch / per-class job
 //!   accounting.
 

@@ -70,10 +70,11 @@ impl Default for ServeOptions {
 }
 
 /// A micro-batch in flight through one network's pipeline: each request
-/// rides with its current activation.
+/// rides with its current activation.  The batch size is always
+/// `items.len()` — deadline pruning shrinks both together, so the
+/// batch-size histogram can never count requests that never ran.
 struct InFlight {
     net_id: usize,
-    batch_size: usize,
     items: Vec<(Request, Tensor)>,
 }
 
@@ -154,20 +155,42 @@ impl Server {
                 let handle = std::thread::Builder::new()
                     .name(format!("serve-n{net_id}-l{layer_idx}"))
                     .spawn(move || {
+                        let is_fc = matches!(
+                            net.config.layers[layer_idx],
+                            crate::config::LayerSpec::Connected { .. }
+                        );
                         while let Some(mut batch) = inbox.recv() {
                             let spec = net.config.layers[layer_idx].clone();
                             let items = std::mem::take(&mut batch.items);
-                            let mut advanced = Vec::with_capacity(items.len());
-                            for (req, act) in items {
-                                // Every class of matrix work — CONV
-                                // tiles, FC GEMMs, im2col — reaches the
-                                // shared pool through the router.
-                                let exec = router.frame(req.frame);
-                                let out =
-                                    net.forward_layer(layer_idx, &spec, act, &exec);
-                                advanced.push((req, out));
-                            }
-                            batch.items = advanced;
+                            batch.items = if is_fc {
+                                // Fused FC stage: the whole micro-batch
+                                // becomes ONE FcGemmBatch pool job — the
+                                // big-NEON team fans it out once per
+                                // batch instead of once per request.
+                                // The job carries the first request's
+                                // frame tag.
+                                let frame =
+                                    items.first().map(|(r, _)| r.frame).unwrap_or(0);
+                                let exec = router.frame(frame);
+                                let (reqs, acts): (Vec<Request>, Vec<Tensor>) =
+                                    items.into_iter().unzip();
+                                let outs = net
+                                    .forward_layer_batch(layer_idx, &spec, acts, &exec);
+                                reqs.into_iter().zip(outs).collect()
+                            } else {
+                                // CONV front-end and element-wise stages
+                                // run per request (each keeps its own
+                                // frame tag on its jobs).
+                                items
+                                    .into_iter()
+                                    .map(|(req, act)| {
+                                        let exec = router.frame(req.frame);
+                                        let out = net
+                                            .forward_layer(layer_idx, &spec, act, &exec);
+                                        (req, out)
+                                    })
+                                    .collect()
+                            };
                             if !outbox.send(batch) {
                                 break;
                             }
@@ -187,7 +210,7 @@ impl Server {
                         let mut responses = Vec::new();
                         while let Some(batch) = outlet.recv() {
                             let net_id = batch.net_id;
-                            let batch_size = batch.batch_size;
+                            let batch_size = batch.items.len();
                             for (req, out) in batch.items {
                                 let latency = req.submitted.elapsed();
                                 collector_c.record_response(latency);
@@ -312,7 +335,9 @@ fn batcher_loop(
                 if batch.items.is_empty() {
                     continue;
                 }
-                let size = batch.batch_size;
+                // Histogram the size that actually dispatches — post-prune,
+                // never the size the batch was staged with.
+                let size = batch.items.len();
                 match inboxes[net_id].try_send(batch) {
                     Ok(()) => collector.record_batch(size),
                     Err(batch) => {
@@ -372,10 +397,16 @@ fn batcher_loop(
         }
     }
     // Shutdown: guaranteed delivery of everything buffered (the layer
-    // threads are still draining), then close the pipelines.
+    // threads are still draining), then close the pipelines.  The same
+    // prune-then-record rule applies here — a deadline that lapsed while
+    // the batch waited must not inflate the histogram or ship dead work.
     for (net_id, queue) in ready.iter_mut().enumerate() {
-        for batch in queue.drain(..) {
-            collector.record_batch(batch.batch_size);
+        for mut batch in queue.drain(..) {
+            prune_expired(&collector, &mut batch);
+            if batch.items.is_empty() {
+                continue;
+            }
+            collector.record_batch(batch.items.len());
             inboxes[net_id].send(batch);
         }
     }
@@ -406,16 +437,13 @@ fn stage(collector: &StatsCollector, ready: &mut [VecDeque<InFlight>], batch: Ba
     if items.is_empty() {
         return;
     }
-    let batch_size = items.len();
-    ready[net_id].push_back(InFlight {
-        net_id,
-        batch_size,
-        items,
-    });
+    ready[net_id].push_back(InFlight { net_id, items });
 }
 
 /// Drop (and count) the requests of a buffered batch whose deadline
-/// passed while it waited for pipeline capacity.
+/// passed while it waited for pipeline capacity.  The surviving
+/// `items.len()` IS the batch size — there is no separate counter to
+/// fall out of sync.
 fn prune_expired(collector: &StatsCollector, inflight: &mut InFlight) {
     let now = Instant::now();
     if inflight.items.iter().any(|(req, _)| req.is_expired(now)) {
@@ -427,6 +455,75 @@ fn prune_expired(collector: &StatsCollector, inflight: &mut InFlight) {
                 inflight.items.push((req, act));
             }
         }
-        inflight.batch_size = inflight.items.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A request whose deadline has (or has not) already lapsed.
+    fn req(seq: u64, expired: bool) -> Request {
+        let mut r = Request::new(0, seq, 0, Tensor::scalar(0.0));
+        if expired {
+            r.submitted = Instant::now() - Duration::from_millis(50);
+            r.deadline = Some(Duration::from_millis(1));
+        } else {
+            r.deadline = Some(Duration::from_secs(3600));
+        }
+        r
+    }
+
+    /// The satellite regression: a batch that went half-expired while
+    /// buffered must dispatch with `items.len()` as its size — the lapsed
+    /// request is counted as expired, never in the batch histogram.
+    #[test]
+    fn prune_expired_half_expired_batch_keeps_size_consistent() {
+        let collector = StatsCollector::default();
+        let mut inflight = InFlight {
+            net_id: 0,
+            items: vec![
+                (req(0, true), Tensor::scalar(0.0)),
+                (req(1, false), Tensor::scalar(1.0)),
+            ],
+        };
+        prune_expired(&collector, &mut inflight);
+        assert_eq!(inflight.items.len(), 1, "lapsed request must be dropped");
+        assert_eq!(inflight.items[0].0.seq, 1, "survivor is the live request");
+        let stats = collector.report(1.0, 0, &crate::rt::PoolReport::default());
+        assert_eq!(stats.expired, 1);
+        // What dispatch records is exactly the surviving size.
+        collector.record_batch(inflight.items.len());
+        let stats = collector.report(1.0, 0, &crate::rt::PoolReport::default());
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.max_batch, 1, "histogram must not see the staged size");
+    }
+
+    #[test]
+    fn stage_drops_expired_and_sizes_by_survivors() {
+        let collector = StatsCollector::default();
+        let mut ready: Vec<VecDeque<InFlight>> = vec![VecDeque::new()];
+        stage(
+            &collector,
+            &mut ready,
+            Batch {
+                net_id: 0,
+                requests: vec![req(0, true), req(1, false), req(2, false)],
+            },
+        );
+        assert_eq!(ready[0].len(), 1);
+        assert_eq!(ready[0][0].items.len(), 2);
+        // An all-expired batch stages nothing at all.
+        stage(
+            &collector,
+            &mut ready,
+            Batch {
+                net_id: 0,
+                requests: vec![req(3, true)],
+            },
+        );
+        assert_eq!(ready[0].len(), 1, "all-expired batch must vanish");
+        let stats = collector.report(1.0, 0, &crate::rt::PoolReport::default());
+        assert_eq!(stats.expired, 2);
     }
 }

@@ -71,6 +71,7 @@ impl StatsCollector {
             jobs_executed: pool.jobs_executed,
             per_class_jobs: pool.per_class_jobs,
             inline_fallbacks: pool.inline_fallbacks,
+            fused_fc_rows: pool.fused_fc_rows,
             jobs_stolen: pool.jobs_stolen,
             steal_attempts: pool.steal_attempts,
         }
@@ -106,6 +107,12 @@ pub struct ServerStats {
     /// Jobs computed inline because no pool member supported the class —
     /// zero on any pool with a NEON-class member.
     pub inline_fallbacks: u64,
+    /// Requests whose FC work was computed fused (`fc-gemm-batch`),
+    /// counting the degenerate inline last resort too.  With
+    /// `per_class_jobs` this splits FC work into fused vs unfused; on a
+    /// pool that dispatches (any realistic one), fused rows ÷ fused jobs
+    /// is the realized amortization width.
+    pub fused_fc_rows: u64,
     pub jobs_stolen: u64,
     pub steal_attempts: u64,
 }
@@ -141,6 +148,10 @@ impl ServerStats {
             "jobs inline-fallback".into(),
             self.inline_fallbacks.to_string(),
         ]);
+        t.row(vec![
+            "fc rows fused".into(),
+            self.fused_fc_rows.to_string(),
+        ]);
         t.row(vec!["jobs stolen".into(), self.jobs_stolen.to_string()]);
         t.row(vec![
             "steal attempts".into(),
@@ -169,7 +180,8 @@ mod tests {
         let pool = PoolReport {
             jobs_executed: 42,
             per_accel_jobs: vec![42],
-            per_class_jobs: [40, 1, 1],
+            per_class_jobs: [38, 1, 1, 2],
+            fused_fc_rows: 8,
             steal_attempts: 7,
             jobs_stolen: 3,
             ..Default::default()
@@ -185,10 +197,13 @@ mod tests {
         assert_eq!(s.batches, 2);
         assert_eq!(s.max_queue_depth, 9);
         assert_eq!(s.jobs_executed, 42);
-        assert_eq!(s.per_class_jobs, [40, 1, 1]);
+        assert_eq!(s.per_class_jobs, [38, 1, 1, 2]);
+        assert_eq!(s.fused_fc_rows, 8);
         let rendered = s.render();
         assert!(rendered.contains("latency p99"));
         assert!(rendered.contains("max batch size"));
         assert!(rendered.contains("jobs fc-gemm"));
+        assert!(rendered.contains("jobs fc-gemm-batch"));
+        assert!(rendered.contains("fc rows fused"));
     }
 }

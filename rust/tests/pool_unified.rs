@@ -65,6 +65,68 @@ fn fc_layers_execute_on_the_pool_not_inline() {
     assert_eq!(report.inline_fallbacks, 0);
 }
 
+/// The serving fused-FC acceptance: a B-request micro-batch driven
+/// through the server executes exactly ONE `FcGemmBatch` job per FC
+/// layer (never one per request), with zero inline fallbacks on the
+/// default ZC702 topology and reference-exact outputs.
+#[test]
+fn serving_batch_emits_one_fused_fc_job_per_fc_layer() {
+    use std::time::Duration;
+    use synergy::serve::{Request, Server, ServeOptions};
+
+    let net = mk_net("mnist"); // 2 CONV + 2 FC layers
+    let batch = 4usize;
+    let mut options = ServeOptions::default();
+    options.batch.max_batch = batch;
+    // A long window: the batch dispatches on reaching max_batch, so all
+    // B requests ride one micro-batch deterministically.
+    options.batch.window = Duration::from_secs(5);
+    options.admission_depth = 64;
+    let server = Server::start(vec![Arc::clone(&net)], options).unwrap();
+    for seq in 0..batch as u64 {
+        let input = net.make_input(seq);
+        assert!(server.submit(Request::new(0, seq, 0, input)), "shed?");
+    }
+    while server.completed() < batch as u64 {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let (stats, responses) = server.shutdown().unwrap();
+
+    assert_eq!(responses.len(), batch);
+    for r in &responses {
+        assert_eq!(r.batch_size, batch, "request rode a smaller batch");
+        let want = net.forward_reference(&net.make_input(r.frame));
+        assert!(
+            r.output.allclose(&want, 1e-4, 1e-5),
+            "frame {}: {}",
+            r.frame,
+            r.output.max_abs_diff(&want)
+        );
+    }
+
+    // Exactly one fused job per FC layer for the whole batch — the
+    // fused-vs-unfused split is visible per class.
+    assert_eq!(
+        stats.per_class_jobs[JobClass::FcGemmBatch.index()],
+        net.fc_layer_count() as u64
+    );
+    assert_eq!(stats.per_class_jobs[JobClass::FcGemm.index()], 0);
+    assert_eq!(stats.fused_fc_rows, (net.fc_layer_count() * batch) as u64);
+    // The CONV front-end still runs per request.
+    let profile = net.pool_job_profile_batched(batch);
+    assert_eq!(
+        stats.per_class_jobs[JobClass::ConvTile.index()],
+        profile[JobClass::ConvTile.index()] as u64
+    );
+    assert_eq!(
+        stats.per_class_jobs[JobClass::Im2col.index()],
+        profile[JobClass::Im2col.index()] as u64
+    );
+    assert_eq!(stats.inline_fallbacks, 0, "default ZC702 must never fall back");
+    assert_eq!(stats.expired, 0);
+    assert_eq!(stats.shed, 0);
+}
+
 /// Steal accounting stays consistent across backend classes: the per-class
 /// stolen counters sum to the total, and no class is stolen that was never
 /// dispatched.

@@ -92,6 +92,14 @@ fn random_job(g: &mut Gen, class: JobClass, id: &mut u64) -> Vec<Job> {
             *id += 1;
             vec![job]
         }
+        JobClass::FcGemmBatch => {
+            let (out_n, in_n, batch) = (g.usize_in(1, 8), g.usize_in(1, 8), g.usize_in(1, 6));
+            let w = Arc::new(vec![1.0f32; out_n * in_n]);
+            let xb = Arc::new(vec![1.0f32; in_n * batch]);
+            let job = Job::fc_batch(*id, 0, 0, out_n, in_n, batch, w, xb, 8);
+            *id += 1;
+            vec![job]
+        }
     }
 }
 
@@ -113,6 +121,10 @@ fn route(banks: &[Arc<QueueBank<Job>>], members: &[Member], class: JobClass) -> 
 
 #[test]
 fn deterministic_harness_conserves_jobs_and_never_falls_back() {
+    // Across the randomized runs the fused batched-FC class must actually
+    // be exercised — per-class conservation for FcGemmBatch is part of
+    // the contract, not an accident of the seed.
+    let fused_submitted = std::cell::Cell::new(0u64);
     check("sched-deterministic", 25, |g: &mut Gen| {
         let (banks, mut members) = random_topology(g);
         let n_clusters = banks.len();
@@ -284,7 +296,13 @@ fn deterministic_harness_conserves_jobs_and_never_falls_back() {
         }
         assert_eq!(executed_by_class, submitted_by_class, "per-class conservation");
         assert_eq!(executed_ids, submitted_ids, "job ids lost or duplicated");
+        fused_submitted
+            .set(fused_submitted.get() + submitted_by_class[JobClass::FcGemmBatch.index()]);
     });
+    assert!(
+        fused_submitted.get() > 0,
+        "randomized runs never submitted an FcGemmBatch job"
+    );
 }
 
 /// Acceptance scenario on the real pool: the default ZC702 cluster-0 is a

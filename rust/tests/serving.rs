@@ -80,24 +80,35 @@ fn two_streams_two_networks_zero_loss_and_correct() {
         assert_eq!(seqs, sorted, "stream {sid} reordered");
     }
 
-    // All matrix work (CONV tiles + FC GEMMs + im2col) went through the
-    // shared pool — FC layers are pool jobs, not inline compute.
-    let expected_jobs: u64 = responses
-        .iter()
-        .map(|r| nets[r.net_id].pool_job_profile().iter().sum::<usize>() as u64)
-        .sum();
-    assert_eq!(stats.jobs_executed, expected_jobs);
-    let expected_fc: u64 = responses
+    // All matrix work went through the shared pool: the CONV front-end
+    // (tiles + im2col) per request, FC layers as ONE fused FcGemmBatch
+    // job per micro-batch per layer — never inline, never per-request.
+    use synergy::mm::JobClass;
+    let conv_front: u64 = responses
         .iter()
         .map(|r| {
-            nets[r.net_id].pool_job_profile()[synergy::mm::JobClass::FcGemm.index()] as u64
+            let p = nets[r.net_id].pool_job_profile();
+            (p[JobClass::ConvTile.index()] + p[JobClass::Im2col.index()]) as u64
         })
         .sum();
-    assert!(expected_fc > 0, "zoo models must have FC layers");
+    let fused_jobs = stats.per_class_jobs[JobClass::FcGemmBatch.index()];
+    assert_eq!(stats.jobs_executed, conv_front + fused_jobs);
     assert_eq!(
-        stats.per_class_jobs[synergy::mm::JobClass::FcGemm.index()],
-        expected_fc
+        stats.per_class_jobs[JobClass::FcGemm.index()],
+        0,
+        "per-request FC jobs must not exist on the fused serving path"
     );
+    // Every request's FC work is covered by fused rows, exactly once per
+    // FC layer it passed through.
+    let expected_fc_rows: u64 = responses
+        .iter()
+        .map(|r| nets[r.net_id].fc_layer_count() as u64)
+        .sum();
+    assert!(expected_fc_rows > 0, "zoo models must have FC layers");
+    assert_eq!(stats.fused_fc_rows, expected_fc_rows);
+    // Fusion only ever shrinks the job count: one job per batch per FC
+    // layer, bounded by the per-request count.
+    assert!(fused_jobs >= 1 && fused_jobs <= expected_fc_rows);
     assert_eq!(stats.inline_fallbacks, 0, "serving must never compute inline");
 }
 
