@@ -1,0 +1,189 @@
+//! Remote-shard demo: the `Accelerator` registry's first out-of-tree
+//! backend, end to end over real TCP on localhost.
+//!
+//! ```sh
+//! cargo run --release --example remote_shard -- [--frames 6] [--rounds 40]
+//! ```
+//!
+//! Two pools run in one process, talking over a real socket:
+//! * a **shard pool** (2 NEONs) behind a `ShardServer`, executing jobs
+//!   shipped to it;
+//! * a **client pool**: the default ZC702 platform plus a third cluster
+//!   whose one member is `remote = 127.0.0.1:<port>` — registered through
+//!   the public registry API (`register_config_shards`), never
+//!   special-cased in the runtime.
+//!
+//! Phase 1 streams frames through a full network forward (the static
+//! mapper hands the shard — the strongest cluster by aggregate rate — its
+//! share of CONV layers) and validates every output against the reference
+//! forward.  Phase 2 bursts un-hinted CONV GEMMs + fused FC batches from
+//! several threads until the shipping-cost routing demonstrably offloads
+//! BOTH classes to the shard.  The run asserts zero lost jobs, zero
+//! inline fallbacks, zero delegate failures, and that the client's
+//! remote-member ledger balances the shard pool's own report exactly.
+
+use std::sync::Arc;
+
+use synergy::accel::{register_config_shards, AccelClass, BackendRegistry};
+use synergy::config::{zoo, ClusterCfg, HwConfig};
+use synergy::mm::job::JobClass;
+use synergy::mm::TileGrid;
+use synergy::nn::Network;
+use synergy::rt::{ComputeMode, DelegatePool, GemmCtx, PoolOptions, PoolRouter};
+use synergy::runtime::default_artifacts_dir;
+use synergy::sched::static_map;
+use synergy::serve::ShardServer;
+use synergy::util::argparse::Args;
+use synergy::util::rng::XorShift64Star;
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &[]).map_err(anyhow::Error::msg)?;
+    let frames = args.get_usize("frames", 6).map_err(anyhow::Error::msg)? as u64;
+    let max_rounds = args.get_usize("rounds", 40).map_err(anyhow::Error::msg)?;
+
+    // 1. The remote end: a 2-NEON pool behind a TCP listener.
+    let mut shard_hw = HwConfig::default_zc702();
+    shard_hw.clusters = vec![ClusterCfg {
+        name: "shard-pool".into(),
+        neon: 2,
+        big_neon: 0,
+        remote: Vec::new(),
+        pes: Vec::new(),
+    }];
+    let shard = ShardServer::start(
+        "127.0.0.1:0",
+        &PoolOptions::new(shard_hw, ComputeMode::Native, false),
+    )?;
+    println!("shard pool listening on {}", shard.addr());
+
+    // 2. The client: default ZC702 + one remote member dialing the shard.
+    let mut hw = HwConfig::default_zc702();
+    hw.clusters.push(ClusterCfg {
+        name: "offload".into(),
+        neon: 0,
+        big_neon: 0,
+        remote: vec![shard.addr().to_string()],
+        pes: Vec::new(),
+    });
+    let mut registry =
+        BackendRegistry::with_defaults(default_artifacts_dir(), hw.big_neon_threads);
+    register_config_shards(&mut registry, &hw);
+    let mut options = PoolOptions::new(hw, ComputeMode::Native, true);
+    options.registry = Some(Arc::new(registry));
+    let pool = Arc::new(DelegatePool::start(&options)?);
+    let accels = pool.accels();
+    let remote_id = accels
+        .iter()
+        .find(|a| matches!(a.class, AccelClass::Remote { .. }))
+        .expect("remote member in the client pool")
+        .id;
+
+    // 3. Phase 1 — full network forwards with the static mapping.
+    let net = Arc::new(Network::new(zoo::load("mnist")?, 32)?);
+    let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
+    println!(
+        "mnist CONV layers → clusters {assignment:?} (cluster 2 is the shard)"
+    );
+    let router = PoolRouter::new(&net, pool.dispatcher(), &assignment);
+    let mut max_err = 0f32;
+    for f in 0..frames {
+        let x = net.make_input(f);
+        let y = net.forward_with(&x, &router.frame(f));
+        max_err = max_err.max(y.max_abs_diff(&net.forward_reference(&x)));
+    }
+    assert!(max_err < 1e-3, "forward diverged from reference: {max_err}");
+    println!("{frames} frames forwarded; max |err| vs reference = {max_err:.2e}");
+
+    // 4. Phase 2 — un-hinted load bursts until the shipping-cost routing
+    //    offloads both CONV tiles and fused FC batches to the shard.
+    let grid = TileGrid::new(128, 512, 128, 32);
+    let a = Arc::new(XorShift64Star::new(1).fill_f32(128 * 512, 1.0));
+    let b = Arc::new(XorShift64Star::new(2).fill_f32(512 * 128, 1.0));
+    let w = Arc::new(XorShift64Star::new(3).fill_f32(64 * 128, 1.0));
+    let xb = Arc::new(XorShift64Star::new(4).fill_f32(128 * 8, 1.0));
+    let mut rounds = 0usize;
+    loop {
+        rounds += 1;
+        assert!(
+            rounds <= max_rounds,
+            "routing never offloaded both classes after {max_rounds} rounds: {:?}",
+            pool.snapshot().per_accel_by_class[remote_id]
+        );
+        let workers: Vec<_> = (0..3usize)
+            .map(|t| {
+                let pool = Arc::clone(&pool);
+                let (a, b) = (Arc::clone(&a), Arc::clone(&b));
+                let (w, xb) = (Arc::clone(&w), Arc::clone(&xb));
+                std::thread::spawn(move || {
+                    let dispatcher = pool.dispatcher();
+                    let ctx = GemmCtx {
+                        cluster: None,
+                        layer_idx: t,
+                        frame_id: t as u64,
+                    };
+                    let c = dispatcher.execute_gemm(ctx, grid, a, b);
+                    let y = dispatcher.execute_fc_batch(ctx, 64, 128, 8, w, xb, 32);
+                    (c.len(), y.len())
+                })
+            })
+            .collect();
+        for h in workers {
+            let (c_len, y_len) = h.join().expect("load worker");
+            assert_eq!(c_len, 128 * 128);
+            assert_eq!(y_len, 64 * 8);
+        }
+        let ledger = pool.snapshot().per_accel_by_class[remote_id];
+        if ledger[JobClass::ConvTile.index()] > 0 && ledger[JobClass::FcGemmBatch.index()] > 0
+        {
+            break;
+        }
+    }
+    println!("offload observed after {rounds} load round(s)");
+
+    // 5. Reports: shut the client down first (the shard's connection
+    //    threads exit when their peers hang up), then the shard.
+    let pool = Arc::try_unwrap(pool).unwrap_or_else(|_| panic!("pool still shared"));
+    let report = pool.shutdown()?;
+    println!("\n=== client pool ===");
+    println!("{:<14} {:>10} {:>10} {:>10} {:>10}", "accel", "conv", "fc", "im2col", "fc-batch");
+    for accel in &accels {
+        let row = &report.per_accel_by_class[accel.id];
+        println!(
+            "{:<14} {:>10} {:>10} {:>10} {:>10}",
+            accel.name,
+            row[JobClass::ConvTile.index()],
+            row[JobClass::FcGemm.index()],
+            row[JobClass::Im2col.index()],
+            row[JobClass::FcGemmBatch.index()],
+        );
+    }
+    let remote_row = report.per_accel_by_class[remote_id];
+    let shard_report = shard.shutdown()?;
+    println!("\n=== shard pool ===");
+    println!(
+        "executed {} job(s): {} conv-tile, {} fc-gemm-batch",
+        shard_report.jobs_executed,
+        shard_report.per_class_jobs[JobClass::ConvTile.index()],
+        shard_report.per_class_jobs[JobClass::FcGemmBatch.index()],
+    );
+
+    // Zero shed/lost work, and the two ledgers balance exactly.
+    assert_eq!(report.inline_fallbacks, 0, "inline fallback fired");
+    assert_eq!(report.delegate_failures, 0, "a delegate died");
+    assert_eq!(report.requeued_jobs, 0, "jobs were requeued unexpectedly");
+    assert!(remote_row[JobClass::ConvTile.index()] > 0);
+    assert!(remote_row[JobClass::FcGemmBatch.index()] > 0);
+    assert_eq!(
+        shard_report.per_class_jobs[JobClass::ConvTile.index()],
+        remote_row[JobClass::ConvTile.index()],
+        "conv ledger mismatch between client and shard"
+    );
+    assert_eq!(
+        shard_report.per_class_jobs[JobClass::FcGemmBatch.index()],
+        remote_row[JobClass::FcGemmBatch.index()],
+        "fused-FC ledger mismatch between client and shard"
+    );
+    println!("\nzero lost jobs; client remote ledger == shard pool ledger ✓");
+    Ok(())
+}

@@ -6,14 +6,19 @@
 //! ```sh
 //! cargo run --release --example serving_load -- \
 //!     [--models mpcnn,mnist] [--streams 4] [--requests 40] [--rate 400] \
-//!     [--max-batch 4] [--window-us 2000] [--depth 256] [--deadline-ms 0]
+//!     [--max-batch 4] [--window-us 2000] [--depth 256] [--deadline-ms 0] \
+//!     [--duration-ms 0] [--expect-no-shed]
 //! ```
 //!
 //! Every response is cross-checked against the reference forward, and the
 //! run asserts zero lost requests under the admission limits.
+//! `--duration-ms N` caps each stream's submission phase at N ms of wall
+//! clock (0 = submit all `--requests`), so CI can bound the run; with
+//! `--expect-no-shed` the run additionally fails if ANY request was shed
+//! at admission — zero shed AND zero lost, asserted on exit.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use synergy::config::zoo;
 use synergy::nn::Network;
@@ -22,7 +27,7 @@ use synergy::util::argparse::Args;
 
 fn main() -> anyhow::Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["no-steal"]).map_err(anyhow::Error::msg)?;
+    let args = Args::parse(&raw, &["no-steal", "expect-no-shed"]).map_err(anyhow::Error::msg)?;
     let model_list = args.get_or("models", "mpcnn,mnist");
     let n_streams = args.get_usize("streams", 4).map_err(anyhow::Error::msg)?;
     let n_requests = args.get_usize("requests", 40).map_err(anyhow::Error::msg)?;
@@ -31,6 +36,8 @@ fn main() -> anyhow::Result<()> {
     let window_us = args.get_usize("window-us", 2000).map_err(anyhow::Error::msg)?;
     let depth = args.get_usize("depth", 256).map_err(anyhow::Error::msg)?;
     let deadline_ms = args.get_usize("deadline-ms", 0).map_err(anyhow::Error::msg)?;
+    let duration_ms = args.get_usize("duration-ms", 0).map_err(anyhow::Error::msg)?;
+    let expect_no_shed = args.has_flag("expect-no-shed");
 
     // ≥2 networks served side by side from the model zoo.
     let names: Vec<&str> = model_list.split(',').map(|s| s.trim()).collect();
@@ -71,7 +78,14 @@ fn main() -> anyhow::Result<()> {
         clients.push(std::thread::spawn(move || {
             let mut submitted = 0u64;
             let mut shed = 0u64;
+            let t0 = Instant::now();
             while let Some((gap, req)) = stream.next_arrival() {
+                // Optional wall-clock cap on the submission phase (CI runs
+                // bounded loads; everything submitted still drains fully).
+                if duration_ms > 0 && t0.elapsed() >= Duration::from_millis(duration_ms as u64)
+                {
+                    break;
+                }
                 std::thread::sleep(gap);
                 if server.submit(req) {
                     submitted += 1;
@@ -117,6 +131,9 @@ fn main() -> anyhow::Result<()> {
     // Zero lost requests under admission limits: everything admitted either
     // completed or was an explicit deadline expiry.
     assert_eq!(stats.shed, client_shed, "shed accounting mismatch");
+    if expect_no_shed {
+        assert_eq!(client_shed, 0, "--expect-no-shed: {client_shed} requests shed");
+    }
     assert_eq!(
         stats.completed + stats.expired,
         admitted,

@@ -41,12 +41,18 @@ pub trait Accelerator {
 
     /// Relative service-cost estimate for `job` (k-steps scaled by the
     /// backend's parallelism; comparable across backends of one pool).
-    /// Advisory metadata with a k-steps default: current routing uses
-    /// cluster-level `PerfModel` service rates and the thief uses
-    /// `StealPolicy::class_cost`, so implementors should not expect
-    /// per-job routing effects from this yet (a cost-aware dispatcher is
-    /// the intended consumer) — override only when the backend's
-    /// parallelism skews cost away from raw k-steps.
+    ///
+    /// The statically-known component of this estimate — the fixed
+    /// per-job overhead in k-step equivalents — is ALSO registered as
+    /// [`BackendEntry::overhead_ksteps`] (see
+    /// [`BackendRegistry::register_with_cost`]), and that metadata IS
+    /// consumed: the dispatcher adds it to a cluster's routing load so
+    /// small jobs stay on zero-overhead local members, and the thief's
+    /// ship gate refuses to move backlogs that drain faster than they
+    /// ship (`rt::pool::ClusterRoute`, `sched::worksteal`).  Implementors
+    /// with a fixed overhead (e.g. a remote shard's transport round trip)
+    /// must report the same constant both places; the per-job method here
+    /// additionally scales with the job's size.
     fn cost(&self, job: &Job) -> f64 {
         job.ksteps() as f64
     }
@@ -377,12 +383,18 @@ impl Accelerator for PjrtPe {
 /// entry builds one backend instance per delegate thread.
 pub type BackendBuilder = Arc<dyn Fn() -> Result<Box<dyn Accelerator>> + Send + Sync>;
 
-/// One registered backend: name, capability mask (known *before* any
-/// instance exists, so the pool can route and the thief can filter), and
-/// the per-delegate builder.
+/// One registered backend: name, capability mask and fixed per-job
+/// overhead (both known *before* any instance exists, so the pool can
+/// route and the thief can filter/gate), and the per-delegate builder.
 pub struct BackendEntry {
     name: String,
     pub caps: ClassMask,
+    /// Fixed per-job overhead in k-step equivalents of this backend's
+    /// service rate — 0 for in-tree local backends, the transport round
+    /// trip for a remote shard.  Consumed by the dispatcher's routing
+    /// penalty and the thief's ship gate; must match what the backend's
+    /// [`Accelerator::cost`] reports as its constant term.
+    pub overhead_ksteps: f64,
     builder: BackendBuilder,
 }
 
@@ -451,15 +463,33 @@ impl BackendRegistry {
         reg
     }
 
-    /// Register (or replace) a backend under `name`.
+    /// Register (or replace) a backend under `name` with no fixed per-job
+    /// overhead (local backends).
     pub fn register<F>(&mut self, name: &str, caps: ClassMask, builder: F)
     where
+        F: Fn() -> Result<Box<dyn Accelerator>> + Send + Sync + 'static,
+    {
+        self.register_with_cost(name, caps, 0.0, builder);
+    }
+
+    /// Register (or replace) a backend under `name` with an explicit fixed
+    /// per-job overhead in k-step equivalents (see
+    /// [`BackendEntry::overhead_ksteps`]) — the registration a remote
+    /// shard uses so routing and stealing price its round trip in.
+    pub fn register_with_cost<F>(
+        &mut self,
+        name: &str,
+        caps: ClassMask,
+        overhead_ksteps: f64,
+        builder: F,
+    ) where
         F: Fn() -> Result<Box<dyn Accelerator>> + Send + Sync + 'static,
     {
         self.entries.retain(|e| e.name != name);
         self.entries.push(BackendEntry {
             name: name.to_string(),
             caps,
+            overhead_ksteps,
             builder: Arc::new(builder),
         });
     }
@@ -506,6 +536,19 @@ mod tests {
         });
         assert_eq!(reg.names(), vec!["x"]);
         assert_eq!(reg.get("x").unwrap().caps, ClassMask::of(&[JobClass::Im2col]));
+    }
+
+    #[test]
+    fn overhead_metadata_defaults_to_zero_and_registers_explicitly() {
+        let mut reg = BackendRegistry::with_defaults(PathBuf::from("/nonexistent"), 2);
+        // Every in-tree backend is local: no fixed shipping overhead.
+        for name in ["neon", "big-neon", "pjrt-pe"] {
+            assert_eq!(reg.get(name).unwrap().overhead_ksteps, 0.0, "{name}");
+        }
+        reg.register_with_cost("shippy", ClassMask::all(), 12.5, || {
+            Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
+        });
+        assert_eq!(reg.get("shippy").unwrap().overhead_ksteps, 12.5);
     }
 
     #[test]

@@ -13,10 +13,15 @@
 //!   (NEON path), or the multi-threaded big-core GEMM.
 
 pub mod backend;
+pub mod remote;
 pub mod timing;
 
 pub use backend::{
     Accelerator, BackendBuilder, BackendEntry, BackendRegistry, BigNeonGemm, NativeGemm,
+};
+pub use remote::{
+    register_config_shards, register_tcp_shard, ChannelTransport, RemoteShard, ShardTransport,
+    TcpTransport,
 };
 pub use timing::{AccelClass, PerfModel};
 
@@ -25,13 +30,17 @@ use crate::mm::job::{ClassMask, JobClass};
 
 /// Job classes an accelerator class executes *as hardware*: FPGA PEs only
 /// speak CONV tiles (that is what the HLS kernel computes), NEON-class
-/// software accelerators execute every class.  The threaded runtime
-/// derives member masks from the backend registry instead (compute-mode
-/// aware); this is the physical view the virtual-clock simulator uses.
+/// software accelerators execute every class, and remote shards advertise
+/// only the classes whose work amortizes a transport round trip
+/// (CONV-tile + fused batched FC — [`remote::remote_class_mask`]).  The
+/// threaded runtime derives member masks from the backend registry
+/// instead (compute-mode aware); this is the physical view the
+/// virtual-clock simulator uses.
 pub fn hw_class_mask(class: &AccelClass) -> ClassMask {
     match class {
         AccelClass::FpgaPe { .. } => ClassMask::of(&[JobClass::ConvTile]),
         AccelClass::Neon | AccelClass::BigNeon => ClassMask::all(),
+        AccelClass::Remote { .. } => remote::remote_class_mask(),
     }
 }
 
@@ -135,6 +144,18 @@ pub fn build_clusters(hw: &HwConfig) -> Vec<ClusterSpec> {
             });
             next_id += 1;
         }
+        for (n, addr) in ccfg.remote.iter().enumerate() {
+            members.push(AccelSpec {
+                id: next_id,
+                cluster: ci,
+                name: format!("RSHARD#{n}@c{ci}"),
+                class: AccelClass::Remote { addr: addr.clone() },
+                perf: PerfModel::remote(hw.tile_size, hw.cpu_mhz),
+                // Traffic rides the transport, not an FPGA MMU channel.
+                mmu: None,
+            });
+            next_id += 1;
+        }
         clusters.push(ClusterSpec {
             index: ci,
             name: ccfg.name.clone(),
@@ -186,7 +207,8 @@ pub fn filter_clusters<F: Fn(&AccelSpec) -> bool>(
 }
 
 /// `(cluster_cfg, …)` pretty description, e.g. "2N+2S | 6F" (a "+xB"
-/// suffix appears when big-core NEON clusters are configured).
+/// suffix appears when big-core NEON clusters are configured, "+xR" when
+/// remote shard members are).
 pub fn describe(clusters: &[ClusterSpec]) -> String {
     clusters
         .iter()
@@ -201,6 +223,11 @@ pub fn describe(clusters: &[ClusterSpec]) -> String {
                 .iter()
                 .filter(|m| m.class == AccelClass::BigNeon)
                 .count();
+            let shards = c
+                .members
+                .iter()
+                .filter(|m| matches!(m.class, AccelClass::Remote { .. }))
+                .count();
             let spe = c
                 .members
                 .iter()
@@ -214,6 +241,9 @@ pub fn describe(clusters: &[ClusterSpec]) -> String {
             let mut s = format!("{}N+{}S+{}F", neon, spe, fpe);
             if big > 0 {
                 s.push_str(&format!("+{}B", big));
+            }
+            if shards > 0 {
+                s.push_str(&format!("+{}R", shards));
             }
             s
         })
@@ -240,6 +270,7 @@ pub fn clusters_from_tuples(hw: &HwConfig, tuples: &[(usize, usize, usize)]) -> 
                 name: format!("cluster{i}"),
                 neon: *neon,
                 big_neon: 0,
+                remote: Vec::new(),
                 pes,
             }
         })
@@ -338,6 +369,43 @@ mod tests {
         assert!(big[0].mmu.is_none());
         assert!(describe(&clusters).starts_with("2N+2S+0F+1B"));
         // ids stay dense
+        for (i, a) in all_accels(&clusters).iter().enumerate() {
+            assert_eq!(a.id, i);
+        }
+    }
+
+    #[test]
+    fn remote_members_built_from_config() {
+        let mut hw = HwConfig::default_zc702();
+        hw.clusters.push(ClusterCfg {
+            name: "shard".into(),
+            neon: 0,
+            big_neon: 0,
+            remote: vec!["10.0.0.9:7000".into()],
+            pes: Vec::new(),
+        });
+        let clusters = build_clusters(&hw);
+        assert_eq!(clusters.len(), 3);
+        let shard = &clusters[2].members[0];
+        assert!(shard.name.starts_with("RSHARD#"));
+        assert!(!shard.is_fpga());
+        assert!(shard.mmu.is_none());
+        assert_eq!(
+            shard.class,
+            AccelClass::Remote {
+                addr: "10.0.0.9:7000".into()
+            }
+        );
+        // The hardware view: CONV tiles + fused batched FC only.
+        let mask = hw_class_mask(&shard.class);
+        assert!(mask.supports(JobClass::ConvTile));
+        assert!(mask.supports(JobClass::FcGemmBatch));
+        assert!(!mask.supports(JobClass::FcGemm));
+        assert!(!mask.supports(JobClass::Im2col));
+        assert_eq!(clusters[2].throughput_for(JobClass::FcGemm), 0.0);
+        assert!(clusters[2].throughput_for(JobClass::ConvTile) > 0.0);
+        assert!(describe(&clusters).ends_with("0N+0S+0F+1R"));
+        // ids stay dense across the remote member
         for (i, a) in all_accels(&clusters).iter().enumerate() {
             assert_eq!(a.id, i);
         }

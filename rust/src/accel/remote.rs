@@ -1,0 +1,892 @@
+//! Remote-shard accelerator backend — the registry's first out-of-tree
+//! plug-in, and the first piece of multi-machine sharding.
+//!
+//! A [`RemoteShard`] implements [`Accelerator`] by *shipping* each job to a
+//! peer over a [`ShardTransport`] and blocking for the framed result, so a
+//! second machine's accelerator pool joins the local pool as one more
+//! cluster member (NEURAghe generalizes the paper's CPU–FPGA split across
+//! Zynq variants via a stable accelerator interface; co-scheduling across
+//! physically separate compute domains is the mobile-SoC study's
+//! throughput lever — a LAN shard is the rust_pallas analogue of both).
+//!
+//! Everything here goes through the **public registry API**: nothing in
+//! `rt/` knows this backend exists.  `[cluster] remote = "host:port"` in a
+//! hardware config spawns a member whose registry key is
+//! [`shard_backend_name`]; callers register that key (usually via
+//! [`register_config_shards`]) before starting the pool, exactly like any
+//! other custom backend.
+//!
+//! Two transports ship in-tree:
+//! * [`ChannelTransport`] — in-process duplex mpsc channels
+//!   ([`duplex_pair`]), the deterministic test harness;
+//! * [`TcpTransport`] — length-prefixed frames over a TCP stream, the real
+//!   thing ([`crate::serve::ShardServer`] hosts the far end: a second
+//!   `DelegatePool` executing shipped jobs).
+//!
+//! ## Capability and cost
+//!
+//! The remote mask is deliberately narrow ([`remote_class_mask`]:
+//! CONV-tile + fused batched FC): a round trip costs hundreds of
+//! microseconds, so only job classes that carry whole-tile or whole-batch
+//! work amortize it — single-column FC GEMMs and im2col stay local by
+//! *capability*, and the dispatcher/thief keep small backlogs local by
+//! *cost* ([`REMOTE_OVERHEAD_KSTEPS`] feeds the routing penalty and the
+//! thief's ship gate through the registry's `overhead_ksteps` metadata;
+//! [`RemoteShard`]'s `Accelerator::cost` reports the same number).
+//!
+//! ## Failure
+//!
+//! A dropped transport makes `execute` return an error; the delegate then
+//! **requeues** the failed job and the rest of its drained run onto the
+//! cluster bank and dies (`rt::delegate`), so surviving members drain the
+//! work — zero jobs lost, proven by `tests/remote_shard.rs` and the
+//! `failure_injection` harness.  (Jobs of a class NO survivor covers are
+//! dropped instead, failing blocking callers fast — see the delegate's
+//! rescue mask.)  Requeue is safe because jobs are pure: in the worst
+//! case a job whose result frame was lost in flight computes twice, and
+//! exactly one result reaches the reply channel.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::accel::backend::{Accelerator, BackendRegistry};
+use crate::config::HwConfig;
+use crate::mm::job::{ClassMask, Job, JobClass, JobDesc, JobKind, JobResult};
+use crate::mm::TileGrid;
+
+/// Job classes a remote shard advertises: only the classes whose per-job
+/// work amortizes a transport round trip (see the module docs).
+pub fn remote_class_mask() -> ClassMask {
+    ClassMask::of(&[JobClass::ConvTile, JobClass::FcGemmBatch])
+}
+
+/// Fixed per-job shipping overhead in k-step equivalents — serialization
+/// plus two one-way LAN latencies.  20 k-steps of the modelled remote rate
+/// (`PerfModel::remote`, ts = 32 at 667 MHz) is ≈ 0.5 ms, matching that
+/// model's `job_overhead_seconds`.  Registered as the backend's
+/// `overhead_ksteps` metadata, which the dispatcher's routing penalty and
+/// the thief's ship gate consume; `RemoteShard::cost` reports the same
+/// number per job.
+pub const REMOTE_OVERHEAD_KSTEPS: f64 = 20.0;
+
+/// Registry key of the shard backend dialing `addr` — the name
+/// `rt::pool::backend_key` resolves for an `AccelClass::Remote` member.
+pub fn shard_backend_name(addr: &str) -> String {
+    format!("remote:{addr}")
+}
+
+// ------------------------------------------------------------- transport
+
+/// One frame in, one frame out: the byte pipe a [`RemoteShard`] ships jobs
+/// over.  Implementations own their framing (the TCP impl length-prefixes;
+/// the channel impl sends whole frames as messages).  Errors mean the peer
+/// is gone — the caller treats the shard as dead, never retries.
+pub trait ShardTransport: Send {
+    /// Ship one frame.  Errors when the peer has gone away.
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+
+    /// Block for the next frame.  Errors when the peer has gone away.
+    fn recv(&mut self) -> Result<Vec<u8>>;
+}
+
+/// In-process duplex transport over mpsc channels: deterministic tests
+/// exercise the full ship → decode → execute → encode → reply path with no
+/// sockets.  Dropping either end kills the link (the other side's
+/// `send`/`recv` starts failing), which is exactly how the failure tests
+/// sever a shard mid-batch.
+pub struct ChannelTransport {
+    tx: mpsc::Sender<Vec<u8>>,
+    rx: mpsc::Receiver<Vec<u8>>,
+}
+
+/// Build a connected pair of in-process transports.
+pub fn duplex_pair() -> (ChannelTransport, ChannelTransport) {
+    let (tx_ab, rx_ab) = mpsc::channel();
+    let (tx_ba, rx_ba) = mpsc::channel();
+    (
+        ChannelTransport {
+            tx: tx_ab,
+            rx: rx_ba,
+        },
+        ChannelTransport {
+            tx: tx_ba,
+            rx: rx_ab,
+        },
+    )
+}
+
+impl ShardTransport for ChannelTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.tx
+            .send(frame.to_vec())
+            .map_err(|_| anyhow!("shard transport closed (peer dropped)"))
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("shard transport closed (peer dropped)"))
+    }
+}
+
+/// Upper bound on one frame (operands of the largest zoo FC layer fit with
+/// two orders of magnitude to spare); a peer announcing more is broken or
+/// hostile, not busy.
+const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Length-prefixed framing over a TCP stream: each frame is a little-endian
+/// `u32` byte count followed by the payload.
+pub struct TcpTransport {
+    stream: TcpStream,
+}
+
+impl TcpTransport {
+    /// Dial a shard server (used inside the delegate thread by the builder
+    /// [`register_tcp_shard`] installs — one connection per delegate).
+    pub fn connect(addr: &str) -> Result<TcpTransport> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("dialing remote shard at {addr}"))?;
+        // Job/result frames are the unit of progress; coalescing them
+        // behind Nagle only adds round-trip latency.
+        let _ = stream.set_nodelay(true);
+        Ok(TcpTransport { stream })
+    }
+
+    /// Wrap an accepted connection (the server side).
+    pub fn from_stream(stream: TcpStream) -> TcpTransport {
+        let _ = stream.set_nodelay(true);
+        TcpTransport { stream }
+    }
+}
+
+impl ShardTransport for TcpTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        let len = u32::try_from(frame.len()).context("shard frame exceeds u32 length")?;
+        self.stream
+            .write_all(&len.to_le_bytes())
+            .context("writing shard frame length")?;
+        self.stream
+            .write_all(frame)
+            .context("writing shard frame")?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut len_bytes = [0u8; 4];
+        self.stream
+            .read_exact(&mut len_bytes)
+            .context("reading shard frame length")?;
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        ensure!(len <= MAX_FRAME_BYTES, "oversized shard frame ({len} bytes)");
+        let mut frame = vec![0u8; len];
+        self.stream
+            .read_exact(&mut frame)
+            .context("reading shard frame")?;
+        Ok(frame)
+    }
+}
+
+// ------------------------------------------------------------------ wire
+
+/// The job/result byte format shipped over a [`ShardTransport`].
+///
+/// Hand-rolled little-endian encoding (no serialization crate in the
+/// offline registry): a one-byte kind tag, the [`JobDesc`] as nine `u64`s
+/// (job/layer/frame ids, tile coordinates, grid geometry), then the
+/// operand buffers as length-prefixed `f32` runs.  Decoding rebuilds the
+/// exact [`Job`] value, so `execute_native` on the far end is bit-identical
+/// to local execution — the property `tests/remote_shard.rs` pins across
+/// the model zoo.
+pub mod wire {
+    use super::*;
+
+    const KIND_CONV_TILE: u8 = 0;
+    const KIND_FC_GEMM: u8 = 1;
+    const KIND_IM2COL: u8 = 2;
+    const KIND_FC_GEMM_BATCH: u8 = 3;
+
+    /// Result frames lead with a status byte so a shard can answer with a
+    /// readable error instead of dropping the connection.
+    const STATUS_OK: u8 = 0;
+    const STATUS_ERR: u8 = 1;
+
+    /// Decoder-side cap on one announced buffer (f32 elements): a frame
+    /// already passed the transport's byte cap, this guards the
+    /// allocation a corrupt length field would request.
+    const MAX_ELEMS: usize = 1 << 27;
+
+    fn put_u64(buf: &mut Vec<u8>, v: u64) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_f32s(buf: &mut Vec<u8>, data: &[f32]) {
+        put_u64(buf, data.len() as u64);
+        for v in data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn put_desc(buf: &mut Vec<u8>, desc: &JobDesc) {
+        put_u64(buf, desc.job_id);
+        put_u64(buf, desc.layer_id as u64);
+        put_u64(buf, desc.frame_id);
+        put_u64(buf, desc.t1 as u64);
+        put_u64(buf, desc.t2 as u64);
+        put_u64(buf, desc.grid.m as u64);
+        put_u64(buf, desc.grid.n as u64);
+        put_u64(buf, desc.grid.p as u64);
+        put_u64(buf, desc.grid.ts as u64);
+    }
+
+    /// Bounds-checked little-endian reader.
+    struct Rd<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> Rd<'a> {
+        fn new(buf: &'a [u8]) -> Rd<'a> {
+            Rd { buf, pos: 0 }
+        }
+
+        fn u8(&mut self) -> Result<u8> {
+            let b = *self
+                .buf
+                .get(self.pos)
+                .ok_or_else(|| anyhow!("truncated shard frame"))?;
+            self.pos += 1;
+            Ok(b)
+        }
+
+        fn u64(&mut self) -> Result<u64> {
+            let end = self.pos + 8;
+            let bytes = self
+                .buf
+                .get(self.pos..end)
+                .ok_or_else(|| anyhow!("truncated shard frame"))?;
+            self.pos = end;
+            Ok(u64::from_le_bytes(bytes.try_into().expect("8-byte slice")))
+        }
+
+        fn usize(&mut self) -> Result<usize> {
+            usize::try_from(self.u64()?).context("field exceeds usize")
+        }
+
+        fn f32s(&mut self) -> Result<Vec<f32>> {
+            let n = self.usize()?;
+            ensure!(n <= MAX_ELEMS, "shard frame announces {n} f32s");
+            let end = self.pos + n * 4;
+            let bytes = self
+                .buf
+                .get(self.pos..end)
+                .ok_or_else(|| anyhow!("truncated shard frame"))?;
+            self.pos = end;
+            Ok(bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+                .collect())
+        }
+
+        fn bytes(&mut self) -> Result<&'a [u8]> {
+            let n = self.usize()?;
+            // Bound before adding: a corrupt length must error, not
+            // overflow the cursor.
+            ensure!(
+                n <= self.buf.len() - self.pos,
+                "truncated shard frame"
+            );
+            let end = self.pos + n;
+            let bytes = self
+                .buf
+                .get(self.pos..end)
+                .ok_or_else(|| anyhow!("truncated shard frame"))?;
+            self.pos = end;
+            Ok(bytes)
+        }
+
+        fn desc(&mut self) -> Result<JobDesc> {
+            let job_id = self.u64()?;
+            let layer_id = self.usize()?;
+            let frame_id = self.u64()?;
+            let t1 = self.usize()?;
+            let t2 = self.usize()?;
+            let m = self.usize()?;
+            let n = self.usize()?;
+            let p = self.usize()?;
+            let ts = self.usize()?;
+            // Each dimension bounded by the element cap: products of two
+            // stay well inside usize, so the operand-size cross-checks
+            // below can never overflow.
+            ensure!(
+                ts > 0 && ts.is_power_of_two() && m > 0 && n > 0 && p > 0,
+                "shard frame carries a degenerate grid ({m}x{n}x{p}, ts {ts})"
+            );
+            ensure!(
+                m <= MAX_ELEMS && n <= MAX_ELEMS && p <= MAX_ELEMS && ts <= MAX_ELEMS,
+                "shard frame carries an oversized grid ({m}x{n}x{p}, ts {ts})"
+            );
+            Ok(JobDesc {
+                job_id,
+                layer_id,
+                frame_id,
+                t1,
+                t2,
+                grid: TileGrid::new(m, n, p, ts),
+            })
+        }
+
+        fn done(&self) -> Result<()> {
+            ensure!(
+                self.pos == self.buf.len(),
+                "{} trailing bytes in shard frame",
+                self.buf.len() - self.pos
+            );
+            Ok(())
+        }
+    }
+
+    /// Serialized [`JobDesc`] size: nine `u64` fields.
+    const DESC_BYTES: usize = 9 * 8;
+
+    /// Encode one job for shipping.  The frame size is known up front, so
+    /// the buffer is reserved once — megabyte operand runs must not pay
+    /// log₂(n) reallocation copies on the per-job shipping path.
+    pub fn encode_job(job: &Job) -> Vec<u8> {
+        let payload = match &job.kind {
+            JobKind::ConvTile { a, b }
+            | JobKind::FcGemm { a, b }
+            | JobKind::FcGemmBatch { a, b } => 16 + (a.len() + b.len()) * 4,
+            JobKind::Im2col { input, .. } => 8 + input.len() * 4 + 6 * 8,
+        };
+        let mut buf = Vec::with_capacity(1 + DESC_BYTES + payload);
+        match &job.kind {
+            JobKind::ConvTile { a, b } => {
+                buf.push(KIND_CONV_TILE);
+                put_desc(&mut buf, &job.desc);
+                put_f32s(&mut buf, a);
+                put_f32s(&mut buf, b);
+            }
+            JobKind::FcGemm { a, b } => {
+                buf.push(KIND_FC_GEMM);
+                put_desc(&mut buf, &job.desc);
+                put_f32s(&mut buf, a);
+                put_f32s(&mut buf, b);
+            }
+            JobKind::FcGemmBatch { a, b } => {
+                buf.push(KIND_FC_GEMM_BATCH);
+                put_desc(&mut buf, &job.desc);
+                put_f32s(&mut buf, a);
+                put_f32s(&mut buf, b);
+            }
+            JobKind::Im2col {
+                input,
+                chw,
+                size,
+                stride,
+                pad,
+            } => {
+                buf.push(KIND_IM2COL);
+                put_desc(&mut buf, &job.desc);
+                put_f32s(&mut buf, input);
+                put_u64(&mut buf, chw.0 as u64);
+                put_u64(&mut buf, chw.1 as u64);
+                put_u64(&mut buf, chw.2 as u64);
+                put_u64(&mut buf, *size as u64);
+                put_u64(&mut buf, *stride as u64);
+                put_u64(&mut buf, *pad as u64);
+            }
+        }
+        buf
+    }
+
+    /// Decode one shipped job back into the exact [`Job`] value.  Operand
+    /// sizes are re-validated against the decoded geometry, so a corrupt
+    /// frame is an error here, never a panic in a kernel.
+    pub fn decode_job(frame: &[u8]) -> Result<Job> {
+        let mut rd = Rd::new(frame);
+        let tag = rd.u8()?;
+        let desc = rd.desc()?;
+        let g = desc.grid;
+        let kind = match tag {
+            KIND_CONV_TILE | KIND_FC_GEMM | KIND_FC_GEMM_BATCH => {
+                let a = rd.f32s()?;
+                let b = rd.f32s()?;
+                ensure!(a.len() == g.m * g.n, "A operand size mismatch in shard frame");
+                ensure!(b.len() == g.n * g.p, "B operand size mismatch in shard frame");
+                ensure!(
+                    tag != KIND_CONV_TILE || (desc.t1 < g.rows() && desc.t2 < g.cols()),
+                    "tile coordinates outside the grid in shard frame"
+                );
+                let (a, b) = (std::sync::Arc::new(a), std::sync::Arc::new(b));
+                match tag {
+                    KIND_CONV_TILE => JobKind::ConvTile { a, b },
+                    KIND_FC_GEMM => JobKind::FcGemm { a, b },
+                    _ => JobKind::FcGemmBatch { a, b },
+                }
+            }
+            KIND_IM2COL => {
+                let input = rd.f32s()?;
+                let chw = (rd.usize()?, rd.usize()?, rd.usize()?);
+                let size = rd.usize()?;
+                let stride = rd.usize()?;
+                let pad = rd.usize()?;
+                ensure!(
+                    chw.0 <= MAX_ELEMS && chw.1 <= MAX_ELEMS && chw.2 <= MAX_ELEMS,
+                    "oversized im2col shape in shard frame"
+                );
+                ensure!(
+                    input.len() == chw.0.saturating_mul(chw.1).saturating_mul(chw.2),
+                    "im2col input size mismatch in shard frame"
+                );
+                ensure!(
+                    size > 0 && stride > 0,
+                    "degenerate im2col geometry in shard frame"
+                );
+                JobKind::Im2col {
+                    input: std::sync::Arc::new(input),
+                    chw,
+                    size,
+                    stride,
+                    pad,
+                }
+            }
+            other => bail!("unknown shard job kind tag {other}"),
+        };
+        rd.done()?;
+        Ok(Job { desc, kind })
+    }
+
+    /// Encode one finished result.
+    pub fn encode_result(result: &JobResult) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(1 + DESC_BYTES + 8 + result.data.len() * 4);
+        buf.push(STATUS_OK);
+        put_desc(&mut buf, &result.desc);
+        put_f32s(&mut buf, &result.data);
+        buf
+    }
+
+    /// Encode an execution error (the shard stays up; the client surfaces
+    /// the message as its `execute` error).
+    pub fn encode_error(msg: &str) -> Vec<u8> {
+        let mut buf = vec![STATUS_ERR];
+        put_u64(&mut buf, msg.len() as u64);
+        buf.extend_from_slice(msg.as_bytes());
+        buf
+    }
+
+    /// Decode a result frame (or the shard's error report).
+    pub fn decode_result(frame: &[u8]) -> Result<JobResult> {
+        let mut rd = Rd::new(frame);
+        match rd.u8()? {
+            STATUS_OK => {
+                let desc = rd.desc()?;
+                let data = rd.f32s()?;
+                rd.done()?;
+                Ok(JobResult { desc, data })
+            }
+            STATUS_ERR => {
+                let msg = String::from_utf8_lossy(rd.bytes()?).into_owned();
+                bail!("remote shard reported: {msg}")
+            }
+            other => bail!("unknown shard result status {other}"),
+        }
+    }
+}
+
+// ----------------------------------------------------------------- shard
+
+/// The remote-shard backend: ships each job over its transport and blocks
+/// for the result.  Built inside the delegate thread (one connection per
+/// delegate) like every other backend; the delegate drives it purely
+/// through the [`Accelerator`] trait.
+pub struct RemoteShard {
+    id: String,
+    caps: ClassMask,
+    overhead_ksteps: f64,
+    transport: Box<dyn ShardTransport>,
+}
+
+impl RemoteShard {
+    /// Wrap a connected transport.  `caps`/`overhead_ksteps` should match
+    /// the values the backend was registered with (the registry metadata
+    /// is what routing and stealing consult; the instance is what
+    /// executes).
+    pub fn new(
+        id: String,
+        caps: ClassMask,
+        overhead_ksteps: f64,
+        transport: Box<dyn ShardTransport>,
+    ) -> RemoteShard {
+        RemoteShard {
+            id,
+            caps,
+            overhead_ksteps,
+            transport,
+        }
+    }
+
+    /// The default-shaped shard over an in-process transport (tests).
+    pub fn over_duplex(id: &str, transport: ChannelTransport) -> RemoteShard {
+        RemoteShard::new(
+            id.to_string(),
+            remote_class_mask(),
+            REMOTE_OVERHEAD_KSTEPS,
+            Box::new(transport),
+        )
+    }
+}
+
+/// Re-tile a CONV-tile job onto a single-tile grid over its packed
+/// `(K,TS,TS)` operand tiles, so the wire carries exactly the fetch set a
+/// PE would read (paper Listing 3 steps ①–②) instead of the whole layer's
+/// operand matrices — the shipped bytes scale with the job, not the layer.
+///
+/// Bit-identical by construction: re-extracting tile (0,0) of the repacked
+/// operands yields the original packed tiles (border padding included), so
+/// the far end's kernel sees the same buffers in the same accumulation
+/// order.  The caller re-stamps the original [`JobDesc`] onto the result.
+fn repack_conv_tile(job: &Job) -> Job {
+    let (at, bt) = job.pack_tiles();
+    let ts = job.desc.grid.ts;
+    let k_tiles = job.desc.k_tiles();
+    // A' is (TS, K·TS): block kt of `at` lands in columns kt·TS… so that
+    // `extract_a_tiles(A', 0)` returns `at` verbatim.  B' is (K·TS, TS):
+    // `bt`'s stacked blocks already ARE that matrix row-major.
+    let mut a = vec![0.0f32; ts * k_tiles * ts];
+    for kt in 0..k_tiles {
+        for r in 0..ts {
+            let src = kt * ts * ts + r * ts;
+            let dst = r * k_tiles * ts + kt * ts;
+            a[dst..dst + ts].copy_from_slice(&at[src..src + ts]);
+        }
+    }
+    Job {
+        desc: JobDesc {
+            t1: 0,
+            t2: 0,
+            grid: TileGrid::new(ts, k_tiles * ts, ts, ts),
+            ..job.desc
+        },
+        kind: JobKind::ConvTile {
+            a: std::sync::Arc::new(a),
+            b: std::sync::Arc::new(bt),
+        },
+    }
+}
+
+impl Accelerator for RemoteShard {
+    fn id(&self) -> &str {
+        &self.id
+    }
+
+    fn supports(&self, class: JobClass) -> bool {
+        self.caps.supports(class)
+    }
+
+    /// Round-trip-inclusive cost: the fixed shipping overhead plus the
+    /// job's k-steps — the same `overhead_ksteps` the registry advertises
+    /// for this backend, so the dispatcher's penalty, the thief's ship
+    /// gate, and the per-job estimate all agree.
+    fn cost(&self, job: &Job) -> f64 {
+        self.overhead_ksteps + job.ksteps() as f64
+    }
+
+    fn execute(&mut self, job: &Job) -> Result<JobResult> {
+        // CONV tiles ship their packed fetch set, not the layer matrices.
+        let wire_job = match &job.kind {
+            JobKind::ConvTile { .. } => repack_conv_tile(job),
+            _ => job.clone(),
+        };
+        self.transport
+            .send(&wire::encode_job(&wire_job))
+            .with_context(|| format!("shipping job {} to {}", job.desc.job_id, self.id))?;
+        let frame = self
+            .transport
+            .recv()
+            .with_context(|| format!("awaiting job {} from {}", job.desc.job_id, self.id))?;
+        let result = wire::decode_result(&frame)?;
+        ensure!(
+            result.desc.job_id == job.desc.job_id,
+            "{} answered job {} while executing job {}",
+            self.id,
+            result.desc.job_id,
+            job.desc.job_id
+        );
+        // Re-stamp the original descriptor: the repacked grid was a wire
+        // representation, and the reply channel's consumer scatters by the
+        // original tile coordinates.
+        Ok(JobResult {
+            desc: job.desc,
+            data: result.data,
+        })
+    }
+}
+
+// ---------------------------------------------------------- registration
+
+/// Register a TCP-dialing shard backend for `addr` under
+/// [`shard_backend_name`]`(addr)`.  Each delegate resolving the entry
+/// dials its own connection inside its thread; a refused connection fails
+/// pool startup cleanly (the builder's error propagates).
+pub fn register_tcp_shard(registry: &mut BackendRegistry, addr: &str) {
+    let name = shard_backend_name(addr);
+    let id = name.clone();
+    let target = addr.to_string();
+    registry.register_with_cost(&name, remote_class_mask(), REMOTE_OVERHEAD_KSTEPS, move || {
+        let transport = TcpTransport::connect(&target)?;
+        Ok(Box::new(RemoteShard::new(
+            id.clone(),
+            remote_class_mask(),
+            REMOTE_OVERHEAD_KSTEPS,
+            Box::new(transport),
+        )) as Box<dyn Accelerator>)
+    });
+}
+
+/// Register a TCP shard backend for every `[cluster] remote = "host:port"`
+/// member of `hw` — the one call a config-driven deployment makes before
+/// starting its pool.
+pub fn register_config_shards(registry: &mut BackendRegistry, hw: &HwConfig) {
+    for cluster in &hw.clusters {
+        for addr in &cluster.remote {
+            register_tcp_shard(registry, addr);
+        }
+    }
+}
+
+// --------------------------------------------------------------- service
+
+/// Service one transport: receive jobs, execute through `exec`, reply with
+/// framed results, until the peer goes away.  Returns the number of jobs
+/// served.  Transport errors are a normal disconnect (`Ok`); a decode
+/// failure is a protocol error (`Err`); an `exec` error is reported to the
+/// peer in-band and ends the session (`Err`) — the peer's delegate
+/// requeues and the far pool stays consistent.
+pub fn serve_transport(
+    transport: &mut dyn ShardTransport,
+    mut exec: impl FnMut(&Job) -> Result<JobResult>,
+) -> Result<u64> {
+    let mut served = 0u64;
+    loop {
+        let frame = match transport.recv() {
+            Ok(frame) => frame,
+            Err(_) => return Ok(served), // peer closed: a clean disconnect
+        };
+        let job = wire::decode_job(&frame)?;
+        match exec(&job) {
+            Ok(result) => {
+                if transport.send(&wire::encode_result(&result)).is_err() {
+                    return Ok(served);
+                }
+                served += 1;
+            }
+            Err(e) => {
+                let _ = transport.send(&wire::encode_error(&format!("{e:#}")));
+                return Err(e);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mm::job::jobs_for_gemm;
+    use crate::util::rng::XorShift64Star;
+    use std::sync::Arc;
+
+    fn sample_jobs() -> Vec<Job> {
+        let mut jobs = Vec::new();
+        let grid = TileGrid::new(40, 50, 60, 32);
+        let a = Arc::new(XorShift64Star::new(1).fill_f32(40 * 50, 1.0));
+        let b = Arc::new(XorShift64Star::new(2).fill_f32(50 * 60, 1.0));
+        let mut id = 0;
+        jobs.extend(jobs_for_gemm(3, 7, grid, a, b, &mut id));
+        let w = Arc::new(XorShift64Star::new(3).fill_f32(16 * 24, 1.0));
+        let x = Arc::new(XorShift64Star::new(4).fill_f32(24, 1.0));
+        jobs.push(Job::fc(id, 1, 2, 16, 24, w, x, 32));
+        id += 1;
+        let wb = Arc::new(XorShift64Star::new(5).fill_f32(16 * 24, 1.0));
+        let xb = Arc::new(XorShift64Star::new(6).fill_f32(24 * 3, 1.0));
+        jobs.push(Job::fc_batch(id, 1, 2, 16, 24, 3, wb, xb, 32));
+        id += 1;
+        let input = Arc::new(XorShift64Star::new(7).fill_f32(3 * 8 * 8, 1.0));
+        jobs.push(Job::im2col(id, 0, 4, (3, 8, 8), 3, 1, 1, input, 32));
+        jobs
+    }
+
+    #[test]
+    fn wire_round_trips_every_job_class_bitwise() {
+        for job in sample_jobs() {
+            let decoded = wire::decode_job(&wire::encode_job(&job)).unwrap();
+            assert_eq!(decoded.desc, job.desc);
+            assert_eq!(decoded.class(), job.class());
+            // Executing the decoded job is bit-identical to executing the
+            // original — the remote-execution fidelity contract.
+            let local = job.execute_native();
+            let shipped = decoded.execute_native();
+            assert_eq!(local.data, shipped.data, "{:?}", job.class());
+
+            let result = wire::decode_result(&wire::encode_result(&local)).unwrap();
+            assert_eq!(result.desc, local.desc);
+            assert_eq!(result.data, local.data);
+        }
+    }
+
+    #[test]
+    fn repacked_conv_tile_is_bitwise_equal_and_smaller_on_the_wire() {
+        // Ragged border tiles included: 40×50×60 at ts=32 has partial
+        // tiles on every edge.
+        for job in sample_jobs()
+            .into_iter()
+            .filter(|j| j.class() == JobClass::ConvTile)
+        {
+            let repacked = repack_conv_tile(&job);
+            assert_eq!(repacked.desc.job_id, job.desc.job_id);
+            assert_eq!(repacked.desc.k_tiles(), job.desc.k_tiles());
+            // Identical packed fetch set ⇒ identical kernel inputs.
+            assert_eq!(repacked.pack_tiles(), job.pack_tiles());
+            assert_eq!(
+                repacked.execute_native().data,
+                job.execute_native().data,
+                "tile ({}, {})",
+                job.desc.t1,
+                job.desc.t2
+            );
+            // The wire frame shrinks to the job's fetch set.
+            assert!(
+                wire::encode_job(&repacked).len() <= wire::encode_job(&job).len(),
+                "repacking grew the frame"
+            );
+        }
+    }
+
+    #[test]
+    fn wire_rejects_corrupt_frames() {
+        let jobs = sample_jobs();
+        let frame = wire::encode_job(&jobs[0]);
+        // Truncations at every prefix length must error, never panic.
+        for cut in 0..frame.len().min(64) {
+            assert!(wire::decode_job(&frame[..cut]).is_err(), "cut {cut}");
+        }
+        // Trailing garbage is rejected.
+        let mut padded = frame.clone();
+        padded.push(0);
+        assert!(wire::decode_job(&padded).is_err());
+        // Unknown tags, statuses, and error frames decode as errors.
+        assert!(wire::decode_job(&[99]).is_err());
+        assert!(wire::decode_result(&[7]).is_err());
+        let err = wire::decode_result(&wire::encode_error("kernel fault"))
+            .expect_err("error frame must surface");
+        assert!(err.to_string().contains("kernel fault"), "{err}");
+    }
+
+    #[test]
+    fn duplex_shard_executes_jobs_and_dies_cleanly() {
+        let (client, mut server) = duplex_pair();
+        let shard_thread = std::thread::spawn(move || {
+            serve_transport(&mut server, |job| Ok(job.execute_native())).unwrap()
+        });
+        let mut shard = RemoteShard::over_duplex("remote:test", client);
+        assert!(shard.supports(JobClass::ConvTile));
+        assert!(shard.supports(JobClass::FcGemmBatch));
+        assert!(!shard.supports(JobClass::FcGemm));
+        assert!(!shard.supports(JobClass::Im2col));
+        let jobs = sample_jobs();
+        for job in &jobs {
+            let got = shard.execute(job).unwrap();
+            let want = job.execute_native();
+            assert_eq!(got.data, want.data, "{:?}", job.class());
+            // Round-trip-inclusive cost: overhead + k-steps, matching the
+            // registered metadata.
+            assert_eq!(
+                shard.cost(job),
+                REMOTE_OVERHEAD_KSTEPS + job.ksteps() as f64
+            );
+        }
+        drop(shard); // closes the client end → the server loop returns
+        assert_eq!(shard_thread.join().unwrap(), jobs.len() as u64);
+    }
+
+    #[test]
+    fn dropped_transport_surfaces_as_execute_error() {
+        let (client, server) = duplex_pair();
+        drop(server);
+        let mut shard = RemoteShard::over_duplex("remote:dead", client);
+        let jobs = sample_jobs();
+        let err = shard.execute(&jobs[0]).expect_err("dead link must error");
+        assert!(err.to_string().contains("job 0"), "{err}");
+    }
+
+    #[test]
+    fn shard_exec_error_reaches_the_client_in_band() {
+        let (client, mut server) = duplex_pair();
+        let shard_thread = std::thread::spawn(move || {
+            serve_transport(&mut server, |_| anyhow::bail!("injected shard fault"))
+        });
+        let mut shard = RemoteShard::over_duplex("remote:faulty", client);
+        let err = shard
+            .execute(&sample_jobs()[0])
+            .expect_err("shard fault must propagate");
+        assert!(err.to_string().contains("injected shard fault"), "{err}");
+        assert!(shard_thread.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn tcp_transport_frames_round_trip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut t = TcpTransport::from_stream(stream);
+            // Echo two frames back, then hang up.
+            for _ in 0..2 {
+                let frame = t.recv().unwrap();
+                t.send(&frame).unwrap();
+            }
+        });
+        let mut t = TcpTransport::connect(&addr.to_string()).unwrap();
+        t.send(b"hello shard").unwrap();
+        assert_eq!(t.recv().unwrap(), b"hello shard");
+        t.send(&[]).unwrap(); // empty frames are legal
+        assert_eq!(t.recv().unwrap(), Vec::<u8>::new());
+        echo.join().unwrap();
+        // The peer hung up: the next receive errors instead of blocking.
+        assert!(t.recv().is_err());
+    }
+
+    #[test]
+    fn register_config_shards_names_every_remote_member() {
+        let text = "
+[device]
+tile_size = 32
+[pe_type]
+name = F-PE
+[cluster]
+name = c0
+neon = 1
+remote = 10.0.0.7:9000
+[cluster]
+name = c1
+pe = F-PE:1
+remote = 10.0.0.8:9000
+[memory]
+mmus = 1
+";
+        let hw = HwConfig::parse("t", text).unwrap();
+        let mut reg = BackendRegistry::new();
+        register_config_shards(&mut reg, &hw);
+        for addr in ["10.0.0.7:9000", "10.0.0.8:9000"] {
+            let entry = reg
+                .get(&shard_backend_name(addr))
+                .unwrap_or_else(|| panic!("missing shard entry for {addr}"));
+            assert_eq!(entry.caps, remote_class_mask());
+            assert_eq!(entry.overhead_ksteps, REMOTE_OVERHEAD_KSTEPS);
+        }
+        // The builder dials lazily: registration itself needs no listener.
+        assert_eq!(reg.names().len(), 2);
+    }
+}

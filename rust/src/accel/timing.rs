@@ -23,6 +23,11 @@ pub enum AccelClass {
     /// Big-core NEON cluster: several application cores running the
     /// multi-threaded tiled-SIMD GEMM backend (`accel::backend::BigNeonGemm`).
     BigNeon,
+    /// Remote accelerator shard reached over a transport
+    /// (`accel::remote::RemoteShard`): a second machine's pool joining
+    /// this one as a cluster member.  `addr` is the `host:port` the
+    /// member's registry key (`remote:<addr>`) dials.
+    Remote { addr: String },
 }
 
 /// Timing model of one accelerator.
@@ -124,6 +129,32 @@ impl PerfModel {
         }
     }
 
+    /// Remote accelerator shard: a peer machine's pool on the far end of a
+    /// LAN link, modelled as a 4-wide big-core cluster (per-deployment
+    /// calibration knob — the far pool's real rate is whatever its own
+    /// `.hw_config` says) whose per-job overhead is a transport round trip
+    /// (serialization + two one-way latencies, ≈ 0.5 ms on a switched
+    /// LAN) instead of a local queue pop.  At ts = 32 / 667 MHz that
+    /// overhead equals ≈ `accel::remote::REMOTE_OVERHEAD_KSTEPS` k-steps
+    /// of this model's rate, keeping the registry's routing metadata and
+    /// the simulator's service model consistent.
+    pub fn remote(ts: usize, cpu_mhz: f64) -> PerfModel {
+        let clock_hz = cpu_mhz * 1e6;
+        let macs_per_cycle = 0.5 * 4.0;
+        let macs_per_kstep = (ts * ts * ts) as f64;
+        PerfModel {
+            kstep_seconds: macs_per_kstep / (macs_per_cycle * clock_hz),
+            job_overhead_seconds: 500e-6,
+            bytes_per_kstep: (2 * ts * ts * 4) as u64,
+            writeback_bytes: (ts * ts * 4) as u64,
+            // Traffic rides the LAN, not the FPGA MMUs: the link cost is
+            // folded into the per-job overhead.
+            uses_fpga_mmu: false,
+            macs_per_cycle,
+            clock_hz,
+        }
+    }
+
     /// Compute-only service time of a job with `k` k-steps (no memory).
     pub fn compute_seconds(&self, k: usize) -> f64 {
         self.job_overhead_seconds + k as f64 * self.kstep_seconds
@@ -193,6 +224,24 @@ mod tests {
         // A 4-wide big cluster at 1.2 GHz out-runs one A9 NEON.
         let neon = PerfModel::neon(32, 667.0);
         assert!(four.kstep_seconds < neon.kstep_seconds);
+    }
+
+    #[test]
+    fn remote_model_overhead_matches_registry_ksteps() {
+        let r = PerfModel::remote(32, 667.0);
+        assert!(!r.uses_fpga_mmu);
+        // The RTT dominates small jobs: one k-step computes in ~25 µs but
+        // the round trip costs ~0.5 ms.
+        assert!(r.job_overhead_seconds > 10.0 * r.kstep_seconds);
+        // The registry-side overhead (REMOTE_OVERHEAD_KSTEPS k-steps of
+        // this rate) and the simulator-side overhead agree within a few
+        // percent at the default clock/tile — one shipping cost, two
+        // consumers.
+        let registry_s = crate::accel::remote::REMOTE_OVERHEAD_KSTEPS * r.kstep_seconds;
+        let rel = (registry_s - r.job_overhead_seconds).abs() / r.job_overhead_seconds;
+        assert!(rel < 0.05, "registry {registry_s}s vs model {}s", r.job_overhead_seconds);
+        // Faster than a lone A9 NEON, slower than it pretends on tiny jobs.
+        assert!(r.kstep_seconds < PerfModel::neon(32, 667.0).kstep_seconds);
     }
 
     #[test]

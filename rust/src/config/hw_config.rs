@@ -41,6 +41,11 @@ pub struct ClusterCfg {
     /// Big-core NEON cluster accelerators (each drives the multi-threaded
     /// tiled-SIMD GEMM backend with `big_neon_threads` cores).
     pub big_neon: usize,
+    /// Remote accelerator shards (`remote = host:port`, repeatable): each
+    /// address spawns one member whose delegate ships jobs to a peer
+    /// machine's pool over the transport registered under the
+    /// `remote:<addr>` backend key (`accel::remote`).
+    pub remote: Vec<String>,
     /// (pe_type name, count) pairs.
     pub pes: Vec<(String, usize)>,
 }
@@ -51,7 +56,7 @@ impl ClusterCfg {
     }
 
     pub fn total_accels(&self) -> usize {
-        self.total_pes() + self.neon + self.big_neon
+        self.total_pes() + self.neon + self.big_neon + self.remote.len()
     }
 }
 
@@ -167,6 +172,19 @@ impl HwConfig {
                     bail!("cluster {} references unknown pe_type {t:?}", c.name);
                 }
             }
+            for addr in &c.remote {
+                // host:port shape; the port must at least parse.  The dial
+                // happens at pool start, inside the delegate's builder.
+                let port_ok = addr
+                    .rsplit_once(':')
+                    .is_some_and(|(host, port)| !host.is_empty() && port.parse::<u16>().is_ok());
+                if !port_ok {
+                    bail!(
+                        "cluster {} remote shard {addr:?} is not host:port",
+                        c.name
+                    );
+                }
+            }
         }
         if self.memsub.mmus == 0 {
             bail!("memory subsystem needs at least one MMU");
@@ -241,6 +259,7 @@ impl HwConfig {
                             name: format!("cluster{}", clusters.len()),
                             neon: 0,
                             big_neon: 0,
+                            remote: Vec::new(),
                             pes: Vec::new(),
                         });
                         Sec::Cluster
@@ -285,6 +304,7 @@ impl HwConfig {
                         "name" => c.name = v.to_string(),
                         "neon" => c.neon = parse_usize()?,
                         "big_neon" => c.big_neon = parse_usize()?,
+                        "remote" => c.remote.push(v.to_string()),
                         "pe" => {
                             // pe=F-PE:6 (repeatable)
                             let (t, n) = v
@@ -377,6 +397,7 @@ impl HwConfig {
                 name: name.to_string(),
                 neon,
                 big_neon: 0,
+                remote: Vec::new(),
                 pes,
             }
         };
@@ -539,6 +560,50 @@ mmus = 1
         let mut bad = hw.clone();
         bad.big_neon_threads = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn remote_shard_members_parse_and_validate() {
+        let text = "
+[device]
+tile_size = 32
+[pe_type]
+name = F-PE
+[cluster]
+name = c0
+neon = 1
+remote = 10.0.0.2:7000
+remote = shard-b.local:7001
+[memory]
+mmus = 1
+";
+        let hw = HwConfig::parse("t", text).unwrap();
+        assert_eq!(
+            hw.clusters[0].remote,
+            vec!["10.0.0.2:7000".to_string(), "shard-b.local:7001".to_string()]
+        );
+        assert_eq!(hw.clusters[0].total_accels(), 3);
+
+        // A remote-only cluster is a valid cluster.
+        let only = "
+[device]
+tile_size = 32
+[pe_type]
+name = F-PE
+[cluster]
+name = c0
+remote = 127.0.0.1:9000
+[memory]
+mmus = 1
+";
+        assert!(HwConfig::parse("t", only).is_ok());
+
+        // Malformed addresses are rejected up front, not at dial time.
+        for bad in ["nocolon", ":7000", "host:", "host:notaport"] {
+            let mut hw = HwConfig::default_zc702();
+            hw.clusters[0].remote.push(bad.to_string());
+            assert!(hw.validate().is_err(), "{bad:?} accepted");
+        }
     }
 
     #[test]

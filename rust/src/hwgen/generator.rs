@@ -78,6 +78,10 @@ pub fn generate(hw: &HwConfig, out_dir: &Path) -> Result<GeneratedDesign> {
                             crate::accel::AccelClass::FpgaPe { .. } => "fpga_pe",
                             crate::accel::AccelClass::Neon => "neon",
                             crate::accel::AccelClass::BigNeon => "big_neon",
+                            // No hardware to generate: the member is a
+                            // transport endpoint; the wiring manifest
+                            // still records it for the deployment map.
+                            crate::accel::AccelClass::Remote { .. } => "remote_shard",
                         }),
                     ),
                     (

@@ -124,6 +124,12 @@ impl ClassMask {
         ClassMask(self.0 & other.0)
     }
 
+    /// This mask minus `class` (the thief's class-level ship gate prunes
+    /// steal masks with it).
+    pub fn without(self, class: JobClass) -> ClassMask {
+        ClassMask(self.0 & !(1 << class.index()))
+    }
+
     pub fn union(self, other: ClassMask) -> ClassMask {
         ClassMask(self.0 | other.0)
     }
@@ -669,6 +675,9 @@ mod tests {
         assert!(!both.supports(JobClass::Im2col));
         assert_eq!(ClassMask::NONE.union(all), all);
         assert!(ClassMask::NONE.is_empty() && !all.is_empty());
+        assert_eq!(both.without(JobClass::FcGemm), conv_only);
+        assert_eq!(conv_only.without(JobClass::Im2col), conv_only);
+        assert!(conv_only.without(JobClass::ConvTile).is_empty());
         assert_eq!(
             both.classes().collect::<Vec<_>>(),
             vec![JobClass::ConvTile, JobClass::FcGemm]

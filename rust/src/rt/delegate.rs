@@ -43,6 +43,11 @@ pub struct DelegateStats {
     pub jobs: AtomicU64,
     pub ksteps: AtomicU64,
     pub idle_reports: AtomicU64,
+    /// Jobs this delegate held when its backend failed and pushed back
+    /// onto the cluster bank for surviving members to drain (the
+    /// zero-loss requeue path — e.g. a remote shard's transport dropping
+    /// mid-batch).
+    pub requeued: AtomicU64,
     /// Jobs executed per class ([`JobClass`] dense order).
     pub jobs_by_class: [AtomicU64; JobClass::COUNT],
 }
@@ -65,6 +70,14 @@ impl DelegateStats {
 /// module docs) and driven exclusively through the [`Accelerator`] trait —
 /// the delegate has no knowledge of which implementation it holds.
 ///
+/// `rescue` is the union of the capability masks of the members that
+/// could still serve this bank if this delegate dies — its cluster mates,
+/// plus every other cluster's members when the thief is running (stolen
+/// work travels).  On a backend failure the delegate requeues the jobs it
+/// holds whose class some survivor covers (the zero-loss path) and drops
+/// the rest — dropping closes their reply channels, so blocking callers
+/// fail fast instead of waiting on jobs nobody can ever execute.
+///
 /// `drain_extra` is the number of additional jobs the delegate may grab in
 /// one queue visit once it holds a job (0 = strict one-at-a-time, the
 /// single-stream driver's sharing-friendly behavior; the batched serving
@@ -79,6 +92,7 @@ pub fn spawn(
     cluster: usize,
     bank: Arc<QueueBank<RtJob>>,
     caps: ClassMask,
+    rescue: ClassMask,
     mk_backend: impl FnOnce() -> Result<Box<dyn Accelerator>> + Send + 'static,
     thief: Option<Sender<ThiefMsg>>,
     stats: Arc<DelegateStats>,
@@ -88,15 +102,26 @@ pub fn spawn(
         .name(name)
         .spawn(move || {
             let backend = mk_backend()?;
-            delegate_loop(cluster, bank, caps, backend, thief, stats, drain_extra)
+            delegate_loop(
+                cluster,
+                bank,
+                caps,
+                rescue,
+                backend,
+                thief,
+                stats,
+                drain_extra,
+            )
         })
         .expect("spawn delegate thread")
 }
 
+#[allow(clippy::too_many_arguments)]
 fn delegate_loop(
     cluster: usize,
     bank: Arc<QueueBank<RtJob>>,
     caps: ClassMask,
+    rescue: ClassMask,
     mut backend: Box<dyn Accelerator>,
     thief: Option<Sender<ThiefMsg>>,
     stats: Arc<DelegateStats>,
@@ -145,12 +170,31 @@ fn delegate_loop(
                     let _ = run[i].reply.send(result);
                 }
                 Err(e) => {
-                    // Drop the never-attempted jobs: their reply senders
-                    // close, so waiting layer threads fail fast instead of
-                    // blocking on jobs nobody may ever service (this could
-                    // be the cluster's only delegate).  An execute error
-                    // is fatal to the run either way.
-                    drop(run.drain(i + 1..));
+                    // Backend failure (e.g. a remote shard's transport
+                    // dropping mid-batch).  The failed job was never
+                    // observably completed and the rest of the run was
+                    // never attempted.  Jobs a surviving member can serve
+                    // (`rescue`) go back onto the bank — the zero-loss
+                    // path (`tests/remote_shard.rs`, the failure
+                    // harness); requeue is safe because jobs are pure: at
+                    // worst a job whose result frame died in flight
+                    // computes twice, and one result reaches the reply
+                    // channel.  Jobs NO survivor covers are dropped
+                    // instead, closing their reply channels so blocking
+                    // callers fail fast rather than wait forever on work
+                    // nobody can execute.  Then die loudly — a backend
+                    // that cannot execute is gone, not idle.
+                    let (requeue, orphans): (Vec<RtJob>, Vec<RtJob>) = run
+                        .drain(i..)
+                        .partition(|rt| rescue.supports(rt.job.class()));
+                    stats
+                        .requeued
+                        .fetch_add(requeue.len() as u64, Ordering::Relaxed);
+                    let _ = bank.push_batch(requeue);
+                    drop(orphans);
+                    if let Some(tx) = &thief {
+                        let _ = tx.send(ThiefMsg::ClusterBusy(cluster));
+                    }
                     return Err(e);
                 }
             }
@@ -179,6 +223,7 @@ mod tests {
             "test-delegate".into(),
             0,
             Arc::clone(&queue),
+            ClassMask::all(),
             ClassMask::all(),
             native_backend,
             None,
@@ -226,6 +271,7 @@ mod tests {
             0,
             Arc::clone(&queue),
             ClassMask::all(),
+            ClassMask::all(),
             native_backend,
             None,
             Arc::clone(&stats),
@@ -269,6 +315,7 @@ mod tests {
             3,
             Arc::clone(&queue),
             ClassMask::all(),
+            ClassMask::all(),
             native_backend,
             Some(ttx),
             Arc::clone(&stats),
@@ -283,6 +330,90 @@ mod tests {
         assert!(stats.idle_reports.load(Ordering::Relaxed) >= 1);
     }
 
+    /// A backend that dies mid-run must requeue the failed job and its
+    /// never-attempted drain mates — jobs are conserved for surviving
+    /// members, not dropped with their reply channels.
+    #[test]
+    fn failing_backend_requeues_its_run() {
+        struct DiesAfter(usize);
+        impl Accelerator for DiesAfter {
+            fn id(&self) -> &str {
+                "dies-after"
+            }
+            fn supports(&self, _class: JobClass) -> bool {
+                true
+            }
+            fn execute(&mut self, job: &Job) -> Result<JobResult> {
+                if self.0 == 0 {
+                    anyhow::bail!("injected backend death");
+                }
+                self.0 -= 1;
+                Ok(job.execute_native())
+            }
+        }
+
+        let bank: Arc<QueueBank<RtJob>> = Arc::new(QueueBank::new());
+        let stats = Arc::new(DelegateStats::default());
+        let (tx, rx) = mpsc::channel();
+        // 5 FC jobs; drain_extra 4 lets the delegate grab all of them in
+        // one visit, then die on the 3rd — mid-batch.
+        for i in 0..5u64 {
+            let w = Arc::new(XorShift64Star::new(40 + i).fill_f32(6 * 8, 1.0));
+            let x = Arc::new(XorShift64Star::new(50 + i).fill_f32(8, 1.0));
+            bank.push(RtJob {
+                job: Job::fc(i, 0, 0, 6, 8, w, x, 32),
+                reply: tx.clone(),
+            });
+        }
+        drop(tx);
+        // A teammate covers every class, so the whole run is rescuable.
+        let handle = spawn(
+            "dying-delegate".into(),
+            0,
+            Arc::clone(&bank),
+            ClassMask::all(),
+            ClassMask::all(),
+            || Ok(Box::new(DiesAfter(2)) as Box<dyn Accelerator>),
+            None,
+            Arc::clone(&stats),
+            4,
+        );
+        let err = handle.join().unwrap().expect_err("backend must die");
+        assert!(err.to_string().contains("injected"), "{err}");
+        // 2 executed (replies delivered), 3 requeued — none lost.
+        assert_eq!(stats.jobs.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.requeued.load(Ordering::Relaxed), 3);
+        let mut done = 0;
+        while rx.try_recv().is_ok() {
+            done += 1;
+        }
+        assert_eq!(done, 2);
+        assert_eq!(bank.class_counts()[JobClass::FcGemm.index()], 3);
+
+        // A healthy teammate drains the requeued jobs to completion.
+        let neon_stats = Arc::new(DelegateStats::default());
+        let neon = spawn(
+            "rescuer".into(),
+            0,
+            Arc::clone(&bank),
+            ClassMask::all(),
+            ClassMask::all(),
+            native_backend,
+            None,
+            Arc::clone(&neon_stats),
+            0,
+        );
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while neon_stats.jobs.load(Ordering::Relaxed) < 3
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        bank.close();
+        neon.join().unwrap().unwrap();
+        assert_eq!(neon_stats.jobs.load(Ordering::Relaxed), 3);
+    }
+
     #[test]
     fn masked_delegate_never_touches_other_classes() {
         // A CONV-only member must leave FC/im2col jobs in the bank for a
@@ -294,6 +425,7 @@ mod tests {
             0,
             Arc::clone(&bank),
             ClassMask::of(&[JobClass::ConvTile]),
+            ClassMask::all(),
             native_backend,
             None,
             Arc::clone(&conv_stats),
@@ -318,6 +450,7 @@ mod tests {
             0,
             Arc::clone(&bank),
             ClassMask::all(),
+            ClassMask::of(&[JobClass::ConvTile]),
             native_backend,
             None,
             Arc::clone(&neon_stats),

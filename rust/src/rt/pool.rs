@@ -35,13 +35,16 @@ use super::ComputeMode;
 /// Registry key of the backend driving one accelerator spec under a
 /// compute mode: FPGA PEs run the PJRT job kernel in [`ComputeMode::Pjrt`]
 /// and the native GEMM otherwise; NEON and big-NEON members always run
-/// their native backends.
-pub fn backend_key(spec: &AccelSpec, mode: ComputeMode) -> &'static str {
+/// their native backends; remote members resolve to the `remote:<addr>`
+/// key their address names — registered out-of-tree (e.g. via
+/// `accel::remote::register_config_shards`), never special-cased here.
+pub fn backend_key(spec: &AccelSpec, mode: ComputeMode) -> String {
     match (&spec.class, mode) {
-        (AccelClass::FpgaPe { .. }, ComputeMode::Pjrt) => "pjrt-pe",
-        (AccelClass::FpgaPe { .. }, ComputeMode::Native) => "neon",
-        (AccelClass::Neon, _) => "neon",
-        (AccelClass::BigNeon, _) => "big-neon",
+        (AccelClass::FpgaPe { .. }, ComputeMode::Pjrt) => "pjrt-pe".to_string(),
+        (AccelClass::FpgaPe { .. }, ComputeMode::Native) => "neon".to_string(),
+        (AccelClass::Neon, _) => "neon".to_string(),
+        (AccelClass::BigNeon, _) => "big-neon".to_string(),
+        (AccelClass::Remote { addr }, _) => crate::accel::remote::shard_backend_name(addr),
     }
 }
 
@@ -75,7 +78,8 @@ impl PoolOptions {
     }
 }
 
-/// Per-cluster routing metadata derived from the member capability masks.
+/// Per-cluster routing metadata derived from the member capability masks
+/// and the registry's per-backend cost metadata.
 #[derive(Debug, Clone)]
 pub struct ClusterRoute {
     /// Union of member masks: the classes *some* member can execute —
@@ -87,31 +91,60 @@ pub struct ClusterRoute {
     /// full service set those members drain, i.e. the backlog that
     /// competes with a newly routed job of this class.
     pub drain_mask: [ClassMask; JobClass::COUNT],
+    /// Per class: the fixed per-job shipping cost (seconds) of the
+    /// *cheapest* capable member — the registry's `overhead_ksteps`
+    /// converted at that member's k-step rate.  Zero whenever any capable
+    /// member is local; a class only remote members serve carries their
+    /// transport round trip.  Two consumers: the dispatcher adds it to
+    /// the routing load (small jobs stay local until backlog outweighs
+    /// the trip) and the thief's class-level ship gate prunes steals of
+    /// classes whose backlog drains faster than it ships
+    /// (`Thief::spawn_with_costs`).
+    pub class_overhead_s: [f64; JobClass::COUNT],
 }
 
 impl ClusterRoute {
-    /// Build from one cluster's members and their capability masks.
-    pub fn derive(cluster: &ClusterSpec, member_caps: &[ClassMask]) -> ClusterRoute {
+    /// Build from one cluster's members, their capability masks, and
+    /// their registry overheads (k-step equivalents, one per member).
+    pub fn derive(
+        cluster: &ClusterSpec,
+        member_caps: &[ClassMask],
+        member_overhead_ksteps: &[f64],
+    ) -> ClusterRoute {
         debug_assert_eq!(cluster.members.len(), member_caps.len());
+        debug_assert_eq!(cluster.members.len(), member_overhead_ksteps.len());
         let mut accept = ClassMask::NONE;
         for caps in member_caps {
             accept = accept.union(*caps);
         }
         let mut class_rate = [0.0f64; JobClass::COUNT];
         let mut drain_mask = [ClassMask::NONE; JobClass::COUNT];
+        let mut class_overhead_s = [f64::INFINITY; JobClass::COUNT];
         for class in JobClass::ALL {
             let i = class.index();
-            for (member, caps) in cluster.members.iter().zip(member_caps) {
+            for ((member, caps), oh) in cluster
+                .members
+                .iter()
+                .zip(member_caps)
+                .zip(member_overhead_ksteps)
+            {
                 if caps.supports(class) {
                     class_rate[i] += 1.0 / member.perf.kstep_seconds;
                     drain_mask[i] = drain_mask[i].union(*caps);
+                    class_overhead_s[i] = class_overhead_s[i].min(oh * member.perf.kstep_seconds);
                 }
+            }
+        }
+        for oh in &mut class_overhead_s {
+            if !oh.is_finite() {
+                *oh = 0.0; // no capable member: the accept mask already bars routing
             }
         }
         ClusterRoute {
             accept,
             class_rate,
             drain_mask,
+            class_overhead_s,
         }
     }
 }
@@ -158,6 +191,15 @@ pub struct PoolReport {
     /// (`per_class_jobs` splits fused vs unfused jobs; this adds how many
     /// rows the fused ones carried).
     pub fused_fc_rows: u64,
+    /// Jobs that failed delegates pushed back onto their banks for
+    /// surviving members (the zero-loss requeue path — e.g. a remote
+    /// shard's transport dropping mid-batch).
+    pub requeued_jobs: u64,
+    /// Delegates whose backend died mid-run (their rescuable jobs were
+    /// requeued, the rest dropped fail-fast; see [`DelegatePool::shutdown`]
+    /// and the delegate's rescue mask).  Callers that require a fully
+    /// healthy pool assert this is zero.
+    pub delegate_failures: u64,
     pub steal_attempts: u64,
     pub jobs_stolen: u64,
     /// Stolen jobs per class ([`JobClass`] dense order).
@@ -352,18 +394,50 @@ impl Dispatcher {
         best.map(|(c, _)| c)
     }
 
-    /// Estimated time-to-drain of the backlog competing with a class-`ci`
-    /// job on cluster `c`: the jobs its class-capable members serve,
-    /// normalized by those members' aggregate rate.
+    /// Estimated completion cost of a new class-`ci` job on cluster `c`:
+    /// the backlog its class-capable members serve normalized by those
+    /// members' aggregate rate, plus the cluster's fixed per-job shipping
+    /// overhead for the class (zero for local members; a remote shard's
+    /// transport round trip otherwise).  The overhead term is what keeps
+    /// small jobs on idle local clusters while a deep local backlog tips
+    /// large CONV-tile / fused-FC work onto a shard.
     fn member_load(&self, c: usize, ci: usize) -> f64 {
         let route = &self.routes[c];
         self.banks[c].len_where(route.drain_mask[ci]) as f64 / route.class_rate[ci].max(1e-12)
+            + route.class_overhead_s[ci]
     }
 
     /// Per-cluster accept masks — the union over member capabilities (for
     /// tests and reporting).
     pub fn accept_masks(&self) -> Vec<ClassMask> {
         self.routes.iter().map(|r| r.accept).collect()
+    }
+
+    /// Dispatch one pre-built job of any class and block for its result —
+    /// the generic single-job entry (`serve::ShardServer` executes jobs
+    /// arriving from a remote peer through this).  Same routing contract
+    /// as [`Dispatcher::execute_fc`]: least-loaded capable cluster, or a
+    /// counted inline fallback when no member anywhere supports the
+    /// class.  The job keeps its caller-assigned descriptor (ids from a
+    /// peer pool are theirs, not this pool's counter).
+    pub fn execute_job(&self, job: Job) -> JobResult {
+        let class = job.class();
+        if class == JobClass::FcGemmBatch {
+            // Fused accounting stays honest when fused jobs arrive whole.
+            self.stats
+                .fused_fc_rows
+                .fetch_add(job.desc.grid.p as u64, Ordering::Relaxed);
+        }
+        match self.route(class, None) {
+            Some(cluster) => {
+                self.stats.dispatched_by_class[class.index()].fetch_add(1, Ordering::Relaxed);
+                self.run_single(cluster, job)
+            }
+            None => {
+                self.stats.inline_fallbacks.fetch_add(1, Ordering::Relaxed);
+                job.execute_native()
+            }
+        }
     }
 
     fn run_or_fallback(&self, class: JobClass, preferred: Option<usize>, job: Job) -> Vec<f32> {
@@ -422,33 +496,38 @@ impl DelegatePool {
             .map(|_| Arc::new(QueueBank::new()))
             .collect();
 
-        // Per-member capability masks from the registry metadata (known
-        // before any backend instance exists).
+        // Per-member capability masks + fixed overheads from the registry
+        // metadata (known before any backend instance exists).
         let mut member_caps: Vec<Vec<ClassMask>> = Vec::with_capacity(clusters.len());
+        let mut member_overheads: Vec<Vec<f64>> = Vec::with_capacity(clusters.len());
         for cluster in &clusters {
             let mut caps = Vec::with_capacity(cluster.members.len());
+            let mut overheads = Vec::with_capacity(cluster.members.len());
             for member in &cluster.members {
                 let key = backend_key(member, options.compute);
                 let entry = registry
-                    .get(key)
+                    .get(&key)
                     .ok_or_else(|| anyhow!("no backend {key:?} in the registry"))?;
                 caps.push(entry.caps);
+                overheads.push(entry.overhead_ksteps);
             }
             member_caps.push(caps);
+            member_overheads.push(overheads);
         }
         let routes: Vec<ClusterRoute> = clusters
             .iter()
-            .zip(&member_caps)
-            .map(|(cluster, caps)| ClusterRoute::derive(cluster, caps))
+            .zip(member_caps.iter().zip(&member_overheads))
+            .map(|(cluster, (caps, overheads))| ClusterRoute::derive(cluster, caps, overheads))
             .collect();
         let service_rates: Vec<f64> = clusters.iter().map(|c| c.throughput()).collect();
 
         let thief = if options.work_stealing {
-            Some(Thief::spawn_with_caps(
+            Some(Thief::spawn_with_costs(
                 banks.clone(),
                 options.steal_policy,
                 routes.iter().map(|r| r.accept).collect(),
                 service_rates,
+                routes.iter().map(|r| r.class_overhead_s).collect(),
             ))
         } else {
             None
@@ -458,21 +537,41 @@ impl DelegatePool {
         let mut delegate_stats = Vec::new();
         let mut delegate_handles = Vec::new();
         for (cluster, caps) in clusters.iter().zip(&member_caps) {
-            for (member, mcaps) in cluster.members.iter().zip(caps) {
+            for (mi, (member, mcaps)) in cluster.members.iter().zip(caps).enumerate() {
                 // Delegate-stats order == accelerator-id order: the report
                 // indexes `per_accel_*` by accel id.
                 assert_eq!(member.id, delegate_stats.len(), "accel ids not dense");
+                // Rescue mask: the classes some OTHER member could still
+                // serve if this delegate dies — cluster mates share the
+                // bank directly; with the thief running, any cluster's
+                // members count (stolen work travels).  A dying delegate
+                // requeues only rescuable jobs and drops the rest, so
+                // blocking callers fail fast instead of waiting on work
+                // nobody can ever execute.
+                let mut rescue = ClassMask::NONE;
+                for (c2, caps2) in member_caps.iter().enumerate() {
+                    for (m2, caps2m) in caps2.iter().enumerate() {
+                        let same_cluster = c2 == cluster.index;
+                        if same_cluster && m2 == mi {
+                            continue; // this member itself
+                        }
+                        if same_cluster || options.work_stealing {
+                            rescue = rescue.union(*caps2m);
+                        }
+                    }
+                }
                 let stats = Arc::new(DelegateStats::default());
                 delegate_stats.push(Arc::clone(&stats));
                 let bank = Arc::clone(&banks[cluster.index]);
                 let key = backend_key(member, options.compute);
-                let builder = registry.get(key).expect("resolved above").builder();
+                let builder = registry.get(&key).expect("resolved above").builder();
                 let mk = move || -> Result<Box<dyn Accelerator>> { builder() };
                 delegate_handles.push(delegate::spawn(
                     format!("delegate-{}", member.name),
                     cluster.index,
                     bank,
                     *mcaps,
+                    rescue,
                     mk,
                     thief_tx.clone(),
                     stats,
@@ -530,6 +629,13 @@ impl DelegatePool {
     /// Close the banks, join every delegate, stop the thief, and return
     /// the final counters.  Callers must have drained their reply channels
     /// (i.e. no in-flight jobs) before calling.
+    ///
+    /// A delegate whose backend died mid-run (remote transport dropped,
+    /// injected fault) does NOT fail the shutdown: its jobs were requeued
+    /// to surviving members when it died, so the pool's work is complete
+    /// and the report is still the full story — the death is surfaced in
+    /// [`PoolReport::delegate_failures`].  Only a panicked delegate
+    /// thread (a bug, not a failure) panics the join.
     pub fn shutdown(self) -> Result<PoolReport> {
         let DelegatePool {
             banks,
@@ -543,10 +649,14 @@ impl DelegatePool {
             b.close();
         }
         // Join before reading counters so the report sees every job.
+        let mut failures = 0u64;
         for h in delegate_handles {
-            h.join().expect("delegate thread")?;
+            if h.join().expect("delegate thread").is_err() {
+                failures += 1;
+            }
         }
-        let report = fold_report(&delegate_stats, thief.as_ref(), &dispatch_stats);
+        let mut report = fold_report(&delegate_stats, thief.as_ref(), &dispatch_stats);
+        report.delegate_failures = failures;
         if let Some(t) = thief {
             t.shutdown();
         }
@@ -564,6 +674,7 @@ fn fold_report(
         let j = stats.jobs.load(Ordering::Relaxed);
         report.per_accel_jobs.push(j);
         report.jobs_executed += j;
+        report.requeued_jobs += stats.requeued.load(Ordering::Relaxed);
         let by_class = stats.jobs_by_class();
         report.per_accel_by_class.push(by_class);
         for (acc, n) in report.per_class_jobs.iter_mut().zip(by_class) {
@@ -811,6 +922,166 @@ mod tests {
         assert_eq!(report.inline_fallbacks, grid.num_jobs() as u64);
         assert_eq!(report.jobs_executed, 0);
         assert_eq!(report.dispatched_by_class[JobClass::ConvTile.index()], 0);
+    }
+
+    /// The generic single-job entry: every class executes correctly and
+    /// lands in the dispatch counters (the shard server's path).
+    #[test]
+    fn execute_job_dispatches_every_class() {
+        let options = PoolOptions::new(HwConfig::default_zc702(), ComputeMode::Native, false);
+        let pool = DelegatePool::start(&options).unwrap();
+        let dispatcher = pool.dispatcher();
+        let w = Arc::new(XorShift64Star::new(21).fill_f32(8 * 16, 1.0));
+        let xb = Arc::new(XorShift64Star::new(22).fill_f32(16 * 3, 1.0));
+        let fused = Job::fc_batch(77, 1, 0, 8, 16, 3, Arc::clone(&w), xb, 32);
+        let want = fused.execute_native();
+        let got = dispatcher.execute_job(fused);
+        assert_eq!(got.desc.job_id, 77, "caller-assigned ids are kept");
+        assert_eq!(got.data, want.data);
+        let input = Arc::new(XorShift64Star::new(23).fill_f32(3 * 6 * 6, 1.0));
+        let im = Job::im2col(78, 0, 0, (3, 6, 6), 3, 1, 1, input, 32);
+        let want = im.execute_native();
+        assert_eq!(dispatcher.execute_job(im).data, want.data);
+        let report = pool.shutdown().unwrap();
+        assert_eq!(report.jobs_executed, 2);
+        assert_eq!(report.inline_fallbacks, 0);
+        assert_eq!(report.dispatched_by_class[JobClass::FcGemmBatch.index()], 1);
+        assert_eq!(report.dispatched_by_class[JobClass::Im2col.index()], 1);
+        assert_eq!(report.fused_fc_rows, 3);
+        assert_eq!(report.delegate_failures, 0);
+        assert_eq!(report.requeued_jobs, 0);
+    }
+
+    /// The cost-aware routing penalty: a cluster whose only capable
+    /// member carries a fixed shipping overhead (registry metadata, à la
+    /// remote shard) loses empty-queue ties to local clusters, and wins
+    /// once the local backlog outweighs the trip.
+    #[test]
+    fn shipping_overhead_routes_small_jobs_local_and_backlog_remote() {
+        use std::sync::mpsc;
+
+        let mut hw = HwConfig::default_zc702();
+        hw.clusters = vec![
+            crate::config::ClusterCfg {
+                name: "local".into(),
+                neon: 1,
+                big_neon: 0,
+                remote: Vec::new(),
+                pes: Vec::new(),
+            },
+            crate::config::ClusterCfg {
+                name: "shard".into(),
+                neon: 0,
+                big_neon: 0,
+                remote: vec!["127.0.0.1:1".into()],
+                pes: Vec::new(),
+            },
+        ];
+
+        /// A native backend that waits for one gate token per job, so the
+        /// test can hold a backlog on the local cluster deterministically.
+        struct GatedNative(mpsc::Receiver<()>);
+        impl Accelerator for GatedNative {
+            fn id(&self) -> &str {
+                "gated-neon"
+            }
+            fn supports(&self, _class: JobClass) -> bool {
+                true
+            }
+            fn execute(&mut self, job: &Job) -> Result<crate::mm::job::JobResult> {
+                let _ = self.0.recv(); // released by the test (or teardown)
+                Ok(job.execute_native())
+            }
+        }
+
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate = std::sync::Mutex::new(Some(gate_rx));
+        let mut registry = BackendRegistry::new();
+        registry.register("neon", ClassMask::all(), move || {
+            let rx = gate
+                .lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow!("single gated delegate"))?;
+            Ok(Box::new(GatedNative(rx)) as Box<dyn Accelerator>)
+        });
+        // "Remote" member: local compute, but registered with the remote
+        // mask + shipping overhead — this test is about routing metadata,
+        // not transports.
+        registry.register_with_cost(
+            &crate::accel::remote::shard_backend_name("127.0.0.1:1"),
+            crate::accel::remote::remote_class_mask(),
+            crate::accel::remote::REMOTE_OVERHEAD_KSTEPS,
+            || Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>),
+        );
+
+        let mut options = PoolOptions::new(hw, ComputeMode::Native, false);
+        options.registry = Some(Arc::new(registry));
+        let pool = DelegatePool::start(&options).unwrap();
+        let dispatcher = pool.dispatcher();
+
+        // Empty pool: the shipping overhead loses the tie — small jobs
+        // stay local; classes outside the remote mask can ONLY go local.
+        assert_eq!(dispatcher.route(JobClass::ConvTile, None), Some(0));
+        assert_eq!(dispatcher.route(JobClass::FcGemmBatch, None), Some(0));
+        assert_eq!(dispatcher.route(JobClass::FcGemm, None), Some(0));
+        assert_eq!(dispatcher.route(JobClass::Im2col, None), Some(0));
+        let shard_route = &pool.routes()[1];
+        assert!(shard_route.class_overhead_s[JobClass::ConvTile.index()] > 0.0);
+        assert!(shard_route.class_overhead_s[JobClass::FcGemmBatch.index()] > 0.0);
+        // Classes no member there serves carry no overhead (the accept
+        // mask already bars routing), and local clusters ship for free.
+        assert_eq!(shard_route.class_overhead_s[JobClass::FcGemm.index()], 0.0);
+        assert_eq!(
+            pool.routes()[0].class_overhead_s,
+            [0.0; JobClass::COUNT]
+        );
+
+        // Pile a 16-tile GEMM onto the local cluster (its only delegate is
+        // gated, so the backlog stays put)…
+        let grid = TileGrid::new(128, 32, 128, 32);
+        let a = Arc::new(XorShift64Star::new(31).fill_f32(128 * 32, 1.0));
+        let b = Arc::new(XorShift64Star::new(32).fill_f32(32 * 128, 1.0));
+        let helper = {
+            let dispatcher = pool.dispatcher();
+            let (a, b) = (Arc::clone(&a), Arc::clone(&b));
+            std::thread::spawn(move || {
+                let ctx = GemmCtx {
+                    cluster: None,
+                    layer_idx: 0,
+                    frame_id: 0,
+                };
+                dispatcher.execute_gemm(ctx, grid, a, b)
+            })
+        };
+        // …until the backlog outweighs the round trip and routing flips
+        // to the shard for the classes it speaks — and ONLY those.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while dispatcher.route(JobClass::ConvTile, None) != Some(1) {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "backlog never tipped routing onto the shard cluster"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(dispatcher.route(JobClass::FcGemm, None), Some(0));
+        assert_eq!(dispatcher.route(JobClass::Im2col, None), Some(0));
+
+        // Release the gate and finish: results stay correct.
+        for _ in 0..grid.num_jobs() {
+            gate_tx.send(()).unwrap();
+        }
+        let c = helper.join().unwrap();
+        let want = crate::mm::gemm::gemm_blocked(
+            &crate::tensor::Tensor::from_vec(&[128, 32], (*a).clone()),
+            &crate::tensor::Tensor::from_vec(&[32, 128], (*b).clone()),
+        );
+        let got = crate::tensor::Tensor::from_vec(&[128, 128], c);
+        assert!(want.allclose(&got, 1e-4, 1e-4));
+        drop(gate_tx);
+        let report = pool.shutdown().unwrap();
+        assert_eq!(report.jobs_executed, grid.num_jobs() as u64);
+        assert_eq!(report.delegate_failures, 0);
     }
 
     #[test]

@@ -85,7 +85,11 @@ impl StealStats {
 ///
 /// `class_cost` weighs each job class when ranking victims: an FC-GEMM
 /// job is a whole layer's GEMM while a CONV-tile job is one output tile,
-/// so equal queue lengths do not mean equal backlogs.
+/// so equal queue lengths do not mean equal backlogs.  The weights are
+/// approximate per-job k-steps, so a cost-weighted backlog divided by a
+/// cluster's k-steps/s service rate is a time-to-drain in seconds — the
+/// unit the destination shipping costs of [`Thief::spawn_with_costs`]
+/// gate against.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StealPolicy {
     /// Minimum victim queue length worth stealing from.
@@ -180,25 +184,54 @@ impl<T: Send + Classed + 'static> Thief<T> {
         Self::spawn_with_caps(queues, policy, vec![ClassMask::all(); n], vec![1.0; n])
     }
 
-    /// Fully-specified spawn: per-cluster *accept* masks (the union of the
-    /// destination's member capabilities — stolen jobs are filtered so a
-    /// destination only receives classes some member can execute) and
-    /// service rates (aggregate k-steps/s, normalizing victim backlogs
-    /// across heterogeneous clusters).
+    /// Per-cluster accept masks + service rates, no shipping costs (every
+    /// destination is local).  See [`Thief::spawn_with_costs`].
     pub fn spawn_with_caps(
         queues: Vec<Arc<QueueBank<T>>>,
         policy: StealPolicy,
         caps: Vec<ClassMask>,
         service_rates: Vec<f64>,
     ) -> Thief<T> {
+        let n = queues.len();
+        Self::spawn_with_costs(
+            queues,
+            policy,
+            caps,
+            service_rates,
+            vec![[0.0; JobClass::COUNT]; n],
+        )
+    }
+
+    /// Fully-specified spawn: per-cluster *accept* masks (the union of the
+    /// destination's member capabilities — stolen jobs are filtered so a
+    /// destination only receives classes some member can execute), service
+    /// rates (aggregate k-steps/s, normalizing victim backlogs across
+    /// heterogeneous clusters), and per-cluster **per-class shipping
+    /// costs** in seconds (`ship_s`): the fixed cost of moving a job of
+    /// each class into that destination — the cheapest capable member's
+    /// registry `overhead_ksteps`, i.e. `ClusterRoute::class_overhead_s`.
+    /// This is where `Accelerator::cost`'s constant term finally meets
+    /// the stealer: a class whose heaviest victim backlog drains faster
+    /// than this destination ships it is pruned from the steal mask (a
+    /// remote shard's round trip keeps small fused-FC backlogs local even
+    /// when a zero-cost CONV member shares its cluster), while all-zero
+    /// rows (local clusters) keep the classic behavior.
+    pub fn spawn_with_costs(
+        queues: Vec<Arc<QueueBank<T>>>,
+        policy: StealPolicy,
+        caps: Vec<ClassMask>,
+        service_rates: Vec<f64>,
+        ship_s: Vec<[f64; JobClass::COUNT]>,
+    ) -> Thief<T> {
         assert_eq!(queues.len(), caps.len());
         assert_eq!(queues.len(), service_rates.len());
+        assert_eq!(queues.len(), ship_s.len());
         let (tx, rx) = mpsc::channel::<ThiefMsg>();
         let stats = Arc::new(StealStats::default());
         let st = Arc::clone(&stats);
         let handle = std::thread::Builder::new()
             .name("thief".into())
-            .spawn(move || thief_loop(queues, rx, st, policy, caps, service_rates))
+            .spawn(move || thief_loop(queues, rx, st, policy, caps, service_rates, ship_s))
             .expect("spawn thief");
         Thief {
             tx,
@@ -232,6 +265,7 @@ impl<T: Send + 'static> Drop for Thief<T> {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn thief_loop<T: Send + Classed>(
     queues: Vec<Arc<QueueBank<T>>>,
     rx: mpsc::Receiver<ThiefMsg>,
@@ -239,6 +273,7 @@ fn thief_loop<T: Send + Classed>(
     policy: StealPolicy,
     caps: Vec<ClassMask>,
     service_rates: Vec<f64>,
+    ship_s: Vec<[f64; JobClass::COUNT]>,
 ) {
     // cluster → union of the capability masks of its members that have
     // reported idle (cleared on local work or a successful deposit).
@@ -293,7 +328,36 @@ fn thief_loop<T: Send + Classed>(
             idle_book.iter().map(|(&c, &m)| (c, m)).collect();
         for (idle_c, idle_mask) in served {
             stats.attempts.fetch_add(1, Ordering::Relaxed);
-            let cap = caps[idle_c].intersect(idle_mask);
+            let mut cap = caps[idle_c].intersect(idle_mask);
+            // Class-level ship gate: moving a job of class `i` into this
+            // destination costs `ship_s[idle_c][i]` seconds (a remote
+            // member's transport round trip; 0 for local members).  A
+            // class whose HEAVIEST victim backlog drains in place faster
+            // than it ships is pruned from the steal mask — per class, so
+            // a cheap local CONV member sharing a cluster with a remote
+            // fused-FC member doesn't zero the fused-FC gate.
+            for class in JobClass::ALL {
+                let i = class.index();
+                if !cap.supports_index(i) {
+                    continue;
+                }
+                let ship = ship_s[idle_c][i];
+                if ship <= 0.0 {
+                    continue;
+                }
+                let heaviest = counts
+                    .iter()
+                    .zip(&service_rates)
+                    .enumerate()
+                    .filter(|(v, _)| *v != idle_c)
+                    .map(|(_, (c, rate))| {
+                        c[i] as f64 * policy.class_cost[i] / rate.max(1e-12)
+                    })
+                    .fold(0.0f64, f64::max);
+                if heaviest <= ship {
+                    cap = cap.without(class);
+                }
+            }
             if cap.is_empty() {
                 continue;
             }
@@ -593,6 +657,107 @@ mod tests {
             assert_eq!(j.class_index(), 0, "stole outside the idle member's mask");
         }
         assert_eq!(q1.class_counts()[1], 4, "FC backlog must stay put");
+    }
+
+    #[test]
+    fn ship_gate_keeps_small_backlogs_off_expensive_destinations() {
+        // Destination 0 models a remote shard: stealable work must beat a
+        // shipping cost before the thief moves it.  6 conv jobs at unit
+        // cost / unit rate = 6 s of backlog.
+        let mk = || -> (Arc<QueueBank<u32>>, Arc<QueueBank<u32>>) {
+            let q0: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
+            let q1: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
+            for i in 0..6 {
+                q1.push(i);
+            }
+            (q0, q1)
+        };
+
+        // Gate above the backlog: nothing moves, ever.
+        let (q0, q1) = mk();
+        let thief = Thief::spawn_with_costs(
+            vec![Arc::clone(&q0), Arc::clone(&q1)],
+            StealPolicy::default(),
+            vec![ClassMask::all(), ClassMask::all()],
+            vec![1.0, 1.0],
+            vec![[100.0; JobClass::COUNT], [0.0; JobClass::COUNT]],
+        );
+        thief
+            .sender()
+            .send(ThiefMsg::ClusterIdle(0, ClassMask::all()))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(q0.is_empty(), "stole a backlog cheaper than shipping it");
+        assert_eq!(q1.len(), 6);
+        thief.shutdown();
+
+        // Gate below the backlog: the steal happens as usual.
+        let (q0, q1) = mk();
+        let thief = Thief::spawn_with_costs(
+            vec![Arc::clone(&q0), Arc::clone(&q1)],
+            StealPolicy::default(),
+            vec![ClassMask::all(), ClassMask::all()],
+            vec![1.0, 1.0],
+            vec![[2.5; JobClass::COUNT], [0.0; JobClass::COUNT]],
+        );
+        thief
+            .sender()
+            .send(ThiefMsg::ClusterIdle(0, ClassMask::all()))
+            .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while q0.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(!q0.is_empty(), "backlog above the ship gate must move");
+        assert_eq!(q0.len() + q1.len(), 6);
+        thief.shutdown();
+    }
+
+    /// The gate is per class: a destination whose CONV member is local
+    /// (free shipping) but whose fused-FC member is remote must keep
+    /// stealing CONV work while leaving the fused-FC backlog in place.
+    #[test]
+    fn ship_gate_is_class_level_in_mixed_destinations() {
+        let q0: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
+        let q1: Arc<QueueBank<CJob>> = Arc::new(QueueBank::new());
+        for i in 0..6 {
+            q1.push(CJob(i, JobClass::ConvTile.index()));
+        }
+        for i in 0..6 {
+            q1.push(CJob(10 + i, JobClass::FcGemmBatch.index()));
+        }
+        let mut ship = [0.0; JobClass::COUNT];
+        ship[JobClass::FcGemmBatch.index()] = 1e9; // remote-only class
+        let thief = Thief::spawn_with_costs(
+            vec![Arc::clone(&q0), Arc::clone(&q1)],
+            StealPolicy::default(),
+            vec![ClassMask::all(), ClassMask::all()],
+            vec![1.0, 1.0],
+            vec![ship, [0.0; JobClass::COUNT]],
+        );
+        thief
+            .sender()
+            .send(ThiefMsg::ClusterIdle(0, ClassMask::all()))
+            .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while q0.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        thief.shutdown();
+        assert!(!q0.is_empty(), "free-shipping CONV work must still move");
+        q0.close();
+        while let Some(j) = q0.try_pop_any(ClassMask::all()) {
+            assert_eq!(
+                j.class_index(),
+                JobClass::ConvTile.index(),
+                "a gated class crossed the ship gate"
+            );
+        }
+        assert_eq!(
+            q1.class_counts()[JobClass::FcGemmBatch.index()],
+            6,
+            "the expensive class must stay local"
+        );
     }
 
     #[test]

@@ -29,16 +29,22 @@
 //!   jobs via `rt::PoolRouter`; FC stages fuse their whole micro-batch
 //!   into one `FcGemmBatch` job per layer);
 //! * [`stats`] — latency percentiles / throughput / batch / per-class job
-//!   accounting.
+//!   accounting;
+//! * [`shard_server`] — the remote end of a shard link: a TCP server
+//!   hosting a second `DelegatePool` that executes jobs shipped by peers'
+//!   `RemoteShard` backends (`accel::remote`) — the serving stack's first
+//!   piece of multi-machine sharding.
 
 pub mod admission;
 pub mod batcher;
 pub mod request;
 pub mod server;
+pub mod shard_server;
 pub mod stats;
 
 pub use admission::AdmissionQueue;
 pub use batcher::{Batch, BatchCfg, MicroBatcher};
 pub use request::{Request, RequestStream, Response};
 pub use server::{ServeOptions, Server};
+pub use shard_server::ShardServer;
 pub use stats::{ServerStats, StatsCollector};

@@ -42,6 +42,12 @@ pub struct ServeOptions {
     /// Bounded admission depth per network lane (requests beyond a lane's
     /// depth are shed; other networks' lanes are unaffected).
     pub admission_depth: usize,
+    /// Backend registry override for the shared pool; `None` uses the
+    /// in-tree defaults.  Deployments with out-of-tree members — e.g.
+    /// `[cluster] remote = host:port` shards registered via
+    /// `accel::remote::register_config_shards` — pass their registry
+    /// here; the server itself never special-cases a backend.
+    pub registry: Option<Arc<crate::accel::BackendRegistry>>,
 }
 
 impl ServeOptions {
@@ -59,6 +65,7 @@ impl ServeOptions {
             mailbox_capacity: 1,
             batch,
             admission_depth,
+            registry: None,
         }
     }
 }
@@ -129,6 +136,7 @@ impl Server {
         };
         // Amortize queue locks over micro-batch job runs.
         pool_options.drain_extra = options.hw.serving.drain_extra;
+        pool_options.registry = options.registry.clone();
         let pool = DelegatePool::start(&pool_options)?;
 
         let admission = Arc::new(AdmissionQueue::new(options.admission_depth));

@@ -1,0 +1,222 @@
+//! The remote end of a shard link: a TCP server hosting a second
+//! [`DelegatePool`] that executes jobs shipped by peers' `RemoteShard`
+//! backends (`accel::remote`).
+//!
+//! One listener accepts connections; each connection gets its own service
+//! thread running [`serve_transport`] over the length-prefixed framing,
+//! executing every decoded job through the pool's generic
+//! `Dispatcher::execute_job` path — the shard is just another Synergy pool
+//! whose "clients" happen to be other pools.  Peers that only speak the
+//! remote class mask ship CONV tiles and fused batched-FC GEMMs, but the
+//! server is class-agnostic: anything the wire carries routes through the
+//! same capability logic as local work (including the counted inline
+//! fallback on a degenerate shard pool).
+//!
+//! Shutdown order matters and mirrors deployment reality: clients
+//! disconnect (their pools shut down) *before* the shard stops — a
+//! connection thread exits when its peer hangs up, and
+//! [`ShardServer::shutdown`] joins them before closing the pool.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::accel::remote::{serve_transport, TcpTransport};
+use crate::rt::{DelegatePool, Dispatcher, PoolOptions, PoolReport};
+
+/// A running shard server: listener + per-connection service threads over
+/// one hosted [`DelegatePool`].
+pub struct ShardServer {
+    pool: DelegatePool,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<Vec<JoinHandle<Result<u64>>>>>,
+}
+
+impl ShardServer {
+    /// Bind `bind` (e.g. `"127.0.0.1:0"` for an ephemeral test port),
+    /// start the hosted pool, and begin accepting shard clients.
+    pub fn start(bind: &str, options: &PoolOptions) -> Result<ShardServer> {
+        let pool = DelegatePool::start(options)?;
+        let dispatcher = pool.dispatcher();
+        let listener = TcpListener::bind(bind)
+            .with_context(|| format!("binding shard server to {bind}"))?;
+        let addr = listener.local_addr().context("shard server local addr")?;
+        // Non-blocking accept so shutdown can stop the loop without a
+        // wake-up connection.
+        listener
+            .set_nonblocking(true)
+            .context("shard listener non-blocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_accept = Arc::clone(&stop);
+        let accept_handle = std::thread::Builder::new()
+            .name("shard-accept".into())
+            .spawn(move || {
+                let mut connections: Vec<JoinHandle<Result<u64>>> = Vec::new();
+                while !stop_accept.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            let dispatcher = dispatcher.clone();
+                            let handle = std::thread::Builder::new()
+                                .name(format!("shard-conn-{peer}"))
+                                .spawn(move || serve_stream(stream, dispatcher))
+                                .expect("spawn shard connection thread");
+                            connections.push(handle);
+                        }
+                        Err(e)
+                            if e.kind() == std::io::ErrorKind::WouldBlock
+                                || e.kind() == std::io::ErrorKind::Interrupted =>
+                        {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(e) => {
+                            // A non-transient accept failure ends the
+                            // listener; say so instead of dying silently
+                            // behind a healthy-looking pool.
+                            eprintln!(
+                                "shard-accept: fatal accept error, \
+                                 refusing new peers: {e}"
+                            );
+                            break;
+                        }
+                    }
+                }
+                connections
+            })
+            .expect("spawn shard accept thread");
+        Ok(ShardServer {
+            pool,
+            addr,
+            stop,
+            accept_handle: Some(accept_handle),
+        })
+    }
+
+    /// The bound address (resolves the ephemeral port of a `:0` bind —
+    /// what clients put in their `[cluster] remote = …` line).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Live counters of the hosted pool.
+    pub fn snapshot(&self) -> PoolReport {
+        self.pool.snapshot()
+    }
+
+    /// Stop accepting, join the connection threads (each exits when its
+    /// peer disconnects — shut client pools down first), and tear the
+    /// hosted pool down.  Returns the pool's final counters: the shard's
+    /// side of the ledger, which a test can balance against the clients'
+    /// per-accelerator remote counts.
+    pub fn shutdown(mut self) -> Result<PoolReport> {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(handle) = self.accept_handle.take() {
+            let connections = handle.join().expect("shard accept thread");
+            for conn in connections {
+                // A protocol error on one connection is that peer's
+                // problem; the shard's report is still valid.
+                let _ = conn.join().expect("shard connection thread");
+            }
+        }
+        self.pool.shutdown()
+    }
+}
+
+/// One connection's service loop: decode → execute on the pool → reply.
+fn serve_stream(stream: TcpStream, dispatcher: Dispatcher) -> Result<u64> {
+    let mut transport = TcpTransport::from_stream(stream);
+    serve_transport(&mut transport, |job| Ok(dispatcher.execute_job(job.clone())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::remote::{wire, REMOTE_OVERHEAD_KSTEPS};
+    use crate::accel::{Accelerator, RemoteShard};
+    use crate::config::{ClusterCfg, HwConfig};
+    use crate::mm::job::{ClassMask, Job};
+    use crate::rt::ComputeMode;
+    use crate::util::rng::XorShift64Star;
+    use std::sync::Arc;
+
+    fn one_neon_options() -> PoolOptions {
+        let mut hw = HwConfig::default_zc702();
+        hw.clusters = vec![ClusterCfg {
+            name: "shard".into(),
+            neon: 2,
+            big_neon: 0,
+            remote: Vec::new(),
+            pes: Vec::new(),
+        }];
+        PoolOptions::new(hw, ComputeMode::Native, false)
+    }
+
+    #[test]
+    fn shard_server_executes_shipped_jobs_over_tcp() {
+        let server = ShardServer::start("127.0.0.1:0", &one_neon_options()).unwrap();
+        let addr = server.addr().to_string();
+
+        // Two concurrent clients, mixed classes.
+        let mut clients = Vec::new();
+        for c in 0..2u64 {
+            let addr = addr.clone();
+            clients.push(std::thread::spawn(move || {
+                let transport = TcpTransport::connect(&addr).unwrap();
+                let mut shard = RemoteShard::new(
+                    format!("remote:{addr}"),
+                    ClassMask::all(),
+                    REMOTE_OVERHEAD_KSTEPS,
+                    Box::new(transport),
+                );
+                for i in 0..4u64 {
+                    let w = Arc::new(
+                        XorShift64Star::new(100 * c + i).fill_f32(12 * 20, 1.0),
+                    );
+                    let xb =
+                        Arc::new(XorShift64Star::new(200 * c + i).fill_f32(20 * 3, 1.0));
+                    let job = Job::fc_batch(c * 10 + i, 0, c, 12, 20, 3, w, xb, 32);
+                    let got = shard.execute(&job).unwrap();
+                    assert_eq!(got.data, job.execute_native().data);
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.jobs_executed, 8);
+        assert_eq!(report.inline_fallbacks, 0);
+        assert_eq!(report.fused_fc_rows, 8 * 3);
+        assert_eq!(report.delegate_failures, 0);
+    }
+
+    #[test]
+    fn shard_server_survives_garbage_and_abrupt_disconnects() {
+        let server = ShardServer::start("127.0.0.1:0", &one_neon_options()).unwrap();
+        let addr = server.addr().to_string();
+        // A peer that sends garbage: its connection dies, the shard lives.
+        {
+            let mut t = TcpTransport::connect(&addr).unwrap();
+            t.send(&[0xde, 0xad, 0xbe, 0xef]).unwrap();
+            // Either an error frame or a hangup — both are acceptable.
+            let _ = t.recv();
+        }
+        // A peer that connects and silently leaves.
+        drop(TcpTransport::connect(&addr).unwrap());
+        // A well-behaved peer still gets served after both.
+        let mut t = TcpTransport::connect(&addr).unwrap();
+        let w = Arc::new(XorShift64Star::new(1).fill_f32(8 * 8, 1.0));
+        let x = Arc::new(XorShift64Star::new(2).fill_f32(8, 1.0));
+        let job = Job::fc(0, 0, 0, 8, 8, w, x, 32);
+        t.send(&wire::encode_job(&job)).unwrap();
+        let result = wire::decode_result(&t.recv().unwrap()).unwrap();
+        assert_eq!(result.data, job.execute_native().data);
+        drop(t);
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.jobs_executed, 1);
+    }
+}

@@ -3,8 +3,25 @@
 //! `check(name, cases, |g| { ... })` runs a property over `cases` random
 //! generators; on failure it reports the seed so the case can be replayed
 //! deterministically with `replay(seed, |g| ...)`.
+//!
+//! Seed diversity: setting `SCHED_SEED=<n>` in the environment folds `n`
+//! into every derived seed, so the same properties explore a fresh
+//! deterministic case family per value — CI runs the deterministic
+//! scheduling suite under a small `SCHED_SEED` matrix on every push,
+//! instead of forever retesting one hardcoded family.  Unset (or `0`)
+//! keeps the historical seeds; any failure report names the value to
+//! reproduce with.
 
 use super::rng::XorShift64Star;
+
+/// Extra seed entropy from the `SCHED_SEED` environment variable (0 when
+/// unset or unparseable — the historical seed family).
+pub fn env_seed_salt() -> u64 {
+    std::env::var("SCHED_SEED")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0)
+}
 
 /// Random-value source handed to properties.
 pub struct Gen {
@@ -46,9 +63,13 @@ impl Gen {
 
 /// Run `prop` over `cases` seeded generators; panic with the failing seed.
 pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let salt = env_seed_salt();
     for case in 0..cases {
-        // Derived, stable seeds: base on the property name + case index.
-        let seed = super::rng::fnv1a64(name) ^ (case as u64).wrapping_mul(0x9E37_79B9);
+        // Derived, stable seeds: property name + case index, plus the
+        // optional SCHED_SEED family selector (0 = the historical seeds).
+        let seed = super::rng::fnv1a64(name)
+            ^ (case as u64).wrapping_mul(0x9E37_79B9)
+            ^ salt.wrapping_mul(0x517C_C1B7_2722_0A95);
         let mut g = Gen::new(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             prop(&mut g);
@@ -59,7 +80,10 @@ pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
                 .cloned()
                 .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".into());
-            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (seed {seed:#x}, SCHED_SEED={salt}): {msg}"
+            );
         }
     }
 }

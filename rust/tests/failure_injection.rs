@@ -85,19 +85,26 @@ impl Accelerator for FlakyPe {
 
 /// Mixed-cluster failure: the cluster's only PE member dies mid-run.  The
 /// NEON member shares the same bank through its own mask, so FC/im2col
-/// service must continue with zero lost jobs — only the conv job the PE
-/// was holding can be dropped.
+/// service must continue with zero lost jobs — and the conv job the PE
+/// was holding is DROPPED fail-fast (its rescue mask says no survivor
+/// speaks CONV), closing its reply channel instead of stranding it on a
+/// bank nobody can drain.  (The requeue side of the failure contract —
+/// a survivor that CAN take the work — is pinned by
+/// `rt::delegate::tests::failing_backend_requeues_its_run` and
+/// `tests/remote_shard.rs`.)
 #[test]
 fn pe_death_does_not_lose_fc_or_im2col_jobs() {
     let bank: Arc<QueueBank<RtJob>> = Arc::new(QueueBank::new());
 
-    // The PE member: conv-only mask, fails on its 4th job.
+    // The PE member: conv-only mask, fails on its 4th job.  Its rescue
+    // mask is the NEON teammate's capability set — no survivor for CONV.
     let pe_stats = Arc::new(DelegateStats::default());
     let pe_handle = delegate::spawn(
         "flaky-pe".into(),
         0,
         Arc::clone(&bank),
         ClassMask::of(&[JobClass::ConvTile]),
+        ClassMask::of(&[JobClass::FcGemm, JobClass::Im2col]),
         || Ok(Box::new(FlakyPe { remaining: 3 }) as Box<dyn Accelerator>),
         None,
         Arc::clone(&pe_stats),
@@ -111,6 +118,7 @@ fn pe_death_does_not_lose_fc_or_im2col_jobs() {
         0,
         Arc::clone(&bank),
         ClassMask::of(&[JobClass::FcGemm, JobClass::Im2col]),
+        ClassMask::of(&[JobClass::ConvTile]),
         || Ok(Box::new(NativeGemm) as Box<dyn Accelerator>),
         None,
         Arc::clone(&neon_stats),
@@ -167,9 +175,10 @@ fn pe_death_does_not_lose_fc_or_im2col_jobs() {
     }
     assert_eq!(fcim_done, n_fc + n_im2col);
 
-    // The PE executed exactly 3 conv jobs, then died holding the 4th; the
-    // remaining conv jobs sit in the bank (no capable member left), and
-    // nothing else was dropped.
+    // The PE executed exactly 3 conv jobs, then died holding the 4th —
+    // no survivor speaks CONV, so that job is dropped fail-fast (its
+    // reply sender closes) rather than requeued onto a bank nobody can
+    // drain.
     let mut conv_done = 0;
     while conv_rx.recv_timeout(Duration::from_millis(100)).is_ok() {
         conv_done += 1;
@@ -179,6 +188,11 @@ fn pe_death_does_not_lose_fc_or_im2col_jobs() {
     assert!(err.to_string().contains("injected"), "{err}");
     assert_eq!(pe_stats.jobs_by_class()[JobClass::ConvTile.index()], 3);
     assert_eq!(pe_stats.jobs.load(std::sync::atomic::Ordering::Relaxed), 3);
+    assert_eq!(
+        pe_stats.requeued.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "a job with no surviving capable member must not be requeued"
+    );
 
     // The NEON member is still alive and serving; shut it down cleanly.
     bank.close();
@@ -187,8 +201,8 @@ fn pe_death_does_not_lose_fc_or_im2col_jobs() {
     assert_eq!(by_class[JobClass::FcGemm.index()], n_fc);
     assert_eq!(by_class[JobClass::Im2col.index()], n_im2col);
     assert_eq!(by_class[JobClass::ConvTile.index()], 0);
-    // 6 GEMM pushes × 1 tile each = 6 conv jobs; 3 executed, 1 died
-    // in-flight, 2 still queued.
+    // 6 GEMM pushes × 1 tile each = 6 conv jobs; 3 executed, 1 dropped
+    // fail-fast on the PE's death, 2 never popped and still queued.
     assert_eq!(
         bank.class_counts()[JobClass::ConvTile.index()],
         2,

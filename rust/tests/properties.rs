@@ -4,16 +4,19 @@
 //! per-producer FIFO order, and the simulator conserves work.
 
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use synergy::accel::{Accelerator, BackendRegistry, NativeGemm};
 use synergy::cluster::{JobQueue, QueueBank};
-use synergy::config::zoo;
+use synergy::config::{zoo, ClusterCfg, HwConfig};
 use synergy::mm::gemm::gemm_naive;
-use synergy::mm::job::{gather_results, jobs_for_gemm, ClassMask, Classed, JobClass};
+use synergy::mm::job::{gather_results, jobs_for_gemm, ClassMask, Classed, Job, JobClass};
 use synergy::mm::tile::{tiled_gemm, TileGrid};
 use synergy::nn::Network;
 use synergy::pipeline::Mailbox;
-use synergy::sched::worksteal::{choose_victim, steal_amount};
+use synergy::rt::{ComputeMode, DelegatePool, PoolOptions, PoolRouter};
+use synergy::sched::{static_map, worksteal::choose_victim, worksteal::steal_amount};
 use synergy::sim::{simulate, SimSpec};
 use synergy::tensor::Tensor;
 use synergy::util::proptest::{check, Gen};
@@ -369,6 +372,101 @@ fn prop_sim_conserves_jobs_and_is_deterministic() {
         // utilization is a valid fraction
         assert!((0.0..=1.0001).contains(&r1.cluster_util));
     });
+}
+
+/// The plug-in contract, pinned independently of `RemoteShard`: a registry
+/// containing ONLY an out-of-tree backend (none of the in-tree ones) must
+/// serve the full model zoo through the pool with `inline_fallbacks == 0`
+/// for its supported classes — every job reaches the custom backend, the
+/// forward stays correct, and nothing silently falls back inline.
+#[test]
+fn prop_out_of_tree_only_registry_serves_zoo_without_fallback() {
+    /// An out-of-tree backend: correct native compute plus an execution
+    /// ledger the test audits.
+    struct Counting {
+        inner: NativeGemm,
+        executed: Arc<AtomicU64>,
+    }
+    impl Accelerator for Counting {
+        fn id(&self) -> &str {
+            "out-of-tree"
+        }
+        fn supports(&self, _class: JobClass) -> bool {
+            true
+        }
+        fn execute(&mut self, job: &Job) -> anyhow::Result<synergy::mm::job::JobResult> {
+            self.executed.fetch_add(1, Ordering::Relaxed);
+            self.inner.execute(job)
+        }
+    }
+
+    let nets: Vec<Network> = zoo::ZOO
+        .iter()
+        .map(|n| Network::new(zoo::load(n).unwrap(), 32).unwrap())
+        .collect();
+    let covered = std::cell::Cell::new(0usize);
+    check("plugin-only-registry", zoo::ZOO.len(), |g: &mut Gen| {
+        let net = g.choose(&nets);
+        // Cover the whole zoo across the run: case i always includes
+        // model i, plus a random second pick for topology variety.
+        let forced = &nets[covered.get() % nets.len()];
+        covered.set(covered.get() + 1);
+
+        let executed = Arc::new(AtomicU64::new(0));
+        let mut registry = BackendRegistry::new();
+        let ledger = Arc::clone(&executed);
+        // "neon" is just the key the config's members resolve to — the
+        // registry holds ONLY this out-of-tree entry (latest-wins would
+        // have replaced an in-tree one; here there is nothing to replace).
+        registry.register("neon", ClassMask::all(), move || {
+            Ok(Box::new(Counting {
+                inner: NativeGemm,
+                executed: Arc::clone(&ledger),
+            }) as Box<dyn Accelerator>)
+        });
+        assert_eq!(registry.names(), vec!["neon"], "no built-ins registered");
+
+        let mut hw = HwConfig::default_zc702();
+        hw.clusters = vec![ClusterCfg {
+            name: "plugin".into(),
+            neon: g.usize_in(1, 2),
+            big_neon: 0,
+            remote: Vec::new(),
+            pes: Vec::new(),
+        }];
+        let mut options = PoolOptions::new(hw, ComputeMode::Native, g.bool());
+        options.registry = Some(Arc::new(registry));
+        let pool = DelegatePool::start(&options).unwrap();
+        let dispatcher = pool.dispatcher();
+
+        let mut expected_jobs = 0u64;
+        for net in [forced, net] {
+            let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
+            let router = PoolRouter::new(net, dispatcher.clone(), &assignment);
+            let frame = g.usize_in(0, 500) as u64;
+            let x = net.make_input(frame);
+            let y = net.forward_with(&x, &router.frame(frame));
+            let want = net.forward_reference(&x);
+            assert!(
+                y.allclose(&want, 1e-4, 1e-5),
+                "{}: {}",
+                net.config.name,
+                y.max_abs_diff(&want)
+            );
+            expected_jobs += net.pool_job_profile().iter().sum::<usize>() as u64;
+        }
+
+        let report = pool.shutdown().unwrap();
+        assert_eq!(report.inline_fallbacks, 0, "job fell back inline");
+        assert_eq!(report.jobs_executed, expected_jobs);
+        assert_eq!(
+            executed.load(Ordering::Relaxed),
+            expected_jobs,
+            "every job must reach the out-of-tree backend"
+        );
+        assert_eq!(report.delegate_failures, 0);
+    });
+    assert!(covered.get() >= zoo::ZOO.len(), "zoo not fully covered");
 }
 
 #[test]

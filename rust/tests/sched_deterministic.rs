@@ -3,7 +3,9 @@
 //! invariants down with real [`Job`] values — no OS threads, no timing
 //! races, every run reproducible from its seed.
 //!
-//! Invariants proven over randomized mixed-cluster topologies:
+//! Invariants proven over randomized mixed-cluster topologies (PE, NEON,
+//! and remote-shard member kinds — the latter with partial masks and a
+//! nonzero steal ship gate):
 //! * **(a) per-class job conservation** — submitted = executed
 //!   (+ stolen-then-executed), per class, and every job id exactly once;
 //! * **(b) no inline fallback** whenever at least one member anywhere
@@ -11,6 +13,9 @@
 //!   member supports);
 //! * **(c) steal accounting balance** — what the thief reports moved
 //!   equals what the victims' sub-queues lost, per class.
+//!
+//! `SCHED_SEED=<n>` selects a fresh deterministic seed family (see
+//! `util::proptest`); CI sweeps a small matrix of values.
 //!
 //! The second half drives the *real* `DelegatePool` with a NEON+PE mixed
 //! cluster in PJRT-stub mode (the acceptance scenario): FC and im2col
@@ -31,17 +36,22 @@ use synergy::sched::worksteal::{choose_victim_weighted, steal_amount, StealPolic
 use synergy::util::proptest::{check, Gen};
 
 /// One simulated member: capability mask, service rate (k-steps per
-/// virtual second), and per-class execution counters.
+/// virtual second), shipping cost (seconds a steal into this member's
+/// cluster must beat — 0 for local members, > 0 for remote shards), and
+/// per-class execution counters.
 struct Member {
     cluster: usize,
     caps: ClassMask,
     rate: f64,
+    ship: f64,
+    is_remote: bool,
     busy_until: f64,
     executed_by_class: [u64; JobClass::COUNT],
 }
 
 /// Random mixed-cluster topology: 1–3 clusters, each 1–3 members that are
-/// either CONV-only "PEs" or all-class "NEONs" with differing rates.
+/// CONV-only "PEs", all-class "NEONs", or remote "shards" (CONV-tile +
+/// fused-FC masks with a nonzero shipping cost) with differing rates.
 fn random_topology(g: &mut Gen) -> (Vec<Arc<QueueBank<Job>>>, Vec<Member>) {
     let n_clusters = g.usize_in(1, 3);
     let banks: Vec<Arc<QueueBank<Job>>> =
@@ -49,16 +59,31 @@ fn random_topology(g: &mut Gen) -> (Vec<Arc<QueueBank<Job>>>, Vec<Member>) {
     let mut members = Vec::new();
     for cluster in 0..n_clusters {
         for _ in 0..g.usize_in(1, 3) {
-            let is_pe = g.bool();
+            let kind = g.usize_in(0, 3);
+            let (caps, rate_scale, ship, is_remote) = match kind {
+                // PEs drain faster, like the hardware.
+                0 | 1 => (
+                    ClassMask::of(&[JobClass::ConvTile]),
+                    4.0,
+                    0.0,
+                    false,
+                ),
+                2 => (ClassMask::all(), 1.0, 0.0, false),
+                // Remote shard: big far-end pool, but steals into it must
+                // beat a shipping cost.
+                _ => (
+                    ClassMask::of(&[JobClass::ConvTile, JobClass::FcGemmBatch]),
+                    6.0,
+                    0.5 + g.usize_in(0, 3) as f64,
+                    true,
+                ),
+            };
             members.push(Member {
                 cluster,
-                caps: if is_pe {
-                    ClassMask::of(&[JobClass::ConvTile])
-                } else {
-                    ClassMask::all()
-                },
-                // PEs drain faster, like the hardware.
-                rate: if is_pe { 4.0 } else { 1.0 } * (1 + g.usize_in(0, 2)) as f64,
+                caps,
+                rate: rate_scale * (1 + g.usize_in(0, 2)) as f64,
+                ship,
+                is_remote,
                 busy_until: 0.0,
                 executed_by_class: [0; JobClass::COUNT],
             });
@@ -104,7 +129,11 @@ fn random_job(g: &mut Gen, class: JobClass, id: &mut u64) -> Vec<Job> {
 }
 
 /// The dispatcher's routing rule, mirrored over the harness topology:
-/// any cluster with a capable member, least virtual load first.
+/// any cluster with a capable member, least virtual load first.  (The
+/// real dispatcher additionally adds a per-class shipping penalty for
+/// remote-only clusters; placement choice does not affect the
+/// conservation/mask invariants this harness pins, so the mirror stays
+/// backlog-only.)
 fn route(banks: &[Arc<QueueBank<Job>>], members: &[Member], class: JobClass) -> Option<usize> {
     (0..banks.len())
         .filter(|&c| {
@@ -121,10 +150,12 @@ fn route(banks: &[Arc<QueueBank<Job>>], members: &[Member], class: JobClass) -> 
 
 #[test]
 fn deterministic_harness_conserves_jobs_and_never_falls_back() {
-    // Across the randomized runs the fused batched-FC class must actually
-    // be exercised — per-class conservation for FcGemmBatch is part of
-    // the contract, not an accident of the seed.
+    // Across the randomized runs the fused batched-FC class AND the
+    // remote member kind must actually be exercised — per-class
+    // conservation for FcGemmBatch and mask/ship discipline for remote
+    // members are part of the contract, not accidents of the seed.
     let fused_submitted = std::cell::Cell::new(0u64);
+    let remote_executed = std::cell::Cell::new(0u64);
     check("sched-deterministic", 25, |g: &mut Gen| {
         let (banks, mut members) = random_topology(g);
         let n_clusters = banks.len();
@@ -220,7 +251,37 @@ fn deterministic_harness_conserves_jobs_and_never_falls_back() {
             // union (exactly the thief-loop math).
             let counts: Vec<[usize; JobClass::COUNT]> =
                 banks.iter().map(|b| b.class_counts()).collect();
-            let cap = accepts[cluster].intersect(caps);
+            let mut cap = accepts[cluster].intersect(caps);
+            // Class-level ship gate mirror: the destination's cheapest
+            // capable member sets each class's shipping cost; classes
+            // whose heaviest victim backlog drains in place faster than
+            // it ships are pruned from the steal mask.
+            for class in JobClass::ALL {
+                let i = class.index();
+                if !cap.supports_index(i) {
+                    continue;
+                }
+                let ship = members
+                    .iter()
+                    .filter(|m| m.cluster == cluster && m.caps.supports(class))
+                    .map(|m| m.ship)
+                    .fold(f64::INFINITY, f64::min);
+                if !ship.is_finite() || ship <= 0.0 {
+                    continue;
+                }
+                let heaviest = counts
+                    .iter()
+                    .zip(&rates)
+                    .enumerate()
+                    .filter(|(v, _)| *v != cluster)
+                    .map(|(_, (c, rate))| {
+                        c[i] as f64 * policy.class_cost[i] / rate.max(1e-12)
+                    })
+                    .fold(0.0f64, f64::max);
+                if heaviest <= ship {
+                    cap = cap.without(class);
+                }
+            }
             let stealable: Vec<usize> = counts
                 .iter()
                 .map(|c| {
@@ -298,10 +359,24 @@ fn deterministic_harness_conserves_jobs_and_never_falls_back() {
         assert_eq!(executed_ids, submitted_ids, "job ids lost or duplicated");
         fused_submitted
             .set(fused_submitted.get() + submitted_by_class[JobClass::FcGemmBatch.index()]);
+        for m in &members {
+            if m.is_remote {
+                // Mask discipline for the remote kind, explicitly: no
+                // single-column FC, no im2col — ever.
+                assert_eq!(m.executed_by_class[JobClass::FcGemm.index()], 0);
+                assert_eq!(m.executed_by_class[JobClass::Im2col.index()], 0);
+                remote_executed
+                    .set(remote_executed.get() + m.executed_by_class.iter().sum::<u64>());
+            }
+        }
     });
     assert!(
         fused_submitted.get() > 0,
         "randomized runs never submitted an FcGemmBatch job"
+    );
+    assert!(
+        remote_executed.get() > 0,
+        "randomized runs never executed a job on a remote member"
     );
 }
 
