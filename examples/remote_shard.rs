@@ -26,10 +26,10 @@ use std::sync::Arc;
 
 use synergy::accel::{register_config_shards, AccelClass, BackendRegistry};
 use synergy::config::{zoo, ClusterCfg, HwConfig};
-use synergy::mm::job::JobClass;
+use synergy::mm::job::{gather_results, jobs_for_gemm, Job, JobClass};
 use synergy::mm::TileGrid;
 use synergy::nn::Network;
-use synergy::rt::{ComputeMode, DelegatePool, GemmCtx, PoolOptions, PoolRouter};
+use synergy::rt::{ComputeMode, DelegatePool, PoolOptions, PoolRouter};
 use synergy::runtime::default_artifacts_dir;
 use synergy::sched::static_map;
 use synergy::serve::ShardServer;
@@ -116,14 +116,16 @@ fn main() -> anyhow::Result<()> {
                 let (a, b) = (Arc::clone(&a), Arc::clone(&b));
                 let (w, xb) = (Arc::clone(&w), Arc::clone(&xb));
                 std::thread::spawn(move || {
+                    // Un-hinted jobs through the one generic entry point:
+                    // pack once, reserve ids, let the cost model route.
                     let dispatcher = pool.dispatcher();
-                    let ctx = GemmCtx {
-                        cluster: None,
-                        layer_idx: t,
-                        frame_id: t as u64,
-                    };
-                    let c = dispatcher.execute_gemm(ctx, grid, a, b);
-                    let y = dispatcher.execute_fc_batch(ctx, 64, 128, 8, w, xb, 32);
+                    let mut next_id = dispatcher.reserve_job_ids(grid.num_jobs() as u64);
+                    let jobs = jobs_for_gemm(t, t as u64, grid, a, b, &mut next_id);
+                    let c = gather_results(grid, &dispatcher.execute_jobs(jobs));
+                    let id = dispatcher.reserve_job_ids(1);
+                    let y = dispatcher
+                        .execute_job(Job::fc_batch(id, t, t as u64, 64, 128, 8, w, xb, 32))
+                        .data;
                     (c.len(), y.len())
                 })
             })

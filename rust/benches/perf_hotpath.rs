@@ -1,7 +1,13 @@
 //! `cargo bench --bench perf_hotpath` — L3 hot-path microbenchmarks
 //! (the §Perf deliverable): GEMM micro-kernel, tile packing, job queue
-//! throughput, steal latency, mailbox hop, and end-to-end native pipeline
-//! throughput.  Results feed EXPERIMENTS.md §Perf.
+//! throughput, steal latency, mailbox hop, the operand-plane before/after
+//! (per-job re-extraction vs pack-once + zero-copy views), and end-to-end
+//! native pipeline throughput.  Results feed EXPERIMENTS.md §Perf and,
+//! via `--json`, the committed `BENCH_hotpath.json` artifact:
+//!
+//! ```sh
+//! cargo bench --bench perf_hotpath -- [--quick] [--json out.json]
+//! ```
 
 use std::sync::Arc;
 
@@ -9,19 +15,32 @@ use synergy::accel::{Accelerator, BigNeonGemm, NativeGemm};
 use synergy::cluster::JobQueue;
 use synergy::config::zoo;
 use synergy::mm::gemm::{gemm_blocked, gemm_naive};
-use synergy::mm::job::{pack_fc_columns, Job};
+use synergy::mm::job::{jobs_for_gemm, pack_fc_columns, Job};
+use synergy::mm::operand::{copied_bytes, copy_events};
 use synergy::mm::tile::{job_mm_native, TileGrid};
 use synergy::nn::im2col::im2col;
 use synergy::nn::Network;
 use synergy::pipeline::Mailbox;
 use synergy::rt::{self, RtOptions};
 use synergy::tensor::Tensor;
-use synergy::util::bench::{fmt, Bencher, Table};
+use synergy::util::argparse::Args;
+use synergy::util::bench::{fmt, BenchResult, Bencher, Table};
+use synergy::util::json::{arr, num, obj, s, Json};
 use synergy::util::rng::XorShift64Star;
 
-fn main() {
-    let b = Bencher::default();
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    // `cargo bench` appends a bare `--bench` to harness=false binaries;
+    // accept it as a valueless flag so it can't swallow the next arg.
+    let args = Args::parse(&raw, &["quick", "bench"]).map_err(anyhow::Error::msg)?;
+    let quick = args.has_flag("quick");
+    let b = if quick {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
     let mut table = Table::new(&["benchmark", "mean µs", "throughput"]);
+    let mut results: Vec<BenchResult> = Vec::new();
 
     // GEMM micro-kernels on a conv2-shaped problem (64x800x196).
     let a = Tensor::from_vec(&[64, 800], XorShift64Star::new(1).fill_f32(64 * 800, 1.0));
@@ -31,10 +50,12 @@ fn main() {
         std::hint::black_box(gemm_naive(&a, &bm));
     });
     table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.2} GFLOP/s", flops / r.mean_ns)]);
+    results.push(r);
     let r = b.run("gemm_blocked 64x800x196", || {
         std::hint::black_box(gemm_blocked(&a, &bm));
     });
     table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.2} GFLOP/s", flops / r.mean_ns)]);
+    results.push(r);
 
     // Job kernel (K=25) — the NEON-path inner loop.
     let grid = TileGrid::new(64, 800, 196, 32);
@@ -45,12 +66,87 @@ fn main() {
         std::hint::black_box(job_mm_native(&at, &bt, grid.k_tiles(), 32));
     });
     table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.2} GFLOP/s", jflops / r.mean_ns)]);
+    results.push(r);
 
     // Tile packing (the PE fetch path).
     let r = b.run("extract_a_tiles k=25", || {
         std::hint::black_box(grid.extract_a_tiles(a.data(), 0));
     });
     table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.1} MB/s", (at.len() * 4) as f64 / 1e6 / (r.mean_ns / 1e9))]);
+    results.push(r);
+
+    // Operand plane, before vs after the zero-copy redesign on the same
+    // conv2-shaped GEMM: the legacy hot path re-extracted both operand
+    // panels per (t1,t2) job; `jobs_for_gemm` now packs each operand ONCE
+    // and hands every job `OperandView` slices of the pack.  The copy
+    // counters are process-wide and deterministic, so snapshot them
+    // around one un-timed pass of each path before timing the same work.
+    let arc_a = Arc::new(a.data().to_vec());
+    let arc_b = Arc::new(bm.data().to_vec());
+    let (bytes0, events0) = (copied_bytes(), copy_events());
+    for t1 in 0..grid.rows() {
+        for t2 in 0..grid.cols() {
+            std::hint::black_box(grid.extract_a_tiles(a.data(), t1));
+            std::hint::black_box(grid.extract_b_tiles(bm.data(), t2));
+        }
+    }
+    let (bytes1, events1) = (copied_bytes(), copy_events());
+    let mut id = 0u64;
+    std::hint::black_box(jobs_for_gemm(
+        0,
+        0,
+        grid,
+        Arc::clone(&arc_a),
+        Arc::clone(&arc_b),
+        &mut id,
+    ));
+    let (bytes2, events2) = (copied_bytes(), copy_events());
+    let legacy_bytes = bytes1 - bytes0;
+    let legacy_events = events1 - events0;
+    let view_bytes = bytes2 - bytes1;
+    let view_events = events2 - events1;
+
+    let legacy = b.run(
+        &format!("operand legacy: extract per job x{}", grid.num_jobs()),
+        || {
+            for t1 in 0..grid.rows() {
+                for t2 in 0..grid.cols() {
+                    std::hint::black_box(grid.extract_a_tiles(a.data(), t1));
+                    std::hint::black_box(grid.extract_b_tiles(bm.data(), t2));
+                }
+            }
+        },
+    );
+    table.row(vec![
+        legacy.name.clone(),
+        fmt(legacy.mean_us()),
+        format!("{} B copied / GEMM", legacy_bytes),
+    ]);
+    let packed = b.run(
+        &format!("operand views: pack once + slice x{}", grid.num_jobs()),
+        || {
+            let mut id = 0u64;
+            std::hint::black_box(jobs_for_gemm(
+                0,
+                0,
+                grid,
+                Arc::clone(&arc_a),
+                Arc::clone(&arc_b),
+                &mut id,
+            ));
+        },
+    );
+    table.row(vec![
+        packed.name.clone(),
+        fmt(packed.mean_us()),
+        format!(
+            "{} B copied / GEMM ({:.2}x fewer)",
+            view_bytes,
+            legacy_bytes as f64 / view_bytes as f64
+        ),
+    ]);
+    results.push(legacy.clone());
+    results.push(packed.clone());
 
     // im2col (CPU preprocessing).
     let x = Tensor::from_vec(&[32, 14, 14], XorShift64Star::new(3).fill_f32(32 * 14 * 14, 1.0));
@@ -58,6 +154,7 @@ fn main() {
         std::hint::black_box(im2col(&x, 5, 1, 2));
     });
     table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.1} Melem/s", (32.0 * 25.0 * 196.0) / 1e6 / (r.mean_ns / 1e9))]);
+    results.push(r);
 
     // Job queue push/pop throughput.
     let r = b.run("jobqueue push+pop x1000", || {
@@ -70,6 +167,7 @@ fn main() {
         }
     });
     table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.1} Mops/s", 2000.0 / 1e6 / (r.mean_ns / 1e9))]);
+    results.push(r);
 
     // Steal batch.
     let r = b.run("jobqueue steal 500 of 1000", || {
@@ -80,6 +178,7 @@ fn main() {
         std::hint::black_box(q.steal(500));
     });
     table.row(vec![r.name.clone(), fmt(r.mean_us()), String::from("-")]);
+    results.push(r);
 
     // Mailbox hop (send+recv).
     let mb: Mailbox<u64> = Mailbox::new(4);
@@ -88,6 +187,7 @@ fn main() {
         std::hint::black_box(mb.recv());
     });
     table.row(vec![r.name.clone(), fmt(r.mean_us()), format!("{:.2} Mhops/s", 1.0 / 1e6 / (r.mean_ns / 1e9))]);
+    results.push(r);
 
     // Fused-vs-per-sample FC sweep (the batch-level FC fusion claim):
     // one (OUT,IN)×(IN,B) FcGemmBatch job vs B single-column FC jobs, on
@@ -103,8 +203,9 @@ fn main() {
         ("neon", Box::new(NativeGemm)),
         ("big-neon x4", Box::new(BigNeonGemm::new(4))),
     ];
+    let batch_sizes: &[usize] = if quick { &[1, 8] } else { &[1, 2, 4, 8, 16] };
     for (label, backend) in &mut backends {
-        for bsz in [1usize, 2, 4, 8, 16] {
+        for &bsz in batch_sizes {
             let cols: Vec<&[f32]> = xs[..bsz].iter().map(|x| x.as_slice()).collect();
             let fused_job = Job::fc_batch(
                 0,
@@ -149,21 +250,90 @@ fn main() {
                 fmt(fused.mean_us()),
                 format!("{:.2}x vs per-sample", per_sample.mean_ns / fused.mean_ns),
             ]);
+            results.push(per_sample);
+            results.push(fused);
         }
     }
     drop(backends); // join the big-NEON team before the pipeline run
 
     // End-to-end native pipeline throughput (host wall clock, mpcnn).
+    let frames_n: u64 = if quick { 6 } else { 24 };
     let net = Arc::new(Network::new(zoo::load("mpcnn").unwrap(), 32).unwrap());
-    let frames: Vec<(u64, Tensor)> = (0..24).map(|f| (f, net.make_input(f))).collect();
+    let frames: Vec<(u64, Tensor)> = (0..frames_n).map(|f| (f, net.make_input(f))).collect();
     let t0 = std::time::Instant::now();
     let report = rt::driver::run_stream(Arc::clone(&net), RtOptions::default(), frames).unwrap();
     let wall = t0.elapsed().as_secs_f64();
     table.row(vec![
-        "rt pipeline mpcnn x24 (native)".into(),
-        fmt(wall * 1e6 / 24.0),
+        format!("rt pipeline mpcnn x{frames_n} (native)"),
+        fmt(wall * 1e6 / frames_n as f64),
         format!("{:.1} frames/s host", report.fps),
     ]);
 
     table.print();
+
+    if let Some(path) = args.get("json") {
+        let case = |r: &BenchResult| {
+            obj(vec![
+                ("name", s(&r.name)),
+                ("mean_us", num(r.mean_us())),
+                ("median_us", num(r.median_ns / 1e3)),
+                ("iters", num(r.iters as f64)),
+            ])
+        };
+        let doc = obj(vec![
+            ("bench", s("perf_hotpath")),
+            ("schema_version", num(1.0)),
+            ("quick", Json::Bool(quick)),
+            ("provenance", s("measured")),
+            (
+                "operand_plane",
+                obj(vec![
+                    (
+                        "grid",
+                        obj(vec![
+                            ("m", num(grid.m as f64)),
+                            ("n", num(grid.n as f64)),
+                            ("p", num(grid.p as f64)),
+                            ("ts", num(grid.ts as f64)),
+                            ("num_jobs", num(grid.num_jobs() as f64)),
+                        ]),
+                    ),
+                    (
+                        "before",
+                        obj(vec![
+                            ("path", s("per-job extract_a_tiles + extract_b_tiles")),
+                            ("bytes_copied", num(legacy_bytes as f64)),
+                            ("copy_events", num(legacy_events as f64)),
+                            ("mean_us", num(legacy.mean_us())),
+                        ]),
+                    ),
+                    (
+                        "after",
+                        obj(vec![
+                            ("path", s("pack once per operand + OperandView slices")),
+                            ("bytes_copied", num(view_bytes as f64)),
+                            ("copy_events", num(view_events as f64)),
+                            ("mean_us", num(packed.mean_us())),
+                        ]),
+                    ),
+                    (
+                        "bytes_ratio",
+                        num(legacy_bytes as f64 / view_bytes as f64),
+                    ),
+                ]),
+            ),
+            (
+                "pipeline",
+                obj(vec![
+                    ("model", s("mpcnn")),
+                    ("frames", num(frames_n as f64)),
+                    ("fps_host", num(report.fps)),
+                ]),
+            ),
+            ("cases", arr(results.iter().map(case).collect())),
+        ]);
+        std::fs::write(path, doc.to_string() + "\n")?;
+        println!("[bench] wrote {path}");
+    }
+    Ok(())
 }

@@ -5,33 +5,37 @@
 //! shipped defaults (`drain_extra = 3`, `steal_min_victim = 0` = the
 //! batch-derived threshold) are provisional until this sweep runs on the
 //! target hardware.
+//!
+//! ```sh
+//! cargo bench --bench serve_throughput -- [--quick] [--json out.json]
+//! ```
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use synergy::config::zoo;
+use synergy::mm::job::JobClass;
+use synergy::mm::operand::copied_bytes;
 use synergy::nn::Network;
 use synergy::rt::{self, RtOptions};
-use synergy::serve::{RequestStream, ServeOptions, Server};
+use synergy::serve::{RequestStream, ServeOptions, Server, ServerStats};
 use synergy::tensor::Tensor;
+use synergy::util::argparse::Args;
 use synergy::util::bench::{fmt, Table};
+use synergy::util::json::{arr, num, obj, s, Json};
 
 const STREAMS: usize = 4;
-const REQUESTS_PER_STREAM: u64 = 16;
 const RATE_RPS: f64 = 1000.0;
-
-fn serve_run(nets: &[Arc<Network>], max_batch: usize) -> (f64, f64, f64, f64) {
-    serve_run_knobs(nets, max_batch, None, None)
-}
 
 /// One serving run with optional `[serving]` knob overrides
 /// (`None` = the shipped defaults from `ServeCfg`).
 fn serve_run_knobs(
     nets: &[Arc<Network>],
+    requests_per_stream: u64,
     max_batch: usize,
     drain_extra: Option<usize>,
     steal_min_victim: Option<usize>,
-) -> (f64, f64, f64, f64) {
+) -> ServerStats {
     let mut options = ServeOptions::default();
     options.batch.max_batch = max_batch;
     options.batch.window = Duration::from_micros(1500);
@@ -39,8 +43,8 @@ fn serve_run_knobs(
     if let Some(d) = drain_extra {
         options.hw.serving.drain_extra = d;
     }
-    if let Some(s) = steal_min_victim {
-        options.hw.serving.steal_min_victim = s;
+    if let Some(st) = steal_min_victim {
+        options.hw.serving.steal_min_victim = st;
     }
     let server = Arc::new(Server::start(nets.to_vec(), options).unwrap());
     let mut clients = Vec::new();
@@ -52,7 +56,7 @@ fn serve_run_knobs(
             net_id,
             Arc::clone(&nets[net_id]),
             RATE_RPS,
-            REQUESTS_PER_STREAM,
+            requests_per_stream,
         );
         clients.push(std::thread::spawn(move || {
             while let Some((gap, req)) = stream.next_arrival() {
@@ -65,29 +69,63 @@ fn serve_run_knobs(
         c.join().unwrap();
     }
     let server = match Arc::try_unwrap(server) {
-        Ok(s) => s,
+        Ok(sv) => sv,
         Err(_) => panic!("server still shared"),
     };
     let (stats, responses) = server.shutdown().unwrap();
     assert_eq!(stats.completed as usize, responses.len());
-    assert_eq!(stats.completed, STREAMS as u64 * REQUESTS_PER_STREAM);
-    (
-        stats.throughput_rps,
-        stats.p50_ms,
-        stats.p99_ms,
-        stats.mean_batch,
-    )
+    assert_eq!(stats.completed, STREAMS as u64 * requests_per_stream);
+    stats
 }
 
-fn main() {
+/// JSON row for one serving configuration: throughput, latency tail,
+/// batching, per-class job rates, and fusion accounting.
+fn config_json(label: &str, stats: &ServerStats) -> Json {
+    let per_class = |class: JobClass| stats.per_class_jobs[class.index()] as f64;
+    let rate = |jobs: f64| {
+        if stats.wall_seconds > 0.0 {
+            jobs / stats.wall_seconds
+        } else {
+            0.0
+        }
+    };
+    obj(vec![
+        ("configuration", s(label)),
+        ("throughput_rps", num(stats.throughput_rps)),
+        ("p50_ms", num(stats.p50_ms)),
+        ("p99_ms", num(stats.p99_ms)),
+        ("mean_batch", num(stats.mean_batch)),
+        ("jobs_executed", num(stats.jobs_executed as f64)),
+        ("fused_fc_rows", num(stats.fused_fc_rows as f64)),
+        (
+            "job_rates_per_s",
+            obj(vec![
+                ("conv_tile", num(rate(per_class(JobClass::ConvTile)))),
+                ("fc_gemm", num(rate(per_class(JobClass::FcGemm)))),
+                ("im2col", num(rate(per_class(JobClass::Im2col)))),
+                ("fc_gemm_batch", num(rate(per_class(JobClass::FcGemmBatch)))),
+            ]),
+        ),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    // `cargo bench` appends a bare `--bench` to harness=false binaries;
+    // accept it as a valueless flag so it can't swallow the next arg.
+    let args = Args::parse(&raw, &["quick", "bench"]).map_err(anyhow::Error::msg)?;
+    let quick = args.has_flag("quick");
+    let requests_per_stream: u64 = if quick { 4 } else { 16 };
+
     let t0 = Instant::now();
+    let bytes_at_start = copied_bytes();
     let nets: Vec<Arc<Network>> = ["mpcnn", "mnist"]
         .iter()
         .map(|n| Arc::new(Network::new(zoo::load(n).unwrap(), 32).unwrap()))
         .collect();
 
     // Baseline: the single-stream driver at the same total frame count.
-    let total = (STREAMS as u64 * REQUESTS_PER_STREAM) / 2;
+    let total = (STREAMS as u64 * requests_per_stream) / 2;
     let mut baseline_fps = 0.0;
     for net in &nets {
         let frames: Vec<(u64, Tensor)> =
@@ -111,15 +149,19 @@ fn main() {
         "-".into(),
         "1.00".into(),
     ]);
-    for max_batch in [1, 4, 8] {
-        let (rps, p50, p99, mean_batch) = serve_run(&nets, max_batch);
+    let mut configs: Vec<Json> = Vec::new();
+    let batch_points: &[usize] = if quick { &[4] } else { &[1, 4, 8] };
+    for &max_batch in batch_points {
+        let stats = serve_run_knobs(&nets, requests_per_stream, max_batch, None, None);
+        let label = format!("serve {STREAMS} streams, max_batch {max_batch}");
         table.row(vec![
-            format!("serve {STREAMS} streams, max_batch {max_batch}"),
-            fmt(rps),
-            fmt(p50),
-            fmt(p99),
-            fmt(mean_batch),
+            label.clone(),
+            fmt(stats.throughput_rps),
+            fmt(stats.p50_ms),
+            fmt(stats.p99_ms),
+            fmt(stats.mean_batch),
         ]);
+        configs.push(config_json(&label, &stats));
     }
     table.print();
 
@@ -133,10 +175,17 @@ fn main() {
         "req/s",
         "p99 ms",
     ]);
-    for drain in [0usize, 3, 7] {
-        for steal_min in [0usize, 8] {
-            let (rps, _p50, p99, _mb) =
-                serve_run_knobs(&nets, 4, Some(drain), Some(steal_min));
+    let drains: &[usize] = if quick { &[3] } else { &[0, 3, 7] };
+    let steals: &[usize] = if quick { &[0] } else { &[0, 8] };
+    for &drain in drains {
+        for &steal_min in steals {
+            let stats = serve_run_knobs(
+                &nets,
+                requests_per_stream,
+                4,
+                Some(drain),
+                Some(steal_min),
+            );
             sweep.row(vec![
                 drain.to_string(),
                 if steal_min == 0 {
@@ -144,9 +193,11 @@ fn main() {
                 } else {
                     steal_min.to_string()
                 },
-                fmt(rps),
-                fmt(p99),
+                fmt(stats.throughput_rps),
+                fmt(stats.p99_ms),
             ]);
+            let label = format!("sweep drain_extra={drain} steal_min={steal_min}");
+            configs.push(config_json(&label, &stats));
         }
     }
     sweep.print();
@@ -154,4 +205,27 @@ fn main() {
         "[bench] serve_throughput finished in {:.2}s",
         t0.elapsed().as_secs_f64()
     );
+
+    if let Some(path) = args.get("json") {
+        let doc = obj(vec![
+            ("bench", s("serve_throughput")),
+            ("schema_version", num(1.0)),
+            ("quick", Json::Bool(quick)),
+            ("provenance", s("measured")),
+            ("streams", num(STREAMS as f64)),
+            ("requests_per_stream", num(requests_per_stream as f64)),
+            ("baseline_driver_fps", num(baseline_fps)),
+            // Whole-process operand copy ledger across every run above:
+            // how many bytes the operand plane actually materialized
+            // (packs + wire only — views move zero bytes).
+            (
+                "bytes_copied_total",
+                num((copied_bytes() - bytes_at_start) as f64),
+            ),
+            ("configurations", arr(configs)),
+        ]);
+        std::fs::write(path, doc.to_string() + "\n")?;
+        println!("[bench] wrote {path}");
+    }
+    Ok(())
 }

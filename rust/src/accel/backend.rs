@@ -27,6 +27,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::mm::job::{ClassMask, Job, JobClass, JobKind, JobResult};
+use crate::mm::OperandView;
 
 /// An execution backend a delegate thread drives.  Object-safe so the pool
 /// holds `Box<dyn Accelerator>` uniformly; implementors need not be `Send`
@@ -112,17 +113,18 @@ struct WorkOrder {
 }
 
 /// One worker's share of a fanned-out job: a contiguous output-row range.
-/// Operands ride in `Arc`s (shared with the job / the other workers);
-/// every chunk runs the same [`gemm_blocked_into`] kernel over its rows,
-/// so per-row accumulation order — and therefore the f32 result — is
-/// identical to the single-core path regardless of the split.
+/// Operands ride as [`OperandView`]s — refcounted windows shared with the
+/// job and the other workers, so fanning a job out moves zero operand
+/// bytes; every chunk runs the same [`gemm_blocked_into`] kernel over its
+/// rows, so per-row accumulation order — and therefore the f32 result —
+/// is identical to the single-core path regardless of the split.
 ///
 /// [`gemm_blocked_into`]: crate::mm::gemm::gemm_blocked_into
 enum WorkDesc {
     /// Rows `row0..row0+rows` of C(M,P) = A(M,N)·B(N,P).
     Rows {
-        a: Arc<Vec<f32>>,
-        b: Arc<Vec<f32>>,
+        a: OperandView,
+        b: OperandView,
         row0: usize,
         rows: usize,
         n: usize,
@@ -132,8 +134,8 @@ enum WorkDesc {
     /// Rows `row0..row0+rows` of a CONV output tile over packed (K,TS,TS)
     /// operands, accumulating across the K inner tiles.
     TileRows {
-        at: Arc<Vec<f32>>,
-        bt: Arc<Vec<f32>>,
+        at: OperandView,
+        bt: OperandView,
         k_tiles: usize,
         ts: usize,
         row0: usize,
@@ -302,11 +304,11 @@ impl Accelerator for BigNeonGemm {
             // Single-column FC, fused batched FC: fan the M output rows
             // across the team.
             JobKind::FcGemm { a, b } | JobKind::FcGemmBatch { a, b } => {
-                let (a, b) = (Arc::clone(a), Arc::clone(b));
+                let (a, b) = (a.clone(), b.clone());
                 let (n, p) = (g.n, g.p);
                 self.run_fanned(g.m, p, move |row0, rows, chunk| WorkDesc::Rows {
-                    a: Arc::clone(&a),
-                    b: Arc::clone(&b),
+                    a: a.clone(),
+                    b: b.clone(),
                     row0,
                     rows,
                     n,
@@ -315,14 +317,15 @@ impl Accelerator for BigNeonGemm {
                 })
             }
             // CONV tile: fan the TS output rows, each chunk accumulating
-            // over the K inner tiles.
-            JobKind::ConvTile { .. } => {
-                let (at, bt) = job.pack_tiles();
-                let (at, bt) = (Arc::new(at), Arc::new(bt));
+            // over the K inner tiles.  The job already carries its packed
+            // (K,TS,TS) fetch set as views — the old per-dispatch re-pack
+            // is gone; workers alias the same backing buffers.
+            JobKind::ConvTile { a_tiles, b_tiles } => {
+                let (at, bt) = (a_tiles.clone(), b_tiles.clone());
                 let (k_tiles, ts) = (job.desc.k_tiles(), g.ts);
                 self.run_fanned(ts, ts, move |row0, rows, chunk| WorkDesc::TileRows {
-                    at: Arc::clone(&at),
-                    bt: Arc::clone(&bt),
+                    at: at.clone(),
+                    bt: bt.clone(),
                     k_tiles,
                     ts,
                     row0,
@@ -370,8 +373,8 @@ impl Accelerator for PjrtPe {
         if job.class() != JobClass::ConvTile {
             anyhow::bail!("pjrt-pe cannot execute {} jobs", job.class().label());
         }
-        let (at, bt) = job.pack_tiles();
-        let data = self.engine.execute_job(&at, &bt, job.desc.k_tiles())?;
+        let (at, bt) = job.tile_operands();
+        let data = self.engine.execute_job(at, bt, job.desc.k_tiles())?;
         Ok(JobResult {
             desc: job.desc,
             data,

@@ -48,7 +48,8 @@
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -348,26 +349,35 @@ pub mod wire {
         }
     }
 
-    /// Serialized [`JobDesc`] size: nine `u64` fields.
-    const DESC_BYTES: usize = 9 * 8;
+    /// Serialized [`JobDesc`] size: nine `u64` fields.  Public so the
+    /// wire-bytes regression tests can compute exact expected frame sizes
+    /// (`1 + DESC_BYTES + Σ (8 + 4·len)` per operand run).
+    pub const DESC_BYTES: usize = 9 * 8;
 
     /// Encode one job for shipping.  The frame size is known up front, so
     /// the buffer is reserved once — megabyte operand runs must not pay
     /// log₂(n) reallocation copies on the per-job shipping path.
+    ///
+    /// Operands are serialized **straight from the job's views**: a
+    /// CONV-tile frame carries exactly the packed `(K,TS,TS)` fetch set
+    /// the job aliases (paper Listing 3 steps ①–②) with no intermediate
+    /// re-pack or staging `Vec` — the wire codec is the single place in
+    /// the operand plane where view bytes are materialized.
     pub fn encode_job(job: &Job) -> Vec<u8> {
         let payload = match &job.kind {
-            JobKind::ConvTile { a, b }
-            | JobKind::FcGemm { a, b }
-            | JobKind::FcGemmBatch { a, b } => 16 + (a.len() + b.len()) * 4,
+            JobKind::ConvTile { a_tiles, b_tiles } => 16 + (a_tiles.len() + b_tiles.len()) * 4,
+            JobKind::FcGemm { a, b } | JobKind::FcGemmBatch { a, b } => {
+                16 + (a.len() + b.len()) * 4
+            }
             JobKind::Im2col { input, .. } => 8 + input.len() * 4 + 6 * 8,
         };
         let mut buf = Vec::with_capacity(1 + DESC_BYTES + payload);
         match &job.kind {
-            JobKind::ConvTile { a, b } => {
+            JobKind::ConvTile { a_tiles, b_tiles } => {
                 buf.push(KIND_CONV_TILE);
                 put_desc(&mut buf, &job.desc);
-                put_f32s(&mut buf, a);
-                put_f32s(&mut buf, b);
+                put_f32s(&mut buf, a_tiles);
+                put_f32s(&mut buf, b_tiles);
             }
             JobKind::FcGemm { a, b } => {
                 buf.push(KIND_FC_GEMM);
@@ -411,20 +421,40 @@ pub mod wire {
         let desc = rd.desc()?;
         let g = desc.grid;
         let kind = match tag {
-            KIND_CONV_TILE | KIND_FC_GEMM | KIND_FC_GEMM_BATCH => {
+            KIND_CONV_TILE => {
+                // A CONV-tile frame carries the job's packed fetch set:
+                // one (K,TS,TS) panel per operand, not the dense layer
+                // matrices.  k_tiles derives from the decoded grid (n and
+                // ts are both ≤ MAX_ELEMS, so the product cannot wrap).
+                let a = rd.f32s()?;
+                let b = rd.f32s()?;
+                let panel = desc.k_tiles() * g.ts * g.ts;
+                ensure!(a.len() == panel, "A fetch-set size mismatch in shard frame");
+                ensure!(b.len() == panel, "B fetch-set size mismatch in shard frame");
+                ensure!(
+                    desc.t1 < g.rows() && desc.t2 < g.cols(),
+                    "tile coordinates outside the grid in shard frame"
+                );
+                JobKind::ConvTile {
+                    a_tiles: a.into(),
+                    b_tiles: b.into(),
+                }
+            }
+            KIND_FC_GEMM | KIND_FC_GEMM_BATCH => {
                 let a = rd.f32s()?;
                 let b = rd.f32s()?;
                 ensure!(a.len() == g.m * g.n, "A operand size mismatch in shard frame");
                 ensure!(b.len() == g.n * g.p, "B operand size mismatch in shard frame");
-                ensure!(
-                    tag != KIND_CONV_TILE || (desc.t1 < g.rows() && desc.t2 < g.cols()),
-                    "tile coordinates outside the grid in shard frame"
-                );
-                let (a, b) = (std::sync::Arc::new(a), std::sync::Arc::new(b));
-                match tag {
-                    KIND_CONV_TILE => JobKind::ConvTile { a, b },
-                    KIND_FC_GEMM => JobKind::FcGemm { a, b },
-                    _ => JobKind::FcGemmBatch { a, b },
+                if tag == KIND_FC_GEMM {
+                    JobKind::FcGemm {
+                        a: a.into(),
+                        b: b.into(),
+                    }
+                } else {
+                    JobKind::FcGemmBatch {
+                        a: a.into(),
+                        b: b.into(),
+                    }
                 }
             }
             KIND_IM2COL => {
@@ -446,7 +476,7 @@ pub mod wire {
                     "degenerate im2col geometry in shard frame"
                 );
                 JobKind::Im2col {
-                    input: std::sync::Arc::new(input),
+                    input: input.into(),
                     chw,
                     size,
                     stride,
@@ -456,7 +486,13 @@ pub mod wire {
             other => bail!("unknown shard job kind tag {other}"),
         };
         rd.done()?;
-        Ok(Job { desc, kind })
+        // Placement hints address the *sender's* clusters; they are never
+        // serialized, and a decoded job routes fresh on the host pool.
+        Ok(Job {
+            desc,
+            kind,
+            placement: None,
+        })
     }
 
     /// Encode one finished result.
@@ -507,6 +543,12 @@ pub struct RemoteShard {
     caps: ClassMask,
     overhead_ksteps: f64,
     transport: Box<dyn ShardTransport>,
+    /// Bytes this client put on (and took off) the wire: request + result
+    /// frame payloads, accumulated per `execute`.  Shareable so a test or
+    /// an operator can hold the ledger while the shard lives inside its
+    /// delegate thread — the proof that shipped bytes equal the jobs'
+    /// packed fetch-set sizes, with no double-buffering inflation.
+    wire_bytes: Arc<AtomicU64>,
 }
 
 impl RemoteShard {
@@ -525,6 +567,7 @@ impl RemoteShard {
             caps,
             overhead_ksteps,
             transport,
+            wire_bytes: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -537,43 +580,18 @@ impl RemoteShard {
             Box::new(transport),
         )
     }
-}
 
-/// Re-tile a CONV-tile job onto a single-tile grid over its packed
-/// `(K,TS,TS)` operand tiles, so the wire carries exactly the fetch set a
-/// PE would read (paper Listing 3 steps ①–②) instead of the whole layer's
-/// operand matrices — the shipped bytes scale with the job, not the layer.
-///
-/// Bit-identical by construction: re-extracting tile (0,0) of the repacked
-/// operands yields the original packed tiles (border padding included), so
-/// the far end's kernel sees the same buffers in the same accumulation
-/// order.  The caller re-stamps the original [`JobDesc`] onto the result.
-fn repack_conv_tile(job: &Job) -> Job {
-    let (at, bt) = job.pack_tiles();
-    let ts = job.desc.grid.ts;
-    let k_tiles = job.desc.k_tiles();
-    // A' is (TS, K·TS): block kt of `at` lands in columns kt·TS… so that
-    // `extract_a_tiles(A', 0)` returns `at` verbatim.  B' is (K·TS, TS):
-    // `bt`'s stacked blocks already ARE that matrix row-major.
-    let mut a = vec![0.0f32; ts * k_tiles * ts];
-    for kt in 0..k_tiles {
-        for r in 0..ts {
-            let src = kt * ts * ts + r * ts;
-            let dst = r * k_tiles * ts + kt * ts;
-            a[dst..dst + ts].copy_from_slice(&at[src..src + ts]);
-        }
+    /// Share `ledger` as this shard's wire-bytes counter (builder-style;
+    /// used by registrations that want the ledger to outlive the delegate
+    /// thread the shard is built in).
+    pub fn with_wire_ledger(mut self, ledger: Arc<AtomicU64>) -> RemoteShard {
+        self.wire_bytes = ledger;
+        self
     }
-    Job {
-        desc: JobDesc {
-            t1: 0,
-            t2: 0,
-            grid: TileGrid::new(ts, k_tiles * ts, ts, ts),
-            ..job.desc
-        },
-        kind: JobKind::ConvTile {
-            a: std::sync::Arc::new(a),
-            b: std::sync::Arc::new(bt),
-        },
+
+    /// Total frame bytes sent plus received by this client so far.
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire_bytes.load(Ordering::Relaxed)
     }
 }
 
@@ -595,18 +613,22 @@ impl Accelerator for RemoteShard {
     }
 
     fn execute(&mut self, job: &Job) -> Result<JobResult> {
-        // CONV tiles ship their packed fetch set, not the layer matrices.
-        let wire_job = match &job.kind {
-            JobKind::ConvTile { .. } => repack_conv_tile(job),
-            _ => job.clone(),
-        };
+        // The codec serializes straight from the job's operand views — a
+        // CONV tile's frame IS its packed fetch set (the job has carried
+        // exactly that since the operand-plane redesign; the old
+        // per-dispatch re-tiling pass is gone).
+        let frame = wire::encode_job(job);
+        self.wire_bytes
+            .fetch_add(frame.len() as u64, Ordering::Relaxed);
         self.transport
-            .send(&wire::encode_job(&wire_job))
+            .send(&frame)
             .with_context(|| format!("shipping job {} to {}", job.desc.job_id, self.id))?;
         let frame = self
             .transport
             .recv()
             .with_context(|| format!("awaiting job {} from {}", job.desc.job_id, self.id))?;
+        self.wire_bytes
+            .fetch_add(frame.len() as u64, Ordering::Relaxed);
         let result = wire::decode_result(&frame)?;
         ensure!(
             result.desc.job_id == job.desc.job_id,
@@ -615,9 +637,6 @@ impl Accelerator for RemoteShard {
             result.desc.job_id,
             job.desc.job_id
         );
-        // Re-stamp the original descriptor: the repacked grid was a wire
-        // representation, and the reply channel's consumer scatters by the
-        // original tile coordinates.
         Ok(JobResult {
             desc: job.desc,
             data: result.data,
@@ -737,29 +756,25 @@ mod tests {
     }
 
     #[test]
-    fn repacked_conv_tile_is_bitwise_equal_and_smaller_on_the_wire() {
+    fn conv_tile_frame_is_exactly_the_packed_fetch_set() {
         // Ragged border tiles included: 40×50×60 at ts=32 has partial
-        // tiles on every edge.
+        // tiles on every edge — every tile still ships the same padded
+        // (K·TS·TS)-element panels, so every frame has the same exact
+        // size: tag + descriptor + two length-prefixed operand runs.  No
+        // intermediate staging buffer can inflate this without failing
+        // the equality.
         for job in sample_jobs()
             .into_iter()
             .filter(|j| j.class() == JobClass::ConvTile)
         {
-            let repacked = repack_conv_tile(&job);
-            assert_eq!(repacked.desc.job_id, job.desc.job_id);
-            assert_eq!(repacked.desc.k_tiles(), job.desc.k_tiles());
-            // Identical packed fetch set ⇒ identical kernel inputs.
-            assert_eq!(repacked.pack_tiles(), job.pack_tiles());
+            let panel = job.desc.k_tiles() * job.desc.grid.ts * job.desc.grid.ts;
+            let want = 1 + wire::DESC_BYTES + 2 * (8 + 4 * panel);
             assert_eq!(
-                repacked.execute_native().data,
-                job.execute_native().data,
+                wire::encode_job(&job).len(),
+                want,
                 "tile ({}, {})",
                 job.desc.t1,
                 job.desc.t2
-            );
-            // The wire frame shrinks to the job's fetch set.
-            assert!(
-                wire::encode_job(&repacked).len() <= wire::encode_job(&job).len(),
-                "repacking grew the frame"
             );
         }
     }

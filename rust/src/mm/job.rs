@@ -21,9 +21,15 @@
 //! (shared buffers), the matrix geometry, the tile index, and the owning
 //! layer id — plus the frame id, since the pipelined design keeps multiple
 //! frames in flight (§3.1.1 "inter-frame parallelism").
+//!
+//! Operands are [`OperandView`]s — offset/length windows into shared
+//! buffers (the zero-copy operand plane, see `mm::operand`).  A CONV-tile
+//! job carries views into the *pre-packed* (rows·K,TS,TS) /
+//! (cols·K,TS,TS) operand panels ([`TileGrid::pack_a_tiles`] /
+//! [`TileGrid::pack_b_tiles`]), so dispatching, stealing, and executing a
+//! job never re-packs or copies operand bytes.
 
-use std::sync::Arc;
-
+use super::operand::OperandView;
 use super::tile::{job_mm_native, TileGrid};
 
 /// Dense job-class tag — indexes the per-class counters kept by delegates,
@@ -193,26 +199,35 @@ impl JobDesc {
     }
 }
 
-/// The operand payload of a job, one variant per [`JobClass`].
+/// The operand payload of a job, one variant per [`JobClass`].  Every
+/// operand is an [`OperandView`] — cloning a job bumps refcounts, it never
+/// copies data.
 #[derive(Debug, Clone)]
 pub enum JobKind {
-    /// CONV tile GEMM: A = weights (M×N), B = im2col matrix (N×P), both
-    /// shared across the layer's jobs.
-    ConvTile { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
+    /// CONV tile GEMM over **pre-packed** operand panels: `a_tiles` is the
+    /// K (TS,TS) row-panel of A for this job's t1, `b_tiles` the K (TS,TS)
+    /// column-panel of B for its t2 — each a `k_tiles·TS²` view into the
+    /// layer's packed operand buffers (the weight prepack / the frame
+    /// arena).  The job IS the paper's fetch set; executing it fetches
+    /// nothing.
+    ConvTile {
+        a_tiles: OperandView,
+        b_tiles: OperandView,
+    },
     /// FC GEMM: A = weights (M×N), B = one activation column (N×1).
     /// [`Job::fc`] rejects B ≠ one column so a batched operand cannot slip
     /// through the single-column path silently — batched FC has its own
     /// variant below.
-    FcGemm { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
+    FcGemm { a: OperandView, b: OperandView },
     /// Fused batched FC GEMM: A = weights (M×N), B = the row-major (N,B)
     /// operand holding one activation **column per request** (element
     /// `(k, j)` is request j's k-th activation — [`pack_fc_columns`]
     /// builds it, NOT a concatenation of per-request rows).  The result
     /// (M,B) is scattered back per request with [`unpack_fc_columns`].
-    FcGemmBatch { a: Arc<Vec<f32>>, b: Arc<Vec<f32>> },
+    FcGemmBatch { a: OperandView, b: OperandView },
     /// im2col lowering of one (C,H,W) input into the (C·K², OH·OW) matrix.
     Im2col {
-        input: Arc<Vec<f32>>,
+        input: OperandView,
         chw: (usize, usize, usize),
         size: usize,
         stride: usize,
@@ -231,11 +246,16 @@ impl JobKind {
     }
 }
 
-/// A dispatchable job: metadata + operand payload.
+/// A dispatchable job: metadata + operand payload + an optional routing
+/// hint.
 #[derive(Debug, Clone)]
 pub struct Job {
     pub desc: JobDesc,
     pub kind: JobKind,
+    /// Preferred cluster (the static mapper's CONV placement).  A routing
+    /// hint only — the dispatcher falls back to least-loaded routing when
+    /// the preferred cluster cannot accept the class.  Never serialized.
+    pub placement: Option<usize>,
 }
 
 /// Result of executing a job.
@@ -270,6 +290,12 @@ impl Job {
         }
     }
 
+    /// Attach a preferred-cluster routing hint (builder style).
+    pub fn placed(mut self, cluster: Option<usize>) -> Job {
+        self.placement = cluster;
+        self
+    }
+
     /// Build one FC-GEMM job: y(M) = W(M×N)·x(N).  See
     /// [`JobKind::FcGemm`] for why x must be exactly one activation
     /// column.
@@ -280,10 +306,11 @@ impl Job {
         frame_id: u64,
         out_n: usize,
         in_n: usize,
-        w: Arc<Vec<f32>>,
-        x: Arc<Vec<f32>>,
+        w: impl Into<OperandView>,
+        x: impl Into<OperandView>,
         ts: usize,
     ) -> Job {
+        let (w, x) = (w.into(), x.into());
         assert_eq!(w.len(), out_n * in_n, "FC weight size mismatch");
         assert_eq!(
             x.len(),
@@ -301,6 +328,7 @@ impl Job {
                 grid: TileGrid::new(out_n, in_n, 1, ts),
             },
             kind: JobKind::FcGemm { a: w, b: x },
+            placement: None,
         }
     }
 
@@ -316,10 +344,11 @@ impl Job {
         out_n: usize,
         in_n: usize,
         batch: usize,
-        w: Arc<Vec<f32>>,
-        xb: Arc<Vec<f32>>,
+        w: impl Into<OperandView>,
+        xb: impl Into<OperandView>,
         ts: usize,
     ) -> Job {
+        let (w, xb) = (w.into(), xb.into());
         assert!(batch >= 1, "fused FC batch must hold at least one column");
         assert_eq!(w.len(), out_n * in_n, "FC weight size mismatch");
         assert_eq!(
@@ -337,6 +366,7 @@ impl Job {
                 grid: TileGrid::new(out_n, in_n, batch, ts),
             },
             kind: JobKind::FcGemmBatch { a: w, b: xb },
+            placement: None,
         }
     }
 
@@ -351,9 +381,10 @@ impl Job {
         size: usize,
         stride: usize,
         pad: usize,
-        input: Arc<Vec<f32>>,
+        input: impl Into<OperandView>,
         ts: usize,
     ) -> Job {
+        let input = input.into();
         let (c, h, w) = chw;
         assert_eq!(input.len(), c * h * w, "im2col input size mismatch");
         let (oh, ow) = crate::nn::conv_out_hw(h, w, size, stride, pad);
@@ -373,29 +404,27 @@ impl Job {
                 stride,
                 pad,
             },
+            placement: None,
         }
     }
 
-    /// Pack a CONV-tile job's operand tiles into contiguous (K,TS,TS)
-    /// buffers — the memory-subsystem fetch a PE performs (steps ①–② of
-    /// Listing 3).  Panics on non-CONV jobs (the PE kernel only speaks
-    /// tiles; capability routing keeps other classes away from it).
-    pub fn pack_tiles(&self) -> (Vec<f32>, Vec<f32>) {
+    /// A CONV-tile job's packed operand panels — the (K,TS,TS) fetch set
+    /// the PE kernel consumes (steps ①–② of Listing 3), already resident
+    /// in the job's views: no copy, just two slices.  Panics on non-CONV
+    /// jobs (the PE kernel only speaks tiles; capability routing keeps
+    /// other classes away from it).
+    pub fn tile_operands(&self) -> (&[f32], &[f32]) {
         match &self.kind {
-            JobKind::ConvTile { a, b } => (
-                self.desc.grid.extract_a_tiles(a, self.desc.t1),
-                self.desc.grid.extract_b_tiles(b, self.desc.t2),
-            ),
-            _ => panic!("pack_tiles on a {:?} job", self.class()),
+            JobKind::ConvTile { a_tiles, b_tiles } => (a_tiles, b_tiles),
+            _ => panic!("tile_operands on a {:?} job", self.class()),
         }
     }
 
     /// Execute on the native (NEON-path) kernels.
     pub fn execute_native(&self) -> JobResult {
         let data = match &self.kind {
-            JobKind::ConvTile { .. } => {
-                let (at, bt) = self.pack_tiles();
-                job_mm_native(&at, &bt, self.desc.k_tiles(), self.desc.grid.ts)
+            JobKind::ConvTile { a_tiles, b_tiles } => {
+                job_mm_native(a_tiles, b_tiles, self.desc.k_tiles(), self.desc.grid.ts)
             }
             // Single-column and fused-batch FC share one kernel: the fused
             // operand just widens P from 1 to B, so each output element
@@ -422,18 +451,44 @@ impl Job {
     }
 }
 
-/// Generate all CONV-tile jobs of one GEMM (one CONV layer instance of one
-/// frame).  `next_job_id` provides globally-unique ids across layers/frames.
+/// Generate all CONV-tile jobs of one GEMM from DENSE (M×N) / (N×P)
+/// operands: packs each operand into the blocked layout exactly once,
+/// then slices per-job views out of the two packs (the per-job fetch of
+/// the old operand plane is gone).  `next_job_id` provides
+/// globally-unique ids across layers/frames.
 pub fn jobs_for_gemm(
     layer_id: usize,
     frame_id: u64,
     grid: TileGrid,
-    a: Arc<Vec<f32>>,
-    b: Arc<Vec<f32>>,
+    a: impl Into<OperandView>,
+    b: impl Into<OperandView>,
     next_job_id: &mut u64,
 ) -> Vec<Job> {
+    let (a, b) = (a.into(), b.into());
     assert_eq!(a.len(), grid.m * grid.n, "A operand size mismatch");
     assert_eq!(b.len(), grid.n * grid.p, "B operand size mismatch");
+    let a_pack = OperandView::from(grid.pack_a_tiles(&a));
+    let b_pack = OperandView::from(grid.pack_b_tiles(&b));
+    jobs_from_packs(layer_id, frame_id, grid, a_pack, b_pack, next_job_id)
+}
+
+/// Generate all CONV-tile jobs of one GEMM from operands ALREADY in the
+/// blocked layout ([`TileGrid::pack_a_tiles`] / [`TileGrid::pack_b_tiles`]):
+/// every job's operands are offset/length views into the two packs — zero
+/// copies, shared `Arc` backing.  This is the hot-path entry: the network's
+/// load-time weight prepack and the frame arena's packed im2col panels go
+/// straight in.
+pub fn jobs_from_packs(
+    layer_id: usize,
+    frame_id: u64,
+    grid: TileGrid,
+    a_pack: OperandView,
+    b_pack: OperandView,
+    next_job_id: &mut u64,
+) -> Vec<Job> {
+    let panel = grid.panel_elems();
+    assert_eq!(a_pack.len(), grid.rows() * panel, "packed A size mismatch");
+    assert_eq!(b_pack.len(), grid.cols() * panel, "packed B size mismatch");
     let mut jobs = Vec::with_capacity(grid.num_jobs());
     for (t1, t2) in grid.tiles() {
         let desc = JobDesc {
@@ -448,9 +503,10 @@ pub fn jobs_for_gemm(
         jobs.push(Job {
             desc,
             kind: JobKind::ConvTile {
-                a: Arc::clone(&a),
-                b: Arc::clone(&b),
+                a_tiles: a_pack.slice(t1 * panel, panel),
+                b_tiles: b_pack.slice(t2 * panel, panel),
             },
+            placement: None,
         });
     }
     jobs
@@ -470,6 +526,7 @@ pub fn pack_fc_columns(cols: &[&[f32]]) -> Vec<f32> {
             packed[k * batch + j] = *v;
         }
     }
+    super::operand::note_copy(packed.len() * 4);
     packed
 }
 
@@ -494,6 +551,8 @@ pub fn gather_results(grid: TileGrid, results: &[JobResult]) -> Vec<f32> {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
     use crate::mm::gemm::gemm_naive;
     use crate::tensor::Tensor;
@@ -716,9 +775,50 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "pack_tiles")]
-    fn pack_tiles_rejects_non_conv_jobs() {
+    #[should_panic(expected = "tile_operands")]
+    fn tile_operands_rejects_non_conv_jobs() {
         let job = Job::fc(0, 0, 0, 4, 4, Arc::new(vec![0.0; 16]), Arc::new(vec![0.0; 4]), 4);
-        let _ = job.pack_tiles();
+        let _ = job.tile_operands();
+    }
+
+    /// The zero-copy contract at the job level: every job generated from
+    /// pre-packed operands carries views that ALIAS the two packs (shared
+    /// `Arc`, offset arithmetic only), and cloning a job copies nothing.
+    #[test]
+    fn jobs_from_packs_alias_the_packs() {
+        let grid = TileGrid::new(70, 40, 90, 32);
+        let a = rand_vec(70 * 40, 41);
+        let b = rand_vec(40 * 90, 42);
+        let a_pack = OperandView::from(grid.pack_a_tiles(&a));
+        let b_pack = OperandView::from(grid.pack_b_tiles(&b));
+        let panel = grid.panel_elems();
+        let mut id = 0;
+        let jobs = jobs_from_packs(5, 9, grid, a_pack.clone(), b_pack.clone(), &mut id);
+        assert_eq!(jobs.len(), grid.num_jobs());
+        for job in &jobs {
+            let (at, bt) = job.tile_operands();
+            assert_eq!(at.len(), panel);
+            assert_eq!(bt.len(), panel);
+            match &job.kind {
+                JobKind::ConvTile { a_tiles, b_tiles } => {
+                    assert!(Arc::ptr_eq(a_tiles.buffer(), a_pack.buffer()));
+                    assert!(Arc::ptr_eq(b_tiles.buffer(), b_pack.buffer()));
+                    assert_eq!(a_tiles.offset(), job.desc.t1 * panel);
+                    assert_eq!(b_tiles.offset(), job.desc.t2 * panel);
+                    // A clone still aliases — refcount bump, no bytes.
+                    let cloned = job.clone();
+                    let (cat, _) = cloned.tile_operands();
+                    assert_eq!(cat.as_ptr(), at.as_ptr());
+                }
+                _ => unreachable!(),
+            }
+        }
+        // And the dense-operand wrapper produces the identical numbers.
+        let results: Vec<JobResult> = jobs.iter().map(|j| j.execute_native()).collect();
+        let c = gather_results(grid, &results);
+        let mut id2 = 0;
+        let dense = jobs_for_gemm(5, 9, grid, a.clone(), b.clone(), &mut id2);
+        let dense_results: Vec<JobResult> = dense.iter().map(|j| j.execute_native()).collect();
+        assert_eq!(c, gather_results(grid, &dense_results));
     }
 }

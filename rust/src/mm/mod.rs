@@ -6,7 +6,9 @@
 
 pub mod gemm;
 pub mod job;
+pub mod operand;
 pub mod tile;
 
 pub use job::{ClassMask, Classed, Job, JobClass, JobDesc, JobKind, JobResult};
+pub use operand::{FrameArena, OperandView};
 pub use tile::TileGrid;

@@ -1,0 +1,259 @@
+//! The zero-copy operand plane: shared-buffer operand views and the
+//! per-frame bump arena the runtime packs operands into.
+//!
+//! Every pool [`Job`](crate::mm::Job) used to own `Vec<f32>` operands —
+//! CONV tiles re-packed a (K,TS,TS) fetch set per job, fused FC batches
+//! cloned their activation columns, and weights were re-packed on every
+//! dispatch.  An [`OperandView`] replaces the owned buffers: an `Arc`
+//! backing allocation plus an offset/length window into it.  Cloning a
+//! view is a refcount bump; slicing is arithmetic; the bytes move exactly
+//! once — when a layout transform packs them into a fresh buffer (counted
+//! by [`copied_bytes`]/[`copy_events`]) or when the remote `wire` codec
+//! serializes a view for shipping.
+//!
+//! A [`FrameArena`] owns the per-frame transient buffers (im2col columns,
+//! packed B panels, fused FC column packs): the frame executor allocates
+//! into it, jobs carry views that alias its chunks, and the whole frame's
+//! working set is dropped at once when the arena goes out of scope.
+//! Load-time weight prepacks live on the `Network` instead and are aliased
+//! by every frame's jobs for the network's lifetime.
+
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Process-wide layout-transform copy ledger: bytes that were actually
+/// copied into a fresh buffer (tile packing, FC column packing).  Cheap
+/// view clones and arena adoptions do NOT count — that is the point.
+static COPIED_BYTES: AtomicU64 = AtomicU64::new(0);
+static COPY_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Record one layout-transform copy of `bytes` bytes.  Called by the
+/// pack/extract helpers in `mm::tile` and `mm::job`; everything else in
+/// the operand plane moves views, not bytes.
+pub(crate) fn note_copy(bytes: usize) {
+    COPIED_BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    COPY_EVENTS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Total bytes copied by operand layout transforms since process start.
+pub fn copied_bytes() -> u64 {
+    COPIED_BYTES.load(Ordering::Relaxed)
+}
+
+/// Total layout-transform copy events since process start.
+pub fn copy_events() -> u64 {
+    COPY_EVENTS.load(Ordering::Relaxed)
+}
+
+/// A read-only window into a shared f32 buffer: `Arc` backing allocation
+/// plus offset/length.  Clone is a refcount bump; [`OperandView::slice`]
+/// narrows the window without touching the data.  Jobs, backends, and the
+/// wire codec all consume operands through this one type.
+#[derive(Clone)]
+pub struct OperandView {
+    buf: Arc<Vec<f32>>,
+    off: usize,
+    len: usize,
+}
+
+impl OperandView {
+    /// A view over an entire shared buffer.
+    pub fn full(buf: Arc<Vec<f32>>) -> OperandView {
+        let len = buf.len();
+        OperandView { buf, off: 0, len }
+    }
+
+    /// A view over `buf[off..off + len]`; panics if the window is out of
+    /// bounds.
+    pub fn new(buf: Arc<Vec<f32>>, off: usize, len: usize) -> OperandView {
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= buf.len()),
+            "operand view {off}+{len} outside buffer of {}",
+            buf.len()
+        );
+        OperandView { buf, off, len }
+    }
+
+    /// Narrow this view to `self[off..off + len]` (offsets relative to the
+    /// view, not the backing buffer).  Shares the backing `Arc`.
+    pub fn slice(&self, off: usize, len: usize) -> OperandView {
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= self.len),
+            "operand sub-view {off}+{len} outside view of {}",
+            self.len
+        );
+        OperandView {
+            buf: Arc::clone(&self.buf),
+            off: self.off + off,
+            len,
+        }
+    }
+
+    /// The viewed elements.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// The shared backing allocation (for aliasing checks — `Arc::ptr_eq`
+    /// against an arena chunk or a weight prepack).
+    pub fn buffer(&self) -> &Arc<Vec<f32>> {
+        &self.buf
+    }
+
+    /// Offset of this view within its backing buffer.
+    pub fn offset(&self) -> usize {
+        self.off
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Deref for OperandView {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl From<Arc<Vec<f32>>> for OperandView {
+    fn from(buf: Arc<Vec<f32>>) -> OperandView {
+        OperandView::full(buf)
+    }
+}
+
+impl From<Vec<f32>> for OperandView {
+    fn from(v: Vec<f32>) -> OperandView {
+        OperandView::full(Arc::new(v))
+    }
+}
+
+impl std::fmt::Debug for OperandView {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // The buffer may be megabytes; print the window, not the data.
+        f.debug_struct("OperandView")
+            .field("off", &self.off)
+            .field("len", &self.len)
+            .field("buf_len", &self.buf.len())
+            .finish()
+    }
+}
+
+/// A per-frame bump arena: owns the frame's transient operand buffers so
+/// jobs can alias them via views and the whole working set drops at once.
+/// Allocation freezes each buffer into an `Arc` chunk; [`FrameArena::holds`]
+/// answers whether a view aliases one of this arena's chunks (the
+/// zero-copy proof the tests pin).
+#[derive(Default)]
+pub struct FrameArena {
+    chunks: Vec<Arc<Vec<f32>>>,
+}
+
+impl FrameArena {
+    pub fn new() -> FrameArena {
+        FrameArena::default()
+    }
+
+    /// Allocate a zeroed `len`-element chunk, let `fill` write it in
+    /// place, freeze it, and return a view over the whole chunk.
+    pub fn alloc_with(&mut self, len: usize, fill: impl FnOnce(&mut [f32])) -> OperandView {
+        let mut buf = vec![0.0f32; len];
+        fill(&mut buf);
+        self.adopt(buf)
+    }
+
+    /// Adopt an already-built buffer into the arena without copying it
+    /// (how im2col results enter the frame's working set) and return a
+    /// view over it.
+    pub fn adopt(&mut self, buf: Vec<f32>) -> OperandView {
+        let chunk = Arc::new(buf);
+        self.chunks.push(Arc::clone(&chunk));
+        OperandView::full(chunk)
+    }
+
+    /// Does `view` alias one of this arena's chunks?
+    pub fn holds(&self, view: &OperandView) -> bool {
+        self.chunks.iter().any(|c| Arc::ptr_eq(c, view.buffer()))
+    }
+
+    /// Number of chunks allocated into this arena.
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Total f32 elements held by this arena.
+    pub fn elems(&self) -> usize {
+        self.chunks.iter().map(|c| c.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_share_one_allocation() {
+        let buf = Arc::new((0..100).map(|i| i as f32).collect::<Vec<f32>>());
+        let v = OperandView::full(Arc::clone(&buf));
+        assert_eq!(v.len(), 100);
+        assert_eq!(v.offset(), 0);
+        let s = v.slice(10, 20);
+        assert_eq!(s.offset(), 10);
+        assert_eq!(s.len(), 20);
+        assert_eq!(s[0], 10.0);
+        assert_eq!(&s[..3], &[10.0, 11.0, 12.0]);
+        // Slices and clones all alias the one backing allocation.
+        assert!(Arc::ptr_eq(s.buffer(), &buf));
+        assert!(Arc::ptr_eq(v.clone().buffer(), &buf));
+        // Nested slicing composes offsets.
+        let ss = s.slice(5, 5);
+        assert_eq!(ss.offset(), 15);
+        assert_eq!(ss[0], 15.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside view")]
+    fn slice_bounds_are_checked() {
+        let v = OperandView::from(vec![0.0f32; 8]);
+        let _ = v.slice(4, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside buffer")]
+    fn new_bounds_are_checked() {
+        let buf = Arc::new(vec![0.0f32; 8]);
+        let _ = OperandView::new(buf, 6, 3);
+    }
+
+    #[test]
+    fn arena_tracks_and_identifies_its_chunks() {
+        let mut arena = FrameArena::new();
+        let a = arena.alloc_with(16, |dst| dst[3] = 7.0);
+        assert_eq!(a[3], 7.0);
+        assert_eq!(a.len(), 16);
+        let b = arena.adopt(vec![1.0; 8]);
+        assert_eq!(arena.chunk_count(), 2);
+        assert_eq!(arena.elems(), 24);
+        assert!(arena.holds(&a));
+        assert!(arena.holds(&b));
+        assert!(arena.holds(&a.slice(2, 4)), "sub-views alias the chunk too");
+        let foreign = OperandView::from(vec![0.0f32; 4]);
+        assert!(!arena.holds(&foreign));
+    }
+
+    #[test]
+    fn copy_ledger_moves_on_note_copy() {
+        let b0 = copied_bytes();
+        let e0 = copy_events();
+        note_copy(128);
+        assert!(copied_bytes() >= b0 + 128);
+        assert!(copy_events() >= e0 + 1);
+    }
+}

@@ -41,6 +41,11 @@ impl TileGrid {
         self.rows() * self.cols()
     }
 
+    /// f32 elements in one packed operand panel: K (TS,TS) tiles.
+    pub fn panel_elems(&self) -> usize {
+        self.k_tiles() * self.ts * self.ts
+    }
+
     /// Extract A's row-panel for output tile row `t1` as K packed (TS,TS)
     /// tiles (zero-padded at borders) — the PE's fetch of step ② in
     /// paper Listing 3.
@@ -55,6 +60,7 @@ impl TileGrid {
             let dst = &mut out[kt * ts * ts..(kt + 1) * ts * ts];
             pack_tile(a, self.m, self.n, row0, col0, ts, dst);
         }
+        super::operand::note_copy(out.len() * 4);
         out
     }
 
@@ -70,7 +76,54 @@ impl TileGrid {
             let dst = &mut out[kt * ts * ts..(kt + 1) * ts * ts];
             pack_tile(b, self.n, self.p, row0, col0, ts, dst);
         }
+        super::operand::note_copy(out.len() * 4);
         out
+    }
+
+    /// Pack the WHOLE dense A (M×N) into the blocked layout: rows() row
+    /// panels of K (TS,TS) tiles each, panel `t1` at offset
+    /// `t1 * panel_elems()`.  This is the once-per-GEMM (or, for weights,
+    /// once-per-network-load) transform the per-job
+    /// [`TileGrid::extract_a_tiles`] fetch used to repeat per tile row.
+    pub fn pack_a_tiles(&self, a: &[f32]) -> Vec<f32> {
+        assert_eq!(a.len(), self.m * self.n, "A operand size mismatch");
+        let ts = self.ts;
+        let panel = self.panel_elems();
+        let mut out = vec![0.0f32; self.rows() * panel];
+        for t1 in 0..self.rows() {
+            let row0 = t1 * ts;
+            for kt in 0..self.k_tiles() {
+                let off = t1 * panel + kt * ts * ts;
+                pack_tile(a, self.m, self.n, row0, kt * ts, ts, &mut out[off..off + ts * ts]);
+            }
+        }
+        super::operand::note_copy(out.len() * 4);
+        out
+    }
+
+    /// Pack the WHOLE dense B (N×P) into cols() column panels of K
+    /// (TS,TS) tiles each, panel `t2` at offset `t2 * panel_elems()`.
+    pub fn pack_b_tiles(&self, b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols() * self.panel_elems()];
+        self.pack_b_tiles_into(b, &mut out);
+        out
+    }
+
+    /// [`TileGrid::pack_b_tiles`] into a caller-provided (arena) buffer of
+    /// `cols() * panel_elems()` zeroed f32s.
+    pub fn pack_b_tiles_into(&self, b: &[f32], out: &mut [f32]) {
+        assert_eq!(b.len(), self.n * self.p, "B operand size mismatch");
+        let ts = self.ts;
+        let panel = self.panel_elems();
+        assert_eq!(out.len(), self.cols() * panel, "packed B buffer size mismatch");
+        for t2 in 0..self.cols() {
+            let col0 = t2 * ts;
+            for kt in 0..self.k_tiles() {
+                let off = t2 * panel + kt * ts * ts;
+                pack_tile(b, self.n, self.p, kt * ts, col0, ts, &mut out[off..off + ts * ts]);
+            }
+        }
+        super::operand::note_copy(out.len() * 4);
     }
 
     /// Scatter a computed (TS,TS) output tile back into C, dropping
@@ -235,6 +288,36 @@ mod tests {
         g.scatter_c(&mut c, 0, 0, &tile);
         // only 3x3 region written: rows of the tile are [0,1,2],[4,5,6],[8,9,10]
         assert_eq!(c, vec![0.0, 1.0, 2.0, 4.0, 5.0, 6.0, 8.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn whole_matrix_packs_match_per_panel_extracts() {
+        let g = TileGrid::new(70, 40, 90, 32);
+        let a = rand(&[70, 40], 21);
+        let b = rand(&[40, 90], 22);
+        let panel = g.panel_elems();
+        let ap = g.pack_a_tiles(a.data());
+        assert_eq!(ap.len(), g.rows() * panel);
+        for t1 in 0..g.rows() {
+            assert_eq!(
+                &ap[t1 * panel..(t1 + 1) * panel],
+                &g.extract_a_tiles(a.data(), t1)[..],
+                "A panel {t1}"
+            );
+        }
+        let bp = g.pack_b_tiles(b.data());
+        assert_eq!(bp.len(), g.cols() * panel);
+        for t2 in 0..g.cols() {
+            assert_eq!(
+                &bp[t2 * panel..(t2 + 1) * panel],
+                &g.extract_b_tiles(b.data(), t2)[..],
+                "B panel {t2}"
+            );
+        }
+        // The into-variant writes the identical layout.
+        let mut bp2 = vec![0.0f32; g.cols() * panel];
+        g.pack_b_tiles_into(b.data(), &mut bp2);
+        assert_eq!(bp, bp2);
     }
 
     #[test]

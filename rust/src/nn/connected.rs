@@ -79,7 +79,7 @@ mod tests {
         let bias = vec![0.25f32; out_n];
         let w = Tensor::from_vec(&[out_n, in_n], wv.clone());
         let want = connected(&xv, &w, &bias);
-        let mut got = NativeExec.fc_gemm(0, out_n, in_n, Arc::new(wv), Arc::new(xv));
+        let mut got = NativeExec.fc_gemm(0, out_n, in_n, Arc::new(wv).into(), Arc::new(xv).into());
         for (g, b) in got.iter_mut().zip(&bias) {
             *g += *b;
         }

@@ -4,13 +4,14 @@
 //! bit-for-bit (same PRNG, same order, same f32 rounding) so the Rust
 //! pipeline and the AOT model artifact compute over identical weights.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::config::{Activation, LayerSpec, NetConfig};
 use crate::mm::job::JobClass;
-use crate::mm::TileGrid;
+use crate::mm::{OperandView, TileGrid};
 use crate::tensor::Tensor;
 use crate::util::rng;
 
@@ -123,6 +124,18 @@ pub struct Network {
     /// (params are Arc-backed), so the per-frame hot path never copies a
     /// weight matrix and each network stores its weights exactly once.
     weight_arcs: Vec<Option<Arc<Vec<f32>>>>,
+    /// Per-layer CONV weight prepack: the dense (M,N) weight matrix in the
+    /// blocked (rows·K,TS,TS) job layout ([`TileGrid::pack_a_tiles`]),
+    /// built **once at network load**.  Every frame's CONV-tile jobs carry
+    /// views into these buffers — the per-dispatch weight re-pack of the
+    /// old operand plane is gone.  FC weights need no prepack (the dense
+    /// row-major matrix IS the GEMM layout); their jobs alias the param
+    /// allocation directly.
+    conv_packs: Vec<Option<Arc<Vec<f32>>>>,
+    /// Per-layer count of weight-pack events (shared across clones so the
+    /// zero-copy proof tests can pin "exactly one pack per layer per
+    /// network lifetime").
+    pack_counts: Arc<Vec<AtomicU64>>,
 }
 
 /// Executor hooks for all the matrix work of a forward pass — CONV GEMMs,
@@ -131,24 +144,45 @@ pub struct Network {
 /// plugs in `rt::PoolRouter`, which emits every class as jobs on the
 /// shared heterogeneous accelerator pool.
 pub trait MatExec {
-    /// CONV GEMM: produce the dense C (M×P) for C = A(M×N)·B(N×P).
+    /// CONV GEMM over **packed** operand panels: `a_tiles` is the weight
+    /// prepack ([`Network::conv_pack`], (rows·K,TS,TS)), `b_tiles` the
+    /// packed im2col panels from [`MatExec::pack_cols`] ((cols·K,TS,TS)).
+    /// Produces the dense C (M×P).  Operands arrive as views — an
+    /// executor slices per-job windows out of them without copying.
     fn conv_gemm(
         &self,
         layer_idx: usize,
         grid: TileGrid,
-        a: Arc<Vec<f32>>,
-        b: Arc<Vec<f32>>,
+        a_tiles: OperandView,
+        b_tiles: OperandView,
     ) -> Vec<f32>;
 
+    /// Pack a CONV layer's dense im2col matrix (N×P) into the blocked
+    /// (cols·K,TS,TS) B layout.  The default packs into a fresh buffer;
+    /// the pooled executor overrides this to pack into the frame arena so
+    /// the layer's tile jobs alias frame-owned memory.
+    fn pack_cols(&self, layer_idx: usize, grid: &TileGrid, col: &[f32]) -> OperandView {
+        let _ = layer_idx;
+        OperandView::from(grid.pack_b_tiles(col))
+    }
+
+    /// Pack a micro-batch's activation columns into the row-major (IN,B)
+    /// fused-FC operand ([`crate::mm::job::pack_fc_columns`] layout).  The
+    /// pooled executor overrides this to pack into the frame arena.
+    fn pack_fc_cols(&self, layer_idx: usize, cols: &[&[f32]]) -> OperandView {
+        let _ = layer_idx;
+        OperandView::from(crate::mm::job::pack_fc_columns(cols))
+    }
+
     /// FC GEMM: y(M) = W(M×N)·x(N).  Bias and activation are applied by
-    /// the caller.
+    /// the caller.  `w` is a view aliasing the network's weight param.
     fn fc_gemm(
         &self,
         layer_idx: usize,
         out_n: usize,
         in_n: usize,
-        w: Arc<Vec<f32>>,
-        x: Arc<Vec<f32>>,
+        w: OperandView,
+        x: OperandView,
     ) -> Vec<f32> {
         let _ = layer_idx;
         let mut y = vec![0.0f32; out_n];
@@ -157,7 +191,7 @@ pub trait MatExec {
     }
 
     /// Fused batched FC GEMM: C(M,B) = W(M×N)·X(N,B), where `xb` packs one
-    /// activation column per request ([`crate::mm::job::pack_fc_columns`]).
+    /// activation column per request ([`MatExec::pack_fc_cols`]).
     /// Bias and activation are applied per request by the caller.  The
     /// default runs the native kernel; the pooled executor emits one
     /// [`crate::mm::JobClass::FcGemmBatch`] job for the whole batch.
@@ -167,8 +201,8 @@ pub trait MatExec {
         out_n: usize,
         in_n: usize,
         batch: usize,
-        w: Arc<Vec<f32>>,
-        xb: Arc<Vec<f32>>,
+        w: OperandView,
+        xb: OperandView,
     ) -> Vec<f32> {
         let _ = layer_idx;
         let mut c = vec![0.0f32; out_n * batch];
@@ -193,6 +227,10 @@ pub trait MatExec {
 }
 
 /// The all-native executor ([`Network::forward_reference`]'s backend).
+/// Runs the same per-tile job kernel over the same packed panels as the
+/// pool path, so the reference forward is bit-identical to pooled
+/// execution **by construction** — they share every FLOP's accumulation
+/// order.
 pub struct NativeExec;
 
 impl MatExec for NativeExec {
@@ -200,12 +238,21 @@ impl MatExec for NativeExec {
         &self,
         _layer_idx: usize,
         grid: TileGrid,
-        a: Arc<Vec<f32>>,
-        b: Arc<Vec<f32>>,
+        a_tiles: OperandView,
+        b_tiles: OperandView,
     ) -> Vec<f32> {
-        let at = Tensor::from_vec(&[grid.m, grid.n], (*a).clone());
-        let bt = Tensor::from_vec(&[grid.n, grid.p], (*b).clone());
-        crate::mm::gemm::gemm_blocked(&at, &bt).into_vec()
+        let panel = grid.panel_elems();
+        let mut c = vec![0.0f32; grid.m * grid.p];
+        for (t1, t2) in grid.tiles() {
+            let tile = crate::mm::tile::job_mm_native(
+                &a_tiles[t1 * panel..(t1 + 1) * panel],
+                &b_tiles[t2 * panel..(t2 + 1) * panel],
+                grid.k_tiles(),
+                grid.ts,
+            );
+            grid.scatter_c(&mut c, t1, t2, &tile);
+        }
+        c
     }
 }
 
@@ -215,16 +262,16 @@ pub struct GemmExecFn<F>(pub F);
 
 impl<F> MatExec for GemmExecFn<F>
 where
-    F: Fn(usize, TileGrid, Arc<Vec<f32>>, Arc<Vec<f32>>) -> Vec<f32>,
+    F: Fn(usize, TileGrid, OperandView, OperandView) -> Vec<f32>,
 {
     fn conv_gemm(
         &self,
         layer_idx: usize,
         grid: TileGrid,
-        a: Arc<Vec<f32>>,
-        b: Arc<Vec<f32>>,
+        a_tiles: OperandView,
+        b_tiles: OperandView,
     ) -> Vec<f32> {
-        (self.0)(layer_idx, grid, a, b)
+        (self.0)(layer_idx, grid, a_tiles, b_tiles)
     }
 }
 
@@ -251,13 +298,25 @@ impl Network {
                 })
             })
             .collect();
-        Ok(Network {
+        let n_layers = config.layers.len();
+        let mut net = Network {
             config,
             params,
             shapes,
             tile_size,
             weight_arcs,
-        })
+            conv_packs: vec![None; n_layers],
+            pack_counts: Arc::new((0..n_layers).map(|_| AtomicU64::new(0)).collect()),
+        };
+        // Pack every CONV layer's weights into the blocked job layout
+        // exactly ONCE, here at load.  The per-frame hot path only ever
+        // slices views out of these buffers.
+        for info in net.conv_infos() {
+            let packed = info.grid.pack_a_tiles(&net.weights_arc(info.layer_idx));
+            net.conv_packs[info.layer_idx] = Some(Arc::new(packed));
+            net.pack_counts[info.layer_idx].fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(net)
     }
 
     /// Shared GEMM weight operand of a CONV/FC layer (cheap Arc clone;
@@ -268,6 +327,26 @@ impl Network {
                 .as_ref()
                 .expect("layer has GEMM weights"),
         )
+    }
+
+    /// View of a CONV layer's load-time weight prepack — the blocked
+    /// (rows·K,TS,TS) A operand every frame's tile jobs alias.  Cheap
+    /// (refcount bump); panics for layers without a CONV prepack.
+    pub fn conv_pack(&self, layer: usize) -> OperandView {
+        OperandView::full(Arc::clone(
+            self.conv_packs[layer]
+                .as_ref()
+                .expect("conv layer has a weight prepack"),
+        ))
+    }
+
+    /// How many times `layer`'s weights have been packed into the blocked
+    /// layout over this network's lifetime.  The zero-copy contract pins
+    /// this at exactly 1 for CONV layers (the load-time prepack) and 0
+    /// for everything else — nothing on the dispatch path re-packs
+    /// weights.
+    pub fn weight_pack_count(&self, layer: usize) -> u64 {
+        self.pack_counts[layer].load(Ordering::Relaxed)
     }
 
     pub fn tile_size(&self) -> usize {
@@ -477,14 +556,14 @@ impl Network {
                 t.data()
             })
             .collect();
-        let packed = crate::mm::job::pack_fc_columns(&cols);
+        let xb = exec.pack_fc_cols(idx, &cols);
         let c = exec.fc_gemm_batch(
             idx,
             out_n,
             in_n,
             batch,
-            self.weights_arc(idx),
-            Arc::new(packed),
+            OperandView::full(self.weights_arc(idx)),
+            xb,
         );
         crate::mm::job::unpack_fc_columns(&c, out_n, batch)
             .into_iter()
@@ -528,12 +607,10 @@ impl Network {
                     oh * ow,
                     self.tile_size,
                 );
-                let c_mat = exec.conv_gemm(
-                    idx,
-                    grid,
-                    self.weights_arc(idx),
-                    Arc::new(col.into_vec()),
-                );
+                // B packs once per layer per frame (into the executor's
+                // arena on the pooled path); A is the load-time prepack.
+                let b_tiles = exec.pack_cols(idx, &grid, col.data());
+                let c_mat = exec.conv_gemm(idx, grid, self.conv_pack(idx), b_tiles);
                 let bias = self.layer_param(idx, "bias").expect("conv bias");
                 let mut out = Tensor::from_vec(&[*filters, oh, ow], c_mat);
                 for o in 0..*filters {
@@ -557,8 +634,8 @@ impl Network {
                     idx,
                     out_n,
                     in_n,
-                    self.weights_arc(idx),
-                    Arc::new(input.into_vec()),
+                    OperandView::full(self.weights_arc(idx)),
+                    OperandView::from(input.into_vec()),
                 );
                 for (v, bv) in out.iter_mut().zip(b.data()) {
                     *v = activation.apply(*v + *bv);
@@ -814,22 +891,55 @@ mod tests {
 
     #[test]
     fn forward_with_custom_executor_used() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::atomic::AtomicUsize;
         let net = mk("mnist");
         let calls = AtomicUsize::new(0);
         let x = net.make_input(0);
         let exec = GemmExecFn(
-            |_: usize, grid: TileGrid, a: Arc<Vec<f32>>, b: Arc<Vec<f32>>| {
+            |idx: usize, grid: TileGrid, a: OperandView, b: OperandView| {
                 calls.fetch_add(1, Ordering::SeqCst);
-                let at = Tensor::from_vec(&[grid.m, grid.n], (*a).clone());
-                let bt = Tensor::from_vec(&[grid.n, grid.p], (*b).clone());
-                crate::mm::gemm::gemm_blocked(&at, &bt).into_vec()
+                NativeExec.conv_gemm(idx, grid, a, b)
             },
         );
         let y = net.forward_with(&x, &exec);
         assert_eq!(calls.load(Ordering::SeqCst), 2); // mnist has 2 convs
         let want = net.forward_reference(&x);
         assert!(y.allclose(&want, 1e-6, 1e-6));
+    }
+
+    /// The load-time prepack contract: every CONV layer's weights are in
+    /// the blocked layout exactly once per network lifetime, the packs
+    /// match a fresh `pack_a_tiles` of the dense weights, and running
+    /// frames does not re-pack anything.
+    #[test]
+    fn conv_weights_prepacked_once_at_load() {
+        let net = mk("mnist");
+        for (idx, layer) in net.config.layers.iter().enumerate() {
+            match layer {
+                LayerSpec::Conv { .. } => {
+                    assert_eq!(net.weight_pack_count(idx), 1, "layer {idx}")
+                }
+                _ => assert_eq!(net.weight_pack_count(idx), 0, "layer {idx}"),
+            }
+        }
+        for info in net.conv_infos() {
+            let pack = net.conv_pack(info.layer_idx);
+            assert_eq!(pack.len(), info.grid.rows() * info.grid.panel_elems());
+            let fresh = info.grid.pack_a_tiles(&net.weights_arc(info.layer_idx));
+            assert_eq!(pack.as_slice(), &fresh[..], "layer {}", info.layer_idx);
+            // Repeated accessors alias ONE allocation.
+            assert!(Arc::ptr_eq(
+                pack.buffer(),
+                net.conv_pack(info.layer_idx).buffer()
+            ));
+        }
+        // Forwarding frames must not trigger any further weight packs.
+        for f in 0..3 {
+            let _ = net.forward_reference(&net.make_input(f));
+        }
+        for info in net.conv_infos() {
+            assert_eq!(net.weight_pack_count(info.layer_idx), 1);
+        }
     }
 
     #[test]

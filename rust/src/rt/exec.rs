@@ -3,22 +3,28 @@
 //! and im2col lowering all become jobs on the shared heterogeneous pool.
 //!
 //! One [`PoolRouter`] exists per (network, pool) pairing and carries the
-//! static CONV-layer → cluster assignment; [`PoolRouter::frame`] stamps a
-//! frame id onto a lightweight per-frame executor handed to
-//! `Network::forward_layer`.  Every class is dispatched unconditionally:
-//! member-level routing guarantees any capable member of any cluster can
-//! serve it, so the old per-cluster capability probe and its inline
-//! fallback are gone (a pool with zero capable members is handled —
-//! and counted — inside the [`Dispatcher`]).
+//! static CONV-layer → cluster assignment; [`PoolRouter::frame`] builds a
+//! per-frame executor that owns the frame's [`FrameArena`]: packed im2col
+//! panels and fused-FC column packs are allocated straight into the arena,
+//! CONV-tile jobs carry views that alias the arena chunk on one side and
+//! the network's load-time weight prepack on the other, and the whole
+//! working set drops when the executor does.  Every job goes through the
+//! dispatcher's one generic entry point ([`Dispatcher::execute_job`] /
+//! [`Dispatcher::execute_jobs`]) with the layer's placement hint stamped
+//! on the job itself; member-level routing guarantees any capable member
+//! of any cluster can serve it (a pool with zero capable members is
+//! handled — and counted — inside the [`Dispatcher`]).
 
+use std::cell::RefCell;
 use std::sync::Arc;
 
-use crate::mm::TileGrid;
+use crate::mm::job::{gather_results, jobs_from_packs, Job};
+use crate::mm::{FrameArena, OperandView, TileGrid};
 use crate::nn::network::MatExec;
 use crate::nn::Network;
 use crate::tensor::Tensor;
 
-use super::pool::{Dispatcher, GemmCtx};
+use super::pool::Dispatcher;
 
 /// Routes one network's matrix work into a [`Dispatcher`].  Cheap to
 /// clone (layer threads each hold one).
@@ -46,34 +52,47 @@ impl PoolRouter {
         }
     }
 
-    /// Per-frame executor (implements [`MatExec`]).
+    /// Per-frame executor (implements [`MatExec`]) owning the frame's
+    /// operand arena.
     pub fn frame(&self, frame_id: u64) -> FrameExec<'_> {
         FrameExec {
             router: self,
             frame_id,
+            arena: RefCell::new(FrameArena::new()),
         }
     }
 }
 
 /// A [`MatExec`] implementation dispatching one frame's matrix work to
-/// the accelerator pool.
+/// the accelerator pool.  Owns the frame's [`FrameArena`]: every packed
+/// transient operand (im2col panels, fused-FC columns) lives in the arena
+/// and is aliased — not copied — by the jobs the frame emits.
 pub struct FrameExec<'a> {
     router: &'a PoolRouter,
     frame_id: u64,
+    /// The frame's transient operand buffers.  `RefCell`: a frame executor
+    /// belongs to one layer thread; `MatExec` hooks take `&self`.
+    arena: RefCell<FrameArena>,
 }
 
 impl FrameExec<'_> {
-    /// Dispatch context for one layer.  The placement hint stays `None`
-    /// for layers the static mapper did not place (FC layers, anything
-    /// non-CONV): the dispatcher then routes purely least-loaded across
-    /// capable clusters instead of being silently biased toward
-    /// cluster 0 (the old `unwrap_or(0)` bug).
-    fn ctx(&self, layer_idx: usize) -> GemmCtx {
-        GemmCtx {
-            cluster: self.router.conv_cluster[layer_idx],
-            layer_idx,
-            frame_id: self.frame_id,
-        }
+    /// Placement hint for one layer: `Some` only for CONV layers the
+    /// static mapper placed.  FC and other unmapped layers carry `None`
+    /// and route purely least-loaded instead of being silently biased
+    /// toward cluster 0 (the old `unwrap_or(0)` bug).
+    fn placement(&self, layer_idx: usize) -> Option<usize> {
+        self.router.conv_cluster[layer_idx]
+    }
+
+    /// Does `view` alias one of this frame's arena chunks?  (The
+    /// zero-copy proof hook the tests pin.)
+    pub fn arena_holds(&self, view: &OperandView) -> bool {
+        self.arena.borrow().holds(view)
+    }
+
+    /// Number of operand chunks this frame has allocated so far.
+    pub fn arena_chunks(&self) -> usize {
+        self.arena.borrow().chunk_count()
     }
 }
 
@@ -82,16 +101,51 @@ impl MatExec for FrameExec<'_> {
         &self,
         layer_idx: usize,
         grid: TileGrid,
-        a: Arc<Vec<f32>>,
-        b: Arc<Vec<f32>>,
+        a_tiles: OperandView,
+        b_tiles: OperandView,
     ) -> Vec<f32> {
         debug_assert!(
             self.router.conv_cluster[layer_idx].is_some(),
             "conv layer {layer_idx} not placed by the static mapper"
         );
-        self.router
+        let placement = self.placement(layer_idx);
+        let mut next_id = self
+            .router
             .dispatcher
-            .execute_gemm(self.ctx(layer_idx), grid, a, b)
+            .reserve_job_ids(grid.num_jobs() as u64);
+        // Each job slices its (K,TS,TS) fetch-set windows out of the two
+        // packs — refcount bumps and offset arithmetic, no bytes move.
+        let jobs: Vec<Job> = jobs_from_packs(
+            layer_idx,
+            self.frame_id,
+            grid,
+            a_tiles,
+            b_tiles,
+            &mut next_id,
+        )
+        .into_iter()
+        .map(|j| j.placed(placement))
+        .collect();
+        let results = self.router.dispatcher.execute_jobs(jobs);
+        gather_results(grid, &results)
+    }
+
+    fn pack_cols(&self, _layer_idx: usize, grid: &TileGrid, col: &[f32]) -> OperandView {
+        // Pack the im2col matrix straight into the frame arena: the one
+        // place a CONV layer's activation bytes are copied per frame.
+        self.arena
+            .borrow_mut()
+            .alloc_with(grid.cols() * grid.panel_elems(), |dst| {
+                grid.pack_b_tiles_into(col, dst)
+            })
+    }
+
+    fn pack_fc_cols(&self, _layer_idx: usize, cols: &[&[f32]]) -> OperandView {
+        // The packed (IN,B) operand is adopted by the arena without a
+        // second copy; the fused job aliases it.
+        self.arena
+            .borrow_mut()
+            .adopt(crate::mm::job::pack_fc_columns(cols))
     }
 
     fn fc_gemm(
@@ -99,13 +153,22 @@ impl MatExec for FrameExec<'_> {
         layer_idx: usize,
         out_n: usize,
         in_n: usize,
-        w: Arc<Vec<f32>>,
-        x: Arc<Vec<f32>>,
+        w: OperandView,
+        x: OperandView,
     ) -> Vec<f32> {
-        let ctx = self.ctx(layer_idx);
-        self.router
-            .dispatcher
-            .execute_fc(ctx, out_n, in_n, w, x, self.router.tile_size)
+        let id = self.router.dispatcher.reserve_job_ids(1);
+        let job = Job::fc(
+            id,
+            layer_idx,
+            self.frame_id,
+            out_n,
+            in_n,
+            w,
+            x,
+            self.router.tile_size,
+        )
+        .placed(self.placement(layer_idx));
+        self.router.dispatcher.execute_job(job).data
     }
 
     fn fc_gemm_batch(
@@ -114,12 +177,14 @@ impl MatExec for FrameExec<'_> {
         out_n: usize,
         in_n: usize,
         batch: usize,
-        w: Arc<Vec<f32>>,
-        xb: Arc<Vec<f32>>,
+        w: OperandView,
+        xb: OperandView,
     ) -> Vec<f32> {
-        let ctx = self.ctx(layer_idx);
-        self.router.dispatcher.execute_fc_batch(
-            ctx,
+        let id = self.router.dispatcher.reserve_job_ids(1);
+        let job = Job::fc_batch(
+            id,
+            layer_idx,
+            self.frame_id,
             out_n,
             in_n,
             batch,
@@ -127,6 +192,8 @@ impl MatExec for FrameExec<'_> {
             xb,
             self.router.tile_size,
         )
+        .placed(self.placement(layer_idx));
+        self.router.dispatcher.execute_job(job).data
     }
 
     fn im2col_lower(
@@ -139,18 +206,22 @@ impl MatExec for FrameExec<'_> {
     ) -> Tensor {
         let shape = input.shape();
         let chw = (shape[0], shape[1], shape[2]);
-        let ctx = self.ctx(layer_idx);
+        let id = self.router.dispatcher.reserve_job_ids(1);
         // The activation buffer moves into the shared job operand — no
         // copy on the layer thread.
-        let col = self.router.dispatcher.execute_im2col(
-            ctx,
+        let job = Job::im2col(
+            id,
+            layer_idx,
+            self.frame_id,
             chw,
             size,
             stride,
             pad,
-            Arc::new(input.into_vec()),
+            input.into_vec(),
             self.router.tile_size,
-        );
+        )
+        .placed(self.placement(layer_idx));
+        let col = self.router.dispatcher.execute_job(job).data;
         let rows = chw.0 * size * size;
         let cols = col.len() / rows;
         Tensor::from_vec(&[rows, cols], col)
@@ -161,7 +232,8 @@ impl MatExec for FrameExec<'_> {
 mod tests {
     use super::*;
     use crate::config::zoo;
-    use crate::mm::job::JobClass;
+    use crate::mm::job::{JobClass, JobKind};
+    use crate::nn::network::NativeExec;
     use crate::rt::pool::{DelegatePool, PoolOptions};
     use crate::rt::ComputeMode;
     use crate::sched::static_map;
@@ -182,7 +254,13 @@ mod tests {
         let exec = router.frame(0);
         let y = net.forward_with(&x, &exec);
         let want = net.forward_reference(&x);
-        assert!(y.allclose(&want, 1e-4, 1e-5), "{}", y.max_abs_diff(&want));
+        // The pooled path runs the identical per-tile kernel over the
+        // identical packed panels as the reference — bit equality, not
+        // tolerance.
+        assert_eq!(y.data(), want.data(), "pool path must be bit-identical");
+        // One arena chunk per CONV layer (the packed im2col panels); the
+        // frame's jobs aliased them instead of owning copies.
+        assert_eq!(exec.arena_chunks(), net.conv_infos().len());
 
         let report = pool.shutdown().unwrap();
         let profile = net.pool_job_profile();
@@ -303,5 +381,118 @@ mod tests {
             report.per_class_jobs[JobClass::FcGemmBatch.index()],
             net.fc_layer_count() as u64
         );
+    }
+
+    /// The zero-copy proof (satellite of the operand-plane redesign):
+    /// CONV-tile jobs alias the frame arena on the activation side and the
+    /// network's load-time weight prepack on the weight side; FC jobs
+    /// alias the weight param allocation itself; and the per-layer pack
+    /// counter stays at one no matter how many frames run.
+    #[test]
+    fn dispatched_jobs_alias_arena_and_load_time_prepacks() {
+        let net = Network::new(zoo::load("mnist").unwrap(), 32).unwrap();
+        let options = PoolOptions::new(
+            crate::config::HwConfig::default_zc702(),
+            ComputeMode::Native,
+            false,
+        );
+        let pool = DelegatePool::start(&options).unwrap();
+        let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
+        let router = PoolRouter::new(&net, pool.dispatcher(), &assignment);
+        let exec = router.frame(3);
+
+        // Build one CONV layer's jobs exactly as the executor does.
+        let info = &net.conv_infos()[0];
+        let grid = info.grid;
+        let col = vec![0.25f32; grid.n * grid.p];
+        let b_tiles = exec.pack_cols(info.layer_idx, &grid, &col);
+        assert!(exec.arena_holds(&b_tiles), "packed cols live in the arena");
+        let a_tiles = net.conv_pack(info.layer_idx);
+        let mut next_id = 0u64;
+        let jobs = jobs_from_packs(
+            info.layer_idx,
+            3,
+            grid,
+            a_tiles.clone(),
+            b_tiles.clone(),
+            &mut next_id,
+        );
+        assert_eq!(jobs.len(), grid.num_jobs());
+        for job in &jobs {
+            let JobKind::ConvTile {
+                a_tiles: ja,
+                b_tiles: jb,
+            } = &job.kind
+            else {
+                panic!("conv grid lowered to a non-CONV job");
+            };
+            assert!(
+                Arc::ptr_eq(ja.buffer(), a_tiles.buffer()),
+                "weight view must alias the load-time prepack"
+            );
+            assert!(
+                exec.arena_holds(jb),
+                "activation view must alias the frame arena"
+            );
+        }
+
+        // A probing executor proves the same holds on the real forward
+        // path: every FC weight view IS the param allocation, every CONV
+        // weight view IS the prepack.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        struct AliasProbe<'a> {
+            net: &'a Network,
+            conv_seen: AtomicUsize,
+            fc_seen: AtomicUsize,
+        }
+        impl MatExec for AliasProbe<'_> {
+            fn conv_gemm(
+                &self,
+                layer_idx: usize,
+                grid: TileGrid,
+                a_tiles: OperandView,
+                b_tiles: OperandView,
+            ) -> Vec<f32> {
+                assert!(
+                    Arc::ptr_eq(a_tiles.buffer(), self.net.conv_pack(layer_idx).buffer()),
+                    "layer {layer_idx}: weight pack re-materialized"
+                );
+                self.conv_seen.fetch_add(1, Ordering::SeqCst);
+                NativeExec.conv_gemm(layer_idx, grid, a_tiles, b_tiles)
+            }
+            fn fc_gemm(
+                &self,
+                layer_idx: usize,
+                out_n: usize,
+                in_n: usize,
+                w: OperandView,
+                x: OperandView,
+            ) -> Vec<f32> {
+                assert!(
+                    Arc::ptr_eq(w.buffer(), &self.net.weights_arc(layer_idx)),
+                    "layer {layer_idx}: FC weight view must alias the param"
+                );
+                self.fc_seen.fetch_add(1, Ordering::SeqCst);
+                let mut y = vec![0.0f32; out_n];
+                crate::mm::gemm::gemm_blocked_into(&w, &x, &mut y, out_n, in_n, 1);
+                y
+            }
+        }
+        let probe = AliasProbe {
+            net: &net,
+            conv_seen: AtomicUsize::new(0),
+            fc_seen: AtomicUsize::new(0),
+        };
+        let _ = net.forward_with(&net.make_input(0), &probe);
+        assert_eq!(probe.conv_seen.load(Ordering::SeqCst), net.conv_infos().len());
+        assert_eq!(probe.fc_seen.load(Ordering::SeqCst), net.fc_layer_count());
+        // Weights were packed exactly once per CONV layer, at load — the
+        // frames above added zero packs.
+        for info in &net.conv_infos() {
+            assert_eq!(net.weight_pack_count(info.layer_idx), 1);
+        }
+
+        drop(exec);
+        pool.shutdown().unwrap();
     }
 }

@@ -40,8 +40,7 @@ pub mod pool;
 pub use driver::{RtOptions, RtReport, RtRuntime};
 pub use exec::{FrameExec, PoolRouter};
 pub use pool::{
-    backend_key, ClusterRoute, DelegatePool, DispatchStats, Dispatcher, GemmCtx, PoolOptions,
-    PoolReport,
+    backend_key, ClusterRoute, DelegatePool, DispatchStats, Dispatcher, PoolOptions, PoolReport,
 };
 
 /// How delegates compute jobs.

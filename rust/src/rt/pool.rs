@@ -24,8 +24,7 @@ use crate::accel::{
 };
 use crate::cluster::QueueBank;
 use crate::config::HwConfig;
-use crate::mm::job::{gather_results, jobs_for_gemm, ClassMask, Job, JobClass, JobResult};
-use crate::mm::TileGrid;
+use crate::mm::job::{ClassMask, Job, JobClass, JobResult};
 use crate::runtime::default_artifacts_dir;
 use crate::sched::worksteal::{StealPolicy, Thief, ThiefMsg};
 
@@ -206,25 +205,18 @@ pub struct PoolReport {
     pub stolen_by_class: [u64; JobClass::COUNT],
 }
 
-/// Addressing of one pool dispatch (bundled so call sites stay tidy).
-#[derive(Debug, Clone, Copy)]
-pub struct GemmCtx {
-    /// Destination-cluster placement hint — `Some` only for layers the
-    /// static mapper actually placed (CONV layers).  FC and other
-    /// unmapped layers carry `None` and route purely least-loaded; class
-    /// routing also overrides a `Some` whose cluster has no capable
-    /// member.  (This used to be a bare `usize` defaulted to 0 for
-    /// non-CONV layers, silently biasing their placement toward
-    /// cluster 0.)
-    pub cluster: Option<usize>,
-    /// Network layer index of the emitting layer.
-    pub layer_idx: usize,
-    /// Frame / request tag carried through the jobs.
-    pub frame_id: u64,
-}
-
 /// Cheap cloneable handle that layer threads use to push job batches into
 /// the pool and gather results (the paper's job-generator + ack path).
+///
+/// The whole execution surface is two methods over pre-built [`Job`]s:
+/// [`Dispatcher::execute_job`] for one job, [`Dispatcher::execute_jobs`]
+/// for a batch (one lock + one thief hint per destination cluster instead
+/// of per job).  Job construction — ids via
+/// [`Dispatcher::reserve_job_ids`], operands as
+/// [`OperandView`](crate::mm::OperandView)s, placement hints via
+/// [`Job::placed`] — lives with the caller; the old per-class
+/// `execute_gemm` / `execute_fc` / `execute_im2col` / `execute_fc_batch`
+/// quartet is gone.
 #[derive(Clone)]
 pub struct Dispatcher {
     banks: Vec<Arc<QueueBank<RtJob>>>,
@@ -235,135 +227,11 @@ pub struct Dispatcher {
 }
 
 impl Dispatcher {
-    /// Lower one CONV GEMM to tile jobs, enqueue them on the target
-    /// cluster in one batch push, hint the thief, and block until every
-    /// tile is back.
-    pub fn execute_gemm(
-        &self,
-        ctx: GemmCtx,
-        grid: TileGrid,
-        a: Arc<Vec<f32>>,
-        b: Arc<Vec<f32>>,
-    ) -> Vec<f32> {
-        let mut next_id = self
-            .job_counter
-            .fetch_add(grid.num_jobs() as u64, Ordering::Relaxed);
-        let jobs = jobs_for_gemm(ctx.layer_idx, ctx.frame_id, grid, a, b, &mut next_id);
-        let n = jobs.len();
-        // Honor the static mapping when some member there can run CONV
-        // tiles; route around it otherwise, same as the other classes —
-        // including the counted inline last resort when NO member of any
-        // cluster is CONV-capable (a custom registry), so a degenerate
-        // pool degrades instead of panicking the layer thread.
-        let Some(cluster) = self.route(JobClass::ConvTile, ctx.cluster) else {
-            self.stats
-                .inline_fallbacks
-                .fetch_add(n as u64, Ordering::Relaxed);
-            let results: Vec<JobResult> = jobs.iter().map(|j| j.execute_native()).collect();
-            return gather_results(grid, &results);
-        };
-        let (tx, rx) = mpsc::channel::<JobResult>();
-        // Batch-push: one lock + one notify_all per layer instead of per
-        // job (§Perf iter 3).
-        let batch: Vec<RtJob> = jobs
-            .into_iter()
-            .map(|job| RtJob {
-                job,
-                reply: tx.clone(),
-            })
-            .collect();
-        self.banks[cluster].push_batch(batch);
-        self.stats.dispatched_by_class[JobClass::ConvTile.index()]
-            .fetch_add(n as u64, Ordering::Relaxed);
-        if let Some(t) = &self.thief_tx {
-            let _ = t.send(ThiefMsg::ClusterBusy(cluster));
-        }
-        drop(tx);
-        let mut results = Vec::with_capacity(n);
-        for _ in 0..n {
-            results.push(rx.recv().expect("job result"));
-        }
-        gather_results(grid, &results)
-    }
-
-    /// Dispatch one FC GEMM (y = W·x) as a pool job and block for the
-    /// result.  Any FC-capable member anywhere serves it; only a pool with
-    /// **zero** FC-capable members computes inline (counted — see
-    /// [`DispatchStats::inline_fallbacks`]).
-    pub fn execute_fc(
-        &self,
-        ctx: GemmCtx,
-        out_n: usize,
-        in_n: usize,
-        w: Arc<Vec<f32>>,
-        x: Arc<Vec<f32>>,
-        ts: usize,
-    ) -> Vec<f32> {
-        let id = self.job_counter.fetch_add(1, Ordering::Relaxed);
-        let job = Job::fc(id, ctx.layer_idx, ctx.frame_id, out_n, in_n, w, x, ts);
-        self.run_or_fallback(JobClass::FcGemm, ctx.cluster, job)
-    }
-
-    /// Dispatch a micro-batch's fused FC GEMM — Y(OUT,B) = W·X(IN,B), one
-    /// activation column per request (`pack_fc_columns` layout) — as ONE
-    /// pool job and block for the (OUT,B) result.  Same routing contract
-    /// as [`Dispatcher::execute_fc`]; `fused_fc_rows` counts the B
-    /// requests whose FC work this single dispatch covered.
-    #[allow(clippy::too_many_arguments)]
-    pub fn execute_fc_batch(
-        &self,
-        ctx: GemmCtx,
-        out_n: usize,
-        in_n: usize,
-        batch: usize,
-        w: Arc<Vec<f32>>,
-        xb: Arc<Vec<f32>>,
-        ts: usize,
-    ) -> Vec<f32> {
-        let id = self.job_counter.fetch_add(1, Ordering::Relaxed);
-        let job = Job::fc_batch(
-            id,
-            ctx.layer_idx,
-            ctx.frame_id,
-            out_n,
-            in_n,
-            batch,
-            w,
-            xb,
-            ts,
-        );
-        self.stats
-            .fused_fc_rows
-            .fetch_add(batch as u64, Ordering::Relaxed);
-        self.run_or_fallback(JobClass::FcGemmBatch, ctx.cluster, job)
-    }
-
-    /// Dispatch one im2col lowering as a pool job and block for the col
-    /// matrix.  Same routing contract as [`Dispatcher::execute_fc`].
-    #[allow(clippy::too_many_arguments)]
-    pub fn execute_im2col(
-        &self,
-        ctx: GemmCtx,
-        chw: (usize, usize, usize),
-        size: usize,
-        stride: usize,
-        pad: usize,
-        input: Arc<Vec<f32>>,
-        ts: usize,
-    ) -> Vec<f32> {
-        let id = self.job_counter.fetch_add(1, Ordering::Relaxed);
-        let job = Job::im2col(
-            id,
-            ctx.layer_idx,
-            ctx.frame_id,
-            chw,
-            size,
-            stride,
-            pad,
-            input,
-            ts,
-        );
-        self.run_or_fallback(JobClass::Im2col, ctx.cluster, job)
+    /// Reserve `n` consecutive job ids from this pool's counter and
+    /// return the first (the contract `jobs_for_gemm`-style generators
+    /// expect for their `next_job_id` cursor).
+    pub fn reserve_job_ids(&self, n: u64) -> u64 {
+        self.job_counter.fetch_add(n, Ordering::Relaxed)
     }
 
     /// Pick the destination cluster for a job class: `preferred` if some
@@ -414,12 +282,16 @@ impl Dispatcher {
     }
 
     /// Dispatch one pre-built job of any class and block for its result —
-    /// the generic single-job entry (`serve::ShardServer` executes jobs
-    /// arriving from a remote peer through this).  Same routing contract
-    /// as [`Dispatcher::execute_fc`]: least-loaded capable cluster, or a
-    /// counted inline fallback when no member anywhere supports the
-    /// class.  The job keeps its caller-assigned descriptor (ids from a
-    /// peer pool are theirs, not this pool's counter).
+    /// THE execution entry point (layer executors, the serve pipelines,
+    /// and `serve::ShardServer` for jobs arriving from a remote peer all
+    /// come through here or its batch form [`Dispatcher::execute_jobs`]).
+    ///
+    /// Routing honors the job's [`Job::placement`] hint when that cluster
+    /// has a capable member, else the least-loaded capable cluster; a
+    /// counted inline fallback runs on the calling thread only when no
+    /// member anywhere supports the class.  The job keeps its
+    /// caller-assigned descriptor (ids from a peer pool are theirs, not
+    /// this pool's counter).
     pub fn execute_job(&self, job: Job) -> JobResult {
         let class = job.class();
         if class == JobClass::FcGemmBatch {
@@ -428,23 +300,10 @@ impl Dispatcher {
                 .fused_fc_rows
                 .fetch_add(job.desc.grid.p as u64, Ordering::Relaxed);
         }
-        match self.route(class, None) {
+        match self.route(class, job.placement) {
             Some(cluster) => {
                 self.stats.dispatched_by_class[class.index()].fetch_add(1, Ordering::Relaxed);
                 self.run_single(cluster, job)
-            }
-            None => {
-                self.stats.inline_fallbacks.fetch_add(1, Ordering::Relaxed);
-                job.execute_native()
-            }
-        }
-    }
-
-    fn run_or_fallback(&self, class: JobClass, preferred: Option<usize>, job: Job) -> Vec<f32> {
-        match self.route(class, preferred) {
-            Some(cluster) => {
-                self.stats.dispatched_by_class[class.index()].fetch_add(1, Ordering::Relaxed);
-                self.run_single(cluster, job).data
             }
             None => {
                 // Degenerate pool: no member anywhere can execute this
@@ -452,9 +311,75 @@ impl Dispatcher {
                 // tests pin this counter at zero for every topology with
                 // a capable member.
                 self.stats.inline_fallbacks.fetch_add(1, Ordering::Relaxed);
-                job.execute_native().data
+                job.execute_native()
             }
         }
+    }
+
+    /// Dispatch a batch of pre-built jobs and block until every result is
+    /// back, in input order — the batch form of
+    /// [`Dispatcher::execute_job`] (same routing, same counters, same
+    /// inline last resort per unroutable job).  Jobs bound for the same
+    /// cluster are enqueued in ONE batch push with ONE thief hint (one
+    /// lock + one notify_all per cluster per layer instead of per job —
+    /// §Perf iter 3); all routed jobs share a single reply channel and
+    /// results are matched back to their slots by job id, so ids must be
+    /// unique within the batch (use [`Dispatcher::reserve_job_ids`]).
+    pub fn execute_jobs(&self, jobs: Vec<Job>) -> Vec<JobResult> {
+        let n = jobs.len();
+        let mut results: Vec<Option<JobResult>> = (0..n).map(|_| None).collect();
+        let mut slot_by_id = std::collections::HashMap::with_capacity(n);
+        let mut per_cluster: Vec<Vec<RtJob>> = (0..self.banks.len()).map(|_| Vec::new()).collect();
+        let (tx, rx) = mpsc::channel::<JobResult>();
+        let mut pending = 0usize;
+        for (slot, job) in jobs.into_iter().enumerate() {
+            let class = job.class();
+            if class == JobClass::FcGemmBatch {
+                self.stats
+                    .fused_fc_rows
+                    .fetch_add(job.desc.grid.p as u64, Ordering::Relaxed);
+            }
+            match self.route(class, job.placement) {
+                Some(cluster) => {
+                    self.stats.dispatched_by_class[class.index()]
+                        .fetch_add(1, Ordering::Relaxed);
+                    let prev = slot_by_id.insert(job.desc.job_id, slot);
+                    assert!(
+                        prev.is_none(),
+                        "duplicate job id {} in one dispatch batch",
+                        job.desc.job_id
+                    );
+                    per_cluster[cluster].push(RtJob {
+                        job,
+                        reply: tx.clone(),
+                    });
+                    pending += 1;
+                }
+                None => {
+                    self.stats.inline_fallbacks.fetch_add(1, Ordering::Relaxed);
+                    results[slot] = Some(job.execute_native());
+                }
+            }
+        }
+        for (cluster, batch) in per_cluster.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            self.banks[cluster].push_batch(batch);
+            if let Some(t) = &self.thief_tx {
+                let _ = t.send(ThiefMsg::ClusterBusy(cluster));
+            }
+        }
+        drop(tx);
+        for _ in 0..pending {
+            let r = rx.recv().expect("job result");
+            let slot = slot_by_id[&r.desc.job_id];
+            results[slot] = Some(r);
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every batch job resolved"))
+            .collect()
     }
 
     fn run_single(&self, cluster: usize, job: Job) -> JobResult {
@@ -702,7 +627,28 @@ fn fold_report(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mm::job::{gather_results, jobs_for_gemm};
+    use crate::mm::TileGrid;
     use crate::util::rng::XorShift64Star;
+
+    /// Lower one dense GEMM to placed tile jobs, run them through the
+    /// generic batch entry, and gather the (M,P) result — what the
+    /// retired `execute_gemm` method used to bundle.
+    fn run_gemm(
+        dispatcher: &Dispatcher,
+        grid: TileGrid,
+        a: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
+        placement: Option<usize>,
+    ) -> Vec<f32> {
+        let mut next_id = dispatcher.reserve_job_ids(grid.num_jobs() as u64);
+        let jobs: Vec<Job> = jobs_for_gemm(0, 0, grid, a, b, &mut next_id)
+            .into_iter()
+            .map(|j| j.placed(placement))
+            .collect();
+        let results = dispatcher.execute_jobs(jobs);
+        gather_results(grid, &results)
+    }
 
     #[test]
     fn pool_executes_a_gemm_end_to_end() {
@@ -712,12 +658,7 @@ mod tests {
         let grid = TileGrid::new(40, 50, 60, 32);
         let a = Arc::new(XorShift64Star::new(1).fill_f32(40 * 50, 1.0));
         let b = Arc::new(XorShift64Star::new(2).fill_f32(50 * 60, 1.0));
-        let ctx = GemmCtx {
-            cluster: Some(0),
-            layer_idx: 0,
-            frame_id: 0,
-        };
-        let c = dispatcher.execute_gemm(ctx, grid, Arc::clone(&a), Arc::clone(&b));
+        let c = run_gemm(&dispatcher, grid, Arc::clone(&a), Arc::clone(&b), Some(0));
         let want = crate::mm::gemm::gemm_blocked(
             &crate::tensor::Tensor::from_vec(&[40, 50], (*a).clone()),
             &crate::tensor::Tensor::from_vec(&[50, 60], (*b).clone()),
@@ -746,20 +687,21 @@ mod tests {
                 assert!(accept.supports(class));
             }
         }
-        let ctx = GemmCtx {
-            cluster: Some(0),
-            layer_idx: 2,
-            frame_id: 7,
-        };
         let w = Arc::new(XorShift64Star::new(1).fill_f32(16 * 32, 1.0));
         let x = Arc::new(XorShift64Star::new(2).fill_f32(32, 1.0));
-        let y = dispatcher.execute_fc(ctx, 16, 32, Arc::clone(&w), Arc::clone(&x), 32);
+        let id = dispatcher.reserve_job_ids(1);
+        let job = Job::fc(id, 2, 7, 16, 32, Arc::clone(&w), Arc::clone(&x), 32)
+            .placed(Some(0));
+        let y = dispatcher.execute_job(job).data;
         let mut want = vec![0.0f32; 16];
         crate::mm::gemm::gemm_blocked_into(&w, &x, &mut want, 16, 32, 1);
         assert_eq!(y, want);
 
         let input = Arc::new(XorShift64Star::new(3).fill_f32(3 * 6 * 6, 1.0));
-        let col = dispatcher.execute_im2col(ctx, (3, 6, 6), 3, 1, 1, Arc::clone(&input), 32);
+        let id = dispatcher.reserve_job_ids(1);
+        let job = Job::im2col(id, 2, 7, (3, 6, 6), 3, 1, 1, Arc::clone(&input), 32)
+            .placed(Some(0));
+        let col = dispatcher.execute_job(job).data;
         let x_t = crate::tensor::Tensor::from_vec(&[3, 6, 6], (*input).clone());
         let want_col = crate::nn::im2col::im2col(&x_t, 3, 1, 1);
         assert_eq!(col, want_col.data());
@@ -806,19 +748,21 @@ mod tests {
         assert_eq!(dispatcher.route(JobClass::FcGemm, Some(1)), Some(0));
         assert_eq!(dispatcher.route(JobClass::ConvTile, Some(1)), Some(1));
 
-        let ctx = GemmCtx {
-            cluster: Some(1),
-            layer_idx: 0,
-            frame_id: 0,
-        };
+        // Jobs placed on the PE-only cluster still land on the mixed one:
+        // routing overrides a placement hint with no capable member.
         let w = Arc::new(XorShift64Star::new(4).fill_f32(12 * 24, 1.0));
         let x = Arc::new(XorShift64Star::new(5).fill_f32(24, 1.0));
-        let y = dispatcher.execute_fc(ctx, 12, 24, Arc::clone(&w), Arc::clone(&x), 32);
+        let id = dispatcher.reserve_job_ids(1);
+        let job = Job::fc(id, 0, 0, 12, 24, Arc::clone(&w), Arc::clone(&x), 32)
+            .placed(Some(1));
+        let y = dispatcher.execute_job(job).data;
         let mut want = vec![0.0f32; 12];
         crate::mm::gemm::gemm_blocked_into(&w, &x, &mut want, 12, 24, 1);
         assert_eq!(y, want);
         let input = Arc::new(XorShift64Star::new(6).fill_f32(3 * 6 * 6, 1.0));
-        let _col = dispatcher.execute_im2col(ctx, (3, 6, 6), 3, 1, 1, input, 32);
+        let id = dispatcher.reserve_job_ids(1);
+        let job = Job::im2col(id, 0, 0, (3, 6, 6), 3, 1, 1, input, 32).placed(Some(1));
+        let _col = dispatcher.execute_job(job).data;
 
         let report = pool.shutdown().unwrap();
         assert_eq!(report.inline_fallbacks, 0, "no inline fallback in a mixed pool");
@@ -857,20 +801,21 @@ mod tests {
         let pool = DelegatePool::start(&options).unwrap();
         let dispatcher = pool.dispatcher();
         assert_eq!(dispatcher.route(JobClass::FcGemm, None), None);
-        let ctx = GemmCtx {
-            cluster: Some(0),
-            layer_idx: 0,
-            frame_id: 0,
-        };
         let w = Arc::new(XorShift64Star::new(7).fill_f32(8 * 16, 1.0));
         let x = Arc::new(XorShift64Star::new(8).fill_f32(16, 1.0));
-        let y = dispatcher.execute_fc(ctx, 8, 16, Arc::clone(&w), Arc::clone(&x), 32);
+        let id = dispatcher.reserve_job_ids(1);
+        let job = Job::fc(id, 0, 0, 8, 16, Arc::clone(&w), Arc::clone(&x), 32)
+            .placed(Some(0));
+        let y = dispatcher.execute_job(job).data;
         let mut want = vec![0.0f32; 8];
         crate::mm::gemm::gemm_blocked_into(&w, &x, &mut want, 8, 16, 1);
         assert_eq!(y, want, "inline fallback must still be correct");
         // The fused batched path degrades the same way: counted, correct.
         let xb = Arc::new(XorShift64Star::new(9).fill_f32(16 * 2, 1.0));
-        let yb = dispatcher.execute_fc_batch(ctx, 8, 16, 2, Arc::clone(&w), Arc::clone(&xb), 32);
+        let id = dispatcher.reserve_job_ids(1);
+        let job = Job::fc_batch(id, 0, 0, 8, 16, 2, Arc::clone(&w), Arc::clone(&xb), 32)
+            .placed(Some(0));
+        let yb = dispatcher.execute_job(job).data;
         let mut want_b = vec![0.0f32; 8 * 2];
         crate::mm::gemm::gemm_blocked_into(&w, &xb, &mut want_b, 8, 16, 2);
         assert_eq!(yb, want_b, "fused inline fallback must still be correct");
@@ -906,12 +851,7 @@ mod tests {
         let grid = TileGrid::new(16, 24, 20, 32);
         let a = Arc::new(XorShift64Star::new(9).fill_f32(16 * 24, 1.0));
         let b = Arc::new(XorShift64Star::new(10).fill_f32(24 * 20, 1.0));
-        let ctx = GemmCtx {
-            cluster: Some(0),
-            layer_idx: 0,
-            frame_id: 0,
-        };
-        let c = dispatcher.execute_gemm(ctx, grid, Arc::clone(&a), Arc::clone(&b));
+        let c = run_gemm(&dispatcher, grid, Arc::clone(&a), Arc::clone(&b), Some(0));
         let want = crate::mm::gemm::gemm_blocked(
             &crate::tensor::Tensor::from_vec(&[16, 24], (*a).clone()),
             &crate::tensor::Tensor::from_vec(&[24, 20], (*b).clone()),
@@ -1045,14 +985,7 @@ mod tests {
         let helper = {
             let dispatcher = pool.dispatcher();
             let (a, b) = (Arc::clone(&a), Arc::clone(&b));
-            std::thread::spawn(move || {
-                let ctx = GemmCtx {
-                    cluster: None,
-                    layer_idx: 0,
-                    frame_id: 0,
-                };
-                dispatcher.execute_gemm(ctx, grid, a, b)
-            })
+            std::thread::spawn(move || run_gemm(&dispatcher, grid, a, b, None))
         };
         // …until the backlog outweighs the round trip and routing flips
         // to the shard for the classes it speaks — and ONLY those.

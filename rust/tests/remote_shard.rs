@@ -25,17 +25,17 @@ use std::thread::JoinHandle;
 
 use anyhow::anyhow;
 use synergy::accel::remote::{
-    duplex_pair, remote_class_mask, serve_transport, shard_backend_name, RemoteShard,
+    duplex_pair, remote_class_mask, serve_transport, shard_backend_name, wire, RemoteShard,
     REMOTE_OVERHEAD_KSTEPS,
 };
 use synergy::accel::{
     register_config_shards, AccelClass, Accelerator, BackendRegistry, NativeGemm,
 };
 use synergy::config::{zoo, ClusterCfg, HwConfig};
-use synergy::mm::job::{ClassMask, JobClass};
+use synergy::mm::job::{gather_results, jobs_for_gemm, ClassMask, Job, JobClass};
 use synergy::mm::TileGrid;
 use synergy::nn::Network;
-use synergy::rt::{ComputeMode, DelegatePool, GemmCtx, PoolOptions, PoolRouter};
+use synergy::rt::{ComputeMode, DelegatePool, Dispatcher, PoolOptions, PoolRouter};
 use synergy::runtime::default_artifacts_dir;
 use synergy::sched::static_map;
 use synergy::serve::ShardServer;
@@ -114,6 +114,14 @@ fn split_remote_pool() -> (DelegatePool, JoinHandle<u64>) {
     options.registry = Some(Arc::new(registry));
     let pool = DelegatePool::start(&options).expect("start split pool");
     (pool, shard_thread)
+}
+
+/// Blocking un-hinted GEMM through the generic dispatch surface: pack
+/// once, reserve ids, fan the tile jobs out, gather C.
+fn run_gemm(dispatcher: &Dispatcher, grid: TileGrid, a: Arc<Vec<f32>>, b: Arc<Vec<f32>>) -> Vec<f32> {
+    let mut next_id = dispatcher.reserve_job_ids(grid.num_jobs() as u64);
+    let jobs = jobs_for_gemm(0, 0, grid, a, b, &mut next_id);
+    gather_results(grid, &dispatcher.execute_jobs(jobs))
 }
 
 fn forward_through(pool: &DelegatePool, net: &Network, frame: u64) -> synergy::tensor::Tensor {
@@ -285,12 +293,7 @@ fn transport_kill_mid_batch_loses_zero_jobs() {
     let grid = TileGrid::new(192, 1024, 128, 32);
     let a = Arc::new(XorShift64Star::new(1).fill_f32(192 * 1024, 1.0));
     let b = Arc::new(XorShift64Star::new(2).fill_f32(1024 * 128, 1.0));
-    let ctx = GemmCtx {
-        cluster: None,
-        layer_idx: 0,
-        frame_id: 0,
-    };
-    let c = dispatcher.execute_gemm(ctx, grid, Arc::clone(&a), Arc::clone(&b));
+    let c = run_gemm(&dispatcher, grid, Arc::clone(&a), Arc::clone(&b));
     let want = synergy::mm::gemm::gemm_blocked(
         &synergy::tensor::Tensor::from_vec(&[192, 1024], (*a).clone()),
         &synergy::tensor::Tensor::from_vec(&[1024, 128], (*b).clone()),
@@ -305,7 +308,10 @@ fn transport_kill_mid_batch_loses_zero_jobs() {
     // The pool keeps serving after the death — fused FC included.
     let w = Arc::new(XorShift64Star::new(3).fill_f32(16 * 24, 1.0));
     let xb = Arc::new(XorShift64Star::new(4).fill_f32(24 * 2, 1.0));
-    let y = dispatcher.execute_fc_batch(ctx, 16, 24, 2, Arc::clone(&w), Arc::clone(&xb), 32);
+    let id = dispatcher.reserve_job_ids(1);
+    let y = dispatcher
+        .execute_job(Job::fc_batch(id, 0, 0, 16, 24, 2, Arc::clone(&w), Arc::clone(&xb), 32))
+        .data;
     let mut want_y = vec![0.0f32; 16 * 2];
     synergy::mm::gemm::gemm_blocked_into(&w, &xb, &mut want_y, 16, 24, 2);
     assert_eq!(y, want_y);
@@ -420,17 +426,15 @@ fn tcp_shard_executes_conv_and_fused_fc_under_default_routing() {
             let diverged = Arc::clone(&diverged);
             workers.push(std::thread::spawn(move || {
                 let dispatcher = pool.dispatcher();
-                let ctx = GemmCtx {
-                    cluster: None,
-                    layer_idx: t,
-                    frame_id: t as u64,
-                };
-                let c = dispatcher.execute_gemm(ctx, grid, a, b);
+                let c = run_gemm(&dispatcher, grid, a, b);
                 let got = synergy::tensor::Tensor::from_vec(&[128, 128], c);
                 if !want_c.allclose(&got, 1e-3, 1e-3) {
                     diverged.store(true, Ordering::Relaxed);
                 }
-                let y = dispatcher.execute_fc_batch(ctx, 64, 128, 8, w, xb, 32);
+                let id = dispatcher.reserve_job_ids(1);
+                let y = dispatcher
+                    .execute_job(Job::fc_batch(id, t, t as u64, 64, 128, 8, w, xb, 32))
+                    .data;
                 if y != want_y {
                     diverged.store(true, Ordering::Relaxed);
                 }
@@ -471,4 +475,54 @@ fn tcp_shard_executes_conv_and_fused_fc_under_default_routing() {
         remote_row[JobClass::FcGemmBatch.index()]
     );
     assert_eq!(shard_report.inline_fallbacks, 0);
+}
+
+/// (d) Wire-bytes regression (operand-plane redesign): a shipped CONV
+/// tile's request frame is *exactly* its packed fetch set — one tag byte,
+/// the descriptor, and two length-prefixed `(K·TS·TS)`-element panel runs
+/// serialized straight from the job's operand views.  The client ledger
+/// counts precisely the request + result frame bytes, so any future
+/// double-buffering through an intermediate `Vec` before the codec (or
+/// any re-widening of the wire payload back to layer matrices) fails
+/// these equalities.
+#[test]
+fn conv_tile_wire_bytes_equal_the_packed_fetch_set() {
+    let (client, mut server) = duplex_pair();
+    let shard_thread = std::thread::Builder::new()
+        .name("byte-counted-shard".into())
+        .spawn(move || serve_transport(&mut server, |job| Ok(job.execute_native())).unwrap())
+        .expect("spawn byte-counted shard");
+    let mut shard = RemoteShard::over_duplex("remote:bytes", client);
+
+    // Ragged edges on every side: 40×50×60 at ts=32.
+    let grid = TileGrid::new(40, 50, 60, 32);
+    let a = Arc::new(XorShift64Star::new(11).fill_f32(40 * 50, 1.0));
+    let b = Arc::new(XorShift64Star::new(12).fill_f32(50 * 60, 1.0));
+    let mut id = 0;
+    let jobs = jobs_for_gemm(0, 0, grid, a, b, &mut id);
+    assert_eq!(jobs.len(), grid.num_jobs());
+
+    let mut expected_ledger = 0u64;
+    for job in &jobs {
+        let request = wire::encode_job(job);
+        let panel = job.desc.k_tiles() * grid.ts * grid.ts;
+        assert_eq!(
+            request.len(),
+            1 + wire::DESC_BYTES + 2 * (8 + 4 * panel),
+            "tile ({}, {}): frame is not exactly the packed fetch set",
+            job.desc.t1,
+            job.desc.t2
+        );
+        let result = shard.execute(job).unwrap();
+        assert_eq!(result.data, job.execute_native().data);
+        expected_ledger += (request.len() + wire::encode_result(&result).len()) as u64;
+        assert_eq!(
+            shard.wire_bytes(),
+            expected_ledger,
+            "client wire ledger drifted from the frames actually exchanged"
+        );
+    }
+    drop(shard); // hang up → the serve loop exits cleanly
+    let served = shard_thread.join().unwrap();
+    assert_eq!(served, grid.num_jobs() as u64);
 }
