@@ -11,6 +11,7 @@
 
 use std::sync::Arc;
 
+use synergy::accel::remote::{duplex_pair, serve_transport, wire, RemoteShard};
 use synergy::accel::{Accelerator, BigNeonGemm, NativeGemm};
 use synergy::cluster::JobQueue;
 use synergy::config::zoo;
@@ -147,6 +148,53 @@ fn main() -> anyhow::Result<()> {
     ]);
     results.push(legacy.clone());
     results.push(packed.clone());
+
+    // Shard wire plane: the operand-cache protocol on the same conv2
+    // GEMM, read off the client's exact `wire_bytes()` ledger (sent +
+    // received frame bytes).  Three deterministic passes: the per-tile
+    // full-fetch-set baseline, the cold cached round (both packs PUT
+    // once + descriptor frames), and the warm steady-state round a
+    // serving pool lives in (137-byte descriptors + results, nothing
+    // else on the wire).
+    let mut id = 0u64;
+    let wire_jobs = jobs_for_gemm(0, 0, grid, Arc::clone(&arc_a), Arc::clone(&arc_b), &mut id);
+    let ship_rounds = |cache: bool, rounds: usize| -> u64 {
+        let (client, mut server) = duplex_pair();
+        let shard_thread = std::thread::spawn(move || {
+            serve_transport(&mut server, |job| Ok(job.execute_native())).unwrap()
+        });
+        let mut shard = RemoteShard::over_duplex("remote:bench", client).with_operand_cache(cache);
+        for _ in 0..rounds {
+            for job in &wire_jobs {
+                std::hint::black_box(shard.execute(job).unwrap());
+            }
+        }
+        let bytes = shard.wire_bytes();
+        drop(shard);
+        shard_thread.join().unwrap();
+        bytes
+    };
+    let base_wire = ship_rounds(false, 1);
+    let cold_wire = ship_rounds(true, 1);
+    let warm_wire = ship_rounds(true, 2) - cold_wire;
+    table.row(vec![
+        String::from("shard wire: full fetch set / tile"),
+        String::from("-"),
+        format!("{base_wire} B / GEMM"),
+    ]);
+    table.row(vec![
+        String::from("shard wire: cold (PUT packs + refs)"),
+        String::from("-"),
+        format!("{cold_wire} B / GEMM"),
+    ]);
+    table.row(vec![
+        String::from("shard wire: warm (refs + results)"),
+        String::from("-"),
+        format!(
+            "{warm_wire} B / GEMM ({:.2}x fewer)",
+            base_wire as f64 / warm_wire as f64
+        ),
+    ]);
 
     // im2col (CPU preprocessing).
     let x = Tensor::from_vec(&[32, 14, 14], XorShift64Star::new(3).fill_f32(32 * 14 * 14, 1.0));
@@ -320,6 +368,44 @@ fn main() -> anyhow::Result<()> {
                         "bytes_ratio",
                         num(legacy_bytes as f64 / view_bytes as f64),
                     ),
+                ]),
+            ),
+            (
+                "shard_wire",
+                obj(vec![
+                    (
+                        "grid",
+                        obj(vec![
+                            ("m", num(grid.m as f64)),
+                            ("n", num(grid.n as f64)),
+                            ("p", num(grid.p as f64)),
+                            ("ts", num(grid.ts as f64)),
+                            ("num_jobs", num(grid.num_jobs() as f64)),
+                        ]),
+                    ),
+                    (
+                        "baseline",
+                        obj(vec![
+                            ("path", s("full packed fetch set in every tile frame")),
+                            ("wire_bytes", num(base_wire as f64)),
+                        ]),
+                    ),
+                    (
+                        "cold",
+                        obj(vec![
+                            ("path", s("PUT both packs once + descriptor frames")),
+                            ("wire_bytes", num(cold_wire as f64)),
+                        ]),
+                    ),
+                    (
+                        "warm",
+                        obj(vec![
+                            ("path", s("descriptor-only frames + results")),
+                            ("wire_bytes", num(warm_wire as f64)),
+                            ("ref_frame_bytes", num(wire::REF_FRAME_BYTES as f64)),
+                        ]),
+                    ),
+                    ("bytes_ratio", num(base_wire as f64 / warm_wire as f64)),
                 ]),
             ),
             (

@@ -386,24 +386,40 @@ impl Accelerator for PjrtPe {
 /// entry builds one backend instance per delegate thread.
 pub type BackendBuilder = Arc<dyn Fn() -> Result<Box<dyn Accelerator>> + Send + Sync>;
 
-/// One registered backend: name, capability mask and fixed per-job
-/// overhead (both known *before* any instance exists, so the pool can
-/// route and the thief can filter/gate), and the per-delegate builder.
+/// One registered backend: name, capability mask and live link-cost cell
+/// (the mask and the cost's static seed are known *before* any instance
+/// exists, so the pool can route and the thief can filter/gate), and the
+/// per-delegate builder.
 pub struct BackendEntry {
     name: String,
     pub caps: ClassMask,
-    /// Fixed per-job overhead in k-step equivalents of this backend's
-    /// service rate — 0 for in-tree local backends, the transport round
-    /// trip for a remote shard.  Consumed by the dispatcher's routing
-    /// penalty and the thief's ship gate; must match what the backend's
-    /// [`Accelerator::cost`] reports as its constant term.
-    pub overhead_ksteps: f64,
+    /// Live per-job cost cell, seeded with the registered static overhead
+    /// in k-step equivalents of this backend's service rate — 0 for
+    /// in-tree local backends, the transport round trip for a remote
+    /// shard.  The pool's prober refines remote members' cells from
+    /// measured RTTs (and flips them dead on failure); the dispatcher's
+    /// routing penalty and the thief's ship gate read them live.
+    link: Arc<crate::accel::timing::LinkCost>,
     builder: BackendBuilder,
 }
 
 impl BackendEntry {
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// Current fixed per-job overhead in k-step equivalents (the static
+    /// seed until a probe lands; `f64::INFINITY` once the link is
+    /// evicted).  Matches what the backend's [`Accelerator::cost`] reports
+    /// as its constant term while the static seed holds.
+    pub fn overhead_ksteps(&self) -> f64 {
+        self.link.overhead_ksteps()
+    }
+
+    /// The live cost cell itself — shared with the pool's routes and the
+    /// prober thread.
+    pub fn link(&self) -> Arc<crate::accel::timing::LinkCost> {
+        Arc::clone(&self.link)
     }
 
     /// Clone the builder handle (moved into a delegate thread).
@@ -478,7 +494,9 @@ impl BackendRegistry {
     /// Register (or replace) a backend under `name` with an explicit fixed
     /// per-job overhead in k-step equivalents (see
     /// [`BackendEntry::overhead_ksteps`]) — the registration a remote
-    /// shard uses so routing and stealing price its round trip in.
+    /// shard uses so routing and stealing price its round trip in.  The
+    /// value seeds the entry's live [`crate::accel::timing::LinkCost`]
+    /// cell; measured probes refine it after the pool starts.
     pub fn register_with_cost<F>(
         &mut self,
         name: &str,
@@ -492,7 +510,7 @@ impl BackendRegistry {
         self.entries.push(BackendEntry {
             name: name.to_string(),
             caps,
-            overhead_ksteps,
+            link: crate::accel::timing::LinkCost::fixed(overhead_ksteps),
             builder: Arc::new(builder),
         });
     }
@@ -546,12 +564,17 @@ mod tests {
         let mut reg = BackendRegistry::with_defaults(PathBuf::from("/nonexistent"), 2);
         // Every in-tree backend is local: no fixed shipping overhead.
         for name in ["neon", "big-neon", "pjrt-pe"] {
-            assert_eq!(reg.get(name).unwrap().overhead_ksteps, 0.0, "{name}");
+            assert_eq!(reg.get(name).unwrap().overhead_ksteps(), 0.0, "{name}");
         }
         reg.register_with_cost("shippy", ClassMask::all(), 12.5, || {
             Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
         });
-        assert_eq!(reg.get("shippy").unwrap().overhead_ksteps, 12.5);
+        let entry = reg.get("shippy").unwrap();
+        assert_eq!(entry.overhead_ksteps(), 12.5);
+        // The metadata is a live cell: eviction poisons the read cost.
+        assert!(entry.link().is_alive());
+        entry.link().evict();
+        assert_eq!(entry.overhead_ksteps(), f64::INFINITY);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub use remote::{
     register_config_shards, register_tcp_shard, ChannelTransport, RemoteShard, ShardTransport,
     TcpTransport,
 };
-pub use timing::{AccelClass, PerfModel};
+pub use timing::{AccelClass, LinkCost, PerfModel};
 
 use crate::config::{ClusterCfg, HwConfig};
 use crate::mm::job::{ClassMask, JobClass};

@@ -14,6 +14,8 @@
 //! the pragma configuration, which is what the experiments exercise.
 
 use crate::config::{PeKind, PeTypeCfg};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Accelerator class tag.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -28,6 +30,98 @@ pub enum AccelClass {
     /// this one as a cluster member.  `addr` is the `host:port` the
     /// member's registry key (`remote:<addr>`) dials.
     Remote { addr: String },
+}
+
+/// Live cost cell of one pool member's link: the registry seeds it with
+/// the static `PerfModel` prior, the prober thread updates it from
+/// measured RTT/service-rate pings, and the router/thief read it on every
+/// placement decision.  All fields are atomics so the prober, the
+/// dispatcher, and the thief share one `Arc<LinkCost>` without locking.
+///
+/// Health lives here too: a probe failure (or a delegate dying on a
+/// transport error) flips `alive` off, and every routing read of an
+/// evicted link returns an infinite overhead — the shard disappears from
+/// placement instead of being rediscovered via requeue.
+#[derive(Debug)]
+pub struct LinkCost {
+    /// Per-job shipping overhead in k-steps of the member's rate (f64 bits).
+    overhead_bits: AtomicU64,
+    /// Measured far-side service rate in k-steps/s (f64 bits; 0 = no
+    /// measurement yet — consumers fall back to the static model).
+    rate_bits: AtomicU64,
+    alive: AtomicBool,
+    probes: AtomicU64,
+}
+
+/// EWMA weight of a fresh probe against the running estimate: heavy
+/// enough to converge in a handful of pings, light enough that one
+/// scheduler-induced outlier RTT does not yank placement around.
+const PROBE_EWMA_ALPHA: f64 = 0.3;
+
+impl LinkCost {
+    /// A cell seeded from a static prior (local members keep it forever;
+    /// remote members get it refined by the prober).
+    pub fn fixed(overhead_ksteps: f64) -> Arc<LinkCost> {
+        Arc::new(LinkCost {
+            overhead_bits: AtomicU64::new(overhead_ksteps.to_bits()),
+            rate_bits: AtomicU64::new(0.0f64.to_bits()),
+            alive: AtomicBool::new(true),
+            probes: AtomicU64::new(0),
+        })
+    }
+
+    /// Current shipping overhead in k-steps; `f64::INFINITY` once evicted,
+    /// which prunes the member from every cost comparison for free.
+    pub fn overhead_ksteps(&self) -> f64 {
+        if !self.is_alive() {
+            return f64::INFINITY;
+        }
+        f64::from_bits(self.overhead_bits.load(Ordering::Relaxed))
+    }
+
+    /// Measured far-side rate in k-steps/s, if any probe reported one.
+    pub fn measured_rate_ksteps(&self) -> Option<f64> {
+        let r = f64::from_bits(self.rate_bits.load(Ordering::Relaxed));
+        (r > 0.0 && self.is_alive()).then_some(r)
+    }
+
+    /// Fold one measured round trip into the estimate.  `rtt_seconds` is
+    /// the ping's wall-clock round trip, `kstep_seconds` converts it into
+    /// this member's k-step currency, `rate_ksteps` is the far side's
+    /// self-reported service rate (≤ 0 to leave the rate untouched).
+    pub fn record_probe(&self, rtt_seconds: f64, kstep_seconds: f64, rate_ksteps: f64) {
+        if kstep_seconds > 0.0 && rtt_seconds.is_finite() && rtt_seconds >= 0.0 {
+            let measured = rtt_seconds / kstep_seconds;
+            let prev = f64::from_bits(self.overhead_bits.load(Ordering::Relaxed));
+            let blended = if self.probes.load(Ordering::Relaxed) == 0 || !prev.is_finite() {
+                measured
+            } else {
+                prev + PROBE_EWMA_ALPHA * (measured - prev)
+            };
+            self.overhead_bits
+                .store(blended.to_bits(), Ordering::Relaxed);
+        }
+        if rate_ksteps > 0.0 && rate_ksteps.is_finite() {
+            self.rate_bits.store(rate_ksteps.to_bits(), Ordering::Relaxed);
+        }
+        self.probes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    /// Mark the link dead.  Returns `true` exactly once (the first caller
+    /// to flip it), so eviction accounting never double-counts a shard
+    /// whose delegate and prober both notice the failure.
+    pub fn evict(&self) -> bool {
+        self.alive.swap(false, Ordering::SeqCst)
+    }
+
+    /// Number of probes folded in (diagnostics + tests).
+    pub fn probes(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
 }
 
 /// Timing model of one accelerator.
@@ -242,6 +336,41 @@ mod tests {
         assert!(rel < 0.05, "registry {registry_s}s vs model {}s", r.job_overhead_seconds);
         // Faster than a lone A9 NEON, slower than it pretends on tiny jobs.
         assert!(r.kstep_seconds < PerfModel::neon(32, 667.0).kstep_seconds);
+    }
+
+    #[test]
+    fn link_cost_seeds_static_and_converges_on_probes() {
+        let link = LinkCost::fixed(20.0);
+        assert!(link.is_alive());
+        assert_eq!(link.overhead_ksteps(), 20.0);
+        assert_eq!(link.measured_rate_ksteps(), None);
+        assert_eq!(link.probes(), 0);
+
+        // First probe replaces the prior outright; later probes blend.
+        let kstep = 25e-6; // ≈ PerfModel::remote(32, 667 MHz)
+        link.record_probe(1.0e-3, kstep, 150.0);
+        assert_eq!(link.probes(), 1);
+        let first = link.overhead_ksteps();
+        assert!((first - 40.0).abs() < 1e-9, "{first}");
+        assert_eq!(link.measured_rate_ksteps(), Some(150.0));
+        link.record_probe(0.5e-3, kstep, 0.0);
+        let second = link.overhead_ksteps();
+        assert!(second < first && second > 20.0, "{second}");
+        // Rate untouched by a rate-less ping.
+        assert_eq!(link.measured_rate_ksteps(), Some(150.0));
+    }
+
+    #[test]
+    fn link_eviction_flips_once_and_poisons_cost() {
+        let link = LinkCost::fixed(20.0);
+        assert!(link.evict(), "first eviction reports the flip");
+        assert!(!link.evict(), "second eviction is a no-op");
+        assert!(!link.is_alive());
+        assert_eq!(link.overhead_ksteps(), f64::INFINITY);
+        assert_eq!(link.measured_rate_ksteps(), None);
+        // Probes after death do not resurrect routing cost.
+        link.record_probe(1.0e-6, 25e-6, 500.0);
+        assert_eq!(link.overhead_ksteps(), f64::INFINITY);
     }
 
     #[test]

@@ -103,6 +103,16 @@ pub struct ServeCfg {
     /// (`StealPolicy::batched`); a positive value overrides the
     /// derivation.  Sweep alongside `drain_extra`.
     pub steal_min_victim: usize,
+    /// Health/cost probe period for `remote = …` members, in
+    /// milliseconds: each remote member gets a prober thread measuring
+    /// RTT + shard service rate into its routing link (and evicting it on
+    /// failure).  0 disables probing — routing then runs on the static
+    /// registry overhead, as non-serving pools do by default.
+    pub probe_interval_ms: u64,
+    /// Capacity of a shard server's shared operand cache, in MiB of f32
+    /// payload (content-addressed packed panels / prepacked weights that
+    /// peers reference with descriptor-only CONV frames).
+    pub shard_cache_mb: usize,
 }
 
 impl Default for ServeCfg {
@@ -113,6 +123,8 @@ impl Default for ServeCfg {
             admission_depth: 64,
             drain_extra: 3,
             steal_min_victim: 0,
+            probe_interval_ms: 25,
+            shard_cache_mb: 64,
         }
     }
 }
@@ -353,6 +365,8 @@ impl HwConfig {
                     "admission_depth" => serving.admission_depth = parse_usize()?,
                     "drain_extra" => serving.drain_extra = parse_usize()?,
                     "steal_min_victim" => serving.steal_min_victim = parse_usize()?,
+                    "probe_interval_ms" => serving.probe_interval_ms = parse_usize()? as u64,
+                    "shard_cache_mb" => serving.shard_cache_mb = parse_usize()?,
                     other => bail!("{name}:{}: unknown serving key {other}", lineno + 1),
                 },
                 Sec::None => bail!("{name}:{}: key outside a section", lineno + 1),
@@ -454,6 +468,8 @@ batch_window_us = 2000
 admission_depth = 64
 drain_extra = 3
 steal_min_victim = 0
+probe_interval_ms = 25
+shard_cache_mb = 64
 ";
 
 #[cfg(test)]
@@ -518,6 +534,8 @@ batch_window_us = 500
 admission_depth = 128
 drain_extra = 5
 steal_min_victim = 6
+probe_interval_ms = 10
+shard_cache_mb = 16
 ";
         let hw = HwConfig::parse("t", text).unwrap();
         assert_eq!(hw.serving.max_batch, 8);
@@ -525,6 +543,8 @@ steal_min_victim = 6
         assert_eq!(hw.serving.admission_depth, 128);
         assert_eq!(hw.serving.drain_extra, 5);
         assert_eq!(hw.serving.steal_min_victim, 6);
+        assert_eq!(hw.serving.probe_interval_ms, 10);
+        assert_eq!(hw.serving.shard_cache_mb, 16);
 
         let mut bad = HwConfig::default_zc702();
         bad.serving.max_batch = 0;

@@ -18,9 +18,10 @@
 //! Load-time weight prepacks live on the `Network` instead and are aliased
 //! by every frame's jobs for the network's lifetime.
 
+use std::collections::HashMap;
 use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock, Weak};
 
 /// Process-wide layout-transform copy ledger: bytes that were actually
 /// copied into a fresh buffer (tile packing, FC column packing).  Cheap
@@ -44,6 +45,65 @@ pub fn copied_bytes() -> u64 {
 /// Total layout-transform copy events since process start.
 pub fn copy_events() -> u64 {
     COPY_EVENTS.load(Ordering::Relaxed)
+}
+
+/// Content-addressed identity of a shared operand buffer: a per-process
+/// origin nonce plus a monotone sequence number minted the first time a
+/// buffer is keyed.  Two views over the same `Arc` allocation share a key;
+/// a repack into a fresh allocation (a weight pack-generation bump, a new
+/// frame arena chunk) gets a fresh key — which is exactly what lets a
+/// remote shard cache packed fetch sets by identity and lets the client
+/// detect "this slot now holds different bytes" without hashing them.
+pub type OperandKey = (u64, u64);
+
+struct KeyRegistry {
+    origin: u64,
+    next_seq: AtomicU64,
+    /// `Arc::as_ptr` address → (sequence, liveness witness).  The `Weak`
+    /// guards against address reuse: an allocation dropped and replaced by
+    /// a new one at the same address must NOT inherit the old key.
+    by_ptr: Mutex<HashMap<usize, (u64, Weak<Vec<f32>>)>>,
+}
+
+fn key_registry() -> &'static KeyRegistry {
+    static REGISTRY: OnceLock<KeyRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        // A per-process random nonce (the std hash seed) so keys minted by
+        // two different client processes never collide in one shard cache.
+        use std::hash::{BuildHasher, Hasher};
+        let mut h = std::collections::hash_map::RandomState::new().build_hasher();
+        h.write_u64(0x6f70_6572_616e_6421);
+        KeyRegistry {
+            origin: h.finish(),
+            next_seq: AtomicU64::new(1),
+            by_ptr: Mutex::new(HashMap::new()),
+        }
+    })
+}
+
+/// Stable cache key of a shared operand buffer.  Idempotent per live
+/// allocation; process-wide, so every `RemoteShard` in this process keys
+/// the same prepack identically and a shard dedupes across connections.
+pub fn operand_key(buf: &Arc<Vec<f32>>) -> OperandKey {
+    let reg = key_registry();
+    let ptr = Arc::as_ptr(buf) as usize;
+    let mut map = reg.by_ptr.lock().unwrap();
+    if let Some((seq, witness)) = map.get(&ptr) {
+        if let Some(live) = witness.upgrade() {
+            if Arc::ptr_eq(&live, buf) {
+                return (reg.origin, *seq);
+            }
+        }
+    }
+    // First sighting (or a dead entry's address was reused): mint fresh.
+    let seq = reg.next_seq.fetch_add(1, Ordering::Relaxed);
+    map.insert(ptr, (seq, Arc::downgrade(buf)));
+    // Bound the map: dead entries whose address never gets reused would
+    // otherwise accumulate for the process lifetime.
+    if map.len() > 4096 {
+        map.retain(|_, (_, w)| w.strong_count() > 0);
+    }
+    (reg.origin, seq)
 }
 
 /// A read-only window into a shared f32 buffer: `Arc` backing allocation
@@ -246,6 +306,30 @@ mod tests {
         assert!(arena.holds(&a.slice(2, 4)), "sub-views alias the chunk too");
         let foreign = OperandView::from(vec![0.0f32; 4]);
         assert!(!arena.holds(&foreign));
+    }
+
+    #[test]
+    fn operand_keys_are_stable_per_allocation_and_fresh_per_repack() {
+        let a = Arc::new(vec![1.0f32; 64]);
+        let k1 = operand_key(&a);
+        let k2 = operand_key(&a);
+        assert_eq!(k1, k2, "same allocation keys identically");
+        assert_eq!(operand_key(&Arc::clone(&a)), k1, "clones share the key");
+
+        let b = Arc::new(vec![1.0f32; 64]);
+        assert_ne!(operand_key(&b), k1, "equal bytes, distinct identity");
+
+        // A "pack-generation bump": drop the old buffer, build a new one.
+        // Even if the allocator reuses the address, the Weak witness is
+        // dead, so the new buffer must mint a new sequence.
+        let old_key = operand_key(&a);
+        drop(a);
+        let repacked = Arc::new(vec![2.0f32; 64]);
+        assert_ne!(operand_key(&repacked), old_key);
+
+        // Origin is shared within the process, sequences are unique.
+        assert_eq!(operand_key(&b).0, operand_key(&repacked).0);
+        assert_ne!(operand_key(&b).1, operand_key(&repacked).1);
     }
 
     #[test]

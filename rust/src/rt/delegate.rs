@@ -20,7 +20,7 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::accel::Accelerator;
+use crate::accel::{Accelerator, LinkCost};
 use crate::cluster::QueueBank;
 use crate::mm::job::{ClassMask, Classed, Job, JobClass, JobResult};
 use crate::sched::worksteal::ThiefMsg;
@@ -83,6 +83,12 @@ impl DelegateStats {
 /// single-stream driver's sharing-friendly behavior; the batched serving
 /// runtime raises it to amortize queue locks over micro-batch job runs).
 ///
+/// `link` is this member's routing cost cell.  A dying delegate *evicts*
+/// it before requeueing — the dispatcher, thief, and route tables all read
+/// the same cell, so the member disappears from routing the moment its
+/// backend fails instead of collecting further jobs that would only be
+/// rediscovered dead via requeue.
+///
 /// The thread exits when the bank is closed and its *eligible* sub-queues
 /// are drained.  On queue timeout it reports `ClusterIdle` to the thief
 /// (work-stealing trigger).
@@ -97,11 +103,22 @@ pub fn spawn(
     thief: Option<Sender<ThiefMsg>>,
     stats: Arc<DelegateStats>,
     drain_extra: usize,
+    link: Option<Arc<LinkCost>>,
 ) -> JoinHandle<Result<()>> {
     std::thread::Builder::new()
         .name(name)
         .spawn(move || {
-            let backend = mk_backend()?;
+            let backend = match mk_backend() {
+                Ok(b) => b,
+                Err(e) => {
+                    // A backend that never came up is as dead as one that
+                    // failed mid-run: poison the routing cell first.
+                    if let Some(l) = &link {
+                        l.evict();
+                    }
+                    return Err(e);
+                }
+            };
             delegate_loop(
                 cluster,
                 bank,
@@ -111,6 +128,7 @@ pub fn spawn(
                 thief,
                 stats,
                 drain_extra,
+                link,
             )
         })
         .expect("spawn delegate thread")
@@ -126,6 +144,7 @@ fn delegate_loop(
     thief: Option<Sender<ThiefMsg>>,
     stats: Arc<DelegateStats>,
     drain_extra: usize,
+    link: Option<Arc<LinkCost>>,
 ) -> Result<()> {
     loop {
         let rt_job = match bank.pop_any_timeout(caps, Duration::from_micros(500)) {
@@ -184,6 +203,14 @@ fn delegate_loop(
                     // callers fail fast rather than wait forever on work
                     // nobody can execute.  Then die loudly — a backend
                     // that cannot execute is gone, not idle.
+                    //
+                    // Evict the routing cell FIRST: by the time the
+                    // requeued jobs are visible to survivors, the
+                    // dispatcher and thief already see this member as
+                    // dead (overhead = INFINITY) and route around it.
+                    if let Some(l) = &link {
+                        l.evict();
+                    }
                     let (requeue, orphans): (Vec<RtJob>, Vec<RtJob>) = run
                         .drain(i..)
                         .partition(|rt| rescue.supports(rt.job.class()));
@@ -229,6 +256,7 @@ mod tests {
             None,
             Arc::clone(&stats),
             2,
+            None,
         );
 
         let grid = TileGrid::new(40, 50, 60, 32);
@@ -276,6 +304,7 @@ mod tests {
             None,
             Arc::clone(&stats),
             0,
+            None,
         );
 
         let (tx, rx) = mpsc::channel();
@@ -320,6 +349,7 @@ mod tests {
             Some(ttx),
             Arc::clone(&stats),
             0,
+            None,
         );
         // No jobs: the delegate must report idleness at least once,
         // carrying its own member mask.
@@ -367,6 +397,7 @@ mod tests {
         }
         drop(tx);
         // A teammate covers every class, so the whole run is rescuable.
+        let link = LinkCost::fixed(0.25);
         let handle = spawn(
             "dying-delegate".into(),
             0,
@@ -377,9 +408,13 @@ mod tests {
             None,
             Arc::clone(&stats),
             4,
+            Some(Arc::clone(&link)),
         );
         let err = handle.join().unwrap().expect_err("backend must die");
         assert!(err.to_string().contains("injected"), "{err}");
+        // The dying delegate poisoned its routing cell before requeueing.
+        assert!(!link.is_alive(), "dead member must be evicted from routing");
+        assert!(link.overhead_ksteps().is_infinite());
         // 2 executed (replies delivered), 3 requeued — none lost.
         assert_eq!(stats.jobs.load(Ordering::Relaxed), 2);
         assert_eq!(stats.requeued.load(Ordering::Relaxed), 3);
@@ -402,6 +437,7 @@ mod tests {
             None,
             Arc::clone(&neon_stats),
             0,
+            None,
         );
         let deadline = std::time::Instant::now() + Duration::from_secs(5);
         while neon_stats.jobs.load(Ordering::Relaxed) < 3
@@ -430,6 +466,7 @@ mod tests {
             None,
             Arc::clone(&conv_stats),
             2,
+            None,
         );
         let (tx, rx) = mpsc::channel();
         let w = Arc::new(XorShift64Star::new(9).fill_f32(8 * 8, 1.0));
@@ -455,6 +492,7 @@ mod tests {
             None,
             Arc::clone(&neon_stats),
             0,
+            None,
         );
         let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(r.data.len(), 8);

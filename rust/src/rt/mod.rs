@@ -40,7 +40,8 @@ pub mod pool;
 pub use driver::{RtOptions, RtReport, RtRuntime};
 pub use exec::{FrameExec, PoolRouter};
 pub use pool::{
-    backend_key, ClusterRoute, DelegatePool, DispatchStats, Dispatcher, PoolOptions, PoolReport,
+    backend_key, ClusterRoute, DelegatePool, DispatchStats, Dispatcher, MemberCost, PoolOptions,
+    PoolReport,
 };
 
 /// How delegates compute jobs.

@@ -13,14 +13,15 @@
 //! no per-cluster capability intersection and no inline execution on the
 //! pipeline thread as long as *any* member of the pool supports the class.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Sender};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::accel::{
-    build_clusters, AccelClass, AccelSpec, Accelerator, BackendRegistry, ClusterSpec,
+    build_clusters, AccelClass, AccelSpec, Accelerator, BackendRegistry, ClusterSpec, LinkCost,
 };
 use crate::cluster::QueueBank;
 use crate::config::HwConfig;
@@ -62,6 +63,13 @@ pub struct PoolOptions {
     /// Backend registry override; `None` uses
     /// [`BackendRegistry::with_defaults`] (neon, big-neon, pjrt-pe).
     pub registry: Option<Arc<BackendRegistry>>,
+    /// Health/cost probe period for remote members, in milliseconds.
+    /// `0` (the default) disables the prober threads — the measured
+    /// placement loop is opt-in because each `remote = …` member gets its
+    /// own probe connection (tests that register a local stand-in under a
+    /// remote member's backend key have no listener to dial).  The serving
+    /// runtime turns it on from `[serving] probe_interval_ms`.
+    pub probe_interval_ms: u64,
 }
 
 impl PoolOptions {
@@ -73,78 +81,153 @@ impl PoolOptions {
             steal_policy: StealPolicy::default(),
             drain_extra: 0,
             registry: None,
+            probe_interval_ms: 0,
         }
     }
 }
 
-/// Per-cluster routing metadata derived from the member capability masks
-/// and the registry's per-backend cost metadata.
+/// One member's routing cost: its capability mask, its k-step period, and
+/// the shared *live* [`LinkCost`] cell the prober thread, its delegate,
+/// and every route reader all hold — measured RTT probes and eviction
+/// reach routing through this one cell.
+#[derive(Debug, Clone)]
+pub struct MemberCost {
+    /// The member's capability mask (registry metadata).
+    pub caps: ClassMask,
+    /// Seconds per k-step — converts link overhead (k-step equivalents)
+    /// to seconds and seeds the static service rate.
+    pub kstep_seconds: f64,
+    /// Live link cost + liveness.  Remote members share the cell of their
+    /// shard's [`BackendEntry`](crate::accel::BackendRegistry) (one shard
+    /// address = one health/cost identity); local members get a private
+    /// cell so one dying instance doesn't evict its siblings.
+    pub link: Arc<LinkCost>,
+}
+
+impl MemberCost {
+    /// k-steps/s this member serves: the shard-reported measured rate
+    /// when a probe has delivered one, else the static `1/kstep_seconds`.
+    fn rate_ksteps(&self) -> f64 {
+        self.link
+            .measured_rate_ksteps()
+            .unwrap_or(1.0 / self.kstep_seconds)
+    }
+}
+
+/// Per-cluster routing metadata over the member cost cells.  Every
+/// accessor answers from the members' *current* [`LinkCost`] state — an
+/// evicted member stops contributing to the accept mask, rates, and
+/// overheads the moment its cell flips, so the dispatcher routes around a
+/// dead shard without rebuilding anything.
 #[derive(Debug, Clone)]
 pub struct ClusterRoute {
-    /// Union of member masks: the classes *some* member can execute —
-    /// what the cluster's bank may accept (dispatch and steal filter).
-    pub accept: ClassMask,
-    /// Per class: aggregate k-steps/s of the members that support it.
-    pub class_rate: [f64; JobClass::COUNT],
-    /// Per class: union of the masks of the members that support it — the
-    /// full service set those members drain, i.e. the backlog that
-    /// competes with a newly routed job of this class.
-    pub drain_mask: [ClassMask; JobClass::COUNT],
-    /// Per class: the fixed per-job shipping cost (seconds) of the
-    /// *cheapest* capable member — the registry's `overhead_ksteps`
-    /// converted at that member's k-step rate.  Zero whenever any capable
-    /// member is local; a class only remote members serve carries their
-    /// transport round trip.  Two consumers: the dispatcher adds it to
-    /// the routing load (small jobs stay local until backlog outweighs
-    /// the trip) and the thief's class-level ship gate prunes steals of
-    /// classes whose backlog drains faster than it ships
-    /// (`Thief::spawn_with_costs`).
-    pub class_overhead_s: [f64; JobClass::COUNT],
+    members: Vec<MemberCost>,
 }
 
 impl ClusterRoute {
     /// Build from one cluster's members, their capability masks, and
-    /// their registry overheads (k-step equivalents, one per member).
+    /// their link cost cells (one per member, seeded from the registry's
+    /// `overhead_ksteps` metadata).
     pub fn derive(
         cluster: &ClusterSpec,
         member_caps: &[ClassMask],
-        member_overhead_ksteps: &[f64],
+        member_links: &[Arc<LinkCost>],
     ) -> ClusterRoute {
         debug_assert_eq!(cluster.members.len(), member_caps.len());
-        debug_assert_eq!(cluster.members.len(), member_overhead_ksteps.len());
+        debug_assert_eq!(cluster.members.len(), member_links.len());
+        let members = cluster
+            .members
+            .iter()
+            .zip(member_caps)
+            .zip(member_links)
+            .map(|((member, caps), link)| MemberCost {
+                caps: *caps,
+                kstep_seconds: member.perf.kstep_seconds,
+                link: Arc::clone(link),
+            })
+            .collect();
+        ClusterRoute { members }
+    }
+
+    /// The member cost cells (tests and the pool's prober wiring).
+    pub fn members(&self) -> &[MemberCost] {
+        &self.members
+    }
+
+    /// Union of *alive* member masks: the classes some live member can
+    /// execute — what the cluster's bank may accept (dispatch and steal
+    /// filter).  A cluster whose only capable member was evicted simply
+    /// stops accepting, which is exactly "no further route attempts".
+    pub fn accept(&self) -> ClassMask {
         let mut accept = ClassMask::NONE;
-        for caps in member_caps {
-            accept = accept.union(*caps);
-        }
-        let mut class_rate = [0.0f64; JobClass::COUNT];
-        let mut drain_mask = [ClassMask::NONE; JobClass::COUNT];
-        let mut class_overhead_s = [f64::INFINITY; JobClass::COUNT];
-        for class in JobClass::ALL {
-            let i = class.index();
-            for ((member, caps), oh) in cluster
-                .members
-                .iter()
-                .zip(member_caps)
-                .zip(member_overhead_ksteps)
-            {
-                if caps.supports(class) {
-                    class_rate[i] += 1.0 / member.perf.kstep_seconds;
-                    drain_mask[i] = drain_mask[i].union(*caps);
-                    class_overhead_s[i] = class_overhead_s[i].min(oh * member.perf.kstep_seconds);
-                }
+        for m in &self.members {
+            if m.link.is_alive() {
+                accept = accept.union(m.caps);
             }
         }
-        for oh in &mut class_overhead_s {
-            if !oh.is_finite() {
-                *oh = 0.0; // no capable member: the accept mask already bars routing
+        accept
+    }
+
+    /// Does some alive member support `class`?
+    pub fn accepts(&self, class: JobClass) -> bool {
+        self.members
+            .iter()
+            .any(|m| m.link.is_alive() && m.caps.supports(class))
+    }
+
+    /// Aggregate k-steps/s of the alive members that support class `ci` —
+    /// measured shard rates when probes delivered them, static otherwise.
+    pub fn class_rate(&self, ci: usize) -> f64 {
+        self.members
+            .iter()
+            .filter(|m| m.link.is_alive() && m.caps.supports_index(ci))
+            .map(|m| m.rate_ksteps())
+            .sum()
+    }
+
+    /// Union of the masks of the alive members that support class `ci` —
+    /// the full service set those members drain, i.e. the backlog that
+    /// competes with a newly routed job of this class.
+    pub fn drain_mask(&self, ci: usize) -> ClassMask {
+        let mut mask = ClassMask::NONE;
+        for m in &self.members {
+            if m.link.is_alive() && m.caps.supports_index(ci) {
+                mask = mask.union(m.caps);
             }
         }
-        ClusterRoute {
-            accept,
-            class_rate,
-            drain_mask,
-            class_overhead_s,
+        mask
+    }
+
+    /// The fixed per-job shipping cost (seconds) of the *cheapest* capable
+    /// member for class `ci` — its link overhead (measured RTT once probes
+    /// run; the registry's static `overhead_ksteps` before) converted at
+    /// that member's k-step rate.  Zero whenever any capable member is
+    /// local; a class only remote members serve carries their transport
+    /// round trip; `INFINITY` once every capable member was evicted (the
+    /// thief's ship gate then prunes the class entirely).  Two consumers:
+    /// the dispatcher adds it to the routing load (small jobs stay local
+    /// until backlog outweighs the trip) and the thief's class-level ship
+    /// gate prunes steals of classes whose backlog drains faster than it
+    /// ships (`Thief::spawn_with_costs`).
+    pub fn class_overhead_s(&self, ci: usize) -> f64 {
+        let mut any_capable = false;
+        let mut best = f64::INFINITY;
+        for m in &self.members {
+            if !m.caps.supports_index(ci) {
+                continue;
+            }
+            any_capable = true;
+            best = best.min(m.link.overhead_ksteps() * m.kstep_seconds);
         }
+        if !any_capable {
+            return 0.0; // no capable member: accept() already bars routing
+        }
+        best
+    }
+
+    /// Members whose link has been evicted (dead shard / dead backend).
+    pub fn evicted_members(&self) -> usize {
+        self.members.iter().filter(|m| !m.link.is_alive()).count()
     }
 }
 
@@ -199,6 +282,10 @@ pub struct PoolReport {
     /// and the delegate's rescue mask).  Callers that require a fully
     /// healthy pool assert this is zero.
     pub delegate_failures: u64,
+    /// Members evicted from routing (dead shard links / dead backends):
+    /// their [`LinkCost`] cells report not-alive, so the dispatcher and
+    /// thief stopped considering them the moment they died.
+    pub evicted_members: u64,
     pub steal_attempts: u64,
     pub jobs_stolen: u64,
     /// Stolen jobs per class ([`JobClass`] dense order).
@@ -240,7 +327,7 @@ impl Dispatcher {
     /// rate; `None` only if no member of any cluster supports the class.
     pub fn route(&self, class: JobClass, preferred: Option<usize>) -> Option<usize> {
         if let Some(p) = preferred {
-            if p < self.routes.len() && self.routes[p].accept.supports(class) {
+            if p < self.routes.len() && self.routes[p].accepts(class) {
                 return Some(p);
             }
         }
@@ -251,7 +338,7 @@ impl Dispatcher {
         // instants.
         let mut best: Option<(usize, f64)> = None;
         for c in 0..self.banks.len() {
-            if !self.routes[c].accept.supports(class) {
+            if !self.routes[c].accepts(class) {
                 continue;
             }
             let load = self.member_load(c, ci);
@@ -264,21 +351,22 @@ impl Dispatcher {
 
     /// Estimated completion cost of a new class-`ci` job on cluster `c`:
     /// the backlog its class-capable members serve normalized by those
-    /// members' aggregate rate, plus the cluster's fixed per-job shipping
-    /// overhead for the class (zero for local members; a remote shard's
-    /// transport round trip otherwise).  The overhead term is what keeps
-    /// small jobs on idle local clusters while a deep local backlog tips
-    /// large CONV-tile / fused-FC work onto a shard.
+    /// members' aggregate rate (shard-*measured* once probes run), plus
+    /// the cluster's fixed per-job shipping overhead for the class (zero
+    /// for local members; a remote shard's measured transport round trip
+    /// otherwise).  The overhead term is what keeps small jobs on idle
+    /// local clusters while a deep local backlog tips large CONV-tile /
+    /// fused-FC work onto a shard.
     fn member_load(&self, c: usize, ci: usize) -> f64 {
         let route = &self.routes[c];
-        self.banks[c].len_where(route.drain_mask[ci]) as f64 / route.class_rate[ci].max(1e-12)
-            + route.class_overhead_s[ci]
+        self.banks[c].len_where(route.drain_mask(ci)) as f64 / route.class_rate(ci).max(1e-12)
+            + route.class_overhead_s(ci)
     }
 
-    /// Per-cluster accept masks — the union over member capabilities (for
-    /// tests and reporting).
+    /// Per-cluster accept masks — the union over alive member
+    /// capabilities (for tests and reporting).
     pub fn accept_masks(&self) -> Vec<ClassMask> {
-        self.routes.iter().map(|r| r.accept).collect()
+        self.routes.iter().map(|r| r.accept()).collect()
     }
 
     /// Dispatch one pre-built job of any class and block for its result —
@@ -403,6 +491,8 @@ pub struct DelegatePool {
     thief: Option<Thief<RtJob>>,
     job_counter: Arc<AtomicU64>,
     dispatch_stats: Arc<DispatchStats>,
+    prober_stop: Arc<AtomicBool>,
+    prober_handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl DelegatePool {
@@ -421,38 +511,52 @@ impl DelegatePool {
             .map(|_| Arc::new(QueueBank::new()))
             .collect();
 
-        // Per-member capability masks + fixed overheads from the registry
-        // metadata (known before any backend instance exists).
+        // Per-member capability masks + link cost cells from the registry
+        // metadata (known before any backend instance exists).  Remote
+        // members SHARE their backend entry's cell — one shard address is
+        // one health/cost identity, and the prober's measurements land in
+        // the registry metadata the ISSUE's placement loop reads.  Local
+        // members get a private cell seeded from the entry's overhead so
+        // one dying instance doesn't evict its siblings resolving the
+        // same backend name.
         let mut member_caps: Vec<Vec<ClassMask>> = Vec::with_capacity(clusters.len());
-        let mut member_overheads: Vec<Vec<f64>> = Vec::with_capacity(clusters.len());
+        let mut member_links: Vec<Vec<Arc<LinkCost>>> = Vec::with_capacity(clusters.len());
         for cluster in &clusters {
             let mut caps = Vec::with_capacity(cluster.members.len());
-            let mut overheads = Vec::with_capacity(cluster.members.len());
+            let mut links = Vec::with_capacity(cluster.members.len());
             for member in &cluster.members {
                 let key = backend_key(member, options.compute);
                 let entry = registry
                     .get(&key)
                     .ok_or_else(|| anyhow!("no backend {key:?} in the registry"))?;
                 caps.push(entry.caps);
-                overheads.push(entry.overhead_ksteps);
+                links.push(match &member.class {
+                    AccelClass::Remote { .. } => entry.link(),
+                    _ => LinkCost::fixed(entry.overhead_ksteps()),
+                });
             }
             member_caps.push(caps);
-            member_overheads.push(overheads);
+            member_links.push(links);
         }
-        let routes: Vec<ClusterRoute> = clusters
-            .iter()
-            .zip(member_caps.iter().zip(&member_overheads))
-            .map(|(cluster, (caps, overheads))| ClusterRoute::derive(cluster, caps, overheads))
-            .collect();
+        let routes: Arc<Vec<ClusterRoute>> = Arc::new(
+            clusters
+                .iter()
+                .zip(member_caps.iter().zip(&member_links))
+                .map(|(cluster, (caps, links))| ClusterRoute::derive(cluster, caps, links))
+                .collect(),
+        );
         let service_rates: Vec<f64> = clusters.iter().map(|c| c.throughput()).collect();
 
         let thief = if options.work_stealing {
+            let ship_routes = Arc::clone(&routes);
             Some(Thief::spawn_with_costs(
                 banks.clone(),
                 options.steal_policy,
-                routes.iter().map(|r| r.accept).collect(),
+                routes.iter().map(|r| r.accept()).collect(),
                 service_rates,
-                routes.iter().map(|r| r.class_overhead_s).collect(),
+                // Live gate: re-read on every stealer pass, so measured
+                // probes and shard eviction reach the thief immediately.
+                Arc::new(move |c, i| ship_routes[c].class_overhead_s(i)),
             ))
         } else {
             None
@@ -501,19 +605,43 @@ impl DelegatePool {
                     thief_tx.clone(),
                     stats,
                     options.drain_extra,
+                    Some(Arc::clone(&member_links[cluster.index][mi])),
                 ));
+            }
+        }
+
+        // Health/cost probes: one thread per remote member, dialing its
+        // OWN connection (probes must never interleave with a delegate's
+        // job frames on an ordered transport).
+        let prober_stop = Arc::new(AtomicBool::new(false));
+        let mut prober_handles = Vec::new();
+        if options.probe_interval_ms > 0 {
+            for (cluster, links) in clusters.iter().zip(&member_links) {
+                for (member, link) in cluster.members.iter().zip(links) {
+                    if let AccelClass::Remote { addr } = &member.class {
+                        prober_handles.push(spawn_prober(
+                            addr.clone(),
+                            Arc::clone(link),
+                            member.perf.kstep_seconds,
+                            options.probe_interval_ms,
+                            Arc::clone(&prober_stop),
+                        ));
+                    }
+                }
             }
         }
 
         Ok(DelegatePool {
             clusters,
             banks,
-            routes: Arc::new(routes),
+            routes,
             delegate_stats,
             delegate_handles,
             thief,
             job_counter: Arc::new(AtomicU64::new(0)),
             dispatch_stats: Arc::new(DispatchStats::default()),
+            prober_stop,
+            prober_handles,
         })
     }
 
@@ -548,6 +676,7 @@ impl DelegatePool {
             &self.delegate_stats,
             self.thief.as_ref(),
             &self.dispatch_stats,
+            &self.routes,
         )
     }
 
@@ -564,12 +693,21 @@ impl DelegatePool {
     pub fn shutdown(self) -> Result<PoolReport> {
         let DelegatePool {
             banks,
+            routes,
             delegate_stats,
             delegate_handles,
             thief,
             dispatch_stats,
+            prober_stop,
+            prober_handles,
             ..
         } = self;
+        // Stop the probers first: a probe failing because its shard shut
+        // down concurrently must not be recorded as an eviction.
+        prober_stop.store(true, Ordering::SeqCst);
+        for h in prober_handles {
+            let _ = h.join();
+        }
         for b in &banks {
             b.close();
         }
@@ -580,7 +718,7 @@ impl DelegatePool {
                 failures += 1;
             }
         }
-        let mut report = fold_report(&delegate_stats, thief.as_ref(), &dispatch_stats);
+        let mut report = fold_report(&delegate_stats, thief.as_ref(), &dispatch_stats, &routes);
         report.delegate_failures = failures;
         if let Some(t) = thief {
             t.shutdown();
@@ -589,12 +727,70 @@ impl DelegatePool {
     }
 }
 
+/// Background health/cost probe for one remote member (paper-side
+/// "measured placement"): dials its own connection to the shard, pings
+/// every `interval_ms`, and feeds the measured RTT + shard-reported
+/// service rate into the member's shared [`LinkCost`] cell — the same
+/// cell the dispatcher's routing penalty and the thief's ship gate read,
+/// so placement follows the measured link without any rebuild.  A failed
+/// dial or ping *evicts* the link: the shard vanishes from routing (and
+/// the next fleet member takes its traffic) instead of being rediscovered
+/// dead one job at a time.
+fn spawn_prober(
+    addr: String,
+    link: Arc<LinkCost>,
+    kstep_seconds: f64,
+    interval_ms: u64,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("probe-{addr}"))
+        .spawn(move || {
+            use crate::accel::remote::{probe_shard, TcpTransport};
+            let mut transport = match TcpTransport::connect(&addr) {
+                Ok(t) => t,
+                Err(_) => {
+                    link.evict();
+                    return;
+                }
+            };
+            let mut seq = 0u64;
+            while !stop.load(Ordering::SeqCst) && link.is_alive() {
+                match probe_shard(&mut transport, seq) {
+                    Ok((rtt_s, rate_ksteps, _served)) => {
+                        link.record_probe(rtt_s, kstep_seconds, rate_ksteps);
+                    }
+                    Err(_) => {
+                        // Shutdown races (the shard closing first) are not
+                        // health events; anything else is a dead link.
+                        if !stop.load(Ordering::SeqCst) {
+                            link.evict();
+                        }
+                        return;
+                    }
+                }
+                seq += 1;
+                // Sleep in short slices so shutdown never waits a full
+                // probe interval.
+                let mut left = interval_ms;
+                while left > 0 && !stop.load(Ordering::SeqCst) {
+                    let slice = left.min(5);
+                    std::thread::sleep(Duration::from_millis(slice));
+                    left -= slice;
+                }
+            }
+        })
+        .expect("spawn prober thread")
+}
+
 fn fold_report(
     delegate_stats: &[Arc<DelegateStats>],
     thief: Option<&Thief<RtJob>>,
     dispatch: &DispatchStats,
+    routes: &[ClusterRoute],
 ) -> PoolReport {
     let mut report = PoolReport::default();
+    report.evicted_members = routes.iter().map(|r| r.evicted_members() as u64).sum();
     for stats in delegate_stats {
         let j = stats.jobs.load(Ordering::Relaxed);
         report.per_accel_jobs.push(j);
@@ -967,15 +1163,14 @@ mod tests {
         assert_eq!(dispatcher.route(JobClass::FcGemm, None), Some(0));
         assert_eq!(dispatcher.route(JobClass::Im2col, None), Some(0));
         let shard_route = &pool.routes()[1];
-        assert!(shard_route.class_overhead_s[JobClass::ConvTile.index()] > 0.0);
-        assert!(shard_route.class_overhead_s[JobClass::FcGemmBatch.index()] > 0.0);
+        assert!(shard_route.class_overhead_s(JobClass::ConvTile.index()) > 0.0);
+        assert!(shard_route.class_overhead_s(JobClass::FcGemmBatch.index()) > 0.0);
         // Classes no member there serves carry no overhead (the accept
         // mask already bars routing), and local clusters ship for free.
-        assert_eq!(shard_route.class_overhead_s[JobClass::FcGemm.index()], 0.0);
-        assert_eq!(
-            pool.routes()[0].class_overhead_s,
-            [0.0; JobClass::COUNT]
-        );
+        assert_eq!(shard_route.class_overhead_s(JobClass::FcGemm.index()), 0.0);
+        for class in JobClass::ALL {
+            assert_eq!(pool.routes()[0].class_overhead_s(class.index()), 0.0);
+        }
 
         // Pile a 16-tile GEMM onto the local cluster (its only delegate is
         // gated, so the backlog stays put)…
@@ -1015,6 +1210,75 @@ mod tests {
         let report = pool.shutdown().unwrap();
         assert_eq!(report.jobs_executed, grid.num_jobs() as u64);
         assert_eq!(report.delegate_failures, 0);
+    }
+
+    /// Evicting a member's link removes its cluster from routing on the
+    /// spot: placement hints pointing at it are overridden, the
+    /// least-loaded search skips it, and the report counts the eviction —
+    /// the deterministic core of "kill a shard, lose nothing, never route
+    /// to it again".
+    #[test]
+    fn evicted_member_disappears_from_routing() {
+        let mut hw = HwConfig::default_zc702();
+        hw.clusters = vec![
+            crate::config::ClusterCfg {
+                name: "local".into(),
+                neon: 1,
+                big_neon: 0,
+                remote: Vec::new(),
+                pes: Vec::new(),
+            },
+            crate::config::ClusterCfg {
+                name: "shard".into(),
+                neon: 0,
+                big_neon: 0,
+                remote: vec!["127.0.0.1:2".into()],
+                pes: Vec::new(),
+            },
+        ];
+        let mut registry = BackendRegistry::new();
+        registry.register("neon", ClassMask::all(), || {
+            Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>)
+        });
+        registry.register_with_cost(
+            &crate::accel::remote::shard_backend_name("127.0.0.1:2"),
+            crate::accel::remote::remote_class_mask(),
+            crate::accel::remote::REMOTE_OVERHEAD_KSTEPS,
+            || Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>),
+        );
+        let mut options = PoolOptions::new(hw, ComputeMode::Native, false);
+        options.registry = Some(Arc::new(registry));
+        let pool = DelegatePool::start(&options).unwrap();
+        let dispatcher = pool.dispatcher();
+
+        // Alive: the placement hint onto the shard cluster is honored.
+        assert_eq!(dispatcher.route(JobClass::ConvTile, Some(1)), Some(1));
+        assert!(pool.routes()[1].accepts(JobClass::ConvTile));
+        assert_eq!(pool.snapshot().evicted_members, 0);
+
+        // Evict the shard member's link (what a dying delegate or a
+        // failed probe does) — no further route attempts land there.
+        assert!(pool.routes()[1].members()[0].link.evict());
+        assert!(!pool.routes()[1].accepts(JobClass::ConvTile));
+        assert_eq!(dispatcher.route(JobClass::ConvTile, Some(1)), Some(0));
+        assert_eq!(dispatcher.route(JobClass::ConvTile, None), Some(0));
+        assert!(pool.routes()[1]
+            .class_overhead_s(JobClass::ConvTile.index())
+            .is_infinite());
+        assert_eq!(pool.snapshot().evicted_members, 1);
+
+        // Jobs hinted at the dead cluster still execute, on the survivor.
+        let w = Arc::new(XorShift64Star::new(51).fill_f32(8 * 16, 1.0));
+        let x = Arc::new(XorShift64Star::new(52).fill_f32(16, 1.0));
+        let id = dispatcher.reserve_job_ids(1);
+        let job = Job::fc(id, 0, 0, 8, 16, Arc::clone(&w), Arc::clone(&x), 32).placed(Some(1));
+        let y = dispatcher.execute_job(job).data;
+        let mut want = vec![0.0f32; 8];
+        crate::mm::gemm::gemm_blocked_into(&w, &x, &mut want, 8, 16, 1);
+        assert_eq!(y, want);
+        let report = pool.shutdown().unwrap();
+        assert_eq!(report.evicted_members, 1);
+        assert_eq!(report.inline_fallbacks, 0);
     }
 
     #[test]

@@ -33,6 +33,14 @@ use crate::cluster::QueueBank;
 use crate::mm::job::{ClassMask, JobClass};
 pub use crate::mm::job::Classed;
 
+/// Live per-destination shipping cost: `ship(cluster, class_index)` returns
+/// the seconds it costs to move one job of that class into that cluster
+/// *right now*.  The pool backs this with [`ClusterRoute::class_overhead_s`]
+/// so measured RTT probes and shard eviction reach the thief without a
+/// respawn: a dead remote destination answers `f64::INFINITY` and every
+/// class is pruned from its steal mask.
+pub type ShipCostFn = Arc<dyn Fn(usize, usize) -> f64 + Send + Sync>;
+
 /// Messages from cluster workers to the thief's manager.
 #[derive(Debug, PartialEq, Eq)]
 pub enum ThiefMsg {
@@ -192,40 +200,35 @@ impl<T: Send + Classed + 'static> Thief<T> {
         caps: Vec<ClassMask>,
         service_rates: Vec<f64>,
     ) -> Thief<T> {
-        let n = queues.len();
-        Self::spawn_with_costs(
-            queues,
-            policy,
-            caps,
-            service_rates,
-            vec![[0.0; JobClass::COUNT]; n],
-        )
+        Self::spawn_with_costs(queues, policy, caps, service_rates, Arc::new(|_, _| 0.0))
     }
 
     /// Fully-specified spawn: per-cluster *accept* masks (the union of the
     /// destination's member capabilities — stolen jobs are filtered so a
     /// destination only receives classes some member can execute), service
     /// rates (aggregate k-steps/s, normalizing victim backlogs across
-    /// heterogeneous clusters), and per-cluster **per-class shipping
-    /// costs** in seconds (`ship_s`): the fixed cost of moving a job of
-    /// each class into that destination — the cheapest capable member's
-    /// registry `overhead_ksteps`, i.e. `ClusterRoute::class_overhead_s`.
+    /// heterogeneous clusters), and a live **per-class shipping cost**
+    /// function ([`ShipCostFn`]): `ship_s(cluster, class)` is the fixed
+    /// cost in seconds of moving a job of that class into that destination
+    /// — the cheapest capable member's link overhead, i.e.
+    /// `ClusterRoute::class_overhead_s`, re-read on every stealer pass so
+    /// measured RTT probes tighten or widen the gate while the thief runs.
     /// This is where `Accelerator::cost`'s constant term finally meets
     /// the stealer: a class whose heaviest victim backlog drains faster
     /// than this destination ships it is pruned from the steal mask (a
     /// remote shard's round trip keeps small fused-FC backlogs local even
-    /// when a zero-cost CONV member shares its cluster), while all-zero
-    /// rows (local clusters) keep the classic behavior.
+    /// when a zero-cost CONV member shares its cluster), while zero-cost
+    /// answers (local clusters) keep the classic behavior and an evicted
+    /// shard's `INFINITY` removes it as a destination entirely.
     pub fn spawn_with_costs(
         queues: Vec<Arc<QueueBank<T>>>,
         policy: StealPolicy,
         caps: Vec<ClassMask>,
         service_rates: Vec<f64>,
-        ship_s: Vec<[f64; JobClass::COUNT]>,
+        ship_s: ShipCostFn,
     ) -> Thief<T> {
         assert_eq!(queues.len(), caps.len());
         assert_eq!(queues.len(), service_rates.len());
-        assert_eq!(queues.len(), ship_s.len());
         let (tx, rx) = mpsc::channel::<ThiefMsg>();
         let stats = Arc::new(StealStats::default());
         let st = Arc::clone(&stats);
@@ -273,7 +276,7 @@ fn thief_loop<T: Send + Classed>(
     policy: StealPolicy,
     caps: Vec<ClassMask>,
     service_rates: Vec<f64>,
-    ship_s: Vec<[f64; JobClass::COUNT]>,
+    ship_s: ShipCostFn,
 ) {
     // cluster → union of the capability masks of its members that have
     // reported idle (cleared on local work or a successful deposit).
@@ -330,18 +333,19 @@ fn thief_loop<T: Send + Classed>(
             stats.attempts.fetch_add(1, Ordering::Relaxed);
             let mut cap = caps[idle_c].intersect(idle_mask);
             // Class-level ship gate: moving a job of class `i` into this
-            // destination costs `ship_s[idle_c][i]` seconds (a remote
-            // member's transport round trip; 0 for local members).  A
-            // class whose HEAVIEST victim backlog drains in place faster
-            // than it ships is pruned from the steal mask — per class, so
-            // a cheap local CONV member sharing a cluster with a remote
-            // fused-FC member doesn't zero the fused-FC gate.
+            // destination costs `ship_s(idle_c, i)` seconds (a remote
+            // member's *measured* transport round trip; 0 for local
+            // members; INFINITY once the link is evicted).  A class whose
+            // HEAVIEST victim backlog drains in place faster than it
+            // ships is pruned from the steal mask — per class, so a cheap
+            // local CONV member sharing a cluster with a remote fused-FC
+            // member doesn't zero the fused-FC gate.
             for class in JobClass::ALL {
                 let i = class.index();
                 if !cap.supports_index(i) {
                     continue;
                 }
-                let ship = ship_s[idle_c][i];
+                let ship = ship_s(idle_c, i);
                 if ship <= 0.0 {
                     continue;
                 }
@@ -680,7 +684,7 @@ mod tests {
             StealPolicy::default(),
             vec![ClassMask::all(), ClassMask::all()],
             vec![1.0, 1.0],
-            vec![[100.0; JobClass::COUNT], [0.0; JobClass::COUNT]],
+            Arc::new(|c, _| if c == 0 { 100.0 } else { 0.0 }),
         );
         thief
             .sender()
@@ -698,7 +702,7 @@ mod tests {
             StealPolicy::default(),
             vec![ClassMask::all(), ClassMask::all()],
             vec![1.0, 1.0],
-            vec![[2.5; JobClass::COUNT], [0.0; JobClass::COUNT]],
+            Arc::new(|c, _| if c == 0 { 2.5 } else { 0.0 }),
         );
         thief
             .sender()
@@ -733,7 +737,7 @@ mod tests {
             StealPolicy::default(),
             vec![ClassMask::all(), ClassMask::all()],
             vec![1.0, 1.0],
-            vec![ship, [0.0; JobClass::COUNT]],
+            Arc::new(move |c, i| if c == 0 { ship[i] } else { 0.0 }),
         );
         thief
             .sender()
@@ -758,6 +762,54 @@ mod tests {
             6,
             "the expensive class must stay local"
         );
+    }
+
+    /// The ship cost is a *live* function, re-read on every stealer pass:
+    /// a destination that starts evicted (INFINITY — nothing may ship)
+    /// must begin stealing the moment its link comes back cheap, without
+    /// respawning the thief.
+    #[test]
+    fn ship_gate_is_live_and_infinity_blocks_all_classes() {
+        use std::sync::atomic::AtomicBool;
+        let q0: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
+        let q1: Arc<QueueBank<u32>> = Arc::new(QueueBank::new());
+        for i in 0..6 {
+            q1.push(i);
+        }
+        let dead = Arc::new(AtomicBool::new(true));
+        let gate = Arc::clone(&dead);
+        let thief = Thief::spawn_with_costs(
+            vec![Arc::clone(&q0), Arc::clone(&q1)],
+            StealPolicy::default(),
+            vec![ClassMask::all(), ClassMask::all()],
+            vec![1.0, 1.0],
+            Arc::new(move |c, _| {
+                if c == 0 && gate.load(Ordering::SeqCst) {
+                    f64::INFINITY
+                } else {
+                    0.0
+                }
+            }),
+        );
+        thief
+            .sender()
+            .send(ThiefMsg::ClusterIdle(0, ClassMask::all()))
+            .unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(q0.is_empty(), "stole toward an evicted destination");
+        // Link recovers: the same idle-book entry must now be served.
+        dead.store(false, Ordering::SeqCst);
+        thief
+            .sender()
+            .send(ThiefMsg::ClusterIdle(0, ClassMask::all()))
+            .unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while q0.is_empty() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(!q0.is_empty(), "revived destination never stole");
+        assert_eq!(q0.len() + q1.len(), 6);
+        thief.shutdown();
     }
 
     #[test]

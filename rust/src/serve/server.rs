@@ -137,6 +137,9 @@ impl Server {
         // Amortize queue locks over micro-batch job runs.
         pool_options.drain_extra = options.hw.serving.drain_extra;
         pool_options.registry = options.registry.clone();
+        // Measured placement: probe remote members' RTT + service rate
+        // into their routing links ([serving] probe_interval_ms).
+        pool_options.probe_interval_ms = options.hw.serving.probe_interval_ms;
         let pool = DelegatePool::start(&pool_options)?;
 
         let admission = Arc::new(AdmissionQueue::new(options.admission_depth));

@@ -25,13 +25,16 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::accel::remote::{serve_transport, TcpTransport};
+use crate::accel::remote::{serve_shard_transport, ShardCache, ShardCacheStats, TcpTransport};
 use crate::rt::{DelegatePool, Dispatcher, PoolOptions, PoolReport};
 
 /// A running shard server: listener + per-connection service threads over
-/// one hosted [`DelegatePool`].
+/// one hosted [`DelegatePool`] and ONE shared operand cache — clients that
+/// reconnect (or a client pool's several delegates) hit the same cached
+/// fetch sets, so a panel ships once per shard, not once per connection.
 pub struct ShardServer {
     pool: DelegatePool,
+    cache: Arc<ShardCache>,
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_handle: Option<JoinHandle<Vec<JoinHandle<Result<u64>>>>>,
@@ -39,10 +42,15 @@ pub struct ShardServer {
 
 impl ShardServer {
     /// Bind `bind` (e.g. `"127.0.0.1:0"` for an ephemeral test port),
-    /// start the hosted pool, and begin accepting shard clients.
+    /// start the hosted pool, and begin accepting shard clients.  The
+    /// operand cache is sized from `[serving] shard_cache_mb` of the
+    /// hosted pool's config; probe replies advertise the pool's aggregate
+    /// static service rate so clients can weight fleet placement.
     pub fn start(bind: &str, options: &PoolOptions) -> Result<ShardServer> {
         let pool = DelegatePool::start(options)?;
         let dispatcher = pool.dispatcher();
+        let cache = ShardCache::with_capacity_mb(options.hw.serving.shard_cache_mb.max(1));
+        let rate_ksteps: f64 = pool.clusters().iter().map(|c| c.throughput()).sum();
         let listener = TcpListener::bind(bind)
             .with_context(|| format!("binding shard server to {bind}"))?;
         let addr = listener.local_addr().context("shard server local addr")?;
@@ -53,6 +61,7 @@ impl ShardServer {
             .context("shard listener non-blocking")?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop_accept = Arc::clone(&stop);
+        let conn_cache = Arc::clone(&cache);
         let accept_handle = std::thread::Builder::new()
             .name("shard-accept".into())
             .spawn(move || {
@@ -61,9 +70,12 @@ impl ShardServer {
                     match listener.accept() {
                         Ok((stream, peer)) => {
                             let dispatcher = dispatcher.clone();
+                            let cache = Arc::clone(&conn_cache);
                             let handle = std::thread::Builder::new()
                                 .name(format!("shard-conn-{peer}"))
-                                .spawn(move || serve_stream(stream, dispatcher))
+                                .spawn(move || {
+                                    serve_stream(stream, dispatcher, cache, rate_ksteps)
+                                })
                                 .expect("spawn shard connection thread");
                             connections.push(handle);
                         }
@@ -90,6 +102,7 @@ impl ShardServer {
             .expect("spawn shard accept thread");
         Ok(ShardServer {
             pool,
+            cache,
             addr,
             stop,
             accept_handle: Some(accept_handle),
@@ -105,6 +118,12 @@ impl ShardServer {
     /// Live counters of the hosted pool.
     pub fn snapshot(&self) -> PoolReport {
         self.pool.snapshot()
+    }
+
+    /// Operand-cache counters (hits, misses, evictions, occupancy) of the
+    /// shared shard cache — the server side of the wire-byte ledger.
+    pub fn cache_stats(&self) -> ShardCacheStats {
+        self.cache.stats()
     }
 
     /// Stop accepting, join the connection threads (each exits when its
@@ -126,10 +145,19 @@ impl ShardServer {
     }
 }
 
-/// One connection's service loop: decode → execute on the pool → reply.
-fn serve_stream(stream: TcpStream, dispatcher: Dispatcher) -> Result<u64> {
+/// One connection's service loop: decode → execute on the pool → reply,
+/// resolving descriptor-only CONV frames through the shared operand cache
+/// and answering probes with the shard's aggregate service rate.
+fn serve_stream(
+    stream: TcpStream,
+    dispatcher: Dispatcher,
+    cache: Arc<ShardCache>,
+    rate_ksteps: f64,
+) -> Result<u64> {
     let mut transport = TcpTransport::from_stream(stream);
-    serve_transport(&mut transport, |job| Ok(dispatcher.execute_job(job.clone())))
+    serve_shard_transport(&mut transport, &cache, rate_ksteps, |job| {
+        Ok(dispatcher.execute_job(job.clone()))
+    })
 }
 
 #[cfg(test)]

@@ -29,8 +29,9 @@
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashSet, VecDeque};
 
+use crate::accel::remote::REMOTE_CACHED_OVERHEAD_FRACTION;
 use crate::accel::{
-    build_clusters, filter_clusters, hw_class_mask, AccelSpec, ClusterSpec, PerfModel,
+    build_clusters, filter_clusters, hw_class_mask, AccelClass, AccelSpec, ClusterSpec, PerfModel,
 };
 use crate::config::HwConfig;
 use crate::memsub::MemSubsystem;
@@ -293,6 +294,11 @@ struct Sim<'a> {
     cluster_layer_busy: Vec<Vec<f64>>,
     conv_remaining: Vec<Vec<usize>>, // [frame][conv_ord]
     conv_va: Vec<u64>,               // col buffer VA per conv ordinal
+    /// (member, conv ordinal) pairs whose packed fetch set already shipped
+    /// to the member's shard — the virtual-clock mirror of the client's
+    /// shipped-key ledger: the first tile pays the cold round trip, warm
+    /// tiles a descriptor-only one (`REMOTE_CACHED_OVERHEAD_FRACTION`).
+    remote_warm: HashSet<(usize, usize)>,
     jobs_executed: u64,
     jobs_by_class: [u64; JobClass::COUNT],
     jobs_stolen: u64,
@@ -345,6 +351,7 @@ impl<'a> Sim<'a> {
             cluster_layer_busy: vec![vec![0.0; convs.len()]; spec.clusters.len().max(1)],
             conv_remaining: vec![vec![0; convs.len()]; spec.frames],
             conv_va,
+            remote_warm: HashSet::new(),
             jobs_executed: 0,
             jobs_by_class: [0; JobClass::COUNT],
             jobs_stolen: 0,
@@ -678,6 +685,18 @@ impl<'a> Sim<'a> {
                         / (self.spec.hw.memsub.ddr_bytes_per_cycle * self.spec.hw.fpga_mhz * 1e6);
                     (self.now + compute).max(fetch_done) + wb
                 } else {
+                    let mut compute = compute;
+                    // Remote member with a warm operand cache: the layer's
+                    // packed fetch set already lives on the shard, so the
+                    // steady-state tile ships a 137-B descriptor-only
+                    // frame — the round trip keeps its latencies but loses
+                    // the panel serialization.
+                    if matches!(accel.class, AccelClass::Remote { .. })
+                        && !self.remote_warm.insert((accel_idx, job.conv_ord))
+                    {
+                        compute -= accel.perf.job_overhead_seconds
+                            * (1.0 - REMOTE_CACHED_OVERHEAD_FRACTION);
+                    }
                     self.now + compute
                 }
             }
@@ -1020,11 +1039,13 @@ mod tests {
     }
 
     /// A `remote = host:port` cluster member joins the virtual clock with
-    /// the latency/B service model: CONV tiles pay the full transport
-    /// round trip per job (`PerfModel::remote.job_overhead_seconds`),
-    /// fused batched-FC shares pay it divided by the fusion width, and
-    /// the member's partial mask keeps per-request FC and im2col off the
-    /// link entirely.
+    /// the latency/B service model: a CONV tile pays the full transport
+    /// round trip (`PerfModel::remote.job_overhead_seconds`) the first
+    /// time its layer's fetch set ships, and the cached descriptor-only
+    /// fraction (`REMOTE_CACHED_OVERHEAD_FRACTION`) on every warm tile
+    /// after that; fused batched-FC shares pay the round trip divided by
+    /// the fusion width, and the member's partial mask keeps per-request
+    /// FC and im2col off the link entirely.
     #[test]
     fn remote_shard_member_serves_conv_and_fused_fc_in_sim() {
         let n = net("mnist");

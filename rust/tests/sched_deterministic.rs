@@ -23,11 +23,15 @@
 //! zero.
 
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
+use synergy::accel::remote::{remote_class_mask, shard_backend_name};
+use synergy::accel::{Accelerator, BackendRegistry, NativeGemm};
 use synergy::cluster::QueueBank;
-use synergy::config::zoo;
-use synergy::mm::job::{jobs_for_gemm, ClassMask, Classed, Job, JobClass};
+use synergy::config::{zoo, ClusterCfg, HwConfig};
+use synergy::mm::job::{jobs_for_gemm, ClassMask, Classed, Job, JobClass, JobResult};
 use synergy::mm::TileGrid;
 use synergy::nn::Network;
 use synergy::rt::{ComputeMode, DelegatePool, PoolOptions, PoolRouter};
@@ -453,4 +457,160 @@ fn mixed_cluster_pjrt_stub_full_forward_runs_fc_on_neon() {
         );
     }
     assert_eq!(report.dispatched_by_class, report.per_class_jobs);
+}
+
+/// A backend that holds every job until the test opens its gate — the
+/// deterministic way to pile a known backlog onto one cluster's bank.
+struct GatedGemm {
+    open: Arc<AtomicBool>,
+}
+
+impl Accelerator for GatedGemm {
+    fn id(&self) -> &str {
+        "gated"
+    }
+    fn supports(&self, _class: JobClass) -> bool {
+        true
+    }
+    fn cost(&self, job: &Job) -> f64 {
+        job.ksteps() as f64
+    }
+    fn execute(&mut self, job: &Job) -> anyhow::Result<JobResult> {
+        while !self.open.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        Ok(job.execute_native())
+    }
+}
+
+/// Measured-cost placement between two remote-kind members (ISSUE 7): the
+/// dispatcher prefers the shard whose *measured* link cost is lower, a
+/// probe-driven cost change flips placement with no queue state at all,
+/// backlog flips it exactly when the queue crosses the measured cost gap,
+/// and an evicted link disappears from routing entirely.
+#[test]
+fn measured_link_costs_steer_placement_between_two_shards() {
+    let cheap_addr = "127.0.0.1:11";
+    let dear_addr = "127.0.0.1:12";
+    let mut hw = HwConfig::default_zc702();
+    hw.clusters = vec![
+        ClusterCfg {
+            name: "cheap".into(),
+            neon: 0,
+            big_neon: 0,
+            remote: vec![cheap_addr.into()],
+            pes: Vec::new(),
+        },
+        ClusterCfg {
+            name: "dear".into(),
+            neon: 0,
+            big_neon: 0,
+            remote: vec![dear_addr.into()],
+            pes: Vec::new(),
+        },
+    ];
+
+    // Local stand-ins under the shard backend names: the pool treats both
+    // as remote-kind members (shared per-address link cells — the ones a
+    // prober would feed), but execution stays in-process and
+    // deterministic.  The cheap shard's backend is gated so its bank can
+    // hold a known backlog; the dear shard executes immediately.
+    let gate = Arc::new(AtomicBool::new(false));
+    let mut registry = BackendRegistry::new();
+    let builder_gate = Arc::clone(&gate);
+    registry.register_with_cost(
+        &shard_backend_name(cheap_addr),
+        remote_class_mask(),
+        20.0,
+        move || {
+            Ok(Box::new(GatedGemm {
+                open: Arc::clone(&builder_gate),
+            }) as Box<dyn Accelerator>)
+        },
+    );
+    registry.register_with_cost(
+        &shard_backend_name(dear_addr),
+        remote_class_mask(),
+        100.0,
+        || Ok(Box::new(NativeGemm) as Box<dyn Accelerator>),
+    );
+
+    let mut options = PoolOptions::new(hw, ComputeMode::Native, false);
+    options.drain_extra = 0; // a blocked delegate holds exactly one job
+    options.registry = Some(Arc::new(registry));
+    let pool = Arc::new(DelegatePool::start(&options).unwrap());
+    let dispatcher = pool.dispatcher();
+    let ci = JobClass::ConvTile.index();
+    let cheap_link = Arc::clone(&pool.routes()[0].members()[0].link);
+    let dear_link = Arc::clone(&pool.routes()[1].members()[0].link);
+    let kstep = pool.routes()[0].members()[0].kstep_seconds;
+
+    // Idle queues: the statically cheaper link (20 vs 100 k-steps) wins.
+    assert_eq!(dispatcher.route(JobClass::ConvTile, None), Some(0));
+
+    // Measured placement, no queue state involved: probes report the
+    // cheap link degraded past the dear one → placement flips; further
+    // probes measuring it healthy again blend the estimate back down and
+    // placement returns.  (First probe replaces the static prior; later
+    // ones EWMA-blend, so recovery takes a few pings — exactly the
+    // anti-flap behavior the blend is for.)
+    cheap_link.record_probe(300.0 * kstep, kstep, 2000.0);
+    assert_eq!(dispatcher.route(JobClass::ConvTile, None), Some(1));
+    for _ in 0..12 {
+        cheap_link.record_probe(20.0 * kstep, kstep, 2000.0);
+    }
+    assert!(cheap_link.overhead_ksteps() < 100.0);
+    assert_eq!(dispatcher.route(JobClass::ConvTile, None), Some(0));
+    dear_link.record_probe(100.0 * kstep, kstep, 2000.0);
+
+    // Backlog crossing the measured gap: with the gate closed, un-hinted
+    // jobs queue on the cheap shard until its backlog-per-measured-rate
+    // exceeds the measured overhead gap, then new work routes dear.
+    let gap_s = pool.routes()[1].class_overhead_s(ci) - pool.routes()[0].class_overhead_s(ci);
+    assert!(gap_s > 0.0);
+    let flip_jobs = (gap_s * pool.routes()[0].class_rate(ci)).ceil() as usize + 2;
+    let total = flip_jobs + 3;
+    let grid = TileGrid::new(8, 8, 8, 8);
+    let a = Arc::new(vec![0.5f32; 64]);
+    let b = Arc::new(vec![0.25f32; 64]);
+    let mut workers = Vec::new();
+    for _ in 0..total {
+        let pool = Arc::clone(&pool);
+        let (a, b) = (Arc::clone(&a), Arc::clone(&b));
+        workers.push(std::thread::spawn(move || {
+            let dispatcher = pool.dispatcher();
+            let mut id = dispatcher.reserve_job_ids(1);
+            let jobs = jobs_for_gemm(0, 0, grid, a, b, &mut id);
+            for job in jobs {
+                let want = job.execute_native().data;
+                assert_eq!(dispatcher.execute_job(job).data, want);
+            }
+        }));
+    }
+    let mut waited = 0u64;
+    while dispatcher.route(JobClass::ConvTile, None) != Some(1) {
+        waited += 1;
+        assert!(
+            waited < 2500,
+            "backlog of {total} gated jobs never tipped routing to the dear shard"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    gate.store(true, Ordering::Relaxed);
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    // Queues drained: back to the cheaper link…
+    assert_eq!(dispatcher.route(JobClass::ConvTile, None), Some(0));
+    // …until it dies: an evicted link leaves routing entirely.
+    assert!(cheap_link.evict());
+    assert_eq!(dispatcher.route(JobClass::ConvTile, None), Some(1));
+
+    let pool = Arc::try_unwrap(pool).unwrap_or_else(|_| panic!("pool still shared"));
+    let report = pool.shutdown().unwrap();
+    assert_eq!(report.jobs_executed, total as u64);
+    assert_eq!(report.inline_fallbacks, 0);
+    assert_eq!(report.delegate_failures, 0);
+    assert_eq!(report.evicted_members, 1);
 }
