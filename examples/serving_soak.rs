@@ -1,0 +1,281 @@
+//! SLO-tier soak: a mixed model-zoo serving run that layers every load
+//! shape the tiered stack must survive — a slow standard-tier drip, bursty
+//! batch-tier floods, a steady interactive foreground, a tight-deadline
+//! storm, and ONE mid-run zero-downtime weight hot-swap — then asserts the
+//! per-tier envelopes on exit:
+//!
+//! * interactive and standard traffic is **never shed**, no matter how
+//!   hard the batch lanes flood (bounded lanes shed bulk, not foreground);
+//! * every admitted request is accounted: completed + expired == admitted,
+//!   and the server's shed ledger equals the clients' rejected submits;
+//! * interactive p99 stays at or below batch p99 while the batch lanes
+//!   are backlogged (tier precedence is visible in the tail);
+//! * the hot-swap loses nothing: exactly one swap, responses pin the
+//!   version current at their batch's formation, and every response is
+//!   `allclose` to ITS version's reference forward.
+//!
+//! ```sh
+//! cargo run --release --example serving_soak -- [--short]
+//! ```
+//!
+//! `--short` is the CI shape: the same phases at a fraction of the volume.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use synergy::config::zoo;
+use synergy::nn::Network;
+use synergy::serve::request::frame_tag;
+use synergy::serve::{Request, RequestStream, ServeOptions, Server, SloTier};
+use synergy::util::argparse::Args;
+
+fn main() -> anyhow::Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &["short"]).map_err(anyhow::Error::msg)?;
+    let short = args.has_flag("short");
+
+    // Volumes per phase (short = the CI shape).
+    let n_interactive = if short { 32 } else { 160 };
+    let n_standard = if short { 16 } else { 80 };
+    let n_batch = if short { 60 } else { 300 };
+    let n_storm = if short { 24 } else { 96 };
+    let burst = 20usize;
+
+    // Mixed zoo: mpcnn (net 0) + mnist (net 1) served side by side.
+    let nets: Vec<Arc<Network>> = ["mpcnn", "mnist"]
+        .iter()
+        .map(|n| Ok(Arc::new(Network::new(zoo::load(n)?, 32)?)))
+        .collect::<anyhow::Result<_>>()?;
+    // The swap payload: same architecture/tile/input shape as net 1, but a
+    // different config name, hence different deterministic weights — the
+    // swap is observable in the outputs, not just a counter.
+    let mut v1_cfg = zoo::load("mnist")?;
+    v1_cfg.name = "mnist_v1".into();
+    let swapped = Arc::new(Network::new(v1_cfg, 32)?);
+
+    let mut options = ServeOptions::default();
+    options.batch.max_batch = 4;
+    options.batch.window = Duration::from_micros(1500);
+    options.admission_depth = 512;
+    println!(
+        "soak: {} interactive + {} standard + {} batch (bursts of {burst}) \
+         + {} storm requests per net pair, one mid-run hot-swap{}",
+        2 * n_interactive,
+        2 * n_standard,
+        2 * n_batch,
+        n_storm,
+        if short { " [--short]" } else { "" }
+    );
+
+    let server = Arc::new(Server::start(nets.clone(), options)?);
+    let mut clients = Vec::new();
+
+    // Steady interactive foreground: one stream per net, generous
+    // deadline (it exists to exercise EDF + headroom tracking, not to
+    // expire on a loaded CI box).
+    for (stream_id, net_id) in [(0usize, 0usize), (1, 1)] {
+        let server = Arc::clone(&server);
+        let mut stream = RequestStream::new(
+            stream_id,
+            net_id,
+            Arc::clone(&nets[net_id]),
+            300.0,
+            n_interactive as u64,
+        )
+        .with_tier(SloTier::Interactive)
+        .with_deadline(Duration::from_secs(30));
+        clients.push(std::thread::spawn(move || {
+            let (mut ok, mut shed) = (0u64, 0u64);
+            while let Some((gap, req)) = stream.next_arrival() {
+                std::thread::sleep(gap);
+                if server.submit(req) {
+                    ok += 1;
+                } else {
+                    shed += 1;
+                }
+            }
+            (ok, shed)
+        }));
+    }
+
+    // Slow standard-tier drip: the default tier, no deadline.
+    for (stream_id, net_id) in [(2usize, 0usize), (3, 1)] {
+        let server = Arc::clone(&server);
+        let mut stream = RequestStream::new(
+            stream_id,
+            net_id,
+            Arc::clone(&nets[net_id]),
+            100.0,
+            n_standard as u64,
+        );
+        clients.push(std::thread::spawn(move || {
+            let (mut ok, mut shed) = (0u64, 0u64);
+            while let Some((gap, req)) = stream.next_arrival() {
+                std::thread::sleep(gap);
+                if server.submit(req) {
+                    ok += 1;
+                } else {
+                    shed += 1;
+                }
+            }
+            (ok, shed)
+        }));
+    }
+
+    // Bursty batch-tier floods: submit back-to-back bursts, then idle —
+    // the load shape that MUST shed only in its own lanes.
+    for (stream_id, net_id) in [(4usize, 0usize), (5, 1)] {
+        let server = Arc::clone(&server);
+        let mut stream = RequestStream::new(
+            stream_id,
+            net_id,
+            Arc::clone(&nets[net_id]),
+            1e6, // gaps ignored below; the burst structure is explicit
+            n_batch as u64,
+        )
+        .with_tier(SloTier::Batch);
+        clients.push(std::thread::spawn(move || {
+            let (mut ok, mut shed) = (0u64, 0u64);
+            let mut in_burst = 0usize;
+            while let Some((_, req)) = stream.next_arrival() {
+                if server.submit(req) {
+                    ok += 1;
+                } else {
+                    shed += 1;
+                }
+                in_burst += 1;
+                if in_burst == burst {
+                    in_burst = 0;
+                    std::thread::sleep(Duration::from_millis(40));
+                }
+            }
+            (ok, shed)
+        }));
+    }
+
+    // Mid-run: swap net 1's weights with zero downtime, then fire the
+    // deadline storm at the swapped network — tight budgets under a fresh
+    // version, all of it racing the still-running drip and floods.  The
+    // storm (≤96 requests) fits the interactive lane (depth 512), so the
+    // foreground-never-shed envelope below stays a fair assertion.
+    std::thread::sleep(Duration::from_millis(if short { 120 } else { 400 }));
+    let version = server.hot_swap(1, Arc::clone(&swapped))?;
+    anyhow::ensure!(version == 1, "expected the first swap to mint version 1");
+    println!("hot-swapped net 1 → version {version} (mid-run)");
+
+    {
+        let server = Arc::clone(&server);
+        let net = Arc::clone(&nets[1]);
+        clients.push(std::thread::spawn(move || {
+            let (mut ok, mut shed) = (0u64, 0u64);
+            for seq in 0..n_storm as u64 {
+                let req = Request::new(90, seq, 1, net.make_input(frame_tag(90, seq)))
+                    .with_tier(SloTier::Interactive)
+                    .with_deadline(Duration::from_millis(3));
+                if server.submit(req) {
+                    ok += 1;
+                } else {
+                    shed += 1;
+                }
+            }
+            (ok, shed)
+        }));
+    }
+
+    let (mut admitted, mut client_shed) = (0u64, 0u64);
+    for c in clients {
+        let (ok, shed) = c.join().expect("client thread");
+        admitted += ok;
+        client_shed += shed;
+    }
+
+    // Tail: a few post-join standard requests against net 1 guarantee at
+    // least one response is served under the swapped version even if every
+    // storm request expired.
+    let t0 = Instant::now();
+    for seq in 0..4u64 {
+        let req = Request::new(91, seq, 1, nets[1].make_input(frame_tag(91, seq)));
+        if server.submit(req) {
+            admitted += 1;
+        } else {
+            client_shed += 1;
+        }
+    }
+
+    let server = match Arc::try_unwrap(server) {
+        Ok(s) => s,
+        Err(_) => anyhow::bail!("client threads still hold server handles"),
+    };
+    let (stats, responses) = server.shutdown()?;
+    println!("drained the tail + shutdown in {:.0?}", t0.elapsed());
+    println!("\n=== soak report ===");
+    print!("{}", stats.render());
+
+    // --- Correctness across the swap: each response must match the
+    // reference forward of the version it was pinned to.
+    let mut max_err = 0f32;
+    let mut v1_served = 0u64;
+    for resp in &responses {
+        let input = nets[resp.net_id].make_input(resp.frame);
+        let reference = if resp.net_id == 1 && resp.version == 1 {
+            v1_served += 1;
+            swapped.forward_reference(&input)
+        } else {
+            nets[resp.net_id].forward_reference(&input)
+        };
+        max_err = max_err.max(resp.output.max_abs_diff(&reference));
+    }
+    println!("max |err|      : {max_err:.2e} vs per-version reference forwards");
+    assert!(max_err < 1e-3, "serving diverged from reference: {max_err}");
+    assert!(v1_served >= 1, "no response was served under the swapped weights");
+    assert_eq!(stats.hot_swaps, 1);
+
+    // --- Per-tier envelopes.
+    let (i, s, b) = (
+        SloTier::Interactive.index(),
+        SloTier::Standard.index(),
+        SloTier::Batch.index(),
+    );
+    assert_eq!(
+        stats.shed_by_tier[i], 0,
+        "interactive traffic shed while batch lanes flooded"
+    );
+    assert_eq!(stats.shed_by_tier[s], 0, "standard drip shed");
+    assert_eq!(stats.shed, client_shed, "shed ledger vs client-observed rejects");
+    assert_eq!(
+        stats.completed + stats.expired,
+        admitted,
+        "lost requests: {admitted} admitted, {} completed, {} expired",
+        stats.completed,
+        stats.expired
+    );
+    assert_eq!(stats.completed as usize, responses.len());
+    // Tier precedence must be visible in the tail whenever the floods
+    // actually backlogged the batch lanes behind foreground traffic.
+    if stats.completed_by_tier[b] > 0 && stats.completed_by_tier[i] > 0 {
+        assert!(
+            stats.tier_p99_ms[i] <= stats.tier_p99_ms[b],
+            "interactive p99 {:.2}ms above batch p99 {:.2}ms",
+            stats.tier_p99_ms[i],
+            stats.tier_p99_ms[b]
+        );
+    }
+    println!(
+        "envelopes held: foreground shed 0, {} admitted fully accounted, \
+         interactive p99 {:.2}ms ≤ batch p99 {:.2}ms, {} responses on v1",
+        admitted, stats.tier_p99_ms[i], stats.tier_p99_ms[b], v1_served
+    );
+    if stats.expired_by_tier[i] > 0 {
+        println!(
+            "deadline storm: {} of {} storm requests expired in-lane (counted, not lost)",
+            stats.expired_by_tier[i], n_storm
+        );
+    }
+    if stats.window_shrinks + stats.window_widens > 0 {
+        println!(
+            "adaptive windows: {} shrinks / {} widens under the soak",
+            stats.window_shrinks, stats.window_widens
+        );
+    }
+    Ok(())
+}

@@ -18,7 +18,7 @@ use synergy::mm::job::JobClass;
 use synergy::mm::operand::copied_bytes;
 use synergy::nn::Network;
 use synergy::rt::{self, RtOptions};
-use synergy::serve::{RequestStream, ServeOptions, Server, ServerStats};
+use synergy::serve::{RequestStream, ServeOptions, Server, ServerStats, SloTier};
 use synergy::tensor::Tensor;
 use synergy::util::argparse::Args;
 use synergy::util::bench::{fmt, Table};
@@ -89,12 +89,34 @@ fn config_json(label: &str, stats: &ServerStats) -> Json {
             0.0
         }
     };
+    // Per-SLO-tier latency tail + shed/expiry accounting (all-Standard
+    // runs report zeros for the other tiers).
+    let tiers = obj(
+        SloTier::ALL
+            .iter()
+            .map(|t| {
+                let i = t.index();
+                (
+                    t.label(),
+                    obj(vec![
+                        ("p50_ms", num(stats.tier_p50_ms[i])),
+                        ("p99_ms", num(stats.tier_p99_ms[i])),
+                        ("completed", num(stats.completed_by_tier[i] as f64)),
+                        ("shed", num(stats.shed_by_tier[i] as f64)),
+                        ("expired", num(stats.expired_by_tier[i] as f64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
     obj(vec![
         ("configuration", s(label)),
         ("throughput_rps", num(stats.throughput_rps)),
         ("p50_ms", num(stats.p50_ms)),
         ("p99_ms", num(stats.p99_ms)),
         ("mean_batch", num(stats.mean_batch)),
+        ("shed", num(stats.shed as f64)),
+        ("tiers", tiers),
         ("jobs_executed", num(stats.jobs_executed as f64)),
         ("fused_fc_rows", num(stats.fused_fc_rows as f64)),
         (

@@ -113,6 +113,25 @@ pub struct ServeCfg {
     /// payload (content-addressed packed panels / prepacked weights that
     /// peers reference with descriptor-only CONV frames).
     pub shard_cache_mb: usize,
+    /// Starvation-proof escape ratio for the batch SLO tier: every Nth
+    /// admission pop serves the batch lane even while higher tiers have
+    /// work (strict precedence otherwise).  0 disables the escape —
+    /// batch work then only runs when higher lanes are drained.
+    pub batch_escape_every: u64,
+    /// Floor (µs) the adaptive per-tier batch window can shrink to when a
+    /// tier's tail deadline headroom vanishes.
+    pub batch_window_min_us: u64,
+    /// Rolling sample count of the per-tier deadline-headroom estimator
+    /// that drives the adaptive batch window (≥ 1).
+    pub headroom_samples: usize,
+    /// Default latency budget (ms) stamped on interactive-tier requests
+    /// that arrive without an explicit deadline.  0 = no default.
+    pub interactive_deadline_ms: u64,
+    /// Default latency budget (ms) for standard-tier requests.  0 (the
+    /// default) preserves the original no-deadline semantics.
+    pub standard_deadline_ms: u64,
+    /// Default latency budget (ms) for batch-tier requests.  0 = none.
+    pub batch_deadline_ms: u64,
 }
 
 impl Default for ServeCfg {
@@ -125,6 +144,12 @@ impl Default for ServeCfg {
             steal_min_victim: 0,
             probe_interval_ms: 25,
             shard_cache_mb: 64,
+            batch_escape_every: 8,
+            batch_window_min_us: 100,
+            headroom_samples: 64,
+            interactive_deadline_ms: 50,
+            standard_deadline_ms: 0,
+            batch_deadline_ms: 0,
         }
     }
 }
@@ -216,6 +241,16 @@ impl HwConfig {
         }
         if self.serving.admission_depth == 0 {
             bail!("serving admission_depth must be ≥ 1");
+        }
+        if self.serving.headroom_samples == 0 {
+            bail!("serving headroom_samples must be ≥ 1");
+        }
+        if self.serving.batch_window_min_us > self.serving.batch_window_us {
+            bail!(
+                "serving batch_window_min_us ({}) must not exceed batch_window_us ({})",
+                self.serving.batch_window_min_us,
+                self.serving.batch_window_us
+            );
         }
         if self.big_neon_threads == 0 {
             bail!("big_neon_threads must be ≥ 1");
@@ -367,6 +402,18 @@ impl HwConfig {
                     "steal_min_victim" => serving.steal_min_victim = parse_usize()?,
                     "probe_interval_ms" => serving.probe_interval_ms = parse_usize()? as u64,
                     "shard_cache_mb" => serving.shard_cache_mb = parse_usize()?,
+                    "batch_escape_every" => serving.batch_escape_every = parse_usize()? as u64,
+                    "batch_window_min_us" => {
+                        serving.batch_window_min_us = parse_usize()? as u64
+                    }
+                    "headroom_samples" => serving.headroom_samples = parse_usize()?,
+                    "interactive_deadline_ms" => {
+                        serving.interactive_deadline_ms = parse_usize()? as u64
+                    }
+                    "standard_deadline_ms" => {
+                        serving.standard_deadline_ms = parse_usize()? as u64
+                    }
+                    "batch_deadline_ms" => serving.batch_deadline_ms = parse_usize()? as u64,
                     other => bail!("{name}:{}: unknown serving key {other}", lineno + 1),
                 },
                 Sec::None => bail!("{name}:{}: key outside a section", lineno + 1),
@@ -470,6 +517,12 @@ drain_extra = 3
 steal_min_victim = 0
 probe_interval_ms = 25
 shard_cache_mb = 64
+batch_escape_every = 8
+batch_window_min_us = 100
+headroom_samples = 64
+interactive_deadline_ms = 50
+standard_deadline_ms = 0
+batch_deadline_ms = 0
 ";
 
 #[cfg(test)]
@@ -536,6 +589,12 @@ drain_extra = 5
 steal_min_victim = 6
 probe_interval_ms = 10
 shard_cache_mb = 16
+batch_escape_every = 4
+batch_window_min_us = 50
+headroom_samples = 32
+interactive_deadline_ms = 20
+standard_deadline_ms = 200
+batch_deadline_ms = 5000
 ";
         let hw = HwConfig::parse("t", text).unwrap();
         assert_eq!(hw.serving.max_batch, 8);
@@ -545,12 +604,24 @@ shard_cache_mb = 16
         assert_eq!(hw.serving.steal_min_victim, 6);
         assert_eq!(hw.serving.probe_interval_ms, 10);
         assert_eq!(hw.serving.shard_cache_mb, 16);
+        assert_eq!(hw.serving.batch_escape_every, 4);
+        assert_eq!(hw.serving.batch_window_min_us, 50);
+        assert_eq!(hw.serving.headroom_samples, 32);
+        assert_eq!(hw.serving.interactive_deadline_ms, 20);
+        assert_eq!(hw.serving.standard_deadline_ms, 200);
+        assert_eq!(hw.serving.batch_deadline_ms, 5000);
 
         let mut bad = HwConfig::default_zc702();
         bad.serving.max_batch = 0;
         assert!(bad.validate().is_err());
         let mut bad = HwConfig::default_zc702();
         bad.serving.admission_depth = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = HwConfig::default_zc702();
+        bad.serving.headroom_samples = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = HwConfig::default_zc702();
+        bad.serving.batch_window_min_us = bad.serving.batch_window_us + 1;
         assert!(bad.validate().is_err());
         assert!(HwConfig::parse("t", "[serving]\nbogus = 1\n").is_err());
     }

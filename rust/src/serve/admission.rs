@@ -1,4 +1,4 @@
-//! Bounded, per-network-lane, stream-fair admission control with
+//! Bounded, SLO-tiered, per-network-lane admission control with
 //! shed-on-overload semantics.
 //!
 //! A serving front-end that blocks producers on overload just moves the
@@ -7,31 +7,87 @@
 //! reports), and the consumer side drains fairly so one chatty client
 //! cannot starve the others.
 //!
-//! Admission is organized as **one lane per network** (created on first
-//! use), each with its own depth bound.  A stalled network therefore
-//! backs up — and sheds — only its own lane, while the other networks'
-//! traffic keeps flowing: the consumer passes an eligibility filter
-//! (`pop_timeout_eligible`) naming the networks whose pipelines currently
-//! have capacity, and the pop round-robins across eligible lanes, then
-//! across streams within the lane.
+//! Admission is organized as **one lane per (network, SLO tier)**, created
+//! on first use, each with its own depth bound — so bulk batch-tier
+//! traffic can fill its own lane to the brim without ever causing an
+//! interactive-tier shed (the tiers never share a depth budget).  Pops
+//! follow strict tier precedence ([`SloTier::ALL`] order) with one escape
+//! hatch: every `escape_every`-th pop serves the batch lane even while
+//! higher tiers have work, so bulk traffic is starvation-proof under a
+//! sustained foreground flood.
+//!
+//! Inside a lane, requests that carry a deadline pop in EDF order
+//! (earliest absolute due time first, arrival order as the deterministic
+//! tie-break) and always precede deadline-less requests (a finite due time
+//! sorts before an infinite one); deadline-less requests keep the original
+//! stream-fair round-robin.  Requests whose deadline already lapsed are
+//! pruned **at pop time** — counted per tier, never handed to the batcher.
+//!
+//! A stalled network backs up — and sheds — only its own lanes, while the
+//! other networks' traffic keeps flowing: the consumer passes an
+//! eligibility filter (`pop_timeout_eligible`) naming the networks whose
+//! pipelines currently have capacity, and the pop round-robins across
+//! eligible networks within the chosen tier.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::ops::Bound;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use super::request::Request;
+use super::request::{Request, SloTier};
+use super::stats::TierCounts;
 
-/// One network's admission lane.
+/// EDF heap entry: max-heap on reversed (due, arrival) yields the
+/// earliest due time, oldest arrival first on ties — deterministic for
+/// the virtual-time tests.
+struct EdfEntry {
+    due: Instant,
+    arrival: u64,
+    req: Request,
+}
+
+impl PartialEq for EdfEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.arrival == other.arrival
+    }
+}
+
+impl Eq for EdfEntry {}
+
+impl PartialOrd for EdfEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EdfEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .due
+            .cmp(&self.due)
+            .then_with(|| other.arrival.cmp(&self.arrival))
+    }
+}
+
+/// Stream-fair FIFO for deadline-less requests: round-robin across
+/// streams, FIFO within a stream.
 #[derive(Default)]
-struct Lane {
+struct StreamFair {
     per_stream: BTreeMap<usize, VecDeque<Request>>,
     len: usize,
     last_served: Option<usize>,
 }
 
-impl Lane {
+impl StreamFair {
+    fn push(&mut self, req: Request) {
+        self.per_stream
+            .entry(req.stream_id)
+            .or_default()
+            .push_back(req);
+        self.len += 1;
+    }
+
     /// Round-robin across streams (within a stream, FIFO).
     fn take_fair(&mut self) -> Request {
         let next_sid = match self.last_served {
@@ -61,62 +117,123 @@ impl Lane {
     }
 }
 
+/// One (network, tier) lane: EDF heap for deadlined requests, stream-fair
+/// FIFO for the rest.  Deadlined requests always pop first — a finite due
+/// time precedes an infinite one.
+#[derive(Default)]
+struct TierLane {
+    edf: BinaryHeap<EdfEntry>,
+    fair: StreamFair,
+}
+
+impl TierLane {
+    fn len(&self) -> usize {
+        self.edf.len() + self.fair.len
+    }
+
+    fn push(&mut self, req: Request, arrival: u64) {
+        match req.due() {
+            Some(due) => self.edf.push(EdfEntry { due, arrival, req }),
+            None => self.fair.push(req),
+        }
+    }
+
+    fn pop(&mut self) -> Option<Request> {
+        if let Some(entry) = self.edf.pop() {
+            return Some(entry.req);
+        }
+        (self.fair.len > 0).then(|| self.fair.take_fair())
+    }
+}
+
+/// One network's lanes, one per SLO tier.
+#[derive(Default)]
+struct NetLane {
+    tiers: [TierLane; SloTier::COUNT],
+}
+
 struct Inner {
-    lanes: BTreeMap<usize, Lane>,
+    lanes: BTreeMap<usize, NetLane>,
     total_len: usize,
-    last_served_net: Option<usize>,
+    /// Per-tier network round-robin cursor.
+    last_served_net: [Option<usize>; SloTier::COUNT],
+    /// Live requests handed out (escape-ratio accounting; pruned
+    /// expirations don't count — they never reach the batcher).
+    pops: u64,
+    /// Monotonic admission counter (EDF tie-break).
+    arrivals: u64,
     closed: bool,
 }
 
 /// MPMC admission queue: producers are client streams, the consumer is the
-/// micro-batcher thread.  Capacity is enforced *per network lane*.
+/// micro-batcher thread.  Capacity is enforced *per (network, tier) lane*.
 pub struct AdmissionQueue {
     inner: Mutex<Inner>,
     not_empty: Condvar,
     lane_capacity: usize,
+    escape_every: u64,
     admitted: AtomicU64,
-    shed: AtomicU64,
+    shed: [AtomicU64; SloTier::COUNT],
+    expired: [AtomicU64; SloTier::COUNT],
 }
 
 impl AdmissionQueue {
-    /// `lane_capacity` bounds each network's lane independently.
+    /// `lane_capacity` bounds each (network, tier) lane independently.
+    /// The batch-lane escape ratio defaults to the platform `[serving]`
+    /// default; override it with [`AdmissionQueue::with_escape_every`].
     pub fn new(lane_capacity: usize) -> AdmissionQueue {
         AdmissionQueue {
             inner: Mutex::new(Inner {
                 lanes: BTreeMap::new(),
                 total_len: 0,
-                last_served_net: None,
+                last_served_net: [None; SloTier::COUNT],
+                pops: 0,
+                arrivals: 0,
                 closed: false,
             }),
             not_empty: Condvar::new(),
             lane_capacity: lane_capacity.max(1),
+            escape_every: crate::config::ServeCfg::default().batch_escape_every,
             admitted: AtomicU64::new(0),
-            shed: AtomicU64::new(0),
+            shed: std::array::from_fn(|_| AtomicU64::new(0)),
+            expired: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 
-    /// Admit or shed.  Returns false when the request's network lane is
-    /// full or the queue is closed (the request is dropped and counted —
-    /// overload never blocks a client, and never spills into other
-    /// networks' lanes).
+    /// Serve the batch lane on every `n`-th pop even while higher tiers
+    /// have work (0 = strict precedence, batch runs only when the higher
+    /// lanes are drained).
+    pub fn with_escape_every(mut self, n: u64) -> AdmissionQueue {
+        self.escape_every = n;
+        self
+    }
+
+    pub fn escape_every(&self) -> u64 {
+        self.escape_every
+    }
+
+    /// Admit or shed.  Returns false when the request's (network, tier)
+    /// lane is full or the queue is closed (the request is dropped and
+    /// counted — overload never blocks a client, never spills into other
+    /// networks' lanes, and never lets bulk tiers displace foreground
+    /// tiers: each tier owns its own depth budget).
     pub fn submit(&self, req: Request) -> bool {
+        let ti = req.tier.index();
         let mut g = self.inner.lock().unwrap();
         if g.closed {
             drop(g);
-            self.shed.fetch_add(1, Ordering::Relaxed);
+            self.shed[ti].fetch_add(1, Ordering::Relaxed);
             return false;
         }
+        g.arrivals += 1;
+        let arrival = g.arrivals;
         let lane = g.lanes.entry(req.net_id).or_default();
-        if lane.len >= self.lane_capacity {
+        if lane.tiers[ti].len() >= self.lane_capacity {
             drop(g);
-            self.shed.fetch_add(1, Ordering::Relaxed);
+            self.shed[ti].fetch_add(1, Ordering::Relaxed);
             return false;
         }
-        lane.per_stream
-            .entry(req.stream_id)
-            .or_default()
-            .push_back(req);
-        lane.len += 1;
+        lane.tiers[ti].push(req, arrival);
         g.total_len += 1;
         drop(g);
         self.admitted.fetch_add(1, Ordering::Relaxed);
@@ -124,13 +241,13 @@ impl AdmissionQueue {
         true
     }
 
-    /// Fair pop across all lanes: `Ok(None)` = closed and drained,
+    /// Tiered pop across all lanes: `Ok(None)` = closed and drained,
     /// `Err(())` = timed out.
     pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<Request>, ()> {
         self.pop_timeout_filtered(timeout, |_| true)
     }
 
-    /// Fair pop restricted to eligible networks (`eligible[net_id]`;
+    /// Tiered pop restricted to eligible networks (`eligible[net_id]`;
     /// nets beyond the slice count as eligible).  Requests of ineligible
     /// lanes stay queued — their backpressure never blocks this pop.
     pub fn pop_timeout_eligible(
@@ -139,6 +256,21 @@ impl AdmissionQueue {
         eligible: &[bool],
     ) -> Result<Option<Request>, ()> {
         self.pop_timeout_filtered(timeout, |net| *eligible.get(net).unwrap_or(&true))
+    }
+
+    /// Non-blocking pop at an explicit instant — the virtual-time entry
+    /// point the deterministic tier tests and the tiered-arrival
+    /// simulator drive (expiry pruning happens against `now`, not the
+    /// wall clock).
+    pub fn try_pop_at(&self, now: Instant) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        self.take_at(&mut g, &|_| true, now)
+    }
+
+    /// [`AdmissionQueue::try_pop_at`] with a network eligibility filter.
+    pub fn try_pop_at_eligible(&self, now: Instant, eligible: &[bool]) -> Option<Request> {
+        let mut g = self.inner.lock().unwrap();
+        self.take_at(&mut g, &|net| *eligible.get(net).unwrap_or(&true), now)
     }
 
     fn pop_timeout_filtered(
@@ -151,16 +283,16 @@ impl AdmissionQueue {
         // takeable request, and re-arming the full timeout on each such
         // wakeup would postpone the caller's batch-window deadline for as
         // long as the stalled lane keeps receiving traffic.
-        let deadline = std::time::Instant::now() + timeout;
+        let deadline = Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(req) = take_fair(&mut g, &eligible) {
+            if let Some(req) = self.take_at(&mut g, &eligible, Instant::now()) {
                 return Ok(Some(req));
             }
             if g.closed && g.total_len == 0 {
                 return Ok(None);
             }
-            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
                 return Err(());
             }
@@ -169,18 +301,86 @@ impl AdmissionQueue {
         }
     }
 
+    /// The tiered take: pick the tier (strict precedence, batch-escape
+    /// every Nth pop), round-robin across eligible networks within it,
+    /// EDF/stream-fair within the lane — and prune already-expired
+    /// requests on the way out (counted per tier, never returned, never
+    /// charged against the escape ratio).
+    fn take_at(
+        &self,
+        g: &mut Inner,
+        eligible: &impl Fn(usize) -> bool,
+        now: Instant,
+    ) -> Option<Request> {
+        loop {
+            if g.total_len == 0 {
+                return None;
+            }
+            let tier_nonempty = |g: &Inner, ti: usize| {
+                g.lanes
+                    .iter()
+                    .any(|(id, lane)| lane.tiers[ti].len() > 0 && eligible(*id))
+            };
+            let batch_ti = SloTier::Batch.index();
+            let escape_due =
+                self.escape_every > 0 && (g.pops + 1) % self.escape_every == 0;
+            let ti = if escape_due && tier_nonempty(g, batch_ti) {
+                batch_ti
+            } else {
+                match (0..SloTier::COUNT).find(|&ti| tier_nonempty(g, ti)) {
+                    Some(ti) => ti,
+                    None => return None,
+                }
+            };
+            let candidate = |(id, lane): (&usize, &NetLane)| -> Option<usize> {
+                (lane.tiers[ti].len() > 0 && eligible(*id)).then_some(*id)
+            };
+            let net = match g.last_served_net[ti] {
+                Some(last) => g
+                    .lanes
+                    .range((Bound::Excluded(last), Bound::Unbounded))
+                    .find_map(candidate)
+                    .or_else(|| g.lanes.iter().find_map(candidate)),
+                None => g.lanes.iter().find_map(candidate),
+            }
+            .expect("non-empty tier implies a candidate lane");
+            let lane = g.lanes.get_mut(&net).expect("lane present");
+            let req = lane.tiers[ti].pop().expect("candidate lane non-empty");
+            g.last_served_net[ti] = Some(net);
+            g.total_len -= 1;
+            if req.is_expired(now) {
+                // Prune at pop: a lapsed request never reaches the
+                // batcher and never consumes a served-pop slot.
+                self.expired[ti].fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            g.pops += 1;
+            return Some(req);
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().total_len
     }
 
-    /// Queued requests of one network's lane.
+    /// Queued requests across one network's tier lanes.
     pub fn lane_len(&self, net_id: usize) -> usize {
         self.inner
             .lock()
             .unwrap()
             .lanes
             .get(&net_id)
-            .map_or(0, |l| l.len)
+            .map_or(0, |l| l.tiers.iter().map(|t| t.len()).sum())
+    }
+
+    /// Queued requests of one (network, tier) lane.
+    pub fn tier_len(&self, net_id: usize, tier: SloTier) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .lanes
+            .get(&net_id)
+            .map_or(0, |l| l.tiers[tier.index()].len())
     }
 
     pub fn is_empty(&self) -> bool {
@@ -197,34 +397,27 @@ impl AdmissionQueue {
         self.admitted.load(Ordering::Relaxed)
     }
 
+    /// Total sheds across tiers.
     pub fn shed_count(&self) -> u64 {
-        self.shed.load(Ordering::Relaxed)
+        self.shed.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
-}
 
-/// Pick the next eligible non-empty lane after `last_served_net`
-/// (wrapping), then round-robin within it.  Returns None when no eligible
-/// lane holds a request.
-fn take_fair(g: &mut Inner, eligible: &impl Fn(usize) -> bool) -> Option<Request> {
-    if g.total_len == 0 {
-        return None;
+    pub fn shed_by_tier(&self) -> [u64; SloTier::COUNT] {
+        std::array::from_fn(|i| self.shed[i].load(Ordering::Relaxed))
     }
-    let candidate = |(id, lane): (&usize, &Lane)| -> Option<usize> {
-        (lane.len > 0 && eligible(*id)).then_some(*id)
-    };
-    let net = match g.last_served_net {
-        Some(last) => g
-            .lanes
-            .range((Bound::Excluded(last), Bound::Unbounded))
-            .find_map(candidate)
-            .or_else(|| g.lanes.iter().find_map(candidate)),
-        None => g.lanes.iter().find_map(candidate),
-    }?;
-    let lane = g.lanes.get_mut(&net).expect("lane present");
-    let req = lane.take_fair();
-    g.last_served_net = Some(net);
-    g.total_len -= 1;
-    Some(req)
+
+    /// Requests pruned at pop time because their deadline had lapsed.
+    pub fn expired_by_tier(&self) -> [u64; SloTier::COUNT] {
+        std::array::from_fn(|i| self.expired[i].load(Ordering::Relaxed))
+    }
+
+    /// Per-tier shed + pop-pruned-expiry snapshot for the stats report.
+    pub fn tier_counts(&self) -> TierCounts {
+        TierCounts {
+            shed: self.shed_by_tier(),
+            expired: self.expired_by_tier(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -240,6 +433,10 @@ mod tests {
         Request::new(stream_id, seq, net_id, Tensor::scalar(0.0))
     }
 
+    fn req_tier(tier: SloTier, stream_id: usize, seq: u64) -> Request {
+        Request::new(stream_id, seq, 0, Tensor::scalar(0.0)).with_tier(tier)
+    }
+
     fn pop(q: &AdmissionQueue) -> Request {
         q.pop_timeout(Duration::from_millis(100)).unwrap().unwrap()
     }
@@ -252,6 +449,7 @@ mod tests {
         assert!(!q.submit(req(0, 2)), "third submit must shed");
         assert_eq!(q.admitted_count(), 2);
         assert_eq!(q.shed_count(), 1);
+        assert_eq!(q.shed_by_tier(), [0, 1, 0], "standard-tier shed");
         // Draining frees capacity again.
         let _ = pop(&q);
         assert!(q.submit(req(0, 3)));
@@ -270,6 +468,108 @@ mod tests {
         assert_eq!(q.lane_len(0), 2);
         assert_eq!(q.lane_len(1), 2);
         assert_eq!(q.len(), 4);
+    }
+
+    #[test]
+    fn tier_lanes_isolate_depth_budgets() {
+        let q = AdmissionQueue::new(2);
+        // Batch tier floods its lane full…
+        assert!(q.submit(req_tier(SloTier::Batch, 0, 0)));
+        assert!(q.submit(req_tier(SloTier::Batch, 0, 1)));
+        assert!(!q.submit(req_tier(SloTier::Batch, 0, 2)), "batch lane full");
+        // …and interactive still has its own untouched depth budget.
+        assert!(q.submit(req_tier(SloTier::Interactive, 1, 0)));
+        assert!(q.submit(req_tier(SloTier::Interactive, 1, 1)));
+        assert_eq!(q.tier_len(0, SloTier::Batch), 2);
+        assert_eq!(q.tier_len(0, SloTier::Interactive), 2);
+        assert_eq!(q.shed_by_tier(), [0, 0, 1]);
+    }
+
+    #[test]
+    fn strict_tier_precedence_between_escapes() {
+        // Escape disabled: interactive > standard > batch, always.
+        let q = AdmissionQueue::new(16).with_escape_every(0);
+        q.submit(req_tier(SloTier::Batch, 0, 0));
+        q.submit(req_tier(SloTier::Standard, 1, 0));
+        q.submit(req_tier(SloTier::Interactive, 2, 0));
+        q.submit(req_tier(SloTier::Interactive, 2, 1));
+        let tiers: Vec<SloTier> = (0..4).map(|_| pop(&q).tier).collect();
+        assert_eq!(
+            tiers,
+            vec![
+                SloTier::Interactive,
+                SloTier::Interactive,
+                SloTier::Standard,
+                SloTier::Batch
+            ]
+        );
+    }
+
+    #[test]
+    fn batch_escape_serves_every_nth_pop() {
+        let q = AdmissionQueue::new(64).with_escape_every(3);
+        for seq in 0..6 {
+            q.submit(req_tier(SloTier::Interactive, 0, seq));
+        }
+        for seq in 0..2 {
+            q.submit(req_tier(SloTier::Batch, 1, seq));
+        }
+        let tiers: Vec<SloTier> = (0..8).map(|_| pop(&q).tier).collect();
+        // Pops 3 and 6 (1-indexed) are escape slots → batch.
+        assert_eq!(tiers[2], SloTier::Batch, "order: {tiers:?}");
+        assert_eq!(tiers[5], SloTier::Batch, "order: {tiers:?}");
+        assert_eq!(
+            tiers.iter().filter(|t| **t == SloTier::Batch).count(),
+            2,
+            "only the escape slots serve batch while interactive has work"
+        );
+    }
+
+    #[test]
+    fn edf_orders_deadlined_before_fair_within_a_lane() {
+        let q = AdmissionQueue::new(16).with_escape_every(0);
+        let now = Instant::now();
+        // Same tier, mixed deadlines: EDF order, deadline-less last.
+        let mut a = req(0, 0);
+        a.submitted = now;
+        a.deadline = Some(Duration::from_secs(300));
+        let mut b = req(0, 1);
+        b.submitted = now;
+        b.deadline = Some(Duration::from_secs(100));
+        let c = req(1, 2); // no deadline
+        q.submit(a);
+        q.submit(c);
+        q.submit(b);
+        let seqs: Vec<u64> = (0..3).map(|_| pop(&q).seq).collect();
+        assert_eq!(seqs, vec![1, 0, 2], "earliest due first, fair FIFO last");
+    }
+
+    #[test]
+    fn expired_pruned_at_pop_and_counted_per_tier() {
+        let q = AdmissionQueue::new(16);
+        let t0 = Instant::now();
+        // Half-expired lane: seq 0/2 lapse before the pop instant, 1/3 live.
+        for seq in 0..4 {
+            let mut r = req_tier(SloTier::Interactive, 0, seq);
+            r.submitted = t0;
+            r.deadline = Some(if seq % 2 == 0 {
+                Duration::from_millis(10)
+            } else {
+                Duration::from_secs(3600)
+            });
+            q.submit(r);
+        }
+        let later = t0 + Duration::from_millis(50);
+        let mut live = Vec::new();
+        while let Some(r) = q.try_pop_at(later) {
+            live.push(r.seq);
+        }
+        assert_eq!(live, vec![1, 3], "only unexpired requests surface");
+        assert_eq!(q.expired_by_tier(), [2, 0, 0]);
+        assert_eq!(q.len(), 0, "pruned requests leave the queue");
+        let counts = q.tier_counts();
+        assert_eq!(counts.expired, [2, 0, 0]);
+        assert_eq!(counts.shed, [0, 0, 0]);
     }
 
     #[test]

@@ -1,22 +1,50 @@
-//! Per-network micro-batching: coalesce compatible requests into batched
-//! jobs before they enter the layer pipeline.
+//! Per-(network, SLO-tier) micro-batching: coalesce compatible requests
+//! into batched jobs before they enter the layer pipeline.
 //!
 //! Policy is the classic size-or-time rule: a batch is dispatched as soon
 //! as it reaches the network's `max_batch`, or once its oldest member has
-//! waited out the batching `window` — bounded added latency in exchange
-//! for better accelerator occupancy.
+//! waited out the tier's batching window — bounded added latency in
+//! exchange for better accelerator occupancy.
+//!
+//! The window is **adaptive per tier**: the batcher thread feeds each
+//! dispatched request's *deadline headroom* (ms of budget left) into a
+//! rolling low-quantile estimator ([`crate::util::stats::RollingQuantile`]).
+//! When a tier's tail headroom shrinks to within a couple of windows —
+//! batching delay is now eating the SLO budget — the tier's window halves
+//! (down to `window_min`); when the tail recovers with ample slack, it
+//! doubles back toward the configured base.  Tiers adapt independently:
+//! an interactive deadline storm tightens only the interactive window
+//! while batch-tier work keeps amortizing at full width.
 
 use std::time::{Duration, Instant};
 
-use super::request::Request;
+use crate::util::stats::RollingQuantile;
+
+use super::request::{Request, SloTier};
+
+/// Samples required before the window adapts (guards the estimator's
+/// warm-up jitter).
+const ADAPT_MIN_SAMPLES: usize = 8;
+/// Shrink when the low-quantile headroom falls within this many current
+/// windows.
+const SHRINK_HEADROOM_WINDOWS: f64 = 2.0;
+/// Re-widen when the low-quantile headroom exceeds this many *base*
+/// windows — comfortably above the shrink threshold, so a steady tail
+/// cannot oscillate the window.
+const WIDEN_HEADROOM_WINDOWS: f64 = 8.0;
 
 /// Platform-wide batching policy (per-network caps may lower `max_batch`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BatchCfg {
     /// Upper bound on requests coalesced into one batch.
     pub max_batch: usize,
-    /// Max time the oldest request of a partial batch waits.
+    /// Base (and maximum) time the oldest request of a partial batch
+    /// waits; the adaptive policy only ever shrinks below this.
     pub window: Duration,
+    /// Floor the adaptive per-tier window can shrink to.
+    pub window_min: Duration,
+    /// Rolling sample count of the per-tier deadline-headroom estimator.
+    pub headroom_samples: usize,
 }
 
 impl Default for BatchCfg {
@@ -26,14 +54,18 @@ impl Default for BatchCfg {
         BatchCfg {
             max_batch: serving.max_batch,
             window: Duration::from_micros(serving.batch_window_us),
+            window_min: Duration::from_micros(serving.batch_window_min_us),
+            headroom_samples: serving.headroom_samples,
         }
     }
 }
 
-/// A dispatched micro-batch: requests of one network, oldest first.
+/// A dispatched micro-batch: requests of one network and one SLO tier,
+/// oldest first.
 #[derive(Debug)]
 pub struct Batch {
     pub net_id: usize,
+    pub tier: SloTier,
     pub requests: Vec<Request>,
 }
 
@@ -47,6 +79,7 @@ impl Batch {
     }
 }
 
+#[derive(Default)]
 struct Pending {
     reqs: Vec<Request>,
     /// When the oldest pending request entered the batcher.
@@ -57,10 +90,17 @@ struct Pending {
 /// thread); all time is passed in explicitly so policies unit-test without
 /// sleeping.
 pub struct MicroBatcher {
-    window: Duration,
+    base_window: Duration,
+    min_window: Duration,
     /// Effective cap per network (platform cap ∧ per-net override).
     caps: Vec<usize>,
-    pending: Vec<Pending>,
+    /// `pending[net_id][tier.index()]` — tiers never share a batch.
+    pending: Vec<[Pending; SloTier::COUNT]>,
+    /// Current adaptive window per tier, in `[min_window, base_window]`.
+    windows: [Duration; SloTier::COUNT],
+    headroom: [RollingQuantile; SloTier::COUNT],
+    shrinks: u64,
+    widens: u64,
 }
 
 impl MicroBatcher {
@@ -73,15 +113,19 @@ impl MicroBatcher {
             .collect();
         let pending = per_net_cap
             .iter()
-            .map(|_| Pending {
-                reqs: Vec::new(),
-                open_since: None,
-            })
+            .map(|_| std::array::from_fn(|_| Pending::default()))
             .collect();
         MicroBatcher {
-            window: cfg.window,
+            base_window: cfg.window,
+            min_window: cfg.window_min.min(cfg.window),
             caps,
             pending,
+            windows: [cfg.window; SloTier::COUNT],
+            headroom: std::array::from_fn(|_| {
+                RollingQuantile::new(cfg.headroom_samples.max(1))
+            }),
+            shrinks: 0,
+            widens: 0,
         }
     }
 
@@ -94,35 +138,82 @@ impl MicroBatcher {
         self.caps[net_id]
     }
 
+    /// Current adaptive window of one tier.
+    pub fn window(&self, tier: SloTier) -> Duration {
+        self.windows[tier.index()]
+    }
+
+    /// `(shrinks, widens)` the adaptive policy has performed.
+    pub fn window_events(&self) -> (u64, u64) {
+        (self.shrinks, self.widens)
+    }
+
     /// Requests currently waiting in partial batches.
     pub fn pending_len(&self) -> usize {
-        self.pending.iter().map(|p| p.reqs.len()).sum()
+        self.pending
+            .iter()
+            .flat_map(|tiers| tiers.iter())
+            .map(|p| p.reqs.len())
+            .sum()
     }
 
     /// Queue a request; returns a full batch once the cap is reached.
     pub fn push(&mut self, req: Request, now: Instant) -> Option<Batch> {
         let net_id = req.net_id;
-        let p = &mut self.pending[net_id];
+        let tier = req.tier;
+        let p = &mut self.pending[net_id][tier.index()];
         if p.reqs.is_empty() {
             p.open_since = Some(now);
         }
         p.reqs.push(req);
         if p.reqs.len() >= self.caps[net_id] {
-            return Some(take_batch(p, net_id));
+            return Some(take_batch(p, net_id, tier));
         }
         None
     }
 
-    /// Dispatch every partial batch whose window has expired at `now`.
+    /// Feed one dispatched (or lapsed — negative) deadline-headroom
+    /// sample, in milliseconds, and adapt the tier's window: halve it
+    /// when the rolling low-quantile headroom falls within
+    /// [`SHRINK_HEADROOM_WINDOWS`] current windows, double it back toward
+    /// the base once the tail recovers past [`WIDEN_HEADROOM_WINDOWS`]
+    /// base windows.
+    pub fn record_headroom(&mut self, tier: SloTier, headroom_ms: f64) {
+        let ti = tier.index();
+        self.headroom[ti].push(headroom_ms);
+        if self.headroom[ti].len() < ADAPT_MIN_SAMPLES.min(self.headroom[ti].cap()) {
+            return;
+        }
+        let Some(low) = self.headroom[ti].quantile(1.0) else {
+            return;
+        };
+        let cur = self.windows[ti];
+        let cur_ms = cur.as_secs_f64() * 1e3;
+        let base_ms = self.base_window.as_secs_f64() * 1e3;
+        if low <= SHRINK_HEADROOM_WINDOWS * cur_ms {
+            let next = (cur / 2).max(self.min_window);
+            if next < cur {
+                self.windows[ti] = next;
+                self.shrinks += 1;
+            }
+        } else if low >= WIDEN_HEADROOM_WINDOWS * base_ms && cur < self.base_window {
+            self.windows[ti] = (cur * 2).min(self.base_window);
+            self.widens += 1;
+        }
+    }
+
+    /// Dispatch every partial batch whose tier window has expired at `now`.
     pub fn poll_expired(&mut self, now: Instant) -> Vec<Batch> {
-        let window = self.window;
+        let windows = self.windows;
         let mut out = Vec::new();
-        for (net_id, p) in self.pending.iter_mut().enumerate() {
-            let expired = p
-                .open_since
-                .is_some_and(|t| now.saturating_duration_since(t) >= window);
-            if expired {
-                out.push(take_batch(p, net_id));
+        for (net_id, tiers) in self.pending.iter_mut().enumerate() {
+            for (ti, p) in tiers.iter_mut().enumerate() {
+                let expired = p
+                    .open_since
+                    .is_some_and(|t| now.saturating_duration_since(t) >= windows[ti]);
+                if expired {
+                    out.push(take_batch(p, net_id, SloTier::ALL[ti]));
+                }
             }
         }
         out
@@ -132,27 +223,30 @@ impl MicroBatcher {
     pub fn next_deadline(&self) -> Option<Instant> {
         self.pending
             .iter()
-            .filter_map(|p| p.open_since)
+            .flat_map(|tiers| tiers.iter().enumerate())
+            .filter_map(|(ti, p)| p.open_since.map(|t| t + self.windows[ti]))
             .min()
-            .map(|t| t + self.window)
     }
 
     /// Dispatch everything still pending (shutdown path).
     pub fn flush_all(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
-        for (net_id, p) in self.pending.iter_mut().enumerate() {
-            if !p.reqs.is_empty() {
-                out.push(take_batch(p, net_id));
+        for (net_id, tiers) in self.pending.iter_mut().enumerate() {
+            for (ti, p) in tiers.iter_mut().enumerate() {
+                if !p.reqs.is_empty() {
+                    out.push(take_batch(p, net_id, SloTier::ALL[ti]));
+                }
             }
         }
         out
     }
 }
 
-fn take_batch(p: &mut Pending, net_id: usize) -> Batch {
+fn take_batch(p: &mut Pending, net_id: usize, tier: SloTier) -> Batch {
     p.open_since = None;
     Batch {
         net_id,
+        tier,
         requests: std::mem::take(&mut p.reqs),
     }
 }
@@ -170,6 +264,8 @@ mod tests {
         BatchCfg {
             max_batch,
             window: Duration::from_millis(window_ms),
+            window_min: Duration::from_micros(100),
+            headroom_samples: 64,
         }
     }
 
@@ -181,6 +277,7 @@ mod tests {
         assert!(b.push(req(0, 1), t).is_none());
         let batch = b.push(req(0, 2), t).expect("full batch");
         assert_eq!(batch.net_id, 0);
+        assert_eq!(batch.tier, SloTier::Standard);
         assert_eq!(batch.len(), 3);
         let seqs: Vec<u64> = batch.requests.iter().map(|r| r.seq).collect();
         assert_eq!(seqs, vec![0, 1, 2], "oldest-first order");
@@ -233,6 +330,31 @@ mod tests {
     }
 
     #[test]
+    fn tiers_never_share_a_batch() {
+        let mut b = MicroBatcher::new(cfg(2, 100), &[None]);
+        let t = Instant::now();
+        // One interactive + one batch request on the same net: neither
+        // fills a batch (cap 2 within a tier lane).
+        assert!(b
+            .push(req(0, 0).with_tier(SloTier::Interactive), t)
+            .is_none());
+        assert!(b.push(req(0, 1).with_tier(SloTier::Batch), t).is_none());
+        assert_eq!(b.pending_len(), 2);
+        // A second interactive request completes ONLY the interactive batch.
+        let batch = b
+            .push(req(0, 2).with_tier(SloTier::Interactive), t)
+            .expect("interactive tier full at 2");
+        assert_eq!(batch.tier, SloTier::Interactive);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.pending_len(), 1, "batch-tier request still pending");
+        let mut flushed = b.flush_all();
+        assert_eq!(flushed.len(), 1);
+        let last = flushed.pop().unwrap();
+        assert_eq!(last.tier, SloTier::Batch);
+        assert_eq!(last.len(), 1);
+    }
+
+    #[test]
     fn per_net_cap_cannot_exceed_platform_cap() {
         let b = MicroBatcher::new(cfg(4, 100), &[Some(64)]);
         assert_eq!(b.cap(0), 4);
@@ -252,5 +374,70 @@ mod tests {
         assert_eq!(flushed[1].len(), 2);
         assert_eq!(b.pending_len(), 0);
         assert!(b.flush_all().is_empty());
+    }
+
+    #[test]
+    fn window_shrinks_on_vanishing_headroom_and_rewidens_on_recovery() {
+        let mut b = MicroBatcher::new(cfg(4, 10), &[None]);
+        let base = Duration::from_millis(10);
+        assert_eq!(b.window(SloTier::Interactive), base);
+        // Tail headroom collapses to ~1 window: shrink toward the floor.
+        for _ in 0..16 {
+            b.record_headroom(SloTier::Interactive, 10.0);
+        }
+        let tightened = b.window(SloTier::Interactive);
+        assert!(tightened < base, "window must shrink under deadline pressure");
+        assert_eq!(b.window(SloTier::Batch), base, "tiers adapt independently");
+        let (shrinks, _) = b.window_events();
+        assert!(shrinks >= 1);
+        // Recovery: ample headroom re-widens back to (never past) the base.
+        for _ in 0..64 {
+            b.record_headroom(SloTier::Interactive, 10_000.0);
+        }
+        assert_eq!(b.window(SloTier::Interactive), base);
+        let (_, widens) = b.window_events();
+        assert!(widens >= 1);
+        // The base window is the ceiling: more slack changes nothing.
+        b.record_headroom(SloTier::Interactive, 10_000.0);
+        assert_eq!(b.window(SloTier::Interactive), base);
+    }
+
+    #[test]
+    fn window_never_shrinks_below_floor() {
+        let mut b = MicroBatcher::new(
+            BatchCfg {
+                max_batch: 4,
+                window: Duration::from_millis(10),
+                window_min: Duration::from_millis(2),
+                headroom_samples: 16,
+            },
+            &[None],
+        );
+        for _ in 0..256 {
+            b.record_headroom(SloTier::Interactive, 0.0);
+        }
+        assert_eq!(b.window(SloTier::Interactive), Duration::from_millis(2));
+    }
+
+    #[test]
+    fn tier_windows_drive_poll_expiry_independently() {
+        let mut b = MicroBatcher::new(cfg(8, 10), &[None]);
+        // Shrink the interactive window to the 100µs floor.
+        for _ in 0..64 {
+            b.record_headroom(SloTier::Interactive, 0.0);
+        }
+        let tight = b.window(SloTier::Interactive);
+        assert!(tight < Duration::from_millis(10));
+        let t0 = Instant::now();
+        b.push(req(0, 0).with_tier(SloTier::Interactive), t0);
+        b.push(req(0, 1).with_tier(SloTier::Batch), t0);
+        // At the tight deadline the interactive partial goes out alone.
+        let out = b.poll_expired(t0 + tight);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].tier, SloTier::Interactive);
+        assert_eq!(b.pending_len(), 1);
+        // The batch-tier partial still waits for the full base window.
+        assert!(b.poll_expired(t0 + Duration::from_millis(9)).is_empty());
+        assert_eq!(b.poll_expired(t0 + Duration::from_millis(10)).len(), 1);
     }
 }

@@ -10,26 +10,33 @@
 //!
 //! ```text
 //!  clients ──► AdmissionQueue ──► MicroBatcher ──► per-net layer pipeline
-//!  (streams)   (bounded depth,    (max_batch,      (Mailbox-connected
-//!              stream-fair,        batching         stages, batched jobs)
-//!              shed on overload)   window)               │
-//!                                                        ▼
-//!                                             shared DelegatePool
-//!                                        (cluster queues + delegates
-//!                                         + work-stealing thief)
+//!  (streams,   (per-(net,tier)    (per-(net,tier)  (Mailbox-connected
+//!   SLO tier)   lanes, EDF +       adaptive         stages, batched jobs,
+//!               tier precedence,   windows,         weights pinned per
+//!               shed on overload)  size-or-time)    version)   │
+//!                                                              ▼
+//!                                                   shared DelegatePool
+//!                                              (cluster queues + delegates
+//!                                               + work-stealing thief)
 //! ```
 //!
-//! * [`request`] — request/response currency + synthetic client streams;
-//! * [`admission`] — bounded per-network lanes, stream-fair within a lane,
-//!   shed-on-overload (a stalled network backs up and sheds only its own
-//!   lane);
-//! * [`batcher`] — per-network micro-batching (size + window policy);
+//! * [`request`] — request/response currency ([`SloTier`] lives here) +
+//!   synthetic client streams;
+//! * [`admission`] — bounded per-(network, tier) lanes: strict tier
+//!   precedence with a starvation-proof batch-lane escape ratio, EDF
+//!   ordering within a lane, expired requests pruned at pop, stream-fair
+//!   for deadline-less traffic, shed-on-overload (a stalled network backs
+//!   up and sheds only its own lanes);
+//! * [`batcher`] — per-(network, tier) micro-batching (size + window
+//!   policy, windows adapt per tier to measured deadline headroom);
+//! * [`registry`] — versioned weight slots behind zero-downtime hot-swap
+//!   (pointer flip + drain; batches pin their version at formation);
 //! * [`server`] — thread wiring over `rt::DelegatePool` (every layer's
 //!   matrix work — CONV tiles, FC GEMMs, im2col — dispatched as pool
 //!   jobs via `rt::PoolRouter`; FC stages fuse their whole micro-batch
 //!   into one `FcGemmBatch` job per layer);
-//! * [`stats`] — latency percentiles / throughput / batch / per-class job
-//!   accounting;
+//! * [`stats`] — latency percentiles / throughput / batch / per-tier and
+//!   per-class job accounting;
 //! * [`shard_server`] — the remote end of a shard link: a TCP server
 //!   hosting a second `DelegatePool` that executes jobs shipped by peers'
 //!   `RemoteShard` backends (`accel::remote`) — the serving stack's first
@@ -37,6 +44,7 @@
 
 pub mod admission;
 pub mod batcher;
+pub mod registry;
 pub mod request;
 pub mod server;
 pub mod shard_server;
@@ -44,7 +52,8 @@ pub mod stats;
 
 pub use admission::AdmissionQueue;
 pub use batcher::{Batch, BatchCfg, MicroBatcher};
-pub use request::{Request, RequestStream, Response};
+pub use registry::NetRegistry;
+pub use request::{Request, RequestStream, Response, SloTier};
 pub use server::{ServeOptions, Server};
 pub use shard_server::ShardServer;
-pub use stats::{ServerStats, StatsCollector};
+pub use stats::{ServerStats, StatsCollector, TierCounts};

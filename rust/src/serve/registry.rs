@@ -1,0 +1,125 @@
+//! Versioned network registration — the zero-downtime weight hot-swap
+//! slot table.
+//!
+//! Weights have been `Arc`-backed since the scheduler rework, so a swap
+//! is a pointer flip: the registry holds one `(version, Arc<Network>)`
+//! slot per served network, and `swap` replaces the pointer and bumps the
+//! version under a short mutex.  Consumers pin `(version, net)` **once
+//! per micro-batch at batch formation** and ride that pinned version to
+//! completion — in-flight batches drain on the weights they started with
+//! (bit-identical responses per version), new batches pick up the new
+//! weights, and no request is ever lost or recomputed.  Each `Network`
+//! packs its CONV weights once at load (`weight_pack_count` stays 1 per
+//! version), so a swap never repacks on the serving path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::nn::Network;
+
+struct Slot {
+    current: Mutex<(u64, Arc<Network>)>,
+}
+
+/// Per-network versioned weight slots (see module docs).
+pub struct NetRegistry {
+    slots: Vec<Slot>,
+    swaps: AtomicU64,
+}
+
+impl NetRegistry {
+    /// Register the launch-time networks as version 0.
+    pub fn new(nets: &[Arc<Network>]) -> NetRegistry {
+        NetRegistry {
+            slots: nets
+                .iter()
+                .map(|n| Slot {
+                    current: Mutex::new((0, Arc::clone(n))),
+                })
+                .collect(),
+            swaps: AtomicU64::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// The current `(version, weights)` of one network — read atomically
+    /// together, so a concurrent swap can never tear the pair.
+    pub fn current(&self, net_id: usize) -> (u64, Arc<Network>) {
+        let g = self.slots[net_id].current.lock().unwrap();
+        (g.0, Arc::clone(&g.1))
+    }
+
+    pub fn version(&self, net_id: usize) -> u64 {
+        self.slots[net_id].current.lock().unwrap().0
+    }
+
+    /// Flip the pointer, bump the version, return it.  Validation
+    /// (architecture equality etc.) is the caller's job — the registry
+    /// is just the atomic slot.
+    pub fn swap(&self, net_id: usize, net: Arc<Network>) -> u64 {
+        let mut g = self.slots[net_id].current.lock().unwrap();
+        g.0 += 1;
+        g.1 = net;
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+        g.0
+    }
+
+    /// Total swaps across all slots.
+    pub fn swap_count(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo;
+
+    fn mk_net(name: &str) -> Arc<Network> {
+        let mut cfg = zoo::load("mnist").unwrap();
+        cfg.name = name.to_string();
+        Arc::new(Network::new(cfg, 32).unwrap())
+    }
+
+    #[test]
+    fn swap_bumps_version_and_flips_pointer() {
+        let v0 = mk_net("mnist");
+        let r = NetRegistry::new(std::slice::from_ref(&v0));
+        assert_eq!(r.len(), 1);
+        let (ver, cur) = r.current(0);
+        assert_eq!(ver, 0);
+        assert!(Arc::ptr_eq(&cur, &v0));
+        // Old readers keep their pinned Arc; new readers see v1.
+        let v1 = mk_net("mnist_v2");
+        assert_eq!(r.swap(0, Arc::clone(&v1)), 1);
+        let (ver, cur) = r.current(0);
+        assert_eq!(ver, 1);
+        assert!(Arc::ptr_eq(&cur, &v1));
+        assert!(!Arc::ptr_eq(&cur, &v0));
+        assert_eq!(r.swap_count(), 1);
+        assert_eq!(r.version(0), 1);
+        // The displaced version is still alive through the pinned Arc.
+        assert_eq!(v0.config.layers, v1.config.layers);
+    }
+
+    #[test]
+    fn swapped_weights_pack_once_per_version() {
+        let v0 = mk_net("mnist");
+        let r = NetRegistry::new(std::slice::from_ref(&v0));
+        r.swap(0, mk_net("mnist_v2"));
+        let (_, cur) = r.current(0);
+        for (idx, layer) in cur.config.layers.iter().enumerate() {
+            if layer.is_conv() {
+                assert_eq!(cur.weight_pack_count(idx), 1);
+                assert_eq!(v0.weight_pack_count(idx), 1);
+            }
+        }
+    }
+}

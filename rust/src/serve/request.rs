@@ -14,6 +14,43 @@ pub fn frame_tag(stream_id: usize, seq: u64) -> u64 {
     ((stream_id as u64) << 32) | (seq & 0xFFFF_FFFF)
 }
 
+/// Service-level-objective tier of a request.  Admission keeps one lane
+/// per (network, tier): higher tiers pop strictly first (with a
+/// starvation-proof escape ratio for [`SloTier::Batch`]), and each tier
+/// has its own depth budget, so bulk traffic can never shed foreground
+/// traffic.  Declaration order IS precedence order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum SloTier {
+    /// Tight-deadline foreground traffic: always served first.
+    Interactive,
+    /// The default tier — the original queue's stream-fair semantics.
+    #[default]
+    Standard,
+    /// Bulk/offline work: lowest precedence, starvation-proofed by the
+    /// admission queue's batch-lane escape ratio.
+    Batch,
+}
+
+impl SloTier {
+    pub const COUNT: usize = 3;
+    /// Precedence order, highest first.
+    pub const ALL: [SloTier; SloTier::COUNT] =
+        [SloTier::Interactive, SloTier::Standard, SloTier::Batch];
+
+    /// Dense index (0 = interactive … 2 = batch).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SloTier::Interactive => "interactive",
+            SloTier::Standard => "standard",
+            SloTier::Batch => "batch",
+        }
+    }
+}
+
 /// One inference request from one client stream.
 #[derive(Debug)]
 pub struct Request {
@@ -27,8 +64,11 @@ pub struct Request {
     pub input: Tensor,
     /// Arrival timestamp (stamped by the server at admission).
     pub submitted: Instant,
-    /// Optional latency budget; expired requests are shed by the batcher.
+    /// Optional latency budget; expired requests are dropped (and
+    /// counted) at admission pop and again at batch formation/dispatch.
     pub deadline: Option<Duration>,
+    /// SLO tier (defaults to [`SloTier::Standard`]).
+    pub tier: SloTier,
 }
 
 impl Request {
@@ -41,12 +81,23 @@ impl Request {
             input,
             submitted: Instant::now(),
             deadline: None,
+            tier: SloTier::default(),
         }
     }
 
     pub fn with_deadline(mut self, deadline: Duration) -> Request {
         self.deadline = Some(deadline);
         self
+    }
+
+    pub fn with_tier(mut self, tier: SloTier) -> Request {
+        self.tier = tier;
+        self
+    }
+
+    /// Absolute due time, when a deadline is attached.
+    pub fn due(&self) -> Option<Instant> {
+        self.deadline.map(|d| self.submitted + d)
     }
 
     pub fn is_expired(&self, now: Instant) -> bool {
@@ -70,6 +121,11 @@ pub struct Response {
     pub latency: Duration,
     /// Size of the micro-batch this request rode in.
     pub batch_size: usize,
+    /// SLO tier the request was served under.
+    pub tier: SloTier,
+    /// Weight version the request was computed against (hot-swap pins
+    /// each in-flight batch to the version current at batch formation).
+    pub version: u64,
 }
 
 /// Deterministic open-loop client: emits `n_requests` requests for one
@@ -82,6 +138,7 @@ pub struct RequestStream {
     rng: XorShift64Star,
     mean_gap: Duration,
     deadline: Option<Duration>,
+    tier: SloTier,
     next_seq: u64,
     remaining: u64,
 }
@@ -102,6 +159,7 @@ impl RequestStream {
             rng: XorShift64Star::new(0xC0FF_EE00 + stream_id as u64),
             mean_gap,
             deadline: None,
+            tier: SloTier::default(),
             next_seq: 0,
             remaining: n_requests,
         }
@@ -110,6 +168,12 @@ impl RequestStream {
     /// Attach a latency budget to every request of this stream.
     pub fn with_deadline(mut self, deadline: Duration) -> RequestStream {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Tag every request of this stream with an SLO tier.
+    pub fn with_tier(mut self, tier: SloTier) -> RequestStream {
+        self.tier = tier;
         self
     }
 
@@ -131,6 +195,7 @@ impl RequestStream {
         let frame = frame_tag(self.stream_id, seq);
         let mut req = Request::new(self.stream_id, seq, self.net_id, self.net.make_input(frame));
         req.deadline = self.deadline;
+        req.tier = self.tier;
         Some((gap, req))
     }
 }
@@ -180,6 +245,32 @@ mod tests {
         };
         assert_eq!(gaps(7), gaps(7));
         assert_ne!(gaps(7), gaps(8));
+    }
+
+    #[test]
+    fn tiers_index_densely_in_precedence_order() {
+        assert_eq!(SloTier::COUNT, SloTier::ALL.len());
+        for (i, t) in SloTier::ALL.iter().enumerate() {
+            assert_eq!(t.index(), i, "ALL must be precedence-ordered");
+        }
+        assert_eq!(SloTier::default(), SloTier::Standard);
+        assert!(SloTier::Interactive < SloTier::Standard);
+        assert!(SloTier::Standard < SloTier::Batch);
+    }
+
+    #[test]
+    fn stream_tags_tier_and_request_builder_sets_due() {
+        let net = mk_net();
+        let mut s = RequestStream::new(0, 0, Arc::clone(&net), 100.0, 2)
+            .with_tier(SloTier::Interactive)
+            .with_deadline(Duration::from_millis(20));
+        let (_, req) = s.next_arrival().unwrap();
+        assert_eq!(req.tier, SloTier::Interactive);
+        assert_eq!(req.deadline, Some(Duration::from_millis(20)));
+        assert_eq!(req.due(), Some(req.submitted + Duration::from_millis(20)));
+        let plain = Request::new(0, 0, 0, net.make_input(0));
+        assert_eq!(plain.tier, SloTier::Standard);
+        assert_eq!(plain.due(), None);
     }
 
     #[test]

@@ -1,12 +1,20 @@
 //! The serving front-end wired together: client streams submit into the
-//! admission queue; a batcher thread coalesces per-network micro-batches
-//! and feeds them into per-network layer pipelines; every CONV stage
-//! lowers its batch to jobs on the shared accelerator pool; completion
-//! threads stamp latencies and collect responses.
+//! tiered admission queue; a batcher thread coalesces per-(network, tier)
+//! micro-batches and feeds them into per-network layer pipelines; every
+//! CONV stage lowers its batch to jobs on the shared accelerator pool;
+//! completion threads stamp latencies and collect responses.
 //!
 //! One [`rt::DelegatePool`] serves all networks — heterogeneous models
 //! compete for the same clusters exactly like the paper's multi-CNN
 //! scenario, with the thief rebalancing at batch granularity.
+//!
+//! Weight hot-swap: each network's weights live in a versioned registry
+//! slot ([`NetRegistry`]); [`Server::hot_swap`] flips the slot pointer
+//! after validating the replacement shares the incumbent's architecture.
+//! Batches pin `(version, weights)` **at batch formation** and drain on
+//! the pinned version — zero requests lost, responses bit-identical per
+//! version.  The pool routing is geometry-only (cluster assignment + tile
+//! size), so the launch-time routers keep serving every version.
 //!
 //! [`rt::DelegatePool`]: crate::rt::DelegatePool
 
@@ -17,7 +25,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
-use crate::config::HwConfig;
+use crate::config::{HwConfig, ServeCfg};
 use crate::nn::Network;
 use crate::pipeline::Mailbox;
 use crate::rt::{ComputeMode, DelegatePool, PoolOptions, PoolRouter};
@@ -27,7 +35,8 @@ use crate::tensor::Tensor;
 
 use super::admission::AdmissionQueue;
 use super::batcher::{Batch, BatchCfg, MicroBatcher};
-use super::request::{Request, Response};
+use super::registry::NetRegistry;
+use super::request::{Request, Response, SloTier};
 use super::stats::{ServerStats, StatsCollector};
 
 /// Serving configuration (defaults come from `HwConfig::serving`).
@@ -39,8 +48,8 @@ pub struct ServeOptions {
     /// Mailbox depth, in batches, between pipeline stages.
     pub mailbox_capacity: usize,
     pub batch: BatchCfg,
-    /// Bounded admission depth per network lane (requests beyond a lane's
-    /// depth are shed; other networks' lanes are unaffected).
+    /// Bounded admission depth per (network, tier) lane (requests beyond
+    /// a lane's depth are shed; other lanes are unaffected).
     pub admission_depth: usize,
     /// Backend registry override for the shared pool; `None` uses the
     /// in-tree defaults.  Deployments with out-of-tree members — e.g.
@@ -56,6 +65,8 @@ impl ServeOptions {
         let batch = BatchCfg {
             max_batch: hw.serving.max_batch,
             window: Duration::from_micros(hw.serving.batch_window_us),
+            window_min: Duration::from_micros(hw.serving.batch_window_min_us),
+            headroom_samples: hw.serving.headroom_samples,
         };
         let admission_depth = hw.serving.admission_depth;
         ServeOptions {
@@ -77,17 +88,26 @@ impl Default for ServeOptions {
 }
 
 /// A micro-batch in flight through one network's pipeline: each request
-/// rides with its current activation.  The batch size is always
-/// `items.len()` — deadline pruning shrinks both together, so the
-/// batch-size histogram can never count requests that never ran.
+/// rides with its current activation, and the whole batch rides the
+/// `(version, weights)` pinned at batch formation — a concurrent hot-swap
+/// never changes the weights a dispatched batch computes against.  The
+/// batch size is always `items.len()` — deadline pruning shrinks both
+/// together, so the batch-size histogram can never count requests that
+/// never ran.
 struct InFlight {
     net_id: usize,
+    /// Weight version pinned at batch formation.
+    version: u64,
+    /// The pinned weights themselves (kept alive across a swap).
+    net: Arc<Network>,
     items: Vec<(Request, Tensor)>,
 }
 
 /// The running server.
 pub struct Server {
     nets: Vec<Arc<Network>>,
+    versions: Arc<NetRegistry>,
+    serving: ServeCfg,
     admission: Arc<AdmissionQueue>,
     collector: Arc<StatsCollector>,
     batcher_handle: JoinHandle<()>,
@@ -142,8 +162,13 @@ impl Server {
         pool_options.probe_interval_ms = options.hw.serving.probe_interval_ms;
         let pool = DelegatePool::start(&pool_options)?;
 
-        let admission = Arc::new(AdmissionQueue::new(options.admission_depth));
+        let serving = options.hw.serving.clone();
+        let admission = Arc::new(
+            AdmissionQueue::new(options.admission_depth)
+                .with_escape_every(serving.batch_escape_every),
+        );
         let collector = Arc::new(StatsCollector::default());
+        let versions = Arc::new(NetRegistry::new(&nets));
 
         // Per-network pipelines: mb[0] = batch inbox, mb[i+1] = output of
         // layer i; the last mailbox feeds that net's completion thread.
@@ -156,6 +181,9 @@ impl Server {
                 .map(|_| Arc::new(Mailbox::new(options.mailbox_capacity)))
                 .collect();
             inboxes.push(Arc::clone(&mailboxes[0]));
+            // Routing is geometry-only (cluster assignment per CONV layer
+            // + tile size); hot-swap enforces identical architecture, so
+            // one launch-time router serves every weight version.
             let assignment = static_map::assign(&net.conv_infos(), pool.clusters());
             let router = PoolRouter::new(net, pool.dispatcher(), &assignment);
             for layer_idx in 0..n_layers {
@@ -171,7 +199,11 @@ impl Server {
                             crate::config::LayerSpec::Connected { .. }
                         );
                         while let Some(mut batch) = inbox.recv() {
-                            let spec = net.config.layers[layer_idx].clone();
+                            // Compute against the batch's pinned weights —
+                            // the architecture (and thus the layer spec)
+                            // is swap-invariant by contract.
+                            let bnet = Arc::clone(&batch.net);
+                            let spec = bnet.config.layers[layer_idx].clone();
                             let items = std::mem::take(&mut batch.items);
                             batch.items = if is_fc {
                                 // Fused FC stage: the whole micro-batch
@@ -185,7 +217,7 @@ impl Server {
                                 let exec = router.frame(frame);
                                 let (reqs, acts): (Vec<Request>, Vec<Tensor>) =
                                     items.into_iter().unzip();
-                                let outs = net
+                                let outs = bnet
                                     .forward_layer_batch(layer_idx, &spec, acts, &exec);
                                 reqs.into_iter().zip(outs).collect()
                             } else {
@@ -196,7 +228,7 @@ impl Server {
                                     .into_iter()
                                     .map(|(req, act)| {
                                         let exec = router.frame(req.frame);
-                                        let out = net
+                                        let out = bnet
                                             .forward_layer(layer_idx, &spec, act, &exec);
                                         (req, out)
                                     })
@@ -221,10 +253,11 @@ impl Server {
                         let mut responses = Vec::new();
                         while let Some(batch) = outlet.recv() {
                             let net_id = batch.net_id;
+                            let version = batch.version;
                             let batch_size = batch.items.len();
                             for (req, out) in batch.items {
                                 let latency = req.submitted.elapsed();
-                                collector_c.record_response(latency);
+                                collector_c.record_response(req.tier, latency);
                                 responses.push(Response {
                                     stream_id: req.stream_id,
                                     seq: req.seq,
@@ -233,6 +266,8 @@ impl Server {
                                     output: out,
                                     latency,
                                     batch_size,
+                                    tier: req.tier,
+                                    version,
                                 });
                             }
                         }
@@ -246,19 +281,22 @@ impl Server {
         let batcher_handle = {
             let admission = Arc::clone(&admission);
             let collector = Arc::clone(&collector);
+            let versions = Arc::clone(&versions);
             let per_net_cap: Vec<Option<usize>> =
                 nets.iter().map(|n| n.config.max_batch).collect();
             let batch_cfg = options.batch;
             std::thread::Builder::new()
                 .name("serve-batcher".into())
                 .spawn(move || {
-                    batcher_loop(admission, collector, batch_cfg, per_net_cap, inboxes)
+                    batcher_loop(admission, collector, versions, batch_cfg, per_net_cap, inboxes)
                 })
                 .expect("spawn batcher thread")
         };
 
         Ok(Server {
             nets,
+            versions,
+            serving,
             admission,
             collector,
             batcher_handle,
@@ -273,15 +311,57 @@ impl Server {
         &self.nets
     }
 
-    /// Submit one request (stamps the arrival time).  Returns false when
-    /// the request names an unknown network or the admission queue shed
-    /// it.
+    /// Submit one request (stamps the arrival time).  A request without an
+    /// explicit deadline inherits its tier's default latency budget from
+    /// `[serving]` (`interactive_deadline_ms` etc.; 0 = none).  Returns
+    /// false when the request names an unknown network or the admission
+    /// queue shed it.
     pub fn submit(&self, mut req: Request) -> bool {
         if req.net_id >= self.nets.len() {
             return false;
         }
         req.submitted = Instant::now();
+        if req.deadline.is_none() {
+            let default_ms = match req.tier {
+                SloTier::Interactive => self.serving.interactive_deadline_ms,
+                SloTier::Standard => self.serving.standard_deadline_ms,
+                SloTier::Batch => self.serving.batch_deadline_ms,
+            };
+            if default_ms > 0 {
+                req.deadline = Some(Duration::from_millis(default_ms));
+            }
+        }
         self.admission.submit(req)
+    }
+
+    /// Zero-downtime weight swap: validate that `net` shares the
+    /// incumbent's architecture (layer specs, tile size, input shape),
+    /// then flip the registry pointer.  Batches formed before the flip
+    /// drain on their pinned version; batches formed after compute on the
+    /// new weights.  Returns the new version number.
+    pub fn hot_swap(&self, net_id: usize, net: Arc<Network>) -> Result<u64> {
+        ensure!(net_id < self.nets.len(), "hot_swap: unknown network {net_id}");
+        let base = &self.nets[net_id];
+        ensure!(
+            net.config.layers == base.config.layers,
+            "hot_swap: replacement must share the incumbent's layer architecture"
+        );
+        ensure!(
+            net.tile_size() == base.tile_size(),
+            "hot_swap: replacement must share the incumbent's tile size"
+        );
+        ensure!(
+            net.input_shape() == base.input_shape(),
+            "hot_swap: replacement must share the incumbent's input shape"
+        );
+        let version = self.versions.swap(net_id, net);
+        self.collector.record_hot_swap();
+        Ok(version)
+    }
+
+    /// Current weight version of one network (0 until the first swap).
+    pub fn net_version(&self, net_id: usize) -> u64 {
+        self.versions.version(net_id)
     }
 
     /// Requests completed so far (live gauge).
@@ -305,27 +385,38 @@ impl Server {
         let pool_report = self.pool.shutdown()?;
         let stats = self
             .collector
-            .report(wall, self.admission.shed_count(), &pool_report);
+            .report(wall, &self.admission.tier_counts(), &pool_report);
         Ok((stats, responses))
     }
 }
 
-/// The batcher thread body: pop fairly from admission, coalesce, dispatch
-/// full batches immediately and partial ones on window expiry; on close,
-/// drain + flush and shut the pipelines down.
+/// Signed deadline headroom in milliseconds (negative once `now` is past
+/// `due`) — the sample the adaptive batch window feeds on.
+fn headroom_ms(due: Instant, now: Instant) -> f64 {
+    if due >= now {
+        due.saturating_duration_since(now).as_secs_f64() * 1e3
+    } else {
+        -(now.saturating_duration_since(due).as_secs_f64() * 1e3)
+    }
+}
+
+/// The batcher thread body: pop tier-ordered from admission, coalesce per
+/// (network, tier), dispatch full batches immediately and partial ones on
+/// window expiry; on close, drain + flush and shut the pipelines down.
 ///
 /// Batch handoff to the pipelines is *non-blocking* (`Mailbox::try_send`)
 /// through per-net `ready` buffers: window-expiry dispatch and handoff to
 /// the other networks keep running while one pipeline is stalled.  Each
 /// network's buffered backlog is bounded by `READY_CAP_PER_NET`; a
 /// network at its cap becomes *ineligible* and the batcher stops draining
-/// only **its** admission lane (`pop_timeout_eligible`), so a stalled
-/// pipeline backs pressure up into its own lane — where overload sheds at
+/// only **its** admission lanes (`pop_timeout_eligible`), so a stalled
+/// pipeline backs pressure up into its own lanes — where overload sheds at
 /// `submit()` — while every other network keeps flowing.  Admitted
 /// requests are never dropped (except by their own deadlines).
 fn batcher_loop(
     admission: Arc<AdmissionQueue>,
     collector: Arc<StatsCollector>,
+    versions: Arc<NetRegistry>,
     batch_cfg: BatchCfg,
     per_net_cap: Vec<Option<usize>>,
     inboxes: Vec<Arc<Mailbox<InFlight>>>,
@@ -372,7 +463,7 @@ fn batcher_loop(
             }
         };
         // Per-net eligibility: a network whose ready backlog hit its cap
-        // stops draining *its own* admission lane; the rest keep flowing.
+        // stops draining *its own* admission lanes; the rest keep flowing.
         let eligible: Vec<bool> = ready
             .iter()
             .map(|q| q.len() < READY_CAP_PER_NET)
@@ -383,15 +474,17 @@ fn batcher_loop(
                     let now = Instant::now();
                     collector.observe_queue_depth(admission.len() + 1);
                     if req.is_expired(now) {
-                        collector.record_expired();
+                        // Rare: expired between the admission-side prune
+                        // and this instant.
+                        collector.record_expired(req.tier);
                     } else if let Some(batch) = batcher.push(req, now) {
-                        stage(&collector, &mut ready, batch);
+                        stage(&collector, &versions, &mut batcher, &mut ready, batch);
                     }
                 }
                 Ok(None) => {
                     // Closed + drained: flush stragglers and stop.
                     for batch in batcher.flush_all() {
-                        stage(&collector, &mut ready, batch);
+                        stage(&collector, &versions, &mut batcher, &mut ready, batch);
                     }
                     break;
                 }
@@ -404,9 +497,11 @@ fn batcher_loop(
             std::thread::sleep(timeout);
         }
         for batch in batcher.poll_expired(Instant::now()) {
-            stage(&collector, &mut ready, batch);
+            stage(&collector, &versions, &mut batcher, &mut ready, batch);
         }
     }
+    let (shrinks, widens) = batcher.window_events();
+    collector.set_window_events(shrinks, widens);
     // Shutdown: guaranteed delivery of everything buffered (the layer
     // threads are still draining), then close the pipelines.  The same
     // prune-then-record rule applies here — a deadline that lapsed while
@@ -427,19 +522,33 @@ fn batcher_loop(
 }
 
 /// Convert a finished batch to its in-flight form and buffer it for
-/// handoff to its network's pipeline.  Requests that expired while
-/// pending in the micro-batcher are dropped (and counted) here; the
+/// handoff to its network's pipeline.  This is **batch formation**: the
+/// weight `(version, net)` is pinned here, once for the whole batch, and
+/// rides with it to completion — a hot-swap after this point cannot touch
+/// it.  Every deadlined request feeds its remaining headroom (negative if
+/// lapsed) into the adaptive-window estimator; requests that expired while
+/// pending in the micro-batcher are dropped (and counted per tier).  The
 /// input tensor is moved out of each request to seed its activation, so
-/// the pipeline carries one copy, not two.  Batch-size stats are
-/// recorded at dispatch, not here — a buffered batch may still shrink
-/// (or vanish) to deadline pruning before it reaches the pipeline.
-fn stage(collector: &StatsCollector, ready: &mut [VecDeque<InFlight>], batch: Batch) {
+/// the pipeline carries one copy, not two.  Batch-size stats are recorded
+/// at dispatch, not here — a buffered batch may still shrink (or vanish)
+/// to deadline pruning before it reaches the pipeline.
+fn stage(
+    collector: &StatsCollector,
+    versions: &NetRegistry,
+    batcher: &mut MicroBatcher,
+    ready: &mut [VecDeque<InFlight>],
+    batch: Batch,
+) {
     let now = Instant::now();
     let net_id = batch.net_id;
+    let (version, net) = versions.current(net_id);
     let mut items = Vec::with_capacity(batch.requests.len());
     for mut req in batch.requests {
+        if let Some(due) = req.due() {
+            batcher.record_headroom(req.tier, headroom_ms(due, now));
+        }
         if req.is_expired(now) {
-            collector.record_expired();
+            collector.record_expired(req.tier);
         } else {
             let act = std::mem::replace(&mut req.input, Tensor::zeros(&[0]));
             items.push((req, act));
@@ -448,11 +557,16 @@ fn stage(collector: &StatsCollector, ready: &mut [VecDeque<InFlight>], batch: Ba
     if items.is_empty() {
         return;
     }
-    ready[net_id].push_back(InFlight { net_id, items });
+    ready[net_id].push_back(InFlight {
+        net_id,
+        version,
+        net,
+        items,
+    });
 }
 
-/// Drop (and count) the requests of a buffered batch whose deadline
-/// passed while it waited for pipeline capacity.  The surviving
+/// Drop (and count, per tier) the requests of a buffered batch whose
+/// deadline passed while it waited for pipeline capacity.  The surviving
 /// `items.len()` IS the batch size — there is no separate counter to
 /// fall out of sync.
 fn prune_expired(collector: &StatsCollector, inflight: &mut InFlight) {
@@ -461,7 +575,7 @@ fn prune_expired(collector: &StatsCollector, inflight: &mut InFlight) {
         let items = std::mem::take(&mut inflight.items);
         for (req, act) in items {
             if req.is_expired(now) {
-                collector.record_expired();
+                collector.record_expired(req.tier);
             } else {
                 inflight.items.push((req, act));
             }
@@ -472,6 +586,13 @@ fn prune_expired(collector: &StatsCollector, inflight: &mut InFlight) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::zoo;
+    use crate::rt::PoolReport;
+    use crate::serve::stats::TierCounts;
+
+    fn mk_net() -> Arc<Network> {
+        Arc::new(Network::new(zoo::load("mnist").unwrap(), 32).unwrap())
+    }
 
     /// A request whose deadline has (or has not) already lapsed.
     fn req(seq: u64, expired: bool) -> Request {
@@ -491,8 +612,11 @@ mod tests {
     #[test]
     fn prune_expired_half_expired_batch_keeps_size_consistent() {
         let collector = StatsCollector::default();
+        let net = mk_net();
         let mut inflight = InFlight {
             net_id: 0,
+            version: 0,
+            net,
             items: vec![
                 (req(0, true), Tensor::scalar(0.0)),
                 (req(1, false), Tensor::scalar(1.0)),
@@ -501,11 +625,12 @@ mod tests {
         prune_expired(&collector, &mut inflight);
         assert_eq!(inflight.items.len(), 1, "lapsed request must be dropped");
         assert_eq!(inflight.items[0].0.seq, 1, "survivor is the live request");
-        let stats = collector.report(1.0, 0, &crate::rt::PoolReport::default());
+        let stats = collector.report(1.0, &TierCounts::default(), &PoolReport::default());
         assert_eq!(stats.expired, 1);
+        assert_eq!(stats.expired_by_tier, [0, 1, 0], "standard-tier expiry");
         // What dispatch records is exactly the surviving size.
         collector.record_batch(inflight.items.len());
-        let stats = collector.report(1.0, 0, &crate::rt::PoolReport::default());
+        let stats = collector.report(1.0, &TierCounts::default(), &PoolReport::default());
         assert_eq!(stats.batches, 1);
         assert_eq!(stats.max_batch, 1, "histogram must not see the staged size");
     }
@@ -513,28 +638,77 @@ mod tests {
     #[test]
     fn stage_drops_expired_and_sizes_by_survivors() {
         let collector = StatsCollector::default();
+        let net = mk_net();
+        let versions = NetRegistry::new(std::slice::from_ref(&net));
+        let mut batcher = MicroBatcher::new(BatchCfg::default(), &[None]);
         let mut ready: Vec<VecDeque<InFlight>> = vec![VecDeque::new()];
         stage(
             &collector,
+            &versions,
+            &mut batcher,
             &mut ready,
             Batch {
                 net_id: 0,
+                tier: SloTier::Standard,
                 requests: vec![req(0, true), req(1, false), req(2, false)],
             },
         );
         assert_eq!(ready[0].len(), 1);
         assert_eq!(ready[0][0].items.len(), 2);
+        assert_eq!(ready[0][0].version, 0, "pinned at formation");
+        assert!(Arc::ptr_eq(&ready[0][0].net, &net));
         // An all-expired batch stages nothing at all.
         stage(
             &collector,
+            &versions,
+            &mut batcher,
             &mut ready,
             Batch {
                 net_id: 0,
+                tier: SloTier::Standard,
                 requests: vec![req(3, true)],
             },
         );
         assert_eq!(ready[0].len(), 1, "all-expired batch must vanish");
-        let stats = collector.report(1.0, 0, &crate::rt::PoolReport::default());
+        let stats = collector.report(1.0, &TierCounts::default(), &PoolReport::default());
         assert_eq!(stats.expired, 2);
+    }
+
+    /// A batch staged before a swap pins version 0; one staged after pins
+    /// version 1 — the formation instant decides, nothing else.
+    #[test]
+    fn stage_pins_version_current_at_formation() {
+        let collector = StatsCollector::default();
+        let v0 = mk_net();
+        let versions = NetRegistry::new(std::slice::from_ref(&v0));
+        let mut batcher = MicroBatcher::new(BatchCfg::default(), &[None]);
+        let mut ready: Vec<VecDeque<InFlight>> = vec![VecDeque::new()];
+        let one = |seq| Batch {
+            net_id: 0,
+            tier: SloTier::Standard,
+            requests: vec![req(seq, false)],
+        };
+        stage(&collector, &versions, &mut batcher, &mut ready, one(0));
+        let v1 = {
+            let mut cfg = zoo::load("mnist").unwrap();
+            cfg.name = "mnist_v2".into();
+            Arc::new(Network::new(cfg, 32).unwrap())
+        };
+        versions.swap(0, Arc::clone(&v1));
+        stage(&collector, &versions, &mut batcher, &mut ready, one(1));
+        assert_eq!(ready[0].len(), 2);
+        assert_eq!(ready[0][0].version, 0);
+        assert!(Arc::ptr_eq(&ready[0][0].net, &v0), "old batch keeps old weights");
+        assert_eq!(ready[0][1].version, 1);
+        assert!(Arc::ptr_eq(&ready[0][1].net, &v1));
+    }
+
+    #[test]
+    fn headroom_is_signed() {
+        let now = Instant::now();
+        let h = headroom_ms(now + Duration::from_millis(10), now);
+        assert!((h - 10.0).abs() < 1.0);
+        let lapsed = headroom_ms(now, now + Duration::from_millis(10));
+        assert!(lapsed < 0.0, "lapsed deadline yields negative headroom");
     }
 }

@@ -1,6 +1,6 @@
 //! Serving metrics: tail latency, sustained throughput, batch-size and
-//! shed accounting — computed through `util::stats` and rendered with the
-//! shared table builder.
+//! per-SLO-tier shed/expiry accounting — computed through `util::stats`
+//! and rendered with the shared table builder.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -11,23 +11,43 @@ use crate::rt::PoolReport;
 use crate::util::bench::{fmt, Table};
 use crate::util::stats::{mean, percentile};
 
+use super::request::SloTier;
+
+/// Per-tier shed + expiry counters snapshotted from the admission queue
+/// at report time (`AdmissionQueue::tier_counts`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TierCounts {
+    /// Requests shed at admission, per tier.
+    pub shed: [u64; SloTier::COUNT],
+    /// Requests pruned at admission pop because their deadline lapsed.
+    pub expired: [u64; SloTier::COUNT],
+}
+
 /// Thread-safe sample sink shared by the batcher / completion threads.
 #[derive(Default)]
 pub struct StatsCollector {
     latencies_ms: Mutex<Vec<f64>>,
+    tier_latencies_ms: Mutex<[Vec<f64>; SloTier::COUNT]>,
     batch_sizes: Mutex<Vec<f64>>,
     completed: AtomicU64,
-    expired: AtomicU64,
+    completed_by_tier: [AtomicU64; SloTier::COUNT],
+    /// Batcher-side expirations (batch formation / dispatch pruning) —
+    /// admission-pop pruning is counted by the queue itself and merged
+    /// at report time.
+    expired_by_tier: [AtomicU64; SloTier::COUNT],
+    window_shrinks: AtomicU64,
+    window_widens: AtomicU64,
+    hot_swaps: AtomicU64,
     max_queue_depth: AtomicUsize,
 }
 
 impl StatsCollector {
-    pub fn record_response(&self, latency: Duration) {
-        self.latencies_ms
-            .lock()
-            .unwrap()
-            .push(latency.as_secs_f64() * 1e3);
+    pub fn record_response(&self, tier: SloTier, latency: Duration) {
+        let ms = latency.as_secs_f64() * 1e3;
+        self.latencies_ms.lock().unwrap().push(ms);
+        self.tier_latencies_ms.lock().unwrap()[tier.index()].push(ms);
         self.completed.fetch_add(1, Ordering::Relaxed);
+        self.completed_by_tier[tier.index()].fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, size: usize) {
@@ -35,8 +55,20 @@ impl StatsCollector {
     }
 
     /// A request dropped by the batcher because its deadline passed.
-    pub fn record_expired(&self) {
-        self.expired.fetch_add(1, Ordering::Relaxed);
+    pub fn record_expired(&self, tier: SloTier) {
+        self.expired_by_tier[tier.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One zero-downtime weight swap performed.
+    pub fn record_hot_swap(&self) {
+        self.hot_swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Final adaptive-window event totals (stored by the batcher thread
+    /// on exit).
+    pub fn set_window_events(&self, shrinks: u64, widens: u64) {
+        self.window_shrinks.store(shrinks, Ordering::Relaxed);
+        self.window_widens.store(widens, Ordering::Relaxed);
     }
 
     /// Admission backlog gauge (high-water mark).
@@ -48,22 +80,43 @@ impl StatsCollector {
         self.completed.load(Ordering::Relaxed)
     }
 
-    /// Fold everything into the final report.
-    pub fn report(&self, wall_seconds: f64, shed: u64, pool: &PoolReport) -> ServerStats {
+    /// Fold everything into the final report.  `admission` carries the
+    /// queue-side per-tier shed/expiry counters; batcher-side expirations
+    /// recorded here are merged in per tier.
+    pub fn report(
+        &self,
+        wall_seconds: f64,
+        admission: &TierCounts,
+        pool: &PoolReport,
+    ) -> ServerStats {
         let lat = self.latencies_ms.lock().unwrap().clone();
+        let tier_lat = self.tier_latencies_ms.lock().unwrap().clone();
         let batches = self.batch_sizes.lock().unwrap().clone();
         let completed = self.completed.load(Ordering::Relaxed);
         let max_batch = batches.iter().fold(0.0f64, |a, &b| a.max(b)) as usize;
+        let expired_by_tier: [u64; SloTier::COUNT] = std::array::from_fn(|i| {
+            admission.expired[i] + self.expired_by_tier[i].load(Ordering::Relaxed)
+        });
         ServerStats {
             completed,
-            shed,
-            expired: self.expired.load(Ordering::Relaxed),
+            shed: admission.shed.iter().sum(),
+            expired: expired_by_tier.iter().sum(),
             wall_seconds,
             throughput_rps: completed as f64 / wall_seconds.max(1e-12),
             mean_ms: mean(&lat),
             p50_ms: percentile(&lat, 50.0),
             p95_ms: percentile(&lat, 95.0),
             p99_ms: percentile(&lat, 99.0),
+            shed_by_tier: admission.shed,
+            expired_by_tier,
+            completed_by_tier: std::array::from_fn(|i| {
+                self.completed_by_tier[i].load(Ordering::Relaxed)
+            }),
+            tier_p50_ms: std::array::from_fn(|i| percentile(&tier_lat[i], 50.0)),
+            tier_p99_ms: std::array::from_fn(|i| percentile(&tier_lat[i], 99.0)),
+            window_shrinks: self.window_shrinks.load(Ordering::Relaxed),
+            window_widens: self.window_widens.load(Ordering::Relaxed),
+            hot_swaps: self.hot_swaps.load(Ordering::Relaxed),
             batches: batches.len() as u64,
             mean_batch: mean(&batches),
             max_batch,
@@ -83,9 +136,10 @@ impl StatsCollector {
 pub struct ServerStats {
     /// Requests fully served.
     pub completed: u64,
-    /// Requests shed at admission (bounded queue full).
+    /// Requests shed at admission (bounded lane full), all tiers.
     pub shed: u64,
-    /// Requests dropped because their deadline expired pre-dispatch.
+    /// Requests dropped because their deadline expired pre-dispatch
+    /// (admission-pop pruning + batcher pruning), all tiers.
     pub expired: u64,
     pub wall_seconds: f64,
     /// Sustained completions per second over the server's lifetime.
@@ -94,6 +148,22 @@ pub struct ServerStats {
     pub p50_ms: f64,
     pub p95_ms: f64,
     pub p99_ms: f64,
+    /// Per-tier admission sheds ([`SloTier`] dense order).
+    pub shed_by_tier: [u64; SloTier::COUNT],
+    /// Per-tier deadline expirations.
+    pub expired_by_tier: [u64; SloTier::COUNT],
+    /// Per-tier completions.
+    pub completed_by_tier: [u64; SloTier::COUNT],
+    /// Per-tier p50 latency (ms; 0 when a tier served nothing).
+    pub tier_p50_ms: [f64; SloTier::COUNT],
+    /// Per-tier p99 latency (ms).
+    pub tier_p99_ms: [f64; SloTier::COUNT],
+    /// Adaptive batch-window shrink events.
+    pub window_shrinks: u64,
+    /// Adaptive batch-window re-widen events.
+    pub window_widens: u64,
+    /// Zero-downtime weight swaps performed.
+    pub hot_swaps: u64,
     /// Micro-batches dispatched.
     pub batches: u64,
     pub mean_batch: f64,
@@ -130,6 +200,25 @@ impl ServerStats {
         t.row(vec!["latency p50 (ms)".into(), fmt(self.p50_ms)]);
         t.row(vec!["latency p95 (ms)".into(), fmt(self.p95_ms)]);
         t.row(vec!["latency p99 (ms)".into(), fmt(self.p99_ms)]);
+        for tier in SloTier::ALL {
+            let i = tier.index();
+            t.row(vec![
+                format!("tier {} done/shed/expired", tier.label()),
+                format!(
+                    "{}/{}/{}",
+                    self.completed_by_tier[i], self.shed_by_tier[i], self.expired_by_tier[i]
+                ),
+            ]);
+            t.row(vec![
+                format!("tier {} p50/p99 (ms)", tier.label()),
+                format!("{}/{}", fmt(self.tier_p50_ms[i]), fmt(self.tier_p99_ms[i])),
+            ]);
+        }
+        t.row(vec![
+            "window shrinks/widens".into(),
+            format!("{}/{}", self.window_shrinks, self.window_widens),
+        ]);
+        t.row(vec!["hot swaps".into(), self.hot_swaps.to_string()]);
         t.row(vec!["micro-batches".into(), self.batches.to_string()]);
         t.row(vec!["mean batch size".into(), fmt(self.mean_batch)]);
         t.row(vec!["max batch size".into(), self.max_batch.to_string()]);
@@ -169,11 +258,11 @@ mod tests {
     fn percentiles_and_counters_roll_up() {
         let c = StatsCollector::default();
         for i in 1..=100 {
-            c.record_response(Duration::from_millis(i));
+            c.record_response(SloTier::Standard, Duration::from_millis(i));
         }
         c.record_batch(2);
         c.record_batch(4);
-        c.record_expired();
+        c.record_expired(SloTier::Standard);
         c.observe_queue_depth(3);
         c.observe_queue_depth(9);
         c.observe_queue_depth(5);
@@ -186,7 +275,11 @@ mod tests {
             jobs_stolen: 3,
             ..Default::default()
         };
-        let s = c.report(10.0, 5, &pool);
+        let admission = TierCounts {
+            shed: [0, 5, 0],
+            expired: [0, 0, 0],
+        };
+        let s = c.report(10.0, &admission, &pool);
         assert_eq!(s.completed, 100);
         assert_eq!(s.shed, 5);
         assert_eq!(s.expired, 1);
@@ -205,5 +298,39 @@ mod tests {
         assert!(rendered.contains("jobs fc-gemm"));
         assert!(rendered.contains("jobs fc-gemm-batch"));
         assert!(rendered.contains("fc rows fused"));
+    }
+
+    #[test]
+    fn tier_counters_split_and_merge() {
+        let c = StatsCollector::default();
+        c.record_response(SloTier::Interactive, Duration::from_millis(5));
+        c.record_response(SloTier::Interactive, Duration::from_millis(7));
+        c.record_response(SloTier::Batch, Duration::from_millis(400));
+        // One batcher-side expiry + admission-side counters to merge.
+        c.record_expired(SloTier::Interactive);
+        c.record_hot_swap();
+        c.set_window_events(3, 2);
+        let admission = TierCounts {
+            shed: [0, 0, 11],
+            expired: [2, 0, 0],
+        };
+        let s = c.report(1.0, &admission, &PoolReport::default());
+        assert_eq!(s.completed, 3);
+        assert_eq!(s.completed_by_tier, [2, 0, 1]);
+        assert_eq!(s.shed, 11);
+        assert_eq!(s.shed_by_tier, [0, 0, 11]);
+        assert_eq!(s.expired, 3, "admission + batcher expirations merge");
+        assert_eq!(s.expired_by_tier, [3, 0, 0]);
+        assert!(s.tier_p99_ms[SloTier::Interactive.index()] <= 7.5);
+        assert!(s.tier_p50_ms[SloTier::Batch.index()] >= 399.0);
+        assert_eq!(s.tier_p50_ms[SloTier::Standard.index()], 0.0);
+        assert_eq!(s.window_shrinks, 3);
+        assert_eq!(s.window_widens, 2);
+        assert_eq!(s.hot_swaps, 1);
+        let rendered = s.render();
+        assert!(rendered.contains("tier interactive done/shed/expired"));
+        assert!(rendered.contains("tier batch p50/p99"));
+        assert!(rendered.contains("hot swaps"));
+        assert!(rendered.contains("window shrinks/widens"));
     }
 }

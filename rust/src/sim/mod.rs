@@ -7,10 +7,16 @@
 //! thief, the MMU/DDR memory subsystem, and the board power model.  Every
 //! figure/table of §4 is regenerated from [`system::simulate`] runs.
 
+//! [`tiered`] replays scripted SLO-tiered arrival traces against the
+//! *real* serving admission queue and micro-batcher on a virtual clock —
+//! the deterministic harness behind `tests/serving_tiers.rs`.
+
 pub mod cpu_model;
 pub mod power;
 pub mod system;
+pub mod tiered;
 
 pub use cpu_model::CpuModel;
 pub use power::{EnergyBreakdown, PowerModel};
 pub use system::{simulate, SimResult, SimSpec};
+pub use tiered::{simulate_tiered, Served, TieredArrival, TieredOutcome, TieredSpec};

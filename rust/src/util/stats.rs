@@ -1,6 +1,8 @@
 //! Streaming and batch statistics used by the metrics collectors and the
 //! bench harness.
 
+use std::collections::VecDeque;
+
 /// Welford online mean/variance accumulator.
 #[derive(Debug, Default, Clone)]
 pub struct Welford {
@@ -57,6 +59,59 @@ impl Welford {
 
     pub fn max(&self) -> f64 {
         if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Rolling-window quantile estimator over the last `cap` samples.
+///
+/// The serving batcher feeds per-tier *deadline headroom* samples (ms of
+/// budget left when a request dispatches) through one of these; the
+/// adaptive batch-window policy reads a low quantile back to decide
+/// whether batching delay is eating the tier's tail budget.  A bounded
+/// window (not a decaying sketch) keeps the estimate deterministic for a
+/// deterministic sample sequence — the virtual-time tests rely on that.
+#[derive(Debug, Clone)]
+pub struct RollingQuantile {
+    cap: usize,
+    buf: VecDeque<f64>,
+}
+
+impl RollingQuantile {
+    /// `cap` is clamped to ≥ 1.
+    pub fn new(cap: usize) -> RollingQuantile {
+        let cap = cap.max(1);
+        RollingQuantile {
+            cap,
+            buf: VecDeque::with_capacity(cap),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Nearest-rank quantile over the current window; `None` when empty.
+    pub fn quantile(&self, pct: f64) -> Option<f64> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let samples: Vec<f64> = self.buf.iter().copied().collect();
+        Some(percentile(&samples, pct))
     }
 }
 
@@ -118,6 +173,34 @@ mod tests {
     fn geomean_of_powers() {
         assert!((geomean(&[1.0, 4.0, 16.0]) - 4.0).abs() < 1e-12);
         assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn rolling_quantile_windows_out_old_samples() {
+        let mut r = RollingQuantile::new(4);
+        assert_eq!(r.quantile(50.0), None);
+        for x in [10.0, 20.0, 30.0, 40.0] {
+            r.push(x);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.quantile(0.0), Some(10.0));
+        assert_eq!(r.quantile(100.0), Some(40.0));
+        // Two more pushes evict 10 and 20: the low quantile moves up.
+        r.push(50.0);
+        r.push(60.0);
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.quantile(0.0), Some(30.0));
+        assert_eq!(r.quantile(100.0), Some(60.0));
+    }
+
+    #[test]
+    fn rolling_quantile_cap_clamps_to_one() {
+        let mut r = RollingQuantile::new(0);
+        assert_eq!(r.cap(), 1);
+        r.push(1.0);
+        r.push(2.0);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.quantile(50.0), Some(2.0));
     }
 
     #[test]

@@ -26,6 +26,13 @@
 //!   mid-run loses zero jobs, and the dead member is evicted from routing
 //!   (its ledger row freezes — no further route attempts) while the
 //!   surviving shard keeps serving.
+//! * **(h)** **operand-cache edge cases** (ISSUE 8): the LRU eviction
+//!   floor never drops the two most-recent entries no matter how far a
+//!   single fetch-set pair overshoots capacity, a shard that never
+//!   retains operands exhausts the bounded miss→re-PUT→retry cycle as a
+//!   clean error (not a livelock), and the shared-cache hit/miss/evict
+//!   counters balance exactly against two clients' ledgers under
+//!   interleaved connections.
 //!
 //! Everything is constructed through the public registry API — `rt/`
 //! knows nothing about shards.
@@ -36,8 +43,8 @@ use std::thread::JoinHandle;
 
 use anyhow::anyhow;
 use synergy::accel::remote::{
-    duplex_pair, remote_class_mask, serve_transport, shard_backend_name, wire, RemoteShard,
-    REMOTE_OVERHEAD_KSTEPS,
+    duplex_pair, remote_class_mask, serve_shard_transport, serve_transport, shard_backend_name,
+    wire, RemoteShard, ShardCache, ShardTransport, REMOTE_OVERHEAD_KSTEPS,
 };
 use synergy::accel::{
     register_config_shards, AccelClass, Accelerator, BackendRegistry, NativeGemm,
@@ -843,4 +850,228 @@ fn killing_one_fleet_shard_loses_nothing_and_evicts_it_from_routing() {
     assert_eq!(report.inline_fallbacks, 0);
     assert_eq!(report.delegate_failures, 1);
     assert_eq!(report.evicted_members, 1);
+}
+
+/// (h) Eviction floor: `ShardCache::put` never drops below the **two**
+/// most-recent entries, no matter how far each buffer overshoots the
+/// nominal capacity — the fetch-set *pair* one CONV tile references must
+/// always be co-resident or the miss→re-PUT→retry cycle would thrash
+/// forever on a cache smaller than one working set.
+#[test]
+fn shard_cache_eviction_floor_never_drops_the_mru_pair() {
+    // Capacity far below a single buffer: every put is over capacity.
+    let cache = ShardCache::with_capacity_elems(10);
+    cache.put((7, 0), vec![0.5; 64]);
+    cache.put((7, 1), vec![1.5; 64]);
+    for round in 2..6u64 {
+        cache.put((7, round), vec![round as f32; 64]);
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 2, "round {round}: the floor is the MRU pair");
+        assert_eq!(stats.elems, 2 * 64, "round {round}");
+    }
+    // Each over-capacity put evicted exactly one LRU peer, and the
+    // survivors are exactly the two most recently put keys.
+    assert_eq!(cache.stats().evictions, 4);
+    assert!(cache.get((7, 4)).is_some(), "second-most-recent key evicted");
+    assert!(cache.get((7, 5)).is_some(), "just-put key evicted");
+    for old in 0..4u64 {
+        assert!(cache.get((7, old)).is_none(), "stale key {old} survived the floor");
+    }
+
+    // Recency follows *touches*, not insertion order: bumping the older
+    // entry with a get flips which peer the next put evicts.
+    let cache = ShardCache::with_capacity_elems(10);
+    cache.put((9, 1), vec![1.0; 64]);
+    cache.put((9, 2), vec![2.0; 64]);
+    assert!(cache.get((9, 1)).is_some()); // recency bump
+    cache.put((9, 3), vec![3.0; 64]);
+    assert!(cache.get((9, 2)).is_none(), "untouched peer must be the victim");
+    assert!(cache.get((9, 1)).is_some());
+    assert!(cache.get((9, 3)).is_some());
+    assert_eq!(cache.stats().evictions, 1);
+
+    // Refreshing a resident key replaces its payload in place: no
+    // eviction, and the element ledger tracks the new size.
+    cache.put((9, 1), vec![4.0; 32]);
+    let stats = cache.stats();
+    assert_eq!(stats.entries, 2);
+    assert_eq!(stats.elems, 64 + 32);
+    assert_eq!(stats.evictions, 1);
+    assert_eq!(cache.get((9, 1)).unwrap().len(), 32);
+}
+
+/// (h) Retry cap: a shard that answers every descriptor REF with
+/// `CACHE_MISS` (it accepts PUTs but never retains them) must exhaust the
+/// client's bounded re-ship cycle — exactly three REF attempts, both keys
+/// re-PUT after each — and surface as a clean "kept missing" error
+/// instead of livelocking the delegate thread.
+#[test]
+fn amnesiac_shard_exhausts_the_miss_retry_cap_as_an_error() {
+    let (client, mut server) = duplex_pair();
+    let fake = std::thread::Builder::new()
+        .name("amnesiac-shard".into())
+        .spawn(move || {
+            let (mut puts, mut refs) = (0u64, 0u64);
+            loop {
+                let frame = match server.recv() {
+                    Ok(frame) => frame,
+                    Err(_) => return (puts, refs), // client hung up
+                };
+                match wire::decode_shard_frame(&frame).unwrap() {
+                    wire::ShardFrame::OperandPut { .. } => puts += 1,
+                    wire::ShardFrame::OperandDrop { .. } => {}
+                    wire::ShardFrame::ConvTileRef { desc, a, b } => {
+                        refs += 1;
+                        let miss = wire::encode_cache_miss(&desc, &[a.key, b.key]);
+                        if server.send(&miss).is_err() {
+                            return (puts, refs);
+                        }
+                    }
+                    _ => panic!("amnesiac shard got a non-cache frame"),
+                }
+            }
+        })
+        .expect("spawn amnesiac shard");
+
+    // One CONV tile (32×64×32 at ts=32 is a 1×1 grid) through the cached
+    // path against the shard that forgets everything.
+    let mut shard = RemoteShard::over_duplex("remote:amnesiac", client);
+    let grid = TileGrid::new(32, 64, 32, 32);
+    let a = Arc::new(XorShift64Star::new(51).fill_f32(32 * 64, 1.0));
+    let b = Arc::new(XorShift64Star::new(52).fill_f32(64 * 32, 1.0));
+    let mut id = 0;
+    let jobs = jobs_for_gemm(0, 0, grid, a, b, &mut id);
+    assert_eq!(jobs.len(), 1);
+
+    let err = shard
+        .execute(&jobs[0])
+        .expect_err("a shard that never retains operands must fail the job");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("kept missing"), "unexpected error: {msg}");
+
+    // The cap is visible in the client ledger: 3 REF attempts, a miss for
+    // each, the initial plane pair plus both keys re-shipped per round.
+    let stats = shard.cache_stats();
+    assert_eq!(stats.refs, 3, "retry cap must be three descriptor attempts");
+    assert_eq!(stats.misses, 3);
+    assert_eq!(stats.puts, 2 + 3 * 2, "{stats:?}");
+    assert_eq!(stats.drops, 0);
+
+    // …and in the fake shard's own frame counts.
+    drop(shard);
+    let (puts, refs) = fake.join().unwrap();
+    assert_eq!(refs, 3);
+    assert_eq!(puts, 8);
+}
+
+/// (h) Shared-cache accounting balance: two client connections against ONE
+/// `ShardCache` (the `ShardServer` topology), interleaved tile-for-tile.
+/// Resident planes never miss; pushing past capacity evicts and the
+/// affected client recovers transparently and bit-identically; and the
+/// server-side hit/miss/evict counters balance *exactly* against both
+/// clients' REF/PUT ledgers.
+#[test]
+fn shared_cache_stats_balance_across_interleaved_connections() {
+    // Sized to exactly four packed planes — two layers' fetch sets.
+    const PLANE: usize = 2 * 2 * 32 * 32; // tiles × k_tiles × ts² on this grid
+    let cache = ShardCache::with_capacity_elems(4 * PLANE);
+    let (client_a, server_a) = duplex_pair();
+    let (client_b, server_b) = duplex_pair();
+    let cache_for = |mut server: Box<dyn ShardTransport>, name: &str| {
+        let cache = Arc::clone(&cache);
+        std::thread::Builder::new()
+            .name(name.into())
+            .spawn(move || {
+                serve_shard_transport(&mut *server, &cache, 0.0, |job| Ok(job.execute_native()))
+                    .unwrap()
+            })
+            .expect("spawn shared-cache shard")
+    };
+    let thread_a = cache_for(Box::new(server_a), "ilv-a");
+    let thread_b = cache_for(Box::new(server_b), "ilv-b");
+
+    let grid = TileGrid::new(40, 50, 60, 32);
+    let mut id = 0;
+    let mut mk_layer = |layer: usize, seed: u64| {
+        let a = Arc::new(XorShift64Star::new(seed).fill_f32(40 * 50, 1.0));
+        let b = Arc::new(XorShift64Star::new(seed + 1).fill_f32(50 * 60, 1.0));
+        jobs_for_gemm(layer, 1, grid, a, b, &mut id)
+    };
+    let layer0 = mk_layer(0, 61);
+    let layer1 = mk_layer(1, 63);
+    let layer2 = mk_layer(2, 65);
+    assert_eq!(layer0.len(), 4, "40×50×60 at ts=32 is a 2×2 tile grid");
+
+    let mut shard_a = RemoteShard::over_duplex("remote:ilv-a", client_a);
+    let mut shard_b = RemoteShard::over_duplex("remote:ilv-b", client_b);
+    let check = |shard: &mut RemoteShard, job: &Job| {
+        let got = shard.execute(job).unwrap();
+        assert_eq!(got.data, job.execute_native().data, "job {}", job.desc.job_id);
+    };
+
+    // Cold round + warm round, strictly interleaved across connections:
+    // all four planes stay resident, so nothing may miss or evict.
+    for round in 0..2 {
+        for i in 0..4 {
+            check(&mut shard_a, &layer0[i]);
+            check(&mut shard_b, &layer1[i]);
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 4, "round {round}");
+        assert_eq!(stats.elems, 4 * PLANE, "round {round}");
+        assert_eq!(stats.misses, 0, "resident planes must never miss");
+        assert_eq!(stats.evictions, 0, "round {round}");
+    }
+    // 16 REF frames so far, exactly two lookups each — all hits.
+    assert_eq!(cache.stats().hits, 32);
+
+    // Connection A brings in a third layer: two more planes push the one
+    // shared cache over capacity and evict the least-recently-touched.
+    for job in &layer2 {
+        check(&mut shard_a, job);
+    }
+    let mid = cache.stats();
+    assert!(mid.evictions >= 2, "{mid:?}");
+    assert!(mid.elems <= 4 * PLANE, "{mid:?}");
+
+    // Both clients re-run their first layer.  Their `shipped` sets still
+    // claim the keys, but the shared cache evicted some — the
+    // miss→re-PUT→retry cycle recovers transparently, bit-identically.
+    for i in 0..4 {
+        check(&mut shard_a, &layer0[i]);
+        check(&mut shard_b, &layer1[i]);
+    }
+
+    let (sa, sb) = (shard_a.cache_stats(), shard_b.cache_stats());
+    let server = cache.stats();
+    // Exact balance #1: every REF frame the server handled did exactly two
+    // lookups — across BOTH connections against the one cache.
+    assert_eq!(
+        server.hits + server.misses,
+        2 * (sa.refs + sb.refs),
+        "lookup ledger drifted: server {server:?}, clients {sa:?} / {sb:?}"
+    );
+    // Exact balance #2: every failed server lookup named one missing key
+    // in a CACHE_MISS reply, and the owning client re-PUT exactly that key
+    // — so total PUTs are the six cold planes plus one per server miss.
+    assert_eq!(
+        sa.puts + sb.puts,
+        6 + server.misses,
+        "re-ship ledger drifted: server {server:?}, clients {sa:?} / {sb:?}"
+    );
+    // The over-capacity re-run must actually have exercised recovery, and
+    // each client CACHE_MISS reply carried one or two missing keys.
+    let client_misses = sa.misses + sb.misses;
+    assert!(client_misses >= 1, "eviction recovery never ran: {sa:?} / {sb:?}");
+    assert!(
+        server.misses >= client_misses && server.misses <= 2 * client_misses,
+        "miss ledgers inconsistent: server {server:?}, clients {sa:?} / {sb:?}"
+    );
+    assert_eq!(sa.drops + sb.drops, 0, "no pack bump happened");
+
+    // Served counts: misses don't execute; every request completed once.
+    drop(shard_a);
+    drop(shard_b);
+    assert_eq!(thread_a.join().unwrap(), 16);
+    assert_eq!(thread_b.join().unwrap(), 12);
 }

@@ -1,0 +1,399 @@
+//! Deterministic serving-tier harness: the SLO-tier invariants pinned on
+//! a virtual clock, plus the zero-downtime hot-swap contract on the real
+//! server.
+//!
+//! The virtual-time half drives the **real** admission queue and
+//! micro-batcher through `sim::tiered` (explicit-`now` entry points, no
+//! wall-clock reads between events), so ordering assertions are exact and
+//! replayable:
+//! * interactive traffic is never shed while batch-lane work is being
+//!   admitted (per-tier depth budgets);
+//! * within a lane, deadlined requests dispatch in EDF order;
+//! * the batch-lane escape ratio serves bulk work every Nth pop under a
+//!   sustained foreground flood;
+//! * per-tier conservation: arrivals = served + shed + expired, per tier,
+//!   on randomized traces (`SCHED_SEED=<n>` selects the case family; CI
+//!   sweeps a matrix).
+//!
+//! The real-server half proves the hot-swap contract: a mid-stream weight
+//! swap loses zero in-flight requests, every response matches the
+//! reference forward of the weight version it reports — never the other
+//! version's — and each version packs its CONV weights exactly once.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use synergy::config::zoo;
+use synergy::nn::Network;
+use synergy::serve::{Request, ServeOptions, Server, SloTier};
+use synergy::sim::tiered::{simulate_tiered, TieredArrival, TieredSpec};
+use synergy::util::proptest::{check, Gen};
+
+fn arrival(at_us: u64, tier: SloTier, stream_id: usize) -> TieredArrival {
+    TieredArrival {
+        at_us,
+        net_id: 0,
+        stream_id,
+        tier,
+        deadline_us: None,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Virtual-time tier invariants (deterministic, no threads).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn interactive_never_shed_while_batch_floods() {
+    // Batch tier floods a shallow lane; interactive fills its own budget.
+    let mut spec = TieredSpec {
+        lane_depth: 4,
+        ..TieredSpec::default()
+    };
+    spec.batch.max_batch = 2;
+    for i in 0..50 {
+        spec.arrivals.push(arrival(0, SloTier::Batch, i));
+    }
+    for i in 0..4 {
+        spec.arrivals.push(arrival(1, SloTier::Interactive, i));
+    }
+    spec.arrivals.sort_by_key(|a| a.at_us);
+    let out = simulate_tiered(&spec);
+    let ii = SloTier::Interactive.index();
+    let bi = SloTier::Batch.index();
+    assert_eq!(
+        out.admission.shed[ii], 0,
+        "interactive must never shed while batch admits: {out:?}"
+    );
+    assert_eq!(out.completed_by_tier()[ii], 4, "all interactive served");
+    assert_eq!(out.admission.shed[bi], 46, "batch flood sheds only itself");
+    assert_eq!(out.completed_by_tier()[bi], 4, "admitted batch work drains");
+}
+
+#[test]
+fn edf_orders_dispatch_within_a_lane() {
+    // One tier, every request deadlined, batch size 1: dispatch order
+    // must be exactly ascending due time, regardless of submit order.
+    let mut spec = TieredSpec {
+        service_base_us: 1_000,
+        service_per_item_us: 0,
+        ..TieredSpec::default()
+    };
+    spec.batch.max_batch = 1;
+    let deadlines_us = [90_000u64, 30_000, 70_000, 50_000, 110_000];
+    for (i, d) in deadlines_us.iter().enumerate() {
+        spec.arrivals.push(TieredArrival {
+            at_us: 0,
+            net_id: 0,
+            stream_id: i,
+            tier: SloTier::Standard,
+            deadline_us: Some(*d),
+        });
+    }
+    let out = simulate_tiered(&spec);
+    assert_eq!(out.served.len(), 5);
+    let mut by_dispatch = out.served.clone();
+    by_dispatch.sort_by_key(|s| s.batch_index);
+    let dues: Vec<u64> = by_dispatch.iter().map(|s| s.due_us.unwrap()).collect();
+    let mut sorted = dues.clone();
+    sorted.sort_unstable();
+    assert_eq!(dues, sorted, "EDF violated: {dues:?}");
+}
+
+#[test]
+fn escape_ratio_serves_batch_every_nth_pop_under_flood() {
+    // 30 interactive + 6 batch, all backlogged at t=0, escape every 3rd
+    // pop, batch size 1: pops 3, 6, 9, … serve the batch lane.
+    let mut spec = TieredSpec {
+        escape_every: 3,
+        lane_depth: 64,
+        ..TieredSpec::default()
+    };
+    spec.batch.max_batch = 1;
+    for i in 0..30 {
+        spec.arrivals.push(arrival(0, SloTier::Interactive, i % 4));
+    }
+    for i in 0..6 {
+        spec.arrivals.push(arrival(0, SloTier::Batch, 10 + i));
+    }
+    let out = simulate_tiered(&spec);
+    assert_eq!(out.served.len(), 36);
+    assert_eq!(out.dropped(), 0);
+    let mut by_dispatch = out.served.clone();
+    by_dispatch.sort_by_key(|s| s.batch_index);
+    for (pos, s) in by_dispatch.iter().enumerate() {
+        let expect_batch = (pos + 1) % 3 == 0 && pos < 18;
+        assert_eq!(
+            s.tier == SloTier::Batch,
+            expect_batch,
+            "pop {} served {:?}; escape schedule violated",
+            pos + 1,
+            s.tier
+        );
+    }
+    // Starvation-proof: the last batch request finishes well before the
+    // interactive flood is drained.
+    let last_batch = by_dispatch
+        .iter()
+        .filter(|s| s.tier == SloTier::Batch)
+        .map(|s| s.batch_index)
+        .max()
+        .unwrap();
+    assert!(last_batch < 18, "batch work starved to the flood's tail");
+}
+
+#[test]
+fn deadline_storm_prunes_in_lane_and_counts_per_tier() {
+    // The half-expired-lane regression at the harness level: a storm of
+    // short deadlines against a slow server expires *in the lane* (pop
+    // pruning), with exact per-tier accounting and zero silent loss.
+    let mut spec = TieredSpec {
+        service_base_us: 20_000,
+        service_per_item_us: 0,
+        ..TieredSpec::default()
+    };
+    spec.batch.max_batch = 1;
+    for i in 0..8 {
+        spec.arrivals.push(TieredArrival {
+            at_us: 0,
+            net_id: 0,
+            stream_id: i,
+            tier: SloTier::Interactive,
+            deadline_us: Some(if i % 2 == 0 { 10_000 } else { 500_000 }),
+        });
+    }
+    let out = simulate_tiered(&spec);
+    let ii = SloTier::Interactive.index();
+    let expired = out.admission.expired[ii] + out.expired_in_batcher[ii];
+    assert_eq!(
+        out.served.len() as u64 + expired,
+        8,
+        "conservation: {out:?}"
+    );
+    assert!(expired >= 3, "the short-deadline half must mostly lapse");
+    // No served request was dispatched past its deadline by more than the
+    // service time (it was live at dispatch — pruning is at pop time).
+    for s in &out.served {
+        if let Some(due) = s.due_us {
+            let dispatch = s.finish_us - spec.service_base_us;
+            assert!(
+                dispatch <= due,
+                "request dispatched after lapsing: {s:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn randomized_tier_traces_conserve_and_replay() {
+    check("serving-tier-invariants", 16, |g: &mut Gen| {
+        let n = g.usize_in(8, 40);
+        let mut spec = TieredSpec {
+            lane_depth: g.usize_in(2, 16),
+            escape_every: g.usize_in(0, 4) as u64,
+            ready_cap: g.usize_in(1, 2),
+            service_base_us: 100 + 100 * g.usize_in(0, 19) as u64,
+            service_per_item_us: 50 * g.usize_in(0, 4) as u64,
+            ..TieredSpec::default()
+        };
+        spec.batch.max_batch = g.usize_in(1, 4);
+        let mut per_tier_arrivals = [0u64; SloTier::COUNT];
+        let mut t = 0u64;
+        for i in 0..n {
+            t += 500 * g.usize_in(0, 4) as u64;
+            let tier = *g.choose(&SloTier::ALL);
+            per_tier_arrivals[tier.index()] += 1;
+            spec.arrivals.push(TieredArrival {
+                at_us: t,
+                net_id: 0,
+                stream_id: i % 5,
+                tier,
+                deadline_us: g.bool().then(|| 5_000 + 2_500 * g.usize_in(0, 30) as u64),
+            });
+        }
+        let out = simulate_tiered(&spec);
+        // (1) Per-tier conservation: every arrival is served, shed, or
+        //     expired — nothing vanishes, nothing double-counts.
+        let done = out.completed_by_tier();
+        for ti in 0..SloTier::COUNT {
+            assert_eq!(
+                done[ti]
+                    + out.admission.shed[ti]
+                    + out.admission.expired[ti]
+                    + out.expired_in_batcher[ti],
+                per_tier_arrivals[ti],
+                "tier {ti} leaked requests: {out:?}"
+            );
+        }
+        // (2) A tier whose arrivals fit its lane depth never sheds (the
+        //     other tiers' floods cannot displace it).
+        for ti in 0..SloTier::COUNT {
+            if per_tier_arrivals[ti] <= spec.lane_depth as u64 {
+                assert_eq!(out.admission.shed[ti], 0, "tier {ti} displaced");
+            }
+        }
+        // (3) Bit-deterministic replay.
+        let again = simulate_tiered(&spec);
+        let key = |s: &synergy::sim::tiered::Served| {
+            (s.stream_id, s.seq, s.batch_index, s.submit_us, s.finish_us)
+        };
+        assert_eq!(
+            out.served.iter().map(key).collect::<Vec<_>>(),
+            again.served.iter().map(key).collect::<Vec<_>>(),
+            "replay diverged"
+        );
+        assert_eq!(out.admission.shed, again.admission.shed);
+        assert_eq!(out.admission.expired, again.admission.expired);
+        assert_eq!(out.window_events, again.window_events);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Hot-swap on the real server (threads, real pool).
+// ---------------------------------------------------------------------------
+
+fn mk_named(name: &str) -> Arc<Network> {
+    let mut cfg = zoo::load("mnist").unwrap();
+    cfg.name = name.to_string();
+    Arc::new(Network::new(cfg, 32).unwrap())
+}
+
+#[test]
+fn hot_swap_mid_stream_loses_nothing_and_matches_pinned_version() {
+    let v0 = mk_named("mnist");
+    let v1 = mk_named("mnist_v2"); // same architecture, different weights
+    let mut options = ServeOptions::default();
+    options.batch.max_batch = 2;
+    options.batch.window = Duration::from_millis(2);
+    options.admission_depth = 64;
+    let server = Server::start(vec![Arc::clone(&v0)], options).unwrap();
+    assert_eq!(server.net_version(0), 0);
+
+    // First half of the stream, then the swap lands mid-flight, then the
+    // second half.  Inputs always come from v0's generator — the client
+    // doesn't know (or care) which weights serve it.
+    for seq in 0..8u64 {
+        let req = Request::new(0, seq, 0, v0.make_input(seq));
+        assert!(server.submit(req));
+    }
+    let new_version = server.hot_swap(0, Arc::clone(&v1)).unwrap();
+    assert_eq!(new_version, 1);
+    assert_eq!(server.net_version(0), 1);
+    for seq in 8..16u64 {
+        let req = Request::new(0, seq, 0, v0.make_input(seq));
+        assert!(server.submit(req));
+    }
+
+    let (stats, responses) = server.shutdown().unwrap();
+    // Zero loss across the swap: everything admitted completed.
+    assert_eq!(stats.completed, 16, "hot-swap lost in-flight requests");
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.expired, 0);
+    assert_eq!(stats.hot_swaps, 1);
+    assert_eq!(responses.len(), 16);
+
+    // Every response matches the reference forward of the version it
+    // reports — and is farther from the other version's output, so the
+    // version tag is load-bearing, not decorative.
+    let mut served_by_version = [0u64; 2];
+    for resp in &responses {
+        assert!(resp.version <= 1, "impossible version {}", resp.version);
+        served_by_version[resp.version as usize] += 1;
+        let input = v0.make_input(resp.frame);
+        let own = if resp.version == 0 { &v0 } else { &v1 };
+        let other = if resp.version == 0 { &v1 } else { &v0 };
+        let want = own.forward_reference(&input);
+        let not_want = other.forward_reference(&input);
+        let own_err = resp.output.max_abs_diff(&want);
+        let other_err = resp.output.max_abs_diff(&not_want);
+        assert!(
+            own_err < 1e-4,
+            "seq {} diverged from its pinned version {}: {own_err}",
+            resp.seq,
+            resp.version
+        );
+        assert!(
+            other_err > own_err,
+            "seq {} output does not distinguish the versions",
+            resp.seq
+        );
+    }
+    // The swap is observable: requests submitted after it ran on v1
+    // (batches formed before it may legitimately drain on v0).
+    assert!(served_by_version[1] >= 8, "post-swap requests must see v1");
+
+    // Each version packed its CONV weights exactly once — serving across
+    // a swap never repacks on the hot path.
+    for net in [&v0, &v1] {
+        for (idx, layer) in net.config.layers.iter().enumerate() {
+            if layer.is_conv() {
+                assert_eq!(net.weight_pack_count(idx), 1, "layer {idx} repacked");
+            }
+        }
+    }
+}
+
+#[test]
+fn hot_swap_rejects_incompatible_replacements() {
+    let v0 = mk_named("mnist");
+    let server = Server::start(vec![Arc::clone(&v0)], ServeOptions::default()).unwrap();
+    // Different architecture: rejected, version unchanged.
+    let other = Arc::new(Network::new(zoo::load("mpcnn").unwrap(), 32).unwrap());
+    assert!(server.hot_swap(0, other).is_err());
+    // Same architecture, different tile size: rejected.
+    let retiled = {
+        let mut cfg = zoo::load("mnist").unwrap();
+        cfg.name = "mnist_t16".into();
+        Arc::new(Network::new(cfg, 16).unwrap())
+    };
+    assert!(server.hot_swap(0, retiled).is_err());
+    // Unknown slot: rejected.
+    assert!(server.hot_swap(7, Arc::clone(&v0)).is_err());
+    assert_eq!(server.net_version(0), 0, "failed swaps must not bump");
+    let (stats, _) = server.shutdown().unwrap();
+    assert_eq!(stats.hot_swaps, 0);
+}
+
+// ---------------------------------------------------------------------------
+// Tier plumbing end to end on the real server.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tiers_ride_through_the_real_server() {
+    let v0 = mk_named("mnist");
+    let mut options = ServeOptions::default();
+    options.batch.max_batch = 4;
+    options.batch.window = Duration::from_millis(2);
+    // Exercise the tier-default deadline stamping with a roomy budget.
+    options.hw.serving.interactive_deadline_ms = 60_000;
+    let server = Server::start(vec![Arc::clone(&v0)], options).unwrap();
+    for seq in 0..4u64 {
+        let req = Request::new(0, seq, 0, v0.make_input(seq))
+            .with_tier(SloTier::Interactive);
+        assert!(server.submit(req));
+    }
+    for seq in 4..8u64 {
+        let req =
+            Request::new(1, seq, 0, v0.make_input(seq)).with_tier(SloTier::Batch);
+        assert!(server.submit(req));
+    }
+    let (stats, responses) = server.shutdown().unwrap();
+    assert_eq!(stats.completed, 8);
+    assert_eq!(stats.completed_by_tier[SloTier::Interactive.index()], 4);
+    assert_eq!(stats.completed_by_tier[SloTier::Batch.index()], 4);
+    assert_eq!(stats.expired, 0, "60s default budget cannot lapse here");
+    for resp in responses {
+        let expect = if resp.seq < 4 {
+            SloTier::Interactive
+        } else {
+            SloTier::Batch
+        };
+        assert_eq!(resp.tier, expect, "tier must ride through to the response");
+        // Tiers never share a batch.
+        assert!(resp.batch_size <= 4);
+    }
+    assert!(
+        stats.tier_p99_ms[SloTier::Interactive.index()] > 0.0,
+        "per-tier latency recorded"
+    );
+}

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Fold measured timings from a CI bench artifact into BENCH_hotpath.json.
+
+The committed baseline pins the *deterministic* byte ledgers (operand-plane
+copies, shard wire bytes) and deliberately leaves the machine-dependent
+timing fields (`mean_us`, `fps_host`) null.  CI's bench-sweep job uploads a
+fully measured ``bench_hotpath.json`` per run; this tool merges exactly
+those timing fields into the baseline — and **refuses** if any byte ledger
+of the measured file disagrees with the committed one, because a timing
+refresh must never smuggle in a ledger drift.
+
+Usage:
+    python3 tools/refresh_bench_baseline.py --measured rust/bench_hotpath.json \
+        [--baseline BENCH_hotpath.json] [--output BENCH_hotpath.refreshed.json] \
+        [--note "ci run 12345"]
+
+With no --output the baseline file is rewritten in place.  Exit codes:
+0 = merged, 1 = ledger mismatch or malformed input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+# (section, phase, field) triples whose equality gates the refresh.
+LEDGER_FIELDS = [
+    ("operand_plane", "before", "bytes_copied"),
+    ("operand_plane", "before", "copy_events"),
+    ("operand_plane", "after", "bytes_copied"),
+    ("operand_plane", "after", "copy_events"),
+    ("shard_wire", "baseline", "wire_bytes"),
+    ("shard_wire", "cold", "wire_bytes"),
+    ("shard_wire", "warm", "wire_bytes"),
+]
+
+# (section, phase-or-None, field) timing slots the refresh copies over.
+TIMING_FIELDS = [
+    ("operand_plane", "before", "mean_us"),
+    ("operand_plane", "after", "mean_us"),
+    ("pipeline", None, "fps_host"),
+]
+
+
+def dig(doc: dict, section: str, phase: str | None, field: str):
+    node = doc[section] if phase is None else doc[section][phase]
+    return node[field]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--measured", required=True, help="CI artifact (bench_hotpath.json)")
+    ap.add_argument("--baseline", default="BENCH_hotpath.json", help="committed baseline")
+    ap.add_argument("--output", default=None, help="write here instead of in place")
+    ap.add_argument("--note", default=None, help="provenance note, e.g. the CI run id")
+    args = ap.parse_args()
+
+    measured = json.loads(Path(args.measured).read_text())
+    baseline_path = Path(args.baseline)
+    baseline = json.loads(baseline_path.read_text())
+
+    if measured.get("bench") != baseline.get("bench"):
+        print(
+            f"refusing: bench id mismatch "
+            f"({measured.get('bench')!r} vs {baseline.get('bench')!r})",
+            file=sys.stderr,
+        )
+        return 1
+    if measured.get("schema_version") != baseline.get("schema_version"):
+        print("refusing: schema_version mismatch", file=sys.stderr)
+        return 1
+
+    # Gate: every deterministic byte ledger must match the committed
+    # baseline exactly before any timing is taken from the measured file.
+    mismatches = []
+    for section, phase, field in LEDGER_FIELDS:
+        try:
+            got = dig(measured, section, phase, field)
+            want = dig(baseline, section, phase, field)
+        except KeyError as missing:
+            print(f"refusing: {args.measured} lacks {section}.{phase}.{field} ({missing})",
+                  file=sys.stderr)
+            return 1
+        if got != want:
+            mismatches.append(f"{section}.{phase}.{field}: measured {got} != baseline {want}")
+    if mismatches:
+        print("refusing: byte ledgers drifted — fix the regression (or, if the",
+              file=sys.stderr)
+        print("change is intentional, re-derive the baseline ledgers by hand):",
+              file=sys.stderr)
+        for line in mismatches:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+
+    # Merge exactly the timing slots; a null measured timing means the
+    # artifact is unusable for a refresh.
+    for section, phase, field in TIMING_FIELDS:
+        value = dig(measured, section, phase, field)
+        if value is None:
+            print(f"refusing: measured {section}.{phase or ''}.{field} is null",
+                  file=sys.stderr)
+            return 1
+        node = baseline[section] if phase is None else baseline[section][phase]
+        node[field] = value
+
+    quick = " (--quick run)" if measured.get("quick") else ""
+    note = f" [{args.note}]" if args.note else ""
+    baseline["provenance"] = (
+        "ledgers: deterministic byte counts pinned by the committed baseline; "
+        f"timings: refreshed from a measured CI artifact{quick}{note} via "
+        "tools/refresh_bench_baseline.py — machine-dependent, compare trends "
+        "only across the same runner class."
+    )
+
+    out = Path(args.output) if args.output else baseline_path
+    out.write_text(json.dumps(baseline, indent=2) + "\n")
+    refreshed = ", ".join(
+        f"{s}.{p + '.' if p else ''}{f}" for s, p, f in TIMING_FIELDS
+    )
+    print(f"wrote {out}: ledgers verified, refreshed {refreshed}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
