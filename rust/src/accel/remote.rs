@@ -74,7 +74,7 @@ use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
@@ -83,6 +83,7 @@ use crate::config::HwConfig;
 use crate::mm::job::{ClassMask, Job, JobClass, JobDesc, JobKind, JobResult};
 use crate::mm::operand::{operand_key, OperandKey, OperandView};
 use crate::mm::TileGrid;
+use crate::util::sync::{lock_clean, Mutex};
 
 /// Job classes a remote shard advertises: only the classes whose per-job
 /// work amortizes a transport round trip (see the module docs).
@@ -851,7 +852,7 @@ impl ShardCache {
 
     /// Insert (or refresh) `key`; evicts LRU peers until the rest fits.
     pub fn put(&self, key: OperandKey, data: Vec<f32>) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_clean(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         let added = data.len();
@@ -881,7 +882,7 @@ impl ShardCache {
 
     /// Look a key up, bumping its recency.  Counts a hit or a miss.
     pub fn get(&self, key: OperandKey) -> Option<Arc<Vec<f32>>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_clean(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         match inner.entries.get_mut(&key) {
@@ -900,14 +901,14 @@ impl ShardCache {
 
     /// Drop a key (the client's explicit invalidation frame).
     pub fn remove(&self, key: OperandKey) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_clean(&self.inner);
         if let Some((buf, _)) = inner.entries.remove(&key) {
             inner.elems -= buf.len();
         }
     }
 
     pub fn stats(&self) -> ShardCacheStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_clean(&self.inner);
         ShardCacheStats {
             entries: inner.entries.len(),
             elems: inner.elems,

@@ -12,8 +12,8 @@
 //!   filtered by the *idle member's* capability mask (intersected with the
 //!   destination cluster's accept union as a safety net).
 
+use crate::util::sync::{lock_clean, wait_clean, wait_timeout_clean, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::mm::job::{ClassMask, Classed, JobClass};
@@ -47,8 +47,14 @@ impl<T> JobQueue<T> {
     }
 
     /// Push one job (to the back).  Returns false if the queue was closed.
+    /// `notify_one` is sufficient here (unlike the broadcast queues):
+    /// every waiter on `cv` is a popper with the same predicate — "the
+    /// deque is non-empty" — and one pushed item satisfies exactly one
+    /// popper, which consumes it without ever waiting for more room
+    /// (the deque is unbounded, so there is no second waiter class whose
+    /// predicate the woken thread could fail to satisfy).
     pub fn push(&self, item: T) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         if g.closed {
             return false;
         }
@@ -63,7 +69,7 @@ impl<T> JobQueue<T> {
         if items.is_empty() {
             return true;
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         if g.closed {
             return false;
         }
@@ -77,7 +83,7 @@ impl<T> JobQueue<T> {
 
     /// Blocking pop from the front; None once closed *and* drained.
     pub fn pop_blocking(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         loop {
             if let Some(item) = g.deque.pop_front() {
                 return Some(item);
@@ -85,14 +91,14 @@ impl<T> JobQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = wait_clean(&self.cv, g);
         }
     }
 
     /// Blocking pop with timeout; `Ok(None)` = closed+drained, `Err(())` =
     /// timed out (caller may try stealing — the idle notification path).
     pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, ()> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         loop {
             if let Some(item) = g.deque.pop_front() {
                 return Ok(Some(item));
@@ -100,9 +106,9 @@ impl<T> JobQueue<T> {
             if g.closed {
                 return Ok(None);
             }
-            let (guard, res) = self.cv.wait_timeout(g, timeout).unwrap();
+            let (guard, timed_out) = wait_timeout_clean(&self.cv, g, timeout);
             g = guard;
-            if res.timed_out() {
+            if timed_out {
                 if let Some(item) = g.deque.pop_front() {
                     return Ok(Some(item));
                 }
@@ -116,14 +122,14 @@ impl<T> JobQueue<T> {
 
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
-        self.inner.lock().unwrap().deque.pop_front()
+        lock_clean(&self.inner).deque.pop_front()
     }
 
     /// Non-blocking pop of up to `n` jobs from the front (the owner side).
     /// Delegates use this to drain a micro-batch's jobs in one lock
     /// acquisition and execute them back-to-back.
     pub fn pop_upto(&self, n: usize) -> Vec<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         let take = n.min(g.deque.len());
         let mut out = Vec::with_capacity(take);
         for _ in 0..take {
@@ -148,7 +154,7 @@ impl<T> JobQueue<T> {
         if n == 0 {
             return Vec::new();
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         let mut out = Vec::new();
         let mut skipped = Vec::new();
         while out.len() < n {
@@ -169,7 +175,7 @@ impl<T> JobQueue<T> {
     /// whose `classify` index is `i` (out-of-range indices are dropped).
     /// Used by the thief's cost-weighted victim selection.
     pub fn class_counts(&self, n_classes: usize, classify: impl Fn(&T) -> usize) -> Vec<usize> {
-        let g = self.inner.lock().unwrap();
+        let g = lock_clean(&self.inner);
         let mut out = vec![0usize; n_classes];
         for item in &g.deque {
             let i = classify(item);
@@ -181,21 +187,24 @@ impl<T> JobQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().deque.len()
+        lock_clean(&self.inner).deque.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Close: pops drain the remainder then return None.
+    /// Close: pops drain the remainder then return None.  Broadcast, not
+    /// `notify_one` — every parked popper must wake to observe `closed`,
+    /// or all but one of them sleep forever (push's single-wake argument
+    /// does not apply: close satisfies *every* waiter at once).
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_clean(&self.inner).closed = true;
         self.cv.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        lock_clean(&self.inner).closed
     }
 }
 
@@ -271,7 +280,7 @@ impl<T: Classed> QueueBank<T> {
     pub fn push(&self, item: T) -> bool {
         let i = item.class_index();
         assert!(i < JobClass::COUNT, "job class index {i} out of range");
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         if g.closed {
             return false;
         }
@@ -287,7 +296,7 @@ impl<T: Classed> QueueBank<T> {
         if items.is_empty() {
             return true;
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         if g.closed {
             return false;
         }
@@ -304,7 +313,7 @@ impl<T: Classed> QueueBank<T> {
     /// Non-blocking pop from the union of sub-queues in `mask`
     /// (round-robin across classes, FIFO within one).
     pub fn try_pop_any(&self, mask: ClassMask) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         g.pick(mask).map(|i| g.pop_picked(mask, i))
     }
 
@@ -320,7 +329,7 @@ impl<T: Classed> QueueBank<T> {
     /// then never report idle and stealing would starve.
     pub fn pop_any_timeout(&self, mask: ClassMask, timeout: Duration) -> Result<Option<T>, ()> {
         let deadline = Instant::now() + timeout;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         loop {
             if let Some(i) = g.pick(mask) {
                 return Ok(Some(g.pop_picked(mask, i)));
@@ -332,7 +341,7 @@ impl<T: Classed> QueueBank<T> {
             if now >= deadline {
                 return Err(());
             }
-            let (guard, _res) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            let (guard, _timed_out) = wait_timeout_clean(&self.cv, g, deadline - now);
             g = guard;
         }
     }
@@ -341,7 +350,7 @@ impl<T: Classed> QueueBank<T> {
     /// `mask`, one lock acquisition (delegate drain batches).  Round-robin
     /// across classes so one deep sub-queue cannot starve the others.
     pub fn pop_upto(&self, mask: ClassMask, n: usize) -> Vec<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         let mut out = Vec::new();
         while out.len() < n {
             match g.pick(mask) {
@@ -358,7 +367,7 @@ impl<T: Classed> QueueBank<T> {
         if n == 0 {
             return Vec::new();
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         let mut out = Vec::new();
         while out.len() < n {
             let heaviest = (0..JobClass::COUNT)
@@ -375,7 +384,7 @@ impl<T: Classed> QueueBank<T> {
     /// Occupancy per class sub-queue — O(classes), no walk (the thief's
     /// victim snapshot runs this on every queue).
     pub fn class_counts(&self) -> [usize; JobClass::COUNT] {
-        let g = self.inner.lock().unwrap();
+        let g = lock_clean(&self.inner);
         let mut out = [0usize; JobClass::COUNT];
         for (o, q) in out.iter_mut().zip(&g.subs) {
             *o = q.len();
@@ -385,30 +394,36 @@ impl<T: Classed> QueueBank<T> {
 
     /// Items across every sub-queue.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().subs.iter().map(|q| q.len()).sum()
+        lock_clean(&self.inner).subs.iter().map(|q| q.len()).sum()
     }
 
     /// Items across the sub-queues in `mask` (routing load probe).
     pub fn len_where(&self, mask: ClassMask) -> usize {
-        self.inner.lock().unwrap().masked_len(mask)
+        lock_clean(&self.inner).masked_len(mask)
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Close: pops drain the remainder then return None.
+    /// Close: pops drain the remainder then return None.  Broadcast —
+    /// waiters carry *different* masks, so waking any single one could
+    /// hand the close notification to a member that pops its last
+    /// eligible item and leaves, while a differently-masked member
+    /// sleeps through shutdown.  `tests/loom_sync.rs` pins this.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_clean(&self.inner).closed = true;
         self.cv.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        lock_clean(&self.inner).closed
     }
 }
 
-#[cfg(test)]
+// Thread/timing tests run on real OS scheduling; the loom build checks
+// this module through `tests/loom_sync.rs` instead.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::Arc;

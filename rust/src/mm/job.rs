@@ -416,7 +416,11 @@ impl Job {
     pub fn tile_operands(&self) -> (&[f32], &[f32]) {
         match &self.kind {
             JobKind::ConvTile { a_tiles, b_tiles } => (a_tiles, b_tiles),
-            _ => panic!("tile_operands on a {:?} job", self.class()),
+            // Spelled out (no `_` arm) so adding a job class forces this
+            // dispatch decision instead of silently inheriting the panic.
+            JobKind::FcGemm { .. } | JobKind::FcGemmBatch { .. } | JobKind::Im2col { .. } => {
+                panic!("tile_operands on a {:?} job", self.class())
+            }
         }
     }
 

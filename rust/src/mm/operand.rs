@@ -18,10 +18,11 @@
 //! Load-time weight prepacks live on the `Network` instead and are aliased
 //! by every frame's jobs for the network's lifetime.
 
+use crate::util::sync::{lock_clean, Mutex};
 use std::collections::HashMap;
 use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::sync::{Arc, OnceLock, Weak};
 
 /// Process-wide layout-transform copy ledger: bytes that were actually
 /// copied into a fresh buffer (tile packing, FC column packing).  Cheap
@@ -87,7 +88,7 @@ fn key_registry() -> &'static KeyRegistry {
 pub fn operand_key(buf: &Arc<Vec<f32>>) -> OperandKey {
     let reg = key_registry();
     let ptr = Arc::as_ptr(buf) as usize;
-    let mut map = reg.by_ptr.lock().unwrap();
+    let mut map = lock_clean(&reg.by_ptr);
     if let Some((seq, witness)) = map.get(&ptr) {
         if let Some(live) = witness.upgrade() {
             if Arc::ptr_eq(&live, buf) {

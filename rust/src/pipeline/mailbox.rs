@@ -1,8 +1,8 @@
 //! Bounded blocking FIFO — the ReconOS-style *mailbox* connecting layer
 //! threads in producer-consumer fashion.
 
+use crate::util::sync::{lock_clean, wait_clean, Condvar, Mutex};
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
 
 struct Inner<T> {
     buf: VecDeque<T>,
@@ -40,7 +40,7 @@ impl<T> Mailbox<T> {
     /// the classic MPMC lost-wakeup.  Spurious wake-ups are cheap; a hung
     /// pipeline stage is not.
     pub fn send(&self, item: T) -> bool {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         loop {
             if g.closed {
                 return false;
@@ -51,7 +51,7 @@ impl<T> Mailbox<T> {
                 self.not_empty.notify_all();
                 return true;
             }
-            g = self.not_full.wait(g).unwrap();
+            g = wait_clean(&self.not_full, g);
         }
     }
 
@@ -59,7 +59,7 @@ impl<T> Mailbox<T> {
     /// closed (the serving batcher hands batches to busy pipelines
     /// through this path instead of stalling on one of them).
     pub fn try_send(&self, item: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         if g.closed || g.buf.len() >= self.capacity {
             return Err(item);
         }
@@ -71,7 +71,7 @@ impl<T> Mailbox<T> {
 
     /// Blocking receive; None once closed and drained.
     pub fn recv(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         loop {
             if let Some(item) = g.buf.pop_front() {
                 drop(g);
@@ -81,12 +81,12 @@ impl<T> Mailbox<T> {
             if g.closed {
                 return None;
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = wait_clean(&self.not_empty, g);
         }
     }
 
     pub fn try_recv(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         let item = g.buf.pop_front();
         if item.is_some() {
             self.not_full.notify_all();
@@ -95,21 +95,29 @@ impl<T> Mailbox<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().buf.len()
+        lock_clean(&self.inner).buf.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Close for writers and release every parked thread.  Both condvars
+    /// get a broadcast: consumers parked on `not_empty` must wake to see
+    /// the drain-then-None contract, and producers parked on `not_full`
+    /// must wake to return `false` — waking only one side (or one waiter)
+    /// strands the rest forever.  `tests/loom_sync.rs` explores exactly
+    /// this path and fails if either broadcast is weakened.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_clean(&self.inner).closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 }
 
-#[cfg(test)]
+// Thread/timing tests run on real OS scheduling; the loom build checks
+// this module through `tests/loom_sync.rs` instead.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::Arc;

@@ -115,6 +115,9 @@ impl RtRuntime {
             let outbox = Arc::clone(&mailboxes[layer_idx + 1]);
             let net = Arc::clone(&self.net);
             let router = router.clone();
+            // lint: allow(thread-spawn): layer pipeline stages are the
+            // runtime's frame transport, not compute — the matrix work each
+            // stage generates still routes through DelegatePool jobs.
             let handle = std::thread::Builder::new()
                 .name(format!("layer-{layer_idx}"))
                 .spawn(move || {
@@ -138,6 +141,8 @@ impl RtRuntime {
         let t0 = Instant::now();
         let feeder = {
             let inbox = Arc::clone(&mailboxes[0]);
+            // lint: allow(thread-spawn): frame feeder — pure mailbox I/O,
+            // no compute to route through the pool.
             std::thread::spawn(move || {
                 for frame in frames {
                     if !inbox.send(frame) {

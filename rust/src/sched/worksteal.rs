@@ -232,6 +232,8 @@ impl<T: Send + Classed + 'static> Thief<T> {
         let (tx, rx) = mpsc::channel::<ThiefMsg>();
         let stats = Arc::new(StealStats::default());
         let st = Arc::clone(&stats);
+        // lint: allow(thread-spawn): the thief IS the work-stealing
+        // balancer the containment rule routes everything else through.
         let handle = std::thread::Builder::new()
             .name("thief".into())
             .spawn(move || thief_loop(queues, rx, st, policy, caps, service_rates, ship_s))

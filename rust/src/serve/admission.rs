@@ -32,8 +32,9 @@
 use std::collections::{BTreeMap, BinaryHeap, VecDeque};
 use std::ops::Bound;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::util::sync::{lock_clean, wait_timeout_clean, Condvar, Mutex};
 
 use super::request::{Request, SloTier};
 use super::stats::TierCounts;
@@ -219,7 +220,7 @@ impl AdmissionQueue {
     /// tiers: each tier owns its own depth budget).
     pub fn submit(&self, req: Request) -> bool {
         let ti = req.tier.index();
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         if g.closed {
             drop(g);
             self.shed[ti].fetch_add(1, Ordering::Relaxed);
@@ -263,13 +264,13 @@ impl AdmissionQueue {
     /// simulator drive (expiry pruning happens against `now`, not the
     /// wall clock).
     pub fn try_pop_at(&self, now: Instant) -> Option<Request> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         self.take_at(&mut g, &|_| true, now)
     }
 
     /// [`AdmissionQueue::try_pop_at`] with a network eligibility filter.
     pub fn try_pop_at_eligible(&self, now: Instant, eligible: &[bool]) -> Option<Request> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         self.take_at(&mut g, &|net| *eligible.get(net).unwrap_or(&true), now)
     }
 
@@ -284,7 +285,7 @@ impl AdmissionQueue {
         // wakeup would postpone the caller's batch-window deadline for as
         // long as the stalled lane keeps receiving traffic.
         let deadline = Instant::now() + timeout;
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_clean(&self.inner);
         loop {
             if let Some(req) = self.take_at(&mut g, &eligible, Instant::now()) {
                 return Ok(Some(req));
@@ -296,7 +297,7 @@ impl AdmissionQueue {
             if remaining.is_zero() {
                 return Err(());
             }
-            let (guard, _res) = self.not_empty.wait_timeout(g, remaining).unwrap();
+            let (guard, _timed_out) = wait_timeout_clean(&self.not_empty, g, remaining);
             g = guard;
         }
     }
@@ -360,14 +361,12 @@ impl AdmissionQueue {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().total_len
+        lock_clean(&self.inner).total_len
     }
 
     /// Queued requests across one network's tier lanes.
     pub fn lane_len(&self, net_id: usize) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
+        lock_clean(&self.inner)
             .lanes
             .get(&net_id)
             .map_or(0, |l| l.tiers.iter().map(|t| t.len()).sum())
@@ -375,9 +374,7 @@ impl AdmissionQueue {
 
     /// Queued requests of one (network, tier) lane.
     pub fn tier_len(&self, net_id: usize, tier: SloTier) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
+        lock_clean(&self.inner)
             .lanes
             .get(&net_id)
             .map_or(0, |l| l.tiers[tier.index()].len())
@@ -388,8 +385,10 @@ impl AdmissionQueue {
     }
 
     /// Close: submissions shed, pops drain the remainder then return None.
+    /// Broadcast so every batcher thread parked in `pop_timeout` observes
+    /// the close rather than one lucky waiter.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_clean(&self.inner).closed = true;
         self.not_empty.notify_all();
     }
 

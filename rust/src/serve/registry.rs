@@ -13,9 +13,10 @@
 //! version), so a swap never repacks on the serving path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::nn::Network;
+use crate::util::sync::{lock_clean, Mutex};
 
 struct Slot {
     current: Mutex<(u64, Arc<Network>)>,
@@ -52,19 +53,19 @@ impl NetRegistry {
     /// The current `(version, weights)` of one network — read atomically
     /// together, so a concurrent swap can never tear the pair.
     pub fn current(&self, net_id: usize) -> (u64, Arc<Network>) {
-        let g = self.slots[net_id].current.lock().unwrap();
+        let g = lock_clean(&self.slots[net_id].current);
         (g.0, Arc::clone(&g.1))
     }
 
     pub fn version(&self, net_id: usize) -> u64 {
-        self.slots[net_id].current.lock().unwrap().0
+        lock_clean(&self.slots[net_id].current).0
     }
 
     /// Flip the pointer, bump the version, return it.  Validation
     /// (architecture equality etc.) is the caller's job — the registry
     /// is just the atomic slot.
     pub fn swap(&self, net_id: usize, net: Arc<Network>) -> u64 {
-        let mut g = self.slots[net_id].current.lock().unwrap();
+        let mut g = lock_clean(&self.slots[net_id].current);
         g.0 += 1;
         g.1 = net;
         self.swaps.fetch_add(1, Ordering::Relaxed);

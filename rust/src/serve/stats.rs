@@ -2,8 +2,8 @@
 //! per-SLO-tier shed/expiry accounting — computed through `util::stats`
 //! and rendered with the shared table builder.
 
+use crate::util::sync::{lock_clean, Mutex};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::mm::job::JobClass;
@@ -44,14 +44,14 @@ pub struct StatsCollector {
 impl StatsCollector {
     pub fn record_response(&self, tier: SloTier, latency: Duration) {
         let ms = latency.as_secs_f64() * 1e3;
-        self.latencies_ms.lock().unwrap().push(ms);
-        self.tier_latencies_ms.lock().unwrap()[tier.index()].push(ms);
+        lock_clean(&self.latencies_ms).push(ms);
+        lock_clean(&self.tier_latencies_ms)[tier.index()].push(ms);
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.completed_by_tier[tier.index()].fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, size: usize) {
-        self.batch_sizes.lock().unwrap().push(size as f64);
+        lock_clean(&self.batch_sizes).push(size as f64);
     }
 
     /// A request dropped by the batcher because its deadline passed.
@@ -89,9 +89,12 @@ impl StatsCollector {
         admission: &TierCounts,
         pool: &PoolReport,
     ) -> ServerStats {
-        let lat = self.latencies_ms.lock().unwrap().clone();
-        let tier_lat = self.tier_latencies_ms.lock().unwrap().clone();
-        let batches = self.batch_sizes.lock().unwrap().clone();
+        // Poison-tolerant locks: the report must come out even if a worker
+        // thread died mid-record — a partial latency vector beats a wedged
+        // shutdown with no report at all.
+        let lat = lock_clean(&self.latencies_ms).clone();
+        let tier_lat = lock_clean(&self.tier_latencies_ms).clone();
+        let batches = lock_clean(&self.batch_sizes).clone();
         let completed = self.completed.load(Ordering::Relaxed);
         let max_batch = batches.iter().fold(0.0f64, |a, &b| a.max(b)) as usize;
         let expired_by_tier: [u64; SloTier::COUNT] = std::array::from_fn(|i| {

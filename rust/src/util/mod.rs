@@ -1,10 +1,14 @@
 //! Small self-contained substrates the offline build cannot pull from
-//! crates.io: deterministic PRNG, JSON, CLI parsing, statistics, and a
-//! micro-benchmark harness.
+//! crates.io: deterministic PRNG, JSON, CLI parsing, statistics, a
+//! micro-benchmark harness, and the concurrency-checking pair — the
+//! [`sync`] facade every blocking primitive locks through and the
+//! [`model`] bounded exhaustive scheduler behind the `--cfg loom` build.
 
 pub mod argparse;
 pub mod bench;
 pub mod json;
+pub mod model;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -1,0 +1,973 @@
+//! Bounded exhaustive model checker for the runtime's lock/condvar code.
+//!
+//! The offline build cannot pull `loom` from crates.io, so this module
+//! implements the same idea in-tree: run a multi-threaded scenario under a
+//! cooperative scheduler that serializes execution (one task runs at a
+//! time), treat every synchronization operation as a *scheduling point*,
+//! and DFS over the scheduler's choices so every interleaving — up to an
+//! iterative preemption bound, CHESS-style — is actually executed.
+//! `tests/loom_sync.rs` builds the real `Mailbox`/`QueueBank` against
+//! these primitives via the `--cfg loom` switch in [`crate::util::sync`]
+//! and asserts that no explored schedule deadlocks, and that weakening
+//! `notify_all` to `notify_one` (the historical PR-1 lost-wakeup) *does*
+//! deadlock.
+//!
+//! What the model covers:
+//!
+//! * [`sync::Mutex`] / [`sync::Condvar`] with no spurious wakeups — a
+//!   waiter only runs again after a notification, which makes lost
+//!   wakeups *observable as deadlocks* instead of being masked by the
+//!   spurious wakeups real platforms are allowed to deliver.
+//! * [`spawn`]/[`JoinHandle::join`] for scenario threads.
+//! * `notify_one` branches over *which* waiter wakes (every choice is
+//!   explored); `notify_all` wakes all waiters, unless the exploration
+//!   runs with [`Config::weaken_notify_all`] — the switch the loom suite
+//!   uses to prove the suite would catch the `notify_one` regression.
+//! * Deadlock detection: a state with no runnable task and at least one
+//!   alive blocked task aborts the execution and is counted in
+//!   [`Stats::deadlocks`].
+//!
+//! Scheduling-point granularity is sync-op level (lock/unlock/wait/
+//! notify/spawn/join), which is exact for code whose shared state is only
+//! touched under locks — true for `Mailbox` and `QueueBank` by
+//! construction.  Data races on unsynchronized memory are out of scope
+//! (that is the ThreadSanitizer CI job's half of the wall).
+
+use std::cell::{RefCell, UnsafeCell};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex};
+
+// ---------------------------------------------------------------- config
+
+/// Exploration parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Max preemptions (context switches away from a still-runnable task)
+    /// per schedule.  2 suffices for the lost-wakeup bug class (CHESS's
+    /// small-bound hypothesis); forced switches at blocking points are
+    /// free, so producer/consumer hand-offs are fully explored even at 0.
+    pub preemption_bound: u32,
+    /// Safety valve on the number of executions; [`Stats::complete`] is
+    /// false if the space was not exhausted within it.
+    pub max_executions: u64,
+    /// Make `notify_all` behave as `notify_one` (single explored waiter
+    /// choice) — the regression switch for the PR-1 lost-wakeup class.
+    pub weaken_notify_all: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            preemption_bound: 2,
+            max_executions: 200_000,
+            weaken_notify_all: false,
+        }
+    }
+}
+
+/// Exploration result.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Stats {
+    /// Schedules actually executed.
+    pub executions: u64,
+    /// Schedules that reached a deadlock state.
+    pub deadlocks: u64,
+    /// True iff every schedule within the preemption bound was executed.
+    pub complete: bool,
+}
+
+// ------------------------------------------------------------- internals
+
+/// Panic payload used to unwind tasks out of an aborted execution
+/// (deadlock found, or a sibling task failed an assertion).
+struct ModelAbort;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TaskState {
+    Runnable,
+    BlockedMutex(usize),
+    BlockedCv(usize),
+    BlockedJoin(usize),
+    Finished,
+}
+
+/// One recorded scheduler choice.  `costs[i]` is the preemption cost of
+/// candidate `i` at this point (1 = switching away from a still-runnable
+/// current task); wake-choices cost 0.  Only points with >1 candidate are
+/// recorded — forced moves replay deterministically.
+#[derive(Clone, Debug)]
+struct Decision {
+    chosen: usize,
+    options: usize,
+    costs: Vec<u8>,
+}
+
+struct MutexState {
+    held: Option<usize>,
+}
+
+struct CvState {
+    waiters: Vec<usize>,
+}
+
+struct Kernel {
+    tasks: Vec<TaskState>,
+    mutexes: Vec<MutexState>,
+    cvs: Vec<CvState>,
+    decisions: Vec<Decision>,
+    pos: usize,
+    current: usize,
+    weaken_notify_all: bool,
+    aborting: bool,
+    deadlocked: bool,
+    /// First real (non-abort) panic message from any task.
+    panicked: Option<String>,
+}
+
+impl Kernel {
+    fn runnable(&self) -> Vec<usize> {
+        (0..self.tasks.len())
+            .filter(|&i| self.tasks[i] == TaskState::Runnable)
+            .collect()
+    }
+
+    fn all_finished(&self) -> bool {
+        self.tasks.iter().all(|t| *t == TaskState::Finished)
+    }
+}
+
+struct Parker {
+    run: StdMutex<bool>,
+    cv: StdCondvar,
+}
+
+impl Parker {
+    fn new() -> Self {
+        Parker {
+            run: StdMutex::new(false),
+            cv: StdCondvar::new(),
+        }
+    }
+}
+
+struct Exec {
+    kernel: StdMutex<Kernel>,
+    parkers: StdMutex<Vec<Arc<Parker>>>,
+    handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+    gen: usize,
+}
+
+thread_local! {
+    static EXEC: RefCell<Option<Arc<Exec>>> = const { RefCell::new(None) };
+    static TASK: RefCell<usize> = const { RefCell::new(usize::MAX) };
+}
+
+static GEN: AtomicUsize = AtomicUsize::new(1);
+
+fn cur_exec() -> Arc<Exec> {
+    EXEC.with(|e| {
+        e.borrow()
+            .clone()
+            .expect("model sync primitive used outside model::explore")
+    })
+}
+
+fn cur_task() -> usize {
+    TASK.with(|t| *t.borrow())
+}
+
+fn panic_abort() -> ! {
+    panic::panic_any(ModelAbort)
+}
+
+/// Silence the default panic hook for ModelAbort unwinds (thousands per
+/// exploration); real panics keep the normal report.
+fn install_quiet_hook() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<ModelAbort>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+impl Exec {
+    fn new(cfg: &Config, prefix: Vec<Decision>) -> Arc<Exec> {
+        Arc::new(Exec {
+            kernel: StdMutex::new(Kernel {
+                tasks: vec![TaskState::Runnable],
+                mutexes: Vec::new(),
+                cvs: Vec::new(),
+                decisions: prefix,
+                pos: 0,
+                current: 0,
+                weaken_notify_all: cfg.weaken_notify_all,
+                aborting: false,
+                deadlocked: false,
+                panicked: None,
+            }),
+            parkers: StdMutex::new(vec![Arc::new(Parker::new())]),
+            handles: StdMutex::new(Vec::new()),
+            gen: GEN.fetch_add(1, Ordering::Relaxed),
+        })
+    }
+
+    fn register_mutex(&self) -> usize {
+        let mut k = self.kernel.lock().unwrap();
+        k.mutexes.push(MutexState { held: None });
+        k.mutexes.len() - 1
+    }
+
+    fn register_cv(&self) -> usize {
+        let mut k = self.kernel.lock().unwrap();
+        k.cvs.push(CvState { waiters: Vec::new() });
+        k.cvs.len() - 1
+    }
+
+    /// Choose among `candidates`; `sched` choices carry preemption costs,
+    /// wake choices are free.  Records only branching points.
+    fn decide(&self, k: &mut Kernel, candidates: &[usize], sched: bool) -> usize {
+        debug_assert!(!candidates.is_empty());
+        // Forced moves are never recorded (and never consume a replayed
+        // decision) so the decision list holds branch points only and
+        // record/replay stay in lockstep.  A forced move always costs 0:
+        // at a sched point the runnable current task is itself a
+        // candidate, so a singleton candidate set IS the current task.
+        if candidates.len() == 1 {
+            return candidates[0];
+        }
+        let current_runnable = k.tasks.get(k.current) == Some(&TaskState::Runnable);
+        let costs: Vec<u8> = candidates
+            .iter()
+            .map(|&c| u8::from(sched && current_runnable && c != k.current))
+            .collect();
+        let chosen = if k.pos < k.decisions.len() {
+            let d = &k.decisions[k.pos];
+            debug_assert_eq!(
+                d.options,
+                candidates.len(),
+                "schedule replay diverged (nondeterministic scenario body?)"
+            );
+            d.chosen
+        } else {
+            // Canonical extension: the cheapest candidate (the current
+            // task when it is runnable), so default runs add 0 preemptions.
+            let c = costs.iter().position(|&c| c == 0).unwrap_or(0);
+            k.decisions.push(Decision {
+                chosen: c,
+                options: candidates.len(),
+                costs: costs.clone(),
+            });
+            c
+        };
+        k.pos += 1;
+        candidates[chosen]
+    }
+
+    fn grant(&self, task: usize) {
+        let p = {
+            let parkers = self.parkers.lock().unwrap();
+            Arc::clone(&parkers[task])
+        };
+        let mut g = p.run.lock().unwrap();
+        *g = true;
+        p.cv.notify_all();
+    }
+
+    /// Park the calling task until granted the run token; panics with
+    /// ModelAbort if the execution is aborting.
+    fn park(&self, me: usize) {
+        let p = {
+            let parkers = self.parkers.lock().unwrap();
+            Arc::clone(&parkers[me])
+        };
+        let mut g = p.run.lock().unwrap();
+        while !*g {
+            g = p.cv.wait(g).unwrap();
+        }
+        *g = false;
+        drop(g);
+        let aborting = self.kernel.lock().unwrap().aborting;
+        if aborting {
+            panic_abort();
+        }
+    }
+
+    /// Abort the whole execution (deadlock or task failure): wake every
+    /// parked task so it unwinds via ModelAbort.
+    fn abort_all(&self, k: &mut Kernel, deadlock: bool) {
+        k.aborting = true;
+        if deadlock {
+            k.deadlocked = true;
+        }
+        let parkers = self.parkers.lock().unwrap();
+        for p in parkers.iter() {
+            *p.run.lock().unwrap() = true;
+            p.cv.notify_all();
+        }
+    }
+
+    /// Voluntary scheduling point: the current (runnable) task offers the
+    /// scheduler a switch.
+    fn schedule(&self) {
+        let me = cur_task();
+        let next = {
+            let mut k = self.kernel.lock().unwrap();
+            if k.aborting {
+                drop(k);
+                panic_abort();
+            }
+            let cands = k.runnable();
+            let next = self.decide(&mut k, &cands, true);
+            k.current = next;
+            next
+        };
+        if next != me {
+            self.grant(next);
+            self.park(me);
+        }
+    }
+
+    /// The current task just blocked (state already updated): hand the
+    /// token to some runnable task, or declare a deadlock.
+    fn switch_from_blocked(&self, k: &mut Kernel, me: usize) {
+        let cands = k.runnable();
+        if cands.is_empty() {
+            // Everybody left alive is blocked — the lost-wakeup signature.
+            self.abort_all(k, true);
+            return; // caller drops the kernel lock, then parks -> aborts
+        }
+        let next = self.decide(k, &cands, true);
+        k.current = next;
+        self.grant(next);
+    }
+
+    fn acquire(&self, mid: usize) {
+        let me = cur_task();
+        loop {
+            self.schedule();
+            let mut k = self.kernel.lock().unwrap();
+            if k.aborting {
+                drop(k);
+                panic_abort();
+            }
+            if k.mutexes[mid].held.is_none() {
+                k.mutexes[mid].held = Some(me);
+                return;
+            }
+            k.tasks[me] = TaskState::BlockedMutex(mid);
+            self.switch_from_blocked(&mut k, me);
+            drop(k);
+            self.park(me);
+        }
+    }
+
+    fn release(&self, mid: usize) {
+        {
+            let mut k = self.kernel.lock().unwrap();
+            k.mutexes[mid].held = None;
+            for i in 0..k.tasks.len() {
+                if k.tasks[i] == TaskState::BlockedMutex(mid) {
+                    k.tasks[i] = TaskState::Runnable;
+                }
+            }
+            // Guard drops run during ModelAbort unwinds; never schedule
+            // (or panic) from inside one.
+            if k.aborting {
+                return;
+            }
+        }
+        self.schedule();
+    }
+
+    fn cv_wait(&self, cvid: usize, mid: usize) {
+        let me = cur_task();
+        {
+            let mut k = self.kernel.lock().unwrap();
+            if k.aborting {
+                drop(k);
+                panic_abort();
+            }
+            debug_assert_eq!(k.mutexes[mid].held, Some(me), "wait without the lock");
+            k.mutexes[mid].held = None;
+            for i in 0..k.tasks.len() {
+                if k.tasks[i] == TaskState::BlockedMutex(mid) {
+                    k.tasks[i] = TaskState::Runnable;
+                }
+            }
+            k.cvs[cvid].waiters.push(me);
+            k.tasks[me] = TaskState::BlockedCv(cvid);
+            self.switch_from_blocked(&mut k, me);
+        }
+        self.park(me);
+        // Notified (no spurious wakeups): re-acquire the mutex.
+        self.acquire(mid);
+    }
+
+    fn notify(&self, cvid: usize, all: bool) {
+        {
+            let mut k = self.kernel.lock().unwrap();
+            if k.aborting {
+                drop(k);
+                panic_abort();
+            }
+            let as_all = all && !k.weaken_notify_all;
+            if k.cvs[cvid].waiters.is_empty() {
+                // nothing to wake
+            } else if as_all {
+                let waiters = std::mem::take(&mut k.cvs[cvid].waiters);
+                for w in waiters {
+                    k.tasks[w] = TaskState::Runnable;
+                }
+            } else {
+                // Which waiter receives the single token is a scheduler
+                // choice — every option is explored.
+                let cands = k.cvs[cvid].waiters.clone();
+                let woken = self.decide(&mut k, &cands, false);
+                k.cvs[cvid].waiters.retain(|&w| w != woken);
+                k.tasks[woken] = TaskState::Runnable;
+            }
+        }
+        self.schedule();
+    }
+
+    fn spawn_task(self: &Arc<Self>, f: Box<dyn FnOnce() + Send>) -> usize {
+        let id = {
+            let mut k = self.kernel.lock().unwrap();
+            k.tasks.push(TaskState::Runnable);
+            k.tasks.len() - 1
+        };
+        self.parkers.lock().unwrap().push(Arc::new(Parker::new()));
+        let exec = Arc::clone(self);
+        // lint: allow(thread-spawn): model tasks are real OS threads the
+        // checker parks/resumes one at a time — they never compute jobs.
+        let handle = std::thread::Builder::new()
+            .name(format!("model-task-{id}"))
+            .spawn(move || {
+                EXEC.with(|e| *e.borrow_mut() = Some(Arc::clone(&exec)));
+                TASK.with(|t| *t.borrow_mut() = id);
+                // Wait to be scheduled for the first time.  An aborting
+                // execution unwinds here before f ever runs.
+                let body = AssertUnwindSafe(|| {
+                    exec.park(id);
+                    f();
+                });
+                let result = panic::catch_unwind(body);
+                let real_panic = match result {
+                    Ok(()) => None,
+                    Err(p) if p.downcast_ref::<ModelAbort>().is_some() => None,
+                    Err(p) => Some(panic_message(&p)),
+                };
+                exec.task_finished(id, real_panic);
+                EXEC.with(|e| *e.borrow_mut() = None);
+            })
+            .expect("spawn model task thread");
+        self.handles.lock().unwrap().push(handle);
+        // The child is schedulable from here on.
+        self.schedule();
+        id
+    }
+
+    fn task_finished(&self, id: usize, real_panic: Option<String>) {
+        let mut k = self.kernel.lock().unwrap();
+        k.tasks[id] = TaskState::Finished;
+        for i in 0..k.tasks.len() {
+            if k.tasks[i] == TaskState::BlockedJoin(id) {
+                k.tasks[i] = TaskState::Runnable;
+            }
+        }
+        if let Some(msg) = real_panic {
+            if k.panicked.is_none() {
+                k.panicked = Some(msg);
+            }
+            self.abort_all(&mut k, false);
+            return;
+        }
+        if k.aborting {
+            return;
+        }
+        let cands = k.runnable();
+        if cands.is_empty() {
+            if k.all_finished() {
+                // Hand the token back to main, which parks in finish_main.
+                drop(k);
+                self.grant(0);
+                return;
+            }
+            self.abort_all(&mut k, true);
+            return;
+        }
+        let next = self.decide(&mut k, &cands, true);
+        k.current = next;
+        drop(k);
+        self.grant(next);
+    }
+
+    fn join_task(&self, target: usize) {
+        let me = cur_task();
+        loop {
+            let mut k = self.kernel.lock().unwrap();
+            if k.aborting {
+                drop(k);
+                panic_abort();
+            }
+            if k.tasks[target] == TaskState::Finished {
+                return;
+            }
+            k.tasks[me] = TaskState::BlockedJoin(target);
+            self.switch_from_blocked(&mut k, me);
+            drop(k);
+            self.park(me);
+        }
+    }
+
+    /// Main's closure returned: let every remaining task run to
+    /// completion, then return.  (Scenarios normally join everything
+    /// themselves, making this a no-op.)
+    fn finish_main(&self) {
+        {
+            let mut k = self.kernel.lock().unwrap();
+            k.tasks[0] = TaskState::Finished;
+            if k.all_finished() || k.aborting {
+                return;
+            }
+            let cands = k.runnable();
+            if cands.is_empty() {
+                self.abort_all(&mut k, true);
+                return;
+            }
+            let next = self.decide(&mut k, &cands, true);
+            k.current = next;
+            self.grant(next);
+        }
+        // Park until the last task finishes (it grants task 0) or abort.
+        let p = {
+            let parkers = self.parkers.lock().unwrap();
+            Arc::clone(&parkers[0])
+        };
+        let mut g = p.run.lock().unwrap();
+        while !*g {
+            g = p.cv.wait(g).unwrap();
+        }
+        *g = false;
+    }
+
+    fn join_all_threads(&self) {
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            // Threads unwound by ModelAbort report a panic; that is the
+            // abort mechanism working, not a failure.
+            let _ = h.join();
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "task panicked (non-string payload)".to_string()
+    }
+}
+
+// --------------------------------------------------------------- explore
+
+/// Run `body` under every schedule within the preemption bound.  `body`
+/// executes once per schedule on the calling thread (task 0); scenario
+/// threads come from [`spawn`].  A deadlock aborts that schedule and is
+/// counted; a real panic in any task fails the exploration by re-raising.
+pub fn explore(cfg: Config, body: impl Fn()) -> Stats {
+    install_quiet_hook();
+    let mut stats = Stats::default();
+    let mut prefix: Vec<Decision> = Vec::new();
+    loop {
+        let exec = Exec::new(&cfg, prefix);
+        EXEC.with(|e| *e.borrow_mut() = Some(Arc::clone(&exec)));
+        TASK.with(|t| *t.borrow_mut() = 0);
+        let outcome = panic::catch_unwind(AssertUnwindSafe(&body));
+        match &outcome {
+            Ok(()) => exec.finish_main(),
+            Err(p) if p.downcast_ref::<ModelAbort>().is_some() => {}
+            Err(_) => {
+                let mut k = exec.kernel.lock().unwrap();
+                k.tasks[0] = TaskState::Finished;
+                exec.abort_all(&mut k, false);
+            }
+        }
+        exec.join_all_threads();
+        EXEC.with(|e| *e.borrow_mut() = None);
+        TASK.with(|t| *t.borrow_mut() = usize::MAX);
+
+        let kernel = exec.kernel.lock().unwrap();
+        stats.executions += 1;
+        if kernel.deadlocked {
+            stats.deadlocks += 1;
+        }
+        if let Some(msg) = &kernel.panicked {
+            panic!("model task failed: {msg}");
+        }
+        if let Err(p) = outcome {
+            if p.downcast_ref::<ModelAbort>().is_none() {
+                panic::resume_unwind(p);
+            }
+        }
+        prefix = kernel.decisions.clone();
+        drop(kernel);
+        if !advance(&mut prefix, cfg.preemption_bound) {
+            stats.complete = true;
+            break;
+        }
+        if stats.executions >= cfg.max_executions {
+            break;
+        }
+    }
+    stats
+}
+
+/// DFS step: bump the deepest decision that still has an untried option
+/// within the preemption budget; canonical extensions below it cost 0.
+fn advance(d: &mut Vec<Decision>, bound: u32) -> bool {
+    for i in (0..d.len()).rev() {
+        let base: u32 = d[..i].iter().map(|x| u32::from(x.costs[x.chosen])).sum();
+        let next = ((d[i].chosen + 1)..d[i].options)
+            .find(|&c| base + u32::from(d[i].costs[c]) <= bound);
+        if let Some(c) = next {
+            d[i].chosen = c;
+            d.truncate(i + 1);
+            return true;
+        }
+    }
+    false
+}
+
+/// Spawn a scenario task.  Must be called from inside [`explore`].
+pub fn spawn(f: impl FnOnce() + Send + 'static) -> JoinHandle {
+    let exec = cur_exec();
+    let id = exec.spawn_task(Box::new(f));
+    JoinHandle { id }
+}
+
+/// Handle for [`spawn`]ed tasks; `join` blocks under model scheduling.
+pub struct JoinHandle {
+    id: usize,
+}
+
+impl JoinHandle {
+    pub fn join(self) {
+        cur_exec().join_task(self.id);
+    }
+}
+
+// ------------------------------------------------------------ primitives
+
+/// Model-checked `Mutex`/`Condvar` with the std surface the facade in
+/// [`crate::util::sync`] needs.
+pub mod sync {
+    use super::*;
+    use std::mem::ManuallyDrop;
+    use std::ops::{Deref, DerefMut};
+
+    /// Registration cell: objects created in one execution and reused in
+    /// the next (e.g. statics) re-register lazily per execution.
+    type Reg = StdMutex<Option<(usize, usize)>>;
+
+    fn resolve(reg: &Reg, exec: &Arc<Exec>, register: impl FnOnce() -> usize) -> usize {
+        let mut slot = reg.lock().unwrap();
+        match *slot {
+            Some((gen, id)) if gen == exec.gen => id,
+            _ => {
+                let id = register();
+                *slot = Some((exec.gen, id));
+                id
+            }
+        }
+    }
+
+    pub struct Mutex<T> {
+        data: UnsafeCell<T>,
+        reg: Reg,
+    }
+
+    // One task runs at a time and the model enforces mutual exclusion, so
+    // handing references across the (serialized) scenario threads is
+    // sound for the same reason it is for std::sync::Mutex.
+    unsafe impl<T: Send> Send for Mutex<T> {}
+    unsafe impl<T: Send> Sync for Mutex<T> {}
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Self {
+            Mutex {
+                data: UnsafeCell::new(t),
+                reg: StdMutex::new(None),
+            }
+        }
+
+        pub fn lock(&self) -> MutexGuard<'_, T> {
+            let exec = cur_exec();
+            let mid = resolve(&self.reg, &exec, || exec.register_mutex());
+            exec.acquire(mid);
+            MutexGuard {
+                mutex: self,
+                exec,
+                mid,
+            }
+        }
+    }
+
+    impl<T: Default> Default for Mutex<T> {
+        fn default() -> Self {
+            Mutex::new(T::default())
+        }
+    }
+
+    pub struct MutexGuard<'a, T> {
+        mutex: &'a Mutex<T>,
+        exec: Arc<Exec>,
+        mid: usize,
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            unsafe { &*self.mutex.data.get() }
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            unsafe { &mut *self.mutex.data.get() }
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            self.exec.release(self.mid);
+        }
+    }
+
+    #[derive(Default)]
+    pub struct Condvar {
+        reg: Reg,
+    }
+
+    impl Condvar {
+        pub const fn new() -> Self {
+            Condvar {
+                reg: StdMutex::new(None),
+            }
+        }
+
+        fn cvid(&self, exec: &Arc<Exec>) -> usize {
+            resolve(&self.reg, exec, || exec.register_cv())
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+            let guard = ManuallyDrop::new(guard);
+            let mutex = guard.mutex;
+            let mid = guard.mid;
+            let exec = Arc::clone(&guard.exec);
+            let cvid = self.cvid(&exec);
+            // The wait releases and re-acquires the lock itself; the old
+            // guard must not run its Drop.
+            exec.cv_wait(cvid, mid);
+            MutexGuard { mutex, exec, mid }
+        }
+
+        pub fn notify_one(&self) {
+            let exec = cur_exec();
+            let cvid = self.cvid(&exec);
+            exec.notify(cvid, false);
+        }
+
+        pub fn notify_all(&self) {
+            let exec = cur_exec();
+            let cvid = self.cvid(&exec);
+            exec.notify(cvid, true);
+        }
+    }
+}
+
+// The model's own regression suite runs in the NORMAL test build (no
+// --cfg loom needed): the checker is plain library code.
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::sync::{Condvar, Mutex};
+    use super::*;
+
+    #[test]
+    fn serialized_counter_sees_all_increments() {
+        let stats = explore(Config::default(), || {
+            let counter = Arc::new(Mutex::new(0u32));
+            let handles: Vec<_> = (0..2)
+                .map(|_| {
+                    let c = Arc::clone(&counter);
+                    spawn(move || {
+                        *c.lock() += 1;
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join();
+            }
+            assert_eq!(*counter.lock(), 2);
+        });
+        assert!(stats.complete, "space must be exhausted: {stats:?}");
+        assert_eq!(stats.deadlocks, 0, "{stats:?}");
+        assert!(stats.executions > 1, "must explore >1 interleaving");
+    }
+
+    /// Textbook lost wakeup: two waiters, one token, `notify_one`.  The
+    /// checker must find the schedule where the wrong waiter... there is
+    /// no wrong waiter to *wake* — the second notify is never sent, so
+    /// one waiter sleeps forever.
+    #[test]
+    fn detects_lost_wakeup_deadlock() {
+        let stats = explore(Config::default(), || {
+            let m = Arc::new(Mutex::new(0u32));
+            let cv = Arc::new(Condvar::new());
+            let waiters: Vec<_> = (0..2)
+                .map(|_| {
+                    let m = Arc::clone(&m);
+                    let cv = Arc::clone(&cv);
+                    spawn(move || {
+                        let mut g = m.lock();
+                        while *g == 0 {
+                            g = cv.wait(g);
+                        }
+                    })
+                })
+                .collect();
+            {
+                let mut g = m.lock();
+                *g = 1;
+            }
+            // One notification for two waiters: whichever order the
+            // waiters parked, somebody is never woken.
+            cv.notify_one();
+            for w in waiters {
+                w.join();
+            }
+        });
+        assert!(stats.deadlocks > 0, "lost wakeup not detected: {stats:?}");
+    }
+
+    /// Same scenario with notify_all: no schedule deadlocks.
+    #[test]
+    fn notify_all_releases_every_waiter() {
+        let stats = explore(Config::default(), || {
+            let m = Arc::new(Mutex::new(0u32));
+            let cv = Arc::new(Condvar::new());
+            let waiters: Vec<_> = (0..2)
+                .map(|_| {
+                    let m = Arc::clone(&m);
+                    let cv = Arc::clone(&cv);
+                    spawn(move || {
+                        let mut g = m.lock();
+                        while *g == 0 {
+                            g = cv.wait(g);
+                        }
+                    })
+                })
+                .collect();
+            {
+                let mut g = m.lock();
+                *g = 1;
+            }
+            cv.notify_all();
+            for w in waiters {
+                w.join();
+            }
+        });
+        assert!(stats.complete, "{stats:?}");
+        assert_eq!(stats.deadlocks, 0, "notify_all must not deadlock: {stats:?}");
+    }
+
+    /// The weaken switch turns the passing scenario above into the failing
+    /// one — this is the mechanism `tests/loom_sync.rs` uses to prove the
+    /// suite guards the regression.
+    #[test]
+    fn weaken_switch_downgrades_notify_all() {
+        let cfg = Config {
+            weaken_notify_all: true,
+            ..Config::default()
+        };
+        let stats = explore(cfg, || {
+            let m = Arc::new(Mutex::new(0u32));
+            let cv = Arc::new(Condvar::new());
+            let waiters: Vec<_> = (0..2)
+                .map(|_| {
+                    let m = Arc::clone(&m);
+                    let cv = Arc::clone(&cv);
+                    spawn(move || {
+                        let mut g = m.lock();
+                        while *g == 0 {
+                            g = cv.wait(g);
+                        }
+                    })
+                })
+                .collect();
+            {
+                let mut g = m.lock();
+                *g = 1;
+            }
+            cv.notify_all();
+            for w in waiters {
+                w.join();
+            }
+        });
+        assert!(
+            stats.deadlocks > 0,
+            "weakened notify_all must lose a wakeup: {stats:?}"
+        );
+    }
+
+    /// A failing assertion inside a scenario task must fail the test, not
+    /// vanish into a swallowed thread panic.
+    #[test]
+    fn task_panics_propagate() {
+        let caught = std::panic::catch_unwind(|| {
+            explore(Config::default(), || {
+                let h = spawn(|| panic!("scenario invariant violated"));
+                h.join();
+            });
+        });
+        assert!(caught.is_err(), "task panic must propagate");
+    }
+
+    /// Mutex hand-off explores both acquisition orders.
+    #[test]
+    fn contended_lock_explores_both_orders() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let saw_a_first = Arc::new(AtomicBool::new(false));
+        let saw_b_first = Arc::new(AtomicBool::new(false));
+        let (a, b) = (Arc::clone(&saw_a_first), Arc::clone(&saw_b_first));
+        let stats = explore(Config::default(), move || {
+            let m = Arc::new(Mutex::new(Vec::<u8>::new()));
+            let ha = {
+                let m = Arc::clone(&m);
+                spawn(move || m.lock().push(b'a'))
+            };
+            let hb = {
+                let m = Arc::clone(&m);
+                spawn(move || m.lock().push(b'b'))
+            };
+            ha.join();
+            hb.join();
+            let order = m.lock().clone();
+            match order.as_slice() {
+                [b'a', b'b'] => a.store(true, Ordering::Relaxed),
+                [b'b', b'a'] => b.store(true, Ordering::Relaxed),
+                other => panic!("lost an increment: {other:?}"),
+            }
+        });
+        assert!(stats.complete);
+        assert!(saw_a_first.load(Ordering::Relaxed), "a-first order missed");
+        assert!(saw_b_first.load(Ordering::Relaxed), "b-first order missed");
+    }
+}

@@ -1,0 +1,308 @@
+//! Exhaustive interleaving checks for `Mailbox` and `QueueBank` under the
+//! in-tree model checker (`util::model`) — the loom wall.
+//!
+//! Build and run with:
+//!
+//! ```sh
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_sync
+//! ```
+//!
+//! Under `--cfg loom`, `util::sync` rebinds `Mutex`/`Condvar` to the model
+//! scheduler, so the *production* `Mailbox`/`QueueBank` code — not a
+//! replica — runs under every explored schedule up to the preemption
+//! bound.  Each scenario has two forms:
+//!
+//! * the shipped code, asserted deadlock-free over a **complete**
+//!   exploration (`stats.complete` is part of the assertion);
+//! * the same scenario with [`Config::weaken_notify_all`], which makes
+//!   every `notify_all` behave as `notify_one` — the historical PR-1
+//!   lost-wakeup — asserted to **deadlock**.  That second half is what
+//!   proves the suite would catch the regression if someone reintroduced
+//!   it: weakening the wakeups makes these tests fail loudly, not pass
+//!   quietly.
+//!
+//! Timed pops: the model has no wall clock (`wait_timeout_clean` never
+//! times out under loom), so scenarios pass an hour-long timeout and rely
+//! on pushes/`close()` to release waiters — exactly the paths under test.
+//!
+//! Without `--cfg loom` this file compiles to an empty test binary.
+#![cfg(loom)]
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex as StdMutex};
+use std::time::Duration;
+
+use synergy::cluster::QueueBank;
+use synergy::mm::job::{ClassMask, Classed, JobClass};
+use synergy::pipeline::Mailbox;
+use synergy::util::model::{explore, spawn, Config, Stats};
+
+/// Far beyond any model run: timeout-popping APIs must be released by a
+/// notification, never by the deadline check around the wait.
+const FOREVER: Duration = Duration::from_secs(3600);
+
+fn weakened(base: Config) -> Config {
+    Config {
+        weaken_notify_all: true,
+        ..base
+    }
+}
+
+fn assert_sound(stats: Stats) {
+    assert!(
+        stats.complete,
+        "exploration must exhaust the schedule space: {stats:?}"
+    );
+    assert_eq!(stats.deadlocks, 0, "found a deadlocking schedule: {stats:?}");
+}
+
+fn assert_guards(stats: Stats) {
+    assert!(
+        stats.deadlocks > 0,
+        "weakened notify_all must deadlock somewhere — the suite would \
+         not catch the notify_one regression: {stats:?}"
+    );
+}
+
+// ------------------------------------------------------------- mailbox
+
+/// `Mailbox::close()` with two consumers parked on `not_empty`: the
+/// broadcast must release both (drain-then-None contract).
+fn mailbox_close_consumers(cfg: Config) -> Stats {
+    explore(cfg, || {
+        let mb: Arc<Mailbox<u32>> = Arc::new(Mailbox::new(1));
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let mb = Arc::clone(&mb);
+                spawn(move || {
+                    assert_eq!(mb.recv(), None, "nothing was sent before close");
+                })
+            })
+            .collect();
+        mb.close();
+        for c in consumers {
+            c.join();
+        }
+    })
+}
+
+#[test]
+fn mailbox_close_releases_every_consumer() {
+    assert_sound(mailbox_close_consumers(Config::default()));
+}
+
+#[test]
+fn mailbox_close_consumer_broadcast_guards_notify_one() {
+    assert_guards(mailbox_close_consumers(weakened(Config::default())));
+}
+
+/// `Mailbox::close()` with two producers parked on `not_full` (mailbox
+/// pre-filled to capacity): the broadcast must release both, and both
+/// sends must report the close.
+fn mailbox_close_producers(cfg: Config) -> Stats {
+    explore(cfg, || {
+        let mb: Arc<Mailbox<u32>> = Arc::new(Mailbox::new(1));
+        assert!(mb.send(99), "pre-fill to capacity");
+        let producers: Vec<_> = (1..=2)
+            .map(|v| {
+                let mb = Arc::clone(&mb);
+                spawn(move || {
+                    assert!(!mb.send(v), "no consumer pops; send must observe close");
+                })
+            })
+            .collect();
+        mb.close();
+        for p in producers {
+            p.join();
+        }
+    })
+}
+
+#[test]
+fn mailbox_close_releases_blocked_producers() {
+    assert_sound(mailbox_close_producers(Config::default()));
+}
+
+#[test]
+fn mailbox_close_producer_broadcast_guards_notify_one() {
+    assert_guards(mailbox_close_producers(weakened(Config::default())));
+}
+
+/// The headline regression: 2 producers, 2 consumers, capacity-1 mailbox.
+/// Producers block on `not_full`, consumers drain until `None`, close
+/// arrives while consumers are re-parked — every wake-up path in `send`/
+/// `recv`/`close` gets exercised.  Conservation is checked per schedule:
+/// both sent items are received exactly once.
+///
+/// Preemption bound 1 keeps the space at ~64k schedules (measured); all
+/// blocking-point switches and wake choices are free, so every lost-wakeup
+/// shape is still reachable (the weakened twin below proves it).
+fn mailbox_2p2c(cfg: Config) -> Stats {
+    explore(cfg, || {
+        let mb: Arc<Mailbox<u64>> = Arc::new(Mailbox::new(1));
+        let got: Arc<StdMutex<Vec<u64>>> = Arc::new(StdMutex::new(Vec::new()));
+        let consumers: Vec<_> = (0..2)
+            .map(|_| {
+                let mb = Arc::clone(&mb);
+                let got = Arc::clone(&got);
+                spawn(move || {
+                    while let Some(v) = mb.recv() {
+                        // Plain std mutex: result collection is not part
+                        // of the checked state space (tasks are already
+                        // serialized), so it adds no schedule points.
+                        got.lock().unwrap().push(v);
+                    }
+                })
+            })
+            .collect();
+        let producers: Vec<_> = (1..=2u64)
+            .map(|v| {
+                let mb = Arc::clone(&mb);
+                spawn(move || {
+                    assert!(mb.send(v), "queue closes only after producers join");
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join();
+        }
+        mb.close();
+        for c in consumers {
+            c.join();
+        }
+        let mut got = got.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2], "each sent item received exactly once");
+    })
+}
+
+fn bound1() -> Config {
+    Config {
+        preemption_bound: 1,
+        max_executions: 1_000_000,
+        ..Config::default()
+    }
+}
+
+#[test]
+fn mailbox_2p2c_at_capacity_conserves_and_never_deadlocks() {
+    assert_sound(mailbox_2p2c(bound1()));
+}
+
+#[test]
+fn mailbox_2p2c_close_broadcast_guards_notify_one() {
+    assert_guards(mailbox_2p2c(weakened(bound1())));
+}
+
+// ----------------------------------------------------------- queue bank
+
+#[derive(Debug, PartialEq, Eq)]
+struct CItem(u64, usize);
+
+impl Classed for CItem {
+    fn class_index(&self) -> usize {
+        self.1
+    }
+}
+
+fn conv_mask() -> ClassMask {
+    ClassMask::of(&[JobClass::ConvTile])
+}
+
+fn fc_mask() -> ClassMask {
+    ClassMask::of(&[JobClass::FcGemm])
+}
+
+/// The masked-member lost wakeup: two delegates with disjoint capability
+/// masks park on the bank's single condvar; a push of a CONV item must not
+/// hand its only notification to the FC-only member (which cannot take the
+/// item and re-parks, stranding it) — this is why `QueueBank::push`
+/// broadcasts.  Close must then release the FC member that never had
+/// anything to pop.
+fn queue_bank_masked(cfg: Config) -> Stats {
+    explore(cfg, || {
+        let qb: Arc<QueueBank<CItem>> = Arc::new(QueueBank::new());
+        let taken = Arc::new(AtomicUsize::new(0));
+        let conv = {
+            let qb = Arc::clone(&qb);
+            let taken = Arc::clone(&taken);
+            spawn(move || loop {
+                match qb.pop_any_timeout(conv_mask(), FOREVER) {
+                    Ok(Some(item)) => {
+                        assert_eq!(item, CItem(7, 0));
+                        taken.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Ok(None) => return,
+                    Err(()) => panic!("model runs never time out"),
+                }
+            })
+        };
+        let fc = {
+            let qb = Arc::clone(&qb);
+            spawn(move || loop {
+                match qb.pop_any_timeout(fc_mask(), FOREVER) {
+                    Ok(Some(item)) => panic!("FC member popped {item:?} outside its mask"),
+                    Ok(None) => return,
+                    Err(()) => panic!("model runs never time out"),
+                }
+            })
+        };
+        assert!(qb.push(CItem(7, 0)));
+        qb.close();
+        conv.join();
+        fc.join();
+        assert_eq!(taken.load(Ordering::Relaxed), 1, "the CONV item must land");
+    })
+}
+
+#[test]
+fn queue_bank_masked_wakeup_never_strands_an_item() {
+    assert_sound(queue_bank_masked(Config::default()));
+}
+
+#[test]
+fn queue_bank_push_broadcast_guards_notify_one() {
+    assert_guards(queue_bank_masked(weakened(Config::default())));
+}
+
+/// Pop/steal conservation under contention: a popping delegate and a
+/// stealing thief race over three queued items; every schedule must hand
+/// each item to exactly one of them.
+#[test]
+fn queue_bank_pop_steal_conserves() {
+    let stats = explore(Config::default(), || {
+        let qb: Arc<QueueBank<CItem>> = Arc::new(QueueBank::new());
+        for v in 1..=3 {
+            assert!(qb.push(CItem(v, 0)));
+        }
+        let popped: Arc<StdMutex<Vec<u64>>> = Arc::new(StdMutex::new(Vec::new()));
+        let consumer = {
+            let qb = Arc::clone(&qb);
+            let popped = Arc::clone(&popped);
+            spawn(move || loop {
+                match qb.pop_any_timeout(conv_mask(), FOREVER) {
+                    Ok(Some(CItem(v, _))) => popped.lock().unwrap().push(v),
+                    Ok(None) => return,
+                    Err(()) => panic!("model runs never time out"),
+                }
+            })
+        };
+        let stolen: Arc<StdMutex<Vec<u64>>> = Arc::new(StdMutex::new(Vec::new()));
+        let thief = {
+            let qb = Arc::clone(&qb);
+            let stolen = Arc::clone(&stolen);
+            spawn(move || {
+                let grabbed = qb.steal_where(2, conv_mask());
+                stolen.lock().unwrap().extend(grabbed.into_iter().map(|i| i.0));
+            })
+        };
+        thief.join();
+        qb.close();
+        consumer.join();
+        let mut all = popped.lock().unwrap().clone();
+        all.extend(stolen.lock().unwrap().iter().copied());
+        all.sort_unstable();
+        assert_eq!(all, vec![1, 2, 3], "pop + steal must partition the items");
+    });
+    assert_sound(stats);
+}

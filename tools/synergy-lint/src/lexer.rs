@@ -1,0 +1,379 @@
+//! A minimal Rust lexer — just enough structure for the lint rules.
+//!
+//! Zero dependencies by design (the build container has no registry, so
+//! `syn` is off the table) and resilient by construction: the rules only
+//! need identifiers, punctuation, and line numbers, with comments and
+//! string/char literals kept out of the token stream so `"lock()"` inside
+//! a diagnostic message can never trip a rule.  String literals are kept
+//! as tokens (rule 5 reads the `"key" =>` arms of the config parser);
+//! `//` comments are collected separately (the `lint: allow(...)` escapes
+//! live there).
+
+/// Token class.  `Str` carries the literal's *content* (quotes stripped).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Lifetime,
+    Num,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// 1-based source line of the token's first character.
+    pub line: u32,
+    pub kind: TokKind,
+    pub text: String,
+}
+
+/// A `//` comment and the line it starts on.
+#[derive(Debug, Clone)]
+pub struct LineComment {
+    pub line: u32,
+    pub text: String,
+}
+
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<LineComment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Tokenize `text`.  Never fails: unterminated constructs run to EOF, and
+/// any unrecognized byte becomes a one-char `Punct` token.
+pub fn lex(text: &str) -> Lexed {
+    let cs: Vec<char> = text.chars().collect();
+    let n = cs.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let push = |toks: &mut Vec<Tok>, line: u32, kind: TokKind, text: String| {
+        toks.push(Tok { line, kind, text });
+    };
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment (collected for the allow-escapes).
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            comments.push(LineComment {
+                line,
+                text: cs[start..i].iter().collect(),
+            });
+            continue;
+        }
+        // Block comment (nesting, dropped).
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw strings: r"..." / r#"..."# / br#"..."# (any hash count).
+        if c == 'r' || (c == 'b' && i + 1 < n && cs[i + 1] == 'r') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && cs[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && cs[j] == '"' {
+                let start_line = line;
+                j += 1;
+                let content_start = j;
+                'scan: while j < n {
+                    if cs[j] == '"' {
+                        let mut ok = true;
+                        for h in 0..hashes {
+                            if j + 1 + h >= n || cs[j + 1 + h] != '#' {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        if ok {
+                            break 'scan;
+                        }
+                    }
+                    if cs[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                push(
+                    &mut toks,
+                    start_line,
+                    TokKind::Str,
+                    cs[content_start..j.min(n)].iter().collect(),
+                );
+                i = (j + 1 + hashes).min(n);
+                continue;
+            }
+            // not a raw string: fall through to the ident branch below
+        }
+        // Plain / byte strings.
+        if c == '"' || (c == 'b' && i + 1 < n && cs[i + 1] == '"') {
+            let start_line = line;
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut content = String::new();
+            while j < n && cs[j] != '"' {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\n' {
+                    line += 1;
+                }
+                content.push(cs[j]);
+                j += 1;
+            }
+            push(&mut toks, start_line, TokKind::Str, content);
+            i = j + 1;
+            continue;
+        }
+        // Lifetime vs char literal.
+        if c == '\'' {
+            let next_is_ident = i + 1 < n && is_ident_start(cs[i + 1]);
+            let closes_as_char = i + 2 < n && cs[i + 2] == '\'';
+            if next_is_ident && !closes_as_char {
+                let mut j = i + 1;
+                while j < n && is_ident_cont(cs[j]) {
+                    j += 1;
+                }
+                push(
+                    &mut toks,
+                    line,
+                    TokKind::Lifetime,
+                    cs[i..j].iter().collect(),
+                );
+                i = j;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n {
+                if cs[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if cs[j] == '\'' {
+                    break;
+                }
+                j += 1;
+            }
+            push(
+                &mut toks,
+                line,
+                TokKind::Char,
+                cs[i..(j + 1).min(n)].iter().collect(),
+            );
+            i = (j + 1).min(n);
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident_cont(cs[j]) {
+                j += 1;
+            }
+            push(&mut toks, line, TokKind::Ident, cs[i..j].iter().collect());
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n {
+                if is_ident_cont(cs[j]) {
+                    j += 1;
+                } else if cs[j] == '.' && j + 1 < n && cs[j + 1].is_ascii_digit() {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            push(&mut toks, line, TokKind::Num, cs[i..j].iter().collect());
+            i = j;
+            continue;
+        }
+        push(&mut toks, line, TokKind::Punct, c.to_string());
+        i += 1;
+    }
+    Lexed { toks, comments }
+}
+
+/// Line spans `(start, end)` covered by `#[cfg(..test..)]` / `#[test]`
+/// items.  The rules skip findings inside these: test code may spawn
+/// threads, hold bare locks, and match loosely.
+pub fn test_regions(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut spans = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].text == "#" && i + 1 < n && toks[i + 1].text == "[" {
+            let (is_test, mut j) = attr_is_test(toks, i);
+            let mut test = is_test;
+            // Stacked attributes on the same item.
+            while j + 1 < n && toks[j].text == "#" && toks[j + 1].text == "[" {
+                let (t2, j2) = attr_is_test(toks, j);
+                test |= t2;
+                j = j2;
+            }
+            if test && j < n {
+                // Skip the annotated item: to `;` or the matching `{}`.
+                let start_line = toks[j].line;
+                let mut bd = 0i32;
+                let mut k = j;
+                let mut end_line = start_line;
+                while k < n {
+                    match toks[k].text.as_str() {
+                        "{" => bd += 1,
+                        "}" => {
+                            bd -= 1;
+                            if bd == 0 {
+                                end_line = toks[k].line;
+                                break;
+                            }
+                        }
+                        ";" if bd == 0 => {
+                            end_line = toks[k].line;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                spans.push((start_line, end_line));
+                i = k + 1;
+                continue;
+            }
+            i = j;
+            continue;
+        }
+        i += 1;
+    }
+    spans
+}
+
+/// Parse the attribute starting at `#`/`[` index `at`; return whether it
+/// marks test code and the index just past its closing `]`.
+fn attr_is_test(toks: &[Tok], at: usize) -> (bool, usize) {
+    let n = toks.len();
+    let mut j = at + 2;
+    let mut depth = 1i32;
+    let mut names: Vec<&str> = Vec::new();
+    while j < n && depth > 0 {
+        match toks[j].text.as_str() {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            _ => {
+                if toks[j].kind == TokKind::Ident {
+                    names.push(&toks[j].text);
+                }
+            }
+        }
+        j += 1;
+    }
+    let has_test = names.iter().any(|s| *s == "test");
+    let has_cfg = names.iter().any(|s| *s == "cfg");
+    // `#[test]` (lone ident) or any `#[cfg(...)]` mentioning `test`,
+    // which covers `#[cfg(all(test, not(loom)))]`.
+    let is_test = has_test && (has_cfg || names.len() == 1);
+    (is_test, j + 1)
+}
+
+pub fn in_spans(line: u32, spans: &[(u32, u32)]) -> bool {
+    spans.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_stay_out_of_the_token_stream() {
+        let lx = lex("let a = \"lock().unwrap()\"; // spawn here\n/* match _ */ b");
+        let idents: Vec<&str> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["let", "a", "b"]);
+        assert_eq!(lx.comments.len(), 1);
+        assert!(lx.comments[0].text.contains("spawn here"));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let lx = lex("let s = r#\"a \" b\"#; fn f<'a>(x: &'a str) -> char { 'x' }");
+        let strs: Vec<&str> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, ["a \" b"]);
+        assert!(lx
+            .toks
+            .iter()
+            .any(|t| t.kind == TokKind::Lifetime && t.text == "'a"));
+        assert!(lx.toks.iter().any(|t| t.kind == TokKind::Char));
+    }
+
+    #[test]
+    fn multiline_tokens_keep_line_numbers() {
+        let lx = lex("a\n  .lock()\n  .unwrap()");
+        let unwrap = lx.toks.iter().find(|t| t.text == "unwrap").unwrap();
+        assert_eq!(unwrap.line, 3);
+    }
+
+    #[test]
+    fn cfg_test_regions_cover_mod_and_fn() {
+        let src = "fn live() {}\n#[cfg(all(test, not(loom)))]\nmod tests {\n  fn x() {}\n}\n#[test]\nfn t() {}\nfn live2() {}";
+        let lx = lex(src);
+        let spans = test_regions(&lx.toks);
+        assert_eq!(spans.len(), 2);
+        assert!(in_spans(4, &spans), "inside mod tests");
+        assert!(in_spans(7, &spans), "inside #[test] fn");
+        assert!(!in_spans(1, &spans));
+        assert!(!in_spans(8, &spans));
+    }
+}

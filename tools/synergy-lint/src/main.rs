@@ -1,0 +1,166 @@
+//! synergy-lint — machine-checks the concurrency and documentation
+//! invariants the runtime's correctness rests on:
+//!
+//! 1. **thread-spawn** — threads are born only in the delegate/pool layer
+//!    (allowlist in `rules::spawn`), or carry a justified
+//!    `// lint: allow(thread-spawn): <why>`.
+//! 2. **lock-order** — the static lock-acquisition graph is acyclic (no
+//!    ABBA deadlocks, no lexical self-deadlocks).
+//! 3. **bare-lock** — delegate-reachable modules use
+//!    `util::sync::lock_clean`, never bare `.lock().unwrap()` (escape:
+//!    `// lint: allow(bare-lock): <why>`).
+//! 4. **dispatch-wildcard** — matches over `JobClass`/`JobKind` in
+//!    dispatch/steal code spell every class; no `_` arms.
+//! 5. **knob-doc** — every `[device]`/`[cluster]`/`[serving]` key the
+//!    `.hw_config` parser accepts is documented in the README with a
+//!    default.
+//!
+//! Usage (defaults fit an invocation from the repo root):
+//!
+//! ```sh
+//! synergy-lint [--src rust/src] [--readme README.md] \
+//!              [--hw-config <src>/config/hw_config.rs] [--verbose]
+//! ```
+//!
+//! Prints `file:line: rule: message` per finding; exit code 1 if any.
+
+mod lexer;
+mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use rules::lock_order::LockGraph;
+use rules::Finding;
+
+struct Args {
+    src: PathBuf,
+    readme: PathBuf,
+    hw_config: PathBuf,
+    verbose: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut src = PathBuf::from("rust/src");
+    let mut readme = PathBuf::from("README.md");
+    let mut hw_config: Option<PathBuf> = None;
+    let mut verbose = false;
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut val = |name: &str| {
+            it.next()
+                .ok_or_else(|| format!("{name} needs a value"))
+                .map(PathBuf::from)
+        };
+        match a.as_str() {
+            "--src" => src = val("--src")?,
+            "--readme" => readme = val("--readme")?,
+            "--hw-config" => hw_config = Some(val("--hw-config")?),
+            "--verbose" => verbose = true,
+            "--help" | "-h" => {
+                return Err("usage: synergy-lint [--src DIR] [--readme FILE] \
+                            [--hw-config FILE] [--verbose]"
+                    .to_string())
+            }
+            other => return Err(format!("unknown argument {other}")),
+        }
+    }
+    let hw_config = hw_config.unwrap_or_else(|| src.join("config/hw_config.rs"));
+    Ok(Args {
+        src,
+        readme,
+        hw_config,
+        verbose,
+    })
+}
+
+fn rust_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let Ok(entries) = fs::read_dir(&dir) else {
+            continue;
+        };
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Run all rules over `src` + `readme` + `hw_config`; pure so the
+/// integration tests drive it against fixture trees.
+fn run(args: &Args) -> Result<Vec<Finding>, String> {
+    let mut findings = Vec::new();
+    let mut graph = LockGraph::default();
+    for path in rust_files(&args.src) {
+        let rel = path
+            .strip_prefix(&args.src)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(&path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let lx = lexer::lex(&text);
+        let spans = lexer::test_regions(&lx.toks);
+        rules::spawn::check(&rel, &lx.toks, &lx.comments, &spans, &mut findings);
+        rules::lock_order::scan(&rel, &lx.toks, &spans, &mut graph, &mut findings);
+        rules::bare_lock::check(&rel, &lx.toks, &lx.comments, &spans, &mut findings);
+        rules::dispatch::check(&rel, &lx.toks, &spans, &mut findings);
+    }
+    graph.check(&mut findings);
+    if args.verbose {
+        for e in graph.edge_list() {
+            eprintln!("lock edge: {e}");
+        }
+    }
+
+    let hw_text = fs::read_to_string(&args.hw_config)
+        .map_err(|e| format!("reading {}: {e}", args.hw_config.display()))?;
+    let readme_text = fs::read_to_string(&args.readme)
+        .map_err(|e| format!("reading {}: {e}", args.readme.display()))?;
+    let knobs = rules::knobs::parsed_keys(&lexer::lex(&hw_text).toks);
+    if args.verbose {
+        eprintln!("knob keys parsed: {}", knobs.len());
+    }
+    let hw_rel = args.hw_config.to_string_lossy().replace('\\', "/");
+    rules::knobs::check(&hw_rel, &knobs, &readme_text, &mut findings);
+
+    findings.sort();
+    findings.dedup();
+    Ok(findings)
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    match run(&args) {
+        Ok(findings) if findings.is_empty() => {
+            eprintln!("synergy-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            eprintln!("synergy-lint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(msg) => {
+            eprintln!("synergy-lint: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}

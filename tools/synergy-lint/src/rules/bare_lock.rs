@@ -1,0 +1,106 @@
+//! Rule 3 — poison hygiene.
+//!
+//! Delegate threads die with locks held when a backend panics; a bare
+//! `.lock().unwrap()` anywhere a delegate (or a thread observing a dead
+//! delegate's state) can reach then turns one dead accelerator into a
+//! poison cascade.  Those modules must use `util::sync::lock_clean`,
+//! which makes the recover-the-data decision once, in one place.  The
+//! escape is a justified `// lint: allow(bare-lock): <why>` within the
+//! three lines above.  `util/` itself is out of scope: the model
+//! checker's internal std locks are the mechanism the facade is built on.
+
+use crate::lexer::{in_spans, LineComment, Tok, TokKind};
+use crate::rules::{allow_lines, Finding};
+
+/// Module prefixes a delegate can reach (relative to the src root).
+pub const SCOPE: &[&str] = &[
+    "mm/", "cluster/", "pipeline/", "rt/", "sched/", "serve/", "accel/",
+];
+
+pub fn check(
+    rel: &str,
+    toks: &[Tok],
+    comments: &[LineComment],
+    spans: &[(u32, u32)],
+    findings: &mut Vec<Finding>,
+) {
+    if !SCOPE.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    let allows = allow_lines(comments, "bare-lock");
+    let n = toks.len();
+    for i in 1..n.saturating_sub(4) {
+        // `.lock().unwrap()` — token-wise, so line breaks inside the
+        // chain cannot hide it.
+        if toks[i].kind == TokKind::Ident
+            && toks[i].text == "lock"
+            && toks[i - 1].text == "."
+            && toks[i + 1].text == "("
+            && toks[i + 2].text == ")"
+            && toks[i + 3].text == "."
+            && toks[i + 4].text == "unwrap"
+        {
+            let line = toks[i].line;
+            if in_spans(line, spans) {
+                continue;
+            }
+            if allows.iter().any(|&al| al + 3 >= line && al <= line) {
+                continue;
+            }
+            findings.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: "bare-lock",
+                message: "bare `.lock().unwrap()` in a delegate-reachable module; \
+                          use `util::sync::lock_clean` (escape: \
+                          `// lint: allow(bare-lock): <why>`)"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::{lex, test_regions};
+
+    fn run(rel: &str, src: &str) -> Vec<Finding> {
+        let lx = lex(src);
+        let spans = test_regions(&lx.toks);
+        let mut f = Vec::new();
+        check(rel, &lx.toks, &lx.comments, &spans, &mut f);
+        f
+    }
+
+    #[test]
+    fn flags_single_and_multi_line_bare_locks() {
+        let f = run(
+            "serve/stats.rs",
+            "fn f(m: &M) {\n  m.lock().unwrap();\n  m\n    .lock()\n    .unwrap();\n}",
+        );
+        assert_eq!(f.len(), 2);
+        assert_eq!((f[0].line, f[1].line), (2, 4));
+    }
+
+    #[test]
+    fn out_of_scope_escaped_and_test_code_pass() {
+        assert!(run("util/model.rs", "fn f(m: &M) { m.lock().unwrap(); }").is_empty());
+        assert!(run(
+            "rt/pool.rs",
+            "fn f(m: &M) {\n  // lint: allow(bare-lock): poisoning is fatal here anyway.\n  \
+             m.lock().unwrap();\n}",
+        )
+        .is_empty());
+        assert!(run(
+            "rt/pool.rs",
+            "#[cfg(test)]\nmod tests {\n  fn t(m: &M) { m.lock().unwrap(); }\n}",
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn lock_clean_is_the_blessed_spelling() {
+        assert!(run("serve/stats.rs", "fn f(m: &M) { let g = lock_clean(m); }").is_empty());
+    }
+}

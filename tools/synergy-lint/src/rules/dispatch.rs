@@ -1,0 +1,201 @@
+//! Rule 4 — exhaustive `JobClass` / `JobKind` dispatch.
+//!
+//! Scheduling correctness rests on every job class being routed, stolen,
+//! and executed deliberately.  A `_` (or lone-binding) arm in a match
+//! over `JobClass`/`JobKind` silently inherits whatever the wildcard does
+//! when a new class is added — exactly how a class ends up unroutable or
+//! executed inline.  In dispatch/steal code (mm/, sched/, rt/, accel/),
+//! such matches must spell every class; the compiler then points at every
+//! dispatch decision when the enum grows.
+
+use crate::lexer::{in_spans, Tok, TokKind};
+use crate::rules::Finding;
+
+/// Dispatch/steal module prefixes (relative to the src root).
+pub const SCOPE: &[&str] = &["mm/", "sched/", "rt/", "accel/"];
+
+pub fn check(rel: &str, toks: &[Tok], spans: &[(u32, u32)], findings: &mut Vec<Finding>) {
+    if !SCOPE.iter().any(|p| rel.starts_with(p)) {
+        return;
+    }
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].kind == TokKind::Ident && toks[i].text == "match" {
+            // Advance by one (not past the match): nested matches inside
+            // arm bodies are then rediscovered and parsed on their own.
+            if let Some((arms, _next)) = parse_match(toks, i) {
+                let mentions = arms.iter().flat_map(|(pat, _)| pat.iter()).any(|p| {
+                    p.kind == TokKind::Ident && (p.text == "JobClass" || p.text == "JobKind")
+                });
+                if mentions {
+                    for (pat, line) in &arms {
+                        if in_spans(*line, spans) {
+                            continue;
+                        }
+                        if is_wildcard(pat) {
+                            findings.push(Finding {
+                                file: rel.to_string(),
+                                line: *line,
+                                rule: "dispatch-wildcard",
+                                message: "wildcard arm in a JobClass/JobKind match: \
+                                          spell every class so adding one forces a \
+                                          dispatch decision"
+                                    .to_string(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+fn is_wildcard(pat: &[Tok]) -> bool {
+    if pat.len() != 1 {
+        return false;
+    }
+    let t = &pat[0];
+    t.text == "_"
+        || (t.kind == TokKind::Ident
+            && t.text.chars().next().is_some_and(|c| c.is_ascii_lowercase())
+            && t.text != "true"
+            && t.text != "false")
+}
+
+/// Parse the match expression at token `at`; return each arm's pattern
+/// tokens (guard included — `_ if cond` is more than one token, so a
+/// guarded wildcard does not count as bare, the conservative direction)
+/// with its first line, plus the index just past the match.  Arm bodies
+/// are skipped, not descended into; the caller rediscovers nested
+/// matches by continuing its token scan one past the `match` keyword.
+fn parse_match(toks: &[Tok], at: usize) -> Option<(Vec<(Vec<Tok>, u32)>, usize)> {
+    let n = toks.len();
+    // Scrutinee: scan to the `{` at bracket depth 0.
+    let mut j = at + 1;
+    let mut d = 0i32;
+    loop {
+        if j >= n {
+            return None;
+        }
+        match toks[j].text.as_str() {
+            "(" | "[" => d += 1,
+            ")" | "]" => d -= 1,
+            "{" if d == 0 => break,
+            ";" => return None,
+            _ => {}
+        }
+        j += 1;
+    }
+    let mut arms: Vec<(Vec<Tok>, u32)> = Vec::new();
+    let mut k = j + 1;
+    let mut pat: Vec<Tok> = Vec::new();
+    let mut d = 0i32;
+    while k < n {
+        let t = &toks[k];
+        if d == 0 && t.text == "}" {
+            return Some((arms, k + 1));
+        }
+        if d == 0 && t.text == "=" && k + 1 < n && toks[k + 1].text == ">" {
+            let line = pat.first().map(|p| p.line).unwrap_or(t.line);
+            arms.push((std::mem::take(&mut pat), line));
+            k += 2;
+            // Skip the arm body: a block, or an expression up to `,`.
+            if k < n && toks[k].text == "{" {
+                let mut bd = 1i32;
+                k += 1;
+                while k < n && bd > 0 {
+                    match toks[k].text.as_str() {
+                        "{" => bd += 1,
+                        "}" => bd -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                if k < n && toks[k].text == "," {
+                    k += 1;
+                }
+            } else {
+                let mut bd = 0i32;
+                while k < n {
+                    match toks[k].text.as_str() {
+                        "(" | "[" | "{" => bd += 1,
+                        ")" | "]" => bd -= 1,
+                        "}" => {
+                            if bd == 0 {
+                                break; // the match's own closing brace
+                            }
+                            bd -= 1;
+                        }
+                        "," if bd == 0 => {
+                            k += 1;
+                            break;
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+            }
+            continue;
+        }
+        match t.text.as_str() {
+            "(" | "[" | "{" => d += 1,
+            ")" | "]" | "}" => d -= 1,
+            _ => {}
+        }
+        pat.push(t.clone());
+        k += 1;
+    }
+    Some((arms, k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::{lex, test_regions};
+
+    fn run(rel: &str, src: &str) -> Vec<Finding> {
+        let lx = lex(src);
+        let spans = test_regions(&lx.toks);
+        let mut f = Vec::new();
+        check(rel, &lx.toks, &spans, &mut f);
+        f
+    }
+
+    #[test]
+    fn flags_underscore_and_binding_arms() {
+        let src = "fn f(c: JobClass) -> u32 {\n  match c {\n    JobClass::ConvTile => 0,\n    \
+                   _ => 9,\n  }\n}\n\
+                   fn g(c: JobClass) -> u32 {\n  match c {\n    JobClass::ConvTile => 0,\n    \
+                   other => 9,\n  }\n}";
+        let f = run("mm/job.rs", src);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert_eq!((f[0].line, f[1].line), (4, 10));
+    }
+
+    #[test]
+    fn exhaustive_struct_patterns_and_or_arms_pass() {
+        let src = "fn f(k: &JobKind) -> u32 {\n  match k {\n    \
+                   JobKind::ConvTile { a_tiles, b_tiles } => a_tiles + b_tiles,\n    \
+                   JobKind::FcGemm { .. } | JobKind::Im2col { .. } => 1,\n  }\n}";
+        assert!(run("mm/job.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unrelated_matches_and_out_of_scope_files_pass() {
+        let src = "fn f(n: u32) -> u32 { match n { 0 => 1, _ => 2 } }";
+        assert!(run("mm/job.rs", src).is_empty());
+        let job = "fn f(c: JobClass) -> u32 { match c { _ => 9 } }";
+        assert!(run("serve/server.rs", job).is_empty());
+    }
+
+    #[test]
+    fn nested_match_in_arm_body_is_still_checked() {
+        let src = "fn f(c: JobClass, n: u32) -> u32 {\n  match n {\n    0 => match c {\n      \
+                   JobClass::ConvTile => 0,\n      _ => 1,\n    },\n    _ => 2,\n  }\n}";
+        let f = run("mm/job.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 5);
+    }
+}

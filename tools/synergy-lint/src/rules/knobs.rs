@@ -1,0 +1,163 @@
+//! Rule 5 — knob/README parity.
+//!
+//! Every `[device]` / `[cluster]` / `[serving]` key the `.hw_config`
+//! parser accepts must appear in a README table row with a non-empty
+//! default.  The knobs are the system's operational surface; an
+//! undocumented one is a knob nobody can responsibly turn.  The keys are
+//! read from the `"key" =>` match arms inside `Sec::Device` /
+//! `Sec::Cluster` / `Sec::Serving` in `config/hw_config.rs`, so the
+//! check tracks the parser — adding a knob without documenting it fails
+//! CI, with no list to keep in sync by hand.
+
+use crate::lexer::{Tok, TokKind};
+use crate::rules::Finding;
+
+#[derive(Debug, PartialEq, Eq)]
+pub struct Knob {
+    pub section: String,
+    pub key: String,
+    pub line: u32,
+}
+
+/// Extract the accepted keys from the lexed `hw_config.rs` tokens.
+pub fn parsed_keys(toks: &[Tok]) -> Vec<Knob> {
+    let n = toks.len();
+    let mut section: Option<String> = None;
+    let mut keys = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        // `Sec::X =>` in arm-pattern position opens section X.  A
+        // `=> Sec::X` value (the section-name dispatch) has `,`/`}` after
+        // it instead and must not switch sections.
+        if toks[i].text == "Sec"
+            && i + 5 < n
+            && toks[i + 1].text == ":"
+            && toks[i + 2].text == ":"
+            && toks[i + 3].kind == TokKind::Ident
+            && toks[i + 4].text == "="
+            && toks[i + 5].text == ">"
+        {
+            let sec = toks[i + 3].text.as_str();
+            section = if matches!(sec, "Device" | "Cluster" | "Serving") {
+                Some(sec.to_string())
+            } else {
+                None
+            };
+            i += 6;
+            continue;
+        }
+        if let Some(sec) = &section {
+            if toks[i].kind == TokKind::Str
+                && i + 2 < n
+                && toks[i + 1].text == "="
+                && toks[i + 2].text == ">"
+            {
+                keys.push(Knob {
+                    section: sec.clone(),
+                    key: toks[i].text.clone(),
+                    line: toks[i].line,
+                });
+            }
+        }
+        i += 1;
+    }
+    keys
+}
+
+/// Check every knob against the README's tables.  A knob is documented
+/// when some table row (a line starting with `|`) carries `` `key` `` in
+/// its first cell and a non-empty default in its second.
+pub fn check(hw_rel: &str, knobs: &[Knob], readme: &str, findings: &mut Vec<Finding>) {
+    let rows: Vec<&str> = readme
+        .lines()
+        .filter(|l| l.trim_start().starts_with('|'))
+        .collect();
+    for knob in knobs {
+        let tag = format!("`{}`", knob.key);
+        let documented = rows.iter().any(|row| {
+            let cells: Vec<&str> = row.split('|').map(str::trim).collect();
+            // ["", key, default, meaning, ""] for a well-formed row.
+            cells.len() >= 4
+                && cells[1].contains(&tag)
+                && !cells[2].is_empty()
+                && cells[2].chars().any(|c| c != '-')
+        });
+        if !documented {
+            findings.push(Finding {
+                file: hw_rel.to_string(),
+                line: knob.line,
+                rule: "knob-doc",
+                message: format!(
+                    "[{}] key `{}` has no README table row with a default",
+                    knob.section.to_lowercase(),
+                    knob.key
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    const PARSER: &str = r#"
+        match kind.as_str() {
+            "device" => Sec::Device,
+            "cluster" => Sec::Cluster,
+        }
+        match sec {
+            Sec::Device => match k {
+                "tile_size" => 1,
+                "fpga_mhz" => 2,
+                other => bail!("unknown"),
+            },
+            Sec::PeType => match k {
+                "ii" => 3,
+                other => bail!("unknown"),
+            },
+            Sec::Serving => match k {
+                "max_batch" => 4,
+                other => bail!("unknown"),
+            },
+            Sec::None => bail!("outside"),
+        }
+    "#;
+
+    #[test]
+    fn keys_come_from_arm_position_sections_only() {
+        let lx = lex(PARSER);
+        let keys = parsed_keys(&lx.toks);
+        let got: Vec<(&str, &str)> = keys
+            .iter()
+            .map(|k| (k.section.as_str(), k.key.as_str()))
+            .collect();
+        // No "device"/"cluster" section-name strings, no PeType keys.
+        assert_eq!(
+            got,
+            [
+                ("Device", "tile_size"),
+                ("Device", "fpga_mhz"),
+                ("Serving", "max_batch")
+            ]
+        );
+    }
+
+    #[test]
+    fn undocumented_and_defaultless_keys_are_flagged() {
+        let lx = lex(PARSER);
+        let keys = parsed_keys(&lx.toks);
+        let readme = "\
+            | knob | default | meaning |\n\
+            |---|---|---|\n\
+            | `tile_size` | 32 | tile edge |\n\
+            | `fpga_mhz` |  | no default given |\n";
+        let mut f = Vec::new();
+        check("config/hw_config.rs", &keys, readme, &mut f);
+        let flagged: Vec<&str> = f.iter().map(|x| x.rule).collect();
+        assert_eq!(flagged, ["knob-doc", "knob-doc"], "{f:?}");
+        assert!(f[0].message.contains("`fpga_mhz`"));
+        assert!(f[1].message.contains("`max_batch`"));
+    }
+}

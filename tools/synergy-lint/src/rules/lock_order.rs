@@ -1,0 +1,366 @@
+//! Rule 2 — lock-order discipline.
+//!
+//! Builds a static acquisition-order graph: an edge `A -> B` means some
+//! function acquires lock `B` while a guard on lock `A` is lexically
+//! live.  A cycle in that graph is a potential ABBA deadlock and fails
+//! the lint.  Locks are labelled `EnclosingImplType::field` (file stem
+//! when acquired in a free function), which is exact for the codebase's
+//! style of `lock_clean(&self.field)` / `self.field.lock()` acquisition.
+//!
+//! Lexical liveness: a guard bound by `let [mut] g = <acquire>` lives
+//! until its block closes or an explicit `drop(g)`; an unbound acquisition
+//! (`lock_clean(&self.x).field`) is a statement temporary — it picks up
+//! incoming edges from held guards but is never itself "held".
+//! The analysis is per-function and intra-procedural by design; guards
+//! passed across function boundaries (`fn f(k: &mut Kernel)`) are the
+//! caller's to order.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::{in_spans, Tok, TokKind};
+use crate::rules::Finding;
+
+/// Acquisition graph across the whole tree: edge -> first witness site.
+#[derive(Default)]
+pub struct LockGraph {
+    edges: BTreeMap<String, BTreeSet<String>>,
+    sites: BTreeMap<(String, String), (String, u32)>,
+}
+
+struct Guard {
+    name: String,
+    depth: i32,
+    label: String,
+}
+
+pub fn scan(
+    rel: &str,
+    toks: &[Tok],
+    spans: &[(u32, u32)],
+    graph: &mut LockGraph,
+    findings: &mut Vec<Finding>,
+) {
+    let n = toks.len();
+    let file_tag = rel
+        .rsplit('/')
+        .next()
+        .unwrap_or(rel)
+        .trim_end_matches(".rs")
+        .to_string();
+    let mut impl_type: Option<String> = None;
+    let mut impl_depth = 0i32;
+    let mut depth = 0i32;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut i = 0usize;
+
+    while i < n {
+        let t = &toks[i];
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+                if impl_type.is_some() && depth < impl_depth {
+                    impl_type = None;
+                }
+            }
+            "impl" if t.kind == TokKind::Ident && impl_type.is_none() => {
+                let (ty, next) = parse_impl_header(toks, i);
+                impl_type = ty;
+                impl_depth = depth + 1;
+                i = next;
+                continue;
+            }
+            "drop" if t.kind == TokKind::Ident => {
+                // drop(g) releases g early.
+                if i + 3 < n
+                    && toks[i + 1].text == "("
+                    && toks[i + 2].kind == TokKind::Ident
+                    && toks[i + 3].text == ")"
+                {
+                    let name = &toks[i + 2].text;
+                    guards.retain(|g| g.name != *name);
+                }
+            }
+            "lock_clean" if t.kind == TokKind::Ident && !in_spans(t.line, spans) => {
+                // lock_clean(&CHAIN): label from the chain's last ident.
+                let mut field = None;
+                let mut j = i + 1;
+                if j < n && toks[j].text == "(" {
+                    j += 1;
+                    while j < n && toks[j].text != ")" {
+                        if toks[j].kind == TokKind::Ident {
+                            field = Some(toks[j].text.clone());
+                        }
+                        j += 1;
+                    }
+                }
+                if let Some(field) = field {
+                    let label = label(&impl_type, &file_tag, &field);
+                    record(rel, t.line, &label, &guards, graph, findings);
+                    bind_guard(toks, i, depth, &label, &mut guards);
+                }
+            }
+            "lock"
+                if t.kind == TokKind::Ident
+                    && i >= 2
+                    && toks[i - 1].text == "."
+                    && i + 2 < n
+                    && toks[i + 1].text == "("
+                    && toks[i + 2].text == ")"
+                    && !in_spans(t.line, spans) =>
+            {
+                // CHAIN.lock(): std-style acquisition (util/, model code).
+                if toks[i - 2].kind == TokKind::Ident {
+                    let label = label(&impl_type, &file_tag, &toks[i - 2].text);
+                    record(rel, t.line, &label, &guards, graph, findings);
+                    bind_guard(toks, i, depth, &label, &mut guards);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+}
+
+fn label(impl_type: &Option<String>, file_tag: &str, field: &str) -> String {
+    match impl_type {
+        Some(t) => format!("{t}::{field}"),
+        None => format!("{file_tag}::{field}"),
+    }
+}
+
+fn record(
+    rel: &str,
+    line: u32,
+    new_label: &str,
+    guards: &[Guard],
+    graph: &mut LockGraph,
+    findings: &mut Vec<Finding>,
+) {
+    for g in guards {
+        if g.label == new_label {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line,
+                rule: "lock-order",
+                message: format!("re-acquires `{new_label}` while already held (self-deadlock)"),
+            });
+            continue;
+        }
+        graph
+            .edges
+            .entry(g.label.clone())
+            .or_default()
+            .insert(new_label.to_string());
+        graph
+            .sites
+            .entry((g.label.clone(), new_label.to_string()))
+            .or_insert_with(|| (rel.to_string(), line));
+    }
+}
+
+/// `impl [<..>] Type [for Type2]` — returns the implemented-on type name
+/// and the index of the opening `{` (or wherever parsing stopped).
+fn parse_impl_header(toks: &[Tok], at: usize) -> (Option<String>, usize) {
+    let n = toks.len();
+    let mut j = at + 1;
+    if j < n && toks[j].text == "<" {
+        let mut d = 1i32;
+        j += 1;
+        while j < n && d > 0 {
+            match toks[j].text.as_str() {
+                "<" => d += 1,
+                ">" => d -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+    }
+    let mut tname: Option<String> = None;
+    let mut for_t: Option<String> = None;
+    let mut seen_for = false;
+    while j < n && toks[j].text != "{" && toks[j].text != "where" {
+        if toks[j].kind == TokKind::Ident {
+            if toks[j].text == "for" {
+                seen_for = true;
+            } else if seen_for {
+                if for_t.is_none() {
+                    for_t = Some(toks[j].text.clone());
+                }
+            } else if tname.is_none() || toks[j - 1].text == ":" {
+                tname = Some(toks[j].text.clone());
+            }
+        }
+        j += 1;
+    }
+    (for_t.or(tname), j)
+}
+
+/// If the acquisition at token `i` is the RHS of `let [mut] NAME = ...`,
+/// register NAME as a live guard (shadowing any same-named one).
+fn bind_guard(toks: &[Tok], i: usize, depth: i32, label: &str, guards: &mut Vec<Guard>) {
+    let mut j = i;
+    let mut back = 0;
+    while j > 0 && back < 12 {
+        j -= 1;
+        back += 1;
+        match toks[j].text.as_str() {
+            "=" => {
+                if j >= 1 && toks[j - 1].kind == TokKind::Ident {
+                    let name = &toks[j - 1].text;
+                    let is_let = (j.saturating_sub(3)..j - 1)
+                        .any(|k| toks[k].text == "let");
+                    if is_let && name != "mut" {
+                        guards.retain(|g| g.name != *name);
+                        guards.push(Guard {
+                            name: name.clone(),
+                            depth,
+                            label: label.to_string(),
+                        });
+                    }
+                }
+                return;
+            }
+            ";" | "{" | "}" | "," => return,
+            _ => {}
+        }
+    }
+}
+
+impl LockGraph {
+    /// DFS cycle check; report the first cycle found with witness sites.
+    pub fn check(&self, findings: &mut Vec<Finding>) {
+        #[derive(Clone, Copy, PartialEq)]
+        enum Color {
+            White,
+            Grey,
+            Black,
+        }
+        let mut color: BTreeMap<&str, Color> = BTreeMap::new();
+        let mut path: Vec<&str> = Vec::new();
+
+        fn dfs<'a>(
+            u: &'a str,
+            edges: &'a BTreeMap<String, BTreeSet<String>>,
+            color: &mut BTreeMap<&'a str, Color>,
+            path: &mut Vec<&'a str>,
+        ) -> Option<Vec<String>> {
+            color.insert(u, Color::Grey);
+            path.push(u);
+            if let Some(vs) = edges.get(u) {
+                for v in vs {
+                    match color.get(v.as_str()).copied().unwrap_or(Color::White) {
+                        Color::Grey => {
+                            let start = path.iter().position(|p| *p == v).unwrap();
+                            let mut cyc: Vec<String> =
+                                path[start..].iter().map(|s| s.to_string()).collect();
+                            cyc.push(v.clone());
+                            return Some(cyc);
+                        }
+                        Color::White => {
+                            if let Some(c) = dfs(v, edges, color, path) {
+                                return Some(c);
+                            }
+                        }
+                        Color::Black => {}
+                    }
+                }
+            }
+            path.pop();
+            color.insert(u, Color::Black);
+            None
+        }
+
+        for u in self.edges.keys() {
+            if color.get(u.as_str()).copied().unwrap_or(Color::White) == Color::White {
+                if let Some(cyc) = dfs(u, &self.edges, &mut color, &mut path) {
+                    let witness: Vec<String> = cyc
+                        .windows(2)
+                        .filter_map(|w| {
+                            self.sites
+                                .get(&(w[0].clone(), w[1].clone()))
+                                .map(|(f, l)| format!("{f}:{l}"))
+                        })
+                        .collect();
+                    let (file, line) = self
+                        .sites
+                        .get(&(cyc[0].clone(), cyc[1].clone()))
+                        .cloned()
+                        .unwrap_or_else(|| ("<graph>".to_string(), 0));
+                    findings.push(Finding {
+                        file,
+                        line,
+                        rule: "lock-order",
+                        message: format!(
+                            "lock acquisition cycle {} (acquired at {})",
+                            cyc.join(" -> "),
+                            witness.join(", ")
+                        ),
+                    });
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Edges as `A -> B` strings (for --verbose / debugging).
+    pub fn edge_list(&self) -> Vec<String> {
+        self.edges
+            .iter()
+            .flat_map(|(a, bs)| bs.iter().map(move |b| format!("{a} -> {b}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::{lex, test_regions};
+
+    fn run(src: &str) -> (LockGraph, Vec<Finding>) {
+        let lx = lex(src);
+        let spans = test_regions(&lx.toks);
+        let mut graph = LockGraph::default();
+        let mut f = Vec::new();
+        scan("x/t.rs", &lx.toks, &spans, &mut graph, &mut f);
+        graph.check(&mut f);
+        (graph, f)
+    }
+
+    #[test]
+    fn abba_cycle_is_reported() {
+        let src = "impl Two {\n\
+            fn ab(&self) { let gx = self.x.lock().unwrap(); let _gy = self.y.lock().unwrap(); drop(gx); }\n\
+            fn ba(&self) { let gy = self.y.lock().unwrap(); let _gx = self.x.lock().unwrap(); drop(gy); }\n\
+        }";
+        let (_g, f) = run(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("Two::x -> Two::y -> Two::x")
+            || f[0].message.contains("Two::y -> Two::x -> Two::y"));
+    }
+
+    #[test]
+    fn consistent_order_and_scoped_guards_are_clean() {
+        let src = "impl Two {\n\
+            fn ab(&self) { let _gx = lock_clean(&self.x); let _gy = lock_clean(&self.y); }\n\
+            fn also_ab(&self) { let _gx = lock_clean(&self.x); let _gy = lock_clean(&self.y); }\n\
+            fn scoped(&self) { { let _gy = lock_clean(&self.y); } let _gx = lock_clean(&self.x); }\n\
+        }";
+        let (g, f) = run(src);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(g.edge_list(), ["Two::x -> Two::y"]);
+    }
+
+    #[test]
+    fn drop_releases_and_reacquire_is_self_deadlock() {
+        let src = "impl One {\n\
+            fn ok(&self) { let g = lock_clean(&self.m); drop(g); let _h = lock_clean(&self.m); }\n\
+            fn bad(&self) { let _g = lock_clean(&self.m); let _h = lock_clean(&self.m); }\n\
+        }";
+        let (_g, f) = run(src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("self-deadlock"));
+        assert_eq!(f[0].line, 3);
+    }
+}

@@ -1,0 +1,73 @@
+//! The five synergy-lint rules.  Each consumes the lexed token stream of
+//! one source file (plus the file's test-region spans) and appends
+//! [`Finding`]s; `lock_order` additionally accumulates a cross-file
+//! acquisition graph checked once at the end.
+
+pub mod bare_lock;
+pub mod dispatch;
+pub mod knobs;
+pub mod lock_order;
+pub mod spawn;
+
+use std::fmt;
+
+/// One diagnostic: `file:line: rule: message`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Scan the collected `//` comments for `// lint: allow(<what>): <why>`
+/// escapes with a non-empty justification; return the lines they sit on.
+pub fn allow_lines(comments: &[crate::lexer::LineComment], what: &str) -> Vec<u32> {
+    let needle = format!("allow({what})");
+    comments
+        .iter()
+        .filter(|c| {
+            let t = &c.text;
+            let Some(lint_at) = t.find("lint:") else {
+                return false;
+            };
+            let rest = &t[lint_at..];
+            let Some(open) = rest.find(&needle) else {
+                return false;
+            };
+            // Justification: non-whitespace after the `):`.
+            rest[open + needle.len()..]
+                .strip_prefix(':')
+                .is_some_and(|j| !j.trim().is_empty())
+        })
+        .map(|c| c.line)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn allow_escape_requires_a_justification() {
+        let lx = lex(
+            "// lint: allow(thread-spawn): real reason\n\
+             // lint: allow(thread-spawn):\n\
+             // lint: allow(thread-spawn)\n\
+             // allow(thread-spawn): missing lint: prefix\n",
+        );
+        assert_eq!(allow_lines(&lx.comments, "thread-spawn"), vec![1]);
+        assert!(allow_lines(&lx.comments, "bare-lock").is_empty());
+    }
+}

@@ -1,0 +1,128 @@
+//! Rule 1 — thread-spawn containment.
+//!
+//! All runtime threads must be born in the delegate/pool layer (or the
+//! serving front door): that is where panics are caught, reports are
+//! joined, and shutdown is sequenced.  A `thread::spawn` anywhere else is
+//! an unmanaged thread the teardown story does not know about.  The
+//! escape hatch is a justified `// lint: allow(thread-spawn): <why>`
+//! within the six lines above the spawn.
+
+use crate::lexer::{in_spans, LineComment, Tok, TokKind};
+use crate::rules::{allow_lines, Finding};
+
+/// Files allowed to spawn threads freely (relative to the src root).
+pub const ALLOWED: &[&str] = &[
+    "rt/pool.rs",
+    "rt/delegate.rs",
+    "accel/backend.rs",
+    "serve/server.rs",
+    "serve/shard_server.rs",
+];
+
+pub fn check(
+    rel: &str,
+    toks: &[Tok],
+    comments: &[LineComment],
+    spans: &[(u32, u32)],
+    findings: &mut Vec<Finding>,
+) {
+    if ALLOWED.contains(&rel) {
+        return;
+    }
+    let allows = allow_lines(comments, "thread-spawn");
+    for i in 1..toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident || t.text != "spawn" {
+            continue;
+        }
+        let prev = toks[i - 1].text.as_str();
+        if prev != "." && prev != ":" {
+            continue;
+        }
+        // The receiver chain (back to the statement start) must mention
+        // `thread` or `Builder` — `pool::spawn(...)` and friends are this
+        // crate's own managed entry points, not OS spawns.
+        let mut is_thread = false;
+        let mut j = i - 1;
+        let mut back = 0;
+        loop {
+            let tt = &toks[j];
+            if matches!(tt.text.as_str(), ";" | "{" | "}") || back >= 40 {
+                break;
+            }
+            if tt.kind == TokKind::Ident && (tt.text == "thread" || tt.text == "Builder") {
+                is_thread = true;
+                break;
+            }
+            if j == 0 {
+                break;
+            }
+            j -= 1;
+            back += 1;
+        }
+        if !is_thread || in_spans(t.line, spans) {
+            continue;
+        }
+        if allows.iter().any(|&al| al + 6 >= t.line && al <= t.line) {
+            continue;
+        }
+        findings.push(Finding {
+            file: rel.to_string(),
+            line: t.line,
+            rule: "thread-spawn",
+            message: "thread spawned outside the delegate/pool allowlist \
+                      (escape: `// lint: allow(thread-spawn): <why>`)"
+                .to_string(),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::{lex, test_regions};
+
+    fn run(rel: &str, src: &str) -> Vec<Finding> {
+        let lx = lex(src);
+        let spans = test_regions(&lx.toks);
+        let mut f = Vec::new();
+        check(rel, &lx.toks, &lx.comments, &spans, &mut f);
+        f
+    }
+
+    #[test]
+    fn flags_bare_and_builder_spawns() {
+        let src = "fn f() {\n  std::thread::spawn(|| {});\n  \
+                   std::thread::Builder::new().name(n).spawn(|| {}).unwrap();\n}";
+        let f = run("sim/clock.rs", src);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].line, 2);
+        assert_eq!(f[1].line, 3);
+    }
+
+    #[test]
+    fn allowlist_escape_and_tests_are_exempt() {
+        let allowed = run("rt/pool.rs", "fn f() { std::thread::spawn(|| {}); }");
+        assert!(allowed.is_empty());
+        let escaped = run(
+            "sim/clock.rs",
+            "fn f() {\n  // lint: allow(thread-spawn): managed elsewhere.\n  \
+             std::thread::spawn(|| {});\n}",
+        );
+        assert!(escaped.is_empty());
+        let test_code = run(
+            "sim/clock.rs",
+            "#[cfg(test)]\nmod tests {\n  fn t() { std::thread::spawn(|| {}); }\n}",
+        );
+        assert!(test_code.is_empty());
+    }
+
+    #[test]
+    fn own_spawn_helpers_do_not_trip() {
+        let f = run(
+            "rt/driver.rs",
+            "fn f() { delegate::spawn(cfg); pool.spawn_all(); }",
+        );
+        assert!(f.is_empty());
+    }
+}

@@ -1,0 +1,11 @@
+// Fixture: a minimal parser shape with one undocumented serving knob.
+pub fn apply(sec: Sec, k: &str) -> u32 {
+    match sec {
+        Sec::Serving => match k {
+            "max_batch" => 1,
+            "undocumented_knob" => 2,
+            other => 0,
+        },
+        Sec::None => 0,
+    }
+}

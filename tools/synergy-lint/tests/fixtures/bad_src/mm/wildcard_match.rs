@@ -1,0 +1,25 @@
+pub fn bad(c: JobClass) -> u32 {
+    match c {
+        JobClass::ConvTile => 0,
+        _ => 9,
+    }
+}
+pub fn bad_binding(c: JobClass) -> u32 {
+    match c {
+        JobClass::ConvTile => 0,
+        other => 9,
+    }
+}
+pub fn good(c: JobClass) -> u32 {
+    match c {
+        JobClass::ConvTile => 0,
+        JobClass::FcGemm => 1,
+        JobClass::Im2col | JobClass::FcGemmBatch => 2,
+    }
+}
+pub fn unrelated(n: u32) -> u32 {
+    match n {
+        0 => 1,
+        _ => 2,
+    }
+}

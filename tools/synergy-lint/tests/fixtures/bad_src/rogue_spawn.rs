@@ -1,0 +1,17 @@
+pub fn sneaky() {
+    std::thread::spawn(|| {});
+    let _h = std::thread::Builder::new()
+        .name("x".into())
+        .spawn(|| {})
+        .unwrap();
+    // lint: allow(thread-spawn): justified helper thread for the fixture.
+    std::thread::spawn(|| {});
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn in_tests_is_fine() {
+        std::thread::spawn(|| {}).join().unwrap();
+    }
+}

@@ -1,0 +1,14 @@
+pub struct Two {
+    x: Mutex<u32>,
+    y: Mutex<u32>,
+}
+impl Two {
+    pub fn ab(&self) {
+        let _gx = lock_clean(&self.x);
+        let _gy = lock_clean(&self.y);
+    }
+    pub fn ba(&self) {
+        let _gy = lock_clean(&self.y);
+        let _gx = lock_clean(&self.x);
+    }
+}

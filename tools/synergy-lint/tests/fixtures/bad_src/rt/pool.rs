@@ -1,0 +1,4 @@
+// Fixture: this path is on the spawn allowlist, so this is legal.
+pub fn managed() {
+    std::thread::spawn(|| {});
+}

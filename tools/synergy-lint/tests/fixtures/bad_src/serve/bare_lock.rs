@@ -1,0 +1,12 @@
+pub fn naked(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+pub fn naked_multiline(m: &Mutex<u32>) -> u32 {
+    *m
+        .lock()
+        .unwrap()
+}
+pub fn excused(m: &Mutex<u32>) -> u32 {
+    // lint: allow(bare-lock): fixture demonstrates a justified bare lock.
+    *m.lock().unwrap()
+}

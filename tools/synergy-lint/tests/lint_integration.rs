@@ -1,0 +1,98 @@
+//! Integration tests: drive the built `synergy-lint` binary against the
+//! bad-fixture tree (every rule must fire with its expected diagnostic)
+//! and against the real repository tree (which must be clean — fixing the
+//! tree to pass its own linter was part of landing the linter).
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn manifest_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn run_lint(src: &Path, readme: &Path) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_synergy-lint"))
+        .arg("--src")
+        .arg(src)
+        .arg("--readme")
+        .arg(readme)
+        .output()
+        .expect("run synergy-lint")
+}
+
+#[test]
+fn bad_fixtures_produce_every_expected_diagnostic() {
+    let fx = manifest_dir().join("tests/fixtures");
+    let out = run_lint(&fx.join("bad_src"), &fx.join("README.md"));
+    assert_eq!(out.status.code(), Some(1), "findings must exit 1");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+
+    let expected = [
+        // rule 1: both spawn shapes, outside the allowlist.
+        "rogue_spawn.rs:2: thread-spawn:",
+        "rogue_spawn.rs:5: thread-spawn:",
+        // rule 2: the ABBA cycle between Two::x and Two::y.
+        "lock_cycle.rs:", // file carries the witness site
+        // rule 3: single-line and split-across-lines bare locks.
+        "serve/bare_lock.rs:2: bare-lock:",
+        "serve/bare_lock.rs:6: bare-lock:",
+        // rule 4: `_` arm and lone-binding arm.
+        "mm/wildcard_match.rs:4: dispatch-wildcard:",
+        "mm/wildcard_match.rs:10: dispatch-wildcard:",
+        // rule 5: the knob missing from the fixture README.
+        "knob-doc: [serving] key `undocumented_knob`",
+    ];
+    for needle in expected {
+        assert!(
+            stdout.contains(needle),
+            "missing diagnostic {needle:?} in:\n{stdout}"
+        );
+    }
+    assert!(
+        stdout.contains("lock-order") && stdout.contains("Two::"),
+        "lock cycle not reported:\n{stdout}"
+    );
+
+    let absent = [
+        // escaped spawn (line 8) and escaped bare lock (line 11).
+        "rogue_spawn.rs:8:",
+        "bare_lock.rs:11:",
+        // spawn inside #[cfg(test)] (line 15).
+        "rogue_spawn.rs:15:",
+        // allowlisted file may spawn.
+        "pool.rs",
+        // exhaustive + unrelated matches are fine.
+        "wildcard_match.rs:16:",
+        "wildcard_match.rs:23:",
+        // documented knob is fine.
+        "`max_batch`",
+    ];
+    for needle in absent {
+        assert!(
+            !stdout.contains(needle),
+            "unexpected diagnostic {needle:?} in:\n{stdout}"
+        );
+    }
+}
+
+#[test]
+fn shipped_tree_is_clean() {
+    let repo = manifest_dir().join("../..");
+    let out = run_lint(&repo.join("rust/src"), &repo.join("README.md"));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "the shipped tree must pass its own linter:\n{stdout}\n{stderr}"
+    );
+}
+
+#[test]
+fn missing_src_dir_is_a_usage_error_not_a_pass() {
+    let fx = manifest_dir().join("tests/fixtures");
+    let out = run_lint(&fx.join("does_not_exist"), &fx.join("README.md"));
+    // No .rs files found is vacuously lintable, but the hw-config read
+    // must fail loudly rather than reporting a clean run.
+    assert_eq!(out.status.code(), Some(2), "expected a usage error");
+}
