@@ -16,11 +16,11 @@ use synergy::accel::{Accelerator, BigNeonGemm, NativeGemm};
 use synergy::cluster::JobQueue;
 use synergy::config::zoo;
 use synergy::mm::gemm::{gemm_blocked, gemm_naive};
-use synergy::mm::job::{jobs_for_gemm, pack_fc_columns, Job};
-use synergy::mm::operand::{copied_bytes, copy_events};
+use synergy::mm::job::{jobs_for_gemm, jobs_from_packs_q8, pack_fc_columns, Job};
+use synergy::mm::operand::{copied_bytes, copy_events, OperandView};
 use synergy::mm::tile::{job_mm_native, TileGrid};
 use synergy::nn::im2col::im2col;
-use synergy::nn::Network;
+use synergy::nn::{quantize, quantize_scale, Network};
 use synergy::pipeline::Mailbox;
 use synergy::rt::{self, RtOptions};
 use synergy::tensor::Tensor;
@@ -193,6 +193,71 @@ fn main() -> anyhow::Result<()> {
         format!(
             "{warm_wire} B / GEMM ({:.2}x fewer)",
             base_wire as f64 / warm_wire as f64
+        ),
+    ]);
+
+    // Int8 shard wire plane: the SAME conv2 GEMM quantized per-layer
+    // symmetric (one scale per operand pack) and shipped as i8 code
+    // planes — one byte per element on the wire, so the operand PUTs
+    // shrink ~4x against the f32 PUT rows above while the warm round
+    // stays descriptor-sized (Q8 refs carry the scale, +4 B per frame).
+    let a_scale = quantize_scale(a.data());
+    let b_scale = quantize_scale(bm.data());
+    let a_codes = quantize(&grid.pack_a_tiles(a.data()), a_scale);
+    let b_codes = quantize(&grid.pack_b_tiles(bm.data()), b_scale);
+    let mut id = 0u64;
+    let wire_jobs_q8 = jobs_from_packs_q8(
+        0,
+        0,
+        grid,
+        OperandView::from(a_codes),
+        OperandView::from(b_codes),
+        a_scale * b_scale,
+        &mut id,
+    );
+    let ship_rounds_q8 = |cache: bool, rounds: usize| -> u64 {
+        let (client, mut server) = duplex_pair();
+        let shard_thread = std::thread::spawn(move || {
+            serve_transport(&mut server, |job| Ok(job.execute_native())).unwrap()
+        });
+        let mut shard =
+            RemoteShard::over_duplex("remote:bench-q8", client).with_operand_cache(cache);
+        for _ in 0..rounds {
+            for job in &wire_jobs_q8 {
+                std::hint::black_box(shard.execute(job).unwrap());
+            }
+        }
+        let bytes = shard.wire_bytes();
+        drop(shard);
+        shard_thread.join().unwrap();
+        bytes
+    };
+    let base_wire_q8 = ship_rounds_q8(false, 1);
+    let cold_wire_q8 = ship_rounds_q8(true, 1);
+    let warm_wire_q8 = ship_rounds_q8(true, 2) - cold_wire_q8;
+    let put_q8 = cold_wire_q8 - warm_wire_q8;
+    let put_f32 = cold_wire - warm_wire;
+    table.row(vec![
+        String::from("shard wire q8: inline i8 frames / tile"),
+        String::from("-"),
+        format!("{base_wire_q8} B / GEMM"),
+    ]);
+    table.row(vec![
+        String::from("shard wire q8: cold (PUT i8 packs + refs)"),
+        String::from("-"),
+        format!("{cold_wire_q8} B / GEMM"),
+    ]);
+    table.row(vec![
+        String::from("shard wire q8: warm (refs + results)"),
+        String::from("-"),
+        format!("{warm_wire_q8} B / GEMM"),
+    ]);
+    table.row(vec![
+        String::from("shard wire q8: operand PUT bytes"),
+        String::from("-"),
+        format!(
+            "{put_q8} B vs {put_f32} B f32 ({:.2}x fewer)",
+            put_f32 as f64 / put_q8 as f64
         ),
     ]);
 
@@ -406,6 +471,49 @@ fn main() -> anyhow::Result<()> {
                         ]),
                     ),
                     ("bytes_ratio", num(base_wire as f64 / warm_wire as f64)),
+                ]),
+            ),
+            (
+                "shard_wire_q8",
+                obj(vec![
+                    (
+                        "grid",
+                        obj(vec![
+                            ("m", num(grid.m as f64)),
+                            ("n", num(grid.n as f64)),
+                            ("p", num(grid.p as f64)),
+                            ("ts", num(grid.ts as f64)),
+                            ("num_jobs", num(grid.num_jobs() as f64)),
+                        ]),
+                    ),
+                    (
+                        "baseline",
+                        obj(vec![
+                            ("path", s("inline i8 code planes in every tile frame")),
+                            ("wire_bytes", num(base_wire_q8 as f64)),
+                        ]),
+                    ),
+                    (
+                        "cold",
+                        obj(vec![
+                            ("path", s("PUT both i8 packs once + Q8 descriptor frames")),
+                            ("wire_bytes", num(cold_wire_q8 as f64)),
+                        ]),
+                    ),
+                    (
+                        "warm",
+                        obj(vec![
+                            ("path", s("Q8 descriptor-only frames + results")),
+                            ("wire_bytes", num(warm_wire_q8 as f64)),
+                            ("ref_frame_bytes", num(wire::Q8_REF_FRAME_BYTES as f64)),
+                        ]),
+                    ),
+                    ("operand_put_bytes", num(put_q8 as f64)),
+                    ("f32_operand_put_bytes", num(put_f32 as f64)),
+                    (
+                        "operand_bytes_ratio",
+                        num(put_f32 as f64 / put_q8 as f64),
+                    ),
                 ]),
             ),
             (

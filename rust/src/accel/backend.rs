@@ -18,7 +18,10 @@
 //! `[cluster]` sections of the hardware config: each cluster member's
 //! accelerator class resolves to a registry key
 //! (see `rt::pool`), so a future backend (GPU, remote shard) plugs in by
-//! registering a name — no driver rewrite.
+//! registering a name — no driver rewrite.  Registration goes through ONE
+//! surface — a [`BackendSpec`] built from the backend's name and builder,
+//! with capability mask, fixed overhead, per-class steal costs, and Q8
+//! (int8) capability layered on as builder methods.
 
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -45,8 +48,8 @@ pub trait Accelerator {
     ///
     /// The statically-known component of this estimate — the fixed
     /// per-job overhead in k-step equivalents — is ALSO registered as
-    /// [`BackendEntry::overhead_ksteps`] (see
-    /// [`BackendRegistry::register_with_cost`]), and that metadata IS
+    /// [`BackendEntry::overhead_ksteps`] (declared with
+    /// [`BackendSpec::overhead_ksteps`]), and that metadata IS
     /// consumed: the dispatcher adds it to a cluster's routing load so
     /// small jobs stay on zero-overhead local members, and the thief's
     /// ship gate refuses to move backlogs that drain faster than they
@@ -294,7 +297,12 @@ impl Accelerator for BigNeonGemm {
             JobClass::FcGemm | JobClass::FcGemmBatch | JobClass::ConvTile => {
                 job.ksteps() as f64 / self.threads.max(1) as f64
             }
-            JobClass::Im2col => job.ksteps() as f64,
+            // Q8 jobs run the single-core integer kernel (already ~half
+            // the k-steps of their f32 twins); im2col is data movement.
+            JobClass::Im2col
+            | JobClass::ConvTileQ8
+            | JobClass::FcGemmQ8
+            | JobClass::FcGemmBatchQ8 => job.ksteps() as f64,
         }
     }
 
@@ -333,8 +341,12 @@ impl Accelerator for BigNeonGemm {
                     chunk,
                 })
             }
-            // im2col is pure data movement: one core.
-            JobKind::Im2col { .. } => return Ok(job.execute_native()),
+            // im2col is pure data movement, and Q8 jobs run the integer
+            // kernel single-core (matching `cost` above): one core each.
+            JobKind::Im2col { .. }
+            | JobKind::ConvTileQ8 { .. }
+            | JobKind::FcGemmQ8 { .. }
+            | JobKind::FcGemmBatchQ8 { .. } => return Ok(job.execute_native()),
         };
         Ok(JobResult {
             desc: job.desc,
@@ -386,6 +398,89 @@ impl Accelerator for PjrtPe {
 /// entry builds one backend instance per delegate thread.
 pub type BackendBuilder = Arc<dyn Fn() -> Result<Box<dyn Accelerator>> + Send + Sync>;
 
+/// Everything a backend declares about itself at registration — THE one
+/// registration surface (the old `register`/`register_with_cost` split is
+/// gone).  Build with [`BackendSpec::new`] (name + per-delegate builder),
+/// then layer on metadata:
+///
+/// ```
+/// # use synergy::accel::{Accelerator, BackendRegistry, BackendSpec, NativeGemm};
+/// # use synergy::mm::{ClassMask, JobClass};
+/// let mut reg = BackendRegistry::new();
+/// reg.register(
+///     BackendSpec::new("my-dsp", || Ok(Box::new(NativeGemm) as Box<dyn Accelerator>))
+///         .caps(ClassMask::of(&[JobClass::ConvTile]))
+///         .quantized(true)      // also claim the int8 twin classes
+///         .overhead_ksteps(2.0) // fixed per-job shipping cost
+/// );
+/// ```
+///
+/// Defaults: all f32+Q8 classes ([`ClassMask::all`]), zero overhead, no
+/// per-class steal-cost override.
+pub struct BackendSpec {
+    name: String,
+    caps: ClassMask,
+    overhead_ksteps: f64,
+    class_cost: Option<[f64; JobClass::COUNT]>,
+    builder: BackendBuilder,
+}
+
+impl BackendSpec {
+    /// A spec for `name` with the given per-delegate builder and default
+    /// metadata (every class, zero overhead, no cost override).
+    pub fn new<F>(name: &str, builder: F) -> BackendSpec
+    where
+        F: Fn() -> Result<Box<dyn Accelerator>> + Send + Sync + 'static,
+    {
+        BackendSpec {
+            name: name.to_string(),
+            caps: ClassMask::all(),
+            overhead_ksteps: 0.0,
+            class_cost: None,
+            builder: Arc::new(builder),
+        }
+    }
+
+    /// Replace the capability mask (which [`JobClass`]es the backend's
+    /// delegates accept; the pool routes and the thief filters on it).
+    pub fn caps(mut self, caps: ClassMask) -> BackendSpec {
+        self.caps = caps;
+        self
+    }
+
+    /// Declare (or revoke) int8 capability: adds or strips the Q8 twin
+    /// classes ([`ClassMask::Q8`]) from the capability mask without
+    /// touching the f32 bits.  Apply AFTER [`BackendSpec::caps`].
+    pub fn quantized(mut self, quantized: bool) -> BackendSpec {
+        self.caps = if quantized {
+            self.caps.union(ClassMask::Q8)
+        } else {
+            ClassMask::Q8.classes().fold(self.caps, |m, c| m.without(c))
+        };
+        self
+    }
+
+    /// Fixed per-job overhead in k-step equivalents (a remote shard's
+    /// transport round trip).  Seeds the entry's live
+    /// [`crate::accel::timing::LinkCost`] cell; measured probes refine it
+    /// after the pool starts.
+    pub fn overhead_ksteps(mut self, ksteps: f64) -> BackendSpec {
+        self.overhead_ksteps = ksteps;
+        self
+    }
+
+    /// Per-class steal-cost weights (k-steps per unit of
+    /// [`Job::ksteps`]), indexed by [`JobClass::index`].  When any
+    /// registered member of a pool provides this, the pool's thief prices
+    /// victim backlogs with the element-wise MAX over the provided tables
+    /// (conservative: never under-prices a steal) instead of the derived
+    /// [`crate::sched::DEFAULT_CLASS_COST`].
+    pub fn class_cost(mut self, cost: [f64; JobClass::COUNT]) -> BackendSpec {
+        self.class_cost = Some(cost);
+        self
+    }
+}
+
 /// One registered backend: name, capability mask and live link-cost cell
 /// (the mask and the cost's static seed are known *before* any instance
 /// exists, so the pool can route and the thief can filter/gate), and the
@@ -400,6 +495,8 @@ pub struct BackendEntry {
     /// measured RTTs (and flips them dead on failure); the dispatcher's
     /// routing penalty and the thief's ship gate read them live.
     link: Arc<crate::accel::timing::LinkCost>,
+    /// Optional per-class steal-cost table ([`BackendSpec::class_cost`]).
+    class_cost: Option<[f64; JobClass::COUNT]>,
     builder: BackendBuilder,
 }
 
@@ -426,6 +523,11 @@ impl BackendEntry {
     pub fn builder(&self) -> BackendBuilder {
         Arc::clone(&self.builder)
     }
+
+    /// The registered per-class steal-cost table, if any.
+    pub fn class_cost(&self) -> Option<[f64; JobClass::COUNT]> {
+        self.class_cost
+    }
 }
 
 /// Name-keyed backend registry.  [`BackendRegistry::with_defaults`]
@@ -449,20 +551,23 @@ impl BackendRegistry {
     /// not depend on the feature flag).
     pub fn with_defaults(artifacts: PathBuf, big_threads: usize) -> BackendRegistry {
         let mut reg = BackendRegistry::new();
-        reg.register("neon", ClassMask::all(), || {
+        // NEON-class members claim everything — Q8 twins included (the
+        // integer kernels run on the same SIMD units).
+        reg.register(BackendSpec::new("neon", || {
             Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
-        });
+        }));
         let threads = big_threads.max(1);
-        reg.register("big-neon", ClassMask::all(), move || {
+        reg.register(BackendSpec::new("big-neon", move || {
             // Builder runs inside the delegate thread: one persistent
             // worker team per delegate, alive for the delegate's lifetime.
             Ok(Box::new(BigNeonGemm::new(threads)) as Box<dyn Accelerator>)
-        });
+        }));
         let art = artifacts;
+        // The PE bitstream computes f32 CONV tiles and nothing else: no
+        // FC, no im2col, and no Q8 — quantized nets route their Q8 work
+        // to capable members or fall back to the dequantized f32 path.
         reg.register(
-            "pjrt-pe",
-            ClassMask::of(&[JobClass::ConvTile]),
-            move || {
+            BackendSpec::new("pjrt-pe", move || {
                 #[cfg(feature = "pjrt")]
                 {
                     use anyhow::Context;
@@ -477,41 +582,22 @@ impl BackendRegistry {
                     let _ = &art;
                     Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
                 }
-            },
+            })
+            .caps(ClassMask::of(&[JobClass::ConvTile])),
         );
         reg
     }
 
-    /// Register (or replace) a backend under `name` with no fixed per-job
-    /// overhead (local backends).
-    pub fn register<F>(&mut self, name: &str, caps: ClassMask, builder: F)
-    where
-        F: Fn() -> Result<Box<dyn Accelerator>> + Send + Sync + 'static,
-    {
-        self.register_with_cost(name, caps, 0.0, builder);
-    }
-
-    /// Register (or replace) a backend under `name` with an explicit fixed
-    /// per-job overhead in k-step equivalents (see
-    /// [`BackendEntry::overhead_ksteps`]) — the registration a remote
-    /// shard uses so routing and stealing price its round trip in.  The
-    /// value seeds the entry's live [`crate::accel::timing::LinkCost`]
-    /// cell; measured probes refine it after the pool starts.
-    pub fn register_with_cost<F>(
-        &mut self,
-        name: &str,
-        caps: ClassMask,
-        overhead_ksteps: f64,
-        builder: F,
-    ) where
-        F: Fn() -> Result<Box<dyn Accelerator>> + Send + Sync + 'static,
-    {
-        self.entries.retain(|e| e.name != name);
+    /// Register (or replace — latest registration of a name wins) a
+    /// backend from its [`BackendSpec`].
+    pub fn register(&mut self, spec: BackendSpec) {
+        self.entries.retain(|e| e.name != spec.name);
         self.entries.push(BackendEntry {
-            name: name.to_string(),
-            caps,
-            link: crate::accel::timing::LinkCost::fixed(overhead_ksteps),
-            builder: Arc::new(builder),
+            name: spec.name,
+            caps: spec.caps,
+            link: crate::accel::timing::LinkCost::fixed(spec.overhead_ksteps),
+            class_cost: spec.class_cost,
+            builder: spec.builder,
         });
     }
 
@@ -531,6 +617,10 @@ mod tests {
     use crate::mm::TileGrid;
     use crate::util::rng::XorShift64Star;
 
+    fn native_spec(name: &str) -> BackendSpec {
+        BackendSpec::new(name, || Ok(Box::new(NativeGemm) as Box<dyn Accelerator>))
+    }
+
     #[test]
     fn default_registry_has_all_three_backends() {
         let reg = BackendRegistry::with_defaults(PathBuf::from("/nonexistent"), 4);
@@ -544,19 +634,60 @@ mod tests {
             .caps
             .supports(JobClass::FcGemm));
         assert!(reg.get("gpu").is_none());
+        // Quantized capability per backend: NEON-class members claim the
+        // Q8 twins, the PE (a f32 CONV bitstream) does not.
+        for name in ["neon", "big-neon"] {
+            let caps = reg.get(name).unwrap().caps;
+            assert_eq!(caps.intersect(ClassMask::Q8), ClassMask::Q8, "{name}");
+        }
+        assert!(reg
+            .get("pjrt-pe")
+            .unwrap()
+            .caps
+            .intersect(ClassMask::Q8)
+            .is_empty());
     }
 
     #[test]
     fn registration_latest_wins() {
         let mut reg = BackendRegistry::new();
-        reg.register("x", ClassMask::all(), || {
-            Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
-        });
-        reg.register("x", ClassMask::of(&[JobClass::Im2col]), || {
-            Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
-        });
+        reg.register(native_spec("x"));
+        reg.register(native_spec("x").caps(ClassMask::of(&[JobClass::Im2col])));
         assert_eq!(reg.names(), vec!["x"]);
         assert_eq!(reg.get("x").unwrap().caps, ClassMask::of(&[JobClass::Im2col]));
+    }
+
+    #[test]
+    fn spec_builder_layers_metadata_over_defaults() {
+        let mut reg = BackendRegistry::new();
+        // Defaults: every class (Q8 included), zero overhead, no table.
+        reg.register(native_spec("plain"));
+        let entry = reg.get("plain").unwrap();
+        assert_eq!(entry.caps, ClassMask::all());
+        assert_eq!(entry.overhead_ksteps(), 0.0);
+        assert!(entry.class_cost().is_none());
+
+        // `.quantized(false)` strips exactly the Q8 bits; `.quantized
+        // (true)` grafts them onto a restricted mask.
+        reg.register(native_spec("no-q8").quantized(false));
+        let caps = reg.get("no-q8").unwrap().caps;
+        assert!(caps.intersect(ClassMask::Q8).is_empty());
+        assert!(caps.supports(JobClass::ConvTile) && caps.supports(JobClass::Im2col));
+        reg.register(
+            native_spec("dsp")
+                .caps(ClassMask::of(&[JobClass::ConvTile]))
+                .quantized(true),
+        );
+        assert_eq!(
+            reg.get("dsp").unwrap().caps,
+            ClassMask::of(&[JobClass::ConvTile]).union(ClassMask::Q8)
+        );
+
+        // Cost table round-trips.
+        let mut table = [1.0f64; JobClass::COUNT];
+        table[JobClass::ConvTile.index()] = 9.0;
+        reg.register(native_spec("priced").class_cost(table));
+        assert_eq!(reg.get("priced").unwrap().class_cost(), Some(table));
     }
 
     #[test]
@@ -566,15 +697,29 @@ mod tests {
         for name in ["neon", "big-neon", "pjrt-pe"] {
             assert_eq!(reg.get(name).unwrap().overhead_ksteps(), 0.0, "{name}");
         }
-        reg.register_with_cost("shippy", ClassMask::all(), 12.5, || {
-            Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
-        });
+        reg.register(native_spec("shippy").overhead_ksteps(12.5));
         let entry = reg.get("shippy").unwrap();
         assert_eq!(entry.overhead_ksteps(), 12.5);
         // The metadata is a live cell: eviction poisons the read cost.
         assert!(entry.link().is_alive());
         entry.link().evict();
         assert_eq!(entry.overhead_ksteps(), f64::INFINITY);
+    }
+
+    /// Q8 jobs through the big-NEON team: single-core integer kernel,
+    /// bit-identical to native, and costed at plain k-steps (no thread
+    /// scaling — there is no fan-out to pay for).
+    #[test]
+    fn big_neon_runs_q8_jobs_natively() {
+        let mut big = BigNeonGemm::new(4);
+        let w: Vec<i8> = (0..24 * 48)
+            .map(|i| ((i * 37 + 11) % 255) as i8)
+            .collect();
+        let x: Vec<i8> = (0..48).map(|i| ((i * 13 + 5) % 255) as i8).collect();
+        let job = Job::fc_q8(0, 0, 0, 24, 48, w, x, 0.25, 32);
+        assert_eq!(big.cost(&job), job.ksteps() as f64);
+        let got = big.execute(&job).unwrap();
+        assert_eq!(got.data, job.execute_native().data);
     }
 
     #[test]

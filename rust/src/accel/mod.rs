@@ -17,7 +17,8 @@ pub mod remote;
 pub mod timing;
 
 pub use backend::{
-    Accelerator, BackendBuilder, BackendEntry, BackendRegistry, BigNeonGemm, NativeGemm,
+    Accelerator, BackendBuilder, BackendEntry, BackendRegistry, BackendSpec, BigNeonGemm,
+    NativeGemm,
 };
 pub use remote::{
     register_config_shards, register_tcp_shard, ChannelTransport, RemoteShard, ShardTransport,
@@ -29,10 +30,11 @@ use crate::config::{ClusterCfg, HwConfig};
 use crate::mm::job::{ClassMask, JobClass};
 
 /// Job classes an accelerator class executes *as hardware*: FPGA PEs only
-/// speak CONV tiles (that is what the HLS kernel computes), NEON-class
-/// software accelerators execute every class, and remote shards advertise
-/// only the classes whose work amortizes a transport round trip
-/// (CONV-tile + fused batched FC — [`remote::remote_class_mask`]).  The
+/// speak f32 CONV tiles (that is what the HLS kernel computes — no Q8),
+/// NEON-class software accelerators execute every class (the int8 twins
+/// run on the same SIMD units), and remote shards advertise only the
+/// classes whose work amortizes a transport round trip (CONV-tile +
+/// fused batched FC, f32 and Q8 — [`remote::remote_class_mask`]).  The
 /// threaded runtime derives member masks from the backend registry
 /// instead (compute-mode aware); this is the physical view the
 /// virtual-clock simulator uses.
@@ -328,6 +330,14 @@ mod tests {
             let mask = hw_class_mask(&a.class);
             assert!(mask.supports(JobClass::ConvTile), "{}", a.name);
             assert_eq!(!a.is_fpga(), mask.supports(JobClass::FcGemm), "{}", a.name);
+            // Q8 capability: the f32 PE bitstream has none; NEON-class
+            // members claim the whole int8 twin set.
+            assert_eq!(
+                !a.is_fpga(),
+                mask.supports(JobClass::ConvTileQ8),
+                "{}",
+                a.name
+            );
         }
         // The mixed cluster keeps full FC throughput via its NEONs; the
         // pure-PE cluster has none.
@@ -396,11 +406,16 @@ mod tests {
                 addr: "10.0.0.9:7000".into()
             }
         );
-        // The hardware view: CONV tiles + fused batched FC only.
+        // The hardware view: CONV tiles + fused batched FC only (their Q8
+        // twins included — i8 planes ship 4× fewer operand bytes, so the
+        // round-trip amortization only improves).
         let mask = hw_class_mask(&shard.class);
         assert!(mask.supports(JobClass::ConvTile));
         assert!(mask.supports(JobClass::FcGemmBatch));
+        assert!(mask.supports(JobClass::ConvTileQ8));
+        assert!(mask.supports(JobClass::FcGemmBatchQ8));
         assert!(!mask.supports(JobClass::FcGemm));
+        assert!(!mask.supports(JobClass::FcGemmQ8));
         assert!(!mask.supports(JobClass::Im2col));
         assert_eq!(clusters[2].throughput_for(JobClass::FcGemm), 0.0);
         assert!(clusters[2].throughput_for(JobClass::ConvTile) > 0.0);

@@ -26,9 +26,9 @@
 //! ## Capability and cost
 //!
 //! The remote mask is deliberately narrow ([`remote_class_mask`]:
-//! CONV-tile + fused batched FC): a round trip costs hundreds of
-//! microseconds, so only job classes that carry whole-tile or whole-batch
-//! work amortize it — single-column FC GEMMs and im2col stay local by
+//! CONV-tile + fused batched FC, in both f32 and int8 flavors): a round
+//! trip costs hundreds of microseconds, so only job classes that carry
+//! whole-tile or whole-batch work amortize it — single-column FC GEMMs and im2col stay local by
 //! *capability*, and the dispatcher/thief keep small backlogs local by
 //! *cost* ([`REMOTE_OVERHEAD_KSTEPS`] feeds the routing penalty and the
 //! thief's ship gate through the registry's `overhead_ksteps` metadata;
@@ -52,7 +52,10 @@
 //! retry — results stay bit-identical), and a pack-generation bump is an
 //! explicit `OPERAND_DROP` invalidation frame followed by exactly one
 //! re-ship of the new buffer (NEURAghe's weights-resident-on-the-
-//! accelerator discipline, arXiv:1712.00994).
+//! accelerator discipline, arXiv:1712.00994).  Quantized CONV tiles ride
+//! the same protocol with i8 code planes — one byte per element on the
+//! PUT (4× fewer operand wire bytes) and a fixed
+//! [`wire::Q8_REF_FRAME_BYTES`]-byte descriptor frame per tile.
 //!
 //! ## Failure
 //!
@@ -78,17 +81,27 @@ use std::sync::{mpsc, Arc};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::accel::backend::{Accelerator, BackendRegistry};
+use crate::accel::backend::{Accelerator, BackendRegistry, BackendSpec};
 use crate::config::HwConfig;
 use crate::mm::job::{ClassMask, Job, JobClass, JobDesc, JobKind, JobResult};
-use crate::mm::operand::{operand_key, OperandKey, OperandView};
+use crate::mm::operand::{operand_key, OperandKey, OperandView, Plane};
 use crate::mm::TileGrid;
 use crate::util::sync::{lock_clean, Mutex};
 
 /// Job classes a remote shard advertises: only the classes whose per-job
-/// work amortizes a transport round trip (see the module docs).
+/// work amortizes a transport round trip (see the module docs).  The int8
+/// twins of the two amortizing classes are included — a quantized CONV
+/// tile ships i8 code panels (4× fewer operand bytes than f32) and a
+/// fused q8 FC batch carries whole-batch work; the single-column
+/// [`JobClass::FcGemmQ8`] stays local by capability exactly like its f32
+/// sibling.
 pub fn remote_class_mask() -> ClassMask {
-    ClassMask::of(&[JobClass::ConvTile, JobClass::FcGemmBatch])
+    ClassMask::of(&[
+        JobClass::ConvTile,
+        JobClass::FcGemmBatch,
+        JobClass::ConvTileQ8,
+        JobClass::FcGemmBatchQ8,
+    ])
 }
 
 /// Fixed per-job shipping overhead in k-step equivalents — serialization
@@ -253,6 +266,21 @@ pub mod wire {
     const KIND_OPERAND_DROP: u8 = 5;
     const KIND_CONV_TILE_REF: u8 = 6;
     const KIND_PROBE: u8 = 7;
+    /// Int8 twins of the operand-cache and job frames.  PUT_I8 ships a
+    /// whole i8 code plane (one byte per element — 4× fewer operand wire
+    /// bytes than the f32 PUT for the same panel); the Q8 job tags carry
+    /// inline i8 runs plus the shared dequantization scale; Q8_REF is the
+    /// descriptor-only cached quantized CONV frame.  Results stay f32 in
+    /// every case — the shard dequantizes at the tile boundary, so reply
+    /// frames are unchanged.  The codec is total over [`JobKind`] (a
+    /// single-column [`JobKind::FcGemmQ8`] encodes fine); it is the
+    /// *capability mask* ([`remote_class_mask`]) that keeps classes whose
+    /// work cannot amortize a round trip off the wire.
+    const KIND_OPERAND_PUT_I8: u8 = 8;
+    const KIND_CONV_TILE_Q8: u8 = 9;
+    const KIND_FC_GEMM_Q8: u8 = 10;
+    const KIND_FC_GEMM_BATCH_Q8: u8 = 11;
+    const KIND_CONV_TILE_Q8_REF: u8 = 12;
 
     /// Result frames lead with a status byte so a shard can answer with a
     /// readable error instead of dropping the connection.
@@ -282,6 +310,15 @@ pub mod wire {
         for v in data {
             buf.extend_from_slice(&v.to_le_bytes());
         }
+    }
+
+    fn put_f32(buf: &mut Vec<u8>, v: f32) {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_i8s(buf: &mut Vec<u8>, data: &[i8]) {
+        put_u64(buf, data.len() as u64);
+        buf.extend(data.iter().map(|&v| v as u8));
     }
 
     fn put_desc(buf: &mut Vec<u8>, desc: &JobDesc) {
@@ -328,6 +365,28 @@ pub mod wire {
 
         fn usize(&mut self) -> Result<usize> {
             usize::try_from(self.u64()?).context("field exceeds usize")
+        }
+
+        fn f32(&mut self) -> Result<f32> {
+            let end = self.pos + 4;
+            let bytes = self
+                .buf
+                .get(self.pos..end)
+                .ok_or_else(|| anyhow!("truncated shard frame"))?;
+            self.pos = end;
+            Ok(f32::from_le_bytes(bytes.try_into().expect("4-byte slice")))
+        }
+
+        fn i8s(&mut self) -> Result<Vec<i8>> {
+            let n = self.usize()?;
+            ensure!(n <= MAX_ELEMS, "shard frame announces {n} i8s");
+            let end = self.pos + n;
+            let bytes = self
+                .buf
+                .get(self.pos..end)
+                .ok_or_else(|| anyhow!("truncated shard frame"))?;
+            self.pos = end;
+            Ok(bytes.iter().map(|&b| b as i8).collect())
         }
 
         fn f32s(&mut self) -> Result<Vec<f32>> {
@@ -417,6 +476,12 @@ pub mod wire {
     /// size the cache-protocol regression tests pin.
     pub const REF_FRAME_BYTES: usize = 1 + DESC_BYTES + 2 * (KEY_BYTES + 2 * 8);
 
+    /// Exact size of a descriptor-only **quantized** CONV-tile frame: the
+    /// f32 REF frame plus the 4-byte dequantization scale.  Like
+    /// [`REF_FRAME_BYTES`], this is the whole per-tile wire cost once the
+    /// layer's i8 code planes are cached shard-side.
+    pub const Q8_REF_FRAME_BYTES: usize = REF_FRAME_BYTES + 4;
+
     /// A `(key, offset, len)` window into a cached operand buffer — the
     /// wire form of an [`OperandView`] whose backing buffer was PUT.
     #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -440,6 +505,17 @@ pub mod wire {
         buf
     }
 
+    /// Ship one whole i8 code plane under its content-address: one byte
+    /// per element on the wire, 4× fewer operand bytes than the f32 PUT
+    /// of the same panel.  No reply.
+    pub fn encode_operand_put_i8(key: OperandKey, data: &[i8]) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(1 + KEY_BYTES + 8 + data.len());
+        buf.push(KIND_OPERAND_PUT_I8);
+        put_key(&mut buf, key);
+        put_i8s(&mut buf, data);
+        buf
+    }
+
     /// Invalidate one cached key (pack-generation bump).  No reply.
     pub fn encode_operand_drop(key: OperandKey) -> Vec<u8> {
         let mut buf = Vec::with_capacity(1 + KEY_BYTES);
@@ -460,6 +536,24 @@ pub mod wire {
             put_u64(&mut buf, r.len as u64);
         }
         debug_assert_eq!(buf.len(), REF_FRAME_BYTES);
+        buf
+    }
+
+    /// The descriptor-only quantized CONV-tile job frame: exactly
+    /// [`Q8_REF_FRAME_BYTES`] bytes — descriptor, shared dequantization
+    /// scale, and two `(key, offset, len)` references into cached i8
+    /// planes.
+    pub fn encode_conv_tile_q8_ref(desc: &JobDesc, scale: f32, a: KeyRef, b: KeyRef) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(Q8_REF_FRAME_BYTES);
+        buf.push(KIND_CONV_TILE_Q8_REF);
+        put_desc(&mut buf, desc);
+        put_f32(&mut buf, scale);
+        for r in [a, b] {
+            put_key(&mut buf, r.key);
+            put_u64(&mut buf, r.off as u64);
+            put_u64(&mut buf, r.len as u64);
+        }
+        debug_assert_eq!(buf.len(), Q8_REF_FRAME_BYTES);
         buf
     }
 
@@ -503,15 +597,23 @@ pub mod wire {
     pub enum ShardFrame {
         Job(Job),
         OperandPut { key: OperandKey, data: Vec<f32> },
+        OperandPutI8 { key: OperandKey, data: Vec<i8> },
         OperandDrop { key: OperandKey },
         ConvTileRef { desc: JobDesc, a: KeyRef, b: KeyRef },
+        ConvTileQ8Ref { desc: JobDesc, scale: f32, a: KeyRef, b: KeyRef },
         Probe { seq: u64 },
+    }
+
+    /// True for the tags [`decode_job`] owns: the four f32 job kinds plus
+    /// the three inline int8 job kinds.
+    fn is_job_tag(tag: u8) -> bool {
+        tag <= KIND_FC_GEMM_BATCH || (KIND_CONV_TILE_Q8..=KIND_FC_GEMM_BATCH_Q8).contains(&tag)
     }
 
     /// Decode one client→shard frame of any kind.
     pub fn decode_shard_frame(frame: &[u8]) -> Result<ShardFrame> {
         match frame.first() {
-            Some(&tag) if tag <= KIND_FC_GEMM_BATCH => Ok(ShardFrame::Job(decode_job(frame)?)),
+            Some(&tag) if is_job_tag(tag) => Ok(ShardFrame::Job(decode_job(frame)?)),
             Some(&KIND_OPERAND_PUT) => {
                 let mut rd = Rd::new(frame);
                 rd.u8()?;
@@ -519,6 +621,14 @@ pub mod wire {
                 let data = rd.f32s()?;
                 rd.done()?;
                 Ok(ShardFrame::OperandPut { key, data })
+            }
+            Some(&KIND_OPERAND_PUT_I8) => {
+                let mut rd = Rd::new(frame);
+                rd.u8()?;
+                let key = (rd.u64()?, rd.u64()?);
+                let data = rd.i8s()?;
+                rd.done()?;
+                Ok(ShardFrame::OperandPutI8 { key, data })
             }
             Some(&KIND_OPERAND_DROP) => {
                 let mut rd = Rd::new(frame);
@@ -549,6 +659,38 @@ pub mod wire {
                 );
                 Ok(ShardFrame::ConvTileRef {
                     desc,
+                    a: refs[0],
+                    b: refs[1],
+                })
+            }
+            Some(&KIND_CONV_TILE_Q8_REF) => {
+                let mut rd = Rd::new(frame);
+                rd.u8()?;
+                let desc = rd.desc()?;
+                let scale = rd.f32()?;
+                ensure!(
+                    scale.is_finite(),
+                    "non-finite dequantization scale in shard frame"
+                );
+                let mut refs = [KeyRef {
+                    key: (0, 0),
+                    off: 0,
+                    len: 0,
+                }; 2];
+                for r in refs.iter_mut() {
+                    r.key = (rd.u64()?, rd.u64()?);
+                    r.off = rd.usize()?;
+                    r.len = rd.usize()?;
+                    ensure!(r.len <= MAX_ELEMS, "oversized operand reference");
+                }
+                rd.done()?;
+                ensure!(
+                    desc.t1 < desc.grid.rows() && desc.t2 < desc.grid.cols(),
+                    "tile coordinates outside the grid in shard frame"
+                );
+                Ok(ShardFrame::ConvTileQ8Ref {
+                    desc,
+                    scale,
                     a: refs[0],
                     b: refs[1],
                 })
@@ -633,6 +775,12 @@ pub mod wire {
                 16 + (a.len() + b.len()) * 4
             }
             JobKind::Im2col { input, .. } => 8 + input.len() * 4 + 6 * 8,
+            JobKind::ConvTileQ8 {
+                a_tiles, b_tiles, ..
+            } => 4 + 16 + a_tiles.len() + b_tiles.len(),
+            JobKind::FcGemmQ8 { a, b, .. } | JobKind::FcGemmBatchQ8 { a, b, .. } => {
+                4 + 16 + a.len() + b.len()
+            }
         };
         let mut buf = Vec::with_capacity(1 + DESC_BYTES + payload);
         match &job.kind {
@@ -670,6 +818,31 @@ pub mod wire {
                 put_u64(&mut buf, *size as u64);
                 put_u64(&mut buf, *stride as u64);
                 put_u64(&mut buf, *pad as u64);
+            }
+            JobKind::ConvTileQ8 {
+                a_tiles,
+                b_tiles,
+                scale,
+            } => {
+                buf.push(KIND_CONV_TILE_Q8);
+                put_desc(&mut buf, &job.desc);
+                put_f32(&mut buf, *scale);
+                put_i8s(&mut buf, a_tiles);
+                put_i8s(&mut buf, b_tiles);
+            }
+            JobKind::FcGemmQ8 { a, b, scale } => {
+                buf.push(KIND_FC_GEMM_Q8);
+                put_desc(&mut buf, &job.desc);
+                put_f32(&mut buf, *scale);
+                put_i8s(&mut buf, a);
+                put_i8s(&mut buf, b);
+            }
+            JobKind::FcGemmBatchQ8 { a, b, scale } => {
+                buf.push(KIND_FC_GEMM_BATCH_Q8);
+                put_desc(&mut buf, &job.desc);
+                put_f32(&mut buf, *scale);
+                put_i8s(&mut buf, a);
+                put_i8s(&mut buf, b);
             }
         }
         buf
@@ -746,6 +919,51 @@ pub mod wire {
                     pad,
                 }
             }
+            KIND_CONV_TILE_Q8 => {
+                let scale = rd.f32()?;
+                ensure!(
+                    scale.is_finite(),
+                    "non-finite dequantization scale in shard frame"
+                );
+                let a = rd.i8s()?;
+                let b = rd.i8s()?;
+                let panel = desc.k_tiles() * g.ts * g.ts;
+                ensure!(a.len() == panel, "A fetch-set size mismatch in shard frame");
+                ensure!(b.len() == panel, "B fetch-set size mismatch in shard frame");
+                ensure!(
+                    desc.t1 < g.rows() && desc.t2 < g.cols(),
+                    "tile coordinates outside the grid in shard frame"
+                );
+                JobKind::ConvTileQ8 {
+                    a_tiles: a.into(),
+                    b_tiles: b.into(),
+                    scale,
+                }
+            }
+            KIND_FC_GEMM_Q8 | KIND_FC_GEMM_BATCH_Q8 => {
+                let scale = rd.f32()?;
+                ensure!(
+                    scale.is_finite(),
+                    "non-finite dequantization scale in shard frame"
+                );
+                let a = rd.i8s()?;
+                let b = rd.i8s()?;
+                ensure!(a.len() == g.m * g.n, "A operand size mismatch in shard frame");
+                ensure!(b.len() == g.n * g.p, "B operand size mismatch in shard frame");
+                if tag == KIND_FC_GEMM_Q8 {
+                    JobKind::FcGemmQ8 {
+                        a: a.into(),
+                        b: b.into(),
+                        scale,
+                    }
+                } else {
+                    JobKind::FcGemmBatchQ8 {
+                        a: a.into(),
+                        b: b.into(),
+                        scale,
+                    }
+                }
+            }
             other => bail!("unknown shard job kind tag {other}"),
         };
         rd.done()?;
@@ -803,7 +1021,9 @@ pub mod wire {
 /// connection per delegate, and all of them reference the same prepacks),
 /// so a buffer PUT over one connection serves REFs from all of them.
 ///
-/// Capacity is in f32 elements.  `put` always stores the new buffer,
+/// Capacity is in f32-equivalent elements (an i8 code plane accounts its
+/// bytes at a quarter element each — see [`plane_elems`]).  `put` always
+/// stores the new buffer,
 /// evicting least-recently-used peers down to capacity — but never below
 /// the **two** most-recent entries, so the fetch-set *pair* one CONV tile
 /// references can always coexist and a miss→re-PUT→retry cycle converges
@@ -816,12 +1036,20 @@ pub struct ShardCache {
 
 #[derive(Default)]
 struct CacheInner {
-    entries: HashMap<OperandKey, (Arc<Vec<f32>>, u64)>,
+    entries: HashMap<OperandKey, (Plane, u64)>,
     elems: usize,
     tick: u64,
     hits: u64,
     misses: u64,
     evictions: u64,
+}
+
+/// Capacity accounting in f32-equivalent elements: an f32 buffer counts
+/// its length, an i8 code plane counts a quarter of it (rounded up) — the
+/// cache bounds *bytes*, and the knob stays in the f32 units every
+/// existing configuration uses.
+fn plane_elems(plane: &Plane) -> usize {
+    plane.bytes().div_ceil(4)
 }
 
 /// Point-in-time cache counters (diagnostics + the fleet example's
@@ -850,14 +1078,25 @@ impl ShardCache {
         ShardCache::with_capacity_elems(mb.max(1) * (1 << 20) / 4)
     }
 
-    /// Insert (or refresh) `key`; evicts LRU peers until the rest fits.
+    /// Insert (or refresh) an f32 buffer under `key`; evicts LRU peers
+    /// until the rest fits.
     pub fn put(&self, key: OperandKey, data: Vec<f32>) {
+        self.put_plane(key, Plane::F32(Arc::new(data)));
+    }
+
+    /// Insert (or refresh) an i8 code plane under `key` — the quantized
+    /// twin of [`ShardCache::put`], sharing the same budget and LRU order.
+    pub fn put_i8(&self, key: OperandKey, data: Vec<i8>) {
+        self.put_plane(key, Plane::I8(Arc::new(data)));
+    }
+
+    fn put_plane(&self, key: OperandKey, plane: Plane) {
         let mut inner = lock_clean(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
-        let added = data.len();
-        if let Some((old, _)) = inner.entries.insert(key, (Arc::new(data), tick)) {
-            inner.elems -= old.len();
+        let added = plane_elems(&plane);
+        if let Some((old, _)) = inner.entries.insert(key, (plane, tick)) {
+            inner.elems -= plane_elems(&old);
         }
         inner.elems += added;
         while inner.elems > self.capacity_elems && inner.entries.len() > 2 {
@@ -871,7 +1110,7 @@ impl ShardCache {
             match victim {
                 Some(v) => {
                     if let Some((buf, _)) = inner.entries.remove(&v) {
-                        inner.elems -= buf.len();
+                        inner.elems -= plane_elems(&buf);
                         inner.evictions += 1;
                     }
                 }
@@ -880,18 +1119,26 @@ impl ShardCache {
         }
     }
 
-    /// Look a key up, bumping its recency.  Counts a hit or a miss.
-    pub fn get(&self, key: OperandKey) -> Option<Arc<Vec<f32>>> {
+    /// Dtype-filtered lookup, bumping recency on a hit.  An entry of the
+    /// wrong dtype counts as a miss — the server answers `CACHE_MISS` and
+    /// the client re-PUTs, exactly like an eviction (keys are minted per
+    /// buffer, so this is defensive: it cannot happen in-protocol).
+    fn lookup<R>(&self, key: OperandKey, pick: impl Fn(&Plane) -> Option<R>) -> Option<R> {
         let mut inner = lock_clean(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         match inner.entries.get_mut(&key) {
-            Some((buf, t)) => {
-                *t = tick;
-                let buf = Arc::clone(buf);
-                inner.hits += 1;
-                Some(buf)
-            }
+            Some((plane, t)) => match pick(plane) {
+                Some(r) => {
+                    *t = tick;
+                    inner.hits += 1;
+                    Some(r)
+                }
+                None => {
+                    inner.misses += 1;
+                    None
+                }
+            },
             None => {
                 inner.misses += 1;
                 None
@@ -899,11 +1146,21 @@ impl ShardCache {
         }
     }
 
+    /// Look an f32 key up, bumping its recency.  Counts a hit or a miss.
+    pub fn get(&self, key: OperandKey) -> Option<Arc<Vec<f32>>> {
+        self.lookup(key, |p| p.as_f32().cloned())
+    }
+
+    /// Look an i8 key up, bumping its recency.  Counts a hit or a miss.
+    pub fn get_i8(&self, key: OperandKey) -> Option<Arc<Vec<i8>>> {
+        self.lookup(key, |p| p.as_i8().cloned())
+    }
+
     /// Drop a key (the client's explicit invalidation frame).
     pub fn remove(&self, key: OperandKey) {
         let mut inner = lock_clean(&self.inner);
         if let Some((buf, _)) = inner.entries.remove(&key) {
-            inner.elems -= buf.len();
+            inner.elems -= plane_elems(&buf);
         }
     }
 
@@ -1069,6 +1326,36 @@ impl RemoteShard {
         })
     }
 
+    /// [`RemoteShard::ensure_shipped`] for i8 code planes: the same
+    /// slot-tracking and pack-generation-bump protocol, one byte per
+    /// element on the wire.  Q8 slots use their own role ids so a layer
+    /// running mixed-precision frames never aliases its f32 bindings.
+    fn ensure_shipped_i8(
+        &mut self,
+        layer_id: usize,
+        role: u8,
+        view: &OperandView<i8>,
+    ) -> Result<wire::KeyRef> {
+        let key = operand_key(view.buffer());
+        if let Some(&old) = self.by_slot.get(&(layer_id, role)) {
+            if old != key && self.shipped.remove(&old) {
+                self.send_counted(&wire::encode_operand_drop(old))?;
+                self.cache_stats.drops += 1;
+            }
+        }
+        self.by_slot.insert((layer_id, role), key);
+        if !self.shipped.contains(&key) {
+            self.send_counted(&wire::encode_operand_put_i8(key, view.buffer()))?;
+            self.cache_stats.puts += 1;
+            self.shipped.insert(key);
+        }
+        Ok(wire::KeyRef {
+            key,
+            off: view.offset(),
+            len: view.len(),
+        })
+    }
+
     /// The cached CONV-tile path: PUT-on-first-use, then a descriptor-only
     /// REF frame per tile; a CACHE_MISS reply re-PUTs the evicted keys and
     /// retries, so results are bit-identical to the uncached path.
@@ -1137,6 +1424,76 @@ impl RemoteShard {
             job.desc.job_id
         )
     }
+
+    /// The cached **quantized** CONV-tile path: i8 code planes are PUT
+    /// once (4× fewer operand bytes than their f32 twins), then every
+    /// tile ships a fixed [`wire::Q8_REF_FRAME_BYTES`] descriptor frame.
+    /// Results come back f32 — the shard dequantizes at the tile
+    /// boundary — and the miss→re-PUT→retry recovery matches the f32
+    /// path's bit-for-bit.
+    fn execute_conv_q8_cached(
+        &mut self,
+        job: &Job,
+        a_view: &OperandView<i8>,
+        b_view: &OperandView<i8>,
+        scale: f32,
+    ) -> Result<JobResult> {
+        let layer = job.desc.layer_id;
+        let a = self.ensure_shipped_i8(layer, 2, a_view)?;
+        let b = self.ensure_shipped_i8(layer, 3, b_view)?;
+        for _ in 0..3 {
+            self.send_counted(&wire::encode_conv_tile_q8_ref(&job.desc, scale, a, b))?;
+            self.cache_stats.refs += 1;
+            let frame = self.recv_counted()?;
+            match wire::decode_reply(&frame)? {
+                wire::ShardReply::Result(result) => {
+                    ensure!(
+                        result.desc.job_id == job.desc.job_id,
+                        "{} answered job {} while executing job {}",
+                        self.id,
+                        result.desc.job_id,
+                        job.desc.job_id
+                    );
+                    return Ok(JobResult {
+                        desc: job.desc,
+                        data: result.data,
+                    });
+                }
+                wire::ShardReply::CacheMiss { desc, missing } => {
+                    ensure!(
+                        desc.job_id == job.desc.job_id,
+                        "{} reported a cache miss for job {} while executing job {}",
+                        self.id,
+                        desc.job_id,
+                        job.desc.job_id
+                    );
+                    self.cache_stats.misses += 1;
+                    for key in missing {
+                        self.shipped.remove(&key);
+                        let view = if key == a.key {
+                            a_view
+                        } else if key == b.key {
+                            b_view
+                        } else {
+                            bail!("{} reported a miss for a key job {} never referenced",
+                                self.id, job.desc.job_id)
+                        };
+                        self.send_counted(&wire::encode_operand_put_i8(key, view.buffer()))?;
+                        self.cache_stats.puts += 1;
+                        self.shipped.insert(key);
+                    }
+                }
+                wire::ShardReply::ProbeAck { .. } => {
+                    bail!("{} answered job {} with a probe ack", self.id, job.desc.job_id)
+                }
+            }
+        }
+        bail!(
+            "{} kept missing job {}'s operands after re-shipping them",
+            self.id,
+            job.desc.job_id
+        )
+    }
 }
 
 impl Accelerator for RemoteShard {
@@ -1167,6 +1524,16 @@ impl Accelerator for RemoteShard {
             if let JobKind::ConvTile { a_tiles, b_tiles } = &job.kind {
                 return self
                     .execute_conv_cached(job, a_tiles, b_tiles)
+                    .with_context(|| format!("shipping job {} to {}", job.desc.job_id, self.id));
+            }
+            if let JobKind::ConvTileQ8 {
+                a_tiles,
+                b_tiles,
+                scale,
+            } = &job.kind
+            {
+                return self
+                    .execute_conv_q8_cached(job, a_tiles, b_tiles, *scale)
                     .with_context(|| format!("shipping job {} to {}", job.desc.job_id, self.id));
             }
         }
@@ -1211,15 +1578,19 @@ pub fn register_tcp_shard(registry: &mut BackendRegistry, addr: &str) {
     let name = shard_backend_name(addr);
     let id = name.clone();
     let target = addr.to_string();
-    registry.register_with_cost(&name, remote_class_mask(), REMOTE_OVERHEAD_KSTEPS, move || {
-        let transport = TcpTransport::connect(&target)?;
-        Ok(Box::new(RemoteShard::new(
-            id.clone(),
-            remote_class_mask(),
-            REMOTE_OVERHEAD_KSTEPS,
-            Box::new(transport),
-        )) as Box<dyn Accelerator>)
-    });
+    registry.register(
+        BackendSpec::new(&name, move || {
+            let transport = TcpTransport::connect(&target)?;
+            Ok(Box::new(RemoteShard::new(
+                id.clone(),
+                remote_class_mask(),
+                REMOTE_OVERHEAD_KSTEPS,
+                Box::new(transport),
+            )) as Box<dyn Accelerator>)
+        })
+        .caps(remote_class_mask())
+        .overhead_ksteps(REMOTE_OVERHEAD_KSTEPS),
+    );
 }
 
 /// Register a TCP shard backend for every `[cluster] remote = "host:port"`
@@ -1280,6 +1651,7 @@ pub fn serve_shard_transport(
         };
         match wire::decode_shard_frame(&frame)? {
             wire::ShardFrame::OperandPut { key, data } => cache.put(key, data),
+            wire::ShardFrame::OperandPutI8 { key, data } => cache.put_i8(key, data),
             wire::ShardFrame::OperandDrop { key } => cache.remove(key),
             wire::ShardFrame::Probe { seq } => {
                 if transport
@@ -1332,6 +1704,52 @@ pub fn serve_shard_transport(
                     return Ok(served);
                 }
             }
+            wire::ShardFrame::ConvTileQ8Ref { desc, scale, a, b } => {
+                let (a_buf, b_buf) = (cache.get_i8(a.key), cache.get_i8(b.key));
+                let missing: Vec<OperandKey> = [(a, &a_buf), (b, &b_buf)]
+                    .iter()
+                    .filter(|(_, buf)| buf.is_none())
+                    .map(|(r, _)| r.key)
+                    .collect();
+                if !missing.is_empty() {
+                    if transport
+                        .send(&wire::encode_cache_miss(&desc, &missing))
+                        .is_err()
+                    {
+                        return Ok(served);
+                    }
+                    continue;
+                }
+                // Same geometry re-validation as the f32 REF: a bad
+                // reference is a protocol error, never a kernel panic.
+                let panel = desc.k_tiles() * desc.grid.ts * desc.grid.ts;
+                let mut views = Vec::with_capacity(2);
+                for (r, buf) in [(a, a_buf.unwrap()), (b, b_buf.unwrap())] {
+                    ensure!(
+                        r.len == panel,
+                        "fetch-set reference size mismatch in shard frame"
+                    );
+                    ensure!(
+                        r.off.checked_add(r.len).is_some_and(|end| end <= buf.len()),
+                        "operand reference outside its cached buffer"
+                    );
+                    views.push(OperandView::new(buf, r.off, r.len));
+                }
+                let b_tiles = views.pop().expect("two views");
+                let a_tiles = views.pop().expect("two views");
+                let job = Job {
+                    desc,
+                    kind: JobKind::ConvTileQ8 {
+                        a_tiles,
+                        b_tiles,
+                        scale,
+                    },
+                    placement: None,
+                };
+                if !run(&job, transport, &mut served)? {
+                    return Ok(served);
+                }
+            }
             wire::ShardFrame::Job(job) => {
                 if !run(&job, transport, &mut served)? {
                     return Ok(served);
@@ -1376,7 +1794,7 @@ pub fn probe_shard(transport: &mut dyn ShardTransport, seq: u64) -> Result<(f64,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::mm::job::jobs_for_gemm;
+    use crate::mm::job::{jobs_for_gemm, jobs_from_packs_q8};
     use crate::util::rng::XorShift64Star;
     use std::sync::Arc;
 
@@ -1400,6 +1818,60 @@ mod tests {
         jobs
     }
 
+    fn codes(seed: u64, n: usize) -> Vec<i8> {
+        XorShift64Star::new(seed)
+            .fill_f32(n, 1.0)
+            .iter()
+            .map(|&v| (v * 127.0).round().clamp(-127.0, 127.0) as i8)
+            .collect()
+    }
+
+    /// One job per quantized class — including the single-column FC the
+    /// capability mask keeps local, because the codec is total over
+    /// [`JobKind`] even where routing never ships a class.
+    fn sample_q8_jobs() -> Vec<Job> {
+        let mut jobs = Vec::new();
+        let grid = TileGrid::new(40, 50, 60, 32);
+        let panel = grid.panel_elems();
+        let a = codes(31, grid.rows() * panel);
+        let b = codes(32, grid.cols() * panel);
+        let mut id = 0;
+        jobs.extend(jobs_from_packs_q8(
+            3,
+            7,
+            grid,
+            a.into(),
+            b.into(),
+            0.02,
+            &mut id,
+        ));
+        jobs.push(Job::fc_q8(
+            id,
+            1,
+            2,
+            16,
+            24,
+            codes(33, 16 * 24),
+            codes(34, 24),
+            0.05,
+            32,
+        ));
+        id += 1;
+        jobs.push(Job::fc_batch_q8(
+            id,
+            1,
+            2,
+            16,
+            24,
+            3,
+            codes(35, 16 * 24),
+            codes(36, 24 * 3),
+            0.05,
+            32,
+        ));
+        jobs
+    }
+
     #[test]
     fn wire_round_trips_every_job_class_bitwise() {
         for job in sample_jobs() {
@@ -1415,6 +1887,35 @@ mod tests {
             let result = wire::decode_result(&wire::encode_result(&local)).unwrap();
             assert_eq!(result.desc, local.desc);
             assert_eq!(result.data, local.data);
+        }
+    }
+
+    #[test]
+    fn wire_round_trips_q8_jobs_bitwise() {
+        for job in sample_q8_jobs() {
+            let decoded = wire::decode_job(&wire::encode_job(&job)).unwrap();
+            assert_eq!(decoded.desc, job.desc);
+            assert_eq!(decoded.class(), job.class());
+            let local = job.execute_native();
+            let shipped = decoded.execute_native();
+            assert_eq!(local.data, shipped.data, "{:?}", job.class());
+            let result = wire::decode_result(&wire::encode_result(&local)).unwrap();
+            assert_eq!(result.data, local.data);
+        }
+    }
+
+    #[test]
+    fn q8_conv_frame_ships_one_byte_per_code() {
+        // An inline quantized CONV tile carries the same panel *geometry*
+        // as its f32 twin but one byte per element plus the 4-byte scale:
+        // tag + descriptor + scale + two length-prefixed i8 runs.
+        for job in sample_q8_jobs()
+            .into_iter()
+            .filter(|j| j.class() == JobClass::ConvTileQ8)
+        {
+            let panel = job.desc.k_tiles() * job.desc.grid.ts * job.desc.grid.ts;
+            let want = 1 + wire::DESC_BYTES + 4 + 2 * (8 + panel);
+            assert_eq!(wire::encode_job(&job).len(), want);
         }
     }
 
@@ -1613,6 +2114,50 @@ mmus = 1
     }
 
     #[test]
+    fn q8_ref_frames_are_fixed_size_and_round_trip() {
+        let desc = JobDesc {
+            job_id: 42,
+            layer_id: 3,
+            frame_id: 7,
+            t1: 1,
+            t2: 1,
+            grid: TileGrid::new(40, 50, 60, 32),
+        };
+        let a = wire::KeyRef {
+            key: (11, 22),
+            off: 2048,
+            len: 2048,
+        };
+        let b = wire::KeyRef {
+            key: (11, 23),
+            off: 0,
+            len: 2048,
+        };
+        let frame = wire::encode_conv_tile_q8_ref(&desc, 0.125, a, b);
+        // A cached quantized CONV tile costs a fixed 141 bytes on the
+        // wire — the f32 REF plus the 4-byte dequantization scale.
+        assert_eq!(frame.len(), wire::Q8_REF_FRAME_BYTES);
+        assert_eq!(wire::Q8_REF_FRAME_BYTES, 141);
+        match wire::decode_shard_frame(&frame).unwrap() {
+            wire::ShardFrame::ConvTileQ8Ref {
+                desc: d,
+                scale,
+                a: da,
+                b: db,
+            } => {
+                assert_eq!(d, desc);
+                assert_eq!(scale, 0.125);
+                assert_eq!(da, a);
+                assert_eq!(db, b);
+            }
+            _ => panic!("Q8 REF frame decoded as a different kind"),
+        }
+        for cut in 0..frame.len() {
+            assert!(wire::decode_shard_frame(&frame[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
     fn shard_cache_lru_evicts_but_keeps_a_working_pair() {
         let cache = ShardCache::with_capacity_elems(100);
         cache.put((1, 1), vec![1.0; 60]);
@@ -1666,6 +2211,128 @@ mmus = 1
         assert_eq!(shard.wire_bytes(), want as u64);
         drop(shard);
         assert_eq!(shard_thread.join().unwrap(), 4);
+    }
+
+    #[test]
+    fn cached_q8_conv_ships_i8_planes_once_with_exact_wire_bytes() {
+        let (client, mut server) = duplex_pair();
+        let shard_thread = std::thread::spawn(move || {
+            serve_transport(&mut server, |job| Ok(job.execute_native())).unwrap()
+        });
+        let mut shard = RemoteShard::over_duplex("remote:q8-cache", client);
+        assert!(shard.supports(JobClass::ConvTileQ8));
+        assert!(shard.supports(JobClass::FcGemmBatchQ8));
+        assert!(!shard.supports(JobClass::FcGemmQ8), "single-column q8 FC stays local");
+        let conv: Vec<Job> = sample_q8_jobs()
+            .into_iter()
+            .filter(|j| j.class() == JobClass::ConvTileQ8)
+            .collect();
+        assert_eq!(conv.len(), 4, "40x50x60 at ts=32 is a 2x2 tile grid");
+        for job in &conv {
+            let got = shard.execute(job).unwrap();
+            assert_eq!(got.data, job.execute_native().data);
+        }
+        let stats = shard.cache_stats();
+        assert_eq!(stats.puts, 2, "one A plane + one B plane, shipped once");
+        assert_eq!(stats.refs, 4);
+        assert_eq!(stats.misses, 0);
+        // Exact ledger: 2 i8 PUTs at one byte per code, 4 fixed-size Q8
+        // REFs, 4 f32 result frames — nothing else.
+        let pack = 2 * 2 * 32 * 32; // m_tiles(p_tiles) × k_tiles × ts²
+        let put = 1 + wire::KEY_BYTES + 8 + pack;
+        let result = 1 + wire::DESC_BYTES + 8 + 4 * 32 * 32;
+        let want = 2 * put + 4 * wire::Q8_REF_FRAME_BYTES + 4 * result;
+        assert_eq!(shard.wire_bytes(), want as u64);
+        // The int8 PUT saves exactly three bytes per element over its f32
+        // twin — the 4× operand-plane shrink the ledger rows pin.
+        let f32_put = 1 + wire::KEY_BYTES + 8 + 4 * pack;
+        assert_eq!(f32_put - put, 3 * pack);
+        drop(shard);
+        assert_eq!(shard_thread.join().unwrap(), 4);
+    }
+
+    #[test]
+    fn q8_cache_miss_reships_and_stays_bit_identical() {
+        let (client, mut server) = duplex_pair();
+        // 1500 f32-equivalent elements hold one layer's i8 planes
+        // (2 × 4096 bytes = 2048 equivalents) only via the keep-a-pair
+        // floor, so the second layer's PUTs evict the first's — re-running
+        // layer 0 exercises the q8 miss → re-PUT(i8) → retry recovery.
+        let cache = ShardCache::with_capacity_elems(1500);
+        let server_cache = Arc::clone(&cache);
+        let shard_thread = std::thread::spawn(move || {
+            serve_shard_transport(&mut server, &server_cache, 0.0, |job| {
+                Ok(job.execute_native())
+            })
+            .unwrap()
+        });
+        let grid = TileGrid::new(40, 50, 60, 32);
+        let panel = grid.panel_elems();
+        let mut id = 0;
+        let layer0 = jobs_from_packs_q8(
+            0,
+            1,
+            grid,
+            codes(41, grid.rows() * panel).into(),
+            codes(42, grid.cols() * panel).into(),
+            0.02,
+            &mut id,
+        );
+        let layer1 = jobs_from_packs_q8(
+            1,
+            1,
+            grid,
+            codes(43, grid.rows() * panel).into(),
+            codes(44, grid.cols() * panel).into(),
+            0.03,
+            &mut id,
+        );
+        let mut shard = RemoteShard::over_duplex("remote:q8-tiny-cache", client);
+        let mut served = 0u64;
+        for round in [&layer0, &layer1, &layer0, &layer1] {
+            for job in round {
+                let got = shard.execute(job).unwrap();
+                assert_eq!(got.data, job.execute_native().data, "job {}", job.desc.job_id);
+                served += 1;
+            }
+        }
+        let stats = shard.cache_stats();
+        assert!(stats.misses > 0, "tiny cache must force at least one miss");
+        assert!(
+            stats.puts > 4,
+            "misses re-ship planes beyond the initial four: {stats:?}"
+        );
+        assert!(cache.stats().evictions > 0);
+        drop(shard);
+        assert_eq!(shard_thread.join().unwrap(), served);
+    }
+
+    #[test]
+    fn duplex_shard_executes_inline_q8_jobs() {
+        let (client, mut server) = duplex_pair();
+        let shard_thread = std::thread::spawn(move || {
+            serve_transport(&mut server, |job| Ok(job.execute_native())).unwrap()
+        });
+        let mut shard = RemoteShard::over_duplex("remote:q8-inline", client);
+        // The fused q8 batch ships as an inline job frame (its activation
+        // pack is fresh per micro-batch, so it skips the operand cache);
+        // the single-column q8 FC also round-trips — the codec is total,
+        // capability masks are what keep it local in production.
+        let q8: Vec<Job> = sample_q8_jobs()
+            .into_iter()
+            .filter(|j| j.class() != JobClass::ConvTileQ8)
+            .collect();
+        assert_eq!(q8.len(), 2);
+        for job in &q8 {
+            let got = shard.execute(job).unwrap();
+            assert_eq!(got.data, job.execute_native().data, "{:?}", job.class());
+            assert_eq!(
+                shard.cost(job),
+                REMOTE_OVERHEAD_KSTEPS + job.ksteps() as f64
+            );
+        }
+        drop(shard);
+        assert_eq!(shard_thread.join().unwrap(), 2);
     }
 
     #[test]

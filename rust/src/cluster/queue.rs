@@ -583,7 +583,7 @@ mod tests {
         let b: QueueBank<CItem> = QueueBank::new();
         b.push(CItem(0, 0));
         b.push_batch(vec![CItem(1, 1), CItem(2, 1), CItem(3, 2)]);
-        assert_eq!(b.class_counts(), [1, 2, 1, 0]);
+        assert_eq!(b.class_counts(), [1, 2, 1, 0, 0, 0, 0]);
         assert_eq!(b.len(), 4);
         assert_eq!(b.len_where(ClassMask::of(&[JobClass::FcGemm])), 2);
         assert_eq!(b.len_where(ClassMask::all()), 4);
@@ -671,7 +671,7 @@ mod tests {
         let stolen = b.steal_where(2, ClassMask::of(&[JobClass::ConvTile]));
         let ids: Vec<u64> = stolen.iter().map(|c| c.0).collect();
         assert_eq!(ids, vec![4, 3]);
-        assert_eq!(b.class_counts(), [3, 1, 0, 0]);
+        assert_eq!(b.class_counts(), [3, 1, 0, 0, 0, 0, 0]);
         // Empty-mask steal takes nothing.
         assert!(b.steal_where(5, ClassMask::NONE).is_empty());
     }

@@ -134,6 +134,31 @@ pub struct ServeCfg {
     pub batch_deadline_ms: u64,
 }
 
+/// `[quant]` section: int8 quantized-inference knobs (`nn/quant`) — how
+/// per-layer activation scales are calibrated and whether networks run
+/// the Q8 job classes by default.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantCfg {
+    /// Deterministic zoo input frames each network's calibration walks to
+    /// record per-layer activation max-abs (≥ 1).  More samples widen the
+    /// observed activation range; the zoo inputs are synthetic and
+    /// stationary, so small counts converge.
+    pub calibration_samples: usize,
+    /// Run quantized (int8) inference for served networks by default.
+    /// Off preserves the f32 path exactly; individual call sites can
+    /// still build a `QuantizedNetwork` explicitly.
+    pub enable: bool,
+}
+
+impl Default for QuantCfg {
+    fn default() -> Self {
+        QuantCfg {
+            calibration_samples: 4,
+            enable: false,
+        }
+    }
+}
+
 impl Default for ServeCfg {
     fn default() -> Self {
         ServeCfg {
@@ -168,6 +193,7 @@ pub struct HwConfig {
     pub clusters: Vec<ClusterCfg>,
     pub memsub: MemSubCfg,
     pub serving: ServeCfg,
+    pub quant: QuantCfg,
 }
 
 impl HwConfig {
@@ -255,6 +281,9 @@ impl HwConfig {
         if self.big_neon_threads == 0 {
             bail!("big_neon_threads must be ≥ 1");
         }
+        if self.quant.calibration_samples == 0 {
+            bail!("quant calibration_samples must be ≥ 1");
+        }
         Ok(())
     }
 
@@ -276,6 +305,7 @@ impl HwConfig {
             burst_beats: 64,
         };
         let mut serving = ServeCfg::default();
+        let mut quant = QuantCfg::default();
 
         #[derive(PartialEq, Clone, Copy)]
         enum Sec {
@@ -285,6 +315,7 @@ impl HwConfig {
             PeType,
             Memory,
             Serving,
+            Quant,
         }
         let mut sec = Sec::None;
 
@@ -324,6 +355,7 @@ impl HwConfig {
                     }
                     "memory" => Sec::Memory,
                     "serving" => Sec::Serving,
+                    "quant" => Sec::Quant,
                     other => bail!("{name}:{}: unknown section [{other}]", lineno + 1),
                 };
                 continue;
@@ -416,6 +448,11 @@ impl HwConfig {
                     "batch_deadline_ms" => serving.batch_deadline_ms = parse_usize()? as u64,
                     other => bail!("{name}:{}: unknown serving key {other}", lineno + 1),
                 },
+                Sec::Quant => match k {
+                    "calibration_samples" => quant.calibration_samples = parse_usize()?,
+                    "enable" => quant.enable = parse_usize()? != 0,
+                    other => bail!("{name}:{}: unknown quant key {other}", lineno + 1),
+                },
                 Sec::None => bail!("{name}:{}: key outside a section", lineno + 1),
             }
         }
@@ -430,6 +467,7 @@ impl HwConfig {
             clusters,
             memsub,
             serving,
+            quant,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -523,6 +561,10 @@ headroom_samples = 64
 interactive_deadline_ms = 50
 standard_deadline_ms = 0
 batch_deadline_ms = 0
+
+[quant]
+calibration_samples = 4
+enable = 0
 ";
 
 #[cfg(test)]
@@ -624,6 +666,37 @@ batch_deadline_ms = 5000
         bad.serving.batch_window_min_us = bad.serving.batch_window_us + 1;
         assert!(bad.validate().is_err());
         assert!(HwConfig::parse("t", "[serving]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn quant_section_parses_and_validates() {
+        let hw = HwConfig::default_zc702();
+        assert_eq!(hw.quant, QuantCfg::default());
+        assert_eq!(hw.quant.calibration_samples, 4);
+        assert!(!hw.quant.enable);
+
+        let text = "
+[device]
+tile_size = 32
+[pe_type]
+name = F-PE
+[cluster]
+name = c0
+pe = F-PE:1
+[memory]
+mmus = 1
+[quant]
+calibration_samples = 2
+enable = 1
+";
+        let hw = HwConfig::parse("t", text).unwrap();
+        assert_eq!(hw.quant.calibration_samples, 2);
+        assert!(hw.quant.enable);
+
+        let mut bad = HwConfig::default_zc702();
+        bad.quant.calibration_samples = 0;
+        assert!(bad.validate().is_err());
+        assert!(HwConfig::parse("t", "[quant]\nbogus = 1\n").is_err());
     }
 
     #[test]

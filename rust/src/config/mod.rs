@@ -6,5 +6,5 @@ pub mod hw_config;
 pub mod net_config;
 pub mod zoo;
 
-pub use hw_config::{ClusterCfg, HwConfig, MemSubCfg, PeKind, PeTypeCfg, ServeCfg};
+pub use hw_config::{ClusterCfg, HwConfig, MemSubCfg, PeKind, PeTypeCfg, QuantCfg, ServeCfg};
 pub use net_config::{Activation, LayerSpec, NetConfig};

@@ -72,6 +72,45 @@ pub fn gemm_blocked_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize
     }
 }
 
+/// Int8 twin of [`gemm_blocked_into`]: **accumulates**
+/// C[MxP] += A[MxN]·B[NxP] with i8 operands widened into an i32
+/// accumulator — the fixed-point datapath the DPU lineage gets its
+/// embedded throughput from.  Same k-blocked i-k-j tiling discipline and
+/// zero-skip as the f32 kernel; the accumulator is exact (no rounding
+/// anywhere), so requantization is entirely the caller's business at the
+/// layer boundary.
+///
+/// Overflow headroom: |a·b| ≤ 127² = 16129 per term, so an i32
+/// accumulator is exact for any inner dimension n ≤ 2³¹/16129 ≈ 133k —
+/// far beyond every zoo layer.  Debug builds assert the geometry like
+/// the f32 kernel does.
+pub fn gemm_q8_blocked_into(a: &[i8], b: &[i8], c: &mut [i32], m: usize, n: usize, p: usize) {
+    debug_assert_eq!(a.len(), m * n, "A operand size");
+    debug_assert_eq!(b.len(), n * p, "B operand size");
+    debug_assert_eq!(c.len(), m * p, "C accumulator size");
+    // Same KB as the f32 kernel: keeps B panels hot in L1/L2.
+    const KB: usize = 256;
+    for k0 in (0..n).step_by(KB) {
+        let k1 = (k0 + KB).min(n);
+        for i in 0..m {
+            let a_row = &a[i * n..(i + 1) * n];
+            let c_row = &mut c[i * p..(i + 1) * p];
+            for k in k0..k1 {
+                let aik = a_row[k] as i32;
+                if aik == 0 {
+                    continue;
+                }
+                let b_row = &b[k * p..(k + 1) * p];
+                // contiguous integer axpy over the C row — autovectorizes
+                // to widening multiply-accumulate lanes
+                for (cv, bv) in c_row.iter_mut().zip(b_row) {
+                    *cv += aik * *bv as i32;
+                }
+            }
+        }
+    }
+}
+
 /// FLOP count of an (m,n,p) GEMM (the paper's GOP accounting: 2·m·n·p).
 pub fn gemm_flops(m: usize, n: usize, p: usize) -> u64 {
     2 * m as u64 * n as u64 * p as u64
@@ -152,6 +191,56 @@ mod tests {
                 want.max_abs_diff(&got)
             );
         });
+    }
+
+    fn rand_q8(n: usize, seed: u64) -> Vec<i8> {
+        (0..n)
+            .map(|i| (((i as u64 * 31 + seed * 7 + 3) % 255) as i64 - 127) as i8)
+            .collect()
+    }
+
+    /// The i8 kernel must equal a plain i64 integer oracle exactly —
+    /// there is no floating point anywhere in the accumulation.
+    #[test]
+    fn q8_blocked_matches_integer_oracle() {
+        for (m, n, p) in [(1, 1, 1), (4, 5, 6), (32, 32, 32), (7, 513, 3), (3, 300, 5)] {
+            let a = rand_q8(m * n, (m + n) as u64);
+            let b = rand_q8(n * p, (n + p) as u64);
+            let mut c = vec![0i32; m * p];
+            gemm_q8_blocked_into(&a, &b, &mut c, m, n, p);
+            for i in 0..m {
+                for j in 0..p {
+                    let want: i64 =
+                        (0..n).map(|k| a[i * n + k] as i64 * b[k * p + j] as i64).sum();
+                    assert_eq!(c[i * p + j] as i64, want, "({m},{n},{p}) at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q8_accumulates_into_existing_c() {
+        let a = rand_q8(3 * 4, 1);
+        let b = rand_q8(4 * 5, 2);
+        let mut base = vec![0i32; 15];
+        gemm_q8_blocked_into(&a, &b, &mut base, 3, 4, 5);
+        let mut c = vec![10i32; 15];
+        gemm_q8_blocked_into(&a, &b, &mut c, 3, 4, 5);
+        for (got, want) in c.iter().zip(&base) {
+            assert_eq!(*got, want + 10);
+        }
+    }
+
+    /// Worst-case magnitude codes over a deep inner dimension stay exact
+    /// in i32 (the headroom argument in the kernel doc).
+    #[test]
+    fn q8_extreme_codes_do_not_overflow_i32() {
+        let n = 4096;
+        let a = vec![127i8; n];
+        let b = vec![-127i8; n];
+        let mut c = vec![0i32; 1];
+        gemm_q8_blocked_into(&a, &b, &mut c, 1, n, 1);
+        assert_eq!(c[0] as i64, -(127i64 * 127 * n as i64));
     }
 
     #[test]

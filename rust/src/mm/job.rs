@@ -15,7 +15,14 @@
 //! * [`JobClass::FcGemmBatch`] — a micro-batch's worth of FC columns fused
 //!   into one (OUT,IN)×(IN,B) GEMM, so the serving path pays one dispatch
 //!   (and one big-NEON fan-out) per FC layer per *batch* instead of per
-//!   request.
+//!   request;
+//! * [`JobClass::ConvTileQ8`] / [`JobClass::FcGemmQ8`] /
+//!   [`JobClass::FcGemmBatchQ8`] — the int8 quantized twins of the three
+//!   GEMM classes: i8 operand planes, i32 accumulation, one symmetric
+//!   scale applied at the layer boundary.  A class per dtype is what lets
+//!   the registry advertise quantized capability per backend — a member
+//!   without the Q8 bits simply never sees quantized jobs, and the
+//!   planner falls back to the dequantized f32 classes.
 //!
 //! Jobs carry what the paper's `job_t` carries: operand "base addresses"
 //! (shared buffers), the matrix geometry, the tile index, and the owning
@@ -45,22 +52,58 @@ pub enum JobClass {
     /// A fused FC GEMM over a micro-batch: Y(OUT,B) = W(OUT,IN)·X(IN,B),
     /// one activation column per request.
     FcGemmBatch = 3,
+    /// Int8 twin of [`JobClass::ConvTile`]: one (TS,TS) output tile over
+    /// pre-quantized i8 operand panels, accumulated in i32.
+    ConvTileQ8 = 4,
+    /// Int8 twin of [`JobClass::FcGemm`].
+    FcGemmQ8 = 5,
+    /// Int8 twin of [`JobClass::FcGemmBatch`].
+    FcGemmBatchQ8 = 6,
 }
 
 impl JobClass {
     /// Number of job classes (array sizing for per-class accounting).
-    pub const COUNT: usize = 4;
+    pub const COUNT: usize = 7;
     /// Every class, in dense-index order.
     pub const ALL: [JobClass; JobClass::COUNT] = [
         JobClass::ConvTile,
         JobClass::FcGemm,
         JobClass::Im2col,
         JobClass::FcGemmBatch,
+        JobClass::ConvTileQ8,
+        JobClass::FcGemmQ8,
+        JobClass::FcGemmBatchQ8,
     ];
 
     /// Dense index into per-class counter arrays.
-    pub fn index(self) -> usize {
+    pub const fn index(self) -> usize {
         self as usize
+    }
+
+    /// Is this one of the int8 quantized classes?  (The capability a
+    /// backend claims — or doesn't — via [`ClassMask::Q8`].)
+    pub const fn is_q8(self) -> bool {
+        matches!(
+            self,
+            JobClass::ConvTileQ8 | JobClass::FcGemmQ8 | JobClass::FcGemmBatchQ8
+        )
+    }
+
+    /// Default steal-policy cost weight of one queued job of this class.
+    /// `sched::worksteal::DEFAULT_CLASS_COST` is derived from this table,
+    /// so a new class cannot desync the cost array silently.  Q8 classes
+    /// cost half their f32 twin: same k-step count, quarter operand bytes
+    /// and a narrower MAC.
+    pub const fn default_steal_cost(self) -> f64 {
+        match self {
+            JobClass::ConvTile => 1.0,
+            JobClass::FcGemm => 4.0,
+            JobClass::Im2col => 0.5,
+            JobClass::FcGemmBatch => 16.0,
+            JobClass::ConvTileQ8 => 0.5,
+            JobClass::FcGemmQ8 => 2.0,
+            JobClass::FcGemmBatchQ8 => 8.0,
+        }
     }
 
     /// Human-readable label (reports and stats tables).
@@ -70,9 +113,18 @@ impl JobClass {
             JobClass::FcGemm => "fc-gemm",
             JobClass::Im2col => "im2col",
             JobClass::FcGemmBatch => "fc-gemm-batch",
+            JobClass::ConvTileQ8 => "conv-tile-q8",
+            JobClass::FcGemmQ8 => "fc-gemm-q8",
+            JobClass::FcGemmBatchQ8 => "fc-gemm-batch-q8",
         }
     }
 }
+
+// `JobClass::ALL` and `COUNT` must agree (everything per-class is sized
+// by COUNT and iterated via ALL), and the dense indices must fit the
+// `ClassMask` u8.  Both checked at compile time.
+const _: () = assert!(JobClass::ALL.len() == JobClass::COUNT);
+const _: () = assert!(JobClass::COUNT <= 8, "ClassMask is a u8 bit-set");
 
 /// Queue items the scheduler can classify (dense [`JobClass`] index).
 /// Lives next to [`JobClass`] so the per-class queue bank
@@ -106,9 +158,37 @@ impl ClassMask {
     /// Supports nothing.
     pub const NONE: ClassMask = ClassMask(0);
 
-    /// Supports every job class.
-    pub fn all() -> ClassMask {
-        ClassMask((1u8 << JobClass::COUNT) - 1)
+    /// Supports every job class — derived from [`JobClass::ALL`] (with
+    /// the length const-asserted against `COUNT`), so adding a class
+    /// cannot silently leave it out of the full mask.
+    pub const ALL: ClassMask = {
+        let mut bits = 0u8;
+        let mut i = 0;
+        while i < JobClass::ALL.len() {
+            bits |= 1 << JobClass::ALL[i].index();
+            i += 1;
+        }
+        ClassMask(bits)
+    };
+
+    /// Exactly the int8 quantized classes — the capability bits a
+    /// backend claims (or is denied) for quantized inference.
+    pub const Q8: ClassMask = {
+        let mut bits = 0u8;
+        let mut i = 0;
+        while i < JobClass::ALL.len() {
+            if JobClass::ALL[i].is_q8() {
+                bits |= 1 << JobClass::ALL[i].index();
+            }
+            i += 1;
+        }
+        ClassMask(bits)
+    };
+
+    /// Supports every job class (alias of [`ClassMask::ALL`], kept as a
+    /// function for the many existing call sites).
+    pub const fn all() -> ClassMask {
+        ClassMask::ALL
     }
 
     /// Supports exactly `classes`.
@@ -233,6 +313,30 @@ pub enum JobKind {
         stride: usize,
         pad: usize,
     },
+    /// Int8 CONV tile GEMM: the same pre-packed panel discipline as
+    /// [`JobKind::ConvTile`], but the panels hold symmetric-quantized i8
+    /// codes and `scale` is the product of the two operands' scales
+    /// (s_w·s_x).  The kernel accumulates in i32 and the result is
+    /// dequantized to f32 at the tile boundary: `c = scale · Σ a·b`.
+    ConvTileQ8 {
+        a_tiles: OperandView<i8>,
+        b_tiles: OperandView<i8>,
+        scale: f32,
+    },
+    /// Int8 FC GEMM: A = quantized weights (M×N), B = one quantized
+    /// activation column (N×1), `scale` = s_w·s_x.
+    FcGemmQ8 {
+        a: OperandView<i8>,
+        b: OperandView<i8>,
+        scale: f32,
+    },
+    /// Int8 fused batched FC GEMM over the (N,B) column-packed quantized
+    /// operand; `scale` = s_w·s_x shared by the whole batch.
+    FcGemmBatchQ8 {
+        a: OperandView<i8>,
+        b: OperandView<i8>,
+        scale: f32,
+    },
 }
 
 impl JobKind {
@@ -242,6 +346,9 @@ impl JobKind {
             JobKind::FcGemm { .. } => JobClass::FcGemm,
             JobKind::Im2col { .. } => JobClass::Im2col,
             JobKind::FcGemmBatch { .. } => JobClass::FcGemmBatch,
+            JobKind::ConvTileQ8 { .. } => JobClass::ConvTileQ8,
+            JobKind::FcGemmQ8 { .. } => JobClass::FcGemmQ8,
+            JobKind::FcGemmBatchQ8 { .. } => JobClass::FcGemmBatchQ8,
         }
     }
 }
@@ -281,9 +388,11 @@ impl Job {
     /// a flat single step.
     pub fn ksteps(&self) -> u64 {
         match self.kind.class() {
-            JobClass::ConvTile => self.desc.k_tiles() as u64,
-            JobClass::FcGemm => (self.desc.grid.num_jobs() * self.desc.k_tiles()) as u64,
-            JobClass::FcGemmBatch => {
+            JobClass::ConvTile | JobClass::ConvTileQ8 => self.desc.k_tiles() as u64,
+            JobClass::FcGemm | JobClass::FcGemmQ8 => {
+                (self.desc.grid.num_jobs() * self.desc.k_tiles()) as u64
+            }
+            JobClass::FcGemmBatch | JobClass::FcGemmBatchQ8 => {
                 (self.desc.grid.rows() * self.desc.k_tiles() * self.desc.grid.p) as u64
             }
             JobClass::Im2col => 1,
@@ -370,6 +479,80 @@ impl Job {
         }
     }
 
+    /// Build one int8 FC-GEMM job: y(M) = scale · (Wq(M×N)·xq(N)) with i8
+    /// operands and i32 accumulation.  Same single-column contract as
+    /// [`Job::fc`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn fc_q8(
+        job_id: u64,
+        layer_id: usize,
+        frame_id: u64,
+        out_n: usize,
+        in_n: usize,
+        w: impl Into<OperandView<i8>>,
+        x: impl Into<OperandView<i8>>,
+        scale: f32,
+        ts: usize,
+    ) -> Job {
+        let (w, x) = (w.into(), x.into());
+        assert_eq!(w.len(), out_n * in_n, "FC weight size mismatch");
+        assert_eq!(
+            x.len(),
+            in_n,
+            "FC activation must be one (N,) column (batched B needs the \
+             column-major fusion layout; see ROADMAP)"
+        );
+        Job {
+            desc: JobDesc {
+                job_id,
+                layer_id,
+                frame_id,
+                t1: 0,
+                t2: 0,
+                grid: TileGrid::new(out_n, in_n, 1, ts),
+            },
+            kind: JobKind::FcGemmQ8 { a: w, b: x, scale },
+            placement: None,
+        }
+    }
+
+    /// Build one int8 fused batched-FC job over a column-packed (N,B)
+    /// quantized operand ([`pack_fc_columns_q8`]); `scale` = s_w·s_x.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fc_batch_q8(
+        job_id: u64,
+        layer_id: usize,
+        frame_id: u64,
+        out_n: usize,
+        in_n: usize,
+        batch: usize,
+        w: impl Into<OperandView<i8>>,
+        xb: impl Into<OperandView<i8>>,
+        scale: f32,
+        ts: usize,
+    ) -> Job {
+        let (w, xb) = (w.into(), xb.into());
+        assert!(batch >= 1, "fused FC batch must hold at least one column");
+        assert_eq!(w.len(), out_n * in_n, "FC weight size mismatch");
+        assert_eq!(
+            xb.len(),
+            in_n * batch,
+            "batched FC operand must be (IN, B) — see pack_fc_columns"
+        );
+        Job {
+            desc: JobDesc {
+                job_id,
+                layer_id,
+                frame_id,
+                t1: 0,
+                t2: 0,
+                grid: TileGrid::new(out_n, in_n, batch, ts),
+            },
+            kind: JobKind::FcGemmBatchQ8 { a: w, b: xb, scale },
+            placement: None,
+        }
+    }
+
     /// Build one im2col job lowering a (C,H,W) input for a `size`×`size`
     /// convolution with `stride`/`pad`.
     #[allow(clippy::too_many_arguments)]
@@ -418,8 +601,34 @@ impl Job {
             JobKind::ConvTile { a_tiles, b_tiles } => (a_tiles, b_tiles),
             // Spelled out (no `_` arm) so adding a job class forces this
             // dispatch decision instead of silently inheriting the panic.
-            JobKind::FcGemm { .. } | JobKind::FcGemmBatch { .. } | JobKind::Im2col { .. } => {
+            JobKind::FcGemm { .. }
+            | JobKind::FcGemmBatch { .. }
+            | JobKind::Im2col { .. }
+            | JobKind::ConvTileQ8 { .. }
+            | JobKind::FcGemmQ8 { .. }
+            | JobKind::FcGemmBatchQ8 { .. } => {
                 panic!("tile_operands on a {:?} job", self.class())
+            }
+        }
+    }
+
+    /// A quantized CONV-tile job's packed i8 operand panels plus the
+    /// dequantization scale — the Q8 twin of [`Job::tile_operands`].
+    /// Panics on every other class.
+    pub fn tile_operands_q8(&self) -> (&[i8], &[i8], f32) {
+        match &self.kind {
+            JobKind::ConvTileQ8 {
+                a_tiles,
+                b_tiles,
+                scale,
+            } => (a_tiles, b_tiles, *scale),
+            JobKind::ConvTile { .. }
+            | JobKind::FcGemm { .. }
+            | JobKind::FcGemmBatch { .. }
+            | JobKind::Im2col { .. }
+            | JobKind::FcGemmQ8 { .. }
+            | JobKind::FcGemmBatchQ8 { .. } => {
+                panic!("tile_operands_q8 on a {:?} job", self.class())
             }
         }
     }
@@ -447,6 +656,27 @@ impl Job {
                 stride,
                 pad,
             } => crate::nn::im2col::im2col_slice(input, *chw, *size, *stride, *pad),
+            JobKind::ConvTileQ8 {
+                a_tiles,
+                b_tiles,
+                scale,
+            } => super::tile::job_mm_q8_native(
+                a_tiles,
+                b_tiles,
+                self.desc.k_tiles(),
+                self.desc.grid.ts,
+                *scale,
+            ),
+            // Like their f32 twins, single-column and fused-batch share
+            // one kernel; the i32 accumulator makes the integer part
+            // exact, so the only rounding is the final per-element
+            // `scale · acc` dequantization.
+            JobKind::FcGemmQ8 { a, b, scale } | JobKind::FcGemmBatchQ8 { a, b, scale } => {
+                let g = self.desc.grid;
+                let mut acc = vec![0i32; g.m * g.p];
+                super::gemm::gemm_q8_blocked_into(a, b, &mut acc, g.m, g.n, g.p);
+                acc.iter().map(|&v| v as f32 * *scale).collect()
+            }
         };
         JobResult {
             desc: self.desc,
@@ -516,6 +746,46 @@ pub fn jobs_from_packs(
     jobs
 }
 
+/// The Q8 twin of [`jobs_from_packs`]: generate all quantized CONV-tile
+/// jobs of one GEMM from i8 operand packs already in the blocked layout
+/// (quantized element-wise from the f32 packs, so panel geometry is
+/// identical).  `scale` is the shared s_w·s_x dequantization factor.
+pub fn jobs_from_packs_q8(
+    layer_id: usize,
+    frame_id: u64,
+    grid: TileGrid,
+    a_pack: OperandView<i8>,
+    b_pack: OperandView<i8>,
+    scale: f32,
+    next_job_id: &mut u64,
+) -> Vec<Job> {
+    let panel = grid.panel_elems();
+    assert_eq!(a_pack.len(), grid.rows() * panel, "packed A size mismatch");
+    assert_eq!(b_pack.len(), grid.cols() * panel, "packed B size mismatch");
+    let mut jobs = Vec::with_capacity(grid.num_jobs());
+    for (t1, t2) in grid.tiles() {
+        let desc = JobDesc {
+            job_id: *next_job_id,
+            layer_id,
+            frame_id,
+            t1,
+            t2,
+            grid,
+        };
+        *next_job_id += 1;
+        jobs.push(Job {
+            desc,
+            kind: JobKind::ConvTileQ8 {
+                a_tiles: a_pack.slice(t1 * panel, panel),
+                b_tiles: b_pack.slice(t2 * panel, panel),
+                scale,
+            },
+            placement: None,
+        });
+    }
+    jobs
+}
+
 /// Pack B equal-length activation vectors into the row-major (IN, B)
 /// operand of a fused batched-FC GEMM: `packed[k*B + j] = cols[j][k]`
 /// (request j is column j).  The inverse is [`unpack_fc_columns`].
@@ -531,6 +801,24 @@ pub fn pack_fc_columns(cols: &[&[f32]]) -> Vec<f32> {
         }
     }
     super::operand::note_copy(packed.len() * 4);
+    packed
+}
+
+/// The Q8 twin of [`pack_fc_columns`]: pack B equal-length quantized
+/// activation columns into the row-major (IN, B) i8 operand of a fused
+/// batched Q8 FC GEMM (`packed[k*B + j] = cols[j][k]`).
+pub fn pack_fc_columns_q8(cols: &[&[i8]]) -> Vec<i8> {
+    let batch = cols.len();
+    assert!(batch >= 1, "cannot pack an empty batch");
+    let in_n = cols[0].len();
+    let mut packed = vec![0i8; in_n * batch];
+    for (j, col) in cols.iter().enumerate() {
+        assert_eq!(col.len(), in_n, "fused FC columns must share one length");
+        for (k, v) in col.iter().enumerate() {
+            packed[k * batch + j] = *v;
+        }
+    }
+    super::operand::note_copy(packed.len());
     packed
 }
 
@@ -824,5 +1112,185 @@ mod tests {
         let dense = jobs_for_gemm(5, 9, grid, a.clone(), b.clone(), &mut id2);
         let dense_results: Vec<JobResult> = dense.iter().map(|j| j.execute_native()).collect();
         assert_eq!(c, gather_results(grid, &dense_results));
+    }
+
+    fn rand_q8(n: usize, seed: u64) -> Vec<i8> {
+        // Deterministic small codes spanning the i8 range.
+        (0..n)
+            .map(|i| (((i as u64 * 37 + seed * 13 + 11) % 255) as i64 - 127) as i8)
+            .collect()
+    }
+
+    #[test]
+    fn q8_masks_and_costs_derive_from_the_class_table() {
+        // ALL covers every class (including the Q8 trio) and nothing else.
+        for c in JobClass::ALL {
+            assert!(ClassMask::ALL.supports(c), "{c:?} missing from ALL");
+        }
+        assert_eq!(ClassMask::ALL, ClassMask::all());
+        assert_eq!(ClassMask::ALL.bits().count_ones() as usize, JobClass::COUNT);
+        // Q8 is exactly the quantized trio.
+        assert_eq!(
+            ClassMask::Q8.classes().collect::<Vec<_>>(),
+            vec![
+                JobClass::ConvTileQ8,
+                JobClass::FcGemmQ8,
+                JobClass::FcGemmBatchQ8
+            ]
+        );
+        assert_eq!(ClassMask::ALL.intersect(ClassMask::Q8), ClassMask::Q8);
+        for c in JobClass::ALL {
+            assert_eq!(ClassMask::Q8.supports(c), c.is_q8());
+            assert!(c.default_steal_cost() > 0.0);
+            assert!(!c.label().is_empty());
+        }
+        // Q8 classes cost half their f32 twin in the steal policy.
+        assert_eq!(
+            JobClass::ConvTileQ8.default_steal_cost(),
+            JobClass::ConvTile.default_steal_cost() / 2.0
+        );
+        assert_eq!(
+            JobClass::FcGemmBatchQ8.default_steal_cost(),
+            JobClass::FcGemmBatch.default_steal_cost() / 2.0
+        );
+    }
+
+    #[test]
+    fn fc_q8_matches_integer_oracle_exactly() {
+        let (out_n, in_n) = (13, 57);
+        let w = rand_q8(out_n * in_n, 1);
+        let x = rand_q8(in_n, 2);
+        let scale = 0.037f32;
+        let job = Job::fc_q8(
+            7,
+            3,
+            1,
+            out_n,
+            in_n,
+            Arc::new(w.clone()),
+            Arc::new(x.clone()),
+            scale,
+            32,
+        );
+        assert_eq!(job.class(), JobClass::FcGemmQ8);
+        let got = job.execute_native();
+        assert_eq!(got.desc.job_id, 7);
+        for i in 0..out_n {
+            let acc: i64 = (0..in_n)
+                .map(|k| w[i * in_n + k] as i64 * x[k] as i64)
+                .sum();
+            // i32 accumulation is exact here, so the q8 path must equal
+            // the integer oracle to the bit after one dequantize multiply.
+            assert_eq!(got.data[i], acc as f32 * scale, "row {i}");
+        }
+    }
+
+    #[test]
+    fn fused_fc_batch_q8_matches_per_sample_jobs_bitwise() {
+        let (out_n, in_n, batch) = (9, 41, 4);
+        let w = Arc::new(rand_q8(out_n * in_n, 5));
+        let scale = 0.01f32;
+        let xs: Vec<Vec<i8>> = (0..batch).map(|j| rand_q8(in_n, 30 + j as u64)).collect();
+        let cols: Vec<&[i8]> = xs.iter().map(|x| x.as_slice()).collect();
+        let packed = pack_fc_columns_q8(&cols);
+        assert_eq!(packed.len(), in_n * batch);
+        assert_eq!(packed[3 * batch + 2], xs[2][3]);
+        let fused = Job::fc_batch_q8(
+            0,
+            1,
+            0,
+            out_n,
+            in_n,
+            batch,
+            Arc::clone(&w),
+            Arc::new(packed),
+            scale,
+            32,
+        );
+        assert_eq!(fused.class(), JobClass::FcGemmBatchQ8);
+        let got = unpack_fc_columns(&fused.execute_native().data, out_n, batch);
+        for (j, x) in xs.iter().enumerate() {
+            let want = Job::fc_q8(
+                1 + j as u64,
+                1,
+                0,
+                out_n,
+                in_n,
+                Arc::clone(&w),
+                Arc::new(x.clone()),
+                scale,
+                32,
+            )
+            .execute_native();
+            assert_eq!(got[j], want.data, "request {j}");
+        }
+    }
+
+    #[test]
+    fn q8_ksteps_mirror_their_f32_twins() {
+        let w = Arc::new(rand_q8(37 * 83, 1));
+        let x = Arc::new(rand_q8(83, 2));
+        let q8 = Job::fc_q8(0, 0, 0, 37, 83, Arc::clone(&w), Arc::clone(&x), 1.0, 32);
+        let wf = Arc::new(vec![0.0f32; 37 * 83]);
+        let xf = Arc::new(vec![0.0f32; 83]);
+        let f32_twin = Job::fc(1, 0, 0, 37, 83, wf, xf, 32);
+        assert_eq!(q8.ksteps(), f32_twin.ksteps());
+    }
+
+    #[test]
+    fn jobs_from_packs_q8_alias_the_packs_and_match_the_oracle() {
+        let grid = TileGrid::new(50, 70, 45, 32);
+        let a = rand_q8(50 * 70, 8);
+        let b = rand_q8(70 * 45, 9);
+        let scale = 0.125f32;
+        // Quantized packs share the f32 pack geometry: quantize the dense
+        // operands, pack via the f32 packer on code values, then cast.
+        let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let bf: Vec<f32> = b.iter().map(|&v| v as f32).collect();
+        let a_packf = grid.pack_a_tiles(&af);
+        let b_packf = grid.pack_b_tiles(&bf);
+        let a_pack: OperandView<i8> =
+            OperandView::from(a_packf.iter().map(|&v| v as i8).collect::<Vec<i8>>());
+        let b_pack: OperandView<i8> =
+            OperandView::from(b_packf.iter().map(|&v| v as i8).collect::<Vec<i8>>());
+        let panel = grid.panel_elems();
+        let mut id = 0;
+        let jobs =
+            jobs_from_packs_q8(2, 4, grid, a_pack.clone(), b_pack.clone(), scale, &mut id);
+        assert_eq!(jobs.len(), grid.num_jobs());
+        for job in &jobs {
+            assert_eq!(job.class(), JobClass::ConvTileQ8);
+            let (at, bt, s) = job.tile_operands_q8();
+            assert_eq!((at.len(), bt.len(), s), (panel, panel, scale));
+            match &job.kind {
+                JobKind::ConvTileQ8 {
+                    a_tiles, b_tiles, ..
+                } => {
+                    assert!(Arc::ptr_eq(a_tiles.buffer(), a_pack.buffer()));
+                    assert!(Arc::ptr_eq(b_tiles.buffer(), b_pack.buffer()));
+                    assert_eq!(a_tiles.offset(), job.desc.t1 * panel);
+                    assert_eq!(b_tiles.offset(), job.desc.t2 * panel);
+                }
+                _ => unreachable!(),
+            }
+        }
+        // Gathered q8 results equal the dense integer oracle · scale.
+        let results: Vec<JobResult> = jobs.iter().map(|j| j.execute_native()).collect();
+        let c = gather_results(grid, &results);
+        for i in 0..grid.m {
+            for j in 0..grid.p {
+                let acc: i64 = (0..grid.n)
+                    .map(|k| a[i * grid.n + k] as i64 * b[k * grid.p + j] as i64)
+                    .sum();
+                assert_eq!(c[i * grid.p + j], acc as f32 * scale, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "tile_operands_q8")]
+    fn tile_operands_q8_rejects_f32_jobs() {
+        let job = Job::fc(0, 0, 0, 4, 4, Arc::new(vec![0.0; 16]), Arc::new(vec![0.0; 4]), 4);
+        let _ = job.tile_operands_q8();
     }
 }

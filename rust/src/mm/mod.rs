@@ -10,5 +10,5 @@ pub mod operand;
 pub mod tile;
 
 pub use job::{ClassMask, Classed, Job, JobClass, JobDesc, JobKind, JobResult};
-pub use operand::{operand_key, FrameArena, OperandKey, OperandView};
+pub use operand::{operand_key, FrameArena, OperandKey, OperandScalar, OperandView, Plane};
 pub use tile::TileGrid;

@@ -11,14 +11,24 @@
 //! by [`copied_bytes`]/[`copy_events`]) or when the remote `wire` codec
 //! serializes a view for shipping.
 //!
+//! The plane is dtype-aware: `OperandView<T>` is generic over the
+//! [`OperandScalar`] element type (`f32` for the reference path, `i8` for
+//! quantized operand planes, `i32` for wide accumulators), defaulting to
+//! `f32` so the pre-quantization surface reads unchanged.  Where
+//! heterogeneous dtypes must share one container — the remote shard's
+//! operand cache — the erased [`Plane`] enum tags the backing allocation
+//! with its dtype.
+//!
 //! A [`FrameArena`] owns the per-frame transient buffers (im2col columns,
-//! packed B panels, fused FC column packs): the frame executor allocates
-//! into it, jobs carry views that alias its chunks, and the whole frame's
-//! working set is dropped at once when the arena goes out of scope.
-//! Load-time weight prepacks live on the `Network` instead and are aliased
-//! by every frame's jobs for the network's lifetime.
+//! packed B panels, fused FC column packs, quantized activation planes):
+//! the frame executor allocates into it, jobs carry views that alias its
+//! chunks, and the whole frame's working set is dropped at once when the
+//! arena goes out of scope.  Load-time weight prepacks live on the
+//! `Network` instead and are aliased by every frame's jobs for the
+//! network's lifetime.
 
 use crate::util::sync::{lock_clean, Mutex};
+use std::any::Any;
 use std::collections::HashMap;
 use std::ops::Deref;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -48,6 +58,33 @@ pub fn copy_events() -> u64 {
     COPY_EVENTS.load(Ordering::Relaxed)
 }
 
+/// Element types an operand plane can carry.  The trait is deliberately
+/// tiny: the plane moves and windows bytes, it never does arithmetic on
+/// them — kernels downcast to concrete slices.
+pub trait OperandScalar:
+    Copy + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static
+{
+    /// Size of one element on the wire (and in the cache byte ledger).
+    const BYTES: usize;
+    /// dtype label for debug output and ledger rows.
+    const LABEL: &'static str;
+}
+
+impl OperandScalar for f32 {
+    const BYTES: usize = 4;
+    const LABEL: &'static str = "f32";
+}
+
+impl OperandScalar for i8 {
+    const BYTES: usize = 1;
+    const LABEL: &'static str = "i8";
+}
+
+impl OperandScalar for i32 {
+    const BYTES: usize = 4;
+    const LABEL: &'static str = "i32";
+}
+
 /// Content-addressed identity of a shared operand buffer: a per-process
 /// origin nonce plus a monotone sequence number minted the first time a
 /// buffer is keyed.  Two views over the same `Arc` allocation share a key;
@@ -60,10 +97,13 @@ pub type OperandKey = (u64, u64);
 struct KeyRegistry {
     origin: u64,
     next_seq: AtomicU64,
-    /// `Arc::as_ptr` address → (sequence, liveness witness).  The `Weak`
-    /// guards against address reuse: an allocation dropped and replaced by
-    /// a new one at the same address must NOT inherit the old key.
-    by_ptr: Mutex<HashMap<usize, (u64, Weak<Vec<f32>>)>>,
+    /// Thin `Arc::as_ptr` address → (sequence, liveness witness).  The
+    /// `Weak` guards against address reuse: an allocation dropped and
+    /// replaced by a new one at the same address must NOT inherit the old
+    /// key.  The witness is dtype-erased so one registry keys every
+    /// operand dtype — an address can only belong to one live allocation
+    /// at a time regardless of element type.
+    by_ptr: Mutex<HashMap<usize, (u64, Weak<dyn Any + Send + Sync>)>>,
 }
 
 fn key_registry() -> &'static KeyRegistry {
@@ -82,23 +122,25 @@ fn key_registry() -> &'static KeyRegistry {
     })
 }
 
-/// Stable cache key of a shared operand buffer.  Idempotent per live
-/// allocation; process-wide, so every `RemoteShard` in this process keys
-/// the same prepack identically and a shard dedupes across connections.
-pub fn operand_key(buf: &Arc<Vec<f32>>) -> OperandKey {
+/// Stable cache key of a shared operand buffer of any dtype.  Idempotent
+/// per live allocation; process-wide, so every `RemoteShard` in this
+/// process keys the same prepack identically and a shard dedupes across
+/// connections.
+pub fn operand_key<T: OperandScalar>(buf: &Arc<Vec<T>>) -> OperandKey {
     let reg = key_registry();
     let ptr = Arc::as_ptr(buf) as usize;
     let mut map = lock_clean(&reg.by_ptr);
     if let Some((seq, witness)) = map.get(&ptr) {
         if let Some(live) = witness.upgrade() {
-            if Arc::ptr_eq(&live, buf) {
+            if Arc::as_ptr(&live) as *const () as usize == ptr {
                 return (reg.origin, *seq);
             }
         }
     }
     // First sighting (or a dead entry's address was reused): mint fresh.
     let seq = reg.next_seq.fetch_add(1, Ordering::Relaxed);
-    map.insert(ptr, (seq, Arc::downgrade(buf)));
+    let erased: Arc<dyn Any + Send + Sync> = Arc::clone(buf) as Arc<dyn Any + Send + Sync>;
+    map.insert(ptr, (seq, Arc::downgrade(&erased)));
     // Bound the map: dead entries whose address never gets reused would
     // otherwise accumulate for the process lifetime.
     if map.len() > 4096 {
@@ -107,27 +149,29 @@ pub fn operand_key(buf: &Arc<Vec<f32>>) -> OperandKey {
     (reg.origin, seq)
 }
 
-/// A read-only window into a shared f32 buffer: `Arc` backing allocation
-/// plus offset/length.  Clone is a refcount bump; [`OperandView::slice`]
-/// narrows the window without touching the data.  Jobs, backends, and the
-/// wire codec all consume operands through this one type.
+/// A read-only window into a shared buffer of `T`s: `Arc` backing
+/// allocation plus offset/length.  Clone is a refcount bump;
+/// [`OperandView::slice`] narrows the window without touching the data.
+/// Jobs, backends, and the wire codec all consume operands through this
+/// one type; the default element type keeps the f32 reference path
+/// spelled `OperandView` as before.
 #[derive(Clone)]
-pub struct OperandView {
-    buf: Arc<Vec<f32>>,
+pub struct OperandView<T: OperandScalar = f32> {
+    buf: Arc<Vec<T>>,
     off: usize,
     len: usize,
 }
 
-impl OperandView {
+impl<T: OperandScalar> OperandView<T> {
     /// A view over an entire shared buffer.
-    pub fn full(buf: Arc<Vec<f32>>) -> OperandView {
+    pub fn full(buf: Arc<Vec<T>>) -> OperandView<T> {
         let len = buf.len();
         OperandView { buf, off: 0, len }
     }
 
     /// A view over `buf[off..off + len]`; panics if the window is out of
     /// bounds.
-    pub fn new(buf: Arc<Vec<f32>>, off: usize, len: usize) -> OperandView {
+    pub fn new(buf: Arc<Vec<T>>, off: usize, len: usize) -> OperandView<T> {
         assert!(
             off.checked_add(len).is_some_and(|end| end <= buf.len()),
             "operand view {off}+{len} outside buffer of {}",
@@ -138,7 +182,7 @@ impl OperandView {
 
     /// Narrow this view to `self[off..off + len]` (offsets relative to the
     /// view, not the backing buffer).  Shares the backing `Arc`.
-    pub fn slice(&self, off: usize, len: usize) -> OperandView {
+    pub fn slice(&self, off: usize, len: usize) -> OperandView<T> {
         assert!(
             off.checked_add(len).is_some_and(|end| end <= self.len),
             "operand sub-view {off}+{len} outside view of {}",
@@ -152,13 +196,13 @@ impl OperandView {
     }
 
     /// The viewed elements.
-    pub fn as_slice(&self) -> &[f32] {
+    pub fn as_slice(&self) -> &[T] {
         &self.buf[self.off..self.off + self.len]
     }
 
     /// The shared backing allocation (for aliasing checks — `Arc::ptr_eq`
     /// against an arena chunk or a weight prepack).
-    pub fn buffer(&self) -> &Arc<Vec<f32>> {
+    pub fn buffer(&self) -> &Arc<Vec<T>> {
         &self.buf
     }
 
@@ -176,30 +220,31 @@ impl OperandView {
     }
 }
 
-impl Deref for OperandView {
-    type Target = [f32];
+impl<T: OperandScalar> Deref for OperandView<T> {
+    type Target = [T];
 
-    fn deref(&self) -> &[f32] {
+    fn deref(&self) -> &[T] {
         self.as_slice()
     }
 }
 
-impl From<Arc<Vec<f32>>> for OperandView {
-    fn from(buf: Arc<Vec<f32>>) -> OperandView {
+impl<T: OperandScalar> From<Arc<Vec<T>>> for OperandView<T> {
+    fn from(buf: Arc<Vec<T>>) -> OperandView<T> {
         OperandView::full(buf)
     }
 }
 
-impl From<Vec<f32>> for OperandView {
-    fn from(v: Vec<f32>) -> OperandView {
+impl<T: OperandScalar> From<Vec<T>> for OperandView<T> {
+    fn from(v: Vec<T>) -> OperandView<T> {
         OperandView::full(Arc::new(v))
     }
 }
 
-impl std::fmt::Debug for OperandView {
+impl<T: OperandScalar> std::fmt::Debug for OperandView<T> {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         // The buffer may be megabytes; print the window, not the data.
         f.debug_struct("OperandView")
+            .field("dtype", &T::LABEL)
             .field("off", &self.off)
             .field("len", &self.len)
             .field("buf_len", &self.buf.len())
@@ -207,14 +252,94 @@ impl std::fmt::Debug for OperandView {
     }
 }
 
+/// A dtype-tagged shared operand plane — the erased form of an
+/// [`OperandView`] backing buffer, for containers that must hold
+/// heterogeneous dtypes side by side (the remote shard's operand cache
+/// stores f32 fetch sets and i8 quantized planes under one `OperandKey`
+/// namespace).
+#[derive(Debug, Clone)]
+pub enum Plane {
+    F32(Arc<Vec<f32>>),
+    I8(Arc<Vec<i8>>),
+}
+
+impl Plane {
+    /// Element count of the backing allocation.
+    pub fn len(&self) -> usize {
+        match self {
+            Plane::F32(b) => b.len(),
+            Plane::I8(b) => b.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes of the backing allocation (cache byte accounting —
+    /// an i8 plane costs 4× less than an f32 plane of equal length).
+    pub fn bytes(&self) -> usize {
+        match self {
+            Plane::F32(b) => b.len() * f32::BYTES,
+            Plane::I8(b) => b.len() * i8::BYTES,
+        }
+    }
+
+    /// The plane's stable operand key (shared with every view over it).
+    pub fn key(&self) -> OperandKey {
+        match self {
+            Plane::F32(b) => operand_key(b),
+            Plane::I8(b) => operand_key(b),
+        }
+    }
+
+    /// dtype label ("f32" / "i8") for ledgers and debug output.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Plane::F32(_) => f32::LABEL,
+            Plane::I8(_) => i8::LABEL,
+        }
+    }
+
+    /// The f32 backing allocation, or `None` for a non-f32 plane.
+    pub fn as_f32(&self) -> Option<&Arc<Vec<f32>>> {
+        match self {
+            Plane::F32(b) => Some(b),
+            Plane::I8(_) => None,
+        }
+    }
+
+    /// The i8 backing allocation, or `None` for a non-i8 plane.
+    pub fn as_i8(&self) -> Option<&Arc<Vec<i8>>> {
+        match self {
+            Plane::I8(b) => Some(b),
+            Plane::F32(_) => None,
+        }
+    }
+}
+
+impl From<Arc<Vec<f32>>> for Plane {
+    fn from(b: Arc<Vec<f32>>) -> Plane {
+        Plane::F32(b)
+    }
+}
+
+impl From<Arc<Vec<i8>>> for Plane {
+    fn from(b: Arc<Vec<i8>>) -> Plane {
+        Plane::I8(b)
+    }
+}
+
 /// A per-frame bump arena: owns the frame's transient operand buffers so
 /// jobs can alias them via views and the whole working set drops at once.
 /// Allocation freezes each buffer into an `Arc` chunk; [`FrameArena::holds`]
 /// answers whether a view aliases one of this arena's chunks (the
-/// zero-copy proof the tests pin).
+/// zero-copy proof the tests pin).  Quantized activation planes get their
+/// own i8 side — same lifetime discipline, 4× smaller chunks.
 #[derive(Default)]
 pub struct FrameArena {
     chunks: Vec<Arc<Vec<f32>>>,
+    chunks_i8: Vec<Arc<Vec<i8>>>,
 }
 
 impl FrameArena {
@@ -239,19 +364,51 @@ impl FrameArena {
         OperandView::full(chunk)
     }
 
-    /// Does `view` alias one of this arena's chunks?
+    /// Allocate a zeroed `len`-element i8 chunk, let `fill` write it in
+    /// place, freeze it, and return a view over the whole chunk (how
+    /// per-frame quantized activation planes are built).
+    pub fn alloc_i8_with(&mut self, len: usize, fill: impl FnOnce(&mut [i8])) -> OperandView<i8> {
+        let mut buf = vec![0i8; len];
+        fill(&mut buf);
+        self.adopt_i8(buf)
+    }
+
+    /// Adopt an already-built i8 buffer into the arena without copying it
+    /// and return a view over it.
+    pub fn adopt_i8(&mut self, buf: Vec<i8>) -> OperandView<i8> {
+        let chunk = Arc::new(buf);
+        self.chunks_i8.push(Arc::clone(&chunk));
+        OperandView::full(chunk)
+    }
+
+    /// Does `view` alias one of this arena's f32 chunks?
     pub fn holds(&self, view: &OperandView) -> bool {
         self.chunks.iter().any(|c| Arc::ptr_eq(c, view.buffer()))
     }
 
-    /// Number of chunks allocated into this arena.
+    /// Does `view` alias one of this arena's i8 chunks?
+    pub fn holds_i8(&self, view: &OperandView<i8>) -> bool {
+        self.chunks_i8.iter().any(|c| Arc::ptr_eq(c, view.buffer()))
+    }
+
+    /// Number of f32 chunks allocated into this arena.
     pub fn chunk_count(&self) -> usize {
         self.chunks.len()
+    }
+
+    /// Number of i8 chunks allocated into this arena.
+    pub fn i8_chunk_count(&self) -> usize {
+        self.chunks_i8.len()
     }
 
     /// Total f32 elements held by this arena.
     pub fn elems(&self) -> usize {
         self.chunks.iter().map(|c| c.len()).sum()
+    }
+
+    /// Total i8 elements held by this arena.
+    pub fn i8_elems(&self) -> usize {
+        self.chunks_i8.iter().map(|c| c.len()).sum()
     }
 }
 
@@ -277,6 +434,17 @@ mod tests {
         let ss = s.slice(5, 5);
         assert_eq!(ss.offset(), 15);
         assert_eq!(ss[0], 15.0);
+    }
+
+    #[test]
+    fn i8_views_share_one_allocation() {
+        let buf = Arc::new((0..32).map(|i| i as i8).collect::<Vec<i8>>());
+        let v: OperandView<i8> = OperandView::full(Arc::clone(&buf));
+        assert_eq!(v.len(), 32);
+        let s = v.slice(8, 8);
+        assert_eq!(s[0], 8);
+        assert!(Arc::ptr_eq(s.buffer(), &buf));
+        assert!(format!("{v:?}").contains("\"i8\""), "{v:?}");
     }
 
     #[test]
@@ -310,6 +478,21 @@ mod tests {
     }
 
     #[test]
+    fn arena_tracks_i8_chunks_separately() {
+        let mut arena = FrameArena::new();
+        let q = arena.alloc_i8_with(16, |dst| dst[3] = 7);
+        assert_eq!(q[3], 7);
+        let q2 = arena.adopt_i8(vec![1i8; 8]);
+        assert_eq!(arena.i8_chunk_count(), 2);
+        assert_eq!(arena.i8_elems(), 24);
+        assert_eq!(arena.chunk_count(), 0, "i8 chunks do not count as f32");
+        assert!(arena.holds_i8(&q) && arena.holds_i8(&q2));
+        assert!(arena.holds_i8(&q.slice(2, 4)));
+        let foreign = OperandView::<i8>::from(vec![0i8; 4]);
+        assert!(!arena.holds_i8(&foreign));
+    }
+
+    #[test]
     fn operand_keys_are_stable_per_allocation_and_fresh_per_repack() {
         let a = Arc::new(vec![1.0f32; 64]);
         let k1 = operand_key(&a);
@@ -331,6 +514,36 @@ mod tests {
         // Origin is shared within the process, sequences are unique.
         assert_eq!(operand_key(&b).0, operand_key(&repacked).0);
         assert_ne!(operand_key(&b).1, operand_key(&repacked).1);
+    }
+
+    #[test]
+    fn operand_keys_span_dtypes_in_one_namespace() {
+        let f = Arc::new(vec![0.0f32; 16]);
+        let q = Arc::new(vec![0i8; 16]);
+        let kf = operand_key(&f);
+        let kq = operand_key(&q);
+        assert_ne!(kf, kq, "distinct allocations key distinctly");
+        assert_eq!(kf.0, kq.0, "one origin nonce per process");
+        assert_eq!(operand_key(&q), kq, "i8 keys are stable too");
+    }
+
+    #[test]
+    fn planes_carry_dtype_and_byte_accounting() {
+        let f = Arc::new(vec![0.0f32; 16]);
+        let q = Arc::new(vec![0i8; 16]);
+        let pf = Plane::from(Arc::clone(&f));
+        let pq = Plane::from(Arc::clone(&q));
+        assert_eq!(pf.len(), 16);
+        assert_eq!(pq.len(), 16);
+        assert_eq!(pf.bytes(), 64, "f32 plane is 4 bytes per element");
+        assert_eq!(pq.bytes(), 16, "i8 plane is 1 byte per element");
+        assert_eq!(pf.dtype(), "f32");
+        assert_eq!(pq.dtype(), "i8");
+        assert_eq!(pf.key(), operand_key(&f), "plane key == view key");
+        assert_eq!(pq.key(), operand_key(&q));
+        assert!(pf.as_f32().is_some() && pf.as_i8().is_none());
+        assert!(pq.as_i8().is_some() && pq.as_f32().is_none());
+        assert!(!pf.is_empty());
     }
 
     #[test]

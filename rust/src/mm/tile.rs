@@ -206,6 +206,34 @@ pub fn job_mm_native(a_tiles: &[f32], b_tiles: &[f32], k_tiles: usize, ts: usize
     c
 }
 
+/// Int8 twin of [`job_mm_native`]: C_tile = scale · Σ_k Aq_k·Bq_k over
+/// packed i8 (K,TS,TS) panels.  The sum accumulates exactly in i32 across
+/// ALL K inner tiles; the single dequantize multiply happens once at the
+/// tile boundary — the requantization discipline the quantized layer
+/// executor relies on for its drift bound.
+pub fn job_mm_q8_native(
+    a_tiles: &[i8],
+    b_tiles: &[i8],
+    k_tiles: usize,
+    ts: usize,
+    scale: f32,
+) -> Vec<f32> {
+    debug_assert_eq!(a_tiles.len(), k_tiles * ts * ts);
+    debug_assert_eq!(b_tiles.len(), k_tiles * ts * ts);
+    let mut acc = vec![0i32; ts * ts];
+    for kt in 0..k_tiles {
+        let a = &a_tiles[kt * ts * ts..(kt + 1) * ts * ts];
+        let b = &b_tiles[kt * ts * ts..(kt + 1) * ts * ts];
+        if ts == 32 {
+            // Fixed-bound micro-kernel, same shape as the f32 path.
+            mm32_q8_into(a, b, &mut acc);
+        } else {
+            super::gemm::gemm_q8_blocked_into(a, b, &mut acc, ts, ts, ts);
+        }
+    }
+    acc.iter().map(|&v| v as f32 * scale).collect()
+}
+
 /// c[32,32] += a[32,32] · b[32,32] with compile-time bounds.
 #[inline]
 fn mm32_into(a: &[f32], b: &[f32], c: &mut [f32]) {
@@ -217,6 +245,24 @@ fn mm32_into(a: &[f32], b: &[f32], c: &mut [f32]) {
             let aik = a[i * 32 + k];
             for j in 0..32 {
                 c[i * 32 + j] += aik * b[k * 32 + j];
+            }
+        }
+    }
+}
+
+/// c[32,32] += a[32,32] · b[32,32] over i8 codes into the i32
+/// accumulator, with compile-time bounds (the widening-MAC twin of
+/// [`mm32_into`]).
+#[inline]
+fn mm32_q8_into(a: &[i8], b: &[i8], c: &mut [i32]) {
+    let a: &[i8; 1024] = a.try_into().expect("32x32 tile");
+    let b: &[i8; 1024] = b.try_into().expect("32x32 tile");
+    let c: &mut [i32; 1024] = c.try_into().expect("32x32 tile");
+    for i in 0..32 {
+        for k in 0..32 {
+            let aik = a[i * 32 + k] as i32;
+            for j in 0..32 {
+                c[i * 32 + j] += aik * b[k * 32 + j] as i32;
             }
         }
     }
@@ -318,6 +364,35 @@ mod tests {
         let mut bp2 = vec![0.0f32; g.cols() * panel];
         g.pack_b_tiles_into(b.data(), &mut bp2);
         assert_eq!(bp, bp2);
+    }
+
+    /// The q8 tile kernel must equal an i64 integer oracle exactly for
+    /// both the ts==32 micro-kernel and the generic blocked path.
+    #[test]
+    fn job_mm_q8_native_matches_integer_oracle() {
+        for ts in [32usize, 16] {
+            let k_tiles = 3;
+            let n = k_tiles * ts * ts;
+            let a: Vec<i8> =
+                (0..n).map(|i| (((i * 29 + 5) % 255) as i64 - 127) as i8).collect();
+            let b: Vec<i8> =
+                (0..n).map(|i| (((i * 17 + 9) % 255) as i64 - 127) as i8).collect();
+            let scale = 0.0625f32;
+            let got = job_mm_q8_native(&a, &b, k_tiles, ts, scale);
+            for i in 0..ts {
+                for j in 0..ts {
+                    let mut acc = 0i64;
+                    for kt in 0..k_tiles {
+                        let at = &a[kt * ts * ts..(kt + 1) * ts * ts];
+                        let bt = &b[kt * ts * ts..(kt + 1) * ts * ts];
+                        for k in 0..ts {
+                            acc += at[i * ts + k] as i64 * bt[k * ts + j] as i64;
+                        }
+                    }
+                    assert_eq!(got[i * ts + j], acc as f32 * scale, "ts={ts} ({i},{j})");
+                }
+            }
+        }
     }
 
     #[test]

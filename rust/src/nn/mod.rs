@@ -8,9 +8,11 @@ pub mod connected;
 pub mod im2col;
 pub mod network;
 pub mod pool;
+pub mod quant;
 pub mod softmax;
 
 pub use network::{GemmExecFn, MatExec, NativeExec, Network};
+pub use quant::{dequantize, quantize, quantize_scale, LayerQuant, QuantizedNetwork};
 
 /// Output spatial dims of a convolution.
 pub fn conv_out_hw(h: usize, w: usize, ksize: usize, stride: usize, pad: usize) -> (usize, usize) {

@@ -224,6 +224,90 @@ pub trait MatExec {
         let _ = layer_idx;
         im2col(&input, size, stride, pad)
     }
+
+    /// Can this executor run the int8 quantized job classes?  The native
+    /// executors always can; the pooled executor answers from its
+    /// clusters' accept masks — when no member claims the Q8 capability
+    /// bits, the quantized forward
+    /// ([`crate::nn::quant::QuantizedNetwork`]) falls back to the
+    /// dequantized f32 classes instead of forcing inline execution.
+    fn supports_q8(&self) -> bool {
+        true
+    }
+
+    /// Freeze a freshly quantized i8 activation plane into
+    /// executor-owned storage and return a view over it.  The default
+    /// wraps it in a private `Arc`; the pooled executor adopts it into
+    /// the frame arena so Q8 jobs alias frame-owned memory.
+    fn adopt_q8_plane(&self, layer_idx: usize, codes: Vec<i8>) -> OperandView<i8> {
+        let _ = layer_idx;
+        OperandView::from(codes)
+    }
+
+    /// Quantized CONV GEMM over packed i8 operand panels — the Q8 twin of
+    /// [`MatExec::conv_gemm`].  `scale` = s_w·s_x is applied once per
+    /// output tile, after the exact i32 accumulation.
+    fn conv_gemm_q8(
+        &self,
+        layer_idx: usize,
+        grid: TileGrid,
+        a_tiles: OperandView<i8>,
+        b_tiles: OperandView<i8>,
+        scale: f32,
+    ) -> Vec<f32> {
+        let _ = layer_idx;
+        let panel = grid.panel_elems();
+        let mut c = vec![0.0f32; grid.m * grid.p];
+        for (t1, t2) in grid.tiles() {
+            let tile = crate::mm::tile::job_mm_q8_native(
+                &a_tiles[t1 * panel..(t1 + 1) * panel],
+                &b_tiles[t2 * panel..(t2 + 1) * panel],
+                grid.k_tiles(),
+                grid.ts,
+                scale,
+            );
+            grid.scatter_c(&mut c, t1, t2, &tile);
+        }
+        c
+    }
+
+    /// Quantized FC GEMM: y(M) = scale · (Wq(M×N)·xq(N)) — the Q8 twin of
+    /// [`MatExec::fc_gemm`].  Bias and activation stay f32 and are
+    /// applied by the caller.
+    fn fc_gemm_q8(
+        &self,
+        layer_idx: usize,
+        out_n: usize,
+        in_n: usize,
+        w: OperandView<i8>,
+        x: OperandView<i8>,
+        scale: f32,
+    ) -> Vec<f32> {
+        let _ = layer_idx;
+        let mut acc = vec![0i32; out_n];
+        crate::mm::gemm::gemm_q8_blocked_into(&w, &x, &mut acc, out_n, in_n, 1);
+        acc.iter().map(|&v| v as f32 * scale).collect()
+    }
+
+    /// Quantized fused batched FC GEMM — the Q8 twin of
+    /// [`MatExec::fc_gemm_batch`] over a column-packed (IN,B) i8 operand
+    /// ([`crate::mm::job::pack_fc_columns_q8`]).
+    #[allow(clippy::too_many_arguments)]
+    fn fc_gemm_batch_q8(
+        &self,
+        layer_idx: usize,
+        out_n: usize,
+        in_n: usize,
+        batch: usize,
+        w: OperandView<i8>,
+        xb: OperandView<i8>,
+        scale: f32,
+    ) -> Vec<f32> {
+        let _ = layer_idx;
+        let mut acc = vec![0i32; out_n * batch];
+        crate::mm::gemm::gemm_q8_blocked_into(&w, &xb, &mut acc, out_n, in_n, batch);
+        acc.iter().map(|&v| v as f32 * scale).collect()
+    }
 }
 
 /// The all-native executor ([`Network::forward_reference`]'s backend).

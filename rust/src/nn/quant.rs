@@ -1,0 +1,552 @@
+//! Per-layer symmetric int8 quantization: calibration over zoo inputs,
+//! prepacked i8 weight planes, and the quantized forward pass.
+//!
+//! The scheme is the classic symmetric linear one the DPU lineage
+//! (ZynqNet, NEURAghe) gets its embedded throughput from: `v = code ·
+//! scale` with `code` clamped to `[-127, 127]` and ONE scale per operand
+//! per layer — `w_scale` from the weight tensor's max-abs, `x_scale` from
+//! calibration passes over deterministic zoo inputs.  A layer GEMM then
+//! runs entirely in integers (`i8×i8` accumulated exactly in `i32`) and
+//! pays a single `· (w_scale·x_scale)` dequantize multiply at the layer
+//! boundary; bias, activation, pooling, batch-norm, and softmax stay f32.
+//! Requantization at the NEXT layer boundary is implicit: that layer
+//! quantizes its own input with its own calibrated `x_scale`.
+//!
+//! [`QuantizedNetwork`] wraps a [`Network`] with the calibrated scales
+//! plus two weight planes per GEMM layer, both built once at calibration:
+//! the i8 codes (a [`TileGrid::pack_a_tiles`]-layout prepack for CONV,
+//! the dense matrix for FC) and an f32 image of those codes for the
+//! **dequantized fallback path** — a pool whose members lack the Q8
+//! capability bits ([`crate::mm::ClassMask::Q8`]) runs the same integer
+//! codes through the plain f32 job classes and applies the scale after,
+//! so quantized nets still route through capability masking with zero
+//! inline fallbacks.
+
+use std::sync::Arc;
+
+use crate::config::{LayerSpec, QuantCfg};
+use crate::mm::job::{pack_fc_columns_q8, unpack_fc_columns};
+use crate::mm::{JobClass, OperandView, TileGrid};
+use crate::tensor::Tensor;
+
+use super::conv;
+use super::network::{MatExec, Network};
+
+/// Symmetric scale for `data`: max-abs mapped onto the i8 code range
+/// `[-127, 127]`.  An all-zero operand gets scale 1.0 (its codes are all
+/// zero anyway and division by zero must not occur).
+pub fn quantize_scale(data: &[f32]) -> f32 {
+    let max_abs = data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if max_abs > 0.0 {
+        max_abs / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Quantize to i8 codes: `round(v / scale)` clamped to `[-127, 127]`
+/// (symmetric — the -128 code is never produced, so negation stays
+/// closed).
+pub fn quantize(data: &[f32], scale: f32) -> Vec<i8> {
+    assert!(scale > 0.0, "quantization scale must be positive");
+    data.iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect()
+}
+
+/// Dequantize codes back to f32: `code · scale`.
+pub fn dequantize(codes: &[i8], scale: f32) -> Vec<f32> {
+    codes.iter().map(|&c| c as f32 * scale).collect()
+}
+
+/// Calibrated per-layer quantization parameters of one GEMM layer.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerQuant {
+    /// Weight scale (from the layer's weight tensor, known at load).
+    pub w_scale: f32,
+    /// Input-activation scale (max-abs over the calibration passes).
+    pub x_scale: f32,
+}
+
+impl LayerQuant {
+    /// The layer's dequantize factor: one integer accumulator times this
+    /// is the f32 GEMM output.
+    pub fn scale(&self) -> f32 {
+        self.w_scale * self.x_scale
+    }
+}
+
+/// A [`Network`] plus everything int8 inference needs: calibrated scales
+/// and prepacked i8 (and fallback f32-code) weight planes per GEMM layer.
+pub struct QuantizedNetwork {
+    net: Network,
+    /// Per layer (network indexing): quant params for CONV/FC layers.
+    layers: Vec<Option<LayerQuant>>,
+    /// CONV weight codes in the blocked (rows·K,TS,TS) job layout — the
+    /// Q8 twin of `Network`'s load-time f32 prepack, built once here.
+    conv_packs_q8: Vec<Option<Arc<Vec<i8>>>>,
+    /// The same CONV code values as f32 (dequantized-path operand).
+    conv_packs_deq: Vec<Option<Arc<Vec<f32>>>>,
+    /// FC weight codes, dense (OUT,IN) row-major.
+    fc_weights_q8: Vec<Option<Arc<Vec<i8>>>>,
+    /// The same FC code values as f32.
+    fc_weights_deq: Vec<Option<Arc<Vec<f32>>>>,
+}
+
+impl QuantizedNetwork {
+    /// Calibrate `net` with `samples` deterministic zoo input frames
+    /// (`Network::make_input(0..samples)`): per-layer `x_scale` is the
+    /// max-abs the layer's input reaches across the passes, `w_scale`
+    /// comes straight from the weights, and both weight planes are
+    /// quantized and packed once, here.
+    pub fn calibrate(net: Network, samples: usize) -> QuantizedNetwork {
+        assert!(samples >= 1, "calibration needs at least one sample");
+        let n_layers = net.config.layers.len();
+        let mut x_maxabs = vec![0.0f32; n_layers];
+        for frame in 0..samples {
+            let mut cur = net.make_input(frame as u64);
+            for (idx, layer) in net.config.layers.iter().enumerate() {
+                if matches!(
+                    layer,
+                    LayerSpec::Conv { .. } | LayerSpec::Connected { .. }
+                ) {
+                    // CONV quantizes its im2col matrix, whose entries are
+                    // copies of the input activations (plus zero padding),
+                    // so the input max-abs IS the operand max-abs.
+                    let m = cur.data().iter().fold(0.0f32, |m, v| m.max(v.abs()));
+                    x_maxabs[idx] = x_maxabs[idx].max(m);
+                }
+                cur = net.forward_layer(idx, layer, cur, &super::network::NativeExec);
+            }
+        }
+
+        let mut layers = vec![None; n_layers];
+        let mut conv_packs_q8 = vec![None; n_layers];
+        let mut conv_packs_deq = vec![None; n_layers];
+        let mut fc_weights_q8 = vec![None; n_layers];
+        let mut fc_weights_deq = vec![None; n_layers];
+        for (idx, layer) in net.config.layers.iter().enumerate() {
+            match layer {
+                LayerSpec::Conv { .. } => {
+                    let pack = net.conv_pack(idx);
+                    let w_scale = quantize_scale(&pack);
+                    let x_scale = if x_maxabs[idx] > 0.0 {
+                        x_maxabs[idx] / 127.0
+                    } else {
+                        1.0
+                    };
+                    // Quantizing the packed buffer element-wise equals
+                    // packing the quantized dense weights: the pack is a
+                    // permutation plus zero padding, and 0.0 codes to 0.
+                    let codes = quantize(&pack, w_scale);
+                    conv_packs_deq[idx] =
+                        Some(Arc::new(codes.iter().map(|&c| c as f32).collect()));
+                    conv_packs_q8[idx] = Some(Arc::new(codes));
+                    layers[idx] = Some(LayerQuant { w_scale, x_scale });
+                }
+                LayerSpec::Connected { .. } => {
+                    let w = net.weights_arc(idx);
+                    let w_scale = quantize_scale(&w);
+                    let x_scale = if x_maxabs[idx] > 0.0 {
+                        x_maxabs[idx] / 127.0
+                    } else {
+                        1.0
+                    };
+                    let codes = quantize(&w, w_scale);
+                    fc_weights_deq[idx] =
+                        Some(Arc::new(codes.iter().map(|&c| c as f32).collect()));
+                    fc_weights_q8[idx] = Some(Arc::new(codes));
+                    layers[idx] = Some(LayerQuant { w_scale, x_scale });
+                }
+                LayerSpec::MaxPool { .. }
+                | LayerSpec::AvgPool { .. }
+                | LayerSpec::BatchNorm
+                | LayerSpec::Dropout { .. }
+                | LayerSpec::Softmax => {}
+            }
+        }
+        QuantizedNetwork {
+            net,
+            layers,
+            conv_packs_q8,
+            conv_packs_deq,
+            fc_weights_q8,
+            fc_weights_deq,
+        }
+    }
+
+    /// Calibrate with the `[quant]` knobs from a hardware config.
+    pub fn from_config(net: Network, cfg: &QuantCfg) -> QuantizedNetwork {
+        QuantizedNetwork::calibrate(net, cfg.calibration_samples)
+    }
+
+    /// The wrapped f32 network.
+    pub fn net(&self) -> &Network {
+        &self.net
+    }
+
+    /// Calibrated quant params of a layer (None for non-GEMM layers).
+    pub fn layer_quant(&self, layer: usize) -> Option<LayerQuant> {
+        self.layers[layer]
+    }
+
+    /// View of a CONV layer's i8 weight prepack (blocked job layout,
+    /// stable `Arc` — remote shards cache it by identity like the f32
+    /// pack).  Panics for layers without one.
+    pub fn conv_pack_q8(&self, layer: usize) -> OperandView<i8> {
+        OperandView::full(Arc::clone(
+            self.conv_packs_q8[layer]
+                .as_ref()
+                .expect("conv layer has a q8 weight prepack"),
+        ))
+    }
+
+    /// View of an FC layer's dense i8 weight codes.
+    pub fn fc_weights_q8(&self, layer: usize) -> OperandView<i8> {
+        OperandView::full(Arc::clone(
+            self.fc_weights_q8[layer]
+                .as_ref()
+                .expect("fc layer has q8 weights"),
+        ))
+    }
+
+    /// Pool jobs one quantized frame generates per [`JobClass`]: the GEMM
+    /// classes move to their Q8 twins, im2col lowering stays f32.
+    pub fn pool_job_profile_q8(&self) -> [usize; JobClass::COUNT] {
+        let base = self.net.pool_job_profile();
+        let mut profile = [0usize; JobClass::COUNT];
+        profile[JobClass::ConvTileQ8.index()] = base[JobClass::ConvTile.index()];
+        profile[JobClass::Im2col.index()] = base[JobClass::Im2col.index()];
+        profile[JobClass::FcGemmQ8.index()] = base[JobClass::FcGemm.index()];
+        profile
+    }
+
+    /// Quantized forward pass.  GEMM layers run int8 when `exec` claims
+    /// the capability ([`MatExec::supports_q8`]); otherwise the SAME
+    /// integer codes flow through the f32 job classes and the scale is
+    /// applied after (the dequantized fallback — identical routing
+    /// machinery, no inline execution).  All other layers match
+    /// [`Network::forward_with`] exactly.
+    pub fn forward_with(&self, x: &Tensor, exec: &dyn MatExec) -> Tensor {
+        let (c, h, w) = self.net.input_shape();
+        assert_eq!(x.shape(), &[c, h, w], "input shape mismatch");
+        let mut cur = x.clone();
+        for (idx, layer) in self.net.config.layers.iter().enumerate() {
+            cur = self.forward_layer(idx, layer, cur, exec);
+        }
+        cur
+    }
+
+    /// Quantized batched forward: per-frame CONV front-end, FC layers
+    /// fused across the batch into one Q8 (or fallback f32) batched GEMM.
+    pub fn forward_batch_with(&self, xs: &[Tensor], exec: &dyn MatExec) -> Vec<Tensor> {
+        let (c, h, w) = self.net.input_shape();
+        for x in xs {
+            assert_eq!(x.shape(), &[c, h, w], "input shape mismatch");
+        }
+        let mut cur: Vec<Tensor> = xs.to_vec();
+        for (idx, layer) in self.net.config.layers.iter().enumerate() {
+            cur = if matches!(layer, LayerSpec::Connected { .. }) && !cur.is_empty() {
+                self.forward_fc_batch(idx, layer, cur, exec)
+            } else {
+                cur.into_iter()
+                    .map(|x| self.forward_layer(idx, layer, x, exec))
+                    .collect()
+            };
+        }
+        cur
+    }
+
+    /// Execute one layer of the quantized forward.
+    pub fn forward_layer(
+        &self,
+        idx: usize,
+        layer: &LayerSpec,
+        input: Tensor,
+        exec: &dyn MatExec,
+    ) -> Tensor {
+        match layer {
+            LayerSpec::Conv {
+                filters,
+                size,
+                stride,
+                pad,
+                activation,
+            } => {
+                let lq = self.layers[idx].expect("conv layer calibrated");
+                let (cin, h, w) = (input.shape()[0], input.shape()[1], input.shape()[2]);
+                let (oh, ow) = super::conv_out_hw(h, w, *size, *stride, *pad);
+                let col = exec.im2col_lower(idx, input, *size, *stride, *pad);
+                let grid = TileGrid::new(
+                    *filters,
+                    cin * size * size,
+                    oh * ow,
+                    self.net.tile_size(),
+                );
+                // Stage the blocked B pack in f32, then quantize the
+                // packed buffer: element-wise quantization commutes with
+                // the pack permutation (and zero padding codes to zero).
+                let b_f32 = grid.pack_b_tiles(col.data());
+                let b_codes = quantize(&b_f32, lq.x_scale);
+                let c_mat = if exec.supports_q8() {
+                    let b_q8 = exec.adopt_q8_plane(idx, b_codes);
+                    exec.conv_gemm_q8(idx, grid, self.conv_pack_q8(idx), b_q8, lq.scale())
+                } else {
+                    // Dequantized fallback: same codes, f32 job class,
+                    // scale applied after the GEMM.
+                    let b_deq: Vec<f32> = b_codes.iter().map(|&c| c as f32).collect();
+                    let a_deq = OperandView::full(Arc::clone(
+                        self.conv_packs_deq[idx].as_ref().expect("deq conv pack"),
+                    ));
+                    let mut c =
+                        exec.conv_gemm(idx, grid, a_deq, OperandView::from(b_deq));
+                    for v in c.iter_mut() {
+                        *v *= lq.scale();
+                    }
+                    c
+                };
+                let bias = self.net.layer_param(idx, "bias").expect("conv bias");
+                let mut out = Tensor::from_vec(&[*filters, oh, ow], c_mat);
+                for o in 0..*filters {
+                    let plane = &mut out.data_mut()[o * oh * ow..(o + 1) * oh * ow];
+                    let bv = bias.data()[o];
+                    for v in plane {
+                        *v += bv;
+                    }
+                }
+                conv::activate(&mut out, *activation);
+                out
+            }
+            LayerSpec::Connected { activation, .. } => {
+                let lq = self.layers[idx].expect("fc layer calibrated");
+                let w = self.net.layer_param(idx, "weights").expect("fc weights");
+                let b = self.net.layer_param(idx, "bias").expect("fc bias");
+                let (out_n, in_n) = (w.shape()[0], w.shape()[1]);
+                assert_eq!(input.len(), in_n, "input length mismatch");
+                let x_codes = quantize(input.data(), lq.x_scale);
+                let mut out = if exec.supports_q8() {
+                    let xv = exec.adopt_q8_plane(idx, x_codes);
+                    exec.fc_gemm_q8(idx, out_n, in_n, self.fc_weights_q8(idx), xv, lq.scale())
+                } else {
+                    let x_deq: Vec<f32> = x_codes.iter().map(|&c| c as f32).collect();
+                    let w_deq = OperandView::full(Arc::clone(
+                        self.fc_weights_deq[idx].as_ref().expect("deq fc weights"),
+                    ));
+                    let mut y = exec.fc_gemm(idx, out_n, in_n, w_deq, OperandView::from(x_deq));
+                    for v in y.iter_mut() {
+                        *v *= lq.scale();
+                    }
+                    y
+                };
+                for (v, bv) in out.iter_mut().zip(b.data()) {
+                    *v = activation.apply(*v + *bv);
+                }
+                let n = out.len();
+                Tensor::from_vec(&[n], out)
+            }
+            LayerSpec::MaxPool { .. }
+            | LayerSpec::AvgPool { .. }
+            | LayerSpec::BatchNorm
+            | LayerSpec::Dropout { .. }
+            | LayerSpec::Softmax => self.net.forward_layer(idx, layer, input, exec),
+        }
+    }
+
+    /// Fused batched FC over quantized columns (Q8 twin of
+    /// [`Network::forward_layer_batch`]'s Connected arm).
+    fn forward_fc_batch(
+        &self,
+        idx: usize,
+        layer: &LayerSpec,
+        inputs: Vec<Tensor>,
+        exec: &dyn MatExec,
+    ) -> Vec<Tensor> {
+        let LayerSpec::Connected { activation, .. } = layer else {
+            unreachable!("forward_fc_batch on a non-FC layer");
+        };
+        let lq = self.layers[idx].expect("fc layer calibrated");
+        let w = self.net.layer_param(idx, "weights").expect("fc weights");
+        let b = self.net.layer_param(idx, "bias").expect("fc bias");
+        let (out_n, in_n) = (w.shape()[0], w.shape()[1]);
+        let batch = inputs.len();
+        let code_cols: Vec<Vec<i8>> = inputs
+            .iter()
+            .map(|t| {
+                assert_eq!(t.len(), in_n, "input length mismatch");
+                quantize(t.data(), lq.x_scale)
+            })
+            .collect();
+        let c = if exec.supports_q8() {
+            let cols: Vec<&[i8]> = code_cols.iter().map(|c| c.as_slice()).collect();
+            let xb = exec.adopt_q8_plane(idx, pack_fc_columns_q8(&cols));
+            exec.fc_gemm_batch_q8(
+                idx,
+                out_n,
+                in_n,
+                batch,
+                self.fc_weights_q8(idx),
+                xb,
+                lq.scale(),
+            )
+        } else {
+            let deq_cols: Vec<Vec<f32>> = code_cols
+                .iter()
+                .map(|c| c.iter().map(|&v| v as f32).collect())
+                .collect();
+            let cols: Vec<&[f32]> = deq_cols.iter().map(|c| c.as_slice()).collect();
+            let xb = exec.pack_fc_cols(idx, &cols);
+            let w_deq = OperandView::full(Arc::clone(
+                self.fc_weights_deq[idx].as_ref().expect("deq fc weights"),
+            ));
+            let mut y = exec.fc_gemm_batch(idx, out_n, in_n, batch, w_deq, xb);
+            for v in y.iter_mut() {
+                *v *= lq.scale();
+            }
+            y
+        };
+        unpack_fc_columns(&c, out_n, batch)
+            .into_iter()
+            .map(|mut y| {
+                for (v, bv) in y.iter_mut().zip(b.data()) {
+                    *v = activation.apply(*v + *bv);
+                }
+                Tensor::from_vec(&[out_n], y)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo;
+    use crate::nn::network::NativeExec;
+
+    fn mk(name: &str) -> Network {
+        Network::new(zoo::load(name).unwrap(), 32).unwrap()
+    }
+
+    #[test]
+    fn scale_maps_max_abs_onto_127() {
+        let data = [0.5f32, -2.54, 1.0];
+        let s = quantize_scale(&data);
+        assert!((s - 2.54 / 127.0).abs() < 1e-9);
+        let codes = quantize(&data, s);
+        assert_eq!(codes[1], -127);
+        assert_eq!(quantize_scale(&[0.0, 0.0]), 1.0, "all-zero operand");
+    }
+
+    #[test]
+    fn quantize_clamps_outliers_symmetrically() {
+        let codes = quantize(&[10.0, -10.0, 0.0], 0.01);
+        assert_eq!(codes, vec![127, -127, 0]);
+    }
+
+    #[test]
+    fn calibration_is_deterministic_and_packs_once() {
+        let qa = QuantizedNetwork::calibrate(mk("mnist"), 2);
+        let qb = QuantizedNetwork::calibrate(mk("mnist"), 2);
+        for idx in 0..qa.net().config.layers.len() {
+            match (qa.layer_quant(idx), qb.layer_quant(idx)) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.w_scale, b.w_scale, "layer {idx}");
+                    assert_eq!(a.x_scale, b.x_scale, "layer {idx}");
+                    assert!(a.w_scale > 0.0 && a.x_scale > 0.0);
+                }
+                (None, None) => {}
+                _ => panic!("layer {idx}: calibration disagreement"),
+            }
+        }
+        // CONV q8 packs share geometry with the f32 prepack and repeated
+        // accessors alias one allocation.
+        for info in qa.net().conv_infos() {
+            let pack = qa.conv_pack_q8(info.layer_idx);
+            assert_eq!(pack.len(), qa.net().conv_pack(info.layer_idx).len());
+            assert!(Arc::ptr_eq(
+                pack.buffer(),
+                qa.conv_pack_q8(info.layer_idx).buffer()
+            ));
+        }
+    }
+
+    #[test]
+    fn quantized_forward_stays_close_to_reference() {
+        let q = QuantizedNetwork::calibrate(mk("mnist"), 2);
+        let x = q.net().make_input(5);
+        let want = q.net().forward_reference(&x);
+        let got = q.forward_with(&x, &NativeExec);
+        assert_eq!(got.shape(), &[10]);
+        let sum: f32 = got.data().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "softmax sum {sum}");
+        // Output distributions agree to quantization precision.
+        assert!(
+            got.allclose(&want, 0.1, 0.1),
+            "q8 drifted: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn fallback_path_equals_q8_path_on_small_layers() {
+        // A q8-blind executor forces the dequantized f32 classes over the
+        // SAME integer codes.  mnist layer K values keep every f32 code
+        // sum exactly representable, so the two paths agree bitwise.
+        struct NoQ8;
+        impl MatExec for NoQ8 {
+            fn conv_gemm(
+                &self,
+                layer_idx: usize,
+                grid: TileGrid,
+                a: OperandView,
+                b: OperandView,
+            ) -> Vec<f32> {
+                NativeExec.conv_gemm(layer_idx, grid, a, b)
+            }
+            fn supports_q8(&self) -> bool {
+                false
+            }
+        }
+        let q = QuantizedNetwork::calibrate(mk("mnist"), 1);
+        let x = q.net().make_input(1);
+        let a = q.forward_with(&x, &NativeExec);
+        let b = q.forward_with(&x, &NoQ8);
+        assert!(
+            a.allclose(&b, 1e-5, 1e-5),
+            "fallback drifted from q8: {}",
+            a.max_abs_diff(&b)
+        );
+    }
+
+    #[test]
+    fn batched_q8_matches_per_sample_q8_bitwise() {
+        let q = QuantizedNetwork::calibrate(mk("mnist"), 1);
+        let xs: Vec<Tensor> = (0..3).map(|f| q.net().make_input(f)).collect();
+        let got = q.forward_batch_with(&xs, &NativeExec);
+        for (j, x) in xs.iter().enumerate() {
+            let want = q.forward_with(x, &NativeExec);
+            assert_eq!(got[j].data(), want.data(), "item {j} not bit-exact");
+        }
+    }
+
+    #[test]
+    fn q8_job_profile_moves_gemm_classes_to_q8() {
+        let q = QuantizedNetwork::calibrate(mk("mnist"), 1);
+        let base = q.net().pool_job_profile();
+        let prof = q.pool_job_profile_q8();
+        assert_eq!(
+            prof[JobClass::ConvTileQ8.index()],
+            base[JobClass::ConvTile.index()]
+        );
+        assert_eq!(prof[JobClass::Im2col.index()], base[JobClass::Im2col.index()]);
+        assert_eq!(prof[JobClass::FcGemmQ8.index()], base[JobClass::FcGemm.index()]);
+        assert_eq!(prof[JobClass::ConvTile.index()], 0);
+        assert_eq!(prof[JobClass::FcGemm.index()], 0);
+        assert_eq!(prof[JobClass::FcGemmBatchQ8.index()], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one sample")]
+    fn calibration_rejects_zero_samples() {
+        let _ = QuantizedNetwork::calibrate(mk("mnist"), 0);
+    }
+}

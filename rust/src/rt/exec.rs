@@ -18,7 +18,7 @@
 use std::cell::RefCell;
 use std::sync::Arc;
 
-use crate::mm::job::{gather_results, jobs_from_packs, Job};
+use crate::mm::job::{gather_results, jobs_from_packs, jobs_from_packs_q8, ClassMask, Job};
 use crate::mm::{FrameArena, OperandView, TileGrid};
 use crate::nn::network::MatExec;
 use crate::nn::Network;
@@ -90,9 +90,15 @@ impl FrameExec<'_> {
         self.arena.borrow().holds(view)
     }
 
-    /// Number of operand chunks this frame has allocated so far.
+    /// Number of f32 operand chunks this frame has allocated so far.
     pub fn arena_chunks(&self) -> usize {
         self.arena.borrow().chunk_count()
+    }
+
+    /// Number of i8 operand chunks (quantized activation planes) this
+    /// frame has allocated so far.
+    pub fn arena_i8_chunks(&self) -> usize {
+        self.arena.borrow().i8_chunk_count()
     }
 }
 
@@ -190,6 +196,111 @@ impl MatExec for FrameExec<'_> {
             batch,
             w,
             xb,
+            self.router.tile_size,
+        )
+        .placed(self.placement(layer_idx));
+        self.router.dispatcher.execute_job(job).data
+    }
+
+    /// The pool speaks Q8 only when its members cover ALL the int8 twin
+    /// classes — a partial claim (e.g. a remote-only pool without
+    /// single-column Q8 FC) must push the quantized forward onto the
+    /// dequantized f32 classes rather than leak unroutable Q8 jobs into
+    /// the counted inline fallback.
+    fn supports_q8(&self) -> bool {
+        let mut union = ClassMask::NONE;
+        for mask in self.router.dispatcher.accept_masks() {
+            union = union.union(mask);
+        }
+        union.intersect(ClassMask::Q8) == ClassMask::Q8
+    }
+
+    fn adopt_q8_plane(&self, _layer_idx: usize, codes: Vec<i8>) -> OperandView<i8> {
+        // Same zero-copy contract as the f32 planes: the arena owns the
+        // codes, Q8 jobs alias them.
+        self.arena.borrow_mut().adopt_i8(codes)
+    }
+
+    fn conv_gemm_q8(
+        &self,
+        layer_idx: usize,
+        grid: TileGrid,
+        a_tiles: OperandView<i8>,
+        b_tiles: OperandView<i8>,
+        scale: f32,
+    ) -> Vec<f32> {
+        debug_assert!(
+            self.router.conv_cluster[layer_idx].is_some(),
+            "conv layer {layer_idx} not placed by the static mapper"
+        );
+        let placement = self.placement(layer_idx);
+        let mut next_id = self
+            .router
+            .dispatcher
+            .reserve_job_ids(grid.num_jobs() as u64);
+        let jobs: Vec<Job> = jobs_from_packs_q8(
+            layer_idx,
+            self.frame_id,
+            grid,
+            a_tiles,
+            b_tiles,
+            scale,
+            &mut next_id,
+        )
+        .into_iter()
+        .map(|j| j.placed(placement))
+        .collect();
+        let results = self.router.dispatcher.execute_jobs(jobs);
+        gather_results(grid, &results)
+    }
+
+    fn fc_gemm_q8(
+        &self,
+        layer_idx: usize,
+        out_n: usize,
+        in_n: usize,
+        w: OperandView<i8>,
+        x: OperandView<i8>,
+        scale: f32,
+    ) -> Vec<f32> {
+        let id = self.router.dispatcher.reserve_job_ids(1);
+        let job = Job::fc_q8(
+            id,
+            layer_idx,
+            self.frame_id,
+            out_n,
+            in_n,
+            w,
+            x,
+            scale,
+            self.router.tile_size,
+        )
+        .placed(self.placement(layer_idx));
+        self.router.dispatcher.execute_job(job).data
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn fc_gemm_batch_q8(
+        &self,
+        layer_idx: usize,
+        out_n: usize,
+        in_n: usize,
+        batch: usize,
+        w: OperandView<i8>,
+        xb: OperandView<i8>,
+        scale: f32,
+    ) -> Vec<f32> {
+        let id = self.router.dispatcher.reserve_job_ids(1);
+        let job = Job::fc_batch_q8(
+            id,
+            layer_idx,
+            self.frame_id,
+            out_n,
+            in_n,
+            batch,
+            w,
+            xb,
+            scale,
             self.router.tile_size,
         )
         .placed(self.placement(layer_idx));
@@ -325,6 +436,54 @@ mod tests {
             (net.fc_layer_count() * batch) as u64
         );
         assert_eq!(report.inline_fallbacks, 0);
+    }
+
+    /// The quantized forward through the pool: every GEMM class moves to
+    /// its int8 twin (the f32 classes stay at zero), the result is
+    /// bit-identical to the all-native q8 path (integer accumulation both
+    /// sides), and nothing runs inline.
+    #[test]
+    fn quantized_forward_through_pool_dispatches_q8_classes() {
+        let net = Network::new(zoo::load("mnist").unwrap(), 32).unwrap();
+        let qnet = crate::nn::QuantizedNetwork::calibrate(net, 2);
+        let options = PoolOptions::new(
+            crate::config::HwConfig::default_zc702(),
+            ComputeMode::Native,
+            true,
+        );
+        let pool = DelegatePool::start(&options).unwrap();
+        let assignment = static_map::assign(&qnet.net().conv_infos(), pool.clusters());
+        let router = PoolRouter::new(qnet.net(), pool.dispatcher(), &assignment);
+
+        let x = qnet.net().make_input(0);
+        let exec = router.frame(0);
+        assert!(exec.supports_q8(), "default pool members claim Q8");
+        let y = qnet.forward_with(&x, &exec);
+        let want = qnet.forward_with(&x, &NativeExec);
+        assert_eq!(y.data(), want.data(), "pooled q8 must match native q8");
+        // The quantized activation planes live in the frame arena's i8
+        // side: one chunk per CONV layer + one per FC layer.
+        assert_eq!(
+            exec.arena_i8_chunks(),
+            qnet.net().conv_infos().len() + qnet.net().fc_layer_count()
+        );
+
+        let report = pool.shutdown().unwrap();
+        let profile = qnet.pool_job_profile_q8();
+        for class in JobClass::ALL {
+            assert_eq!(
+                report.per_class_jobs[class.index()],
+                profile[class.index()] as u64,
+                "{}",
+                class.label()
+            );
+        }
+        assert_eq!(report.per_class_jobs[JobClass::ConvTile.index()], 0);
+        assert_eq!(report.per_class_jobs[JobClass::FcGemm.index()], 0);
+        assert!(report.per_class_jobs[JobClass::ConvTileQ8.index()] > 0);
+        assert!(report.per_class_jobs[JobClass::FcGemmQ8.index()] > 0);
+        assert_eq!(report.inline_fallbacks, 0);
+        assert_eq!(report.dispatched_by_class, report.per_class_jobs);
     }
 
     /// Regression for the bogus cluster-0 placement hint on non-CONV

@@ -521,6 +521,11 @@ impl DelegatePool {
         // same backend name.
         let mut member_caps: Vec<Vec<ClassMask>> = Vec::with_capacity(clusters.len());
         let mut member_links: Vec<Vec<Arc<LinkCost>>> = Vec::with_capacity(clusters.len());
+        // Per-class steal-cost override: element-wise MAX over the tables
+        // the pool's members registered (`BackendSpec::class_cost`), so the
+        // thief never under-prices a steal; `None` keeps the policy's own
+        // table (the derived `DEFAULT_CLASS_COST`).
+        let mut cost_override: Option<[f64; JobClass::COUNT]> = None;
         for cluster in &clusters {
             let mut caps = Vec::with_capacity(cluster.members.len());
             let mut links = Vec::with_capacity(cluster.members.len());
@@ -530,6 +535,14 @@ impl DelegatePool {
                     .get(&key)
                     .ok_or_else(|| anyhow!("no backend {key:?} in the registry"))?;
                 caps.push(entry.caps);
+                if let Some(table) = entry.class_cost() {
+                    let acc = cost_override.get_or_insert([0.0; JobClass::COUNT]);
+                    for (a, v) in acc.iter_mut().zip(table) {
+                        if v > *a {
+                            *a = v;
+                        }
+                    }
+                }
                 links.push(match &member.class {
                     AccelClass::Remote { .. } => entry.link(),
                     _ => LinkCost::fixed(entry.overhead_ksteps()),
@@ -547,11 +560,22 @@ impl DelegatePool {
         );
         let service_rates: Vec<f64> = clusters.iter().map(|c| c.throughput()).collect();
 
+        // Registered member cost tables override the policy's weights,
+        // element-wise MAX against the policy so an override can only make
+        // the thief MORE reluctant to move a class, never cheaper.
+        let mut steal_policy = options.steal_policy;
+        if let Some(table) = cost_override {
+            for (w, v) in steal_policy.class_cost.iter_mut().zip(table) {
+                if v > *w {
+                    *w = v;
+                }
+            }
+        }
         let thief = if options.work_stealing {
             let ship_routes = Arc::clone(&routes);
             Some(Thief::spawn_with_costs(
                 banks.clone(),
-                options.steal_policy,
+                steal_policy,
                 routes.iter().map(|r| r.accept()).collect(),
                 service_rates,
                 // Live gate: re-read on every stealer pass, so measured
@@ -823,6 +847,7 @@ fn fold_report(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::BackendSpec;
     use crate::mm::job::{gather_results, jobs_for_gemm};
     use crate::mm::TileGrid;
     use crate::util::rng::XorShift64Star;
@@ -1037,9 +1062,12 @@ mod tests {
         }
         let mut options = PoolOptions::new(hw, ComputeMode::Pjrt, false);
         let mut registry = BackendRegistry::new();
-        registry.register("pjrt-pe", ClassMask::of(&[JobClass::Im2col]), || {
-            Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>)
-        });
+        registry.register(
+            BackendSpec::new("pjrt-pe", || {
+                Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>)
+            })
+            .caps(ClassMask::of(&[JobClass::Im2col])),
+        );
         options.registry = Some(Arc::new(registry));
         let pool = DelegatePool::start(&options).unwrap();
         let dispatcher = pool.dispatcher();
@@ -1133,22 +1161,24 @@ mod tests {
         let (gate_tx, gate_rx) = mpsc::channel::<()>();
         let gate = std::sync::Mutex::new(Some(gate_rx));
         let mut registry = BackendRegistry::new();
-        registry.register("neon", ClassMask::all(), move || {
+        registry.register(BackendSpec::new("neon", move || {
             let rx = gate
                 .lock()
                 .unwrap()
                 .take()
                 .ok_or_else(|| anyhow!("single gated delegate"))?;
             Ok(Box::new(GatedNative(rx)) as Box<dyn Accelerator>)
-        });
+        }));
         // "Remote" member: local compute, but registered with the remote
         // mask + shipping overhead — this test is about routing metadata,
         // not transports.
-        registry.register_with_cost(
-            &crate::accel::remote::shard_backend_name("127.0.0.1:1"),
-            crate::accel::remote::remote_class_mask(),
-            crate::accel::remote::REMOTE_OVERHEAD_KSTEPS,
-            || Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>),
+        registry.register(
+            BackendSpec::new(
+                &crate::accel::remote::shard_backend_name("127.0.0.1:1"),
+                || Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>),
+            )
+            .caps(crate::accel::remote::remote_class_mask())
+            .overhead_ksteps(crate::accel::remote::REMOTE_OVERHEAD_KSTEPS),
         );
 
         let mut options = PoolOptions::new(hw, ComputeMode::Native, false);
@@ -1237,14 +1267,16 @@ mod tests {
             },
         ];
         let mut registry = BackendRegistry::new();
-        registry.register("neon", ClassMask::all(), || {
+        registry.register(BackendSpec::new("neon", || {
             Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>)
-        });
-        registry.register_with_cost(
-            &crate::accel::remote::shard_backend_name("127.0.0.1:2"),
-            crate::accel::remote::remote_class_mask(),
-            crate::accel::remote::REMOTE_OVERHEAD_KSTEPS,
-            || Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>),
+        }));
+        registry.register(
+            BackendSpec::new(
+                &crate::accel::remote::shard_backend_name("127.0.0.1:2"),
+                || Ok(Box::new(crate::accel::NativeGemm) as Box<dyn Accelerator>),
+            )
+            .caps(crate::accel::remote::remote_class_mask())
+            .overhead_ksteps(crate::accel::remote::REMOTE_OVERHEAD_KSTEPS),
         );
         let mut options = PoolOptions::new(hw, ComputeMode::Native, false);
         options.registry = Some(Arc::new(registry));

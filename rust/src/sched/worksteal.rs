@@ -102,15 +102,31 @@ impl StealStats {
 pub struct StealPolicy {
     /// Minimum victim queue length worth stealing from.
     pub min_victim_len: usize,
-    /// Relative service cost of one job per class ([`JobClass`] order:
-    /// CONV-tile, FC-GEMM, im2col, fused batched FC-GEMM).
+    /// Relative service cost of one job per class ([`JobClass`] dense
+    /// order: CONV-tile, FC-GEMM, im2col, fused batched FC-GEMM, then
+    /// their int8 (Q8) twins).
     pub class_cost: [f64; JobClass::COUNT],
 }
 
-/// Default per-class cost weights: an FC GEMM carries a few tiles' worth
-/// of MACs; im2col is pure data movement; a fused batched FC carries a
-/// micro-batch's worth of FC columns (sized for the default max_batch).
-pub const DEFAULT_CLASS_COST: [f64; JobClass::COUNT] = [1.0, 4.0, 0.5, 16.0];
+/// Default per-class cost weights, DERIVED from
+/// [`JobClass::default_steal_cost`] so adding a job class cannot leave the
+/// thief with a stale hand-written table: an FC GEMM carries a few tiles'
+/// worth of MACs; im2col is pure data movement; a fused batched FC carries
+/// a micro-batch's worth of FC columns; the int8 twins cost roughly half
+/// their f32 siblings (integer kernel, 4× smaller operands).
+pub const DEFAULT_CLASS_COST: [f64; JobClass::COUNT] = {
+    let mut cost = [0.0f64; JobClass::COUNT];
+    let mut i = 0;
+    while i < JobClass::COUNT {
+        cost[i] = JobClass::ALL[i].default_steal_cost();
+        i += 1;
+    }
+    cost
+};
+
+// The derived table must cover exactly the job-class universe — a compile
+// error here means `JobClass::ALL` and `JobClass::COUNT` diverged.
+const _: () = assert!(DEFAULT_CLASS_COST.len() == JobClass::ALL.len());
 
 impl Default for StealPolicy {
     fn default() -> Self {
@@ -812,6 +828,25 @@ mod tests {
         assert!(!q0.is_empty(), "revived destination never stole");
         assert_eq!(q0.len() + q1.len(), 6);
         thief.shutdown();
+    }
+
+    #[test]
+    fn default_class_cost_is_derived_per_class() {
+        for class in JobClass::ALL {
+            assert_eq!(
+                DEFAULT_CLASS_COST[class.index()],
+                class.default_steal_cost(),
+                "{class:?}"
+            );
+        }
+        // The int8 twins move cheaper than their f32 siblings.
+        for (q8, f32c) in [
+            (JobClass::ConvTileQ8, JobClass::ConvTile),
+            (JobClass::FcGemmQ8, JobClass::FcGemm),
+            (JobClass::FcGemmBatchQ8, JobClass::FcGemmBatch),
+        ] {
+            assert!(DEFAULT_CLASS_COST[q8.index()] < DEFAULT_CLASS_COST[f32c.index()]);
+        }
     }
 
     #[test]

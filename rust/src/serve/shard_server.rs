@@ -163,10 +163,11 @@ fn serve_stream(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accel::remote::{wire, REMOTE_OVERHEAD_KSTEPS};
+    use crate::accel::remote::{remote_class_mask, wire, REMOTE_OVERHEAD_KSTEPS};
     use crate::accel::{Accelerator, RemoteShard};
     use crate::config::{ClusterCfg, HwConfig};
-    use crate::mm::job::{ClassMask, Job};
+    use crate::mm::job::{jobs_from_packs_q8, ClassMask, Job};
+    use crate::mm::TileGrid;
     use crate::rt::ComputeMode;
     use crate::util::rng::XorShift64Star;
     use std::sync::Arc;
@@ -220,6 +221,69 @@ mod tests {
         assert_eq!(report.inline_fallbacks, 0);
         assert_eq!(report.fused_fc_rows, 8 * 3);
         assert_eq!(report.delegate_failures, 0);
+    }
+
+    #[test]
+    fn shard_server_executes_quantized_jobs_over_tcp() {
+        // The hosted pool's NEON members claim the Q8 classes, so shipped
+        // int8 work routes through the same capability logic as f32: a
+        // cached quantized CONV layer PUTs its two i8 code planes once and
+        // ships fixed-size descriptor frames per tile, and a fused q8 FC
+        // batch ships inline — zero inline fallbacks server-side.
+        let server = ShardServer::start("127.0.0.1:0", &one_neon_options()).unwrap();
+        let addr = server.addr().to_string();
+        let transport = TcpTransport::connect(&addr).unwrap();
+        let mut shard = RemoteShard::new(
+            format!("remote:{addr}"),
+            remote_class_mask(),
+            REMOTE_OVERHEAD_KSTEPS,
+            Box::new(transport),
+        );
+        let codes = |seed: u64, n: usize| -> Vec<i8> {
+            XorShift64Star::new(seed)
+                .fill_f32(n, 1.0)
+                .iter()
+                .map(|&v| (v * 127.0).round().clamp(-127.0, 127.0) as i8)
+                .collect()
+        };
+        let grid = TileGrid::new(40, 50, 60, 32);
+        let panel = grid.panel_elems();
+        let mut id = 0;
+        let mut jobs = jobs_from_packs_q8(
+            0,
+            0,
+            grid,
+            codes(51, grid.rows() * panel).into(),
+            codes(52, grid.cols() * panel).into(),
+            0.02,
+            &mut id,
+        );
+        jobs.push(Job::fc_batch_q8(
+            id,
+            1,
+            0,
+            12,
+            20,
+            3,
+            codes(53, 12 * 20),
+            codes(54, 20 * 3),
+            0.05,
+            32,
+        ));
+        for job in &jobs {
+            let got = shard.execute(job).unwrap();
+            assert_eq!(got.data, job.execute_native().data);
+        }
+        let stats = shard.cache_stats();
+        assert_eq!(stats.puts, 2, "two i8 code planes, shipped once");
+        assert_eq!(stats.misses, 0);
+        let cache = server.cache_stats();
+        assert_eq!(cache.entries, 2);
+        assert_eq!(cache.misses, 0);
+        drop(shard);
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.jobs_executed, jobs.len() as u64);
+        assert_eq!(report.inline_fallbacks, 0);
     }
 
     #[test]

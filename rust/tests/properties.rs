@@ -7,7 +7,7 @@ use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use synergy::accel::{Accelerator, BackendRegistry, NativeGemm};
+use synergy::accel::{Accelerator, BackendRegistry, BackendSpec, NativeGemm};
 use synergy::cluster::{JobQueue, QueueBank};
 use synergy::config::{zoo, ClusterCfg, HwConfig};
 use synergy::mm::gemm::gemm_naive;
@@ -418,12 +418,12 @@ fn prop_out_of_tree_only_registry_serves_zoo_without_fallback() {
         // "neon" is just the key the config's members resolve to — the
         // registry holds ONLY this out-of-tree entry (latest-wins would
         // have replaced an in-tree one; here there is nothing to replace).
-        registry.register("neon", ClassMask::all(), move || {
+        registry.register(BackendSpec::new("neon", move || {
             Ok(Box::new(Counting {
                 inner: NativeGemm,
                 executed: Arc::clone(&ledger),
             }) as Box<dyn Accelerator>)
-        });
+        }));
         assert_eq!(registry.names(), vec!["neon"], "no built-ins registered");
 
         let mut hw = HwConfig::default_zc702();

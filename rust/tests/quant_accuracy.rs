@@ -1,0 +1,232 @@
+//! Int8 accuracy harness: quantize/dequantize round-trip properties,
+//! zoo-wide quantized-forward drift bounds, and the mixed-capability
+//! routing contract — a pool whose members lack the Q8 capability bits
+//! must run a quantized net through the dequantized f32 job classes
+//! (same integer codes, scale applied after) with ZERO inline fallbacks.
+
+use std::sync::Arc;
+
+use synergy::accel::{Accelerator, BackendRegistry, BackendSpec, NativeGemm};
+use synergy::config::{zoo, ClusterCfg, HwConfig};
+use synergy::mm::{ClassMask, JobClass, OperandView, TileGrid};
+use synergy::nn::{dequantize, quantize, quantize_scale};
+use synergy::nn::{MatExec, NativeExec, Network, QuantizedNetwork};
+use synergy::rt::{ComputeMode, DelegatePool, PoolOptions, PoolRouter};
+use synergy::sched::static_map;
+use synergy::util::rng::XorShift64Star;
+
+fn mk(name: &str) -> Network {
+    Network::new(zoo::load(name).unwrap(), 32).unwrap()
+}
+
+/// A native executor that denies the Q8 capability: quantized forwards
+/// through it exercise the dequantized fallback arm with the plain f32
+/// kernels — the oracle the pooled fallback path must match bitwise.
+struct NoQ8;
+impl MatExec for NoQ8 {
+    fn conv_gemm(
+        &self,
+        layer_idx: usize,
+        grid: TileGrid,
+        a: OperandView,
+        b: OperandView,
+    ) -> Vec<f32> {
+        NativeExec.conv_gemm(layer_idx, grid, a, b)
+    }
+    fn supports_q8(&self) -> bool {
+        false
+    }
+}
+
+/// Round-trip property: with the calibrated symmetric scale (max-abs on
+/// 127), no value clamps, so dequantize(quantize(v)) lands within half a
+/// code step of v — the defining guarantee of the scheme.
+#[test]
+fn roundtrip_error_is_bounded_by_half_a_code_step() {
+    for seed in [1u64, 7, 42, 1234] {
+        for n in [1usize, 3, 257, 4096] {
+            let data = XorShift64Star::new(seed).fill_f32(n, 2.5);
+            let scale = quantize_scale(&data);
+            assert!(scale > 0.0);
+            let codes = quantize(&data, scale);
+            let back = dequantize(&codes, scale);
+            let bound = 0.5 * scale * (1.0 + 1e-5);
+            for (i, (&v, &r)) in data.iter().zip(&back).enumerate() {
+                assert!(
+                    (v - r).abs() <= bound,
+                    "seed {seed} n {n} elem {i}: |{v} - {r}| > {bound}"
+                );
+            }
+            // Symmetric codes: negating the input negates the codes (the
+            // -128 code is never produced).
+            let neg: Vec<f32> = data.iter().map(|v| -v).collect();
+            let neg_codes = quantize(&neg, scale);
+            for (c, nc) in codes.iter().zip(&neg_codes) {
+                assert_eq!(*nc, -*c);
+            }
+        }
+    }
+}
+
+/// Codes are a fixed point of the round trip: re-quantizing a dequantized
+/// plane reproduces the codes exactly (dequantized values sit on the code
+/// lattice, far from rounding boundaries).
+#[test]
+fn requantizing_dequantized_codes_is_exact() {
+    let data = XorShift64Star::new(9).fill_f32(1000, 4.0);
+    let scale = quantize_scale(&data);
+    let codes = quantize(&data, scale);
+    let again = quantize(&dequantize(&codes, scale), scale);
+    assert_eq!(codes, again);
+}
+
+/// Outliers beyond the calibrated range clamp symmetrically to ±127.
+#[test]
+fn out_of_range_values_clamp_to_the_code_range() {
+    let codes = quantize(&[1e9, -1e9, 0.0, 0.5], 0.5);
+    assert_eq!(codes, vec![127, -127, 0, 1]);
+}
+
+/// Zoo-wide drift harness: every zoo network, calibrated on its own
+/// deterministic input frames, must produce a quantized forward that is
+/// (a) a valid probability vector and (b) close to the f32 reference.
+/// The 0.2 band on softmax outputs is deliberately generous — per-layer
+/// symmetric int8 drifts a few percent on these depths — while still
+/// failing loudly on any broken scale, pack, or dequantize boundary
+/// (those produce essentially uncorrelated distributions).
+#[test]
+fn zoo_wide_q8_forward_tracks_the_f32_reference() {
+    for name in zoo::ZOO {
+        let q = QuantizedNetwork::calibrate(mk(name), 1);
+        let x = q.net().make_input(0);
+        let got = q.forward_with(&x, &NativeExec);
+        assert_eq!(got.shape(), &[10], "{name}");
+        let sum: f32 = got.data().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "{name}: softmax sum {sum}");
+        assert!(
+            got.data().iter().all(|v| v.is_finite() && *v >= 0.0),
+            "{name}: non-probability output"
+        );
+        let want = q.net().forward_reference(&x);
+        assert!(
+            got.allclose(&want, 0.2, 0.2),
+            "{name}: q8 drifted {} from reference",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+/// The dequantized fallback runs the SAME integer codes through f32
+/// kernels — its only divergence from the int8 path is f32 rounding in
+/// the accumulation, so the two outputs agree tightly on every net light
+/// enough for the loop (the full zoo is covered functionally above).
+#[test]
+fn fallback_path_tracks_q8_path_on_light_nets() {
+    for name in ["mnist", "mpcnn", "cifar_darknet"] {
+        let q = QuantizedNetwork::calibrate(mk(name), 1);
+        let x = q.net().make_input(2);
+        let a = q.forward_with(&x, &NativeExec);
+        let b = q.forward_with(&x, &NoQ8);
+        assert!(
+            a.allclose(&b, 1e-3, 1e-3),
+            "{name}: fallback drifted {} from q8",
+            a.max_abs_diff(&b)
+        );
+    }
+}
+
+/// Mixed-capability routing: a pool whose only member class revokes Q8
+/// (`BackendSpec::quantized(false)`) reports `supports_q8() == false`, so
+/// the quantized forward ships the dequantized f32 job profile — no Q8
+/// job ever reaches the dispatcher, nothing runs inline, and the output
+/// is bit-identical to the native fallback oracle.
+#[test]
+fn q8_blind_pool_forces_dequantized_routing_with_zero_fallbacks() {
+    let mut hw = HwConfig::default_zc702();
+    hw.clusters = vec![ClusterCfg {
+        name: "deq".into(),
+        neon: 2,
+        big_neon: 0,
+        remote: Vec::new(),
+        pes: Vec::new(),
+    }];
+    let mut registry = BackendRegistry::new();
+    registry.register(
+        BackendSpec::new("neon", || {
+            Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
+        })
+        .quantized(false),
+    );
+    let mut options = PoolOptions::new(hw, ComputeMode::Native, false);
+    options.registry = Some(Arc::new(registry));
+    let pool = DelegatePool::start(&options).unwrap();
+    for mask in pool.dispatcher().accept_masks() {
+        assert_eq!(mask.intersect(ClassMask::Q8), ClassMask::NONE);
+    }
+
+    let q = QuantizedNetwork::calibrate(mk("mnist"), 1);
+    let assignment = static_map::assign(&q.net().conv_infos(), pool.clusters());
+    let router = PoolRouter::new(q.net(), pool.dispatcher(), &assignment);
+    let x = q.net().make_input(0);
+    let exec = router.frame(0);
+    assert!(!exec.supports_q8(), "no member claims Q8");
+    let y = q.forward_with(&x, &exec);
+    let want = q.forward_with(&x, &NoQ8);
+    assert_eq!(
+        y.data(),
+        want.data(),
+        "pooled dequantized path must match the native fallback bitwise"
+    );
+
+    let report = pool.shutdown().unwrap();
+    // The fallback issues exactly the f32 job profile of the wrapped net:
+    // the Q8 classes never leave the executor.
+    let profile = q.net().pool_job_profile();
+    for class in JobClass::ALL {
+        assert_eq!(
+            report.per_class_jobs[class.index()],
+            profile[class.index()] as u64,
+            "{}",
+            class.label()
+        );
+    }
+    assert_eq!(report.per_class_jobs[JobClass::ConvTileQ8.index()], 0);
+    assert_eq!(report.per_class_jobs[JobClass::FcGemmQ8.index()], 0);
+    assert_eq!(report.per_class_jobs[JobClass::FcGemmBatchQ8.index()], 0);
+    assert_eq!(report.inline_fallbacks, 0, "capability masking, not inlining");
+}
+
+/// The capable-pool twin of the routing test: default members claim Q8,
+/// the same net moves every GEMM class to its int8 twin, and the pooled
+/// result is bit-identical to the all-native q8 forward (exact i32
+/// accumulation on both sides).
+#[test]
+fn q8_capable_pool_dispatches_int8_twins_bit_identically() {
+    let mut hw = HwConfig::default_zc702();
+    hw.clusters = vec![ClusterCfg {
+        name: "q8".into(),
+        neon: 2,
+        big_neon: 0,
+        remote: Vec::new(),
+        pes: Vec::new(),
+    }];
+    let options = PoolOptions::new(hw, ComputeMode::Native, false);
+    let pool = DelegatePool::start(&options).unwrap();
+
+    let q = QuantizedNetwork::calibrate(mk("mnist"), 1);
+    let assignment = static_map::assign(&q.net().conv_infos(), pool.clusters());
+    let router = PoolRouter::new(q.net(), pool.dispatcher(), &assignment);
+    let x = q.net().make_input(4);
+    let exec = router.frame(0);
+    assert!(exec.supports_q8());
+    let y = q.forward_with(&x, &exec);
+    let want = q.forward_with(&x, &NativeExec);
+    assert_eq!(y.data(), want.data(), "pooled q8 must match native q8");
+
+    let report = pool.shutdown().unwrap();
+    assert_eq!(report.per_class_jobs[JobClass::ConvTile.index()], 0);
+    assert_eq!(report.per_class_jobs[JobClass::FcGemm.index()], 0);
+    assert!(report.per_class_jobs[JobClass::ConvTileQ8.index()] > 0);
+    assert!(report.per_class_jobs[JobClass::FcGemmQ8.index()] > 0);
+    assert_eq!(report.inline_fallbacks, 0);
+}

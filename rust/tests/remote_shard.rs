@@ -47,7 +47,7 @@ use synergy::accel::remote::{
     wire, RemoteShard, ShardCache, ShardTransport, REMOTE_OVERHEAD_KSTEPS,
 };
 use synergy::accel::{
-    register_config_shards, AccelClass, Accelerator, BackendRegistry, NativeGemm,
+    register_config_shards, AccelClass, Accelerator, BackendRegistry, BackendSpec, NativeGemm,
 };
 use synergy::config::{zoo, ClusterCfg, HwConfig};
 use synergy::mm::job::{gather_results, jobs_for_gemm, ClassMask, Job, JobClass};
@@ -107,26 +107,29 @@ fn split_remote_pool() -> (DelegatePool, JoinHandle<u64>) {
     // client for its single delegate.
     let mut registry = BackendRegistry::new();
     registry.register(
-        "neon",
-        ClassMask::of(&[JobClass::FcGemm, JobClass::Im2col]),
-        || Ok(Box::new(NativeGemm) as Box<dyn Accelerator>),
+        BackendSpec::new("neon", || Ok(Box::new(NativeGemm) as Box<dyn Accelerator>))
+            .caps(ClassMask::of(&[JobClass::FcGemm, JobClass::Im2col])),
     );
     let slot = Mutex::new(Some(client));
     let name = shard_backend_name(addr);
     let id = name.clone();
-    registry.register_with_cost(&name, remote_class_mask(), REMOTE_OVERHEAD_KSTEPS, move || {
-        let transport = slot
-            .lock()
-            .unwrap()
-            .take()
-            .ok_or_else(|| anyhow!("duplex transport already taken"))?;
-        Ok(Box::new(RemoteShard::new(
-            id.clone(),
-            remote_class_mask(),
-            REMOTE_OVERHEAD_KSTEPS,
-            Box::new(transport),
-        )) as Box<dyn Accelerator>)
-    });
+    registry.register(
+        BackendSpec::new(&name, move || {
+            let transport = slot
+                .lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow!("duplex transport already taken"))?;
+            Ok(Box::new(RemoteShard::new(
+                id.clone(),
+                remote_class_mask(),
+                REMOTE_OVERHEAD_KSTEPS,
+                Box::new(transport),
+            )) as Box<dyn Accelerator>)
+        })
+        .caps(remote_class_mask())
+        .overhead_ksteps(REMOTE_OVERHEAD_KSTEPS),
+    );
 
     let mut options = PoolOptions::new(hw, ComputeMode::Native, false);
     options.registry = Some(Arc::new(registry));
@@ -277,25 +280,29 @@ fn transport_kill_mid_batch_loses_zero_jobs() {
         .expect("spawn killable shard");
 
     let mut registry = BackendRegistry::new();
-    registry.register("neon", ClassMask::all(), || {
+    registry.register(BackendSpec::new("neon", || {
         Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
-    });
+    }));
     let slot = Mutex::new(Some(client));
     let name = shard_backend_name(addr);
     let id = name.clone();
-    registry.register_with_cost(&name, remote_class_mask(), REMOTE_OVERHEAD_KSTEPS, move || {
-        let transport = slot
-            .lock()
-            .unwrap()
-            .take()
-            .ok_or_else(|| anyhow!("duplex transport already taken"))?;
-        Ok(Box::new(RemoteShard::new(
-            id.clone(),
-            remote_class_mask(),
-            REMOTE_OVERHEAD_KSTEPS,
-            Box::new(transport),
-        )) as Box<dyn Accelerator>)
-    });
+    registry.register(
+        BackendSpec::new(&name, move || {
+            let transport = slot
+                .lock()
+                .unwrap()
+                .take()
+                .ok_or_else(|| anyhow!("duplex transport already taken"))?;
+            Ok(Box::new(RemoteShard::new(
+                id.clone(),
+                remote_class_mask(),
+                REMOTE_OVERHEAD_KSTEPS,
+                Box::new(transport),
+            )) as Box<dyn Accelerator>)
+        })
+        .caps(remote_class_mask())
+        .overhead_ksteps(REMOTE_OVERHEAD_KSTEPS),
+    );
 
     let mut options = PoolOptions::new(hw, ComputeMode::Native, false);
     // Mid-batch: the remote delegate drains several jobs per visit, so the
@@ -738,18 +745,15 @@ fn killing_one_fleet_shard_loses_nothing_and_evicts_it_from_routing() {
         .expect("spawn doomed shard");
 
     let mut registry = BackendRegistry::new();
-    registry.register("neon", ClassMask::all(), || {
+    registry.register(BackendSpec::new("neon", || {
         Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
-    });
+    }));
     for (addr, client) in [(addr_a, client_a), (addr_b, client_b)] {
         let slot = Mutex::new(Some(client));
         let name = shard_backend_name(addr);
         let id = name.clone();
-        registry.register_with_cost(
-            &name,
-            remote_class_mask(),
-            REMOTE_OVERHEAD_KSTEPS,
-            move || {
+        registry.register(
+            BackendSpec::new(&name, move || {
                 let transport = slot
                     .lock()
                     .unwrap()
@@ -761,7 +765,9 @@ fn killing_one_fleet_shard_loses_nothing_and_evicts_it_from_routing() {
                     REMOTE_OVERHEAD_KSTEPS,
                     Box::new(transport),
                 )) as Box<dyn Accelerator>)
-            },
+            })
+            .caps(remote_class_mask())
+            .overhead_ksteps(REMOTE_OVERHEAD_KSTEPS),
         );
     }
 

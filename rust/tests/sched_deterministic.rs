@@ -28,7 +28,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use synergy::accel::remote::{remote_class_mask, shard_backend_name};
-use synergy::accel::{Accelerator, BackendRegistry, NativeGemm};
+use synergy::accel::{Accelerator, BackendRegistry, BackendSpec, NativeGemm};
 use synergy::cluster::QueueBank;
 use synergy::config::{zoo, ClusterCfg, HwConfig};
 use synergy::mm::job::{jobs_for_gemm, ClassMask, Classed, Job, JobClass, JobResult};
@@ -518,21 +518,21 @@ fn measured_link_costs_steer_placement_between_two_shards() {
     let gate = Arc::new(AtomicBool::new(false));
     let mut registry = BackendRegistry::new();
     let builder_gate = Arc::clone(&gate);
-    registry.register_with_cost(
-        &shard_backend_name(cheap_addr),
-        remote_class_mask(),
-        20.0,
-        move || {
+    registry.register(
+        BackendSpec::new(&shard_backend_name(cheap_addr), move || {
             Ok(Box::new(GatedGemm {
                 open: Arc::clone(&builder_gate),
             }) as Box<dyn Accelerator>)
-        },
+        })
+        .caps(remote_class_mask())
+        .overhead_ksteps(20.0),
     );
-    registry.register_with_cost(
-        &shard_backend_name(dear_addr),
-        remote_class_mask(),
-        100.0,
-        || Ok(Box::new(NativeGemm) as Box<dyn Accelerator>),
+    registry.register(
+        BackendSpec::new(&shard_backend_name(dear_addr), || {
+            Ok(Box::new(NativeGemm) as Box<dyn Accelerator>)
+        })
+        .caps(remote_class_mask())
+        .overhead_ksteps(100.0),
     );
 
     let mut options = PoolOptions::new(hw, ComputeMode::Native, false);

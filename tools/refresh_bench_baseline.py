@@ -34,6 +34,11 @@ LEDGER_FIELDS = [
     ("shard_wire", "baseline", "wire_bytes"),
     ("shard_wire", "cold", "wire_bytes"),
     ("shard_wire", "warm", "wire_bytes"),
+    ("shard_wire_q8", "baseline", "wire_bytes"),
+    ("shard_wire_q8", "cold", "wire_bytes"),
+    ("shard_wire_q8", "warm", "wire_bytes"),
+    ("shard_wire_q8", None, "operand_put_bytes"),
+    ("shard_wire_q8", None, "f32_operand_put_bytes"),
 ]
 
 # (section, phase-or-None, field) timing slots the refresh copies over.

@@ -1,11 +1,11 @@
 //! Rule 5 — knob/README parity.
 //!
-//! Every `[device]` / `[cluster]` / `[serving]` key the `.hw_config`
+//! Every `[device]` / `[cluster]` / `[serving]` / `[quant]` key the `.hw_config`
 //! parser accepts must appear in a README table row with a non-empty
 //! default.  The knobs are the system's operational surface; an
 //! undocumented one is a knob nobody can responsibly turn.  The keys are
 //! read from the `"key" =>` match arms inside `Sec::Device` /
-//! `Sec::Cluster` / `Sec::Serving` in `config/hw_config.rs`, so the
+//! `Sec::Cluster` / `Sec::Serving` / `Sec::Quant` in `config/hw_config.rs`, so the
 //! check tracks the parser — adding a knob without documenting it fails
 //! CI, with no list to keep in sync by hand.
 
@@ -38,7 +38,7 @@ pub fn parsed_keys(toks: &[Tok]) -> Vec<Knob> {
             && toks[i + 5].text == ">"
         {
             let sec = toks[i + 3].text.as_str();
-            section = if matches!(sec, "Device" | "Cluster" | "Serving") {
+            section = if matches!(sec, "Device" | "Cluster" | "Serving" | "Quant") {
                 Some(sec.to_string())
             } else {
                 None

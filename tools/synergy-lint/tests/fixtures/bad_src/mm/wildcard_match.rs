@@ -23,3 +23,17 @@ pub fn unrelated(n: u32) -> u32 {
         _ => 2,
     }
 }
+pub fn bad_q8(k: &JobKind) -> u32 {
+    match k {
+        JobKind::ConvTileQ8 { .. } => 0,
+        other => 9,
+    }
+}
+pub fn good_q8(c: JobClass) -> u32 {
+    match c {
+        JobClass::ConvTile | JobClass::ConvTileQ8 => 0,
+        JobClass::FcGemm | JobClass::FcGemmQ8 => 1,
+        JobClass::Im2col => 2,
+        JobClass::FcGemmBatch | JobClass::FcGemmBatchQ8 => 3,
+    }
+}

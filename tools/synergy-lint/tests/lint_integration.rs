@@ -36,9 +36,11 @@ fn bad_fixtures_produce_every_expected_diagnostic() {
         // rule 3: single-line and split-across-lines bare locks.
         "serve/bare_lock.rs:2: bare-lock:",
         "serve/bare_lock.rs:6: bare-lock:",
-        // rule 4: `_` arm and lone-binding arm.
+        // rule 4: `_` arm, lone-binding arm, and a lone-binding arm in a
+        // quantized JobKind match.
         "mm/wildcard_match.rs:4: dispatch-wildcard:",
         "mm/wildcard_match.rs:10: dispatch-wildcard:",
+        "mm/wildcard_match.rs:29: dispatch-wildcard:",
         // rule 5: the knob missing from the fixture README.
         "knob-doc: [serving] key `undocumented_knob`",
     ];
@@ -61,9 +63,11 @@ fn bad_fixtures_produce_every_expected_diagnostic() {
         "rogue_spawn.rs:15:",
         // allowlisted file may spawn.
         "pool.rs",
-        // exhaustive + unrelated matches are fine.
+        // exhaustive + unrelated matches are fine, including the
+        // seven-class q8 dispatch.
         "wildcard_match.rs:16:",
         "wildcard_match.rs:23:",
+        "wildcard_match.rs:34:",
         // documented knob is fine.
         "`max_batch`",
     ];
